@@ -1,0 +1,42 @@
+//! Domain example: large-scale EMSLP-style sea-level-pressure regression —
+//! the paper's Table 3 regime. Scales |D| up while PIC's per-core working
+//! set crosses the memory ceiling (the paper's "insufficient shared
+//! memory" failure) and LMA keeps going.
+//!
+//! Run: `cargo run --release --example emslp_large [--full]`
+
+use pgpr::experiments::common::*;
+use pgpr::sparse::pic::pic_percore_bytes;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let full = std::env::args().any(|a| a == "--full");
+    let sizes: Vec<usize> = if full {
+        vec![8000, 16000, 32000, 64000]
+    } else {
+        vec![2000, 4000, 8000]
+    };
+    let (machines, cores) = (8, 8);
+    let m = machines * cores;
+    let lma_s = 64;
+    let pic_s = 424;
+    let mem = 24usize << 20;
+
+    println!("EMSLP-sim scaling, M={m} cores ({machines}×{cores}), LMA |S|={lma_s} B=1, PIC |S|={pic_s}");
+    println!("{:>9} {:>22} {:>22}", "|D|", "LMA rmse(secs)", "PIC rmse(secs)");
+    for &n in &sizes {
+        let ds = Workload::Emslp.generate(n, 400, 31)?;
+        let hyp = quick_hypers(&ds);
+        let lma = run_lma_parallel(&ds, &hyp, machines, cores, 1, lma_s, 31)?;
+        let lma_cell = format!("{:.1}({:.2})", lma.rmse, lma.secs);
+        let need = pic_percore_bytes(n / m, pic_s, 400 / m, ds.dim());
+        let pic_cell = if need > mem {
+            format!("-(-)  [needs {} MiB/core]", need >> 20)
+        } else {
+            let pic = run_pic_parallel(&ds, &hyp, machines, cores, pic_s, 31)?;
+            format!("{:.1}({:.2})", pic.rmse, pic.secs)
+        };
+        println!("{n:>9} {lma_cell:>22} {pic_cell:>22}");
+    }
+    println!("\n(LMA scales past PIC's memory wall — Table 3 shape; paper: PIC fails from |D|=256k)");
+    Ok(())
+}

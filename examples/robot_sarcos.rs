@@ -1,0 +1,51 @@
+//! Domain example: SARCOS-style robot-arm inverse dynamics (21-D inputs,
+//! joint-1 torque output) — the paper's Table 1a workload in miniature,
+//! plus the |S|↔B trade-off of Remark 3 on this dataset.
+//!
+//! Run: `cargo run --release --example robot_sarcos`
+
+use pgpr::config::LmaConfig;
+use pgpr::experiments::common::*;
+use pgpr::lma::spectrum::sweep_grid;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let ds = Workload::Sarcos.generate(2000, 400, 5)?;
+    let hyp = quick_hypers(&ds);
+    let (_, y_std) = ds.y_stats();
+    println!("SARCOS-sim: {} train, {} test, 21-D, torque σ {:.2}", ds.train_x.rows(), ds.test_x.rows(), y_std);
+
+    // Headline comparison.
+    let fgp = run_fgp(&ds, &hyp)?;
+    let lma = run_lma_parallel(&ds, &hyp, 8, 2, 1, 256, 5)?;
+    let pic = run_pic_parallel(&ds, &hyp, 8, 2, 512, 5)?;
+    let ssgp = run_ssgp(&ds, &hyp, 256, 5)?;
+    for r in [&fgp, &ssgp, &lma, &pic] {
+        println!("{:<26} rmse {:.4}  time {:.2}s", r.method, r.rmse, r.secs);
+    }
+
+    // |S| ↔ B trade-off (Remark 3): same accuracy cheaper by trading a
+    // big support set for a small Markov order.
+    println!("\n|S| ↔ B trade-off (centralized LMA):");
+    let base = LmaConfig { num_blocks: 16, seed: 5, ..Default::default() };
+    let pts = sweep_grid(
+        &ds.train_x,
+        &ds.train_y,
+        &ds.test_x,
+        &ds.test_y,
+        &hyp,
+        &base,
+        &[32, 128],
+        &[1, 3],
+    )?;
+    println!("{:>6} {:>4} {:>9} {:>9}", "|S|", "B", "rmse", "secs");
+    for p in &pts {
+        println!(
+            "{:>6} {:>4} {:>9.4} {:>9.2}",
+            p.support_size,
+            p.markov_order,
+            p.rmse,
+            p.fit_secs + p.predict_secs
+        );
+    }
+    Ok(())
+}

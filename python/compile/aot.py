@@ -1,0 +1,93 @@
+"""AOT lowering: Layer-2 graphs -> HLO text artifacts + manifest.
+
+Interchange is HLO **text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (proto.id() <= INT_MAX); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md and gen_hlo.py).
+
+Usage:  python -m compile.aot --out ../artifacts
+Emits one cov_cross artifact per square shape bucket plus the summary-gram
+artifacts, and artifacts/manifest.json for the Rust ArtifactLibrary.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets: PJRT executables are static-shape, so the Rust runtime
+# pads each covariance block up to the smallest bucket that fits.
+COV_BUCKETS = [32, 64, 128, 256]
+# Feature dim pad: covers SARCOS (21), AIMPEAK (5), EMSLP (6).
+D_PAD = 24
+GRAM_BUCKETS = [(128, 32), (256, 64)]  # (k, m)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_cov(n1: int, n2: int, d: int) -> str:
+    x1 = jax.ShapeDtypeStruct((n1, d), jnp.float32)
+    x2 = jax.ShapeDtypeStruct((n2, d), jnp.float32)
+    sig = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(model.cov_cross_model).lower(x1, x2, sig)
+    return to_hlo_text(lowered)
+
+
+def lower_gram(k: int, m: int) -> str:
+    v = jax.ShapeDtypeStruct((k, m), jnp.float32)
+    acc = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    lowered = jax.jit(model.summary_gram_model).lower(v, acc)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for n in COV_BUCKETS:
+        name = f"cov_cross_{n}x{n}_d{D_PAD}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        text = lower_cov(n, n, D_PAD)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {"name": "cov_cross", "file": name, "n1": n, "n2": n, "d": D_PAD}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    for k, m in GRAM_BUCKETS:
+        name = f"summary_gram_{k}x{m}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        text = lower_gram(k, m)
+        with open(path, "w") as f:
+            f.write(text)
+        # n1/n2/d carry (k, m, m) for the gram entry.
+        manifest["artifacts"].append(
+            {"name": "summary_gram", "file": name, "n1": k, "n2": m, "d": m}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: tiled symmetric Gram accumulation acc + V^T V.
+
+This is the inner product of the Definition-1/2 summaries
+(Sigma-dot^T R-dot Sigma-dot terms reduce to V^T V after the half-solve).
+The kernel tiles the k (row) dimension through VMEM and accumulates into
+the (m, m) output block-by-block: grid step i loads a (TK, m) panel of V
+and performs one MXU-shaped [m, TK] x [TK, m] update.
+
+Accumulation across grid steps uses the standard Pallas revisiting
+pattern: the output BlockSpec maps every grid step to the same block, and
+step 0 initializes from the carried-in accumulator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_K = 128
+
+
+def _gram_kernel(v_ref, acc_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = acc_ref[...]
+
+    v = v_ref[...]  # (TK, m)
+    o_ref[...] += jnp.dot(v.T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_k",))
+def gram_accumulate(v, acc, *, tile_k=TILE_K):
+    """Return acc + V^T V with V (k, m), acc (m, m); k % tile_k == 0."""
+    k, m = v.shape
+    assert acc.shape == (m, m), f"acc shape {acc.shape} != ({m}, {m})"
+    tile_k = min(tile_k, k)
+    assert k % tile_k == 0, f"k={k} not divisible by tile {tile_k}"
+    grid = (k // tile_k,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_k, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=True,
+    )(v.astype(jnp.float32), acc.astype(jnp.float32))

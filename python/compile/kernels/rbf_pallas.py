@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: tiled SE (RBF) covariance over pre-scaled inputs.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's hot spot
+is the dense covariance build. Instead of a scalar pairwise-distance loop
+we use the ``|x|^2 + |x'|^2 - 2 x.x'`` expansion so the inner contraction
+is an MXU-shaped [TM, d] x [d, TN] matmul, tiled through VMEM with a
+(TM, TN) output grid:
+
+  * x1 tile (TM, d) and x2 tile (TN, d) are the only HBM->VMEM streams;
+  * sq-norms are computed in-register per tile (cheaper than streaming a
+    precomputed vector for small d);
+  * the exp/scale epilogue is fused into the same kernel, so K never
+    round-trips to HBM in raw-distance form.
+
+VMEM budget at TM=TN=128, d<=24, f32: 2*128*24*4 B (inputs) + 128*128*4 B
+(out) ~ 90 KiB << 16 MiB, leaving room for double-buffering.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO ops that the Rust client
+executes (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. 128 matches the MXU systolic dimension; callers may
+# shrink for small buckets.
+TILE_M = 128
+TILE_N = 128
+
+
+def _cov_kernel(x1_ref, x2_ref, sig_ref, o_ref):
+    """One (TM, TN) output tile."""
+    x1 = x1_ref[...]                       # (TM, d)
+    x2 = x2_ref[...]                       # (TN, d)
+    sigma_s2 = sig_ref[0, 0]
+    # MXU contraction.
+    g = jnp.dot(x1, x2.T, preferred_element_type=jnp.float32)   # (TM, TN)
+    sq1 = jnp.sum(x1 * x1, axis=1, keepdims=True)               # (TM, 1)
+    sq2 = jnp.sum(x2 * x2, axis=1, keepdims=True).T             # (1, TN)
+    # Clamp at 0: rounding can push the exponent epsilon-positive for
+    # near-identical rows, and exp(+eps) > sigma_s2 breaks PSD-ness.
+    expo = jnp.minimum(-0.5 * (sq1 + sq2) + g, 0.0)
+    o_ref[...] = sigma_s2 * jnp.exp(expo)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n"))
+def cov_cross(x1, x2, sigma_s2, *, tile_m=TILE_M, tile_n=TILE_N):
+    """K = sigma_s2 * exp(-0.5 ||x1_i - x2_j||^2), tiled Pallas kernel.
+
+    Args:
+      x1: (n1, d) pre-scaled inputs; n1 % tile_m == 0 (callers pad).
+      x2: (n2, d) pre-scaled inputs; n2 % tile_n == 0.
+      sigma_s2: scalar signal variance.
+    """
+    n1, d = x1.shape
+    n2, d2 = x2.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    tile_m = min(tile_m, n1)
+    tile_n = min(tile_n, n2)
+    assert n1 % tile_m == 0 and n2 % tile_n == 0, (
+        f"shapes ({n1}, {n2}) not divisible by tiles ({tile_m}, {tile_n})"
+    )
+    sig = jnp.asarray(sigma_s2, jnp.float32).reshape(1, 1)
+    grid = (n1 // tile_m, n2 // tile_n)
+    return pl.pallas_call(
+        _cov_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n1, n2), jnp.float32),
+        interpret=True,
+    )(x1.astype(jnp.float32), x2.astype(jnp.float32), sig)

@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracles for the Layer-1 Pallas kernels.
+
+These are the ground truth the pytest suite checks every kernel against;
+they are small, obviously-correct jnp implementations with no tiling.
+"""
+
+import jax.numpy as jnp
+
+
+def cov_cross_ref(x1, x2, sigma_s2):
+    """SE covariance over pre-scaled inputs (no noise term).
+
+    K[i, j] = sigma_s2 * exp(-0.5 * ||x1_i - x2_j||^2)
+
+    Inputs are already divided by their lengthscales (the Rust Layer-3
+    coordinator scales once per block and reuses).
+    """
+    sq1 = jnp.sum(x1 * x1, axis=1, keepdims=True)       # [n1, 1]
+    sq2 = jnp.sum(x2 * x2, axis=1, keepdims=True).T     # [1, n2]
+    g = x1 @ x2.T                                       # [n1, n2]
+    expo = jnp.minimum(-0.5 * (sq1 + sq2) + g, 0.0)
+    return sigma_s2 * jnp.exp(expo)
+
+
+def gram_accumulate_ref(v, acc):
+    """Symmetric Gram accumulation: acc + v^T v (the summary hot-spot)."""
+    return acc + v.T @ v

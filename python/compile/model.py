@@ -1,0 +1,27 @@
+"""Layer-2 JAX compute graphs.
+
+These are the jit-able functions the AOT pass lowers to HLO text. Each
+wraps the Layer-1 Pallas kernels into the exact signature the Rust
+runtime calls (see rust/src/runtime/artifacts.rs):
+
+* ``cov_cross_model(x1, x2, sigma_s2) -> (K,)`` — the covariance block
+  builder used on the request path (1-tuple return, per the HLO-text
+  interchange convention).
+* ``summary_gram_model(v, acc) -> (G,)`` — the Gram-accumulation step of
+  the local summaries.
+
+Python only runs at build time; after ``make artifacts`` the Rust binary
+executes these graphs through PJRT without any Python.
+"""
+
+from compile.kernels import gram_pallas, rbf_pallas
+
+
+def cov_cross_model(x1, x2, sigma_s2):
+    """Covariance block via the Layer-1 Pallas kernel (1-tuple return)."""
+    return (rbf_pallas.cov_cross(x1, x2, sigma_s2),)
+
+
+def summary_gram_model(v, acc):
+    """Gram accumulation via the Layer-1 Pallas kernel (1-tuple return)."""
+    return (gram_pallas.gram_accumulate(v, acc),)

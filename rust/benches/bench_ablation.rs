@@ -1,0 +1,18 @@
+//! Ablation benches: spectrum-endpoint equivalences, partition locality,
+//! and network (intra- vs inter-node) sensitivity — the design choices
+//! DESIGN.md calls out. Writes results/ablation.csv.
+
+use pgpr::experiments::ablation;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("ablation");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    suite.case("ablation_suite", || {
+        let r = ablation::run(42).expect("ablation run failed");
+        assert!(r.pic_equiv_gap < 1e-6, "PIC equivalence broke: {}", r.pic_equiv_gap);
+        assert!(r.fgp_equiv_gap < 1e-3, "FGP equivalence broke: {}", r.fgp_equiv_gap);
+    });
+    suite.finish();
+}

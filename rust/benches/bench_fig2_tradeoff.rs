@@ -1,0 +1,16 @@
+//! Regenerates Figure 2: RMSE and incurred-time heatmaps of LMA over the
+//! |S| × B grid (AIMPEAK). Writes results/fig2_tradeoff.csv.
+
+use pgpr::experiments::fig2;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig2_tradeoff");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    let params = fig2::Fig2Params::default();
+    suite.case("fig2_grid", || {
+        fig2::run(&params).expect("fig2 run failed");
+    });
+    suite.finish();
+}

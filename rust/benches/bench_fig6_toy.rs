@@ -1,0 +1,16 @@
+//! Regenerates Figure 6 / Appendix D: the toy continuity comparison of
+//! LMA vs independent local GPs. Writes results/fig6_toy.csv.
+
+use pgpr::experiments::fig6;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("fig6_toy");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    suite.case("fig6_toy", || {
+        let res = fig6::run(42).expect("fig6 run failed");
+        assert!(res.local_max_jump > res.lma_max_jump, "paper's qualitative claim must hold");
+    });
+    suite.finish();
+}

@@ -1,0 +1,50 @@
+//! Covariance-kernel benchmarks: the native SE-ARD builder vs the
+//! AOT-compiled Pallas kernel through PJRT (when artifacts are built).
+//! This is the L1 artifact's request-path cost, including padding.
+
+use pgpr::kernels::se_ard;
+use pgpr::linalg::matrix::Mat;
+use pgpr::runtime::artifacts::ArtifactLibrary;
+use pgpr::util::bench::BenchSuite;
+use pgpr::util::rng::Pcg64;
+
+fn main() {
+    let mut suite = BenchSuite::new("kernels");
+    let mut rng = Pcg64::new(2);
+
+    for (n, d) in [(128usize, 5usize), (256, 21), (512, 6)] {
+        let x1 = Mat::randn(n, d, &mut rng);
+        let x2 = Mat::randn(n, d, &mut rng);
+        let units = (n * n) as f64; // covariance entries per call
+        suite.case_with_throughput(&format!("native_cov_{n}x{n}_d{d}"), units, || {
+            std::hint::black_box(se_ard::cov_cross_scaled(&x1, &x2, 1.0).unwrap());
+        });
+        suite.case_with_throughput(&format!("native_cov_sym_{n}_d{d}"), units / 2.0, || {
+            std::hint::black_box(se_ard::cov_sym_scaled(&x1, 1.0, 0.01).unwrap());
+        });
+    }
+
+    match ArtifactLibrary::try_default() {
+        Some(lib) => {
+            for n in [32usize, 64, 128, 256] {
+                let x1 = Mat::randn(n, 5, &mut rng);
+                let x2 = Mat::randn(n, 5, &mut rng);
+                // Warm the executable cache outside the measured region.
+                let _ = lib.cov_cross_scaled(&x1, &x2, 1.0).unwrap();
+                suite.case_with_throughput(&format!("pjrt_cov_{n}x{n}_d5"), (n * n) as f64, || {
+                    std::hint::black_box(lib.cov_cross_scaled(&x1, &x2, 1.0).unwrap());
+                });
+            }
+            // Padding overhead: odd shape inside the 128 bucket.
+            let x1 = Mat::randn(100, 5, &mut rng);
+            let x2 = Mat::randn(90, 5, &mut rng);
+            let _ = lib.cov_cross_scaled(&x1, &x2, 1.0).unwrap();
+            suite.case("pjrt_cov_padded_100x90_in_128", || {
+                std::hint::black_box(lib.cov_cross_scaled(&x1, &x2, 1.0).unwrap());
+            });
+        }
+        None => println!("  (artifacts not built — PJRT cases skipped; run `make artifacts`)"),
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,48 @@
+//! Micro-benchmarks of the linear-algebra substrate (GEMM, SYRK,
+//! Cholesky, triangular solves) — the L3 hot path underneath everything.
+//! Reports GFLOP/s so §Perf can track the practical roofline.
+
+use pgpr::linalg::{chol, gemm, matrix::Mat};
+use pgpr::util::bench::BenchSuite;
+use pgpr::util::rng::Pcg64;
+
+fn main() {
+    let mut suite = BenchSuite::new("linalg");
+    let mut rng = Pcg64::new(1);
+
+    for n in [128usize, 256, 512] {
+        let a = Mat::randn(n, n, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let flops = 2.0 * (n as f64).powi(3);
+        suite.case_with_throughput(&format!("gemm_{n}x{n}"), flops, || {
+            std::hint::black_box(gemm::matmul(&a, &b).unwrap());
+        });
+        suite.case_with_throughput(&format!("gemm_nt_{n}x{n}"), flops, || {
+            std::hint::black_box(gemm::matmul_nt(&a, &b).unwrap());
+        });
+        suite.case_with_throughput(&format!("syrk_tn_{n}x{n}"), flops / 2.0, || {
+            std::hint::black_box(gemm::syrk_tn(&a));
+        });
+    }
+
+    for n in [256usize, 512, 1024] {
+        let mut spd = {
+            let a = Mat::randn(n, n, &mut rng);
+            let mut m = gemm::syrk_nt(&a);
+            m.add_diag(n as f64 * 1e-3 + 1.0);
+            m
+        };
+        spd.symmetrize();
+        let flops = (n as f64).powi(3) / 3.0;
+        suite.case_with_throughput(&format!("cholesky_{n}"), flops, || {
+            std::hint::black_box(chol::cholesky(&spd).unwrap());
+        });
+        let f = chol::cholesky(&spd).unwrap();
+        let rhs = Mat::randn(n, 32, &mut rng);
+        suite.case(&format!("solve_mat_{n}x32"), || {
+            std::hint::black_box(f.solve_mat(&rhs).unwrap());
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,21 @@
+//! Regenerates Table 1a (SARCOS): RMSE(time) for FGP, SSGP, parallel LMA
+//! and parallel PIC over |D| × M. Prints the paper-layout table and
+//! writes results/table1a_sarcos.csv.
+//!
+//! Scaled defaults per DESIGN.md §3; set PGPR_BENCH_FAST=1 for a smoke
+//! run or use `pgpr experiment table1a --full` for paper-scale.
+
+use pgpr::experiments::common::Workload;
+use pgpr::experiments::table1;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table1a_sarcos");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    let params = table1::Table1Params::default_for(Workload::Sarcos);
+    suite.case("table1a_full_grid", || {
+        table1::run(&params).expect("table1a run failed");
+    });
+    suite.finish();
+}

@@ -1,0 +1,17 @@
+//! Regenerates Table 1b (AIMPEAK): RMSE(time) for FGP, SSGP, parallel LMA
+//! and parallel PIC over |D| × M. Writes results/table1b_aimpeak.csv.
+
+use pgpr::experiments::common::Workload;
+use pgpr::experiments::table1;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table1b_aimpeak");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    let params = table1::Table1Params::default_for(Workload::Aimpeak);
+    suite.case("table1b_full_grid", || {
+        table1::run(&params).expect("table1b run failed");
+    });
+    suite.finish();
+}

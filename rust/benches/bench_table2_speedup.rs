@@ -1,0 +1,16 @@
+//! Regenerates Table 2: parallel-vs-centralized speedups of LMA and PIC
+//! on AIMPEAK over |D| × M. Writes results/table2_speedup.csv.
+
+use pgpr::experiments::table2;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table2_speedup");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    let params = table2::Table2Params::default();
+    suite.case("table2_full_grid", || {
+        table2::run(&params).expect("table2 run failed");
+    });
+    suite.finish();
+}

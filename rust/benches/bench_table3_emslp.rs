@@ -1,0 +1,17 @@
+//! Regenerates Table 3: large-scale EMSLP scaling of parallel LMA vs
+//! parallel PIC, including PIC's per-core memory-ceiling failure.
+//! Writes results/table3_emslp.csv.
+
+use pgpr::experiments::table3;
+use pgpr::util::bench::{BenchConfig, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("table3_emslp");
+    // One full grid per invocation: the experiment is the measurement.
+    suite.cfg = BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, target_seconds: 0.0 };
+    let params = table3::Table3Params::default();
+    suite.case("table3_scaling", || {
+        table3::run(&params).expect("table3 run failed");
+    });
+    suite.finish();
+}

@@ -1,0 +1,309 @@
+//! Virtual-time cluster simulation engine.
+//!
+//! Ranks are numbered 0..P over a machines×cores topology; rank r lives on
+//! machine r / cores_per_machine. Rank 0 doubles as the master (paper
+//! Remark 1 after Theorem 2).
+//!
+//! * [`SimCluster::compute`] runs a closure as rank r's work: real
+//!   execution, wall-clock charged to r's virtual clock (optionally scaled
+//!   — see `compute_scaled` — for modeling a different per-core speed).
+//! * [`SimCluster::send`] models a point-to-point message; the receiver's
+//!   clock advances to max(own, sender + latency + bytes/bandwidth).
+//! * [`SimCluster::reduce_to_master`] / [`broadcast_from_master`] model
+//!   the summary exchange; the master's NIC serializes incoming
+//!   transfers, which is exactly what makes huge-|S| PIC summaries
+//!   communication-bound (Table 1b, |D|=8000 observation).
+
+use crate::config::ClusterConfig;
+use crate::util::error::{PgprError, Result};
+use crate::util::timer::time_it;
+
+/// Accumulated traffic/time statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    pub messages: usize,
+    pub bytes: usize,
+    /// Pure compute seconds per rank (virtual).
+    pub compute_secs: Vec<f64>,
+    /// Seconds each rank spent waiting on messages (virtual).
+    pub comm_wait_secs: Vec<f64>,
+}
+
+/// Virtual-time cluster.
+pub struct SimCluster {
+    cfg: ClusterConfig,
+    clocks: Vec<f64>,
+    metrics: ClusterMetrics,
+    /// Multiplier applied to measured compute time (1.0 = this machine's
+    /// speed). Lets experiments model the paper's slower/faster cores.
+    compute_scale: f64,
+}
+
+impl SimCluster {
+    pub fn new(cfg: ClusterConfig) -> Result<SimCluster> {
+        cfg.validate()?;
+        let p = cfg.total_cores();
+        Ok(SimCluster {
+            cfg,
+            clocks: vec![0.0; p],
+            metrics: ClusterMetrics {
+                messages: 0,
+                bytes: 0,
+                compute_secs: vec![0.0; p],
+                comm_wait_secs: vec![0.0; p],
+            },
+            compute_scale: 1.0,
+        })
+    }
+
+    pub fn with_compute_scale(mut self, scale: f64) -> SimCluster {
+        self.compute_scale = scale;
+        self
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.clocks.len()
+    }
+
+    pub fn machine_of(&self, rank: usize) -> usize {
+        rank / self.cfg.cores_per_machine
+    }
+
+    fn check_rank(&self, r: usize) -> Result<()> {
+        if r >= self.num_ranks() {
+            return Err(PgprError::Cluster(format!(
+                "rank {r} out of range (P={})",
+                self.num_ranks()
+            )));
+        }
+        Ok(())
+    }
+
+    /// One-way latency between two ranks.
+    pub fn latency(&self, from: usize, to: usize) -> f64 {
+        if from == to {
+            0.0
+        } else if self.machine_of(from) == self.machine_of(to) {
+            self.cfg.intra_latency
+        } else {
+            self.cfg.inter_latency
+        }
+    }
+
+    /// Execute `f` as rank `r`'s compute; returns f's output.
+    pub fn compute<T>(&mut self, rank: usize, f: impl FnOnce() -> T) -> Result<T> {
+        self.check_rank(rank)?;
+        let (out, secs) = time_it(f);
+        let scaled = secs * self.compute_scale;
+        self.clocks[rank] += scaled;
+        self.metrics.compute_secs[rank] += scaled;
+        Ok(out)
+    }
+
+    /// Charge pre-measured compute seconds to a rank (used when the same
+    /// physical work stands in for several ranks' identical work).
+    pub fn charge(&mut self, rank: usize, secs: f64) -> Result<()> {
+        self.check_rank(rank)?;
+        let scaled = secs * self.compute_scale;
+        self.clocks[rank] += scaled;
+        self.metrics.compute_secs[rank] += scaled;
+        Ok(())
+    }
+
+    /// Model a point-to-point message of `bytes` from `from` to `to`; the
+    /// receive is blocking (receiver waits for arrival).
+    pub fn send(&mut self, from: usize, to: usize, bytes: usize) -> Result<()> {
+        self.check_rank(from)?;
+        self.check_rank(to)?;
+        if from == to {
+            return Ok(());
+        }
+        let arrival =
+            self.clocks[from] + self.latency(from, to) + bytes as f64 / self.cfg.bandwidth;
+        if arrival > self.clocks[to] {
+            self.metrics.comm_wait_secs[to] += arrival - self.clocks[to];
+            self.clocks[to] = arrival;
+        }
+        self.metrics.messages += 1;
+        self.metrics.bytes += bytes;
+        Ok(())
+    }
+
+    /// All ranks synchronize to the max clock.
+    pub fn barrier(&mut self) {
+        let max = self.makespan();
+        for (i, c) in self.clocks.iter_mut().enumerate() {
+            self.metrics.comm_wait_secs[i] += max - *c;
+            *c = max;
+        }
+    }
+
+    /// Gather `bytes_per_rank[r]` from every rank to the master (rank 0),
+    /// serializing transfers at the master's NIC.
+    pub fn reduce_to_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        if bytes_per_rank.len() != self.num_ranks() {
+            return Err(PgprError::Cluster("reduce: wrong bytes_per_rank length".into()));
+        }
+        let mut master_clock = self.clocks[0];
+        for (r, &b) in bytes_per_rank.iter().enumerate().skip(1) {
+            let transfer = b as f64 / self.cfg.bandwidth;
+            let arrival = (self.clocks[r] + self.latency(r, 0)).max(master_clock) + transfer;
+            master_clock = arrival;
+            self.metrics.messages += 1;
+            self.metrics.bytes += b;
+        }
+        if master_clock > self.clocks[0] {
+            self.metrics.comm_wait_secs[0] += master_clock - self.clocks[0];
+            self.clocks[0] = master_clock;
+        }
+        Ok(())
+    }
+
+    /// Send `bytes_per_rank[r]` from the master to every rank,
+    /// serializing at the master's NIC.
+    pub fn broadcast_from_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        if bytes_per_rank.len() != self.num_ranks() {
+            return Err(PgprError::Cluster("broadcast: wrong bytes_per_rank length".into()));
+        }
+        let mut send_clock = self.clocks[0];
+        for (r, &b) in bytes_per_rank.iter().enumerate().skip(1) {
+            let transfer = b as f64 / self.cfg.bandwidth;
+            send_clock += transfer;
+            let arrival = send_clock + self.latency(0, r);
+            if arrival > self.clocks[r] {
+                self.metrics.comm_wait_secs[r] += arrival - self.clocks[r];
+                self.clocks[r] = arrival;
+            }
+            self.metrics.messages += 1;
+            self.metrics.bytes += b;
+        }
+        self.clocks[0] = send_clock;
+        Ok(())
+    }
+
+    /// Current virtual clock of a rank.
+    pub fn clock(&self, rank: usize) -> f64 {
+        self.clocks[rank]
+    }
+
+    /// Parallel incurred time = max over rank clocks.
+    pub fn makespan(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    pub fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster(machines: usize, cores: usize) -> SimCluster {
+        SimCluster::new(ClusterConfig::gigabit(machines, cores)).unwrap()
+    }
+
+    #[test]
+    fn compute_advances_only_that_rank() {
+        let mut c = cluster(2, 2);
+        c.compute(1, || {
+            let mut acc = 0u64;
+            for i in 0..200_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        })
+        .unwrap();
+        assert!(c.clock(1) > 0.0);
+        assert_eq!(c.clock(0), 0.0);
+        assert_eq!(c.clock(2), 0.0);
+    }
+
+    #[test]
+    fn send_charges_latency_and_bandwidth() {
+        let mut c = cluster(2, 1);
+        c.charge(0, 1.0).unwrap();
+        // 1.25e8 B/s bandwidth → 1.25e8 bytes take 1 s.
+        c.send(0, 1, 125_000_000).unwrap();
+        let expect = 1.0 + c.latency(0, 1) + 1.0;
+        assert!((c.clock(1) - expect).abs() < 1e-9, "{} vs {expect}", c.clock(1));
+        assert_eq!(c.metrics().messages, 1);
+        assert_eq!(c.metrics().bytes, 125_000_000);
+    }
+
+    #[test]
+    fn intra_faster_than_inter() {
+        let c = cluster(2, 2);
+        assert!(c.latency(0, 1) < c.latency(0, 2)); // ranks 0,1 share machine 0
+        assert_eq!(c.latency(3, 3), 0.0);
+    }
+
+    #[test]
+    fn receive_does_not_rewind_receiver() {
+        let mut c = cluster(2, 1);
+        c.charge(1, 10.0).unwrap();
+        c.send(0, 1, 8).unwrap(); // arrives long before receiver's clock
+        assert!((c.clock(1) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        let mut c = cluster(1, 4);
+        c.charge(2, 3.0).unwrap();
+        c.barrier();
+        for r in 0..4 {
+            assert!((c.clock(r) - 3.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn reduce_serializes_at_master() {
+        let mut c = cluster(4, 1);
+        let bytes = vec![0, 125_000_000, 125_000_000, 125_000_000];
+        c.reduce_to_master(&bytes).unwrap();
+        // Three 1-second transfers must serialize: ≥ 3 s.
+        assert!(c.clock(0) >= 3.0, "master clock {}", c.clock(0));
+        assert_eq!(c.metrics().messages, 3);
+    }
+
+    #[test]
+    fn broadcast_charges_sender_and_receivers() {
+        let mut c = cluster(2, 2);
+        c.charge(0, 1.0).unwrap();
+        let bytes = vec![0, 1_000_000, 1_000_000, 1_000_000];
+        c.broadcast_from_master(&bytes).unwrap();
+        for r in 1..4 {
+            assert!(c.clock(r) > 1.0, "rank {r} never received");
+        }
+        // Master's clock advanced by the serialized sends.
+        assert!(c.clock(0) > 1.0);
+    }
+
+    #[test]
+    fn makespan_is_max() {
+        let mut c = cluster(1, 3);
+        c.charge(0, 1.0).unwrap();
+        c.charge(1, 5.0).unwrap();
+        c.charge(2, 2.0).unwrap();
+        assert!((c.makespan() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_rank_rejected() {
+        let mut c = cluster(1, 2);
+        assert!(c.charge(5, 1.0).is_err());
+        assert!(c.send(0, 9, 8).is_err());
+    }
+
+    #[test]
+    fn compute_scale_multiplies() {
+        let mut c = cluster(1, 1).with_compute_scale(3.0);
+        c.charge(0, 2.0).unwrap();
+        assert!((c.clock(0) - 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! Configuration types for the LMA engine, the baselines, the cluster
+//! topology and the experiment harnesses, with JSON (de)serialization so
+//! runs are fully reproducible from a config file.
+
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+
+/// Configuration of the LMA method (Section 3).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LmaConfig {
+    /// M — number of blocks (and, for parallel LMA, of workers).
+    pub num_blocks: usize,
+    /// B — Markov order, 0 ≤ B ≤ M−1. B=0 reduces to PIC, B=M−1 to FGP.
+    pub markov_order: usize,
+    /// |S| — support set size.
+    pub support_size: usize,
+    /// Seed for support-set selection and partition initialization.
+    pub seed: u64,
+    /// Partitioning strategy for D (and U).
+    pub partition: PartitionStrategy,
+    /// Use the PJRT artifact path for covariance blocks when available.
+    pub use_pjrt: bool,
+}
+
+impl Default for LmaConfig {
+    fn default() -> Self {
+        LmaConfig {
+            num_blocks: 8,
+            markov_order: 1,
+            support_size: 128,
+            seed: 0,
+            partition: PartitionStrategy::KMeans { iters: 10 },
+            use_pjrt: false,
+        }
+    }
+}
+
+/// How D/U are split into the M correlated blocks (paper footnote 1:
+/// "a simple parallelized clustering scheme").
+#[derive(Clone, Debug, PartialEq)]
+pub enum PartitionStrategy {
+    /// k-means on the (lengthscale-scaled) inputs — the Chen et al. (2013)
+    /// scheme the paper cites.
+    KMeans { iters: usize },
+    /// Contiguous split in input order (useful for 1-D demos / tests).
+    Contiguous,
+    /// Random assignment (ablation: shows why correlated blocks matter).
+    Random,
+}
+
+impl LmaConfig {
+    pub fn validate(&self, data_size: usize) -> Result<()> {
+        if self.num_blocks == 0 {
+            return Err(PgprError::Config("num_blocks must be ≥ 1".into()));
+        }
+        if self.markov_order >= self.num_blocks {
+            return Err(PgprError::Config(format!(
+                "markov_order B={} must satisfy B ≤ M−1={}",
+                self.markov_order,
+                self.num_blocks - 1
+            )));
+        }
+        if self.support_size == 0 {
+            return Err(PgprError::Config("support_size must be ≥ 1".into()));
+        }
+        if data_size < self.num_blocks {
+            return Err(PgprError::Config(format!(
+                "data size {} < num_blocks {}",
+                data_size, self.num_blocks
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let part = match &self.partition {
+            PartitionStrategy::KMeans { iters } => {
+                Json::obj(vec![("kind", Json::Str("kmeans".into())), ("iters", Json::Num(*iters as f64))])
+            }
+            PartitionStrategy::Contiguous => Json::obj(vec![("kind", Json::Str("contiguous".into()))]),
+            PartitionStrategy::Random => Json::obj(vec![("kind", Json::Str("random".into()))]),
+        };
+        Json::obj(vec![
+            ("num_blocks", Json::Num(self.num_blocks as f64)),
+            ("markov_order", Json::Num(self.markov_order as f64)),
+            ("support_size", Json::Num(self.support_size as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("partition", part),
+            ("use_pjrt", Json::Bool(self.use_pjrt)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LmaConfig> {
+        let partition = match j.get("partition") {
+            None => PartitionStrategy::KMeans { iters: 10 },
+            Some(p) => match p.req("kind")?.as_str() {
+                Some("kmeans") => PartitionStrategy::KMeans {
+                    iters: p.get("iters").and_then(|v| v.as_usize()).unwrap_or(10),
+                },
+                Some("contiguous") => PartitionStrategy::Contiguous,
+                Some("random") => PartitionStrategy::Random,
+                other => {
+                    return Err(PgprError::Config(format!("unknown partition kind {other:?}")))
+                }
+            },
+        };
+        Ok(LmaConfig {
+            num_blocks: j.req("num_blocks")?.as_usize().ok_or_else(bad("num_blocks"))?,
+            markov_order: j.req("markov_order")?.as_usize().ok_or_else(bad("markov_order"))?,
+            support_size: j.req("support_size")?.as_usize().ok_or_else(bad("support_size"))?,
+            seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+            partition,
+            use_pjrt: j.get("use_pjrt").and_then(|v| v.as_bool()).unwrap_or(false),
+        })
+    }
+}
+
+fn bad(field: &'static str) -> impl Fn() -> PgprError {
+    move || PgprError::Config(format!("field `{field}` must be a non-negative integer"))
+}
+
+/// Cluster topology description (machines × cores per machine), matching
+/// the paper's experimental platforms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    pub machines: usize,
+    pub cores_per_machine: usize,
+    /// One-way latency between cores on the *same* machine (seconds).
+    pub intra_latency: f64,
+    /// One-way latency between cores on *different* machines (seconds).
+    pub inter_latency: f64,
+    /// Link bandwidth in bytes/second (gigabit ≈ 1.25e8).
+    pub bandwidth: f64,
+}
+
+impl ClusterConfig {
+    /// Paper's main platform: 32 nodes, gigabit ethernet.
+    pub fn gigabit(machines: usize, cores_per_machine: usize) -> ClusterConfig {
+        ClusterConfig {
+            machines,
+            cores_per_machine,
+            intra_latency: 2e-6,  // shared-memory handoff
+            inter_latency: 5e-5,  // gigabit + switch hop
+            bandwidth: 1.25e8,    // 1 Gbps
+        }
+    }
+
+    pub fn total_cores(&self) -> usize {
+        self.machines * self.cores_per_machine
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.machines == 0 || self.cores_per_machine == 0 {
+            return Err(PgprError::Config("cluster must have ≥1 machine and ≥1 core".into()));
+        }
+        if self.bandwidth <= 0.0 {
+            return Err(PgprError::Config("bandwidth must be positive".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lma_config_json_roundtrip() {
+        let cfg = LmaConfig {
+            num_blocks: 16,
+            markov_order: 3,
+            support_size: 256,
+            seed: 7,
+            partition: PartitionStrategy::KMeans { iters: 5 },
+            use_pjrt: true,
+        };
+        let j = cfg.to_json();
+        let back = LmaConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn validate_catches_bad_b() {
+        let cfg = LmaConfig { num_blocks: 4, markov_order: 4, ..Default::default() };
+        assert!(cfg.validate(1000).is_err());
+        let ok = LmaConfig { num_blocks: 4, markov_order: 3, ..Default::default() };
+        assert!(ok.validate(1000).is_ok());
+        assert!(ok.validate(2).is_err()); // fewer points than blocks
+    }
+
+    #[test]
+    fn cluster_defaults_sane() {
+        let c = ClusterConfig::gigabit(32, 2);
+        assert_eq!(c.total_cores(), 64);
+        assert!(c.validate().is_ok());
+        assert!(c.inter_latency > c.intra_latency);
+    }
+
+    #[test]
+    fn partition_kinds_roundtrip() {
+        for p in [PartitionStrategy::Contiguous, PartitionStrategy::Random] {
+            let cfg = LmaConfig { partition: p.clone(), ..Default::default() };
+            let back = LmaConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.partition, p);
+        }
+    }
+}

@@ -1,0 +1,334 @@
+//! Subcommand implementations for the `pgpr` binary.
+
+use std::io::BufRead;
+
+use crate::config::{LmaConfig, PartitionStrategy};
+use crate::coordinator::service::{PredictionService, Request};
+use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
+use crate::lma::LmaRegressor;
+use crate::util::cli::Args;
+use crate::util::csv::CsvTable;
+use crate::util::error::{PgprError, Result};
+
+/// `pgpr experiment <id> [--full]`.
+pub fn cmd_experiment(id: &str, full: bool) -> Result<()> {
+    match id {
+        "table1a" => {
+            let p = if full {
+                table1::Table1Params::full_for(Workload::Sarcos)
+            } else {
+                table1::Table1Params::default_for(Workload::Sarcos)
+            };
+            table1::run(&p)?;
+        }
+        "table1b" => {
+            let p = if full {
+                table1::Table1Params::full_for(Workload::Aimpeak)
+            } else {
+                table1::Table1Params::default_for(Workload::Aimpeak)
+            };
+            table1::run(&p)?;
+        }
+        "table2" => {
+            let p = if full { table2::Table2Params::full() } else { table2::Table2Params::default() };
+            table2::run(&p)?;
+        }
+        "table3" => {
+            let p = if full { table3::Table3Params::full() } else { table3::Table3Params::default() };
+            table3::run(&p)?;
+        }
+        "fig2" => {
+            let p = if full { fig2::Fig2Params::full() } else { fig2::Fig2Params::default() };
+            fig2::run(&p)?;
+        }
+        "fig6" => {
+            fig6::run(42)?;
+        }
+        "ablation" => {
+            ablation::run(42)?;
+        }
+        "all" => {
+            for id in ["table1a", "table1b", "table2", "table3", "fig2", "fig6", "ablation"] {
+                cmd_experiment(id, full)?;
+            }
+        }
+        other => {
+            return Err(PgprError::Config(format!(
+                "unknown experiment `{other}` (try table1a, table1b, table2, table3, fig2, fig6, ablation, all)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// `pgpr data gen` — write train/test CSVs.
+pub fn cmd_data_gen(dataset: &str, train: usize, test: usize, seed: u64, out: &str) -> Result<()> {
+    let w = Workload::parse(dataset)?;
+    let ds = w.generate(train, test, seed)?;
+    ds.validate()?;
+    for (tag, x, y) in [
+        ("train", &ds.train_x, &ds.train_y),
+        ("test", &ds.test_x, &ds.test_y),
+    ] {
+        let mut header: Vec<String> = (0..ds.dim()).map(|j| format!("x{j}")).collect();
+        header.push("y".into());
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut t = CsvTable::new(&header_refs);
+        for i in 0..x.rows() {
+            let mut row: Vec<f64> = x.row(i).to_vec();
+            row.push(y[i]);
+            t.push_nums(&row);
+        }
+        let path = format!("{out}/{}_{tag}.csv", ds.name);
+        t.write_path(&path)?;
+        println!("wrote {path} ({} rows)", x.rows());
+    }
+    Ok(())
+}
+
+/// Load a dataset CSV written by `cmd_data_gen`.
+pub fn load_xy_csv(path: &str) -> Result<(crate::linalg::matrix::Mat, Vec<f64>)> {
+    let t = CsvTable::read_path(path)?;
+    let d = t.header.len() - 1;
+    if t.header.last().map(|s| s.as_str()) != Some("y") {
+        return Err(PgprError::Data(format!("{path}: last column must be `y`")));
+    }
+    let n = t.rows.len();
+    let mut x = crate::linalg::matrix::Mat::zeros(n, d);
+    let mut y = vec![0.0; n];
+    for (i, row) in t.rows.iter().enumerate() {
+        for j in 0..d {
+            x.set(i, j, row[j].parse().map_err(|_| PgprError::Data(format!("bad cell {}", row[j])))?);
+        }
+        y[i] = row[d].parse().map_err(|_| PgprError::Data(format!("bad cell {}", row[d])))?;
+    }
+    Ok((x, y))
+}
+
+/// `pgpr eval` — fit LMA on a training CSV, evaluate on a test CSV,
+/// write per-point predictions and print metrics.
+pub fn cmd_eval(
+    train_csv: &str,
+    test_csv: &str,
+    m: usize,
+    b: usize,
+    s: usize,
+    seed: u64,
+    out: &str,
+) -> Result<()> {
+    let (train_x, train_y) = load_xy_csv(train_csv)?;
+    let (test_x, test_y) = load_xy_csv(test_csv)?;
+    let ds = crate::data::Dataset {
+        name: "csv".into(),
+        train_x,
+        train_y,
+        test_x,
+        test_y,
+    };
+    ds.validate()?;
+    let hyp = crate::experiments::common::learn_hypers(&ds, 512.min(ds.train_x.rows()), seed)?;
+    let cfg = LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 10 },
+        use_pjrt: false,
+    };
+    let (model, fit_secs) =
+        crate::util::timer::time_it(|| LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg));
+    let model = model?;
+    let (pred, pred_secs) = crate::util::timer::time_it(|| model.predict(&ds.test_x));
+    let pred = pred?;
+    let rmse = crate::metrics::rmse(&pred.mean, &ds.test_y);
+    let mnlp = crate::metrics::mnlp(&pred.mean, &pred.var, &ds.test_y);
+    println!(
+        "LMA(M={m}, B={b}, |S|={s}): rmse {rmse:.6}  mnlp {mnlp:.4}  fit {fit_secs:.2}s  predict {pred_secs:.2}s"
+    );
+    let mut t = CsvTable::new(&["y_true", "mean", "var"]);
+    for i in 0..pred.mean.len() {
+        t.push_nums(&[ds.test_y[i], pred.mean[i], pred.var[i]]);
+    }
+    t.write_path(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// `pgpr serve` — line protocol: `predict v1,v2,...` → `id mean var`;
+/// `flush` forces a partial batch; EOF flushes and prints stats.
+pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64) -> Result<()> {
+    let w = Workload::parse(dataset)?;
+    let ds = w.generate(train, train / 4, seed)?;
+    let hyp = crate::experiments::common::quick_hypers(&ds);
+    let m = (train / 128).clamp(2, 32);
+    let cfg = LmaConfig {
+        num_blocks: m,
+        markov_order: 1,
+        support_size: (train / 16).clamp(8, 512),
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+    let model = LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg)?;
+    let mut svc = PredictionService::new(model, batch)?;
+    eprintln!(
+        "serving {} (dim {}, M={m}, batch {batch}); protocol: `predict v1,v2,...` | `flush` | EOF",
+        ds.name,
+        ds.dim()
+    );
+    let stdin = std::io::stdin();
+    let mut next_id = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "flush" {
+            for r in svc.flush()? {
+                println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("predict ") {
+            let x: std::result::Result<Vec<f64>, _> =
+                rest.split(',').map(|s| s.trim().parse::<f64>()).collect();
+            let x = x.map_err(|_| PgprError::Data(format!("bad request `{line}`")))?;
+            next_id += 1;
+            for r in svc.submit(Request { id: next_id, x })? {
+                println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
+            }
+        } else {
+            eprintln!("unknown command: {line}");
+        }
+    }
+    for r in svc.flush()? {
+        println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
+    }
+    eprintln!(
+        "served {} requests in {} batches; mean latency {:.4}s; throughput {:.1} req/s",
+        svc.served,
+        svc.batches,
+        svc.mean_latency(),
+        svc.throughput()
+    );
+    Ok(())
+}
+
+/// `pgpr bench-info`: report artifact availability.
+pub fn cmd_bench_info() -> Result<()> {
+    match crate::runtime::artifacts::ArtifactLibrary::try_default() {
+        Some(lib) => {
+            println!("artifacts: loaded {} entries", lib.entries().len());
+            for e in lib.entries() {
+                println!("  {} {}x{} d={} ({})", e.name, e.n1, e.n2, e.d, e.file);
+            }
+        }
+        None => println!("artifacts: not built (run `make artifacts`); native path active"),
+    }
+    Ok(())
+}
+
+/// Top-level dispatch used by main().
+pub fn dispatch() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    match sub {
+        "experiment" => {
+            let a = Args::new("pgpr experiment", "run a paper experiment")
+                .switch("full", "paper-scale parameters (slow)")
+                .parse_from(rest)?;
+            let id = a
+                .positionals()
+                .first()
+                .cloned()
+                .unwrap_or_else(|| "all".to_string());
+            cmd_experiment(&id, a.get_bool("full"))
+        }
+        "data" => {
+            let a = Args::new("pgpr data", "generate datasets")
+                .flag("dataset", "aimpeak", "sarcos | aimpeak | emslp")
+                .flag("train", "1000", "training rows")
+                .flag("test", "200", "test rows")
+                .flag("seed", "0", "seed")
+                .flag("out", "results/data", "output directory")
+                .parse_from(rest)?;
+            cmd_data_gen(
+                &a.get("dataset"),
+                a.get_usize("train"),
+                a.get_usize("test"),
+                a.get_usize("seed") as u64,
+                &a.get("out"),
+            )
+        }
+        "eval" => {
+            let a = Args::new("pgpr eval", "fit + evaluate LMA on CSV data")
+                .required("train-csv", "training data (x0..xd-1, y header)")
+                .required("test-csv", "test data (same schema)")
+                .flag("blocks", "8", "M — number of blocks")
+                .flag("order", "1", "B — Markov order")
+                .flag("support", "128", "|S| — support set size")
+                .flag("seed", "0", "seed")
+                .flag("out", "results/eval_predictions.csv", "prediction output CSV")
+                .parse_from(rest)?;
+            cmd_eval(
+                &a.get("train-csv"),
+                &a.get("test-csv"),
+                a.get_usize("blocks"),
+                a.get_usize("order"),
+                a.get_usize("support"),
+                a.get_usize("seed") as u64,
+                &a.get("out"),
+            )
+        }
+        "serve" => {
+            let a = Args::new("pgpr serve", "batched prediction service")
+                .flag("dataset", "aimpeak", "sarcos | aimpeak | emslp")
+                .flag("train", "1000", "training rows")
+                .flag("batch", "16", "batch size")
+                .flag("seed", "0", "seed")
+                .parse_from(rest)?;
+            cmd_serve(
+                &a.get("dataset"),
+                a.get_usize("train"),
+                a.get_usize("batch"),
+                a.get_usize("seed") as u64,
+            )
+        }
+        "bench-info" => cmd_bench_info(),
+        _ => {
+            println!(
+                "pgpr — Parallel GP Regression (LMA, AAAI 2015 reproduction)\n\n\
+                 USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full]\n  \
+                 pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
+                 pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
+                 pgpr serve --dataset aimpeak --train 1000 --batch 16\n  \
+                 pgpr bench-info\n"
+            );
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn data_gen_roundtrip() {
+        let dir = std::env::temp_dir().join("pgpr_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        cmd_data_gen("aimpeak", 50, 10, 1, dir.to_str().unwrap()).unwrap();
+        let (x, y) = load_xy_csv(dir.join("aimpeak-sim_train.csv").to_str().unwrap()).unwrap();
+        assert_eq!(x.rows(), 50);
+        assert_eq!(x.cols(), 5);
+        assert_eq!(y.len(), 50);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(cmd_experiment("bogus", false).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Layer-3 coordinator: the `pgpr` binary's subcommands, the model
+//! registry and the batched prediction service loop.
+//!
+//! Subcommands:
+//! * `pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full]`
+//! * `pgpr data gen --dataset <sarcos|aimpeak|emslp> --train N --test N --out dir/`
+//! * `pgpr train --dataset ... | --train-csv ... --model out.json`
+//! * `pgpr serve --dataset ... [--batch N]` — line protocol on stdin
+//! * `pgpr bench-info` — print artifact/bucket status
+
+pub mod service;
+pub mod cli_run;

@@ -1,0 +1,190 @@
+//! Batched prediction service.
+//!
+//! The serving loop accepts single-point prediction requests, accumulates
+//! them into batches (up to `batch_size` or until `flush` is called) and
+//! answers them with one LMA predict call per batch — amortizing the
+//! sweep/summary cost exactly like a serving system batches GPU calls.
+//! This is the request path a downstream user would deploy; Python is
+//! never involved.
+
+use crate::gp::Prediction;
+use crate::linalg::matrix::Mat;
+use crate::lma::LmaRegressor;
+use crate::util::error::{PgprError, Result};
+use crate::util::timer::time_it;
+
+/// One pending request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub x: Vec<f64>,
+}
+
+/// One answered request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub mean: f64,
+    pub var: f64,
+    /// Wall-clock seconds between enqueue and answer batch completion.
+    pub latency: f64,
+}
+
+/// Batching predictor over a fitted LMA model.
+pub struct PredictionService {
+    model: LmaRegressor,
+    batch_size: usize,
+    queue: Vec<(Request, std::time::Instant)>,
+    /// Serving statistics.
+    pub served: usize,
+    pub batches: usize,
+    pub total_latency: f64,
+    pub predict_secs: f64,
+}
+
+impl PredictionService {
+    pub fn new(model: LmaRegressor, batch_size: usize) -> Result<PredictionService> {
+        if batch_size == 0 {
+            return Err(PgprError::Config("batch_size must be ≥ 1".into()));
+        }
+        Ok(PredictionService {
+            model,
+            batch_size,
+            queue: Vec::new(),
+            served: 0,
+            batches: 0,
+            total_latency: 0.0,
+            predict_secs: 0.0,
+        })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.model.core().hyp.dim()
+    }
+
+    /// Enqueue a request; answers the whole batch when full.
+    pub fn submit(&mut self, req: Request) -> Result<Vec<Response>> {
+        if req.x.len() != self.dim() {
+            return Err(PgprError::Shape(format!(
+                "request {} has dim {}, model expects {}",
+                req.id,
+                req.x.len(),
+                self.dim()
+            )));
+        }
+        self.queue.push((req, std::time::Instant::now()));
+        if self.queue.len() >= self.batch_size {
+            self.flush()
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Answer everything queued.
+    pub fn flush(&mut self) -> Result<Vec<Response>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        let batch: Vec<(Request, std::time::Instant)> = std::mem::take(&mut self.queue);
+        let mut x = Mat::zeros(batch.len(), self.dim());
+        for (i, (req, _)) in batch.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(&req.x);
+        }
+        let (pred, secs) = time_it(|| self.model.predict(&x));
+        let pred: Prediction = pred?;
+        self.predict_secs += secs;
+        self.batches += 1;
+        let mut out = Vec::with_capacity(batch.len());
+        for (i, (req, t0)) in batch.into_iter().enumerate() {
+            let latency = t0.elapsed().as_secs_f64();
+            self.total_latency += latency;
+            self.served += 1;
+            out.push(Response { id: req.id, mean: pred.mean[i], var: pred.var[i], latency });
+        }
+        Ok(out)
+    }
+
+    /// Mean latency over everything served so far.
+    pub fn mean_latency(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.total_latency / self.served as f64
+        }
+    }
+
+    /// Throughput over pure predict time.
+    pub fn throughput(&self) -> f64 {
+        if self.predict_secs <= 0.0 {
+            0.0
+        } else {
+            self.served as f64 / self.predict_secs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::util::rng::Pcg64;
+
+    fn service(batch: usize) -> PredictionService {
+        let mut rng = Pcg64::new(241);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(150, -4.0, 4.0));
+        let y: Vec<f64> = (0..150).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 5,
+            markov_order: 1,
+            support_size: 24,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+        PredictionService::new(model, batch).unwrap()
+    }
+
+    #[test]
+    fn batches_fire_at_capacity() {
+        let mut s = service(3);
+        assert!(s.submit(Request { id: 1, x: vec![0.5] }).unwrap().is_empty());
+        assert!(s.submit(Request { id: 2, x: vec![1.0] }).unwrap().is_empty());
+        let out = s.submit(Request { id: 3, x: vec![-1.0] }).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].id, 1);
+        assert!(s.served == 3 && s.batches == 1);
+        // Answers match the function being regressed.
+        assert!((out[0].mean - 0.5f64.sin()).abs() < 0.2);
+    }
+
+    #[test]
+    fn flush_drains_partial_batch() {
+        let mut s = service(10);
+        s.submit(Request { id: 7, x: vec![0.0] }).unwrap();
+        let out = s.flush().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 7);
+        assert!(s.flush().unwrap().is_empty());
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let mut s = service(2);
+        assert!(s.submit(Request { id: 1, x: vec![0.0, 1.0] }).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = service(2);
+        for i in 0..6 {
+            s.submit(Request { id: i, x: vec![i as f64 * 0.3] }).unwrap();
+        }
+        assert_eq!(s.served, 6);
+        assert_eq!(s.batches, 3);
+        assert!(s.throughput() > 0.0);
+        assert!(s.mean_latency() >= 0.0);
+    }
+}

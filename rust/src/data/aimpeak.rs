@@ -1,0 +1,201 @@
+//! AIMPEAK-style traffic dataset generator.
+//!
+//! The real AIMPEAK data (Chen et al. 2012/2013) is traffic speed over 775
+//! urban road segments × 54 five-minute morning-peak slots, modeled by a
+//! relational GP whose input domain is MDS-embedded (footnote 4). We
+//! rebuild the same pipeline synthetically:
+//!
+//! 1. generate a grid-with-shortcuts road network of `segments` nodes with
+//!    per-segment attributes (length, lanes, speed limit, direction);
+//! 2. compute graph distances and a 2-D MDS embedding ([`data::mds`]);
+//! 3. sample speeds from a congestion field over (embedding × time):
+//!    free-flow speed from the limit, minus rush-hour congestion waves
+//!    that propagate spatially along the network — giving the multiscale
+//!    spatiotemporal correlation the paper's experiments rely on.
+//!
+//! Features are 5-D as in the paper: length, lanes, limit, direction,
+//! time-slot.
+
+use crate::data::mds::{all_pairs_shortest, classical_mds};
+use crate::data::{Dataset, GenSpec};
+use crate::linalg::matrix::Mat;
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+pub const DIM: usize = 5;
+const TIME_SLOTS: usize = 54;
+
+/// The synthetic road network with derived fields.
+pub struct RoadNetwork {
+    pub segments: usize,
+    /// Per-segment attributes.
+    pub length: Vec<f64>,
+    pub lanes: Vec<f64>,
+    pub limit: Vec<f64>,
+    pub direction: Vec<f64>,
+    /// 2-D MDS embedding of graph distances.
+    pub embedding: Mat,
+    /// Congestion epicentres in embedding space.
+    hotspots: Vec<(f64, f64, f64)>,
+    noise: f64,
+}
+
+impl RoadNetwork {
+    pub fn build(segments: usize, seed: u64) -> Result<RoadNetwork> {
+        let mut rng = Pcg64::new(seed ^ 0xA1111);
+        // Grid skeleton with random shortcut edges (urban arterials).
+        let side = (segments as f64).sqrt().ceil() as usize;
+        let mut edges: Vec<(usize, usize, f64)> = Vec::new();
+        let idx = |r: usize, c: usize| r * side + c;
+        for r in 0..side {
+            for c in 0..side {
+                let v = idx(r, c);
+                if v >= segments {
+                    continue;
+                }
+                if c + 1 < side && idx(r, c + 1) < segments {
+                    edges.push((v, idx(r, c + 1), rng.uniform_in(0.4, 1.6)));
+                }
+                if r + 1 < side && idx(r + 1, c) < segments {
+                    edges.push((v, idx(r + 1, c), rng.uniform_in(0.4, 1.6)));
+                }
+            }
+        }
+        // Shortcuts: ~5% extra edges.
+        for _ in 0..(segments / 20).max(1) {
+            let a = rng.below(segments);
+            let b = rng.below(segments);
+            if a != b {
+                edges.push((a, b, rng.uniform_in(1.0, 3.0)));
+            }
+        }
+        let dist = all_pairs_shortest(segments, &edges)?;
+        let embedding = classical_mds(&dist, 2)?;
+
+        let length: Vec<f64> = (0..segments).map(|_| rng.uniform_in(0.05, 1.2)).collect();
+        let lanes: Vec<f64> = (0..segments).map(|_| (1 + rng.below(4)) as f64).collect();
+        let limit: Vec<f64> =
+            (0..segments).map(|_| [40.0, 50.0, 60.0, 80.0, 90.0][rng.below(5)]).collect();
+        let direction: Vec<f64> = (0..segments).map(|_| rng.below(4) as f64).collect();
+
+        // Congestion hotspots (CBD, expressway junctions...).
+        let nh = 3 + rng.below(3);
+        let span = embedding.max_abs().max(1e-9);
+        let hotspots: Vec<(f64, f64, f64)> = (0..nh)
+            .map(|_| {
+                (
+                    rng.uniform_in(-span, span),
+                    rng.uniform_in(-span, span),
+                    rng.uniform_in(0.25, 0.9) * span,
+                )
+            })
+            .collect();
+        Ok(RoadNetwork {
+            segments,
+            length,
+            lanes,
+            limit,
+            direction,
+            embedding,
+            hotspots,
+            noise: 2.0,
+        })
+    }
+
+    /// Mean traffic speed (km/h) for segment s at time-slot t ∈ [0, 54).
+    pub fn speed(&self, s: usize, t: f64) -> f64 {
+        let free_flow = self.limit[s] * (0.85 + 0.03 * self.lanes[s]);
+        // Morning-peak profile: congestion builds to a peak around slot
+        // ~30 then eases (Gaussian bump in time).
+        let peak = (-(t - 30.0) * (t - 30.0) / (2.0 * 12.0 * 12.0)).exp();
+        // Spatial congestion: sum of hotspot kernels in embedding space,
+        // drifting slowly with time (waves propagating outward).
+        let (ex, ey) = (self.embedding.get(s, 0), self.embedding.get(s, 1));
+        let mut congestion = 0.0;
+        for (k, &(hx, hy, hw)) in self.hotspots.iter().enumerate() {
+            let drift = 0.15 * hw * ((t / TIME_SLOTS as f64) * 6.28 + k as f64).sin();
+            let dx = ex - hx - drift;
+            let dy = ey - hy;
+            congestion += (-(dx * dx + dy * dy) / (2.0 * hw * hw)).exp();
+        }
+        let slowdown = (0.75 * peak * congestion).min(0.85);
+        free_flow * (1.0 - slowdown)
+    }
+}
+
+/// Generate an AIMPEAK-like dataset: rows are (segment, time) pairs.
+pub fn generate(spec: &GenSpec) -> Result<Dataset> {
+    generate_with_segments(spec, 200)
+}
+
+/// Variant with explicit network size (the full-scale harness uses 775).
+pub fn generate_with_segments(spec: &GenSpec, segments: usize) -> Result<Dataset> {
+    let net = RoadNetwork::build(segments, spec.seed)?;
+    let mut rng = Pcg64::new(spec.seed ^ 0xBEE);
+    let total = spec.train + spec.test;
+    let mut x = Mat::zeros(total, DIM);
+    let mut y = vec![0.0; total];
+    for i in 0..total {
+        let s = rng.below(segments);
+        let t = rng.below(TIME_SLOTS) as f64;
+        x.set(i, 0, net.length[s]);
+        x.set(i, 1, net.lanes[s]);
+        x.set(i, 2, net.limit[s]);
+        x.set(i, 3, net.direction[s]);
+        x.set(i, 4, t);
+        y[i] = net.speed(s, t) + net.noise * rng.normal();
+    }
+    Ok(Dataset {
+        name: "aimpeak-sim".into(),
+        train_x: x.rows_range(0, spec.train),
+        train_y: y[..spec.train].to_vec(),
+        test_x: x.rows_range(spec.train, total),
+        test_y: y[spec.train..].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn network_builds_and_embeds() {
+        let net = RoadNetwork::build(64, 1).unwrap();
+        assert_eq!(net.embedding.rows(), 64);
+        assert_eq!(net.embedding.cols(), 2);
+        assert!(net.embedding.max_abs() > 0.0);
+    }
+
+    #[test]
+    fn speeds_below_free_flow_and_positive() {
+        let net = RoadNetwork::build(49, 2).unwrap();
+        for s in 0..49 {
+            for t in [0.0, 15.0, 30.0, 53.0] {
+                let v = net.speed(s, t);
+                assert!(v > 0.0, "segment {s} slot {t}: speed {v}");
+                assert!(v <= net.limit[s] * 1.05, "above limit");
+            }
+        }
+    }
+
+    #[test]
+    fn peak_hour_slower_than_offpeak_on_average() {
+        let net = RoadNetwork::build(81, 3).unwrap();
+        let avg = |t: f64| -> f64 {
+            (0..81).map(|s| net.speed(s, t)).sum::<f64>() / 81.0
+        };
+        assert!(avg(30.0) < avg(0.0), "peak {} !< offpeak {}", avg(30.0), avg(0.0));
+    }
+
+    #[test]
+    fn dataset_has_5d_features_with_time_column() {
+        let ds = generate(&GenSpec::new(100, 20, 4)).unwrap();
+        ds.validate().unwrap();
+        assert_eq!(ds.dim(), 5);
+        // Time column in range.
+        for i in 0..100 {
+            let t = ds.train_x.get(i, 4);
+            assert!((0.0..54.0).contains(&t));
+        }
+    }
+}

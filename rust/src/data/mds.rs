@@ -1,0 +1,168 @@
+//! Classical multidimensional scaling (Torgerson MDS).
+//!
+//! Given a symmetric distance matrix Δ, double-center B = −½·J·Δ²·J and
+//! embed into the top-k eigenvectors scaled by √λ. The AIMPEAK pipeline
+//! uses this to map road-network graph distances into Euclidean space
+//! before applying the SE kernel, mirroring the paper's footnote 4.
+
+use crate::linalg::eig::sym_eig;
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+
+/// Embed an n×n distance matrix into k dimensions. Returns n×k
+/// coordinates. Non-positive eigendirections are dropped (coordinates 0).
+pub fn classical_mds(dist: &Mat, k: usize) -> Result<Mat> {
+    if !dist.is_square() {
+        return Err(PgprError::Shape("mds: distance matrix must be square".into()));
+    }
+    let n = dist.rows();
+    if k == 0 || k > n {
+        return Err(PgprError::Config(format!("mds: k={k} out of range for n={n}")));
+    }
+    // B = −½·J·Δ²·J with J = I − 11ᵀ/n.
+    let mut sq = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let d = dist.get(i, j);
+            sq.set(i, j, d * d);
+        }
+    }
+    let row_mean: Vec<f64> = (0..n).map(|i| sq.row(i).iter().sum::<f64>() / n as f64).collect();
+    let grand: f64 = row_mean.iter().sum::<f64>() / n as f64;
+    let mut b = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            b.set(i, j, -0.5 * (sq.get(i, j) - row_mean[i] - row_mean[j] + grand));
+        }
+    }
+    let e = sym_eig(&b)?;
+    let mut out = Mat::zeros(n, k);
+    for c in 0..k {
+        let lam = e.values[c];
+        if lam <= 0.0 {
+            continue; // drop non-metric directions
+        }
+        let s = lam.sqrt();
+        for i in 0..n {
+            out.set(i, c, e.vectors.get(i, c) * s);
+        }
+    }
+    Ok(out)
+}
+
+/// All-pairs shortest paths on a weighted undirected graph given as an
+/// adjacency list, via repeated Dijkstra (binary-heap-free: simple O(V²)
+/// scan per source — the road graphs here are ≤ ~1000 nodes).
+pub fn all_pairs_shortest(n: usize, edges: &[(usize, usize, f64)]) -> Result<Mat> {
+    let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for &(a, b, w) in edges {
+        if a >= n || b >= n {
+            return Err(PgprError::Data(format!("edge ({a},{b}) out of range n={n}")));
+        }
+        if w < 0.0 {
+            return Err(PgprError::Data("negative edge weight".into()));
+        }
+        adj[a].push((b, w));
+        adj[b].push((a, w));
+    }
+    let mut dist = Mat::filled(n, n, f64::INFINITY);
+    for src in 0..n {
+        let mut d = vec![f64::INFINITY; n];
+        let mut done = vec![false; n];
+        d[src] = 0.0;
+        for _ in 0..n {
+            // Pick the nearest unfinished node.
+            let mut best = usize::MAX;
+            let mut bd = f64::INFINITY;
+            for v in 0..n {
+                if !done[v] && d[v] < bd {
+                    bd = d[v];
+                    best = v;
+                }
+            }
+            if best == usize::MAX {
+                break;
+            }
+            done[best] = true;
+            for &(nb, w) in &adj[best] {
+                if d[best] + w < d[nb] {
+                    d[nb] = d[best] + w;
+                }
+            }
+        }
+        for v in 0..n {
+            dist.set(src, v, d[v]);
+        }
+    }
+    // Disconnected graphs produce infinities the embedding cannot handle.
+    if dist.data().iter().any(|v| !v.is_finite()) {
+        return Err(PgprError::Data("graph is disconnected".into()));
+    }
+    Ok(dist)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_euclidean_configuration() {
+        // Points in the plane → distance matrix → MDS → distances match.
+        let mut rng = Pcg64::new(221);
+        let n = 12;
+        let pts = Mat::randn(n, 2, &mut rng);
+        let mut dist = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let dx = pts.get(i, 0) - pts.get(j, 0);
+                let dy = pts.get(i, 1) - pts.get(j, 1);
+                dist.set(i, j, (dx * dx + dy * dy).sqrt());
+            }
+        }
+        let emb = classical_mds(&dist, 2).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let dx = emb.get(i, 0) - emb.get(j, 0);
+                let dy = emb.get(i, 1) - emb.get(j, 1);
+                let got = (dx * dx + dy * dy).sqrt();
+                assert!((got - dist.get(i, j)).abs() < 1e-6, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn shortest_paths_on_a_path_graph() {
+        let edges = vec![(0, 1, 1.0), (1, 2, 2.0), (2, 3, 3.0)];
+        let d = all_pairs_shortest(4, &edges).unwrap();
+        assert_eq!(d.get(0, 3), 6.0);
+        assert_eq!(d.get(3, 0), 6.0);
+        assert_eq!(d.get(1, 2), 2.0);
+        assert_eq!(d.get(2, 2), 0.0);
+    }
+
+    #[test]
+    fn shortest_paths_take_the_shortcut() {
+        let edges = vec![(0, 1, 10.0), (0, 2, 1.0), (2, 1, 1.0)];
+        let d = all_pairs_shortest(3, &edges).unwrap();
+        assert_eq!(d.get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn disconnected_rejected() {
+        let edges = vec![(0, 1, 1.0)];
+        assert!(all_pairs_shortest(3, &edges).is_err());
+    }
+
+    #[test]
+    fn mds_on_graph_distances_is_monotone_for_line() {
+        // Path graph: embedding's first coordinate must be monotone.
+        let edges: Vec<(usize, usize, f64)> = (0..9).map(|i| (i, i + 1, 1.0)).collect();
+        let d = all_pairs_shortest(10, &edges).unwrap();
+        let emb = classical_mds(&d, 1).unwrap();
+        let col: Vec<f64> = (0..10).map(|i| emb.get(i, 0)).collect();
+        let inc = col.windows(2).all(|w| w[0] < w[1]);
+        let dec = col.windows(2).all(|w| w[0] > w[1]);
+        assert!(inc || dec, "{col:?}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Dataset generators.
+//!
+//! The paper's datasets (SARCOS, AIMPEAK, EMSLP) are not redistributable,
+//! so per DESIGN.md §3 each is replaced by a synthetic generator that
+//! preserves the properties the experiments exercise: input
+//! dimensionality, multiscale correlation structure, and size regime.
+//!
+//! * [`synth`]   — generic GP-like fields via random Fourier features
+//!   (ground truth known exactly; used by unit tests and the quickstart).
+//! * [`sarcos`]  — 21-D robot-arm inverse dynamics (7 joints × pos/vel/acc
+//!   → torque) from a physically-shaped nonlinear map.
+//! * [`aimpeak`] — urban road network: segment graph → MDS embedding of
+//!   graph distances (via [`mds`]) → congestion-structured speeds, 5-D
+//!   features (length, lanes, limit, direction, time).
+//! * [`emslp`]   — sea-level-pressure reanalysis style 6-D spatiotemporal
+//!   field on a 5° grid with seasonal + synoptic wave components.
+
+pub mod synth;
+pub mod sarcos;
+pub mod aimpeak;
+pub mod emslp;
+pub mod mds;
+
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+
+/// A regression dataset split into train/test.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub train_x: Mat,
+    pub train_y: Vec<f64>,
+    pub test_x: Mat,
+    pub test_y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn dim(&self) -> usize {
+        self.train_x.cols()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.train_x.rows() != self.train_y.len() || self.test_x.rows() != self.test_y.len() {
+            return Err(PgprError::Data(format!("{}: X/y size mismatch", self.name)));
+        }
+        if self.train_x.cols() != self.test_x.cols() {
+            return Err(PgprError::Data(format!("{}: train/test dim mismatch", self.name)));
+        }
+        let finite = |m: &Mat| m.data().iter().all(|v| v.is_finite());
+        if !finite(&self.train_x)
+            || !finite(&self.test_x)
+            || !self.train_y.iter().all(|v| v.is_finite())
+            || !self.test_y.iter().all(|v| v.is_finite())
+        {
+            return Err(PgprError::Data(format!("{}: non-finite values", self.name)));
+        }
+        Ok(())
+    }
+
+    /// Standardize outputs to zero mean / unit variance (returns the
+    /// transform so predictions can be mapped back).
+    pub fn y_stats(&self) -> (f64, f64) {
+        let n = self.train_y.len() as f64;
+        let mean = self.train_y.iter().sum::<f64>() / n;
+        let var = self.train_y.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / n;
+        (mean, var.sqrt().max(1e-12))
+    }
+}
+
+/// Common sampling spec for the generators.
+#[derive(Clone, Debug)]
+pub struct GenSpec {
+    pub train: usize,
+    pub test: usize,
+    pub seed: u64,
+}
+
+impl GenSpec {
+    pub fn new(train: usize, test: usize, seed: u64) -> GenSpec {
+        GenSpec { train, test, seed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_generators_produce_valid_datasets() {
+        let spec = GenSpec::new(200, 50, 9);
+        for ds in [
+            sarcos::generate(&spec),
+            aimpeak::generate(&spec),
+            emslp::generate(&spec),
+        ] {
+            let ds = ds.unwrap();
+            ds.validate().unwrap();
+            assert_eq!(ds.train_x.rows(), 200);
+            assert_eq!(ds.test_x.rows(), 50);
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let a = sarcos::generate(&GenSpec::new(50, 10, 4)).unwrap();
+        let b = sarcos::generate(&GenSpec::new(50, 10, 4)).unwrap();
+        assert_eq!(a.train_y, b.train_y);
+        let c = sarcos::generate(&GenSpec::new(50, 10, 5)).unwrap();
+        assert_ne!(a.train_y, c.train_y);
+    }
+
+    #[test]
+    fn dims_match_paper() {
+        let spec = GenSpec::new(30, 10, 1);
+        assert_eq!(sarcos::generate(&spec).unwrap().dim(), 21);
+        assert_eq!(aimpeak::generate(&spec).unwrap().dim(), 5);
+        assert_eq!(emslp::generate(&spec).unwrap().dim(), 6);
+    }
+}

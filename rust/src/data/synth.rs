@@ -1,0 +1,118 @@
+//! Generic synthetic GP-like fields via random Fourier features.
+//!
+//! `f(x) = Σ_r a_r·cos(ω_rᵀx + φ_r)` with ω_r ~ N(0, 1/ℓ²·I) is an exact
+//! sample path of (the RFF approximation of) a SE-kernel GP — the ground
+//! truth is known in closed form at any input, which makes it the workhorse
+//! for unit tests, the quickstart example and sanity baselines.
+
+use crate::data::{Dataset, GenSpec};
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::matrix::Mat;
+use crate::util::rng::Pcg64;
+
+/// A sampled smooth field with known ground truth.
+pub struct SynthField {
+    dim: usize,
+    freqs: Mat,
+    phases: Vec<f64>,
+    amps: Vec<f64>,
+    noise: f64,
+    seed: u64,
+}
+
+impl SynthField {
+    /// Draw a field matching the correlation structure of `hyp` (features
+    /// per lengthscale; amplitude σ_s; observation noise σ_n).
+    pub fn new(dim: usize, hyp: &SeArdHyper, seed: u64) -> SynthField {
+        let mut rng = Pcg64::new(seed ^ 0xF1E1D);
+        let num = 256;
+        let mut freqs = Mat::zeros(num, dim);
+        for r in 0..num {
+            for j in 0..dim {
+                freqs.set(r, j, rng.normal() / hyp.lengthscales[j]);
+            }
+        }
+        let phases = (0..num)
+            .map(|_| rng.uniform_in(0.0, 2.0 * std::f64::consts::PI))
+            .collect();
+        let amp = (2.0 * hyp.sigma_s2 / num as f64).sqrt();
+        let amps = (0..num).map(|_| amp).collect();
+        SynthField { dim, freqs, phases, amps, noise: hyp.sigma_n2.sqrt(), seed }
+    }
+
+    /// Noise-free field value at a raw input.
+    pub fn truth(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for r in 0..self.freqs.rows() {
+            let proj: f64 = self.freqs.row(r).iter().zip(x).map(|(w, v)| w * v).sum();
+            acc += self.amps[r] * (proj + self.phases[r]).cos();
+        }
+        acc
+    }
+
+    /// Sample a train/test dataset over the unit cube scaled to [-3, 3]^d.
+    pub fn sample(&self, train: usize) -> Dataset {
+        self.sample_spec(&GenSpec::new(train, (train / 4).max(8), self.seed))
+    }
+
+    pub fn sample_spec(&self, spec: &GenSpec) -> Dataset {
+        let mut rng = Pcg64::new(spec.seed ^ 0xA11CE);
+        let gen_x = |rng: &mut Pcg64, n: usize| -> Mat {
+            Mat::from_fn(n, self.dim, |_, _| rng.uniform_in(-3.0, 3.0))
+        };
+        let train_x = gen_x(&mut rng, spec.train);
+        let test_x = gen_x(&mut rng, spec.test);
+        let train_y: Vec<f64> = (0..spec.train)
+            .map(|i| self.truth(train_x.row(i)) + self.noise * rng.normal())
+            .collect();
+        let test_y: Vec<f64> = (0..spec.test).map(|i| self.truth(test_x.row(i))).collect();
+        Dataset { name: "synth".into(), train_x, train_y, test_x, test_y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_is_deterministic_and_smooth() {
+        let hyp = SeArdHyper::isotropic(2, 1.0, 1.0, 0.1);
+        let f = SynthField::new(2, &hyp, 3);
+        let a = f.truth(&[0.5, -0.5]);
+        let b = f.truth(&[0.5, -0.5]);
+        assert_eq!(a, b);
+        // Local smoothness: small input change ⇒ small output change.
+        let c = f.truth(&[0.5001, -0.5]);
+        assert!((a - c).abs() < 0.05);
+    }
+
+    #[test]
+    fn amplitude_matches_sigma() {
+        // A single realization's spatial variance fluctuates a lot (few
+        // effective correlation lengths in range), so average over fields.
+        let hyp = SeArdHyper::isotropic(1, 1.0, 2.0, 0.0); // σ_s² = 4
+        let mut rng = Pcg64::new(1);
+        let mut total = 0.0;
+        let fields = 12;
+        for seed in 0..fields {
+            let f = SynthField::new(1, &hyp, seed);
+            let n = 1500;
+            let vals: Vec<f64> =
+                (0..n).map(|_| f.truth(&[rng.uniform_in(-30.0, 30.0)])).collect();
+            let mean = vals.iter().sum::<f64>() / n as f64;
+            total +=
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        }
+        let var = total / fields as f64;
+        assert!((var - 4.0).abs() < 1.2, "mean field variance {var} ≉ 4");
+    }
+
+    #[test]
+    fn dataset_shapes() {
+        let hyp = SeArdHyper::isotropic(3, 1.5, 1.0, 0.1);
+        let ds = SynthField::new(3, &hyp, 11).sample(100);
+        ds.validate().unwrap();
+        assert_eq!(ds.train_x.rows(), 100);
+        assert_eq!(ds.dim(), 3);
+    }
+}

@@ -1,0 +1,325 @@
+//! Shared experiment plumbing: workload construction, method runners and
+//! result records.
+
+use crate::config::{ClusterConfig, LmaConfig, PartitionStrategy};
+use crate::data::{aimpeak, emslp, sarcos, Dataset, GenSpec};
+use crate::gp::fgp::FgpRegressor;
+use crate::gp::hyper::{learn_mle, MleOptions};
+use crate::kernels::se_ard::SeArdHyper;
+use crate::lma::parallel::ParallelLma;
+use crate::lma::LmaRegressor;
+use crate::metrics::rmse;
+use crate::sparse::pic::{ParallelPic, PicRegressor};
+use crate::sparse::ssgp::SsgpRegressor;
+use crate::util::error::{PgprError, Result};
+use crate::util::timer::time_it;
+
+/// One measured run of one method.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub method: String,
+    pub dataset: String,
+    pub data_size: usize,
+    pub cores: usize,
+    pub rmse: f64,
+    pub secs: f64,
+    /// For parallel methods: the summed per-rank compute (≈ centralized
+    /// equivalent); 0 for centralized methods.
+    pub total_compute_secs: f64,
+    pub bytes: usize,
+}
+
+impl RunRecord {
+    pub fn csv_header() -> Vec<&'static str> {
+        vec!["method", "dataset", "data_size", "cores", "rmse", "secs", "total_compute_secs", "bytes"]
+    }
+
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.method.clone(),
+            self.dataset.clone(),
+            self.data_size.to_string(),
+            self.cores.to_string(),
+            format!("{:.6}", self.rmse),
+            format!("{:.6}", self.secs),
+            format!("{:.6}", self.total_compute_secs),
+            self.bytes.to_string(),
+        ]
+    }
+}
+
+/// Which dataset a harness runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    Sarcos,
+    Aimpeak,
+    Emslp,
+}
+
+impl Workload {
+    pub fn name(self) -> &'static str {
+        match self {
+            Workload::Sarcos => "sarcos",
+            Workload::Aimpeak => "aimpeak",
+            Workload::Emslp => "emslp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Workload> {
+        match s {
+            "sarcos" => Ok(Workload::Sarcos),
+            "aimpeak" => Ok(Workload::Aimpeak),
+            "emslp" => Ok(Workload::Emslp),
+            other => Err(PgprError::Config(format!("unknown dataset `{other}`"))),
+        }
+    }
+
+    pub fn generate(self, train: usize, test: usize, seed: u64) -> Result<Dataset> {
+        let spec = GenSpec::new(train, test, seed);
+        match self {
+            Workload::Sarcos => sarcos::generate(&spec),
+            Workload::Aimpeak => aimpeak::generate(&spec),
+            Workload::Emslp => emslp::generate(&spec),
+        }
+    }
+}
+
+/// Learn hyperparameters on a subset (paper protocol: MLE on a random
+/// subset), standardizing outputs.
+pub fn learn_hypers(ds: &Dataset, subset: usize, seed: u64) -> Result<SeArdHyper> {
+    let (y_mean, y_std) = ds.y_stats();
+    // Initialize from data scales: unit-ish lengthscales on standardized
+    // inputs tend to be a good simplex start.
+    let d = ds.dim();
+    let mut init = SeArdHyper::isotropic(d, 1.0, 1.0, 0.3);
+    init.mean = y_mean;
+    // Column scales → initial lengthscales.
+    for j in 0..d {
+        let col: Vec<f64> = (0..ds.train_x.rows()).map(|i| ds.train_x.get(i, j)).collect();
+        let m = col.iter().sum::<f64>() / col.len() as f64;
+        let sd =
+            (col.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / col.len() as f64).sqrt();
+        init.lengthscales[j] = (sd * 1.0).max(1e-3);
+    }
+    init.sigma_s2 = y_std * y_std;
+    init.sigma_n2 = 0.05 * y_std * y_std;
+    let opts = MleOptions { subset, max_evals: 150, seed, init_step: 0.35 };
+    Ok(learn_mle(&ds.train_x, &ds.train_y, &init, &opts)?.hyp)
+}
+
+/// Fast path used by the big sweeps: data-scaled hyperparameters without
+/// the MLE loop (the generators' fields are well matched by these).
+pub fn quick_hypers(ds: &Dataset) -> SeArdHyper {
+    let (y_mean, y_std) = ds.y_stats();
+    let d = ds.dim();
+    let mut hyp = SeArdHyper::isotropic(d, 1.0, y_std, 0.15 * y_std);
+    hyp.mean = y_mean;
+    for j in 0..d {
+        let col: Vec<f64> = (0..ds.train_x.rows()).map(|i| ds.train_x.get(i, j)).collect();
+        let m = col.iter().sum::<f64>() / col.len() as f64;
+        let sd =
+            (col.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / col.len() as f64).sqrt();
+        hyp.lengthscales[j] = (0.7 * sd).max(1e-3);
+    }
+    hyp
+}
+
+fn lma_cfg(m: usize, b: usize, s: usize, seed: u64) -> LmaConfig {
+    LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    }
+}
+
+/// FGP run (the O(|D|³) baseline).
+pub fn run_fgp(ds: &Dataset, hyp: &SeArdHyper) -> Result<RunRecord> {
+    let (out, secs) = time_it(|| -> Result<_> {
+        let model = FgpRegressor::fit(&ds.train_x, &ds.train_y, hyp)?;
+        model.predict(&ds.test_x)
+    });
+    let pred = out?;
+    Ok(RunRecord {
+        method: "FGP".into(),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: 1,
+        rmse: rmse(&pred.mean, &ds.test_y),
+        secs,
+        total_compute_secs: 0.0,
+        bytes: 0,
+    })
+}
+
+/// SSGP run with `s` spectral points.
+pub fn run_ssgp(ds: &Dataset, hyp: &SeArdHyper, s: usize, seed: u64) -> Result<RunRecord> {
+    let (out, secs) = time_it(|| -> Result<_> {
+        let model = SsgpRegressor::fit(&ds.train_x, &ds.train_y, hyp, s, seed)?;
+        model.predict(&ds.test_x)
+    });
+    let pred = out?;
+    Ok(RunRecord {
+        method: format!("SSGP(s={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: 1,
+        rmse: rmse(&pred.mean, &ds.test_y),
+        secs,
+        total_compute_secs: 0.0,
+        bytes: 0,
+    })
+}
+
+/// Centralized LMA run.
+pub fn run_lma_centralized(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    m: usize,
+    b: usize,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
+    let (out, secs) = time_it(|| -> Result<_> {
+        let model = LmaRegressor::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, b, s, seed))?;
+        model.predict(&ds.test_x)
+    });
+    let pred = out?;
+    Ok(RunRecord {
+        method: format!("LMA-cen(M={m},B={b},S={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: 1,
+        rmse: rmse(&pred.mean, &ds.test_y),
+        secs,
+        total_compute_secs: 0.0,
+        bytes: 0,
+    })
+}
+
+/// Centralized PIC run.
+pub fn run_pic_centralized(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    m: usize,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
+    let (out, secs) = time_it(|| -> Result<_> {
+        let model = PicRegressor::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, 0, s, seed))?;
+        model.predict(&ds.test_x)
+    });
+    let pred = out?;
+    Ok(RunRecord {
+        method: format!("PIC-cen(M={m},S={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: 1,
+        rmse: rmse(&pred.mean, &ds.test_y),
+        secs,
+        total_compute_secs: 0.0,
+        bytes: 0,
+    })
+}
+
+/// Parallel LMA on a simulated gigabit cluster of `machines × cores`.
+pub fn run_lma_parallel(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    machines: usize,
+    cores: usize,
+    b: usize,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
+    let cc = ClusterConfig::gigabit(machines, cores);
+    let m = cc.total_cores();
+    let model = ParallelLma::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, b, s, seed), &cc)?;
+    let run = model.predict(&ds.test_x)?;
+    Ok(RunRecord {
+        method: format!("LMA-par(M={m},B={b},S={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: m,
+        rmse: rmse(&run.prediction.mean, &ds.test_y),
+        secs: run.parallel_secs,
+        total_compute_secs: run.total_compute_secs,
+        bytes: run.bytes,
+    })
+}
+
+/// Parallel PIC on the simulated cluster.
+pub fn run_pic_parallel(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    machines: usize,
+    cores: usize,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
+    let cc = ClusterConfig::gigabit(machines, cores);
+    let m = cc.total_cores();
+    let model = ParallelPic::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, 0, s, seed), &cc)?;
+    let run = model.predict(&ds.test_x)?;
+    Ok(RunRecord {
+        method: format!("PIC-par(M={m},S={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: m,
+        rmse: rmse(&run.prediction.mean, &ds.test_y),
+        secs: run.parallel_secs,
+        total_compute_secs: run.total_compute_secs,
+        bytes: run.bytes,
+    })
+}
+
+/// Write records to `results/<name>.csv`.
+pub fn write_records(name: &str, records: &[RunRecord]) -> Result<()> {
+    let mut t = crate::util::csv::CsvTable::new(&RunRecord::csv_header());
+    for r in records {
+        t.push_row(r.csv_row());
+    }
+    t.write_path(format!("results/{name}.csv"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn end_to_end_mini_table_row() {
+        let ds = Workload::Aimpeak.generate(220, 40, 1).unwrap();
+        let hyp = quick_hypers(&ds);
+        let fgp = run_fgp(&ds, &hyp).unwrap();
+        let lma = run_lma_parallel(&ds, &hyp, 4, 1, 1, 32, 1).unwrap();
+        let pic = run_pic_parallel(&ds, &hyp, 4, 1, 64, 1).unwrap();
+        let ssgp = run_ssgp(&ds, &hyp, 64, 1).unwrap();
+        // All finite and in a sane range relative to the output scale.
+        let (_, y_std) = ds.y_stats();
+        for r in [&fgp, &lma, &pic, &ssgp] {
+            assert!(r.rmse.is_finite());
+            assert!(r.rmse < 3.0 * y_std, "{}: rmse {} vs y_std {y_std}", r.method, r.rmse);
+            assert!(r.secs >= 0.0);
+        }
+        // Approximations should be in FGP's ballpark on this easy field.
+        assert!(lma.rmse < fgp.rmse * 3.0 + 0.5 * y_std);
+    }
+
+    #[test]
+    fn quick_hypers_are_valid() {
+        let ds = Workload::Sarcos.generate(100, 20, 2).unwrap();
+        let hyp = quick_hypers(&ds);
+        assert!(hyp.validate().is_ok());
+        assert_eq!(hyp.dim(), 21);
+    }
+
+    #[test]
+    fn workload_parse_roundtrip() {
+        for w in [Workload::Sarcos, Workload::Aimpeak, Workload::Emslp] {
+            assert_eq!(Workload::parse(w.name()).unwrap(), w);
+        }
+        assert!(Workload::parse("bogus").is_err());
+    }
+}

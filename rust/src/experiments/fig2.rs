@@ -1,0 +1,157 @@
+//! Figure 2 — RMSE and incurred-time heatmaps of parallel LMA over a grid
+//! of support sizes |S| × Markov orders B (AIMPEAK, |D|=8000, M=32 in the
+//! paper; scaled default |D|=2000, M=16). Demonstrates the |S|↔B
+//! trade-off of Remark 3 after Theorem 2.
+
+use crate::config::{LmaConfig, PartitionStrategy};
+use crate::experiments::common::*;
+use crate::lma::spectrum::{sweep_grid, SpectrumPoint};
+use crate::util::error::Result;
+use crate::util::tables::TextTable;
+
+#[derive(Clone, Debug)]
+pub struct Fig2Params {
+    pub data_size: usize,
+    pub test_size: usize,
+    pub num_blocks: usize,
+    pub support_sizes: Vec<usize>,
+    pub markov_orders: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for Fig2Params {
+    fn default() -> Self {
+        let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+        if fast {
+            Fig2Params {
+                data_size: 400,
+                test_size: 80,
+                num_blocks: 8,
+                support_sizes: vec![16, 64],
+                markov_orders: vec![1, 3],
+                seed: 41,
+            }
+        } else {
+            Fig2Params {
+                data_size: 2000,
+                test_size: 300,
+                num_blocks: 16,
+                support_sizes: vec![16, 32, 64, 128, 256],
+                markov_orders: vec![1, 3, 5, 7, 9, 13],
+                seed: 41,
+            }
+        }
+    }
+}
+
+impl Fig2Params {
+    pub fn full() -> Fig2Params {
+        Fig2Params {
+            data_size: 8000,
+            test_size: 3000,
+            num_blocks: 32,
+            support_sizes: vec![128, 512, 1024, 2048, 4096],
+            markov_orders: vec![1, 3, 5, 7, 9, 13, 15, 19, 21],
+            seed: 41,
+        }
+    }
+}
+
+pub fn run(params: &Fig2Params) -> Result<Vec<SpectrumPoint>> {
+    println!("\n=== Figure 2 (|S| × B trade-off, AIMPEAK, |D|={}) ===", params.data_size);
+    let ds = Workload::Aimpeak.generate(params.data_size, params.test_size, params.seed)?;
+    let hyp = quick_hypers(&ds);
+    let base = LmaConfig {
+        num_blocks: params.num_blocks,
+        markov_order: 1,
+        support_size: 0,
+        seed: params.seed,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+    let pts = sweep_grid(
+        &ds.train_x,
+        &ds.train_y,
+        &ds.test_x,
+        &ds.test_y,
+        &hyp,
+        &base,
+        &params.support_sizes,
+        &params.markov_orders,
+    )?;
+
+    let mut t = crate::util::csv::CsvTable::new(&[
+        "support_size",
+        "markov_order",
+        "rmse",
+        "mnlp",
+        "fit_secs",
+        "predict_secs",
+    ]);
+    for p in &pts {
+        t.push_nums(&[
+            p.support_size as f64,
+            p.markov_order as f64,
+            p.rmse,
+            p.mnlp,
+            p.fit_secs,
+            p.predict_secs,
+        ]);
+    }
+    t.write_path("results/fig2_tradeoff.csv")?;
+
+    // Two heat tables (RMSE and time), |S| rows × B columns.
+    for (title, pick) in [
+        ("Figure 2 left: incurred time (s)", 0usize),
+        ("Figure 2 right: RMSE", 1usize),
+    ] {
+        let mut header = vec!["|S| \\ B".to_string()];
+        header.extend(params.markov_orders.iter().map(|b| format!("B={b}")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        let mut tt = TextTable::new(title, &header_refs);
+        for &s in &params.support_sizes {
+            let mut row = vec![s.to_string()];
+            for &b in &params.markov_orders {
+                let cell = pts
+                    .iter()
+                    .find(|p| p.support_size == s && p.markov_order == b)
+                    .map(|p| {
+                        if pick == 0 {
+                            format!("{:.2}", p.fit_secs + p.predict_secs)
+                        } else {
+                            format!("{:.4}", p.rmse)
+                        }
+                    })
+                    .unwrap_or_else(|| "-".into());
+                row.push(cell);
+            }
+            tt.row(row);
+        }
+        tt.print();
+    }
+    Ok(pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_runs_and_larger_configs_cost_more() {
+        let params = Fig2Params {
+            data_size: 160,
+            test_size: 40,
+            num_blocks: 4,
+            support_sizes: vec![4, 32],
+            markov_orders: vec![1, 3],
+            seed: 7,
+        };
+        let pts = run(&params).unwrap();
+        assert_eq!(pts.len(), 4);
+        // Time should generally grow with B at fixed |S| (more in-band
+        // blocks + bigger band factorizations).
+        let t1 = pts.iter().find(|p| p.support_size == 32 && p.markov_order == 1).unwrap();
+        let t3 = pts.iter().find(|p| p.support_size == 32 && p.markov_order == 3).unwrap();
+        assert!(t3.fit_secs + t3.predict_secs >= (t1.fit_secs + t1.predict_secs) * 0.5);
+    }
+}

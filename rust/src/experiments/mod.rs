@@ -1,0 +1,18 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (Section 4). Each driver generates its workload, runs every method the
+//! paper compares, prints a paper-layout table and writes `results/*.csv`.
+//! The bench targets in `rust/benches/` and the `pgpr experiment`
+//! subcommand both call into here.
+//!
+//! Scaling: the paper's |D| goes to 32k (Tables 1–2) and 1M (Table 3) on
+//! real clusters; defaults here are scaled down (DESIGN.md §3) with the
+//! same |S|/|D|/M ratios. Pass `--full` (or `full: true`) for the
+//! paper-sized runs.
+
+pub mod common;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod fig2;
+pub mod fig6;
+pub mod ablation;

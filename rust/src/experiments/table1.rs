@@ -1,0 +1,189 @@
+//! Table 1 — RMSEs and incurred times of parallel LMA, parallel PIC, SSGP
+//! and FGP with varying data sizes |D| and core counts M, for the SARCOS
+//! (1a) and AIMPEAK (1b) datasets.
+//!
+//! Paper parameters: |D| ∈ {8k, 16k, 24k, 32k}, M ∈ {32, 48, 64};
+//! SARCOS: LMA (B=1, |S|=2048), PIC |S|=4096, SSGP 4096;
+//! AIMPEAK: LMA (B=1, |S|=1024), PIC |S|=5120, SSGP 4096.
+//! Scaled defaults divide |D| by 8 and |S| proportionally; the M grid uses
+//! {8, 16, 32} cores over the same 32-node shape (machines × cores/node).
+
+use crate::experiments::common::*;
+use crate::util::error::Result;
+use crate::util::tables::TextTable;
+
+/// Parameters of a Table-1 run.
+#[derive(Clone, Debug)]
+pub struct Table1Params {
+    pub workload: Workload,
+    pub data_sizes: Vec<usize>,
+    pub test_size: usize,
+    /// (machines, cores_per_machine) grid — paper: 32×1, 32×1.5→48, 32×2.
+    pub core_grid: Vec<(usize, usize)>,
+    pub lma_support: usize,
+    pub lma_b: usize,
+    pub pic_support: usize,
+    pub ssgp_points: usize,
+    pub seed: u64,
+    /// Skip FGP above this |D| (the paper's >4h runs).
+    pub fgp_cap: usize,
+}
+
+impl Table1Params {
+    /// Scaled-down defaults (÷8 of the paper, same ratios).
+    pub fn default_for(workload: Workload) -> Table1Params {
+        let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+        let sizes = if fast { vec![250, 500, 1000] } else { vec![1000, 2000, 4000] };
+        match workload {
+            Workload::Sarcos => Table1Params {
+                workload,
+                data_sizes: sizes,
+                test_size: if fast { 100 } else { 375 },
+                core_grid: vec![(8, 1), (8, 2), (16, 2)],
+                lma_support: 256,
+                lma_b: 1,
+                pic_support: 512,
+                ssgp_points: 256,
+                seed: 11,
+                fgp_cap: 4000,
+            },
+            _ => Table1Params {
+                workload,
+                data_sizes: sizes,
+                test_size: if fast { 100 } else { 375 },
+                core_grid: vec![(8, 1), (8, 2), (16, 2)],
+                lma_support: 128,
+                lma_b: 1,
+                pic_support: 640,
+                ssgp_points: 256,
+                seed: 12,
+                fgp_cap: 4000,
+            },
+        }
+    }
+
+    /// The paper's full-size configuration.
+    pub fn full_for(workload: Workload) -> Table1Params {
+        let mut p = Table1Params::default_for(workload);
+        p.data_sizes = vec![8000, 16000, 24000, 32000];
+        p.test_size = 3000;
+        p.core_grid = vec![(32, 1), (24, 2), (32, 2)];
+        match workload {
+            Workload::Sarcos => {
+                p.lma_support = 2048;
+                p.pic_support = 4096;
+                p.ssgp_points = 4096;
+            }
+            _ => {
+                p.lma_support = 1024;
+                p.pic_support = 5120;
+                p.ssgp_points = 4096;
+            }
+        }
+        p.fgp_cap = 16000;
+        p
+    }
+}
+
+/// Run the experiment; returns all records (also written to CSV).
+pub fn run(params: &Table1Params) -> Result<Vec<RunRecord>> {
+    let mut records = Vec::new();
+    let tag = match params.workload {
+        Workload::Sarcos => "table1a_sarcos",
+        Workload::Aimpeak => "table1b_aimpeak",
+        Workload::Emslp => "table1_emslp",
+    };
+    println!("\n=== Table 1 ({}) ===", params.workload.name());
+
+    for &n in &params.data_sizes {
+        let ds = params.workload.generate(n, params.test_size, params.seed)?;
+        let hyp = quick_hypers(&ds);
+        if n <= params.fgp_cap {
+            records.push(run_fgp(&ds, &hyp)?);
+        }
+        records.push(run_ssgp(&ds, &hyp, params.ssgp_points, params.seed)?);
+        for &(machines, cores) in &params.core_grid {
+            records.push(run_lma_parallel(
+                &ds,
+                &hyp,
+                machines,
+                cores,
+                params.lma_b,
+                params.lma_support,
+                params.seed,
+            )?);
+            records.push(run_pic_parallel(
+                &ds,
+                &hyp,
+                machines,
+                cores,
+                params.pic_support,
+                params.seed,
+            )?);
+        }
+    }
+
+    write_records(tag, &records)?;
+    print_table(params, &records);
+    Ok(records)
+}
+
+/// Render in the paper's layout: one column per |D|, rows grouped by M.
+pub fn print_table(params: &Table1Params, records: &[RunRecord]) {
+    let mut header = vec!["method".to_string()];
+    header.extend(params.data_sizes.iter().map(|n| format!("|D|={n}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = TextTable::new(
+        &format!("Table 1 ({}): RMSE(incurred time s)", params.workload.name()),
+        &header_refs,
+    );
+    let cell = |method_prefix: &str, cores: usize, n: usize| -> String {
+        records
+            .iter()
+            .find(|r| r.method.starts_with(method_prefix) && r.cores == cores && r.data_size == n)
+            .map(|r| TextTable::rmse_time_cell(r.rmse, r.secs))
+            .unwrap_or_else(|| "-".into())
+    };
+    let mut row = |label: String, prefix: &str, cores: usize| {
+        let mut cells = vec![label];
+        cells.extend(params.data_sizes.iter().map(|&n| cell(prefix, cores, n)));
+        t.row(cells);
+    };
+    row("FGP".into(), "FGP", 1);
+    row("SSGP".into(), "SSGP", 1);
+    for &(machines, cores) in &params.core_grid {
+        let m = machines * cores;
+        row(format!("LMA (M={m})"), "LMA-par", m);
+        row(format!("PIC (M={m})"), "PIC-par", m);
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_run_produces_all_rows() {
+        let params = Table1Params {
+            workload: Workload::Aimpeak,
+            data_sizes: vec![120],
+            test_size: 30,
+            core_grid: vec![(2, 1), (2, 2)],
+            lma_support: 24,
+            lma_b: 1,
+            pic_support: 48,
+            ssgp_points: 32,
+            seed: 3,
+            fgp_cap: 1000,
+        };
+        let recs = run(&params).unwrap();
+        // FGP + SSGP + 2×(LMA+PIC) per size.
+        assert_eq!(recs.len(), 6);
+        assert!(recs.iter().all(|r| r.rmse.is_finite()));
+        // LMA should be comparable to FGP on this small field.
+        let fgp = recs.iter().find(|r| r.method == "FGP").unwrap();
+        let lma = recs.iter().find(|r| r.method.starts_with("LMA-par")).unwrap();
+        assert!(lma.rmse < fgp.rmse * 4.0 + 1.0);
+    }
+}

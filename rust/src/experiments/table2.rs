@@ -1,0 +1,180 @@
+//! Table 2 — speedups of parallel LMA/PIC over their centralized
+//! counterparts (plus centralized incurred times) on AIMPEAK, varying |D|
+//! and M. Speedup = centralized secs / parallel makespan (footnote 3).
+
+use crate::experiments::common::*;
+use crate::metrics::speedup;
+use crate::util::error::Result;
+use crate::util::tables::TextTable;
+
+#[derive(Clone, Debug)]
+pub struct Table2Params {
+    pub data_sizes: Vec<usize>,
+    pub test_size: usize,
+    pub core_grid: Vec<(usize, usize)>,
+    pub lma_support: usize,
+    pub lma_b: usize,
+    pub pic_support: usize,
+    pub seed: u64,
+}
+
+impl Default for Table2Params {
+    fn default() -> Self {
+        let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+        Table2Params {
+            data_sizes: if fast { vec![250, 500] } else { vec![1000, 2000, 4000] },
+            test_size: if fast { 80 } else { 375 },
+            core_grid: vec![(8, 1), (8, 2), (16, 2)],
+            lma_support: 128,
+            lma_b: 1,
+            pic_support: 640,
+            seed: 21,
+        }
+    }
+}
+
+impl Table2Params {
+    pub fn full() -> Table2Params {
+        Table2Params {
+            data_sizes: vec![8000, 16000, 24000, 32000],
+            test_size: 3000,
+            core_grid: vec![(32, 1), (24, 2), (32, 2)],
+            lma_support: 1024,
+            lma_b: 1,
+            pic_support: 5120,
+            seed: 21,
+        }
+    }
+}
+
+/// A (method, M, |D|) speedup cell.
+#[derive(Clone, Debug)]
+pub struct SpeedupRecord {
+    pub method: String,
+    pub data_size: usize,
+    pub cores: usize,
+    pub centralized_secs: f64,
+    pub parallel_secs: f64,
+    pub speedup: f64,
+    pub rmse_gap: f64,
+}
+
+pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
+    println!("\n=== Table 2 (AIMPEAK speedups) ===");
+    let mut out = Vec::new();
+    for &n in &params.data_sizes {
+        let ds = Workload::Aimpeak.generate(n, params.test_size, params.seed)?;
+        let hyp = quick_hypers(&ds);
+        for &(machines, cores) in &params.core_grid {
+            let m = machines * cores;
+            // LMA centralized vs parallel (same M = number of blocks).
+            let cen =
+                run_lma_centralized(&ds, &hyp, m, params.lma_b, params.lma_support, params.seed)?;
+            let par = run_lma_parallel(
+                &ds,
+                &hyp,
+                machines,
+                cores,
+                params.lma_b,
+                params.lma_support,
+                params.seed,
+            )?;
+            out.push(SpeedupRecord {
+                method: "LMA".into(),
+                data_size: n,
+                cores: m,
+                centralized_secs: cen.secs,
+                parallel_secs: par.secs,
+                speedup: speedup(cen.secs, par.secs),
+                rmse_gap: (cen.rmse - par.rmse).abs(),
+            });
+            // PIC centralized vs parallel.
+            let cen_pic = run_pic_centralized(&ds, &hyp, m, params.pic_support, params.seed)?;
+            let par_pic =
+                run_pic_parallel(&ds, &hyp, machines, cores, params.pic_support, params.seed)?;
+            out.push(SpeedupRecord {
+                method: "PIC".into(),
+                data_size: n,
+                cores: m,
+                centralized_secs: cen_pic.secs,
+                parallel_secs: par_pic.secs,
+                speedup: speedup(cen_pic.secs, par_pic.secs),
+                rmse_gap: (cen_pic.rmse - par_pic.rmse).abs(),
+            });
+        }
+    }
+
+    // CSV.
+    let mut t = crate::util::csv::CsvTable::new(&[
+        "method",
+        "data_size",
+        "cores",
+        "centralized_secs",
+        "parallel_secs",
+        "speedup",
+        "rmse_gap",
+    ]);
+    for r in &out {
+        t.push_row(vec![
+            r.method.clone(),
+            r.data_size.to_string(),
+            r.cores.to_string(),
+            format!("{:.6}", r.centralized_secs),
+            format!("{:.6}", r.parallel_secs),
+            format!("{:.3}", r.speedup),
+            format!("{:.6}", r.rmse_gap),
+        ]);
+    }
+    t.write_path("results/table2_speedup.csv")?;
+    print_table(params, &out);
+    Ok(out)
+}
+
+fn print_table(params: &Table2Params, recs: &[SpeedupRecord]) {
+    let mut header = vec!["method".to_string()];
+    header.extend(params.data_sizes.iter().map(|n| format!("|D|={n}")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = TextTable::new("Table 2: speedup(centralized time s)", &header_refs);
+    for &(machines, cores) in &params.core_grid {
+        let m = machines * cores;
+        for method in ["LMA", "PIC"] {
+            let mut cells = vec![format!("{method} (M={m})")];
+            for &n in &params.data_sizes {
+                let cell = recs
+                    .iter()
+                    .find(|r| r.method == method && r.cores == m && r.data_size == n)
+                    .map(|r| format!("{:.1}({:.1})", r.speedup, r.centralized_secs))
+                    .unwrap_or_else(|| "-".into());
+                cells.push(cell);
+            }
+            t.row(cells);
+        }
+    }
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedups_positive_and_parallel_consistent() {
+        let params = Table2Params {
+            data_sizes: vec![150],
+            test_size: 30,
+            core_grid: vec![(3, 1)],
+            lma_support: 24,
+            lma_b: 1,
+            pic_support: 32,
+            seed: 5,
+        };
+        let recs = run(&params).unwrap();
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert!(r.speedup > 0.0);
+            // Centralized vs parallel produce (near-)identical RMSE: the
+            // parallel engine computes the same numbers.
+            assert!(r.rmse_gap < 1e-6, "{}: gap {}", r.method, r.rmse_gap);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! Maximum-likelihood hyperparameter learning.
+//!
+//! The paper learns the SE-ARD hyperparameters "using randomly selected
+//! data of size 10000 via maximum likelihood estimation". We optimize the
+//! log marginal likelihood over log-hyperparameters with Nelder–Mead
+//! (derivative-free; robust to the non-convexity and cheap at the subset
+//! sizes involved) on a random subset of the training data.
+
+use crate::gp::likelihood::log_marginal_likelihood;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::matrix::Mat;
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// Options for the MLE run.
+#[derive(Clone, Debug)]
+pub struct MleOptions {
+    /// Subset size used to evaluate the likelihood (paper: 10000; default
+    /// scaled down).
+    pub subset: usize,
+    pub max_evals: usize,
+    pub seed: u64,
+    /// Initial simplex spread in log-space.
+    pub init_step: f64,
+}
+
+impl Default for MleOptions {
+    fn default() -> Self {
+        MleOptions { subset: 512, max_evals: 400, seed: 0, init_step: 0.4 }
+    }
+}
+
+/// Result of the MLE run.
+#[derive(Clone, Debug)]
+pub struct MleReport {
+    pub hyp: SeArdHyper,
+    pub log_likelihood: f64,
+    pub evals: usize,
+}
+
+/// Learn hyperparameters by MLE from `init`, holding the prior mean fixed
+/// at the empirical mean of the subset (the standard preprocessing; the
+/// paper's toy example likewise fits a constant mean).
+pub fn learn_mle(x: &Mat, y: &[f64], init: &SeArdHyper, opts: &MleOptions) -> Result<MleReport> {
+    let mut rng = Pcg64::new(opts.seed);
+    let n = x.rows();
+    let take = opts.subset.min(n);
+    let idx = rng.choose_indices(n, take);
+    let xs = x.select_rows(&idx);
+    let ys: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+    let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+
+    let mut evals = 0usize;
+    let mut objective = |params: &[f64]| -> f64 {
+        evals += 1;
+        // Clamp log-params to a sane box so the simplex cannot wander into
+        // overflow territory.
+        let clamped: Vec<f64> = params.iter().map(|p| p.clamp(-12.0, 12.0)).collect();
+        let hyp = SeArdHyper::from_log_params(&clamped, mean);
+        match log_marginal_likelihood(&xs, &ys, &hyp) {
+            Ok(ll) => -ll,
+            Err(_) => 1e12, // infeasible (non-PD) point
+        }
+    };
+
+    let mut init_params = init.to_log_params();
+    // Nelder–Mead over k = 2 + d parameters.
+    let best = nelder_mead(&mut objective, &mut init_params, opts.init_step, opts.max_evals);
+    let hyp = SeArdHyper::from_log_params(
+        &best.0.iter().map(|p| p.clamp(-12.0, 12.0)).collect::<Vec<_>>(),
+        mean,
+    );
+    Ok(MleReport { hyp, log_likelihood: -best.1, evals })
+}
+
+/// Standard Nelder–Mead simplex minimizer. Returns (argmin, min).
+pub fn nelder_mead(
+    f: &mut dyn FnMut(&[f64]) -> f64,
+    x0: &mut Vec<f64>,
+    step: f64,
+    max_evals: usize,
+) -> (Vec<f64>, f64) {
+    let dim = x0.len();
+    let (alpha, gamma, rho, sigma) = (1.0, 2.0, 0.5, 0.5);
+
+    // Initial simplex: x0 plus a perturbation along each axis.
+    let mut simplex: Vec<(Vec<f64>, f64)> = Vec::with_capacity(dim + 1);
+    simplex.push((x0.clone(), f(x0)));
+    for i in 0..dim {
+        let mut xi = x0.clone();
+        xi[i] += step;
+        let fx = f(&xi);
+        simplex.push((xi, fx));
+    }
+    let mut used = dim + 1;
+
+    while used < max_evals {
+        simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let best = simplex[0].1;
+        let worst = simplex[dim].1;
+        if (worst - best).abs() < 1e-10 * (1.0 + best.abs()) {
+            break;
+        }
+        // Centroid of all but worst.
+        let mut centroid = vec![0.0; dim];
+        for (xs, _) in &simplex[..dim] {
+            for (c, x) in centroid.iter_mut().zip(xs) {
+                *c += x / dim as f64;
+            }
+        }
+        let worst_x = simplex[dim].0.clone();
+        let reflect: Vec<f64> = centroid
+            .iter()
+            .zip(&worst_x)
+            .map(|(c, w)| c + alpha * (c - w))
+            .collect();
+        let fr = f(&reflect);
+        used += 1;
+        if fr < simplex[0].1 {
+            // Try expansion.
+            let expand: Vec<f64> = centroid
+                .iter()
+                .zip(&worst_x)
+                .map(|(c, w)| c + gamma * (c - w))
+                .collect();
+            let fe = f(&expand);
+            used += 1;
+            simplex[dim] = if fe < fr { (expand, fe) } else { (reflect, fr) };
+        } else if fr < simplex[dim - 1].1 {
+            simplex[dim] = (reflect, fr);
+        } else {
+            // Contraction.
+            let contract: Vec<f64> = centroid
+                .iter()
+                .zip(&worst_x)
+                .map(|(c, w)| c + rho * (w - c))
+                .collect();
+            let fc = f(&contract);
+            used += 1;
+            if fc < simplex[dim].1 {
+                simplex[dim] = (contract, fc);
+            } else {
+                // Shrink toward best.
+                let best_x = simplex[0].0.clone();
+                for item in simplex.iter_mut().skip(1) {
+                    let xs: Vec<f64> = best_x
+                        .iter()
+                        .zip(&item.0)
+                        .map(|(b, x)| b + sigma * (x - b))
+                        .collect();
+                    let fx = f(&xs);
+                    used += 1;
+                    *item = (xs, fx);
+                }
+            }
+        }
+    }
+    simplex.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    simplex.swap_remove(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::se_ard;
+    use crate::linalg::solve::gp_cholesky;
+
+    #[test]
+    fn nelder_mead_minimizes_quadratic() {
+        let mut f = |x: &[f64]| (x[0] - 3.0).powi(2) + 2.0 * (x[1] + 1.0).powi(2) + 5.0;
+        let (xmin, fmin) = nelder_mead(&mut f, &mut vec![0.0, 0.0], 0.5, 500);
+        assert!((xmin[0] - 3.0).abs() < 1e-3, "{xmin:?}");
+        assert!((xmin[1] + 1.0).abs() < 1e-3);
+        assert!((fmin - 5.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn nelder_mead_rosenbrock_progress() {
+        let mut f =
+            |x: &[f64]| (1.0 - x[0]).powi(2) + 100.0 * (x[1] - x[0] * x[0]).powi(2);
+        let start = vec![-1.2, 1.0];
+        let f0 = f(&start);
+        let (_, fmin) = nelder_mead(&mut f, &mut start.clone(), 0.5, 2000);
+        assert!(fmin < f0 * 1e-3, "fmin={fmin}");
+    }
+
+    #[test]
+    fn mle_recovers_noise_scale_order() {
+        // Generate from known hypers; check the learned noise is within an
+        // order of magnitude and the likelihood improved over the init.
+        let mut rng = Pcg64::new(91);
+        let true_hyp = SeArdHyper::isotropic(1, 1.5, 1.0, 0.2);
+        let x = Mat::col_vec(&rng.uniform_vec(150, -5.0, 5.0));
+        let k = se_ard::cov_sym(&x, &true_hyp).unwrap();
+        let (fac, _) = gp_cholesky(&k).unwrap();
+        let z = rng.normal_vec(150);
+        let mut y = vec![0.0; 150];
+        for i in 0..150 {
+            for j in 0..=i {
+                y[i] += fac.l().get(i, j) * z[j];
+            }
+        }
+        let init = SeArdHyper::isotropic(1, 0.5, 0.5, 0.05);
+        let opts = MleOptions { subset: 120, max_evals: 250, seed: 1, init_step: 0.5 };
+        let report = learn_mle(&x, &y, &init, &opts).unwrap();
+        let ll_init = log_marginal_likelihood(&x, &y, &init).unwrap();
+        assert!(report.log_likelihood > ll_init, "{} !> {ll_init}", report.log_likelihood);
+        let ratio = report.hyp.sigma_n2 / true_hyp.sigma_n2;
+        assert!(ratio > 0.05 && ratio < 20.0, "noise ratio {ratio}");
+    }
+}

@@ -1,0 +1,37 @@
+//! Full-rank GP regression (Section 2 of the paper), the log marginal
+//! likelihood, and maximum-likelihood hyperparameter learning.
+
+pub mod fgp;
+pub mod likelihood;
+pub mod hyper;
+
+use crate::linalg::matrix::Mat;
+
+/// A Gaussian predictive distribution over a set of test inputs: the mean
+/// vector plus (optionally) the full covariance and always the marginal
+/// variances. All regression methods in this crate produce this type so
+/// metrics and harnesses are method-agnostic.
+#[derive(Clone, Debug)]
+pub struct Prediction {
+    pub mean: Vec<f64>,
+    /// Marginal predictive variances (diagonal of the covariance).
+    pub var: Vec<f64>,
+    /// Full predictive covariance when the method computed it (small |U|).
+    pub cov: Option<Mat>,
+}
+
+impl Prediction {
+    pub fn len(&self) -> usize {
+        self.mean.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mean.is_empty()
+    }
+
+    /// Trace of the predictive covariance (paper Remark 2 after Thm 2
+    /// reports tr(Σ^LMA_UU) complexity; we expose it as a scalar summary).
+    pub fn trace_var(&self) -> f64 {
+        self.var.iter().sum()
+    }
+}

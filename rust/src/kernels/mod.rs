@@ -1,0 +1,10 @@
+//! Covariance kernels.
+//!
+//! `se_ard` is the paper's squared-exponential ARD covariance with signal
+//! variance, per-dimension lengthscales and additive observation noise
+//! (Section 4). `pjrt_cov` computes the *same* covariance through the
+//! AOT-compiled Pallas artifact (Layer 1) so the request path can exercise
+//! the compiled kernel; both paths are cross-checked in integration tests.
+
+pub mod se_ard;
+pub mod pjrt_cov;

@@ -1,0 +1,88 @@
+//! Covariance evaluation through the AOT-compiled Pallas kernel, with
+//! transparent fallback to the native Rust path.
+//!
+//! `CovBackend` is the seam the coordinator configures: `Native` is pure
+//! Rust (any shape), `Pjrt` routes block covariances whose shapes fit an
+//! artifact bucket through the compiled Layer-1 kernel and falls back to
+//! native otherwise. Both produce the same numbers to f32 precision —
+//! `rust/tests/pjrt_integration.rs` asserts it whenever artifacts exist.
+
+use std::rc::Rc;
+
+use crate::kernels::se_ard;
+use crate::linalg::matrix::Mat;
+use crate::runtime::artifacts::ArtifactLibrary;
+use crate::util::error::Result;
+
+/// Which engine computes covariance blocks.
+#[derive(Clone)]
+pub enum CovBackend {
+    /// Pure-Rust SE-ARD builders.
+    Native,
+    /// Compiled Pallas kernel when a bucket fits, else native.
+    Pjrt(Rc<ArtifactLibrary>),
+}
+
+impl std::fmt::Debug for CovBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CovBackend::Native => write!(f, "CovBackend::Native"),
+            CovBackend::Pjrt(_) => write!(f, "CovBackend::Pjrt"),
+        }
+    }
+}
+
+impl CovBackend {
+    /// Load the PJRT backend from the default artifact dir, falling back
+    /// to native when artifacts are not built.
+    pub fn auto() -> CovBackend {
+        match ArtifactLibrary::try_default() {
+            Some(lib) => CovBackend::Pjrt(Rc::new(lib)),
+            None => CovBackend::Native,
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, CovBackend::Pjrt(_))
+    }
+
+    /// Cross-covariance over pre-scaled inputs (no noise term).
+    pub fn cov_cross_scaled(&self, s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
+        match self {
+            CovBackend::Native => se_ard::cov_cross_scaled(s1, s2, sigma_s2),
+            CovBackend::Pjrt(lib) => match lib.cov_cross_scaled(s1, s2, sigma_s2) {
+                Ok(k) => Ok(k),
+                // No fitting bucket → native fallback.
+                Err(crate::util::error::PgprError::Artifact(_)) => {
+                    se_ard::cov_cross_scaled(s1, s2, sigma_s2)
+                }
+                Err(e) => Err(e),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn native_backend_matches_direct_call() {
+        let mut rng = Pcg64::new(231);
+        let a = Mat::randn(10, 3, &mut rng);
+        let b = Mat::randn(7, 3, &mut rng);
+        let k1 = CovBackend::Native.cov_cross_scaled(&a, &b, 1.3).unwrap();
+        let k2 = se_ard::cov_cross_scaled(&a, &b, 1.3).unwrap();
+        assert_eq!(k1.data(), k2.data());
+    }
+
+    #[test]
+    fn auto_never_panics() {
+        let backend = CovBackend::auto();
+        let mut rng = Pcg64::new(232);
+        let a = Mat::randn(4, 2, &mut rng);
+        let k = backend.cov_cross_scaled(&a, &a, 1.0).unwrap();
+        assert_eq!(k.rows(), 4);
+    }
+}

@@ -1,0 +1,58 @@
+//! # pgpr — Parallel Gaussian Process Regression for Big Data
+//!
+//! A production-quality reproduction of
+//! *"Parallel Gaussian Process Regression for Big Data: Low-Rank
+//! Representation Meets Markov Approximation"* (Low, Yu, Chen & Jaillet,
+//! AAAI 2015) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the parallel LMA coordinator: data
+//!   partitioning, local/global summary exchange over a simulated
+//!   multi-node cluster, the Theorem-2 predictive equations, and all
+//!   baselines the paper evaluates against (FGP, PIC, SSGP, local GPs).
+//! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
+//!   covariance/summary hot spots, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled SE-ARD
+//!   covariance, tiled matmul-accumulate) called from Layer 2, verified
+//!   against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: `artifacts/*.hlo.txt` are loaded
+//! and executed through the PJRT C API (`runtime` module); everything else
+//! is pure Rust.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use pgpr::prelude::*;
+//!
+//! let hyp = SeArdHyper::isotropic(1, 1.0, 0.5, 0.05);
+//! let data = pgpr::data::synth::SynthField::new(1, &hyp, 42).sample(512);
+//! let cfg = LmaConfig { num_blocks: 8, markov_order: 1, support_size: 32, ..Default::default() };
+//! let model = LmaRegressor::fit(&data.train_x, &data.train_y, &hyp, &cfg).unwrap();
+//! let pred = model.predict(&data.test_x).unwrap();
+//! println!("rmse = {}", pgpr::metrics::rmse(&pred.mean, &data.test_y));
+//! ```
+
+pub mod util;
+pub mod linalg;
+pub mod kernels;
+pub mod gp;
+pub mod sparse;
+pub mod lma;
+pub mod cluster;
+pub mod runtime;
+pub mod data;
+pub mod metrics;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+
+/// Convenience re-exports covering the most common entry points.
+pub mod prelude {
+    pub use crate::config::LmaConfig;
+    pub use crate::gp::fgp::FgpRegressor;
+    pub use crate::kernels::se_ard::SeArdHyper;
+    pub use crate::linalg::matrix::Mat;
+    pub use crate::lma::LmaRegressor;
+    pub use crate::metrics::rmse;
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,293 @@
+//! Block-banded matrix structure (Asif & Moura 2005).
+//!
+//! The paper's Proposition 1 states that the LMA residual approximation
+//! `R̄_DD` has a **B-block-banded inverse**, and Lemma 1 that the Cholesky
+//! factor of that inverse shares the band. This module provides
+//!
+//! * [`BlockPartition`] — the M-way partition bookkeeping shared by the
+//!   whole LMA stack (block row ranges, `D_m^B` index unions, band tests);
+//! * [`BlockBanded`] — a storage type holding only the blocks inside a
+//!   B-block band, with dense conversion for tests;
+//! * [`band_mask_holds`] — verifier that a dense matrix is (numerically)
+//!   B-block-banded, used by the Proposition-1 property tests.
+
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+
+/// An M-way contiguous partition of `0..n` into blocks of near-equal size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockPartition {
+    /// `starts[m]..starts[m+1]` is block m; `starts.len() == M + 1`.
+    pub starts: Vec<usize>,
+}
+
+impl BlockPartition {
+    /// Even partition of n items into m blocks (first `n % m` blocks get
+    /// one extra item).
+    pub fn even(n: usize, m: usize) -> Result<BlockPartition> {
+        if m == 0 {
+            return Err(PgprError::Config("BlockPartition: M must be ≥ 1".into()));
+        }
+        if n < m {
+            return Err(PgprError::Config(format!(
+                "BlockPartition: cannot split {n} items into {m} non-empty blocks"
+            )));
+        }
+        let base = n / m;
+        let extra = n % m;
+        let mut starts = Vec::with_capacity(m + 1);
+        let mut acc = 0;
+        starts.push(0);
+        for i in 0..m {
+            acc += base + usize::from(i < extra);
+            starts.push(acc);
+        }
+        Ok(BlockPartition { starts })
+    }
+
+    /// Partition from explicit block sizes.
+    pub fn from_sizes(sizes: &[usize]) -> Result<BlockPartition> {
+        if sizes.is_empty() || sizes.iter().any(|&s| s == 0) {
+            return Err(PgprError::Config("BlockPartition: empty or zero-size block".into()));
+        }
+        let mut starts = vec![0];
+        for &s in sizes {
+            starts.push(starts.last().unwrap() + s);
+        }
+        Ok(BlockPartition { starts })
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    pub fn total(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// Range of block m.
+    pub fn range(&self, m: usize) -> std::ops::Range<usize> {
+        self.starts[m]..self.starts[m + 1]
+    }
+
+    pub fn size(&self, m: usize) -> usize {
+        self.starts[m + 1] - self.starts[m]
+    }
+
+    /// Which block a global index belongs to.
+    pub fn block_of(&self, idx: usize) -> usize {
+        debug_assert!(idx < self.total());
+        // starts is sorted; binary search for the containing block.
+        match self.starts.binary_search(&idx) {
+            Ok(m) if m == self.num_blocks() => m - 1,
+            Ok(m) => m,
+            Err(ins) => ins - 1,
+        }
+    }
+
+    /// `D_m^B` of the paper: the union of blocks m+1 ..= min(m+B, M-1),
+    /// returned as a (possibly empty) contiguous range.
+    pub fn forward_band(&self, m: usize, b: usize) -> std::ops::Range<usize> {
+        let mm = self.num_blocks();
+        let hi = (m + 1 + b).min(mm);
+        if m + 1 >= mm || b == 0 {
+            return self.starts[mm]..self.starts[mm]; // empty
+        }
+        self.starts[m + 1]..self.starts[hi]
+    }
+
+    /// True if blocks (m, n) lie within the B-block band, i.e. |m−n| ≤ B.
+    pub fn in_band(m: usize, n: usize, b: usize) -> bool {
+        m.abs_diff(n) <= b
+    }
+}
+
+/// A symmetric block matrix of which only blocks with |m−n| ≤ B are stored.
+#[derive(Clone, Debug)]
+pub struct BlockBanded {
+    pub part: BlockPartition,
+    pub bandwidth: usize,
+    /// blocks[m] holds blocks (m, m) ..= (m, min(m+B, M−1)) left to right.
+    blocks: Vec<Vec<Mat>>,
+}
+
+impl BlockBanded {
+    /// Build from a generator for block (m, n), n ≥ m, |m−n| ≤ B.
+    pub fn from_fn(
+        part: BlockPartition,
+        bandwidth: usize,
+        mut f: impl FnMut(usize, usize) -> Mat,
+    ) -> Result<BlockBanded> {
+        let mm = part.num_blocks();
+        let mut blocks = Vec::with_capacity(mm);
+        for m in 0..mm {
+            let hi = (m + bandwidth).min(mm - 1);
+            let mut row = Vec::with_capacity(hi - m + 1);
+            for n in m..=hi {
+                let blk = f(m, n);
+                if blk.rows() != part.size(m) || blk.cols() != part.size(n) {
+                    return Err(PgprError::Shape(format!(
+                        "BlockBanded: block ({m},{n}) is {}x{}, expected {}x{}",
+                        blk.rows(),
+                        blk.cols(),
+                        part.size(m),
+                        part.size(n)
+                    )));
+                }
+                row.push(blk);
+            }
+            blocks.push(row);
+        }
+        Ok(BlockBanded { part, bandwidth, blocks })
+    }
+
+    /// Stored block (m, n) for n ≥ m within the band.
+    pub fn block(&self, m: usize, n: usize) -> &Mat {
+        assert!(n >= m && n - m <= self.bandwidth, "block ({m},{n}) outside band");
+        &self.blocks[m][n - m]
+    }
+
+    /// Dense symmetric materialization (tests / small problems only).
+    pub fn to_dense(&self) -> Mat {
+        let n = self.part.total();
+        let mut out = Mat::zeros(n, n);
+        for m in 0..self.part.num_blocks() {
+            let hi = (m + self.bandwidth).min(self.part.num_blocks() - 1);
+            for nn in m..=hi {
+                let blk = self.block(m, nn);
+                out.set_block(self.part.starts[m], self.part.starts[nn], blk);
+                if nn != m {
+                    out.set_block(self.part.starts[nn], self.part.starts[m], &blk.transpose());
+                }
+            }
+        }
+        out
+    }
+
+    /// Total stored scalars (memory accounting for the cluster simulator).
+    pub fn stored_len(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|row| row.iter().map(|b| b.rows() * b.cols()).sum::<usize>())
+            .sum()
+    }
+}
+
+/// Check that dense `a` is B-block-banded w.r.t. `part`: every block with
+/// |m−n| > B has max-abs ≤ tol. Returns the largest out-of-band magnitude.
+pub fn band_violation(a: &Mat, part: &BlockPartition, b: usize) -> f64 {
+    let mm = part.num_blocks();
+    let mut worst = 0.0_f64;
+    for m in 0..mm {
+        for n in 0..mm {
+            if m.abs_diff(n) > b {
+                let blk = a.block(
+                    part.starts[m],
+                    part.starts[m + 1],
+                    part.starts[n],
+                    part.starts[n + 1],
+                );
+                worst = worst.max(blk.max_abs());
+            }
+        }
+    }
+    worst
+}
+
+/// Convenience wrapper for property tests.
+pub fn band_mask_holds(a: &Mat, part: &BlockPartition, b: usize, tol: f64) -> bool {
+    band_violation(a, part, b) <= tol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_cases, gen_size};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn even_partition_covers_everything() {
+        for_cases(41, 16, |rng| {
+            let m = gen_size(rng, 1, 12);
+            let n = gen_size(rng, m, 200);
+            let p = BlockPartition::even(n, m).unwrap();
+            assert_eq!(p.num_blocks(), m);
+            assert_eq!(p.total(), n);
+            let sizes: Vec<usize> = (0..m).map(|i| p.size(i)).collect();
+            assert!(sizes.iter().all(|&s| s > 0));
+            assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+            // block_of is the inverse of range().
+            for blk in 0..m {
+                for idx in p.range(blk) {
+                    assert_eq!(p.block_of(idx), blk);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn partition_rejects_bad_inputs() {
+        assert!(BlockPartition::even(5, 0).is_err());
+        assert!(BlockPartition::even(3, 5).is_err());
+        assert!(BlockPartition::from_sizes(&[]).is_err());
+        assert!(BlockPartition::from_sizes(&[2, 0]).is_err());
+    }
+
+    #[test]
+    fn forward_band_matches_paper_definition() {
+        let p = BlockPartition::even(100, 5).unwrap(); // blocks of 20
+        // D_1^2 (0-indexed m=1, B=2) = blocks 2,3 → 40..80.
+        assert_eq!(p.forward_band(1, 2), 40..80);
+        // Last block has empty forward band.
+        assert!(p.forward_band(4, 2).is_empty());
+        // B=0 ⇒ empty.
+        assert!(p.forward_band(1, 0).is_empty());
+        // Band clipped at M.
+        assert_eq!(p.forward_band(3, 10), 80..100);
+    }
+
+    #[test]
+    fn block_banded_roundtrip() {
+        let mut rng = Pcg64::new(42);
+        let p = BlockPartition::even(30, 4).unwrap();
+        let mut mats = std::collections::BTreeMap::new();
+        let bb = BlockBanded::from_fn(p.clone(), 1, |m, n| {
+            let blk = if m == n {
+                // Symmetric diagonal blocks.
+                let mut b = Mat::randn(p.size(m), p.size(n), &mut rng);
+                b.symmetrize();
+                b
+            } else {
+                Mat::randn(p.size(m), p.size(n), &mut rng)
+            };
+            mats.insert((m, n), blk.clone());
+            blk
+        })
+        .unwrap();
+        let dense = bb.to_dense();
+        // In-band blocks survive; out-of-band are zero.
+        assert!(band_mask_holds(&dense, &p, 1, 0.0));
+        assert!(!band_mask_holds(&dense, &p, 0, 1e-9)); // off-diag blocks nonzero
+        for ((m, n), blk) in &mats {
+            let got = dense.block(p.starts[*m], p.starts[m + 1], p.starts[*n], p.starts[n + 1]);
+            assert_eq!(&got, blk);
+        }
+        // Symmetry of the dense form.
+        assert!(dense.max_abs_diff(&dense.transpose()) == 0.0);
+    }
+
+    #[test]
+    fn stored_len_counts_band_only() {
+        let p = BlockPartition::even(40, 4).unwrap(); // 10 each
+        let bb = BlockBanded::from_fn(p, 1, |m, n| Mat::filled(10, 10, (m + n) as f64)).unwrap();
+        // Blocks stored: (0,0),(0,1),(1,1),(1,2),(2,2),(2,3),(3,3) = 7 blocks.
+        assert_eq!(bb.stored_len(), 7 * 100);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let p = BlockPartition::even(20, 2).unwrap();
+        let r = BlockBanded::from_fn(p, 1, |_m, _n| Mat::zeros(3, 3));
+        assert!(r.is_err());
+    }
+}

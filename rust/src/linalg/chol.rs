@@ -1,0 +1,418 @@
+//! Cholesky factorization and triangular solves.
+//!
+//! The GP hot path is `A = L·Lᵀ` followed by forward/back substitution, so
+//! this module carries most of the O(n³) work in FGP, PIC and LMA. The
+//! factorization is right-looking and panel-blocked: factor a diagonal
+//! panel, TRSM the column below it, SYRK-update the trailing submatrix —
+//! the update is the cubic term and runs through contiguous row AXPYs.
+//!
+//! `CholFactor` wraps the factor with solve/logdet/inverse helpers, and
+//! `cholesky_jittered` implements the standard GP trick of retrying with
+//! geometrically increasing diagonal jitter (the paper notes FGP/PIC
+//! "Cholesky factorization failure" with huge support sets — we surface
+//! that same failure mode as `NotPositiveDefinite`).
+
+use crate::linalg::gemm::dot;
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+
+/// Panel width for the blocked factorization.
+const NB: usize = 64;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+#[derive(Clone, Debug)]
+pub struct CholFactor {
+    l: Mat,
+}
+
+impl CholFactor {
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows()
+    }
+
+    /// log|A| = 2·Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Solve A·x = b for a single right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let y = forward_sub(&self.l, b)?;
+        back_sub_t(&self.l, &y)
+    }
+
+    /// Solve A·X = B for a matrix of right-hand sides.
+    pub fn solve_mat(&self, b: &Mat) -> Result<Mat> {
+        let y = forward_sub_mat(&self.l, b)?;
+        back_sub_t_mat(&self.l, &y)
+    }
+
+    /// Forward solve only: L·Y = B (used for whitening / half-solves,
+    /// e.g. computing Q = Vᵀ V with V = L⁻¹ K).
+    pub fn half_solve(&self, b: &Mat) -> Result<Mat> {
+        forward_sub_mat(&self.l, b)
+    }
+
+    /// Explicit inverse (only for small matrices, e.g. |S|×|S| summaries).
+    pub fn inverse(&self) -> Result<Mat> {
+        self.solve_mat(&Mat::identity(self.n()))
+    }
+}
+
+/// Plain Cholesky. Fails with `NotPositiveDefinite` if a pivot is ≤ 0.
+pub fn cholesky(a: &Mat) -> Result<CholFactor> {
+    if !a.is_square() {
+        return Err(PgprError::Shape(format!(
+            "cholesky: non-square {}x{}",
+            a.rows(),
+            a.cols()
+        )));
+    }
+    let n = a.rows();
+    let mut l = a.clone();
+    let ld = l.data_mut();
+
+    let mut k0 = 0;
+    while k0 < n {
+        let kb = (k0 + NB).min(n);
+        // --- factor diagonal panel [k0, kb) unblocked ---
+        for j in k0..kb {
+            // d = A[j,j] - dot(L[j, k0..j], L[j, k0..j]) (panel part)
+            let mut d = ld[j * n + j];
+            for p in k0..j {
+                let v = ld[j * n + p];
+                d -= v * v;
+            }
+            if d <= 0.0 || !d.is_finite() {
+                return Err(PgprError::NotPositiveDefinite { size: n, jitter_tried: 0.0 });
+            }
+            let djj = d.sqrt();
+            ld[j * n + j] = djj;
+            for i in (j + 1)..n {
+                // Only update rows against the current panel columns; the
+                // trailing update below handles columns < k0 already.
+                let mut v = ld[i * n + j];
+                for p in k0..j {
+                    v -= ld[i * n + p] * ld[j * n + p];
+                }
+                ld[i * n + j] = v / djj;
+            }
+        }
+        // --- trailing update: A[kb.., kb..] -= L[kb.., k0..kb] · L[kb.., k0..kb]ᵀ ---
+        // Row-wise: for i in kb..n, for j in kb..=i: a[i,j] -= dot(Lrow_i_panel, Lrow_j_panel)
+        let mut rowi_panel = vec![0.0; kb - k0];
+        for i in kb..n {
+            // Copy panel row once (it aliases the region being updated).
+            rowi_panel.copy_from_slice(&ld[i * n + k0..i * n + kb]);
+            let (head, tail) = ld.split_at_mut(i * n);
+            // 4-way register-blocked dots against rows j (§Perf).
+            let mut j = kb;
+            while j + 4 <= i {
+                let upd = crate::linalg::gemm::dot4(
+                    &rowi_panel,
+                    &head[j * n + k0..j * n + kb],
+                    &head[(j + 1) * n + k0..(j + 1) * n + kb],
+                    &head[(j + 2) * n + k0..(j + 2) * n + kb],
+                    &head[(j + 3) * n + k0..(j + 3) * n + kb],
+                );
+                tail[j] -= upd[0];
+                tail[j + 1] -= upd[1];
+                tail[j + 2] -= upd[2];
+                tail[j + 3] -= upd[3];
+                j += 4;
+            }
+            while j < i {
+                let rowj_panel = &head[j * n + k0..j * n + kb];
+                tail[j] -= dot(&rowi_panel, rowj_panel);
+                j += 1;
+            }
+            // Diagonal element.
+            let self_upd = dot(&rowi_panel, &rowi_panel);
+            tail[i] -= self_upd;
+        }
+        k0 = kb;
+    }
+
+    // Zero the strict upper triangle so the factor is clean.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            ld[i * n + j] = 0.0;
+        }
+    }
+    Ok(CholFactor { l })
+}
+
+/// Cholesky with geometric jitter retry: tries `A`, then `A + jI` with
+/// j = base, 10·base, ... up to `max_jitter`. Returns the factor and the
+/// jitter actually used.
+pub fn cholesky_jittered(a: &Mat, base: f64, max_jitter: f64) -> Result<(CholFactor, f64)> {
+    match cholesky(a) {
+        Ok(f) => return Ok((f, 0.0)),
+        Err(PgprError::NotPositiveDefinite { .. }) => {}
+        Err(e) => return Err(e),
+    }
+    let mut jitter = base;
+    while jitter <= max_jitter {
+        let mut aj = a.clone();
+        aj.add_diag(jitter);
+        match cholesky(&aj) {
+            Ok(f) => return Ok((f, jitter)),
+            Err(PgprError::NotPositiveDefinite { .. }) => jitter *= 10.0,
+            Err(e) => return Err(e),
+        }
+    }
+    Err(PgprError::NotPositiveDefinite { size: a.rows(), jitter_tried: max_jitter })
+}
+
+/// Solve L·y = b (L lower-triangular).
+pub fn forward_sub(l: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows();
+    if b.len() != n {
+        return Err(PgprError::Shape(format!("forward_sub: L {}x{}, b {}", n, l.cols(), b.len())));
+    }
+    let mut y = b.to_vec();
+    let ld = l.data();
+    for i in 0..n {
+        let acc = dot(&ld[i * n..i * n + i], &y[..i]);
+        y[i] = (y[i] - acc) / ld[i * n + i];
+    }
+    Ok(y)
+}
+
+/// Solve Lᵀ·x = y.
+pub fn back_sub_t(l: &Mat, y: &[f64]) -> Result<Vec<f64>> {
+    let n = l.rows();
+    if y.len() != n {
+        return Err(PgprError::Shape("back_sub_t: size mismatch".into()));
+    }
+    let mut x = y.to_vec();
+    let ld = l.data();
+    for i in (0..n).rev() {
+        // x[i] = (y[i] - Σ_{j>i} L[j,i]·x[j]) / L[i,i]
+        let mut acc = x[i];
+        for j in (i + 1)..n {
+            acc -= ld[j * n + i] * x[j];
+        }
+        x[i] = acc / ld[i * n + i];
+    }
+    Ok(x)
+}
+
+/// Solve L·Y = B for matrix B (column-blocked so the inner loops stay on
+/// contiguous rows of B/Y).
+pub fn forward_sub_mat(l: &Mat, b: &Mat) -> Result<Mat> {
+    let n = l.rows();
+    if b.rows() != n {
+        return Err(PgprError::Shape(format!(
+            "forward_sub_mat: L {}x{}, B {}x{}",
+            n,
+            l.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let ncols = b.cols();
+    let mut y = b.clone();
+    let ld = l.data();
+    let yd = y.data_mut();
+    for i in 0..n {
+        let (rows_done, row_i) = yd.split_at_mut(i * ncols);
+        let row_i = &mut row_i[..ncols];
+        let lrow = &ld[i * n..i * n + i];
+        for (j, &lij) in lrow.iter().enumerate() {
+            if lij == 0.0 {
+                continue;
+            }
+            let yrow_j = &rows_done[j * ncols..(j + 1) * ncols];
+            for (yi, yj) in row_i.iter_mut().zip(yrow_j) {
+                *yi -= lij * yj;
+            }
+        }
+        let lii = ld[i * n + i];
+        for v in row_i.iter_mut() {
+            *v /= lii;
+        }
+    }
+    Ok(y)
+}
+
+/// Solve Lᵀ·X = Y for matrix Y.
+pub fn back_sub_t_mat(l: &Mat, y: &Mat) -> Result<Mat> {
+    let n = l.rows();
+    if y.rows() != n {
+        return Err(PgprError::Shape("back_sub_t_mat: size mismatch".into()));
+    }
+    let ncols = y.cols();
+    let mut x = y.clone();
+    let ld = l.data();
+    let xd = x.data_mut();
+    for i in (0..n).rev() {
+        let (head, tail) = xd.split_at_mut((i + 1) * ncols);
+        let row_i = &mut head[i * ncols..];
+        // row_i -= Σ_{j>i} L[j,i] · row_j
+        for j in (i + 1)..n {
+            let lji = ld[j * n + i];
+            if lji == 0.0 {
+                continue;
+            }
+            let row_j = &tail[(j - i - 1) * ncols..(j - i) * ncols];
+            for (xi, xj) in row_i.iter_mut().zip(row_j) {
+                *xi -= lji * xj;
+            }
+        }
+        let lii = ld[i * n + i];
+        for v in row_i.iter_mut() {
+            *v /= lii;
+        }
+    }
+    Ok(x)
+}
+
+/// SPD solve convenience: x = A⁻¹·b.
+pub fn spd_solve_vec(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    cholesky(a)?.solve_vec(b)
+}
+
+/// SPD solve convenience: X = A⁻¹·B.
+pub fn spd_solve_mat(a: &Mat, b: &Mat) -> Result<Mat> {
+    cholesky(a)?.solve_mat(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, for_cases, gen_size, gen_spd};
+    use crate::util::rng::Pcg64;
+
+    fn spd(rng: &mut Pcg64, n: usize) -> Mat {
+        Mat::from_vec(n, n, gen_spd(rng, n))
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        for_cases(21, 12, |rng| {
+            let n = gen_size(rng, 1, 90);
+            let a = spd(rng, n);
+            let f = cholesky(&a).unwrap();
+            let rec = f.l().matmul_t(f.l()).unwrap();
+            let scale = a.max_abs().max(1.0);
+            assert!(rec.max_abs_diff(&a) < 1e-10 * scale, "n={n}");
+        });
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let mut rng = Pcg64::new(22);
+        let a = spd(&mut rng, 70); // crosses one panel boundary (NB=64)
+        let f = cholesky(&a).unwrap();
+        for i in 0..70 {
+            for j in (i + 1)..70 {
+                assert_eq!(f.l().get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        for_cases(23, 12, |rng| {
+            let n = gen_size(rng, 1, 60);
+            let a = spd(rng, n);
+            let x_true: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&x_true).unwrap();
+            let x = cholesky(&a).unwrap().solve_vec(&b).unwrap();
+            assert_close(&x, &x_true, 1e-6);
+        });
+    }
+
+    #[test]
+    fn solve_mat_matches_columnwise() {
+        for_cases(24, 8, |rng| {
+            let n = gen_size(rng, 1, 40);
+            let k = gen_size(rng, 1, 10);
+            let a = spd(rng, n);
+            let b = Mat::randn(n, k, rng);
+            let f = cholesky(&a).unwrap();
+            let x = f.solve_mat(&b).unwrap();
+            for j in 0..k {
+                let xc = f.solve_vec(&b.col(j)).unwrap();
+                assert_close(&x.col(j), &xc, 1e-9);
+            }
+            // A·X ≈ B
+            let rec = a.matmul(&x).unwrap();
+            assert!(rec.max_abs_diff(&b) < 1e-7 * (1.0 + b.max_abs()));
+        });
+    }
+
+    #[test]
+    fn logdet_matches_known() {
+        // Diagonal matrix: logdet = Σ log d_i.
+        let d = [2.0, 3.0, 0.5, 7.0];
+        let mut a = Mat::zeros(4, 4);
+        for (i, &v) in d.iter().enumerate() {
+            a.set(i, i, v);
+        }
+        let f = cholesky(&a).unwrap();
+        let want: f64 = d.iter().map(|x| x.ln()).sum();
+        assert!((f.logdet() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn not_pd_detected() {
+        let mut a = Mat::identity(3);
+        a.set(2, 2, -1.0);
+        assert!(matches!(
+            cholesky(&a),
+            Err(PgprError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn jitter_rescues_semidefinite() {
+        // Rank-1 PSD matrix: plain Cholesky fails, jittered succeeds.
+        let v = Mat::col_vec(&[1.0, 2.0, 3.0]);
+        let a = v.matmul_t(&v).unwrap();
+        assert!(cholesky(&a).is_err());
+        let (f, jitter) = cholesky_jittered(&a, 1e-10, 1e-2).unwrap();
+        assert!(jitter > 0.0);
+        assert_eq!(f.n(), 3);
+    }
+
+    #[test]
+    fn jitter_gives_up_eventually() {
+        let mut a = Mat::identity(2);
+        a.set(0, 0, -100.0);
+        assert!(cholesky_jittered(&a, 1e-10, 1e-6).is_err());
+    }
+
+    #[test]
+    fn half_solve_whitens() {
+        let mut rng = Pcg64::new(25);
+        let a = spd(&mut rng, 20);
+        let f = cholesky(&a).unwrap();
+        // V = L⁻¹·A ⇒ Vᵀ·V should equal A (since A = L Lᵀ ⇒ L⁻¹ A = Lᵀ).
+        let v = f.half_solve(&a).unwrap();
+        let vtv = v.t_matmul(&v).unwrap();
+        assert!(vtv.max_abs_diff(&a) < 1e-8 * a.max_abs());
+    }
+
+    #[test]
+    fn inverse_matches() {
+        let mut rng = Pcg64::new(26);
+        let a = spd(&mut rng, 15);
+        let inv = cholesky(&a).unwrap().inverse().unwrap();
+        let prod = a.matmul(&inv).unwrap();
+        assert!(prod.max_abs_diff(&Mat::identity(15)) < 1e-8);
+    }
+
+    #[test]
+    fn one_by_one() {
+        let a = Mat::from_vec(1, 1, vec![4.0]);
+        let f = cholesky(&a).unwrap();
+        assert_eq!(f.l().get(0, 0), 2.0);
+        assert_eq!(f.solve_vec(&[8.0]).unwrap(), vec![2.0]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! Needed by classical MDS (`data::mds`) which embeds the AIMPEAK road
+//! network's graph distances into Euclidean space, mirroring the paper's
+//! preprocessing (footnote 4). Jacobi is O(n³) per sweep but the MDS
+//! Gram matrices here are at most ~1000², where it is robust and more than
+//! fast enough; convergence is quadratic once nearly diagonal.
+
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+
+/// Eigen decomposition A = V·diag(w)·Vᵀ with eigenvalues sorted
+/// descending; columns of `vectors` are the corresponding eigenvectors.
+#[derive(Clone, Debug)]
+pub struct SymEig {
+    pub values: Vec<f64>,
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigensolver for symmetric matrices.
+pub fn sym_eig(a: &Mat) -> Result<SymEig> {
+    if !a.is_square() {
+        return Err(PgprError::Shape(format!("sym_eig: {}x{}", a.rows(), a.cols())));
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Ok(SymEig { values: vec![], vectors: Mat::zeros(0, 0) });
+    }
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Mat::identity(n);
+
+    let max_sweeps = 64;
+    let tol = 1e-13 * m.max_abs().max(1e-300);
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() <= tol * 1e-3 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation angle.
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q of m.
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    // Extract and sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    let vals: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let values: Vec<f64> = order.iter().map(|&i| vals[i]).collect();
+    let mut vectors = Mat::zeros(n, n);
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..n {
+            vectors.set(r, newc, v.get(r, oldc));
+        }
+    }
+    Ok(SymEig { values, vectors })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_cases, gen_size, gen_spd};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn reconstructs_matrix() {
+        for_cases(31, 8, |rng| {
+            let n = gen_size(rng, 1, 20);
+            let a = {
+                let mut m = Mat::randn(n, n, rng);
+                m.symmetrize();
+                m
+            };
+            let e = sym_eig(&a).unwrap();
+            // A ≈ V diag(w) Vᵀ
+            let mut vd = e.vectors.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd.set(i, j, vd.get(i, j) * e.values[j]);
+                }
+            }
+            let rec = vd.matmul_t(&e.vectors).unwrap();
+            assert!(rec.max_abs_diff(&a) < 1e-8 * (1.0 + a.max_abs()), "n={n}");
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Pcg64::new(32);
+        let a = Mat::from_vec(12, 12, gen_spd(&mut rng, 12));
+        let e = sym_eig(&a).unwrap();
+        let vtv = e.vectors.t_matmul(&e.vectors).unwrap();
+        assert!(vtv.max_abs_diff(&Mat::identity(12)) < 1e-9);
+    }
+
+    #[test]
+    fn values_sorted_descending_and_positive_for_spd() {
+        let mut rng = Pcg64::new(33);
+        let a = Mat::from_vec(10, 10, gen_spd(&mut rng, 10));
+        let e = sym_eig(&a).unwrap();
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(e.values.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a).unwrap();
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diagonal_matrix_trivial() {
+        let mut a = Mat::zeros(3, 3);
+        a.set(0, 0, 5.0);
+        a.set(1, 1, -2.0);
+        a.set(2, 2, 1.0);
+        let e = sym_eig(&a).unwrap();
+        assert_eq!(e.values, vec![5.0, 1.0, -2.0]);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut rng = Pcg64::new(34);
+        let mut a = Mat::randn(9, 9, &mut rng);
+        a.symmetrize();
+        let e = sym_eig(&a).unwrap();
+        let sum: f64 = e.values.iter().sum();
+        assert!((sum - a.trace()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,427 @@
+//! Blocked matrix multiplication kernels.
+//!
+//! Three variants cover every product the GP algebra needs without ever
+//! materializing a transpose:
+//!
+//! * [`matmul`]    — C = A·B        (i-k-j loop order, panel-blocked)
+//! * [`matmul_tn`] — C = Aᵀ·B       (k outer, rank-1 row updates)
+//! * [`matmul_nt`] — C = A·Bᵀ       (dot-product form, both operands walk rows)
+//!
+//! The i-k-j order keeps the inner loop a contiguous `C_row += a * B_row`
+//! AXPY which LLVM auto-vectorizes; blocking over k/j bounds the working
+//! set. `syrk` exploits symmetry for the Gram products in the summaries
+//! (≈2× over a general GEMM). Perf history for this module lives in
+//! EXPERIMENTS.md §Perf.
+
+use crate::linalg::matrix::Mat;
+use crate::util::error::{shape_err, Result};
+
+/// Cache-block sizes. KC·NC·8B ≈ 256 KiB fits comfortably in L2.
+const KC: usize = 256;
+const NC: usize = 128;
+
+/// C = A·B.
+pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols() != b.rows() {
+        return shape_err(format!(
+            "matmul: {}x{} · {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        ));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(c);
+    }
+    let cd = c.data_mut();
+    let ad = a.data();
+    let bd = b.data();
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for jb in (0..n).step_by(NC) {
+            let jend = (jb + NC).min(n);
+            let width = jend - jb;
+            // 4-row register blocking: each streamed B row feeds four C
+            // rows, cutting B-panel bandwidth 4× (§Perf).
+            let m4 = m / 4 * 4;
+            let mut i = 0;
+            while i < m4 {
+                // Split cd into four disjoint row slices.
+                let (c0, rest) = cd[i * n..].split_at_mut(n);
+                let (c1, rest) = rest.split_at_mut(n);
+                let (c2, c3) = rest.split_at_mut(n);
+                let c0 = &mut c0[jb..jend];
+                let c1 = &mut c1[jb..jend];
+                let c2 = &mut c2[jb..jend];
+                let c3 = &mut c3[jb..jend];
+                for p in kb..kend {
+                    let a0 = ad[i * k + p];
+                    let a1 = ad[(i + 1) * k + p];
+                    let a2 = ad[(i + 2) * k + p];
+                    let a3 = ad[(i + 3) * k + p];
+                    if a0 == 0.0 && a1 == 0.0 && a2 == 0.0 && a3 == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[p * n + jb..p * n + jb + width];
+                    for (idx, &bv) in brow.iter().enumerate() {
+                        c0[idx] += a0 * bv;
+                        c1[idx] += a1 * bv;
+                        c2[idx] += a2 * bv;
+                        c3[idx] += a3 * bv;
+                    }
+                }
+                i += 4;
+            }
+            for i in m4..m {
+                let crow = &mut cd[i * n + jb..i * n + jend];
+                for p in kb..kend {
+                    let aip = ad[i * k + p];
+                    if aip == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[p * n + jb..p * n + jend];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aip * bv;
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// C = Aᵀ·B where A is (k×m), B is (k×n) → C is (m×n).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.rows() != b.rows() {
+        return shape_err(format!(
+            "matmul_tn: ({}x{})ᵀ · {}x{}",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        ));
+    }
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(c);
+    }
+    let cd = c.data_mut();
+    let ad = a.data();
+    let bd = b.data();
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for jb in (0..n).step_by(NC) {
+            let jend = (jb + NC).min(n);
+            for p in kb..kend {
+                let arow = &ad[p * m..(p + 1) * m];
+                let brow = &bd[p * n + jb..p * n + jend];
+                for (i, &api) in arow.iter().enumerate() {
+                    if api == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut cd[i * n + jb..i * n + jend];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += api * bv;
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// C = A·Bᵀ where A is (m×k), B is (n×k) → C is (m×n).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
+    if a.cols() != b.cols() {
+        return shape_err(format!(
+            "matmul_nt: {}x{} · ({}x{})ᵀ",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        ));
+    }
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || k == 0 || n == 0 {
+        return Ok(c);
+    }
+    let ad = a.data();
+    let bd = b.data();
+    let cd = c.data_mut();
+    let n4 = n / 4 * 4;
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j < n4 {
+            let out = dot4(
+                arow,
+                &bd[j * k..(j + 1) * k],
+                &bd[(j + 1) * k..(j + 2) * k],
+                &bd[(j + 2) * k..(j + 3) * k],
+                &bd[(j + 3) * k..(j + 4) * k],
+            );
+            crow[j..j + 4].copy_from_slice(&out);
+            j += 4;
+        }
+        for j in n4..n {
+            crow[j] = dot(arow, &bd[j * k..(j + 1) * k]);
+        }
+    }
+    Ok(c)
+}
+
+/// Unrolled dot product. `chunks_exact` removes bounds checks and the
+/// eight accumulators break the FP dependency chain so LLVM vectorizes
+/// to full SIMD width (§Perf: +30% over the 4-acc indexed version).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 8];
+    let ac = a.chunks_exact(8);
+    let bc = b.chunks_exact(8);
+    let rem_a = ac.remainder();
+    let rem_b = bc.remainder();
+    for (ca, cb) in ac.zip(bc) {
+        for k in 0..8 {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut total = (acc[0] + acc[4]) + (acc[1] + acc[5]) + (acc[2] + acc[6]) + (acc[3] + acc[7]);
+    for (x, y) in rem_a.iter().zip(rem_b) {
+        total += x * y;
+    }
+    total
+}
+
+/// Four simultaneous dot products of one `a` row against four `b` rows —
+/// the register-blocked kernel behind [`matmul_nt`] and the Cholesky
+/// trailing update. Amortizes the `a` loads 4× and keeps 4 independent
+/// SIMD accumulator sets live.
+#[inline]
+pub fn dot4(a: &[f64], b0: &[f64], b1: &[f64], b2: &[f64], b3: &[f64]) -> [f64; 4] {
+    debug_assert!(b0.len() == a.len() && b1.len() == a.len() && b2.len() == a.len() && b3.len() == a.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let mut s0 = [0.0f64; 4];
+    let mut s1 = [0.0f64; 4];
+    let mut s2 = [0.0f64; 4];
+    let mut s3 = [0.0f64; 4];
+    for c in 0..chunks {
+        let i = c * 4;
+        let av = [a[i], a[i + 1], a[i + 2], a[i + 3]];
+        for k in 0..4 {
+            s0[k] += av[k] * b0[i + k];
+            s1[k] += av[k] * b1[i + k];
+            s2[k] += av[k] * b2[i + k];
+            s3[k] += av[k] * b3[i + k];
+        }
+    }
+    let mut out = [
+        s0[0] + s0[1] + s0[2] + s0[3],
+        s1[0] + s1[1] + s1[2] + s1[3],
+        s2[0] + s2[1] + s2[2] + s2[3],
+        s3[0] + s3[1] + s3[2] + s3[3],
+    ];
+    for i in chunks * 4..n {
+        out[0] += a[i] * b0[i];
+        out[1] += a[i] * b1[i];
+        out[2] += a[i] * b2[i];
+        out[3] += a[i] * b3[i];
+    }
+    out
+}
+
+/// Symmetric rank-k: C = Aᵀ·A (m = A.cols). Computes the upper triangle
+/// and mirrors — about half the flops of a general GEMM.
+pub fn syrk_tn(a: &Mat) -> Mat {
+    let (k, m) = (a.rows(), a.cols());
+    let mut c = Mat::zeros(m, m);
+    if k == 0 || m == 0 {
+        return c;
+    }
+    let ad = a.data();
+    let cd = c.data_mut();
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for p in kb..kend {
+            let arow = &ad[p * m..(p + 1) * m];
+            for i in 0..m {
+                let api = arow[i];
+                if api == 0.0 {
+                    continue;
+                }
+                let crow = &mut cd[i * m + i..(i + 1) * m];
+                for (cv, &av) in crow.iter_mut().zip(&arow[i..]) {
+                    *cv += api * av;
+                }
+            }
+        }
+    }
+    // Mirror upper → lower.
+    for i in 0..m {
+        for j in (i + 1)..m {
+            cd[j * m + i] = cd[i * m + j];
+        }
+    }
+    c
+}
+
+/// Symmetric rank-k: C = A·Aᵀ (n = A.rows).
+pub fn syrk_nt(a: &Mat) -> Mat {
+    let (n, k) = (a.rows(), a.cols());
+    let mut c = Mat::zeros(n, n);
+    let ad = a.data();
+    for i in 0..n {
+        for j in i..n {
+            let v = dot(&ad[i * k..(i + 1) * k], &ad[j * k..(j + 1) * k]);
+            c.set(i, j, v);
+            c.set(j, i, v);
+        }
+    }
+    c
+}
+
+/// Weighted inner product xᵀ·M·y (no temporaries).
+pub fn quad_form(x: &[f64], m: &Mat, y: &[f64]) -> f64 {
+    assert_eq!(x.len(), m.rows());
+    assert_eq!(y.len(), m.cols());
+    let mut acc = 0.0;
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        acc += xi * dot(m.row(i), y);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, for_cases, gen_size};
+    use crate::util::rng::Pcg64;
+
+    /// Naive reference O(mnk) product.
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        for_cases(11, 16, |rng| {
+            let m = gen_size(rng, 1, 40);
+            let k = gen_size(rng, 1, 40);
+            let n = gen_size(rng, 1, 40);
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(k, n, rng);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive(&a, &b);
+            assert_close(got.data(), want.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        for_cases(12, 12, |rng| {
+            let m = gen_size(rng, 1, 30);
+            let k = gen_size(rng, 1, 30);
+            let n = gen_size(rng, 1, 30);
+            let a = Mat::randn(k, m, rng);
+            let b = Mat::randn(k, n, rng);
+            let got = matmul_tn(&a, &b).unwrap();
+            let want = naive(&a.transpose(), &b);
+            assert_close(got.data(), want.data(), 1e-12);
+
+            let a2 = Mat::randn(m, k, rng);
+            let b2 = Mat::randn(n, k, rng);
+            let got2 = matmul_nt(&a2, &b2).unwrap();
+            let want2 = naive(&a2, &b2.transpose());
+            assert_close(got2.data(), want2.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn syrk_matches_gemm() {
+        for_cases(13, 10, |rng| {
+            let k = gen_size(rng, 1, 25);
+            let m = gen_size(rng, 1, 25);
+            let a = Mat::randn(k, m, rng);
+            let got = syrk_tn(&a);
+            let want = matmul_tn(&a, &a).unwrap();
+            assert_close(got.data(), want.data(), 1e-12);
+            let got2 = syrk_nt(&a);
+            let want2 = matmul_nt(&a, &a).unwrap();
+            assert_close(got2.data(), want2.data(), 1e-12);
+        });
+    }
+
+    #[test]
+    fn quad_form_matches_products() {
+        for_cases(14, 10, |rng| {
+            let m = gen_size(rng, 1, 20);
+            let n = gen_size(rng, 1, 20);
+            let mm = Mat::randn(m, n, rng);
+            let x: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let got = quad_form(&x, &mm, &y);
+            let want = dot(&x, &mm.matvec(&y).unwrap());
+            assert!((got - want).abs() < 1e-10 * (1.0 + want.abs()));
+        });
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul_tn(&a, &Mat::zeros(3, 2)).is_err());
+        assert!(matmul_nt(&a, &Mat::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn empty_dimensions() {
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 2);
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!((c.rows(), c.cols()), (0, 2));
+        let d = matmul(&Mat::zeros(2, 0), &Mat::zeros(0, 4)).unwrap();
+        assert_eq!((d.rows(), d.cols()), (2, 4));
+        assert!(d.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Pcg64::new(15);
+        let a = Mat::randn(17, 17, &mut rng);
+        let i = Mat::identity(17);
+        assert!(matmul(&a, &i).unwrap().max_abs_diff(&a) < 1e-14);
+        assert!(matmul(&i, &a).unwrap().max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn large_blocked_path_consistent() {
+        // Exercise multiple KC/NC panels.
+        let mut rng = Pcg64::new(16);
+        let a = Mat::randn(70, 300, &mut rng);
+        let b = Mat::randn(300, 150, &mut rng);
+        let got = matmul(&a, &b).unwrap();
+        let want = naive(&a, &b);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+}

@@ -1,0 +1,475 @@
+//! Dense row-major matrix type used throughout the library.
+//!
+//! `Mat` owns a `Vec<f64>` in row-major order. It is deliberately plain —
+//! no lifetimes/views — because the GP algorithms here are dominated by
+//! O(n³) factorizations and O(n²·d) kernel evaluations; the occasional
+//! O(n²) copy for a gather is noise (verified in §Perf) and keeps every
+//! call site simple and safe.
+
+use std::fmt;
+
+use crate::util::error::{shape_err, Result};
+use crate::util::rng::Pcg64;
+
+/// Dense row-major matrix of f64.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>11.4} ", self.get(i, j))?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "…" } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    // ----- constructors -----
+
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f64) -> Mat {
+        Mat { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec: data length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(v: &[f64]) -> Mat {
+        Mat { rows: v.len(), cols: 1, data: v.to_vec() }
+    }
+
+    /// Row vector from a slice.
+    pub fn row_vec(v: &[f64]) -> Mat {
+        Mat { rows: 1, cols: v.len(), data: v.to_vec() }
+    }
+
+    /// Matrix of standard normals.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg64) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    // ----- shape + element access -----
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0 || self.cols == 0
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] += v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Column copied out as a Vec.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// A column vector (n×1) as a plain slice.
+    pub fn as_col_slice(&self) -> &[f64] {
+        assert_eq!(self.cols, 1, "as_col_slice on non-column matrix");
+        &self.data
+    }
+
+    // ----- structural ops -----
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on big matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Gather rows by index.
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Contiguous row block [r0, r1).
+    pub fn rows_range(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Sub-block [r0,r1) × [c0,c1).
+    pub fn block(&self, r0: usize, r1: usize, c0: usize, c1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows && c0 <= c1 && c1 <= self.cols);
+        let mut out = Mat::zeros(r1 - r0, c1 - c0);
+        for i in r0..r1 {
+            out.row_mut(i - r0).copy_from_slice(&self.row(i)[c0..c1]);
+        }
+        out
+    }
+
+    /// Write `src` into the block starting at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, src: &Mat) {
+        assert!(r0 + src.rows <= self.rows && c0 + src.cols <= self.cols);
+        for i in 0..src.rows {
+            let dst = &mut self.row_mut(r0 + i)[c0..c0 + src.cols];
+            dst.copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Vertical concatenation.
+    pub fn vstack(blocks: &[&Mat]) -> Result<Mat> {
+        if blocks.is_empty() {
+            return Ok(Mat::zeros(0, 0));
+        }
+        let cols = blocks[0].cols;
+        if blocks.iter().any(|b| b.cols != cols) {
+            return shape_err("vstack: column mismatch");
+        }
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Horizontal concatenation.
+    pub fn hstack(blocks: &[&Mat]) -> Result<Mat> {
+        if blocks.is_empty() {
+            return Ok(Mat::zeros(0, 0));
+        }
+        let rows = blocks[0].rows;
+        if blocks.iter().any(|b| b.rows != rows) {
+            return shape_err("hstack: row mismatch");
+        }
+        let cols = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut c0 = 0;
+        for b in blocks {
+            out.set_block(0, c0, b);
+            c0 += b.cols;
+        }
+        Ok(out)
+    }
+
+    // ----- arithmetic -----
+
+    pub fn add(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return shape_err(format!(
+                "add: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            ));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    pub fn sub(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return shape_err(format!(
+                "sub: {}x{} vs {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            ));
+        }
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|x| x * s).collect() }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return shape_err("axpy: shape mismatch");
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Add `v` to every diagonal element.
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self.get(i, i)).collect()
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.diag().iter().sum()
+    }
+
+    /// Matrix product (delegates to the blocked GEMM).
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        crate::linalg::gemm::matmul(self, other)
+    }
+
+    /// `selfᵀ · other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Result<Mat> {
+        crate::linalg::gemm::matmul_tn(self, other)
+    }
+
+    /// `self · otherᵀ` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Result<Mat> {
+        crate::linalg::gemm::matmul_nt(self, other)
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        if v.len() != self.cols {
+            return shape_err(format!("matvec: {}x{} by {}", self.rows, self.cols, v.len()));
+        }
+        let mut out = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(v) {
+                acc += a * b;
+            }
+            out[i] = acc;
+        }
+        Ok(out)
+    }
+
+    // ----- reductions / norms -----
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0_f64, |m, x| m.max(x.abs()))
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0_f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+
+    /// Symmetrize in place: `self = (self + selfᵀ)/2` (numerical hygiene
+    /// after chains of products that are symmetric in exact arithmetic).
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let avg = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = avg;
+                self.data[j * n + i] = avg;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_access() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(m.col(2), vec![2.0, 5.0]);
+        let i3 = Mat::identity(3);
+        assert_eq!(i3.trace(), 3.0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::randn(37, 53, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 53);
+        assert_eq!(t.get(10, 20), m.get(20, 10));
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn blocks_and_stacking() {
+        let m = Mat::from_fn(4, 4, |i, j| (i * 4 + j) as f64);
+        let b = m.block(1, 3, 2, 4);
+        assert_eq!(b.row(0), &[6.0, 7.0]);
+        assert_eq!(b.row(1), &[10.0, 11.0]);
+        let top = m.rows_range(0, 2);
+        let bot = m.rows_range(2, 4);
+        let v = Mat::vstack(&[&top, &bot]).unwrap();
+        assert_eq!(v, m);
+        let left = m.block(0, 4, 0, 2);
+        let right = m.block(0, 4, 2, 4);
+        let h = Mat::hstack(&[&left, &right]).unwrap();
+        assert_eq!(h, m);
+    }
+
+    #[test]
+    fn set_block_writes() {
+        let mut m = Mat::zeros(3, 3);
+        m.set_block(1, 1, &Mat::filled(2, 2, 7.0));
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(1, 1), 7.0);
+        assert_eq!(m.get(2, 2), 7.0);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Mat::filled(2, 2, 1.0);
+        let b = Mat::filled(2, 2, 2.0);
+        assert_eq!(a.add(&b).unwrap(), Mat::filled(2, 2, 3.0));
+        assert_eq!(b.sub(&a).unwrap(), Mat::filled(2, 2, 1.0));
+        assert_eq!(a.scale(5.0), Mat::filled(2, 2, 5.0));
+        let mut c = a.clone();
+        c.axpy(2.0, &b).unwrap();
+        assert_eq!(c, Mat::filled(2, 2, 5.0));
+        assert!(a.add(&Mat::zeros(3, 2)).is_err());
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::randn(5, 7, &mut rng);
+        let v = rng.normal_vec(7);
+        let got = m.matvec(&v).unwrap();
+        let want = m.matmul(&Mat::col_vec(&v)).unwrap();
+        for i in 0..5 {
+            assert!((got[i] - want.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn select_rows_gathers() {
+        let m = Mat::from_fn(5, 2, |i, _| i as f64);
+        let s = m.select_rows(&[4, 0, 2]);
+        assert_eq!(s.col(0), vec![4.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let mut rng = Pcg64::new(3);
+        let mut m = Mat::randn(6, 6, &mut rng);
+        m.symmetrize();
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(m.get(i, j), m.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn add_diag_and_trace() {
+        let mut m = Mat::zeros(3, 3);
+        m.add_diag(2.5);
+        assert_eq!(m.trace(), 7.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Dense linear algebra substrate, written from scratch for the offline
+//! build: row-major matrices, blocked GEMM with a register microkernel,
+//! Cholesky factorization + triangular solves, a Jacobi symmetric
+//! eigensolver (for MDS), and block-banded helpers matching the
+//! Asif–Moura structure the paper's Proposition 1 / Lemma 1 rely on.
+
+pub mod matrix;
+pub mod gemm;
+pub mod chol;
+pub mod eig;
+pub mod banded;
+pub mod solve;

@@ -1,0 +1,101 @@
+//! Higher-level solve helpers built on Cholesky: symmetric-product
+//! utilities and regularized least squares (used by SSGP's linear-model
+//! posterior and by the hyperparameter optimizer's line probes).
+
+use crate::linalg::chol::{cholesky_jittered, CholFactor};
+use crate::linalg::gemm;
+use crate::linalg::matrix::Mat;
+use crate::util::error::Result;
+
+/// Default jitter schedule for GP Gram matrices: start at 1e-10·scale and
+/// give up at 1e-2·scale, where scale is the mean diagonal.
+pub fn gp_cholesky(a: &Mat) -> Result<(CholFactor, f64)> {
+    let n = a.rows().max(1);
+    let scale = (a.trace() / n as f64).abs().max(1e-12);
+    cholesky_jittered(a, 1e-10 * scale, 1e-2 * scale)
+}
+
+/// Compute Bᵀ·A⁻¹·B for SPD A via one factorization and a half-solve
+/// (V = L⁻¹B, result = VᵀV — symmetric by construction).
+pub fn t_ainv_b(a: &Mat, b: &Mat) -> Result<Mat> {
+    let (f, _) = gp_cholesky(a)?;
+    let v = f.half_solve(b)?;
+    Ok(gemm::syrk_tn(&v))
+}
+
+/// Compute Cᵀ·A⁻¹·B for SPD A (C and B sharing A's dimension).
+pub fn c_ainv_b(a: &Mat, c: &Mat, b: &Mat) -> Result<Mat> {
+    let (f, _) = gp_cholesky(a)?;
+    let vc = f.half_solve(c)?;
+    let vb = f.half_solve(b)?;
+    vc.t_matmul(&vb)
+}
+
+/// Solve the ridge system (AᵀA + λI)·x = Aᵀ·y (normal equations), used by
+/// SSGP's feature-space posterior.
+pub fn ridge_solve(a: &Mat, y: &[f64], lambda: f64) -> Result<Vec<f64>> {
+    let mut gram = gemm::syrk_tn(a);
+    gram.add_diag(lambda);
+    let rhs = a.transpose().matvec(y)?;
+    let (f, _) = gp_cholesky(&gram)?;
+    f.solve_vec(&rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{assert_close, for_cases, gen_size, gen_spd};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn t_ainv_b_matches_explicit() {
+        for_cases(51, 10, |rng| {
+            let n = gen_size(rng, 2, 25);
+            let k = gen_size(rng, 1, 8);
+            let a = Mat::from_vec(n, n, gen_spd(rng, n));
+            let b = Mat::randn(n, k, rng);
+            let got = t_ainv_b(&a, &b).unwrap();
+            let ainv_b = crate::linalg::chol::spd_solve_mat(&a, &b).unwrap();
+            let want = b.t_matmul(&ainv_b).unwrap();
+            assert_close(got.data(), want.data(), 1e-7);
+            // Symmetric by construction.
+            assert!(got.max_abs_diff(&got.transpose()) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn c_ainv_b_matches_explicit() {
+        for_cases(52, 10, |rng| {
+            let n = gen_size(rng, 2, 20);
+            let a = Mat::from_vec(n, n, gen_spd(rng, n));
+            let c = Mat::randn(n, 3, rng);
+            let b = Mat::randn(n, 4, rng);
+            let got = c_ainv_b(&a, &c, &b).unwrap();
+            let ainv_b = crate::linalg::chol::spd_solve_mat(&a, &b).unwrap();
+            let want = c.t_matmul(&ainv_b).unwrap();
+            assert_close(got.data(), want.data(), 1e-7);
+        });
+    }
+
+    #[test]
+    fn ridge_shrinks_toward_zero() {
+        let mut rng = Pcg64::new(53);
+        let a = Mat::randn(40, 5, &mut rng);
+        let y = rng.normal_vec(40);
+        let x_small = ridge_solve(&a, &y, 1e-8).unwrap();
+        let x_big = ridge_solve(&a, &y, 1e6).unwrap();
+        let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!(norm(&x_big) < norm(&x_small));
+        assert!(norm(&x_big) < 1e-3);
+    }
+
+    #[test]
+    fn gp_cholesky_scales_jitter() {
+        // A barely-PSD matrix at large scale still factorizes.
+        let v = Mat::col_vec(&[1e4, 2e4, 3e4]);
+        let a = v.matmul_t(&v).unwrap();
+        let (f, jitter) = gp_cholesky(&a).unwrap();
+        assert!(jitter > 0.0);
+        assert_eq!(f.n(), 3);
+    }
+}

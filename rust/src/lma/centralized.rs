@@ -1,0 +1,200 @@
+//! Centralized (single-machine) LMA regression — the public entry point
+//! [`LmaRegressor`], wiring partition → residual machinery → Appendix-C
+//! sweep → Definitions 1–2 → Theorem 2, with phase-level timing so the
+//! experiment tables can report the incurred-time breakdown.
+
+use crate::config::LmaConfig;
+use crate::gp::Prediction;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::matrix::Mat;
+use crate::lma::predict::scatter;
+use crate::lma::residual::LmaFitCore;
+use crate::lma::summary::{local_terms, reduce, sigma_bar_du, LocalTerms};
+use crate::lma::sweep::{rbar_du, TestSide};
+use crate::util::error::Result;
+use crate::util::timer::PhaseProfiler;
+
+/// Centralized LMA regressor (Remark 2's sequential complexity:
+/// O(|D||S|² + B|D|(B|D|/M)² + |U||D|(|S| + B|D|/M))).
+pub struct LmaRegressor {
+    core: LmaFitCore,
+    profiler: PhaseProfiler,
+}
+
+impl LmaRegressor {
+    /// Fit on training data. Performs support-set selection, partitioning,
+    /// the in-band residual factorizations and the Definition-1 local
+    /// state that does not depend on test inputs.
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+    ) -> Result<LmaRegressor> {
+        let mut profiler = PhaseProfiler::new();
+        let core = profiler.scope("fit/core", || LmaFitCore::fit(train_x, train_y, hyp, cfg))?;
+        Ok(LmaRegressor { core, profiler })
+    }
+
+    pub fn core(&self) -> &LmaFitCore {
+        &self.core
+    }
+
+    pub fn config(&self) -> &LmaConfig {
+        &self.core.cfg
+    }
+
+    /// Phase-time breakdown accumulated so far.
+    pub fn profiler(&self) -> &PhaseProfiler {
+        &self.profiler
+    }
+
+    /// Predict at `test_x` (marginal variances only).
+    pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
+        self.predict_opts(test_x, false).map(|(p, _)| p)
+    }
+
+    /// Predict with options; returns the prediction and the phase profile
+    /// of this call.
+    pub fn predict_opts(&self, test_x: &Mat, full_cov: bool) -> Result<(Prediction, PhaseProfiler)> {
+        let mut prof = PhaseProfiler::new();
+        let ts = prof.scope("predict/test_side", || TestSide::build(&self.core, test_x))?;
+        let rbar = prof.scope("predict/sweep_rbar_du", || rbar_du(&self.core, &ts))?;
+        let sbar = prof.scope("predict/sigma_bar", || sigma_bar_du(&self.core, &ts, &rbar))?;
+        let terms: Result<Vec<LocalTerms>> = prof.scope("predict/local_summaries", || {
+            (0..self.core.m())
+                .map(|m| local_terms(&self.core, &sbar, m, full_cov))
+                .collect()
+        });
+        let terms = terms?;
+        let g = prof.scope("predict/global_summary", || reduce(&self.core, &terms, ts.total()))?;
+        let pred = prof.scope("predict/theorem2", || {
+            crate::lma::predict::predict_from_summary_cov(
+                &self.core,
+                &ts,
+                &g,
+                if full_cov { Some(&rbar) } else { None },
+            )
+        })?;
+        Ok((scatter(&ts, pred), prof))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+    use crate::gp::fgp::FgpRegressor;
+    use crate::metrics::rmse;
+    use crate::util::rng::Pcg64;
+
+    fn sine_data(rng: &mut Pcg64, n: usize, noise: f64) -> (Mat, Vec<f64>, SeArdHyper) {
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, noise.max(0.05));
+        let x = Mat::col_vec(&rng.uniform_vec(n, -5.0, 5.0));
+        let y: Vec<f64> =
+            (0..n).map(|i| x.get(i, 0).sin() + noise * rng.normal()).collect();
+        (x, y, hyp)
+    }
+
+    fn cfg(m: usize, b: usize, s: usize, seed: u64) -> LmaConfig {
+        LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: s,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 10 },
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn close_to_fgp_on_smooth_function() {
+        let mut rng = Pcg64::new(151);
+        let (x, y, hyp) = sine_data(&mut rng, 200, 0.05);
+        let test = Mat::col_vec(&rng.uniform_vec(50, -4.5, 4.5));
+        let truth: Vec<f64> = test.col(0).iter().map(|v| v.sin()).collect();
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&test).unwrap();
+        let lma = LmaRegressor::fit(&x, &y, &hyp, &cfg(6, 1, 32, 1))
+            .unwrap()
+            .predict(&test)
+            .unwrap();
+        let r_fgp = rmse(&fgp.mean, &truth);
+        let r_lma = rmse(&lma.mean, &truth);
+        assert!(r_lma < r_fgp * 1.7 + 0.02, "LMA {r_lma} vs FGP {r_fgp}");
+        // Predictions agree pointwise to a modest tolerance.
+        let max_gap = fgp
+            .mean
+            .iter()
+            .zip(&lma.mean)
+            .fold(0.0_f64, |a, (f, l)| a.max((f - l).abs()));
+        assert!(max_gap < 0.3, "max pointwise gap {max_gap}");
+    }
+
+    #[test]
+    fn exactly_fgp_at_full_markov_order() {
+        // B = M−1 ⇒ LMA = FGP (the spectrum's right endpoint) regardless
+        // of support size.
+        let mut rng = Pcg64::new(152);
+        let (x, y, hyp) = sine_data(&mut rng, 120, 0.1);
+        let test = Mat::col_vec(&rng.uniform_vec(25, -4.0, 4.0));
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&test).unwrap();
+        let lma = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 3, 8, 2))
+            .unwrap()
+            .predict(&test)
+            .unwrap();
+        for (f, l) in fgp.mean.iter().zip(&lma.mean) {
+            assert!((f - l).abs() < 5e-4, "{f} vs {l}");
+        }
+        for (f, l) in fgp.var.iter().zip(&lma.var) {
+            assert!((f - l).abs() < 5e-4, "{f} vs {l}");
+        }
+    }
+
+    #[test]
+    fn variance_nonnegative_and_bounded_by_prior() {
+        let mut rng = Pcg64::new(153);
+        let (x, y, hyp) = sine_data(&mut rng, 150, 0.1);
+        let test = Mat::col_vec(&rng.uniform_vec(40, -8.0, 8.0)); // incl. extrapolation
+        let lma = LmaRegressor::fit(&x, &y, &hyp, &cfg(5, 2, 24, 3))
+            .unwrap()
+            .predict(&test)
+            .unwrap();
+        let prior = hyp.sigma_s2 + hyp.sigma_n2;
+        for &v in &lma.var {
+            assert!(v >= 0.0);
+            assert!(v <= prior * 1.05, "var {v} above prior {prior}");
+        }
+    }
+
+    #[test]
+    fn increasing_b_improves_fgp_agreement() {
+        let mut rng = Pcg64::new(154);
+        let (x, y, hyp) = sine_data(&mut rng, 160, 0.05);
+        let test = Mat::col_vec(&rng.uniform_vec(30, -4.0, 4.0));
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&test).unwrap();
+        let gap = |b: usize| -> f64 {
+            let p = LmaRegressor::fit(&x, &y, &hyp, &cfg(8, b, 8, 4))
+                .unwrap()
+                .predict(&test)
+                .unwrap();
+            rmse(&p.mean, &fgp.mean)
+        };
+        let g0 = gap(0);
+        let g3 = gap(3);
+        let g7 = gap(7);
+        // Numerically exact up to the Σ_SS jitter path (see SupportBasis).
+        assert!(g7 < 5e-4, "B=M−1 gap {g7}");
+        assert!(g3 <= g0 + 1e-9, "B=3 gap {g3} vs B=0 gap {g0}");
+    }
+
+    #[test]
+    fn profiler_reports_phases() {
+        let mut rng = Pcg64::new(155);
+        let (x, y, hyp) = sine_data(&mut rng, 80, 0.1);
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 16, 5)).unwrap();
+        let (_p, prof) = model.predict_opts(&Mat::col_vec(&[0.5, 1.0]), false).unwrap();
+        assert!(prof.total("predict/sweep_rbar_du") >= 0.0);
+        assert!(prof.grand_total() > 0.0);
+        assert!(model.profiler().total("fit/core") > 0.0);
+    }
+}

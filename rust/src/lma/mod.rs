@@ -1,0 +1,35 @@
+//! Low-rank-cum-Markov approximation (LMA) — the paper's contribution.
+//!
+//! Pipeline (Section 3):
+//!
+//! 1. [`partition`] splits D (and, at predict time, U) into M blocks whose
+//!    outputs are highly correlated, ordered so adjacent block indices are
+//!    spatially adjacent (the Markov chain runs over block indices).
+//! 2. [`residual`] builds the support-set machinery (W = L_SS⁻¹·Σ_SA, so
+//!    Q_AB = W_Aᵀ·W_B), the exact in-band residual blocks R_{D_m D_n}
+//!    (|m−n| ≤ B), the propagators P_m = R_{D_m D_m^B}·R_{D_m^B D_m^B}⁻¹,
+//!    and the conditional factors C_m = R_mm − P_m·R_{D_m^B D_m} from
+//!    Definition 1.
+//! 3. [`sweep`] materializes R̄_DU by the Appendix-C recursion: the upper
+//!    (n−m>B) side through a rolling (B·|D|/M)×|U| frontier, the lower
+//!    (m−n>B) side through per-row frontiers that walk R̄_DD blocks without
+//!    ever storing the full R̄_DD.
+//! 4. [`summary`] computes local summaries (Definition 1) and reduces them
+//!    into the global summary (Definition 2).
+//! 5. [`predict`] evaluates the Theorem-2 predictive mean/variance.
+//!
+//! [`centralized`] wires 1–5 into [`LmaRegressor`]; `cluster`-backed
+//! parallel execution lives in [`parallel`]; [`spectrum`] provides the
+//! B-sweep utilities and the PIC/FGP-equivalence checks (B=0 / B=M−1).
+
+pub mod partition;
+pub mod residual;
+pub mod sweep;
+pub mod summary;
+pub mod predict;
+pub mod centralized;
+pub mod parallel;
+pub mod spectrum;
+pub mod select;
+
+pub use centralized::LmaRegressor;

@@ -1,0 +1,383 @@
+//! Parallel LMA over the simulated cluster (Remark 1 after Theorem 2 +
+//! Appendix C).
+//!
+//! Rank m owns block m (its training data D_m ∪ D_m^B, per the paper's
+//! storage layout) and, at predict time, its test block U_m. The protocol:
+//!
+//! 1. **Fit** — replicated preprocessing (input scaling, support basis) on
+//!    every rank, partition work divided across ranks, per-block residual
+//!    factorizations on the owning rank.
+//! 2. **Sweep (Appendix C)** — out-of-band R̄ blocks are computed
+//!    diagonal-by-diagonal: at distance δ rank m computes the upper block
+//!    R̄_{D_m U_{m+δ}} from its propagator and the frontier received from
+//!    rank m+1 at distance δ−1; symmetrically rank n computes
+//!    R̄_{U_n D_{n+δ}} and R̄_{D_n D_{n+δ}} and forwards the latter to rank
+//!    n−1. Only a B-diagonal sliding window of R̄_DD is ever alive.
+//! 3. **Summaries** — rank m computes its Definition-1 local terms and
+//!    ships them to the master; the master reduces (Definition 2) and
+//!    broadcasts the per-rank slices; rank m evaluates Theorem 2 for U_m.
+//!
+//! The numbers are bit-identical to the centralized row sweep in
+//! `lma::sweep` (asserted in integration tests); what differs is where
+//! time is charged and what crosses the network.
+
+use crate::cluster::SimCluster;
+use crate::config::{ClusterConfig, LmaConfig};
+use crate::gp::Prediction;
+use crate::kernels::se_ard::{self, SeArdHyper};
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::predict::scatter;
+use crate::lma::residual::{r_cross, LmaFitCore};
+use crate::lma::summary::{local_terms, reduce, sigma_bar_du, LocalTerms};
+use crate::lma::sweep::TestSide;
+use crate::metrics;
+use crate::util::error::{PgprError, Result};
+
+const F64_BYTES: usize = 8;
+
+/// Result of a parallel run: the prediction plus the virtual-time account.
+pub struct ParallelRun {
+    pub prediction: Prediction,
+    /// Simulated parallel incurred time (makespan), seconds.
+    pub parallel_secs: f64,
+    /// Sum of all ranks' compute seconds (≈ the centralized work).
+    pub total_compute_secs: f64,
+    pub messages: usize,
+    pub bytes: usize,
+}
+
+/// Parallel LMA: fit + predict on a simulated cluster. `cfg.num_blocks`
+/// must equal the cluster's total core count (one block per core, as in
+/// the paper's experiments).
+pub struct ParallelLma {
+    core: LmaFitCore,
+    cluster_cfg: ClusterConfig,
+    fit_makespan: f64,
+}
+
+impl ParallelLma {
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+        cluster_cfg: &ClusterConfig,
+    ) -> Result<ParallelLma> {
+        if cfg.num_blocks != cluster_cfg.total_cores() {
+            return Err(PgprError::Config(format!(
+                "parallel LMA: num_blocks {} != cluster cores {}",
+                cfg.num_blocks,
+                cluster_cfg.total_cores()
+            )));
+        }
+        let core = LmaFitCore::fit(train_x, train_y, hyp, cfg)?;
+        // Charge the measured fit phases to the ranks that own them.
+        let mut sim = SimCluster::new(cluster_cfg.clone())?;
+        let p = sim.num_ranks();
+        let t = &core.timings;
+        for r in 0..p {
+            // Replicated preprocessing: every rank scales inputs and
+            // factorizes Σ_SS locally (cheaper than shipping it).
+            sim.charge(r, t.scale_secs / p as f64 + t.basis_secs)?;
+            // Parallelized clustering: each rank handles its shard.
+            sim.charge(r, t.partition_secs / p as f64)?;
+            // Whitened rows for the rank's own block.
+            sim.charge(r, t.wt_secs / p as f64)?;
+            sim.charge(r, t.per_block_secs[r])?;
+        }
+        // In-band residual blocks span neighbours' data: rank m needs
+        // y/X over D_m^B, which the paper pre-places on machine m, so no
+        // fit-time messages beyond the initial data distribution.
+        sim.barrier();
+        Ok(ParallelLma { core, cluster_cfg: cluster_cfg.clone(), fit_makespan: sim.makespan() })
+    }
+
+    pub fn core(&self) -> &LmaFitCore {
+        &self.core
+    }
+
+    pub fn fit_makespan(&self) -> f64 {
+        self.fit_makespan
+    }
+
+    /// Parallel predict. Returns predictions in the caller's test order
+    /// plus the simulated time account (fit makespan included).
+    pub fn predict(&self, test_x: &Mat) -> Result<ParallelRun> {
+        let core = &self.core;
+        let mm = core.m();
+        let b = core.b();
+        let mut sim = SimCluster::new(self.cluster_cfg.clone())?;
+
+        // --- test-side construction: rank n builds U_n's state ---
+        let ts = TestSide::build(core, test_x)?;
+        // Charge: scaling/assignment is tiny and replicated; wt_u and
+        // R'^U_n belong to rank n. We measure by rebuilding per-rank
+        // pieces (cheap relative to the sweep).
+        for n in 0..mm {
+            if ts.size(n) == 0 {
+                continue;
+            }
+            let xn = ts.x_block(n);
+            sim.compute(n, || {
+                let _ = core.basis.wt(&xn);
+            })?;
+            if ts.r_up[n].is_some() {
+                let band = core.part.forward_band(n, b);
+                let xb = core.x_scaled.rows_range(band.start, band.end);
+                let wb = core.wt_d.rows_range(band.start, band.end);
+                let xu = ts.x_block(n);
+                let wu = ts.wt_block(n);
+                sim.compute(n, || {
+                    let r_ub = r_cross(&xu, &wu, &xb, &wb, core.hyp.sigma_s2, None).unwrap();
+                    let bf = core.band_chol[n].as_ref().unwrap();
+                    let _ = bf.solve_mat(&r_ub.transpose());
+                })?;
+            }
+        }
+
+        // --- R̄_DU via the Appendix-C wavefront ---
+        let total_u = ts.total();
+        let mut rbar = Mat::zeros(core.part.total(), total_u);
+
+        // In-band blocks: rank m computes row m's near diagonal.
+        for m in 0..mm {
+            let lo = m.saturating_sub(b);
+            let hi = (m + b).min(mm - 1);
+            let xm = core.x_block(m);
+            let wm = core.wt_block(m);
+            for n in lo..=hi {
+                if ts.size(n) == 0 {
+                    continue;
+                }
+                let xu = ts.x_block(n);
+                let wu = ts.wt_block(n);
+                let blk = sim.compute(m, || {
+                    r_cross(&xm, &wm, &xu, &wu, core.hyp.sigma_s2, None)
+                })??;
+                rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
+            }
+        }
+
+        if b > 0 && mm > b + 1 {
+            // Sliding window of R̄_DD diagonals for the lower side:
+            // dd_window[(n, k)] = R̄_{D_n D_k} for the last B distances.
+            use std::collections::HashMap;
+            let mut dd_window: HashMap<(usize, usize), Mat> = HashMap::new();
+            // Seed with the in-band blocks (distance ≤ B).
+            for n in 0..mm {
+                for k in n..=(n + b).min(mm - 1) {
+                    dd_window.insert((n, k), core.r_in_band(n, k));
+                }
+            }
+
+            for delta in (b + 1)..mm {
+                // Upper side: rank m computes R̄_{D_m U_{m+δ}} from rows
+                // m+1..m+B of R̄_DU (frontier received from rank m+1).
+                for m in 0..(mm - delta) {
+                    let n = m + delta;
+                    if ts.size(n) > 0 {
+                        let band = core.part.forward_band(m, b);
+                        // Frontier bytes: rank m+1 forwards the stacked
+                        // band rows for column block n.
+                        let frontier_elems = band.len() * ts.size(n);
+                        sim.send(m + 1, m, frontier_elems * F64_BYTES)?;
+                        let f = rbar.block(band.start, band.end, ts.starts[n], ts.starts[n + 1]);
+                        let p_m = core.p[m].as_ref().expect("interior propagator");
+                        let blk = sim.compute(m, || p_m.matmul(&f))??;
+                        rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
+                    }
+
+                    // Lower side (symmetric roles): rank m computes
+                    // R̄_{U_m D_{m+δ}} and R̄_{D_m D_{m+δ}} from the DD
+                    // frontier received from rank m+1.
+                    let k = m + delta;
+                    let g_blocks: Vec<&Mat> = ((m + 1)..=(m + b).min(mm - 1))
+                        .map(|j| dd_window.get(&(j, k)).expect("window holds last B diagonals"))
+                        .collect();
+                    let g = Mat::vstack(&g_blocks)?;
+                    sim.send(m + 1, m, g.rows() * g.cols() * F64_BYTES)?;
+                    let p_m = core.p[m].as_ref().expect("interior propagator");
+                    let dd = sim.compute(m, || p_m.matmul(&g))??;
+                    if ts.size(m) > 0 {
+                        let rup = ts.r_up[m].as_ref().expect("r_up for non-empty block");
+                        let ud = sim.compute(m, || rup.matmul(&g))??;
+                        // R̄_{D_k U_m} = (R̄_{U_m D_k})ᵀ — owned by rank k's
+                        // rows; rank m sends it over (Appendix C final
+                        // transpose-communication step).
+                        sim.send(m, k, ud.rows() * ud.cols() * F64_BYTES)?;
+                        rbar.set_block(core.part.range(k).start, ts.starts[m], &ud.transpose());
+                    }
+                    dd_window.insert((m, k), dd);
+                }
+                // Drop diagonals that slid out of the window.
+                if delta >= 2 * b {
+                    let dead = delta - b;
+                    dd_window.retain(|&(n, k), _| k - n != dead);
+                }
+            }
+        }
+
+        // --- Σ̄_DU and local summaries on the owning ranks ---
+        let sbar = sigma_bar_du(core, &ts, &rbar)?;
+        let mut terms: Vec<LocalTerms> = Vec::with_capacity(mm);
+        let mut term_bytes = vec![0usize; mm];
+        for m in 0..mm {
+            let t = sim.compute(m, || local_terms(core, &sbar, m, false))??;
+            term_bytes[m] = crate::lma::summary::local_terms_bytes(&t);
+            terms.push(t);
+        }
+
+        // --- reduce to master, master builds the global summary ---
+        sim.reduce_to_master(&term_bytes)?;
+        let g = sim.compute(0, || reduce(core, &terms, total_u))??;
+
+        // --- master broadcasts per-rank slices; ranks run Theorem 2 ---
+        let s = core.basis.size();
+        let bcast: Vec<usize> = (0..mm)
+            .map(|m| {
+                let um = ts.size(m);
+                F64_BYTES * (s + s * s + um + um * s + um)
+            })
+            .collect();
+        sim.broadcast_from_master(&bcast)?;
+
+        // Each rank factorizes Σ̈_SS and solves for its own slice. The
+        // factorization is identical work on every rank: measure once,
+        // charge everywhere.
+        let (sss_factor, fac_secs) = crate::util::timer::time_it(|| gp_cholesky(&g.sss));
+        let (sss_factor, _jit) = sss_factor?;
+        for m in 0..mm {
+            sim.charge(m, fac_secs)?;
+        }
+        let a = sss_factor.solve_vec(&g.ys)?;
+        let w = sss_factor.half_solve(&g.sus.transpose())?;
+        let prior = se_ard::prior_var(&core.hyp);
+        let mut mean = vec![0.0; total_u];
+        let mut var = vec![0.0; total_u];
+        for m in 0..mm {
+            let r = ts.range(m);
+            if r.is_empty() {
+                continue;
+            }
+            let gy = &g.yu[r.clone()];
+            let out = sim.compute(m, || {
+                let mut mloc = Vec::with_capacity(r.len());
+                let mut vloc = Vec::with_capacity(r.len());
+                for (off, j) in r.clone().enumerate() {
+                    let corr: f64 = (0..s).map(|i| g.sus.get(j, i) * a[i]).sum();
+                    mloc.push(core.hyp.mean + gy[off] - corr);
+                    let wsq: f64 = (0..s).map(|i| w.get(i, j) * w.get(i, j)).sum();
+                    vloc.push((prior - g.suu_diag[j] + wsq).max(0.0));
+                }
+                (mloc, vloc)
+            })?;
+            mean[r.clone()].copy_from_slice(&out.0);
+            var[r].copy_from_slice(&out.1);
+        }
+        sim.barrier();
+
+        let pred = scatter(&ts, Prediction { mean, var, cov: None });
+        let metrics_snapshot = sim.metrics().clone();
+        Ok(ParallelRun {
+            prediction: pred,
+            parallel_secs: self.fit_makespan + sim.makespan(),
+            total_compute_secs: metrics_snapshot.compute_secs.iter().sum::<f64>()
+                + self.fit_makespan,
+            messages: metrics_snapshot.messages,
+            bytes: metrics_snapshot.bytes,
+        })
+    }
+}
+
+/// Convenience: fit + predict + RMSE in one call (experiment harness use).
+pub fn run_parallel_lma(
+    train_x: &Mat,
+    train_y: &[f64],
+    test_x: &Mat,
+    test_y: &[f64],
+    hyp: &SeArdHyper,
+    cfg: &LmaConfig,
+    cluster_cfg: &ClusterConfig,
+) -> Result<(ParallelRun, f64)> {
+    let model = ParallelLma::fit(train_x, train_y, hyp, cfg, cluster_cfg)?;
+    let run = model.predict(test_x)?;
+    let r = metrics::rmse(&run.prediction.mean, test_y);
+    Ok((run, r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+    use crate::lma::LmaRegressor;
+    use crate::util::rng::Pcg64;
+
+    fn setup(n: usize, m: usize, b: usize, seed: u64) -> (Mat, Vec<f64>, Mat, SeArdHyper, LmaConfig) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.8, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -5.0, 5.0));
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).cos() + 0.1 * rng.normal()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(30, -5.0, 5.0));
+        let cfg = LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: 16,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 8 },
+            use_pjrt: false,
+        };
+        (x, y, t, hyp, cfg)
+    }
+
+    #[test]
+    fn parallel_matches_centralized_numbers() {
+        for (m, b) in [(4, 1), (6, 2), (5, 0), (4, 3)] {
+            let (x, y, t, hyp, cfg) = setup(100, m, b, 171);
+            let cc = ClusterConfig::gigabit(m, 1);
+            let par = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap();
+            let run = par.predict(&t).unwrap();
+            let cen = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap().predict(&t).unwrap();
+            for (a, bb) in run.prediction.mean.iter().zip(&cen.mean) {
+                assert!((a - bb).abs() < 1e-8, "M={m} B={b}: mean {a} vs {bb}");
+            }
+            for (a, bb) in run.prediction.var.iter().zip(&cen.var) {
+                assert!((a - bb).abs() < 1e-8, "M={m} B={b}: var {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_size_must_match_blocks() {
+        let (x, y, _t, hyp, cfg) = setup(60, 4, 1, 172);
+        let cc = ClusterConfig::gigabit(2, 1); // 2 cores ≠ 4 blocks
+        assert!(ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).is_err());
+    }
+
+    #[test]
+    fn communication_happens_for_b_positive() {
+        let (x, y, t, hyp, cfg) = setup(100, 5, 1, 173);
+        let cc = ClusterConfig::gigabit(5, 1);
+        let run = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap().predict(&t).unwrap();
+        assert!(run.messages > 0);
+        assert!(run.bytes > 0);
+        assert!(run.parallel_secs > 0.0);
+        // Makespan cannot exceed total compute + all comm.
+        assert!(run.parallel_secs <= run.total_compute_secs + 10.0);
+    }
+
+    #[test]
+    fn parallel_time_less_than_serial_compute_for_balanced_work() {
+        // With M ranks the makespan should be well under the summed
+        // compute (the whole point of parallelizing).
+        let (x, y, t, hyp, cfg) = setup(400, 8, 1, 174);
+        let cc = ClusterConfig::gigabit(8, 1);
+        let run = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap().predict(&t).unwrap();
+        assert!(
+            run.parallel_secs < run.total_compute_secs,
+            "parallel {} !< total {}",
+            run.parallel_secs,
+            run.total_compute_secs
+        );
+    }
+}

@@ -1,0 +1,388 @@
+//! Data partitioning for LMA/PIC (paper footnote 1: "a simple parallelized
+//! clustering scheme employed in the work of Chen et al. (2013)").
+//!
+//! We run k-means on the lengthscale-scaled inputs (so "highly correlated"
+//! = close in the metric the kernel actually uses), repair any empty
+//! cluster by splitting the largest one, and then **order** the clusters
+//! with a greedy nearest-neighbour chain over their centroids. The
+//! ordering matters: LMA's Markov property is over *block indices*, so
+//! adjacent indices must be spatially adjacent for the B-band to capture
+//! the strong residual correlations.
+
+use crate::linalg::matrix::Mat;
+use crate::util::error::{PgprError, Result};
+use crate::util::rng::Pcg64;
+
+/// Result of partitioning a point set into M ordered blocks.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Cluster centroids in the scaled input space, one row per block, in
+    /// block order.
+    pub centers: Mat,
+    /// For each block m, the indices (into the original point set) that it
+    /// owns. All non-empty, disjoint, covering 0..n.
+    pub blocks: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Membership array: point i ↦ block index.
+    pub fn assignment(&self, n: usize) -> Vec<usize> {
+        let mut a = vec![usize::MAX; n];
+        for (m, blk) in self.blocks.iter().enumerate() {
+            for &i in blk {
+                a[i] = m;
+            }
+        }
+        a
+    }
+
+    /// Assign new (scaled) points to the nearest block centroid — how test
+    /// inputs U are routed to blocks U_m at predict time.
+    pub fn assign_points(&self, xs_scaled: &Mat) -> Vec<Vec<usize>> {
+        let m = self.num_blocks();
+        let mut blocks = vec![Vec::new(); m];
+        for i in 0..xs_scaled.rows() {
+            blocks[nearest_center(&self.centers, xs_scaled.row(i))].push(i);
+        }
+        blocks
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn nearest_center(centers: &Mat, p: &[f64]) -> usize {
+    let mut best = 0;
+    let mut bd = f64::INFINITY;
+    for c in 0..centers.rows() {
+        let d = dist2(centers.row(c), p);
+        if d < bd {
+            bd = d;
+            best = c;
+        }
+    }
+    best
+}
+
+/// k-means partition of `xs_scaled` into exactly `m` non-empty blocks,
+/// ordered by a greedy nearest-neighbour chain over centroids.
+pub fn kmeans_partition(
+    xs_scaled: &Mat,
+    m: usize,
+    iters: usize,
+    rng: &mut Pcg64,
+) -> Result<Partition> {
+    let n = xs_scaled.rows();
+    if m == 0 || n < m {
+        return Err(PgprError::Config(format!("kmeans: cannot make {m} blocks from {n} points")));
+    }
+    let d = xs_scaled.cols();
+
+    // k-means++ style seeding: first center uniform, rest d²-weighted.
+    let mut centers = Mat::zeros(m, d);
+    let first = rng.below(n);
+    centers.row_mut(0).copy_from_slice(xs_scaled.row(first));
+    let mut min_d2: Vec<f64> = (0..n).map(|i| dist2(xs_scaled.row(i), centers.row(0))).collect();
+    for c in 1..m {
+        let total: f64 = min_d2.iter().sum();
+        let pick = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut chosen = n - 1;
+            for (i, &w) in min_d2.iter().enumerate() {
+                target -= w;
+                if target <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        };
+        centers.row_mut(c).copy_from_slice(xs_scaled.row(pick));
+        for i in 0..n {
+            let dd = dist2(xs_scaled.row(i), centers.row(c));
+            if dd < min_d2[i] {
+                min_d2[i] = dd;
+            }
+        }
+    }
+
+    // Lloyd iterations.
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters.max(1) {
+        let mut changed = false;
+        for i in 0..n {
+            let c = nearest_center(&centers, xs_scaled.row(i));
+            if c != assign[i] {
+                assign[i] = c;
+                changed = true;
+            }
+        }
+        // Recompute centroids.
+        let mut counts = vec![0usize; m];
+        let mut sums = Mat::zeros(m, d);
+        for i in 0..n {
+            counts[assign[i]] += 1;
+            for (s, x) in sums.row_mut(assign[i]).iter_mut().zip(xs_scaled.row(i)) {
+                *s += x;
+            }
+        }
+        for c in 0..m {
+            if counts[c] > 0 {
+                let inv = 1.0 / counts[c] as f64;
+                for v in centers.row_mut(c).iter_mut() {
+                    *v = 0.0;
+                }
+                for (cv, sv) in centers.row_mut(c).iter_mut().zip(sums.row(c)) {
+                    *cv = sv * inv;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // Final assignment against final centroids.
+    for i in 0..n {
+        assign[i] = nearest_center(&centers, xs_scaled.row(i));
+    }
+
+    let mut blocks: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (i, &c) in assign.iter().enumerate() {
+        blocks[c].push(i);
+    }
+
+    // Repair empty clusters: move the farthest point of the largest block.
+    loop {
+        let empty = match blocks.iter().position(|b| b.is_empty()) {
+            Some(e) => e,
+            None => break,
+        };
+        let donor = (0..m).max_by_key(|&c| blocks[c].len()).unwrap();
+        if blocks[donor].len() <= 1 {
+            return Err(PgprError::Config("kmeans: cannot repair empty cluster".into()));
+        }
+        // Farthest-from-centroid point of the donor.
+        let (pos, _) = blocks[donor]
+            .iter()
+            .enumerate()
+            .map(|(pos, &i)| (pos, dist2(xs_scaled.row(i), centers.row(donor))))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let moved = blocks[donor].swap_remove(pos);
+        centers.row_mut(empty).copy_from_slice(xs_scaled.row(moved));
+        blocks[empty].push(moved);
+    }
+
+    order_blocks(xs_scaled, centers, blocks)
+}
+
+/// Centroids of the given blocks in the scaled input space.
+fn centroids(xs_scaled: &Mat, blocks: &[Vec<usize>]) -> Mat {
+    let d = xs_scaled.cols();
+    let mut centers = Mat::zeros(blocks.len(), d);
+    for (m, blk) in blocks.iter().enumerate() {
+        let inv = 1.0 / blk.len().max(1) as f64;
+        for &i in blk {
+            for (c, x) in centers.row_mut(m).iter_mut().zip(xs_scaled.row(i)) {
+                *c += x * inv;
+            }
+        }
+    }
+    centers
+}
+
+/// Contiguous partition in index order (1-D demos / tests): block m gets
+/// the m-th slice of the index range. Centroids are computed so test
+/// routing still works.
+pub fn contiguous_partition(xs_scaled: &Mat, m: usize) -> Result<Partition> {
+    let n = xs_scaled.rows();
+    let part = crate::linalg::banded::BlockPartition::even(n, m)?;
+    let blocks: Vec<Vec<usize>> = (0..m).map(|b| part.range(b).collect()).collect();
+    Ok(Partition { centers: centroids(xs_scaled, &blocks), blocks })
+}
+
+/// Random assignment (ablation baseline; intentionally ignores locality).
+pub fn random_partition(xs_scaled: &Mat, m: usize, rng: &mut Pcg64) -> Result<Partition> {
+    let n = xs_scaled.rows();
+    if n < m {
+        return Err(PgprError::Config(format!("random: {n} points < {m} blocks")));
+    }
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let part = crate::linalg::banded::BlockPartition::even(n, m)?;
+    let blocks: Vec<Vec<usize>> =
+        (0..m).map(|b| part.range(b).map(|i| idx[i]).collect()).collect();
+    Ok(Partition { centers: centroids(xs_scaled, &blocks), blocks })
+}
+
+/// Order blocks with a greedy nearest-neighbour chain over centroids,
+/// starting from the centroid most distant from the global mean (an
+/// extremal endpoint, so the chain runs "end to end" rather than starting
+/// in the middle).
+fn order_blocks(xs_scaled: &Mat, centers: Mat, blocks: Vec<Vec<usize>>) -> Result<Partition> {
+    let m = blocks.len();
+    if m <= 2 {
+        return Ok(Partition { centers, blocks });
+    }
+    let d = centers.cols();
+    let mut mean = vec![0.0; d];
+    for i in 0..xs_scaled.rows() {
+        for (mv, xv) in mean.iter_mut().zip(xs_scaled.row(i)) {
+            *mv += xv / xs_scaled.rows() as f64;
+        }
+    }
+    let start = (0..m)
+        .max_by(|&a, &b| {
+            dist2(centers.row(a), &mean)
+                .partial_cmp(&dist2(centers.row(b), &mean))
+                .unwrap()
+        })
+        .unwrap();
+    let mut order = vec![start];
+    let mut used = vec![false; m];
+    used[start] = true;
+    while order.len() < m {
+        let last = *order.last().unwrap();
+        let next = (0..m)
+            .filter(|&c| !used[c])
+            .min_by(|&a, &b| {
+                dist2(centers.row(a), centers.row(last))
+                    .partial_cmp(&dist2(centers.row(b), centers.row(last)))
+                    .unwrap()
+            })
+            .unwrap();
+        used[next] = true;
+        order.push(next);
+    }
+    let mut new_centers = Mat::zeros(m, d);
+    let mut new_blocks = Vec::with_capacity(m);
+    for (newi, &oldi) in order.iter().enumerate() {
+        new_centers.row_mut(newi).copy_from_slice(centers.row(oldi));
+        new_blocks.push(blocks[oldi].clone());
+    }
+    Ok(Partition { centers: new_centers, blocks: new_blocks })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{for_cases, gen_size};
+
+    fn check_is_partition(p: &Partition, n: usize) {
+        let mut seen = vec![false; n];
+        for blk in &p.blocks {
+            assert!(!blk.is_empty(), "empty block");
+            for &i in blk {
+                assert!(i < n);
+                assert!(!seen[i], "index {i} in two blocks");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some index unassigned");
+    }
+
+    #[test]
+    fn kmeans_is_a_partition() {
+        for_cases(101, 10, |rng| {
+            let n = gen_size(rng, 10, 300);
+            let m = gen_size(rng, 1, n.min(12));
+            let xs = Mat::randn(n, 2, rng);
+            let p = kmeans_partition(&xs, m, 8, rng).unwrap();
+            assert_eq!(p.num_blocks(), m);
+            check_is_partition(&p, n);
+        });
+    }
+
+    #[test]
+    fn kmeans_separates_obvious_clusters() {
+        let mut rng = Pcg64::new(102);
+        // Two well-separated blobs.
+        let mut xs = Mat::zeros(40, 1);
+        for i in 0..20 {
+            xs.set(i, 0, rng.normal() * 0.1);
+        }
+        for i in 20..40 {
+            xs.set(i, 0, 100.0 + rng.normal() * 0.1);
+        }
+        let p = kmeans_partition(&xs, 2, 10, &mut rng).unwrap();
+        for blk in &p.blocks {
+            let first_side = xs.get(blk[0], 0) > 50.0;
+            assert!(blk.iter().all(|&i| (xs.get(i, 0) > 50.0) == first_side));
+        }
+    }
+
+    #[test]
+    fn chain_ordering_is_monotone_on_a_line() {
+        let mut rng = Pcg64::new(103);
+        // Points along a 1-D line: ordered centroids must be monotone.
+        let xs = Mat::col_vec(&(0..200).map(|i| i as f64 / 10.0).collect::<Vec<_>>());
+        let p = kmeans_partition(&xs, 8, 20, &mut rng).unwrap();
+        let cs: Vec<f64> = (0..8).map(|c| p.centers.get(c, 0)).collect();
+        let inc = cs.windows(2).all(|w| w[0] < w[1]);
+        let dec = cs.windows(2).all(|w| w[0] > w[1]);
+        assert!(inc || dec, "centers not monotone: {cs:?}");
+    }
+
+    #[test]
+    fn assign_points_routes_to_nearest() {
+        let mut rng = Pcg64::new(104);
+        let xs = Mat::col_vec(&(0..100).map(|i| i as f64).collect::<Vec<_>>());
+        let p = kmeans_partition(&xs, 4, 20, &mut rng).unwrap();
+        let tests = Mat::col_vec(&[0.0, 99.0]);
+        let routed = p.assign_points(&tests);
+        // The two extreme test points must land in different blocks.
+        let b0 = routed.iter().position(|b| b.contains(&0)).unwrap();
+        let b1 = routed.iter().position(|b| b.contains(&1)).unwrap();
+        assert_ne!(b0, b1);
+    }
+
+    #[test]
+    fn contiguous_and_random_are_partitions() {
+        for_cases(105, 8, |rng| {
+            let n = gen_size(rng, 8, 100);
+            let m = gen_size(rng, 1, 8);
+            let xs = Mat::randn(n, 2, rng);
+            let c = contiguous_partition(&xs, m).unwrap();
+            check_is_partition(&c, n);
+            // Contiguous blocks are intervals.
+            for blk in &c.blocks {
+                for w in blk.windows(2) {
+                    assert_eq!(w[1], w[0] + 1);
+                }
+            }
+            // Centroids exist so test routing works.
+            assert_eq!(c.centers.rows(), m);
+            assert_eq!(c.centers.cols(), 2);
+            let r = random_partition(&xs, m, rng).unwrap();
+            check_is_partition(&r, n);
+        });
+    }
+
+    #[test]
+    fn rejects_more_blocks_than_points() {
+        let mut rng = Pcg64::new(106);
+        let xs = Mat::randn(3, 2, &mut rng);
+        assert!(kmeans_partition(&xs, 5, 5, &mut rng).is_err());
+        assert!(random_partition(&xs, 5, &mut rng).is_err());
+    }
+
+    #[test]
+    fn assignment_inverse() {
+        let mut rng = Pcg64::new(107);
+        let xs = Mat::randn(50, 3, &mut rng);
+        let p = kmeans_partition(&xs, 5, 5, &mut rng).unwrap();
+        let a = p.assignment(50);
+        for (m, blk) in p.blocks.iter().enumerate() {
+            for &i in blk {
+                assert_eq!(a[i], m);
+            }
+        }
+    }
+}

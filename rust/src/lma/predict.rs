@@ -1,0 +1,213 @@
+//! Theorem-2 predictive equations.
+//!
+//! Given the global summary (Definition 2):
+//!
+//!   μ_U^LMA  = μ_U + ÿ_U − Σ̈_US·Σ̈_SS⁻¹·ÿ_S
+//!   Σ_UU^LMA = Σ_UU − Σ̈_UU + Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ
+//!
+//! The only remaining factorization is the |S|×|S| Cholesky of Σ̈_SS —
+//! this is where the O(|S|³) term of Remark 2 lives.
+
+use crate::gp::Prediction;
+use crate::kernels::se_ard;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::residual::LmaFitCore;
+use crate::lma::summary::GlobalSummary;
+use crate::lma::sweep::TestSide;
+use crate::util::error::Result;
+
+/// Σ̄_UU of equation (2): exact Σ blocks within the B-band, and the
+/// recursion (1) restricted to U rows/columns outside it —
+/// R̄_{U_m U_n} = R'^U_m · R̄_{D_m^B U_n} for n−m > B (transpose for the
+/// lower side), where R̄_{D_m^B U_n} are rows of the already-materialized
+/// R̄_DU. Includes the σ_n² noise diagonal (predicting observables).
+pub fn sigma_bar_uu(core: &LmaFitCore, ts: &TestSide, rbar_du: &Mat) -> Result<Mat> {
+    let mm = core.m();
+    let b = core.b();
+    let nu = ts.total();
+    let mut out = crate::linalg::gemm::matmul_nt(&ts.wt_u, &ts.wt_u)?; // Q_UU
+    for m in 0..mm {
+        if ts.size(m) == 0 {
+            continue;
+        }
+        let xm = ts.x_block(m);
+        let wm = ts.wt_block(m);
+        for n in m..mm {
+            if ts.size(n) == 0 {
+                continue;
+            }
+            let rblk = if n - m <= b {
+                let noise = if n == m { Some(core.hyp.sigma_n2) } else { None };
+                let mut s = se_ard::cov_cross_scaled(&xm, &ts.x_block(n), core.hyp.sigma_s2)?;
+                if let Some(n2) = noise {
+                    s.add_diag(n2);
+                }
+                let q = wm.matmul_t(&ts.wt_block(n))?;
+                s.sub(&q)?
+            } else if b == 0 {
+                Mat::zeros(ts.size(m), ts.size(n))
+            } else {
+                // R̄_{U_m U_n} = R'^U_m · R̄_{D_m^B U_n}.
+                let band = core.part.forward_band(m, b);
+                let rows = rbar_du.block(band.start, band.end, ts.starts[n], ts.starts[n + 1]);
+                let rup = ts.r_up[m].as_ref().expect("interior test block has R'^U");
+                rup.matmul(&rows)?
+            };
+            // Q block is already in `out`; add the residual part.
+            for i in 0..rblk.rows() {
+                for j in 0..rblk.cols() {
+                    let gi = ts.starts[m] + i;
+                    let gj = ts.starts[n] + j;
+                    let v = out.get(gi, gj) + rblk.get(i, j);
+                    out.set(gi, gj, v);
+                    if n != m {
+                        out.set(gj, gi, out.get(gj, gi) + rblk.get(i, j));
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(out.rows(), nu);
+    Ok(out)
+}
+
+/// Evaluate Theorem 2 on a reduced global summary. Output order follows
+/// the *permuted* test layout; [`scatter`] restores the caller's order.
+///
+/// `rbar_du_for_cov` is required when `full_cov` is set: equation (4)'s
+/// leading term is Σ̄_UU (not the exact Σ_UU of the theorem's shorthand),
+/// which needs the materialized R̄_DU — using exact Σ_UU would break the
+/// PSD guarantee of the predictive covariance off the band.
+pub fn predict_from_summary_cov(
+    core: &LmaFitCore,
+    ts: &TestSide,
+    g: &GlobalSummary,
+    rbar_du_for_cov: Option<&Mat>,
+) -> Result<Prediction> {
+    let _full_cov = rbar_du_for_cov.is_some();
+    let total_u = ts.total();
+    let (f, _) = gp_cholesky(&g.sss)?;
+
+    // a = Σ̈_SS⁻¹·ÿ_S
+    let a = f.solve_vec(&g.ys)?;
+    let correction = g.sus.matvec(&a)?;
+    let mean: Vec<f64> = g
+        .yu
+        .iter()
+        .zip(&correction)
+        .map(|(yu, c)| core.hyp.mean + yu - c)
+        .collect();
+
+    // diag of Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ via the half-solve W = L⁻¹·Σ̈_USᵀ.
+    let w = f.half_solve(&g.sus.transpose())?;
+    let mut corr_diag = vec![0.0; total_u];
+    for i in 0..w.rows() {
+        for (d, v) in corr_diag.iter_mut().zip(w.row(i)) {
+            *d += v * v;
+        }
+    }
+    let prior = se_ard::prior_var(&core.hyp);
+    let var: Vec<f64> = (0..total_u)
+        .map(|j| (prior - g.suu_diag[j] + corr_diag[j]).max(0.0))
+        .collect();
+
+    let cov = if let Some(rbar) = rbar_du_for_cov {
+        let suu = g
+            .suu_full
+            .as_ref()
+            .expect("full_cov requires suu_full in the global summary");
+        // Equation (4): Σ̄_UU − Σ̈_UU + Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ.
+        let sigma_uu = sigma_bar_uu(core, ts, rbar)?;
+        let corr = crate::linalg::gemm::syrk_tn(&w);
+        let mut c = sigma_uu.sub(suu)?;
+        c.axpy(1.0, &corr)?;
+        c.symmetrize();
+        Some(c)
+    } else {
+        None
+    };
+
+    Ok(Prediction { mean, var, cov })
+}
+
+/// Back-compat wrapper: marginal-only prediction (no full covariance).
+pub fn predict_from_summary(
+    core: &LmaFitCore,
+    ts: &TestSide,
+    g: &GlobalSummary,
+    full_cov: bool,
+) -> Result<Prediction> {
+    assert!(
+        !full_cov,
+        "use predict_from_summary_cov with the materialized R̄_DU for full covariances"
+    );
+    predict_from_summary_cov(core, ts, g, None)
+}
+
+/// Restore a permuted prediction to the caller's original test order.
+pub fn scatter(ts: &TestSide, pred: Prediction) -> Prediction {
+    let n = pred.mean.len();
+    let mut mean = vec![0.0; n];
+    let mut var = vec![0.0; n];
+    for (permuted, &orig) in ts.perm.iter().enumerate() {
+        mean[orig] = pred.mean[permuted];
+        var[orig] = pred.var[permuted];
+    }
+    let cov = pred.cov.map(|c| {
+        let mut out = Mat::zeros(n, n);
+        for (pi, &oi) in ts.perm.iter().enumerate() {
+            for (pj, &oj) in ts.perm.iter().enumerate() {
+                out.set(oi, oj, c.get(pi, pj));
+            }
+        }
+        out
+    });
+    Prediction { mean, var, cov }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::lma::summary::{local_terms, reduce, sigma_bar_du};
+    use crate::lma::sweep::rbar_du;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn scatter_inverts_permutation() {
+        let mut rng = Pcg64::new(141);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(60, -3.0, 3.0));
+        let y: Vec<f64> = (0..60).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: 1,
+            support_size: 12,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        let core = crate::lma::residual::LmaFitCore::fit(&x, &y, &hyp, &cfg).unwrap();
+        let test = Mat::col_vec(&rng.uniform_vec(15, -3.0, 3.0));
+        let ts = TestSide::build(&core, &test).unwrap();
+        let rb = rbar_du(&core, &ts).unwrap();
+        let sbar = sigma_bar_du(&core, &ts, &rb).unwrap();
+        let terms: Vec<_> =
+            (0..4).map(|m| local_terms(&core, &sbar, m, true).unwrap()).collect();
+        let g = reduce(&core, &terms, ts.total()).unwrap();
+        let p = predict_from_summary_cov(&core, &ts, &g, Some(&rb)).unwrap();
+        let s = scatter(&ts, p.clone());
+        // Each original index must carry the value from its permuted slot.
+        for (pi, &oi) in ts.perm.iter().enumerate() {
+            assert_eq!(s.mean[oi], p.mean[pi]);
+            assert_eq!(s.var[oi], p.var[pi]);
+        }
+        // Scattered covariance diagonal consistent with variance clamping.
+        let cov = s.cov.unwrap();
+        for i in 0..15 {
+            assert!((cov.get(i, i).max(0.0) - s.var[i]).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,557 @@
+//! Support-set basis and residual-process machinery (Section 3).
+//!
+//! Everything downstream works with the decomposition
+//! Σ_AB = Q_AB + R_AB, Q_AB = Σ_AS·Σ_SS⁻¹·Σ_SB. We keep the whitened
+//! basis rows Wᵀ_A = (L_SS⁻¹·Σ_SA)ᵀ for every point set A, so
+//! Q_AB = Wᵀ_A·W_B is a plain GEMM and R_AB = Σ_AB − Wᵀ_A·W_B.
+//!
+//! `LmaFitCore::fit` permutes the training data into block order (blocks
+//! are contiguous index ranges from then on), builds the exact in-band
+//! residual blocks R_{D_m D_n} (|m−n| ≤ B), the Cholesky factors of the
+//! band Gram matrices R_{D_m^B D_m^B}, the propagators
+//! P_m = R_{D_m D_m^B}·R_{D_m^B D_m^B}⁻¹ and the conditional factors
+//! C_m = R_mm − P_m·R_{D_m^B D_m} of Definition 1 — every O(·³) piece the
+//! sweeps and summaries reuse.
+
+use crate::config::{LmaConfig, PartitionStrategy};
+use crate::kernels::pjrt_cov::CovBackend;
+use crate::kernels::se_ard::{self, SeArdHyper};
+use crate::linalg::banded::BlockPartition;
+use crate::linalg::chol::CholFactor;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::partition::{self, Partition};
+use crate::util::error::{PgprError, Result};
+use crate::util::rng::Pcg64;
+
+/// Whitened support-set basis shared by LMA/PIC/FITC.
+pub struct SupportBasis {
+    /// Scaled support inputs (|S| × d).
+    pub s_scaled: Mat,
+    /// Cholesky of Σ_SS (noise-free kernel + jitter).
+    pub chol_ss: CholFactor,
+    pub sigma_s2: f64,
+    pub jitter: f64,
+}
+
+impl SupportBasis {
+    /// Build from already-scaled support inputs.
+    ///
+    /// Σ_SS always gets a base jitter of 1e-6·σ_s²: the SE Gram of a
+    /// dense support set is numerically PD but catastrophically
+    /// ill-conditioned (eigenvalues decay super-exponentially), and an
+    /// unregularized L⁻¹ makes Q = WᵀW overshoot Σ — producing residual
+    /// matrices with negative diagonals. The jitter caps the condition
+    /// number at ~1e6 while leaving R = Σ − Q positive definite (a larger
+    /// jitter only shrinks Q). This is the same failure mode the paper
+    /// reports as "Cholesky factorization failure" for huge |S|.
+    pub fn new(s_scaled: Mat, sigma_s2: f64) -> Result<SupportBasis> {
+        let mut k_ss = se_ard::cov_cross_scaled(&s_scaled, &s_scaled, sigma_s2)?;
+        let base = 1e-6 * sigma_s2;
+        k_ss.add_diag(base);
+        let (chol_ss, extra) = gp_cholesky(&k_ss)?;
+        Ok(SupportBasis { s_scaled, chol_ss, sigma_s2, jitter: base + extra })
+    }
+
+    /// Whitened basis rows for a block of scaled points:
+    /// returns Wᵀ_A (n × |S|) with Wᵀ_A·W_B = Q_AB.
+    pub fn wt(&self, x_scaled: &Mat) -> Result<Mat> {
+        let k_sa = se_ard::cov_cross_scaled(&self.s_scaled, x_scaled, self.sigma_s2)?;
+        Ok(self.chol_ss.half_solve(&k_sa)?.transpose())
+    }
+
+    /// Σ_AS for a block of scaled points (n × |S|).
+    pub fn sigma_as(&self, x_scaled: &Mat) -> Result<Mat> {
+        se_ard::cov_cross_scaled(x_scaled, &self.s_scaled, self.sigma_s2)
+    }
+
+    pub fn size(&self) -> usize {
+        self.s_scaled.rows()
+    }
+}
+
+/// Exact residual covariance between two scaled point sets given their
+/// whitened rows: R_AB = Σ_AB − Wᵀ_A·W_B. `noise_diag` adds σ_n² on the
+/// diagonal (only valid when A and B are the *same* observed set).
+pub fn r_cross(
+    xa: &Mat,
+    wta: &Mat,
+    xb: &Mat,
+    wtb: &Mat,
+    sigma_s2: f64,
+    noise_diag: Option<f64>,
+) -> Result<Mat> {
+    let mut sig = se_ard::cov_cross_scaled(xa, xb, sigma_s2)?;
+    if let Some(n2) = noise_diag {
+        sig.add_diag(n2);
+    }
+    let q = wta.matmul_t(wtb)?;
+    sig.sub(&q)
+}
+
+/// Wall-clock breakdown of the fit, used by `lma::parallel` to charge
+/// each simulated rank for the work it would own in the real MPI layout.
+#[derive(Clone, Debug, Default)]
+pub struct FitTimings {
+    /// Input scaling (replicated cheap preprocessing).
+    pub scale_secs: f64,
+    /// Support-basis construction: Σ_SS + its Cholesky (replicated on
+    /// every machine in the paper's layout).
+    pub basis_secs: f64,
+    /// Partitioning/clustering (parallelized in Chen et al. 2013; the
+    /// simulator divides this across ranks).
+    pub partition_secs: f64,
+    /// Whitened-row computation Wᵀ_D (each machine computes its own
+    /// block's share).
+    pub wt_secs: f64,
+    /// Per-block residual work: in-band R blocks, band Cholesky, P_m,
+    /// C_m, ẏ_m, Σ̇_S^m — machine m's own fit work.
+    pub per_block_secs: Vec<f64>,
+}
+
+/// Per-fit state: everything Theorem 2 needs that does not depend on U.
+pub struct LmaFitCore {
+    pub hyp: SeArdHyper,
+    pub cfg: LmaConfig,
+    /// Partition used to route test points (centroids in scaled space).
+    pub partition: Partition,
+    /// Permutation: `perm[j]` = original index of permuted position j.
+    pub perm: Vec<usize>,
+    /// Block ranges over the permuted order.
+    pub part: BlockPartition,
+    /// Scaled training inputs, permuted into block order (|D| × d).
+    pub x_scaled: Mat,
+    /// Centered outputs y − μ, permuted.
+    pub y_cent: Vec<f64>,
+    /// Support basis.
+    pub basis: SupportBasis,
+    /// Whitened rows Wᵀ_D (|D| × |S|), permuted.
+    pub wt_d: Mat,
+    /// Diagonal residual blocks R_{D_m D_m} (with noise).
+    pub r_diag: Vec<Mat>,
+    /// Off-diagonal in-band blocks: `r_band[m][j] = R_{D_m D_{m+1+j}}`,
+    /// j < min(B, M−1−m).
+    pub r_band: Vec<Vec<Mat>>,
+    /// Cholesky of R_{D_m^B D_m^B} for blocks with a non-empty forward
+    /// band (None for the clipped tail when B=0 or m=M−1... empty band).
+    pub band_chol: Vec<Option<CholFactor>>,
+    /// Propagators P_m = R_{D_m D_m^B}·R_{D_m^B D_m^B}⁻¹ (n_m × |D_m^B|).
+    pub p: Vec<Option<Mat>>,
+    /// P_mᵀ, precomputed so the sweep's roll products run through the
+    /// faster NN GEMM kernel (§Perf).
+    pub p_t: Vec<Option<Mat>>,
+    /// Cholesky of C_m = R_mm − P_m·R_{D_m^B D_m} (Ṙ_m = C_m⁻¹).
+    pub c_chol: Vec<CholFactor>,
+    /// ẏ_m of Definition 1.
+    pub y_dot: Vec<Vec<f64>>,
+    /// Σ̇_S^m of Definition 1 (n_m × |S|).
+    pub s_dot: Vec<Mat>,
+    /// Wall-clock breakdown of the fit.
+    pub timings: FitTimings,
+    /// Covariance engine for request-path blocks: native Rust or the
+    /// AOT-compiled Pallas kernel via PJRT (cfg.use_pjrt).
+    pub cov_backend: CovBackend,
+}
+
+impl LmaFitCore {
+    /// Number of blocks M.
+    pub fn m(&self) -> usize {
+        self.part.num_blocks()
+    }
+
+    /// Markov order B.
+    pub fn b(&self) -> usize {
+        self.cfg.markov_order
+    }
+
+    /// Scaled inputs of block m.
+    pub fn x_block(&self, m: usize) -> Mat {
+        let r = self.part.range(m);
+        self.x_scaled.rows_range(r.start, r.end)
+    }
+
+    /// Whitened rows of block m.
+    pub fn wt_block(&self, m: usize) -> Mat {
+        let r = self.part.range(m);
+        self.wt_d.rows_range(r.start, r.end)
+    }
+
+    /// Centered outputs of block m.
+    pub fn y_block(&self, m: usize) -> &[f64] {
+        &self.y_cent[self.part.range(m)]
+    }
+
+    /// Stack of centered outputs over D_m^B.
+    pub fn y_forward_band(&self, m: usize) -> Vec<f64> {
+        self.y_cent[self.part.forward_band(m, self.b())].to_vec()
+    }
+
+    /// In-band residual block R_{D_m D_n} for |m−n| ≤ B (transposing a
+    /// stored block when n < m).
+    pub fn r_in_band(&self, m: usize, n: usize) -> Mat {
+        assert!(m.abs_diff(n) <= self.b().max(0), "block ({m},{n}) outside band");
+        if m == n {
+            self.r_diag[m].clone()
+        } else if n > m {
+            self.r_band[m][n - m - 1].clone()
+        } else {
+            self.r_band[n][m - n - 1].transpose()
+        }
+    }
+
+    /// R_{D_m D_m^B}: horizontal stack of the forward in-band blocks.
+    pub fn r_row_band(&self, m: usize) -> Option<Mat> {
+        if self.r_band[m].is_empty() {
+            return None;
+        }
+        let refs: Vec<&Mat> = self.r_band[m].iter().collect();
+        Some(Mat::hstack(&refs).expect("band blocks share row count"))
+    }
+
+    /// Assemble the symmetric R_{D_m^B D_m^B} from stored in-band blocks.
+    fn band_gram(&self, m: usize) -> Option<Mat> {
+        let b = self.b();
+        let mm = self.m();
+        if b == 0 || m + 1 >= mm {
+            return None;
+        }
+        let hi = (m + b).min(mm - 1);
+        let ks: Vec<usize> = (m + 1..=hi).collect();
+        let total: usize = ks.iter().map(|&k| self.part.size(k)).sum();
+        let mut g = Mat::zeros(total, total);
+        let mut roff = 0;
+        for &k in &ks {
+            let mut coff = 0;
+            for &l in &ks {
+                // |k−l| ≤ B−1 ≤ B: always in-band.
+                let blk = self.r_in_band(k, l);
+                g.set_block(roff, coff, &blk);
+                coff += self.part.size(l);
+            }
+            roff += self.part.size(k);
+        }
+        Some(g)
+    }
+
+    /// Exact residual block through the configured covariance backend
+    /// (PJRT artifact when enabled and a bucket fits, else native) —
+    /// the request-path twin of the free [`r_cross`].
+    pub fn r_cross_b(
+        &self,
+        xa: &Mat,
+        wta: &Mat,
+        xb: &Mat,
+        wtb: &Mat,
+        noise_diag: Option<f64>,
+    ) -> Result<Mat> {
+        let mut sig = self.cov_backend.cov_cross_scaled(xa, xb, self.hyp.sigma_s2)?;
+        if let Some(n2) = noise_diag {
+            sig.add_diag(n2);
+        }
+        let q = wta.matmul_t(wtb)?;
+        sig.sub(&q)
+    }
+
+    /// Fit the core given training data and config.
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+    ) -> Result<LmaFitCore> {
+        hyp.validate()?;
+        cfg.validate(train_x.rows())?;
+        if train_x.rows() != train_y.len() {
+            return Err(PgprError::Shape(format!(
+                "LMA fit: X rows {} != y len {}",
+                train_x.rows(),
+                train_y.len()
+            )));
+        }
+        let n = train_x.rows();
+        let mm = cfg.num_blocks;
+        let b = cfg.markov_order;
+        let mut rng = Pcg64::new(cfg.seed);
+        let mut timings = FitTimings::default();
+
+        // --- scale inputs once ---
+        let (x_all_scaled, secs) =
+            crate::util::timer::time_it(|| se_ard::scale_inputs(train_x, hyp));
+        let x_all_scaled = x_all_scaled?;
+        timings.scale_secs = secs;
+
+        // --- support set: random subset of training inputs (paper §4) ---
+        let ssize = cfg.support_size.min(n);
+        let s_idx = rng.choose_indices(n, ssize);
+        let s_scaled = x_all_scaled.select_rows(&s_idx);
+        let (basis, secs) =
+            crate::util::timer::time_it(|| SupportBasis::new(s_scaled, hyp.sigma_s2));
+        let basis = basis?;
+        timings.basis_secs = secs;
+
+        // --- partition D into M ordered blocks ---
+        let (partition, secs) = crate::util::timer::time_it(|| match cfg.partition {
+            PartitionStrategy::KMeans { iters } => {
+                partition::kmeans_partition(&x_all_scaled, mm, iters, &mut rng)
+            }
+            PartitionStrategy::Contiguous => partition::contiguous_partition(&x_all_scaled, mm),
+            PartitionStrategy::Random => partition::random_partition(&x_all_scaled, mm, &mut rng),
+        });
+        let partition = partition?;
+        timings.partition_secs = secs;
+
+        // --- permute into block order ---
+        let mut perm = Vec::with_capacity(n);
+        let mut sizes = Vec::with_capacity(mm);
+        for blk in &partition.blocks {
+            perm.extend_from_slice(blk);
+            sizes.push(blk.len());
+        }
+        let part = BlockPartition::from_sizes(&sizes)?;
+        let x_scaled = x_all_scaled.select_rows(&perm);
+        let y_cent: Vec<f64> = perm.iter().map(|&i| train_y[i] - hyp.mean).collect();
+
+        // --- whitened rows for all of D ---
+        let (wt_d, secs) = crate::util::timer::time_it(|| basis.wt(&x_scaled));
+        let wt_d = wt_d?;
+        timings.wt_secs = secs;
+
+        // --- covariance backend (native or compiled-Pallas via PJRT) ---
+        let cov_backend = if cfg.use_pjrt { CovBackend::auto() } else { CovBackend::Native };
+        let bk_cross = |xa: &Mat, xb: &Mat, noise: Option<f64>, wa: &Mat, wb: &Mat| -> Result<Mat> {
+            let mut sig = cov_backend.cov_cross_scaled(xa, xb, hyp.sigma_s2)?;
+            if let Some(n2) = noise {
+                sig.add_diag(n2);
+            }
+            sig.sub(&wa.matmul_t(wb)?)
+        };
+
+        // --- exact in-band residual blocks ---
+        let mut block_clock = vec![0.0f64; mm];
+        let mut r_diag = Vec::with_capacity(mm);
+        let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
+        for m in 0..mm {
+            let t0 = std::time::Instant::now();
+            let xm = x_scaled.rows_range(part.range(m).start, part.range(m).end);
+            let wm = wt_d.rows_range(part.range(m).start, part.range(m).end);
+            r_diag.push(bk_cross(&xm, &xm, Some(hyp.sigma_n2), &wm, &wm)?);
+            let hi = (m + b).min(mm - 1);
+            let mut row = Vec::new();
+            for k in (m + 1)..=hi {
+                let xk = x_scaled.rows_range(part.range(k).start, part.range(k).end);
+                let wk = wt_d.rows_range(part.range(k).start, part.range(k).end);
+                row.push(bk_cross(&xm, &xk, None, &wm, &wk)?);
+            }
+            r_band.push(row);
+            block_clock[m] += t0.elapsed().as_secs_f64();
+        }
+
+        // --- band factors, propagators, conditionals, Def-1 summaries ---
+        let mut band_chol = Vec::with_capacity(mm);
+        let mut p_all = Vec::with_capacity(mm);
+        let mut c_chol = Vec::with_capacity(mm);
+        let mut y_dot = Vec::with_capacity(mm);
+        let mut s_dot = Vec::with_capacity(mm);
+
+        // Pre-assemble helper state; per-m work below.
+        let core_tmp = LmaFitCore {
+            hyp: hyp.clone(),
+            cfg: cfg.clone(),
+            partition,
+            perm,
+            part,
+            x_scaled,
+            y_cent,
+            basis,
+            wt_d,
+            r_diag,
+            r_band,
+            band_chol: Vec::new(),
+            p: Vec::new(),
+            p_t: Vec::new(),
+            c_chol: Vec::new(),
+            y_dot: Vec::new(),
+            s_dot: Vec::new(),
+            timings: FitTimings::default(),
+            cov_backend: cov_backend.clone(),
+        };
+
+        for m in 0..mm {
+            let t0 = std::time::Instant::now();
+            let r_mm = &core_tmp.r_diag[m];
+            let sigma_ms = core_tmp.basis.sigma_as(&core_tmp.x_block(m))?;
+            match core_tmp.band_gram(m) {
+                None => {
+                    // Empty forward band (B=0 or last block): Def 1
+                    // degenerates — ẏ=y−μ, C=R_mm, Σ̇_S=Σ_DS.
+                    band_chol.push(None);
+                    p_all.push(None);
+                    let (cf, _) = gp_cholesky(r_mm)?;
+                    c_chol.push(cf);
+                    y_dot.push(core_tmp.y_block(m).to_vec());
+                    s_dot.push(sigma_ms);
+                }
+                Some(gram) => {
+                    let (bf, _) = gp_cholesky(&gram)?;
+                    let r_row = core_tmp.r_row_band(m).expect("non-empty band");
+                    // P_m = R_{D_m D_m^B}·G⁻¹  (solve Gᵀ·Pᵀ = R_rowᵀ).
+                    let p_m = bf.solve_mat(&r_row.transpose())?.transpose();
+                    // C_m = R_mm − P_m·R_{D_m^B D_m}.
+                    let c_m = r_mm.sub(&p_m.matmul_t(&r_row)?)?;
+                    let (cf, _) = gp_cholesky(&c_m)?;
+                    // ẏ_m = (y−μ)_m − P_m·(y−μ)_{D_m^B}.
+                    let yb = core_tmp.y_forward_band(m);
+                    let mut ym = core_tmp.y_block(m).to_vec();
+                    let corr = p_m.matvec(&yb)?;
+                    for (a, c) in ym.iter_mut().zip(&corr) {
+                        *a -= c;
+                    }
+                    // Σ̇_S^m = Σ_{D_m S} − P_m·Σ_{D_m^B S}.
+                    let fb = core_tmp.part.forward_band(m, b);
+                    let x_fb = core_tmp.x_scaled.rows_range(fb.start, fb.end);
+                    let sigma_bs = core_tmp.basis.sigma_as(&x_fb)?;
+                    let sdot_m = sigma_ms.sub(&p_m.matmul(&sigma_bs)?)?;
+                    band_chol.push(Some(bf));
+                    p_all.push(Some(p_m));
+                    c_chol.push(cf);
+                    y_dot.push(ym);
+                    s_dot.push(sdot_m);
+                }
+            }
+            block_clock[m] += t0.elapsed().as_secs_f64();
+        }
+        timings.per_block_secs = block_clock;
+
+        let p_t: Vec<Option<Mat>> = p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
+        Ok(LmaFitCore { band_chol, p: p_all, p_t, c_chol, y_dot, s_dot, timings, ..core_tmp })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::for_cases;
+
+    fn toy_data(rng: &mut Pcg64, n: usize, d: usize) -> (Mat, Vec<f64>, SeArdHyper) {
+        let hyp = SeArdHyper::isotropic(d, 1.0, 1.0, 0.1);
+        let x = Mat::randn(n, d, rng);
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin() + 0.1 * rng.normal()).collect();
+        (x, y, hyp)
+    }
+
+    fn cfg(m: usize, b: usize, s: usize) -> LmaConfig {
+        LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: s,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 5 },
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn fit_produces_consistent_shapes() {
+        for_cases(111, 6, |rng| {
+            let n = 60 + rng.below(60);
+            let (x, y, hyp) = toy_data(rng, n, 2);
+            let m = 4 + rng.below(3);
+            let b = rng.below(m.min(3));
+            let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(m, b, 16)).unwrap();
+            assert_eq!(core.m(), m);
+            assert_eq!(core.part.total(), n);
+            for mm in 0..m {
+                let nm = core.part.size(mm);
+                assert_eq!(core.r_diag[mm].rows(), nm);
+                assert_eq!(core.c_chol[mm].n(), nm);
+                assert_eq!(core.y_dot[mm].len(), nm);
+                assert_eq!(core.s_dot[mm].rows(), nm);
+                assert_eq!(core.s_dot[mm].cols(), core.basis.size());
+                let band = core.part.forward_band(mm, b);
+                if band.is_empty() {
+                    assert!(core.p[mm].is_none());
+                } else {
+                    let p = core.p[mm].as_ref().unwrap();
+                    assert_eq!(p.rows(), nm);
+                    assert_eq!(p.cols(), band.len());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn permutation_is_bijective_and_blocks_match_partition() {
+        let mut rng = Pcg64::new(112);
+        let (x, y, hyp) = toy_data(&mut rng, 97, 2);
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(5, 1, 12)).unwrap();
+        let mut sorted = core.perm.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..97).collect::<Vec<_>>());
+        // Permuted block contents match the partition's blocks.
+        for (m, blk) in core.partition.blocks.iter().enumerate() {
+            let r = core.part.range(m);
+            assert_eq!(&core.perm[r], &blk[..]);
+        }
+    }
+
+    #[test]
+    fn residual_decomposition_reconstructs_sigma() {
+        // Q + R must equal Σ exactly for in-band blocks (up to SS jitter).
+        let mut rng = Pcg64::new(113);
+        let (x, y, hyp) = toy_data(&mut rng, 50, 1);
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(4, 1, 50)).unwrap();
+        for m in 0..4 {
+            let xm = core.x_block(m);
+            let wm = core.wt_block(m);
+            let q = wm.matmul_t(&wm).unwrap();
+            let sum = q.add(&core.r_diag[m]).unwrap();
+            let mut sig = se_ard::cov_cross_scaled(&xm, &xm, hyp.sigma_s2).unwrap();
+            sig.add_diag(hyp.sigma_n2);
+            // Jitter on Σ_SS perturbs Q slightly; tolerance accounts for it.
+            assert!(sum.max_abs_diff(&sig) < 1e-5, "block {m}");
+        }
+    }
+
+    #[test]
+    fn r_in_band_is_symmetric_pair() {
+        let mut rng = Pcg64::new(114);
+        let (x, y, hyp) = toy_data(&mut rng, 80, 2);
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(5, 2, 16)).unwrap();
+        for m in 0..5usize {
+            for n in 0..5usize {
+                if m.abs_diff(n) <= 2 {
+                    let a = core.r_in_band(m, n);
+                    let b = core.r_in_band(n, m).transpose();
+                    assert!(a.max_abs_diff(&b) < 1e-14);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn b_zero_degenerates_to_pic_locals() {
+        let mut rng = Pcg64::new(115);
+        let (x, y, hyp) = toy_data(&mut rng, 60, 1);
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(4, 0, 10)).unwrap();
+        for m in 0..4 {
+            assert!(core.p[m].is_none());
+            // ẏ_m is just centered y.
+            let want: Vec<f64> = core.y_block(m).to_vec();
+            assert_eq!(core.y_dot[m], want);
+        }
+    }
+
+    #[test]
+    fn c_blocks_are_spd_conditionals() {
+        // C_m = Schur complement ⇒ its Cholesky must have succeeded and
+        // logdet must be finite.
+        let mut rng = Pcg64::new(116);
+        let (x, y, hyp) = toy_data(&mut rng, 90, 2);
+        for b in [0, 1, 3] {
+            let core = LmaFitCore::fit(&x, &y, &hyp, &cfg(5, b, 24)).unwrap();
+            for m in 0..5 {
+                assert!(core.c_chol[m].logdet().is_finite());
+            }
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! Automatic (|S|, B) selection — the paper's stated future work
+//! ("develop a technique to automatically determine the 'optimal' support
+//! set size and Markov order", Conclusion).
+//!
+//! Strategy: hold out a validation split, walk the (|S|, B) grid in order
+//! of predicted cost (Remark 2's complexity model: cost ∝ |S|³ + (B·n/M)³
+//! + fit/predict terms), and stop at the first configuration whose
+//! validation RMSE is within `tolerance` of the best seen so far after a
+//! patience window — returning the *cheapest acceptable* configuration
+//! rather than the global optimum, which is the trade-off Remark 3
+//! describes.
+
+use crate::config::LmaConfig;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::matrix::Mat;
+use crate::lma::LmaRegressor;
+use crate::metrics::rmse;
+use crate::util::error::{PgprError, Result};
+use crate::util::rng::Pcg64;
+use crate::util::timer::time_it;
+
+/// Options for the automatic selection.
+#[derive(Clone, Debug)]
+pub struct SelectOptions {
+    pub support_grid: Vec<usize>,
+    pub markov_grid: Vec<usize>,
+    /// Fraction of training data held out for validation.
+    pub holdout: f64,
+    /// Accept a config whose RMSE ≤ (1 + tolerance)·best_rmse.
+    pub relative_tolerance: f64,
+    /// Stop early after this many consecutive non-improving configs.
+    pub patience: usize,
+    pub seed: u64,
+}
+
+impl Default for SelectOptions {
+    fn default() -> Self {
+        SelectOptions {
+            support_grid: vec![16, 32, 64, 128, 256],
+            markov_grid: vec![0, 1, 2, 3, 5],
+            holdout: 0.2,
+            relative_tolerance: 0.02,
+            patience: 4,
+            seed: 0,
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Clone, Debug)]
+pub struct SelectTrial {
+    pub support_size: usize,
+    pub markov_order: usize,
+    pub val_rmse: f64,
+    pub secs: f64,
+    /// Remark-2 cost model value used for the visit order.
+    pub predicted_cost: f64,
+}
+
+/// Selection result: the chosen config plus the full trial log.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    pub config: LmaConfig,
+    pub trials: Vec<SelectTrial>,
+}
+
+/// Remark-2-style cost model for visit ordering (centralized engine):
+/// |D||S|² + B|D|(B|D|/M)² + |U||D|(|S| + B|D|/M).
+fn cost_model(n: f64, u: f64, m: f64, s: f64, b: f64) -> f64 {
+    let band = (b * n / m).max(1.0);
+    n * s * s + b.max(1.0) * n * band * band + u * n * (s + band)
+}
+
+/// Run the automatic selection against a base config (its `num_blocks`,
+/// `partition` and `seed` are kept; support/order are chosen).
+pub fn auto_select(
+    train_x: &Mat,
+    train_y: &[f64],
+    hyp: &SeArdHyper,
+    base: &LmaConfig,
+    opts: &SelectOptions,
+) -> Result<Selection> {
+    let n = train_x.rows();
+    if n < 10 {
+        return Err(PgprError::Config("auto_select: too little data".into()));
+    }
+    let n_val = ((n as f64 * opts.holdout) as usize).clamp(2, n / 2);
+    let mut rng = Pcg64::new(opts.seed ^ 0x5E1EC7);
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let (val_idx, fit_idx) = idx.split_at(n_val);
+    let fit_x = train_x.select_rows(fit_idx);
+    let fit_y: Vec<f64> = fit_idx.iter().map(|&i| train_y[i]).collect();
+    let val_x = train_x.select_rows(val_idx);
+    let val_y: Vec<f64> = val_idx.iter().map(|&i| train_y[i]).collect();
+
+    // Build the visit order: cheapest predicted cost first.
+    let mut grid: Vec<(usize, usize, f64)> = Vec::new();
+    for &s in &opts.support_grid {
+        for &b in &opts.markov_grid {
+            if b >= base.num_blocks || s == 0 {
+                continue;
+            }
+            let c = cost_model(
+                fit_x.rows() as f64,
+                n_val as f64,
+                base.num_blocks as f64,
+                s as f64,
+                b as f64,
+            );
+            grid.push((s, b, c));
+        }
+    }
+    if grid.is_empty() {
+        return Err(PgprError::Config("auto_select: empty (|S|, B) grid".into()));
+    }
+    grid.sort_by(|a, b| a.2.partial_cmp(&b.2).unwrap());
+
+    let mut trials = Vec::new();
+    let mut best: Option<(f64, usize)> = None; // (rmse, trial idx)
+    let mut stale = 0usize;
+    for (s, b, predicted_cost) in grid {
+        let cfg = LmaConfig { support_size: s, markov_order: b, ..base.clone() };
+        let (out, secs) = time_it(|| -> Result<f64> {
+            let model = LmaRegressor::fit(&fit_x, &fit_y, hyp, &cfg)?;
+            let pred = model.predict(&val_x)?;
+            Ok(rmse(&pred.mean, &val_y))
+        });
+        let val_rmse = match out {
+            Ok(r) => r,
+            // A failed factorization disqualifies the config, not the run.
+            Err(PgprError::NotPositiveDefinite { .. }) => f64::INFINITY,
+            Err(e) => return Err(e),
+        };
+        trials.push(SelectTrial { support_size: s, markov_order: b, val_rmse, secs, predicted_cost });
+        let improved = match best {
+            None => true,
+            Some((br, _)) => val_rmse < br * (1.0 - 1e-9),
+        };
+        if improved {
+            best = Some((val_rmse, trials.len() - 1));
+            stale = 0;
+        } else {
+            stale += 1;
+            if stale >= opts.patience {
+                break;
+            }
+        }
+    }
+    let (best_rmse, _) = best.expect("at least one trial ran");
+    // Cheapest config within tolerance of the best.
+    let chosen = trials
+        .iter()
+        .filter(|t| t.val_rmse <= best_rmse * (1.0 + opts.relative_tolerance))
+        .min_by(|a, b| a.predicted_cost.partial_cmp(&b.predicted_cost).unwrap())
+        .expect("best trial satisfies its own tolerance");
+    let config = LmaConfig {
+        support_size: chosen.support_size,
+        markov_order: chosen.markov_order,
+        ..base.clone()
+    };
+    Ok(Selection { config, trials })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+
+    fn problem(seed: u64, n: usize) -> (Mat, Vec<f64>, SeArdHyper) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.6, 1.0, 0.08);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -5.0, 5.0));
+        let y: Vec<f64> =
+            (0..n).map(|i| (2.0 * x.get(i, 0)).sin() + 0.08 * rng.normal()).collect();
+        (x, y, hyp)
+    }
+
+    fn base(m: usize) -> LmaConfig {
+        LmaConfig {
+            num_blocks: m,
+            markov_order: 1,
+            support_size: 8,
+            seed: 3,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn selects_valid_config_and_logs_trials() {
+        let (x, y, hyp) = problem(701, 300);
+        let opts = SelectOptions {
+            support_grid: vec![4, 16, 64],
+            markov_grid: vec![0, 1, 3],
+            ..Default::default()
+        };
+        let sel = auto_select(&x, &y, &hyp, &base(6), &opts).unwrap();
+        assert!(!sel.trials.is_empty());
+        assert!(opts.support_grid.contains(&sel.config.support_size));
+        assert!(sel.config.markov_order < 6);
+        // The chosen config's validation RMSE is within tolerance of best.
+        let best = sel.trials.iter().map(|t| t.val_rmse).fold(f64::INFINITY, f64::min);
+        let chosen = sel
+            .trials
+            .iter()
+            .find(|t| {
+                t.support_size == sel.config.support_size
+                    && t.markov_order == sel.config.markov_order
+            })
+            .unwrap();
+        assert!(chosen.val_rmse <= best * (1.0 + opts.relative_tolerance) + 1e-12);
+    }
+
+    #[test]
+    fn visit_order_is_cost_ascending() {
+        let (x, y, hyp) = problem(702, 200);
+        let opts = SelectOptions {
+            support_grid: vec![4, 32],
+            markov_grid: vec![0, 2],
+            patience: 100, // visit everything
+            ..Default::default()
+        };
+        let sel = auto_select(&x, &y, &hyp, &base(5), &opts).unwrap();
+        for w in sel.trials.windows(2) {
+            assert!(w[0].predicted_cost <= w[1].predicted_cost);
+        }
+        assert_eq!(sel.trials.len(), 4);
+    }
+
+    #[test]
+    fn prefers_cheap_config_on_easy_problem() {
+        // Smooth easy field: the tiny config should already be within
+        // tolerance, so selection must not pick the most expensive cell.
+        let (x, y, hyp) = problem(703, 400);
+        let opts = SelectOptions {
+            support_grid: vec![8, 256],
+            markov_grid: vec![0, 4],
+            relative_tolerance: 0.25,
+            patience: 100,
+            ..Default::default()
+        };
+        let sel = auto_select(&x, &y, &hyp, &base(8), &opts).unwrap();
+        let max_cost = sel.trials.iter().map(|t| t.predicted_cost).fold(0.0, f64::max);
+        let chosen = sel
+            .trials
+            .iter()
+            .find(|t| {
+                t.support_size == sel.config.support_size
+                    && t.markov_order == sel.config.markov_order
+            })
+            .unwrap();
+        assert!(chosen.predicted_cost < max_cost, "picked the most expensive config");
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let (x, y, hyp) = problem(704, 8);
+        assert!(auto_select(&x, &y, &hyp, &base(2), &SelectOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! The B-spectrum of LMAs (Section 3): varying the Markov order B from 0
+//! to M−1 produces a family of approximations with PIC and the full-rank
+//! GP at the two extremes. This module provides sweep utilities used by
+//! the Figure-2 trade-off experiment and the equivalence property tests.
+
+use crate::config::LmaConfig;
+use crate::gp::Prediction;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::matrix::Mat;
+use crate::lma::LmaRegressor;
+use crate::metrics;
+use crate::util::error::Result;
+use crate::util::timer::time_it;
+
+/// One point of a (|S|, B) sweep.
+#[derive(Clone, Debug)]
+pub struct SpectrumPoint {
+    pub support_size: usize,
+    pub markov_order: usize,
+    pub rmse: f64,
+    pub mnlp: f64,
+    pub fit_secs: f64,
+    pub predict_secs: f64,
+}
+
+/// Run LMA over a grid of support sizes × Markov orders (the Figure-2
+/// experiment) against a fixed train/test split.
+pub fn sweep_grid(
+    train_x: &Mat,
+    train_y: &[f64],
+    test_x: &Mat,
+    test_y: &[f64],
+    hyp: &SeArdHyper,
+    base: &LmaConfig,
+    support_sizes: &[usize],
+    markov_orders: &[usize],
+) -> Result<Vec<SpectrumPoint>> {
+    let mut out = Vec::new();
+    for &s in support_sizes {
+        for &b in markov_orders {
+            if b >= base.num_blocks {
+                continue;
+            }
+            let cfg = LmaConfig { support_size: s, markov_order: b, ..base.clone() };
+            let (model, fit_secs) = time_it(|| LmaRegressor::fit(train_x, train_y, hyp, &cfg));
+            let model = model?;
+            let (pred, predict_secs) = time_it(|| model.predict(test_x));
+            let pred: Prediction = pred?;
+            out.push(SpectrumPoint {
+                support_size: s,
+                markov_order: b,
+                rmse: metrics::rmse(&pred.mean, test_y),
+                mnlp: metrics::mnlp(&pred.mean, &pred.var, test_y),
+                fit_secs,
+                predict_secs,
+            });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn grid_covers_requested_points_and_skips_invalid_b() {
+        let mut rng = Pcg64::new(161);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(100, -3.0, 3.0));
+        let y: Vec<f64> = (0..100).map(|i| x.get(i, 0).sin()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(20, -3.0, 3.0));
+        let ty: Vec<f64> = t.col(0).iter().map(|v| v.sin()).collect();
+        let base = LmaConfig {
+            num_blocks: 4,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 5 },
+            ..Default::default()
+        };
+        let pts = sweep_grid(&x, &y, &t, &ty, &hyp, &base, &[8, 16], &[0, 1, 3, 9]).unwrap();
+        // B=9 ≥ M=4 is skipped → 2 sizes × 3 valid orders.
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().all(|p| p.rmse.is_finite() && p.fit_secs >= 0.0));
+    }
+
+    #[test]
+    fn rmse_improves_with_support_or_order() {
+        // On a fixed problem, (|S|=32, B=2) should beat (|S|=4, B=0).
+        let mut rng = Pcg64::new(162);
+        let hyp = SeArdHyper::isotropic(1, 0.7, 1.0, 0.05);
+        let x = Mat::col_vec(&rng.uniform_vec(200, -4.0, 4.0));
+        let y: Vec<f64> = (0..200).map(|i| (1.5 * x.get(i, 0)).sin() + 0.05 * rng.normal()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(40, -3.5, 3.5));
+        let ty: Vec<f64> = t.col(0).iter().map(|v| (1.5 * v).sin()).collect();
+        let base = LmaConfig { num_blocks: 5, seed: 2, ..Default::default() };
+        let pts = sweep_grid(&x, &y, &t, &ty, &hyp, &base, &[4, 32], &[0, 2]).unwrap();
+        let weak = pts.iter().find(|p| p.support_size == 4 && p.markov_order == 0).unwrap();
+        let strong = pts.iter().find(|p| p.support_size == 32 && p.markov_order == 2).unwrap();
+        assert!(
+            strong.rmse <= weak.rmse + 1e-9,
+            "strong {} vs weak {}",
+            strong.rmse,
+            weak.rmse
+        );
+    }
+}

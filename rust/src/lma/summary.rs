@@ -1,0 +1,232 @@
+//! Local summaries (Definition 1) and the global summary (Definition 2).
+//!
+//! Per machine m the local summary is (ẏ_m, Ṙ_m, Σ̇_S^m, Σ̇_U^m) with
+//! Ṙ_m = C_m⁻¹ kept in factored form: every Ṙ_m-weighted product in the
+//! global summary is computed through half-solves V = L_{C_m}⁻¹·(…) so
+//! the Gram pieces (Σ̇ᵀ·Ṙ·Σ̇) are symmetric by construction and no
+//! explicit inverse is ever formed.
+//!
+//! The global summary (ÿ_S, ÿ_U, Σ̈_SS, Σ̈_US, Σ̈_UU) is an elementwise sum
+//! of per-machine terms — the reduction the parallel runtime ships to the
+//! master (Remark 1 after Theorem 2).
+
+use crate::linalg::gemm;
+use crate::linalg::matrix::Mat;
+use crate::lma::residual::LmaFitCore;
+use crate::lma::sweep::TestSide;
+use crate::util::error::Result;
+
+/// The m-th machine's additive contribution to the global summary.
+#[derive(Clone, Debug)]
+pub struct LocalTerms {
+    /// (Σ̇_S^m)ᵀ·Ṙ_m·ẏ_m — summand of ÿ_S (|S|).
+    pub ys: Vec<f64>,
+    /// (Σ̇_U^m)ᵀ·Ṙ_m·ẏ_m — summand of ÿ_U (|U|).
+    pub yu: Vec<f64>,
+    /// (Σ̇_S^m)ᵀ·Ṙ_m·Σ̇_S^m — summand of Σ̈_SS (|S|×|S|).
+    pub sss: Mat,
+    /// (Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_S^m — summand of Σ̈_US (|U|×|S|).
+    pub sus: Mat,
+    /// diag[(Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_U^m] — summand of diag Σ̈_UU (|U|).
+    pub suu_diag: Vec<f64>,
+    /// Full (Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_U^m when requested (|U|×|U|).
+    pub suu_full: Option<Mat>,
+}
+
+/// The reduced global summary of Definition 2.
+#[derive(Clone, Debug)]
+pub struct GlobalSummary {
+    pub ys: Vec<f64>,
+    pub yu: Vec<f64>,
+    pub sss: Mat,
+    pub sus: Mat,
+    pub suu_diag: Vec<f64>,
+    pub suu_full: Option<Mat>,
+}
+
+/// Σ̇_U^m of Definition 1, given the materialized Σ̄_DU.
+///
+/// Σ̇_U^m = Σ̄_{D_m U} − P_m·Σ̄_{D_m^B U}.
+pub fn sigma_dot_u(core: &LmaFitCore, sigma_bar_du: &Mat, m: usize) -> Result<Mat> {
+    let r = core.part.range(m);
+    let own = sigma_bar_du.rows_range(r.start, r.end);
+    match (&core.p[m], core.part.forward_band(m, core.b())) {
+        (Some(p_m), band) if !band.is_empty() => {
+            let fwd = sigma_bar_du.rows_range(band.start, band.end);
+            own.sub(&p_m.matmul(&fwd)?)
+        }
+        _ => Ok(own),
+    }
+}
+
+/// Compute machine m's additive terms.
+pub fn local_terms(
+    core: &LmaFitCore,
+    sigma_bar_du: &Mat,
+    m: usize,
+    want_full_uu: bool,
+) -> Result<LocalTerms> {
+    let s_dot = &core.s_dot[m];
+    let u_dot = sigma_dot_u(core, sigma_bar_du, m)?;
+    let cf = &core.c_chol[m];
+    // Half-solves against L_{C_m}.
+    let vs = cf.half_solve(s_dot)?;
+    let vu = cf.half_solve(&u_dot)?;
+    let vy = {
+        let y = Mat::col_vec(&core.y_dot[m]);
+        cf.half_solve(&y)?
+    };
+    let ys = vs.t_matmul(&vy)?.into_data();
+    let yu = vu.t_matmul(&vy)?.into_data();
+    let sss = gemm::syrk_tn(&vs);
+    let sus = vu.t_matmul(&vs)?;
+    let nu = vu.cols();
+    let mut suu_diag = vec![0.0; nu];
+    for i in 0..vu.rows() {
+        let row = vu.row(i);
+        for (d, v) in suu_diag.iter_mut().zip(row) {
+            *d += v * v;
+        }
+    }
+    let suu_full = if want_full_uu { Some(gemm::syrk_tn(&vu)) } else { None };
+    Ok(LocalTerms { ys, yu, sss, sus, suu_diag, suu_full })
+}
+
+/// Reduce local terms into the global summary (adds the Σ_SS prior term).
+pub fn reduce(core: &LmaFitCore, terms: &[LocalTerms], total_u: usize) -> Result<GlobalSummary> {
+    let s = core.basis.size();
+    // Σ̈_SS's prior term must be the SAME (jittered) Σ_SS that defines
+    // Q = Σ_·S·Σ_SS⁻¹·Σ_S· — the matrix-inversion-lemma algebra of
+    // Theorem 2 is only exact when the two agree, and Σ̈_SS is
+    // ill-conditioned enough that a mismatched 1e-6 jitter visibly
+    // perturbs predictions.
+    let mut sss_prior = crate::kernels::se_ard::cov_cross_scaled(
+        &core.basis.s_scaled,
+        &core.basis.s_scaled,
+        core.hyp.sigma_s2,
+    )?;
+    sss_prior.add_diag(core.basis.jitter);
+    let mut g = GlobalSummary {
+        ys: vec![0.0; s],
+        yu: vec![0.0; total_u],
+        sss: sss_prior,
+        sus: Mat::zeros(total_u, s),
+        suu_diag: vec![0.0; total_u],
+        suu_full: terms
+            .first()
+            .and_then(|t| t.suu_full.as_ref())
+            .map(|_| Mat::zeros(total_u, total_u)),
+    };
+    for t in terms {
+        for (a, b) in g.ys.iter_mut().zip(&t.ys) {
+            *a += b;
+        }
+        for (a, b) in g.yu.iter_mut().zip(&t.yu) {
+            *a += b;
+        }
+        g.sss.axpy(1.0, &t.sss)?;
+        g.sus.axpy(1.0, &t.sus)?;
+        for (a, b) in g.suu_diag.iter_mut().zip(&t.suu_diag) {
+            *a += b;
+        }
+        if let (Some(full), Some(tf)) = (g.suu_full.as_mut(), t.suu_full.as_ref()) {
+            full.axpy(1.0, tf)?;
+        }
+    }
+    Ok(g)
+}
+
+/// Build Σ̄_DU = Q_DU + R̄_DU from the whitened rows and the sweep output.
+pub fn sigma_bar_du(core: &LmaFitCore, ts: &TestSide, rbar: &Mat) -> Result<Mat> {
+    let mut q = core.wt_d.matmul_t(&ts.wt_u)?;
+    q.axpy(1.0, rbar)?;
+    Ok(q)
+}
+
+/// Approximate message size in bytes of machine m's local terms (used by
+/// the cluster simulator's communication model).
+pub fn local_terms_bytes(t: &LocalTerms) -> usize {
+    let f = 8usize;
+    f * (t.ys.len()
+        + t.yu.len()
+        + t.sss.rows() * t.sss.cols()
+        + t.sus.rows() * t.sus.cols()
+        + t.suu_diag.len()
+        + t.suu_full.as_ref().map(|m| m.rows() * m.cols()).unwrap_or(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::lma::sweep::rbar_du;
+    use crate::util::rng::Pcg64;
+
+    fn setup(seed: u64, n: usize, m: usize, b: usize) -> (LmaFitCore, TestSide, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.9, 1.0, 0.12);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -4.0, 4.0));
+        let y: Vec<f64> = (0..n).map(|i| (2.0 * x.get(i, 0)).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: 16,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 8 },
+            use_pjrt: false,
+        };
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg).unwrap();
+        let test = Mat::col_vec(&rng.uniform_vec(20, -4.0, 4.0));
+        let ts = TestSide::build(&core, &test).unwrap();
+        let rb = rbar_du(&core, &ts).unwrap();
+        let sbar = sigma_bar_du(&core, &ts, &rb).unwrap();
+        (core, ts, sbar)
+    }
+
+    #[test]
+    fn reduction_is_order_invariant() {
+        let (core, ts, sbar) = setup(131, 90, 5, 1);
+        let terms: Vec<LocalTerms> =
+            (0..5).map(|m| local_terms(&core, &sbar, m, false).unwrap()).collect();
+        let fwd = reduce(&core, &terms, ts.total()).unwrap();
+        let mut rev_terms = terms.clone();
+        rev_terms.reverse();
+        let rev = reduce(&core, &rev_terms, ts.total()).unwrap();
+        assert!(fwd.sss.max_abs_diff(&rev.sss) < 1e-12);
+        assert!(fwd.sus.max_abs_diff(&rev.sus) < 1e-12);
+        for (a, b) in fwd.ys.iter().zip(&rev.ys) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sss_is_spd() {
+        let (core, ts, sbar) = setup(132, 80, 4, 1);
+        let terms: Vec<LocalTerms> =
+            (0..4).map(|m| local_terms(&core, &sbar, m, false).unwrap()).collect();
+        let g = reduce(&core, &terms, ts.total()).unwrap();
+        assert!(crate::linalg::solve::gp_cholesky(&g.sss).is_ok());
+        assert!(g.sss.max_abs_diff(&g.sss.transpose()) < 1e-10);
+    }
+
+    #[test]
+    fn suu_diag_matches_full() {
+        let (core, ts, sbar) = setup(133, 70, 4, 2);
+        let terms: Vec<LocalTerms> =
+            (0..4).map(|m| local_terms(&core, &sbar, m, true).unwrap()).collect();
+        let g = reduce(&core, &terms, ts.total()).unwrap();
+        let full = g.suu_full.as_ref().unwrap();
+        for i in 0..ts.total() {
+            assert!((full.get(i, i) - g.suu_diag[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn message_bytes_positive_and_scale_with_u() {
+        let (core, _ts, sbar) = setup(134, 60, 4, 1);
+        let t = local_terms(&core, &sbar, 0, false).unwrap();
+        let bytes = local_terms_bytes(&t);
+        assert!(bytes > 8 * (t.ys.len() + t.yu.len()));
+    }
+}

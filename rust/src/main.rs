@@ -1,0 +1,11 @@
+//! `pgpr` — leader entrypoint for the LMA reproduction.
+//!
+//! See `pgpr help` (or just `pgpr`) for subcommands. The heavy lifting
+//! lives in the `pgpr` library crate; this binary is a thin dispatcher.
+
+fn main() {
+    if let Err(e) = pgpr::coordinator::cli_run::dispatch() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Evaluation metrics used by the paper's experiments: RMSE (the tables'
+//! headline metric), mean negative log predictive density (uncertainty
+//! quality), and speedup (footnote 3: centralized time / parallel time).
+
+/// Root mean square error: (|U|⁻¹ Σ (y − μ)²)^½ — paper Section 4.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len(), "rmse: length mismatch");
+    assert!(!pred.is_empty(), "rmse: empty inputs");
+    let ss: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    (ss / pred.len() as f64).sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    pred.iter().zip(truth).map(|(p, t)| (p - t).abs()).sum::<f64>() / pred.len() as f64
+}
+
+/// Mean negative log predictive density for Gaussian marginals
+/// N(μ_i, σ_i²). Lower is better; measures calibration of the predictive
+/// variances, not just the mean.
+pub fn mnlp(mean: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mean.len(), truth.len());
+    assert_eq!(var.len(), truth.len());
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    let total: f64 = mean
+        .iter()
+        .zip(var)
+        .zip(truth)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            0.5 * (ln2pi + v.ln() + (t - m) * (t - m) / v)
+        })
+        .sum();
+    total / truth.len() as f64
+}
+
+/// Speedup of a parallel run over its centralized counterpart
+/// (paper footnote 3).
+pub fn speedup(centralized_secs: f64, parallel_secs: f64) -> f64 {
+    assert!(parallel_secs > 0.0);
+    centralized_secs / parallel_secs
+}
+
+/// Fraction of test points whose truth lies inside the central 95%
+/// predictive interval (coverage diagnostic for the confidence regions of
+/// Fig. 6).
+pub fn coverage95(mean: &[f64], var: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(mean.len(), truth.len());
+    let inside = mean
+        .iter()
+        .zip(var)
+        .zip(truth)
+        .filter(|((m, v), t)| {
+            let half = 1.959964 * v.max(0.0).sqrt();
+            (**t - **m).abs() <= half
+        })
+        .count();
+    inside as f64 / truth.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_known_values() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        assert!((rmse(&[0.0, 0.0], &[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mae_known() {
+        assert!((mae(&[0.0, 2.0], &[1.0, 0.0]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mnlp_prefers_calibrated_variance() {
+        let truth = [0.0_f64; 32];
+        let mean = [1.0_f64; 32];
+        // Error is 1; variance 1 is better calibrated than 0.01 or 100.
+        let good = mnlp(&mean, &[1.0; 32], &truth);
+        let over = mnlp(&mean, &[0.01; 32], &truth);
+        let under = mnlp(&mean, &[100.0; 32], &truth);
+        assert!(good < over);
+        assert!(good < under);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        assert!((speedup(100.0, 10.0) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coverage_all_or_none() {
+        let mean = [0.0; 10];
+        let var = [1.0; 10];
+        assert_eq!(coverage95(&mean, &var, &[0.0; 10]), 1.0);
+        assert_eq!(coverage95(&mean, &var, &[100.0; 10]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rmse_length_mismatch_panics() {
+        rmse(&[1.0], &[1.0, 2.0]);
+    }
+}

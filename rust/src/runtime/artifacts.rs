@@ -1,0 +1,234 @@
+//! Manifest-driven artifact library with shape buckets.
+//!
+//! `python/compile/aot.py` lowers the Layer-1/2 graphs once per shape
+//! bucket and writes `artifacts/manifest.json`:
+//!
+//! ```json
+//! { "artifacts": [
+//!     {"name": "cov_cross", "file": "cov_cross_128x128.hlo.txt",
+//!      "n1": 128, "n2": 128, "d": 24 }, ... ] }
+//! ```
+//!
+//! PJRT executables have static shapes, so [`ArtifactLibrary`] pads
+//! inputs up to the smallest bucket that fits (zero padding is exact for
+//! the scaled-distance kernel: padded feature columns contribute 0 to the
+//! distance, padded rows are sliced away on unpadding) and caches one
+//! compiled executable per bucket, compiled lazily on first use.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::linalg::matrix::Mat;
+use crate::runtime::pjrt::{PjrtEngine, PjrtExecutable};
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+
+/// One artifact entry from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub n1: usize,
+    pub n2: usize,
+    pub d: usize,
+}
+
+/// The artifact library: manifest + lazily compiled executables.
+pub struct ArtifactLibrary {
+    dir: PathBuf,
+    engine: PjrtEngine,
+    entries: Vec<ArtifactEntry>,
+    cache: RefCell<HashMap<String, PjrtExecutable>>,
+}
+
+impl ArtifactLibrary {
+    /// Default location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("PGPR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Load the manifest and create the PJRT client. Fails with
+    /// `Artifact` if the manifest is missing (callers treat that as
+    /// "native path only").
+    pub fn load(dir: &Path) -> Result<ArtifactLibrary> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            PgprError::Artifact(format!("manifest {manifest_path:?}: {e} (run `make artifacts`)"))
+        })?;
+        let j = Json::parse(&text)?;
+        let mut entries = Vec::new();
+        for item in j.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            entries.push(ArtifactEntry {
+                name: item.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: item.req("file")?.as_str().unwrap_or_default().to_string(),
+                n1: item.req("n1")?.as_usize().unwrap_or(0),
+                n2: item.req("n2")?.as_usize().unwrap_or(0),
+                d: item.req("d")?.as_usize().unwrap_or(0),
+            });
+        }
+        if entries.is_empty() {
+            return Err(PgprError::Artifact("manifest has no artifacts".into()));
+        }
+        let engine = PjrtEngine::cpu()?;
+        Ok(ArtifactLibrary { dir: dir.to_path_buf(), engine, entries, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Try the default directory; None if artifacts are not built.
+    pub fn try_default() -> Option<ArtifactLibrary> {
+        ArtifactLibrary::load(&Self::default_dir()).ok()
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Smallest bucket of `name` that fits (n1, n2, d).
+    fn pick_bucket(&self, name: &str, n1: usize, n2: usize, d: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.name == name && e.n1 >= n1 && e.n2 >= n2 && e.d >= d)
+            .min_by_key(|e| e.n1 * e.n2)
+            .ok_or_else(|| {
+                PgprError::Artifact(format!(
+                    "no `{name}` bucket fits ({n1}, {n2}, d={d}); available: {:?}",
+                    self.entries
+                        .iter()
+                        .filter(|e| e.name == name)
+                        .map(|e| (e.n1, e.n2, e.d))
+                        .collect::<Vec<_>>()
+                ))
+            })
+    }
+
+    fn executable(&self, entry: &ArtifactEntry) -> Result<()> {
+        let key = entry.file.clone();
+        if !self.cache.borrow().contains_key(&key) {
+            let exe = self.engine.compile_hlo_text(&self.dir.join(&entry.file), &entry.name)?;
+            self.cache.borrow_mut().insert(key, exe);
+        }
+        Ok(())
+    }
+
+    /// Cross-covariance through the compiled Pallas kernel:
+    /// K[i,j] = σ_s²·exp(−½‖x1_i − x2_j‖²) over **pre-scaled** inputs —
+    /// the PJRT twin of `kernels::se_ard::cov_cross_scaled`.
+    pub fn cov_cross_scaled(&self, s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
+        let (n1, n2, d) = (s1.rows(), s2.rows(), s1.cols());
+        if s2.cols() != d {
+            return Err(PgprError::Shape("pjrt cov: dim mismatch".into()));
+        }
+        let entry = self.pick_bucket("cov_cross", n1, n2, d)?.clone();
+        self.executable(&entry)?;
+
+        // Pad inputs to the bucket shape (f32).
+        let pad = |m: &Mat, rows: usize, cols: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; rows * cols];
+            for i in 0..m.rows() {
+                for j in 0..m.cols() {
+                    out[i * cols + j] = m.get(i, j) as f32;
+                }
+            }
+            out
+        };
+        let x1 = pad(s1, entry.n1, entry.d);
+        let x2 = pad(s2, entry.n2, entry.d);
+        let sig = vec![sigma_s2 as f32];
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(&entry.file).expect("just compiled");
+        let out = exe.run_f32(&[
+            (&x1, &[entry.n1, entry.d]),
+            (&x2, &[entry.n2, entry.d]),
+            (&sig, &[]),
+        ])?;
+        if out.len() != entry.n1 * entry.n2 {
+            return Err(PgprError::Pjrt(format!(
+                "cov_cross returned {} values, expected {}",
+                out.len(),
+                entry.n1 * entry.n2
+            )));
+        }
+        // Unpad.
+        let mut k = Mat::zeros(n1, n2);
+        for i in 0..n1 {
+            for j in 0..n2 {
+                k.set(i, j, out[i * entry.n2 + j] as f64);
+            }
+        }
+        Ok(k)
+    }
+
+    /// Gram accumulation acc + Vᵀ·V through the compiled `summary_gram`
+    /// Pallas kernel (manifest entries carry (k, m, m) as (n1, n2, d)).
+    /// Zero padding is exact: padded rows of V contribute nothing.
+    pub fn summary_gram(&self, v: &Mat, acc: &Mat) -> Result<Mat> {
+        let (k, m) = (v.rows(), v.cols());
+        if acc.rows() != m || acc.cols() != m {
+            return Err(PgprError::Shape("summary_gram: acc must be m×m".into()));
+        }
+        let entry = self.pick_bucket("summary_gram", k, m, m)?.clone();
+        self.executable(&entry)?;
+        let pad = |src: &Mat, rows: usize, cols: usize| -> Vec<f32> {
+            let mut out = vec![0.0f32; rows * cols];
+            for i in 0..src.rows() {
+                for j in 0..src.cols() {
+                    out[i * cols + j] = src.get(i, j) as f32;
+                }
+            }
+            out
+        };
+        let vp = pad(v, entry.n1, entry.n2);
+        let ap = pad(acc, entry.n2, entry.n2);
+        let cache = self.cache.borrow();
+        let exe = cache.get(&entry.file).expect("just compiled");
+        let out = exe.run_f32(&[
+            (&vp, &[entry.n1, entry.n2]),
+            (&ap, &[entry.n2, entry.n2]),
+        ])?;
+        let mut g = Mat::zeros(m, m);
+        for i in 0..m {
+            for j in 0..m {
+                g.set(i, j, out[i * entry.n2 + j] as f64);
+            }
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_artifact_error() {
+        let r = ArtifactLibrary::load(Path::new("/nonexistent/dir"));
+        assert!(matches!(r, Err(PgprError::Artifact(_))));
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let dir = std::env::temp_dir().join("pgpr_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "cov_cross", "file": "x.hlo.txt", "n1": 64, "n2": 64, "d": 8}]}"#,
+        )
+        .unwrap();
+        // PJRT client creation may succeed; bucket selection is what we
+        // check here.
+        match ArtifactLibrary::load(&dir) {
+            Ok(lib) => {
+                assert_eq!(lib.entries().len(), 1);
+                assert!(lib.pick_bucket("cov_cross", 32, 64, 8).is_ok());
+                assert!(lib.pick_bucket("cov_cross", 65, 64, 8).is_err());
+                assert!(lib.pick_bucket("other", 1, 1, 1).is_err());
+            }
+            Err(PgprError::Pjrt(_)) => { /* no PJRT plugin in this env */ }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

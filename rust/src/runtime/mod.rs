@@ -1,0 +1,10 @@
+//! PJRT execution runtime: loads the HLO-text artifacts produced by the
+//! python AOT pass (`python/compile/aot.py`) and executes them on the
+//! request path through the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text**, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod pjrt;
+pub mod artifacts;

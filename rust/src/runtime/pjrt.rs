@@ -1,0 +1,72 @@
+//! Thin safe wrapper around the `xla` crate's PJRT CPU client.
+
+use std::path::Path;
+
+use crate::util::error::{PgprError, Result};
+
+/// A PJRT client plus helpers to load/compile HLO-text modules.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable with f32 tensor I/O.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl PjrtEngine {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjrtEngine> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| PgprError::Pjrt(format!("client: {e}")))?;
+        Ok(PjrtEngine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text file and compile it.
+    pub fn compile_hlo_text(&self, path: &Path, name: &str) -> Result<PjrtExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| PgprError::Artifact(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(|e| PgprError::Artifact(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| PgprError::Pjrt(format!("compile {name}: {e}")))?;
+        Ok(PjrtExecutable { exe, name: name.to_string() })
+    }
+}
+
+impl PjrtExecutable {
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 output of the first tuple element (our AOT graphs return
+    /// 1-tuples, per the gen_hlo.py convention).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| PgprError::Pjrt(format!("reshape input for {}: {e}", self.name)))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| PgprError::Pjrt(format!("execute {}: {e}", self.name)))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| PgprError::Pjrt(format!("fetch {}: {e}", self.name)))?;
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| PgprError::Pjrt(format!("untuple {}: {e}", self.name)))?;
+        out.to_vec::<f32>()
+            .map_err(|e| PgprError::Pjrt(format!("to_vec {}: {e}", self.name)))
+    }
+}

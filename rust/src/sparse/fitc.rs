@@ -1,0 +1,133 @@
+//! FITC — fully independent training conditional (Snelson & Ghahramani
+//! 2005). Extension baseline from the same low-rank family the paper's
+//! related work covers: Q everywhere, but only the *diagonal* of the
+//! residual retained (PIC with singleton blocks).
+//!
+//! Posterior via the standard Woodbury form with
+//! Λ = diag(Σ_DD − Q_DD) + σ_n²-in-diag:
+//!   A = Σ_SS + Σ_SD Λ⁻¹ Σ_DS
+//!   μ_U = Σ_US A⁻¹ Σ_SD Λ⁻¹ (y−μ) + μ
+//!   var_U = prior − q_uu + σ_US A⁻¹ σ_SU  (per-point)
+
+use crate::gp::Prediction;
+use crate::kernels::se_ard::{self, SeArdHyper};
+use crate::linalg::chol::CholFactor;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::residual::SupportBasis;
+use crate::util::error::{PgprError, Result};
+use crate::util::rng::Pcg64;
+
+/// Fitted FITC model.
+pub struct FitcRegressor {
+    hyp: SeArdHyper,
+    basis: SupportBasis,
+    a_factor: CholFactor,
+    /// b = A⁻¹·Σ_SD·Λ⁻¹·(y−μ).
+    b: Vec<f64>,
+}
+
+impl FitcRegressor {
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        support_size: usize,
+        seed: u64,
+    ) -> Result<FitcRegressor> {
+        hyp.validate()?;
+        let n = train_x.rows();
+        if n != train_y.len() {
+            return Err(PgprError::Shape("FITC fit: X/y mismatch".into()));
+        }
+        let mut rng = Pcg64::new(seed);
+        let xs = se_ard::scale_inputs(train_x, hyp)?;
+        let idx = rng.choose_indices(n, support_size.min(n));
+        let basis = SupportBasis::new(xs.select_rows(&idx), hyp.sigma_s2)?;
+        let wt = basis.wt(&xs)?; // n × |S|
+        // Λ_i = σ_s² + σ_n² − ‖w_i‖² (diagonal residual + noise).
+        let lam: Vec<f64> = (0..n)
+            .map(|i| {
+                let q: f64 = wt.row(i).iter().map(|v| v * v).sum();
+                (hyp.sigma_s2 + hyp.sigma_n2 - q).max(1e-10)
+            })
+            .collect();
+        // A = Σ_SS + Σ_SD Λ⁻¹ Σ_DS. With Σ_SD = L·W: build in W space:
+        // A = L(I + W Λ⁻¹ Wᵀ)Lᵀ — simpler to form directly with Σ_SD.
+        let sigma_ds = basis.sigma_as(&xs)?; // n × |S|
+        let mut scaled = sigma_ds.clone();
+        for i in 0..n {
+            let inv = 1.0 / lam[i];
+            for v in scaled.row_mut(i) {
+                *v *= inv;
+            }
+        }
+        let mut a = sigma_ds.t_matmul(&scaled)?; // Σ_SD Λ⁻¹ Σ_DS
+        let k_ss =
+            se_ard::cov_cross_scaled(&basis.s_scaled, &basis.s_scaled, hyp.sigma_s2)?;
+        a.axpy(1.0, &k_ss)?;
+        let (a_factor, _) = gp_cholesky(&a)?;
+        let centered: Vec<f64> =
+            train_y.iter().zip(&lam).map(|(y, l)| (y - hyp.mean) / l).collect();
+        let rhs = sigma_ds.transpose().matvec(&centered)?;
+        let b = a_factor.solve_vec(&rhs)?;
+        Ok(FitcRegressor { hyp: hyp.clone(), basis, a_factor, b })
+    }
+
+    pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
+        let xs = se_ard::scale_inputs(test_x, &self.hyp)?;
+        let sigma_us = self.basis.sigma_as(&xs)?; // u × |S|
+        let mean: Vec<f64> = sigma_us
+            .matvec(&self.b)?
+            .into_iter()
+            .map(|v| v + self.hyp.mean)
+            .collect();
+        // var = prior − q_uu + σ_US A⁻¹ σ_SU, q_uu = ‖w_u‖².
+        let wt_u = self.basis.wt(&xs)?;
+        let half = self.a_factor.half_solve(&sigma_us.transpose())?;
+        let prior = se_ard::prior_var(&self.hyp);
+        let var: Vec<f64> = (0..test_x.rows())
+            .map(|j| {
+                let q: f64 = wt_u.row(j).iter().map(|v| v * v).sum();
+                let corr: f64 = (0..half.rows()).map(|i| half.get(i, j) * half.get(i, j)).sum();
+                (prior - q + corr).max(0.0)
+            })
+            .collect();
+        Ok(Prediction { mean, var, cov: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::fgp::FgpRegressor;
+    use crate::metrics::rmse;
+
+    #[test]
+    fn tracks_fgp_with_large_support() {
+        let mut rng = Pcg64::new(211);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+        let y: Vec<f64> = (0..120).map(|i| x.get(i, 0).sin() + 0.1 * rng.normal()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(30, -3.5, 3.5));
+        let ty: Vec<f64> = t.col(0).iter().map(|v| v.sin()).collect();
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&t).unwrap();
+        let fitc = FitcRegressor::fit(&x, &y, &hyp, 120, 1).unwrap().predict(&t).unwrap();
+        // With |S| = |D| FITC is near-exact.
+        assert!(rmse(&fitc.mean, &fgp.mean) < 0.05);
+        let small = FitcRegressor::fit(&x, &y, &hyp, 8, 1).unwrap().predict(&t).unwrap();
+        assert!(rmse(&small.mean, &ty) <= rmse(&fitc.mean, &ty) + 0.6);
+    }
+
+    #[test]
+    fn variance_sane() {
+        let mut rng = Pcg64::new(212);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(60, -2.0, 2.0));
+        let y: Vec<f64> = (0..60).map(|i| x.get(i, 0)).collect();
+        let m = FitcRegressor::fit(&x, &y, &hyp, 20, 2).unwrap();
+        let p = m.predict(&Mat::col_vec(&[0.0, 50.0])).unwrap();
+        assert!(p.var[0] < p.var[1], "in-data var {} !< far var {}", p.var[0], p.var[1]);
+        assert!(p.var[1] <= se_ard::prior_var(&hyp) * 1.05);
+    }
+}

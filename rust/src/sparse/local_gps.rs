@@ -1,0 +1,141 @@
+//! Local GPs baseline (Park, Huang & Ding 2011 family): an independent
+//! full GP per partition block, each test point served only by its own
+//! block's GP. Fast, but predictions jump at block boundaries — the
+//! discontinuity the paper's Appendix D / Figure 6 contrasts LMA against.
+
+use crate::config::{LmaConfig, PartitionStrategy};
+use crate::gp::fgp::FgpRegressor;
+use crate::gp::Prediction;
+use crate::kernels::se_ard::{self, SeArdHyper};
+use crate::linalg::matrix::Mat;
+use crate::lma::partition::{self, Partition};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+
+/// Independent per-block GPs.
+pub struct LocalGps {
+    hyp: SeArdHyper,
+    partition: Partition,
+    models: Vec<FgpRegressor>,
+}
+
+impl LocalGps {
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+    ) -> Result<LocalGps> {
+        hyp.validate()?;
+        let mut rng = Pcg64::new(cfg.seed);
+        let xs = se_ard::scale_inputs(train_x, hyp)?;
+        let part = match cfg.partition {
+            PartitionStrategy::KMeans { iters } => {
+                partition::kmeans_partition(&xs, cfg.num_blocks, iters, &mut rng)?
+            }
+            PartitionStrategy::Contiguous => {
+                partition::contiguous_partition(&xs, cfg.num_blocks)?
+            }
+            PartitionStrategy::Random => {
+                partition::random_partition(&xs, cfg.num_blocks, &mut rng)?
+            }
+        };
+        let mut models = Vec::with_capacity(cfg.num_blocks);
+        for blk in &part.blocks {
+            let xb = train_x.select_rows(blk);
+            let yb: Vec<f64> = blk.iter().map(|&i| train_y[i]).collect();
+            models.push(FgpRegressor::fit(&xb, &yb, hyp)?);
+        }
+        Ok(LocalGps { hyp: hyp.clone(), partition: part, models })
+    }
+
+    pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
+        let xs = se_ard::scale_inputs(test_x, &self.hyp)?;
+        let routed = self.partition.assign_points(&xs);
+        let mut mean = vec![0.0; test_x.rows()];
+        let mut var = vec![0.0; test_x.rows()];
+        for (blk, idxs) in routed.iter().enumerate() {
+            if idxs.is_empty() {
+                continue;
+            }
+            let xt = test_x.select_rows(idxs);
+            let p = self.models[blk].predict(&xt)?;
+            for (k, &orig) in idxs.iter().enumerate() {
+                mean[orig] = p.mean[k];
+                var[orig] = p.var[k];
+            }
+        }
+        Ok(Prediction { mean, var, cov: None })
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+}
+
+/// Largest jump of a 1-D prediction curve between consecutive inputs —
+/// the Figure-6 discontinuity statistic.
+pub fn max_jump(sorted_x: &[f64], mean: &[f64]) -> f64 {
+    assert_eq!(sorted_x.len(), mean.len());
+    let mut worst = 0.0_f64;
+    for i in 1..mean.len() {
+        let dx = (sorted_x[i] - sorted_x[i - 1]).max(1e-9);
+        if dx < 0.1 {
+            worst = worst.max((mean[i] - mean[i - 1]).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(m: usize) -> LmaConfig {
+        LmaConfig {
+            num_blocks: m,
+            markov_order: 0,
+            support_size: 1,
+            seed: 5,
+            partition: PartitionStrategy::Contiguous,
+            use_pjrt: false,
+        }
+    }
+
+    #[test]
+    fn fits_and_predicts_per_block() {
+        let mut rng = Pcg64::new(201);
+        let hyp = SeArdHyper::isotropic(1, 0.8, 1.0, 0.05);
+        let xs: Vec<f64> = (0..120).map(|i| -3.0 + i as f64 * 0.05).collect();
+        let x = Mat::col_vec(&xs);
+        let y: Vec<f64> = xs.iter().map(|v| v.cos() + 0.05 * rng.normal()).collect();
+        let m = LocalGps::fit(&x, &y, &hyp, &cfg(4)).unwrap();
+        let t = Mat::col_vec(&[-2.0, 0.0, 2.0]);
+        let p = m.predict(&t).unwrap();
+        for (i, &tx) in [-2.0, 0.0, 2.0].iter().enumerate() {
+            assert!((p.mean[i] - (tx as f64).cos()).abs() < 0.3);
+        }
+    }
+
+    #[test]
+    fn interior_predictions_reasonable_but_independent() {
+        // Each block sees only local data; a far-away test point routed to
+        // a block reverts to that block's prior, not the global data.
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.05);
+        let x = Mat::col_vec(&[-2.0, -1.9, 2.0, 2.1]);
+        let y = vec![1.0, 1.0, -1.0, -1.0];
+        let m = LocalGps::fit(&x, &y, &hyp, &cfg(2)).unwrap();
+        let p = m.predict(&Mat::col_vec(&[-2.0, 2.0])).unwrap();
+        assert!((p.mean[0] - 1.0).abs() < 0.15);
+        assert!((p.mean[1] + 1.0).abs() < 0.15);
+    }
+
+    #[test]
+    fn max_jump_detects_steps() {
+        let xs = [0.0, 0.01, 0.02, 0.03];
+        let smooth = [0.0, 0.01, 0.02, 0.03];
+        let steppy = [0.0, 0.01, 0.9, 0.91];
+        assert!(max_jump(&xs, &smooth) < 0.02);
+        assert!(max_jump(&xs, &steppy) > 0.8);
+    }
+}

@@ -1,0 +1,18 @@
+//! Sparse GP baselines the paper evaluates against:
+//!
+//! * [`pic`] — partially independent conditional approximation
+//!   (Snelson & Ghahramani 2007; parallelized by Chen et al. 2013). LMA
+//!   with B = 0 must coincide with this exactly — verified in the
+//!   `lma::spectrum` tests.
+//! * [`ssgp`] — sparse spectrum GP (Lázaro-Gredilla et al. 2010): random
+//!   Fourier features + Bayesian linear regression.
+//! * [`local_gps`] — independent per-block GPs (Park et al. 2011 family),
+//!   the discontinuity baseline of the paper's Appendix D / Fig. 6.
+//! * [`fitc`] — fully independent training conditional (Snelson &
+//!   Ghahramani 2005), included as an extension baseline from the same
+//!   low-rank family.
+
+pub mod pic;
+pub mod ssgp;
+pub mod local_gps;
+pub mod fitc;

@@ -1,0 +1,203 @@
+//! PIC — partially independent conditional approximation (Snelson &
+//! Ghahramani 2007), the parallel version being Chen et al. (2013).
+//!
+//! The paper proves LMA with B = 0 *is* PIC (Section 3: "LMA generalizes
+//! PIC"), so the efficient centralized/parallel engines here delegate to
+//! the LMA machinery at Markov order 0 — same summaries, no recursion.
+//! In addition, [`dense_oracle`] implements PIC **independently** from the
+//! textbook prior covariance (Q everywhere, exact blocks on the diagonal,
+//! dense O(|D|³) inversion) so the equivalence is cross-checked between
+//! two separate derivations in `rust/tests/`.
+
+use crate::config::{ClusterConfig, LmaConfig};
+use crate::gp::Prediction;
+use crate::kernels::se_ard::{self, SeArdHyper};
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::parallel::{ParallelLma, ParallelRun};
+use crate::lma::LmaRegressor;
+use crate::util::error::Result;
+
+/// Centralized PIC = centralized LMA at B = 0.
+pub struct PicRegressor {
+    inner: LmaRegressor,
+}
+
+impl PicRegressor {
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+    ) -> Result<PicRegressor> {
+        let cfg = LmaConfig { markov_order: 0, ..cfg.clone() };
+        Ok(PicRegressor { inner: LmaRegressor::fit(train_x, train_y, hyp, &cfg)? })
+    }
+
+    pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
+        self.inner.predict(test_x)
+    }
+
+    pub fn inner(&self) -> &LmaRegressor {
+        &self.inner
+    }
+}
+
+/// Parallel PIC = parallel LMA at B = 0 (Chen et al. 2013's scheme is the
+/// B = 0 degenerate case of the Remark-1 protocol: no sweep wavefront,
+/// just local summaries → reduce → broadcast).
+pub struct ParallelPic {
+    inner: ParallelLma,
+}
+
+impl ParallelPic {
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+        cluster: &ClusterConfig,
+    ) -> Result<ParallelPic> {
+        let cfg = LmaConfig { markov_order: 0, ..cfg.clone() };
+        Ok(ParallelPic { inner: ParallelLma::fit(train_x, train_y, hyp, &cfg, cluster)? })
+    }
+
+    pub fn predict(&self, test_x: &Mat) -> Result<ParallelRun> {
+        self.inner.predict(test_x)
+    }
+}
+
+/// Estimate of parallel PIC's per-core working-set bytes — used by the
+/// Table-3 harness to reproduce the paper's "fails due to insufficient
+/// shared memory between cores" observation (|S| = 3400-sized summaries
+/// replicated per core).
+pub fn pic_percore_bytes(data_per_block: usize, support: usize, test_per_block: usize, dim: usize) -> usize {
+    let f = 8;
+    // block data + Σ_DS strip + |S|² summary + test strips.
+    f * (data_per_block * dim
+        + data_per_block * support
+        + support * support
+        + test_per_block * (support + data_per_block))
+}
+
+/// Textbook dense PIC implementation — O((|D|+|U|)³) memory/time, for
+/// tests and the toy example only.
+pub mod dense_oracle {
+    use super::*;
+    use crate::lma::partition::Partition;
+
+    /// Dense PIC posterior given an explicit partition of D and a block
+    /// assignment for U.
+    pub fn predict(
+        train_x: &Mat,
+        train_y: &[f64],
+        test_x: &Mat,
+        hyp: &SeArdHyper,
+        support_scaled: &Mat,
+        partition: &Partition,
+    ) -> Result<Prediction> {
+        let xd = se_ard::scale_inputs(train_x, hyp)?;
+        let xu = se_ard::scale_inputs(test_x, hyp)?;
+        let basis = crate::lma::residual::SupportBasis::new(support_scaled.clone(), hyp.sigma_s2)?;
+        let wt_d = basis.wt(&xd)?;
+        let wt_u = basis.wt(&xu)?;
+        let assign_d = partition.assignment(train_x.rows());
+        let assign_u_blocks = partition.assign_points(&xu);
+        let mut assign_u = vec![0usize; test_x.rows()];
+        for (blk, idxs) in assign_u_blocks.iter().enumerate() {
+            for &i in idxs {
+                assign_u[i] = blk;
+            }
+        }
+
+        // Σ̄_DD: Q + blockdiag(R) + noise handled via exact in-block Σ.
+        let n = train_x.rows();
+        let mut sig_dd = wt_d.matmul_t(&wt_d)?; // Q everywhere
+        for i in 0..n {
+            for j in 0..n {
+                if assign_d[i] == assign_d[j] {
+                    let mut exact = se_ard::cov_scalar(xd.row(i), xd.row(j), &SeArdHyper {
+                        sigma_s2: hyp.sigma_s2,
+                        sigma_n2: 0.0,
+                        lengthscales: vec![1.0; xd.cols()],
+                        mean: 0.0,
+                    });
+                    if i == j {
+                        exact += hyp.sigma_n2;
+                    }
+                    sig_dd.set(i, j, exact);
+                }
+            }
+        }
+        // Σ̄_UD: Q + exact within the shared block.
+        let nu = test_x.rows();
+        let mut sig_ud = wt_u.matmul_t(&wt_d)?;
+        for i in 0..nu {
+            for j in 0..n {
+                if assign_u[i] == assign_d[j] {
+                    let exact = se_ard::cov_scalar(xu.row(i), xd.row(j), &SeArdHyper {
+                        sigma_s2: hyp.sigma_s2,
+                        sigma_n2: 0.0,
+                        lengthscales: vec![1.0; xd.cols()],
+                        mean: 0.0,
+                    });
+                    sig_ud.set(i, j, exact);
+                }
+            }
+        }
+        let (f, _) = gp_cholesky(&sig_dd)?;
+        let centered: Vec<f64> = train_y.iter().map(|y| y - hyp.mean).collect();
+        let alpha = f.solve_vec(&centered)?;
+        let mean: Vec<f64> =
+            sig_ud.matvec(&alpha)?.into_iter().map(|v| v + hyp.mean).collect();
+        // Marginal variances: Σ̄_UU diag − rowᵀ Σ̄_DD⁻¹ row.
+        let sol = f.solve_mat(&sig_ud.transpose())?;
+        let prior = se_ard::prior_var(hyp);
+        let var: Vec<f64> = (0..nu)
+            .map(|i| {
+                let quad: f64 = (0..n).map(|j| sig_ud.get(i, j) * sol.get(j, i)).sum();
+                (prior - quad).max(0.0)
+            })
+            .collect();
+        Ok(Prediction { mean, var, cov: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pic_is_lma_b0() {
+        let mut rng = Pcg64::new(181);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(80, -4.0, 4.0));
+        let y: Vec<f64> = (0..80).map(|i| x.get(i, 0).sin()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(20, -4.0, 4.0));
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: 3, // ignored by PIC wrapper
+            support_size: 12,
+            seed: 7,
+            partition: PartitionStrategy::KMeans { iters: 8 },
+            use_pjrt: false,
+        };
+        let pic = PicRegressor::fit(&x, &y, &hyp, &cfg).unwrap().predict(&t).unwrap();
+        let lma0 = LmaRegressor::fit(&x, &y, &hyp, &LmaConfig { markov_order: 0, ..cfg })
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        for (a, b) in pic.mean.iter().zip(&lma0.mean) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn percore_bytes_monotone_in_support() {
+        let small = pic_percore_bytes(1000, 512, 100, 6);
+        let big = pic_percore_bytes(1000, 3400, 100, 6);
+        assert!(big > small * 2);
+    }
+}

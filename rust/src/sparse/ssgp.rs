@@ -1,0 +1,168 @@
+//! Sparse Spectrum GP (Lázaro-Gredilla et al. 2010).
+//!
+//! The SE-ARD kernel's spectral density is Gaussian; drawing `m` spectral
+//! points s_r ~ N(0, diag(1/(2π²ℓ²))) gives the Monte-Carlo feature map
+//!
+//!   φ(x) = √(σ_s²/m) · [cos(2π s_rᵀx), sin(2π s_rᵀx)]_{r=1..m}   (2m dims)
+//!
+//! and the SSGP posterior is Bayesian linear regression in φ-space:
+//! A = φ(X)ᵀφ(X) + σ_n²·I, w = A⁻¹φ(X)ᵀy — O(n·m² + m³) train,
+//! O(m) per-test mean. This is the paper's "number of spectral points"
+//! baseline (its |S| in Tables 1a/1b is the spectral-point count).
+
+use crate::gp::Prediction;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::chol::CholFactor;
+use crate::linalg::gemm;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::util::error::{PgprError, Result};
+use crate::util::rng::Pcg64;
+
+/// Fitted sparse-spectrum GP.
+pub struct SsgpRegressor {
+    hyp: SeArdHyper,
+    /// Spectral frequencies (m × d), already divided by lengthscales.
+    freqs: Mat,
+    /// Posterior weights (2m).
+    weights: Vec<f64>,
+    /// Cholesky of A = ΦᵀΦ + σ_n²·m/σ_s² · I (for predictive variance).
+    a_factor: CholFactor,
+    /// σ_s²/m normalization.
+    scale: f64,
+}
+
+impl SsgpRegressor {
+    /// Feature map rows for a batch of raw inputs (n × 2m).
+    fn features(&self, x: &Mat) -> Result<Mat> {
+        phi(x, &self.freqs)
+    }
+
+    pub fn num_spectral_points(&self) -> usize {
+        self.freqs.rows()
+    }
+
+    pub fn fit(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        num_spectral: usize,
+        seed: u64,
+    ) -> Result<SsgpRegressor> {
+        hyp.validate()?;
+        if num_spectral == 0 {
+            return Err(PgprError::Config("SSGP needs ≥ 1 spectral point".into()));
+        }
+        if train_x.rows() != train_y.len() {
+            return Err(PgprError::Shape("SSGP fit: X/y length mismatch".into()));
+        }
+        let d = hyp.dim();
+        let mut rng = Pcg64::new(seed);
+        // s_r ~ N(0, I) scaled by 1/(2π ℓ_i): then 2π sᵀx has the right
+        // spectral distribution for the SE kernel.
+        let mut freqs = Mat::zeros(num_spectral, d);
+        for r in 0..num_spectral {
+            for (j, l) in hyp.lengthscales.iter().enumerate() {
+                freqs.set(r, j, rng.normal() / l);
+            }
+        }
+        let scale = hyp.sigma_s2 / num_spectral as f64;
+
+        let phi_x = phi(train_x, &freqs)?;
+        // A = ΦᵀΦ + (σ_n²/scale)·I  (working in unnormalized features).
+        let mut a = gemm::syrk_tn(&phi_x);
+        a.add_diag(hyp.sigma_n2 / scale);
+        let (a_factor, _) = gp_cholesky(&a)?;
+        let centered: Vec<f64> = train_y.iter().map(|y| y - hyp.mean).collect();
+        let rhs = phi_x.transpose().matvec(&centered)?;
+        let weights = a_factor.solve_vec(&rhs)?;
+        Ok(SsgpRegressor { hyp: hyp.clone(), freqs, weights, a_factor, scale })
+    }
+
+    pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
+        let phi_t = self.features(test_x)?;
+        let mean: Vec<f64> = phi_t
+            .matvec(&self.weights)?
+            .into_iter()
+            .map(|v| v + self.hyp.mean)
+            .collect();
+        // var = σ_n² + σ_n²·φᵀA⁻¹φ (Lázaro-Gredilla eq. 7, unnormalized).
+        let v = self.a_factor.half_solve(&phi_t.transpose())?;
+        let var: Vec<f64> = (0..test_x.rows())
+            .map(|j| {
+                let q: f64 = (0..v.rows()).map(|i| v.get(i, j) * v.get(i, j)).sum();
+                self.hyp.sigma_n2 * (1.0 + q)
+            })
+            .collect();
+        let _ = self.scale;
+        Ok(Prediction { mean, var, cov: None })
+    }
+}
+
+/// Trigonometric feature matrix [cos(2π S x) | sin(2π S x)] — note the
+/// 2π is absorbed since `freqs` are already radian frequencies here.
+fn phi(x: &Mat, freqs: &Mat) -> Result<Mat> {
+    let proj = x.matmul_t(freqs)?; // n × m, rows are sᵀx
+    let n = x.rows();
+    let m = freqs.rows();
+    let mut out = Mat::zeros(n, 2 * m);
+    for i in 0..n {
+        for r in 0..m {
+            let t = proj.get(i, r);
+            out.set(i, r, t.cos());
+            out.set(i, m + r, t.sin());
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::fgp::FgpRegressor;
+    use crate::metrics::rmse;
+
+    fn sine_problem(seed: u64, n: usize) -> (Mat, Vec<f64>, Mat, Vec<f64>, SeArdHyper) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -4.0, 4.0));
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin() + 0.1 * rng.normal()).collect();
+        let t = Mat::col_vec(&rng.uniform_vec(40, -3.5, 3.5));
+        let ty: Vec<f64> = t.col(0).iter().map(|v| v.sin()).collect();
+        (x, y, t, ty, hyp)
+    }
+
+    #[test]
+    fn approaches_fgp_with_many_features() {
+        let (x, y, t, ty, hyp) = sine_problem(191, 150);
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&t).unwrap();
+        let ssgp = SsgpRegressor::fit(&x, &y, &hyp, 128, 1).unwrap().predict(&t).unwrap();
+        let r_fgp = rmse(&fgp.mean, &ty);
+        let r_ssgp = rmse(&ssgp.mean, &ty);
+        assert!(r_ssgp < r_fgp * 2.0 + 0.05, "SSGP {r_ssgp} vs FGP {r_fgp}");
+    }
+
+    #[test]
+    fn more_features_no_worse() {
+        let (x, y, t, ty, hyp) = sine_problem(192, 120);
+        let few = SsgpRegressor::fit(&x, &y, &hyp, 4, 2).unwrap().predict(&t).unwrap();
+        let many = SsgpRegressor::fit(&x, &y, &hyp, 128, 2).unwrap().predict(&t).unwrap();
+        assert!(rmse(&many.mean, &ty) <= rmse(&few.mean, &ty) + 0.02);
+    }
+
+    #[test]
+    fn variance_positive_and_floored_by_noise() {
+        let (x, y, t, _ty, hyp) = sine_problem(193, 100);
+        let p = SsgpRegressor::fit(&x, &y, &hyp, 32, 3).unwrap().predict(&t).unwrap();
+        for &v in &p.var {
+            assert!(v >= hyp.sigma_n2 * 0.999, "var {v} below noise floor");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let (x, y, _t, _ty, hyp) = sine_problem(194, 30);
+        assert!(SsgpRegressor::fit(&x, &y, &hyp, 0, 1).is_err());
+        assert!(SsgpRegressor::fit(&x, &y[..10], &hyp, 8, 1).is_err());
+    }
+}

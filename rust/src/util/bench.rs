@@ -1,0 +1,177 @@
+//! Micro/macro benchmark harness (offline replacement for criterion).
+//!
+//! Every `[[bench]]` target is a plain `fn main()` (harness = false) that
+//! builds a [`BenchSuite`], registers cases, and calls [`BenchSuite::run`].
+//! The harness warms up, runs a fixed-duration measurement window, and
+//! reports median / p10 / p90 wall-clock per iteration plus optional
+//! throughput. Results are also appended to `results/bench/*.csv` so the
+//! EXPERIMENTS.md §Perf iterations have a machine-readable trail.
+
+use std::time::Instant;
+
+use crate::util::csv::CsvTable;
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    /// Optional user-supplied work units per iteration (e.g. flops) for
+    /// throughput reporting.
+    pub units_per_iter: Option<f64>,
+}
+
+/// Harness configuration (overridable via env so `cargo bench` stays fast
+/// in CI but can be cranked up for the perf pass).
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+        BenchConfig {
+            warmup_iters: if fast { 1 } else { 2 },
+            min_iters: if fast { 2 } else { 5 },
+            max_iters: if fast { 5 } else { 50 },
+            target_seconds: if fast { 0.2 } else { 1.0 },
+        }
+    }
+}
+
+/// A suite of benchmark cases sharing a name and output CSV.
+pub struct BenchSuite {
+    pub suite: String,
+    pub cfg: BenchConfig,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(suite: &str) -> Self {
+        println!("\n=== bench suite: {suite} ===");
+        BenchSuite { suite: suite.to_string(), cfg: BenchConfig::default(), results: Vec::new() }
+    }
+
+    /// Measure `f` repeatedly. `f` should perform one full iteration of the
+    /// workload and return a value that is consumed (to defeat DCE, return
+    /// something data-dependent and pass it to `std::hint::black_box`
+    /// inside `f`).
+    pub fn case(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::new();
+        let window_start = Instant::now();
+        while samples.len() < self.cfg.min_iters
+            || (window_start.elapsed().as_secs_f64() < self.cfg.target_seconds
+                && samples.len() < self.cfg.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            let idx = ((samples.len() - 1) as f64 * p).round() as usize;
+            samples[idx]
+        };
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            median_s: pct(0.5),
+            p10_s: pct(0.1),
+            p90_s: pct(0.9),
+            units_per_iter: None,
+        };
+        println!(
+            "  {name:<48} median {:>12}  p10 {:>12}  p90 {:>12}  ({} iters)",
+            fmt_time(res.median_s),
+            fmt_time(res.p10_s),
+            fmt_time(res.p90_s),
+            res.iters
+        );
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Like [`case`] but reports throughput in `units` per second (units =
+    /// e.g. flops, points, requests).
+    pub fn case_with_throughput(&mut self, name: &str, units: f64, f: impl FnMut()) {
+        self.case(name, f);
+        let last = self.results.last_mut().unwrap();
+        last.units_per_iter = Some(units);
+        println!(
+            "  {:<48} throughput {:.3e} units/s",
+            "", units / last.median_s
+        );
+    }
+
+    /// Write results CSV under `results/bench/<suite>.csv` and print a
+    /// footer. Call at the end of each bench main().
+    pub fn finish(&self) {
+        let mut t = CsvTable::new(&["case", "iters", "median_s", "p10_s", "p90_s", "units_per_iter"]);
+        for r in &self.results {
+            t.push_row(vec![
+                r.name.clone(),
+                r.iters.to_string(),
+                format!("{:.9}", r.median_s),
+                format!("{:.9}", r.p10_s),
+                format!("{:.9}", r.p90_s),
+                r.units_per_iter.map(|u| format!("{u}")).unwrap_or_default(),
+            ]);
+        }
+        let path = format!("results/bench/{}.csv", self.suite);
+        if let Err(e) = t.write_path(&path) {
+            eprintln!("warning: could not write {path}: {e}");
+        } else {
+            println!("=== wrote {path} ===");
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_cases_and_records() {
+        std::env::set_var("PGPR_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("unit_test_suite");
+        suite.cfg = BenchConfig { warmup_iters: 1, min_iters: 2, max_iters: 3, target_seconds: 0.01 };
+        suite.case("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(suite.results.len(), 1);
+        let r = &suite.results[0];
+        assert!(r.iters >= 2);
+        assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

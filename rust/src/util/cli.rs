@@ -1,0 +1,270 @@
+//! Declarative command-line flag parser (offline replacement for `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help`. Used by the `pgpr`
+//! binary, every example, and every bench harness.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{PgprError, Result};
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Builder-style argument parser.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+    values: BTreeMap<String, String>,
+    positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a flag taking a value, with a default.
+    pub fn flag(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required flag (no default).
+    pub fn required(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean switch (false unless present).
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some("false".to_string()),
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n", self.program, self.about, self.program);
+        for f in &self.flags {
+            let kind = if f.is_bool { "" } else { " <value>" };
+            let def = match &f.default {
+                Some(d) if !f.is_bool => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", f.name, f.help));
+        }
+        s.push_str("  --help\n      print this message\n");
+        s
+    }
+
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                return Err(PgprError::Config(self.help_text()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .cloned()
+                    .ok_or_else(|| {
+                        PgprError::Config(format!("unknown flag --{name}\n\n{}", self.help_text()))
+                    })?;
+                let value = if spec.is_bool {
+                    match inline_val {
+                        Some(v) => v,
+                        None => "true".to_string(),
+                    }
+                } else {
+                    match inline_val {
+                        Some(v) => v,
+                        None => it.next().ok_or_else(|| {
+                            PgprError::Config(format!("flag --{name} expects a value"))
+                        })?,
+                    }
+                };
+                self.values.insert(name, value);
+            } else {
+                self.positionals.push(arg);
+            }
+        }
+        // Check required flags.
+        for f in &self.flags {
+            if f.default.is_none() && !self.values.contains_key(&f.name) {
+                return Err(PgprError::Config(format!(
+                    "missing required flag --{}\n\n{}",
+                    f.name,
+                    self.help_text()
+                )));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Parse from the process arguments; on `--help` or error prints and
+    /// exits.
+    pub fn parse(self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(PgprError::Config(msg)) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.contains("USAGE:") && !msg.contains("unknown") && !msg.contains("missing") { 0 } else { 2 });
+            }
+            Err(e) => {
+                eprintln!("argument error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn raw(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        for f in &self.flags {
+            if f.name == name {
+                return f.default.clone().unwrap_or_default();
+            }
+        }
+        panic!("flag --{name} was never declared");
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        let v = self.raw(name);
+        v.parse().unwrap_or_else(|_| panic!("flag --{name}: `{v}` is not an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        let v = self.raw(name);
+        v.parse().unwrap_or_else(|_| panic!("flag --{name}: `{v}` is not a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.raw(name).as_str(), "true" | "1" | "yes")
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 1000,2000,4000`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        let v = self.raw(name);
+        v.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("flag --{name}: `{s}` is not an integer"))
+            })
+            .collect()
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = Args::new("t", "test")
+            .flag("n", "10", "count")
+            .switch("verbose", "talkative")
+            .parse_from(argv(&["--n", "32", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 32);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn default_applies_when_absent() {
+        let a = Args::new("t", "test")
+            .flag("n", "10", "count")
+            .switch("v", "v")
+            .parse_from(argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 10);
+        assert!(!a.get_bool("v"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = Args::new("t", "t")
+            .flag("sizes", "", "csv list")
+            .parse_from(argv(&["--sizes=1,2,3"]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("sizes"), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let r = Args::new("t", "t").parse_from(argv(&["--bogus"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let r = Args::new("t", "t").required("path", "p").parse_from(argv(&[]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = Args::new("t", "t")
+            .flag("n", "1", "n")
+            .parse_from(argv(&["cmd", "--n", "2", "sub"]))
+            .unwrap();
+        assert_eq!(a.positionals(), &["cmd".to_string(), "sub".to_string()]);
+    }
+
+    #[test]
+    fn help_requested_is_config_error_with_usage() {
+        let r = Args::new("t", "about-string").parse_from(argv(&["--help"]));
+        match r {
+            Err(PgprError::Config(msg)) => assert!(msg.contains("USAGE")),
+            _ => panic!("expected help"),
+        }
+    }
+}

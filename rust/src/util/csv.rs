@@ -1,0 +1,207 @@
+//! CSV reading/writing for datasets and experiment results.
+//!
+//! Deliberately small: comma separator, optional header, numeric columns,
+//! double-quote escaping for string cells. This is the on-disk format for
+//! generated datasets (`pgpr data gen`) and for every experiment's
+//! `results/*.csv` output.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::util::error::{PgprError, Result};
+
+/// An in-memory CSV table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of already-formatted cells.
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity != header arity");
+        self.rows.push(cells);
+    }
+
+    /// Append a row of f64 cells (formatted with enough precision to
+    /// round-trip).
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_row(cells.iter().map(|x| format!("{x:.9}")).collect());
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Result<usize> {
+        self.header
+            .iter()
+            .position(|h| h == name)
+            .ok_or_else(|| PgprError::Data(format!("CSV column `{name}` not found")))
+    }
+
+    /// Entire column parsed as f64.
+    pub fn col_f64(&self, name: &str) -> Result<Vec<f64>> {
+        let c = self.col(name)?;
+        self.rows
+            .iter()
+            .map(|r| {
+                r[c].parse::<f64>()
+                    .map_err(|_| PgprError::Data(format!("bad number `{}` in column {name}", r[c])))
+            })
+            .collect()
+    }
+
+    pub fn write_path(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", encode_row(&self.header))?;
+        for row in &self.rows {
+            writeln!(w, "{}", encode_row(row))?;
+        }
+        Ok(())
+    }
+
+    pub fn read_path(path: impl AsRef<Path>) -> Result<CsvTable> {
+        let reader = BufReader::new(File::open(&path)?);
+        let mut lines = reader.lines();
+        let header = match lines.next() {
+            Some(line) => parse_row(&line?)?,
+            None => return Err(PgprError::Data("empty CSV file".into())),
+        };
+        let mut rows = Vec::new();
+        for line in lines {
+            let line = line?;
+            if line.is_empty() {
+                continue;
+            }
+            let row = parse_row(&line)?;
+            if row.len() != header.len() {
+                return Err(PgprError::Data(format!(
+                    "CSV row arity {} != header arity {}",
+                    row.len(),
+                    header.len()
+                )));
+            }
+            rows.push(row);
+        }
+        Ok(CsvTable { header, rows })
+    }
+}
+
+fn needs_quoting(cell: &str) -> bool {
+    cell.contains(',') || cell.contains('"') || cell.contains('\n')
+}
+
+fn encode_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if needs_quoting(c) {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn parse_row(line: &str) -> Result<Vec<String>> {
+    let bytes = line.as_bytes();
+    let mut cells = Vec::new();
+    let mut cur = String::new();
+    let mut i = 0;
+    let mut in_quotes = false;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if in_quotes {
+            if b == b'"' {
+                if bytes.get(i + 1) == Some(&b'"') {
+                    cur.push('"');
+                    i += 2;
+                    continue;
+                }
+                in_quotes = false;
+                i += 1;
+            } else {
+                // Copy one UTF-8 scalar.
+                let rest = &line[i..];
+                let c = rest.chars().next().unwrap();
+                cur.push(c);
+                i += c.len_utf8();
+            }
+        } else {
+            match b {
+                b',' => {
+                    cells.push(std::mem::take(&mut cur));
+                    i += 1;
+                }
+                b'"' if cur.is_empty() => {
+                    in_quotes = true;
+                    i += 1;
+                }
+                _ => {
+                    let rest = &line[i..];
+                    let c = rest.chars().next().unwrap();
+                    cur.push(c);
+                    i += c.len_utf8();
+                }
+            }
+        }
+    }
+    if in_quotes {
+        return Err(PgprError::Data("unterminated quote in CSV row".into()));
+    }
+    cells.push(cur);
+    Ok(cells)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_disk() {
+        let mut t = CsvTable::new(&["a", "b,with,commas", "c"]);
+        t.push_row(vec!["1".into(), "x\"y".into(), "plain".into()]);
+        t.push_nums(&[0.5, -3.0, 1e-9]);
+        let dir = std::env::temp_dir().join("pgpr_csv_test");
+        let path = dir.join("t.csv");
+        t.write_path(&path).unwrap();
+        let back = CsvTable::read_path(&path).unwrap();
+        assert_eq!(back.header, t.header);
+        assert_eq!(back.rows, t.rows);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn col_f64_parses() {
+        let mut t = CsvTable::new(&["x"]);
+        t.push_nums(&[1.5]);
+        t.push_nums(&[-2.0]);
+        assert_eq!(t.col_f64("x").unwrap(), vec![1.5, -2.0]);
+        assert!(t.col_f64("y").is_err());
+    }
+
+    #[test]
+    fn quoted_cells() {
+        let row = parse_row(r#"a,"b,c","d""e""#).unwrap();
+        assert_eq!(row, vec!["a", "b,c", "d\"e"]);
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("pgpr_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "a,b\n1\n").unwrap();
+        assert!(CsvTable::read_path(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

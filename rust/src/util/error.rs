@@ -1,0 +1,90 @@
+//! Library-wide error type.
+//!
+//! A single enum keeps matching on failure modes easy for callers (e.g. the
+//! coordinator retries Cholesky failures with more jitter, and treats
+//! artifact-not-found as "fall back to the native covariance path").
+
+use std::fmt;
+
+/// All errors produced by the pgpr library.
+#[derive(Debug)]
+pub enum PgprError {
+    /// A matrix operation received incompatible dimensions.
+    Shape(String),
+    /// Cholesky factorization failed (matrix not positive definite even
+    /// after jitter retries).
+    NotPositiveDefinite { size: usize, jitter_tried: f64 },
+    /// Configuration was invalid (bad flag value, inconsistent block/order
+    /// combination, ...).
+    Config(String),
+    /// An AOT artifact was missing or malformed.
+    Artifact(String),
+    /// The PJRT runtime reported an error.
+    Pjrt(String),
+    /// Dataset generation / parsing failure.
+    Data(String),
+    /// I/O error with context.
+    Io(String),
+    /// Cluster-simulation protocol violation (e.g. message to unknown rank).
+    Cluster(String),
+}
+
+impl fmt::Display for PgprError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PgprError::Shape(m) => write!(f, "shape error: {m}"),
+            PgprError::NotPositiveDefinite { size, jitter_tried } => write!(
+                f,
+                "matrix of size {size} not positive definite (max jitter tried: {jitter_tried:e})"
+            ),
+            PgprError::Config(m) => write!(f, "config error: {m}"),
+            PgprError::Artifact(m) => write!(f, "artifact error: {m}"),
+            PgprError::Pjrt(m) => write!(f, "pjrt error: {m}"),
+            PgprError::Data(m) => write!(f, "data error: {m}"),
+            PgprError::Io(m) => write!(f, "io error: {m}"),
+            PgprError::Cluster(m) => write!(f, "cluster error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for PgprError {}
+
+impl From<std::io::Error> for PgprError {
+    fn from(e: std::io::Error) -> Self {
+        PgprError::Io(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, PgprError>;
+
+/// Helper for constructing shape errors with uniform formatting.
+pub fn shape_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(PgprError::Shape(msg.into()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = PgprError::NotPositiveDefinite { size: 8, jitter_tried: 1e-4 };
+        let s = e.to_string();
+        assert!(s.contains('8'));
+        assert!(s.contains("positive definite"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: PgprError = ioe.into();
+        assert!(matches!(e, PgprError::Io(_)));
+    }
+
+    #[test]
+    fn shape_err_helper() {
+        let r: Result<()> = shape_err("a x b");
+        assert!(matches!(r, Err(PgprError::Shape(_))));
+    }
+}

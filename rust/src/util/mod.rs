@@ -1,0 +1,16 @@
+//! Self-contained substrates: error type, PRNG, JSON, CSV, CLI parsing,
+//! bench harness, progress logging, table rendering and a tiny
+//! property-testing helper.
+//!
+//! Everything here is written from scratch because the build environment is
+//! offline: the only external crates are `xla` (PJRT bindings) and `anyhow`.
+
+pub mod error;
+pub mod rng;
+pub mod json;
+pub mod csv;
+pub mod cli;
+pub mod bench;
+pub mod tables;
+pub mod proptest;
+pub mod timer;

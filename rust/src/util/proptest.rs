@@ -1,0 +1,138 @@
+//! Tiny property-based testing helper (offline replacement for `proptest`).
+//!
+//! `for_cases(seed, n, |rng| ...)` runs a property closure over `n`
+//! independently seeded cases and reports the failing case index + seed on
+//! panic, so failures are reproducible: re-run with `PGPR_PROP_SEED=<seed>`
+//! and `PGPR_PROP_CASE=<idx>` to isolate one case.
+//!
+//! Coordinator invariants (partition routing, summary order-invariance,
+//! banded structure, PSD-ness of predictive covariances, ...) are tested
+//! through this helper — see `rust/tests/prop_*.rs`.
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases to run, scaled down when `PGPR_PROP_FAST` is set.
+pub fn default_cases(n: usize) -> usize {
+    if std::env::var("PGPR_PROP_FAST").is_ok() {
+        (n / 4).max(4)
+    } else {
+        n
+    }
+}
+
+/// Run `prop` on `n` cases, each with its own deterministic RNG stream.
+pub fn for_cases(seed: u64, n: usize, mut prop: impl FnMut(&mut Pcg64)) {
+    let seed = std::env::var("PGPR_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(seed);
+    let only_case: Option<usize> =
+        std::env::var("PGPR_PROP_CASE").ok().and_then(|s| s.parse().ok());
+    let mut root = Pcg64::new(seed);
+    for case in 0..default_cases(n) {
+        let mut rng = root.split(case as u64);
+        if let Some(oc) = only_case {
+            if case != oc {
+                continue;
+            }
+        }
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case} (reproduce with PGPR_PROP_SEED={seed} PGPR_PROP_CASE={case})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+// ----- common generators -----
+
+/// Random size in [lo, hi].
+pub fn gen_size(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Vector of standard normals scaled by `scale`.
+pub fn gen_vec(rng: &mut Pcg64, n: usize, scale: f64) -> Vec<f64> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// Random symmetric positive-definite matrix (as flat row-major data) of
+/// size n, built as A Aᵀ + n·εI. Returned as (data, n).
+pub fn gen_spd(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    let a: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+    let mut m = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += a[i * n + k] * a[j * n + k];
+            }
+            m[i * n + j] = acc;
+        }
+    }
+    for i in 0..n {
+        m[i * n + i] += 1e-6 * n as f64 + 1e-3;
+    }
+    m
+}
+
+/// Assert two slices are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "mismatch at {i}: {x} vs {y} (tol {tol}, scale {scale})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_cases(1, 8, |_rng| {
+            count += 1;
+        });
+        assert!(count >= 4);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        for_cases(2, 8, |rng| {
+            let n = gen_size(rng, 3, 10);
+            assert!((3..=10).contains(&n));
+            let v = gen_vec(rng, n, 2.0);
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    fn spd_is_symmetric_with_positive_diagonal() {
+        for_cases(3, 6, |rng| {
+            let n = gen_size(rng, 2, 8);
+            let m = gen_spd(rng, n);
+            for i in 0..n {
+                assert!(m[i * n + i] > 0.0);
+                for j in 0..n {
+                    assert!((m[i * n + j] - m[j * n + i]).abs() < 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_catches_mismatch() {
+        assert_close(&[1.0], &[1.1], 1e-6);
+    }
+}

@@ -1,0 +1,112 @@
+//! Paper-style table rendering.
+//!
+//! The experiment harnesses print their results in the same row/column
+//! layout as the paper's Tables 1–3 (RMSE with incurred time in brackets),
+//! so a reader can eyeball paper-vs-measured side by side.
+
+/// A text table with a title, column headers and string cells.
+#[derive(Clone, Debug, Default)]
+pub struct TextTable {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        TextTable {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Paper-style cell: `RMSE(time)` e.g. `2.4(285)`.
+    pub fn rmse_time_cell(rmse: f64, secs: f64) -> String {
+        let t = if secs >= 100.0 {
+            format!("{secs:.0}")
+        } else if secs >= 1.0 {
+            format!("{secs:.1}")
+        } else {
+            format!("{secs:.2}")
+        };
+        format!("{rmse:.4}({t})")
+    }
+
+    /// Paper-style cell: `speedup(time)` e.g. `6.9(139)`.
+    pub fn speedup_time_cell(speedup: f64, secs: f64) -> String {
+        format!("{speedup:.1}({:.1})", secs)
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| "-".repeat(w + 2))
+            .collect::<Vec<_>>()
+            .join("+");
+        let fmt_row = |cells: &[String]| -> String {
+            (0..ncol)
+                .map(|i| format!(" {:<width$} ", cells[i], width = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = String::new();
+        out.push_str(&format!("\n{}\n", self.title));
+        out.push_str(&format!("{sep}\n"));
+        out.push_str(&format!("{}\n", fmt_row(&self.header)));
+        out.push_str(&format!("{sep}\n"));
+        for row in &self.rows {
+            out.push_str(&format!("{}\n", fmt_row(row)));
+        }
+        out.push_str(&format!("{sep}\n"));
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new("Table X", &["|D|", "LMA", "PIC"]);
+        t.row(vec!["8000".into(), TextTable::rmse_time_cell(8.4, 20.0), "8.1(484)".into()]);
+        t.row(vec!["16000".into(), "7.5(44)".into(), "7.5(536)".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("8.4000(20.0)"));
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        let lens: Vec<usize> = lines.iter().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "ragged table:\n{s}");
+    }
+
+    #[test]
+    fn cell_formats() {
+        assert_eq!(TextTable::rmse_time_cell(2.4, 285.0), "2.4000(285)");
+        assert_eq!(TextTable::rmse_time_cell(7.9, 0.5), "7.9000(0.50)");
+        assert_eq!(TextTable::speedup_time_cell(6.9, 139.0), "6.9(139.0)");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = TextTable::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

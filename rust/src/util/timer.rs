@@ -1,0 +1,140 @@
+//! Wall-clock timing helpers and a hierarchical phase profiler.
+//!
+//! The phase profiler is how the coordinator attributes end-to-end time to
+//! partitioning / covariance / Cholesky / summary / communication segments —
+//! it backs both the experiment tables (incurred-time columns) and the §Perf
+//! analysis in EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Measure one closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Accumulates named phase durations. Cheap enough to leave on in
+/// production paths (one Instant per phase edge).
+#[derive(Debug, Default, Clone)]
+pub struct PhaseProfiler {
+    totals: BTreeMap<String, f64>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Run `f` attributed to `phase`.
+    pub fn scope<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let (out, secs) = time_it(f);
+        self.add(phase, secs);
+        out
+    }
+
+    /// Manually add seconds to a phase (used when the duration comes from
+    /// the cluster simulator's virtual clock rather than real time).
+    pub fn add(&mut self, phase: &str, secs: f64) {
+        *self.totals.entry(phase.to_string()).or_insert(0.0) += secs;
+        *self.counts.entry(phase.to_string()).or_insert(0) += 1;
+    }
+
+    /// Merge another profiler into this one.
+    pub fn merge(&mut self, other: &PhaseProfiler) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_insert(0) += v;
+        }
+    }
+
+    pub fn total(&self, phase: &str) -> f64 {
+        self.totals.get(phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.values().sum()
+    }
+
+    /// Phases sorted by descending share of total time.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        let total = self.grand_total().max(1e-300);
+        let mut rows: Vec<(String, f64, f64)> = self
+            .totals
+            .iter()
+            .map(|(k, &v)| (k.clone(), v, v / total))
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    /// Human-readable report.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (name, secs, frac) in self.breakdown() {
+            let n = self.counts.get(&name).copied().unwrap_or(0);
+            s.push_str(&format!(
+                "  {name:<28} {secs:>10.4}s  {:>5.1}%  (n={n})\n",
+                frac * 100.0
+            ));
+        }
+        s
+    }
+}
+
+/// Format seconds like the paper's tables (integer seconds for large,
+/// sub-second precision for small).
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let (v, secs) = time_it(|| {
+            let mut acc = 0u64;
+            for i in 0..100_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(v > 0);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn profiler_accumulates_and_merges() {
+        let mut p = PhaseProfiler::new();
+        p.add("a", 1.0);
+        p.add("a", 2.0);
+        p.add("b", 0.5);
+        let mut q = PhaseProfiler::new();
+        q.add("b", 0.5);
+        p.merge(&q);
+        assert!((p.total("a") - 3.0).abs() < 1e-12);
+        assert!((p.total("b") - 1.0).abs() < 1e-12);
+        assert!((p.grand_total() - 4.0).abs() < 1e-12);
+        let top = &p.breakdown()[0];
+        assert_eq!(top.0, "a");
+    }
+
+    #[test]
+    fn fmt_secs_bands() {
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(5.25), "5.2");
+        assert_eq!(fmt_secs(0.1234), "0.123");
+    }
+}

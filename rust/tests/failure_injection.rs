@@ -1,0 +1,157 @@
+//! Failure-injection and edge-case tests: degenerate data, invalid
+//! configs, extreme hyperparameters, duplicate inputs, and the documented
+//! Cholesky failure modes.
+
+use pgpr::config::{ClusterConfig, LmaConfig, PartitionStrategy};
+use pgpr::gp::fgp::FgpRegressor;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::LmaRegressor;
+use pgpr::util::error::PgprError;
+use pgpr::util::rng::Pcg64;
+
+fn cfg(m: usize, b: usize, s: usize) -> LmaConfig {
+    LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    }
+}
+
+#[test]
+fn duplicate_inputs_survive_via_noise() {
+    // Exact duplicates make Σ_DD singular without the noise term; with
+    // σ_n² > 0 everything must still factorize.
+    let mut rng = Pcg64::new(601);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let mut xs = rng.uniform_vec(40, -2.0, 2.0);
+    for i in 0..10 {
+        xs.push(xs[i]); // 10 exact duplicates
+    }
+    let x = Mat::col_vec(&xs);
+    let y: Vec<f64> = xs.iter().map(|v| v.sin()).collect();
+    let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap();
+    assert!(fgp.predict(&Mat::col_vec(&[0.5])).is_ok());
+    let lma = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 12)).unwrap();
+    let p = lma.predict(&Mat::col_vec(&[0.5, -1.0])).unwrap();
+    assert!(p.mean.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn zero_noise_triggers_jitter_not_crash() {
+    let mut rng = Pcg64::new(602);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.0); // σ_n² = 0
+    let x = Mat::col_vec(&rng.uniform_vec(50, -3.0, 3.0));
+    let y: Vec<f64> = x.col(0).iter().map(|v| v.cos()).collect();
+    // Dense 1-D SE Gram at σ_n=0 is numerically singular — the jitter
+    // ladder must rescue it (or fail gracefully, never panic).
+    match LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 10)) {
+        Ok(m) => {
+            let p = m.predict(&Mat::col_vec(&[0.0])).unwrap();
+            assert!(p.mean[0].is_finite());
+        }
+        Err(PgprError::NotPositiveDefinite { .. }) => {} // acceptable
+        Err(e) => panic!("unexpected error: {e}"),
+    }
+}
+
+#[test]
+fn invalid_configs_rejected_cleanly() {
+    let mut rng = Pcg64::new(603);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(30, -1.0, 1.0));
+    let y = vec![0.0; 30];
+    // B ≥ M.
+    assert!(matches!(
+        LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 4, 8)),
+        Err(PgprError::Config(_))
+    ));
+    // Zero blocks.
+    assert!(LmaRegressor::fit(&x, &y, &hyp, &cfg(0, 0, 8)).is_err());
+    // More blocks than points.
+    assert!(LmaRegressor::fit(&x, &y, &hyp, &cfg(64, 1, 8)).is_err());
+    // Zero support.
+    assert!(LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 0)).is_err());
+    // y length mismatch.
+    assert!(LmaRegressor::fit(&x, &y[..10], &hyp, &cfg(4, 1, 8)).is_err());
+}
+
+#[test]
+fn extreme_lengthscales_stay_finite() {
+    let mut rng = Pcg64::new(604);
+    let x = Mat::col_vec(&rng.uniform_vec(60, -2.0, 2.0));
+    let y: Vec<f64> = x.col(0).iter().map(|v| v.sin()).collect();
+    for ell in [1e-3, 1e3] {
+        let hyp = SeArdHyper::isotropic(1, ell, 1.0, 0.1);
+        let m = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 8)).unwrap();
+        let p = m.predict(&Mat::col_vec(&[0.3])).unwrap();
+        assert!(p.mean[0].is_finite(), "ell={ell}");
+        assert!(p.var[0].is_finite() && p.var[0] >= 0.0);
+    }
+}
+
+#[test]
+fn empty_and_single_test_points() {
+    let mut rng = Pcg64::new(605);
+    let hyp = SeArdHyper::isotropic(2, 1.0, 1.0, 0.1);
+    let x = Mat::randn(50, 2, &mut rng);
+    let y: Vec<f64> = (0..50).map(|i| x.get(i, 0)).collect();
+    let m = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 8)).unwrap();
+    let p0 = m.predict(&Mat::zeros(0, 2)).unwrap();
+    assert!(p0.is_empty());
+    let p1 = m.predict(&Mat::randn(1, 2, &mut rng)).unwrap();
+    assert_eq!(p1.len(), 1);
+}
+
+#[test]
+fn test_dimension_mismatch_rejected() {
+    let mut rng = Pcg64::new(606);
+    let hyp = SeArdHyper::isotropic(2, 1.0, 1.0, 0.1);
+    let x = Mat::randn(40, 2, &mut rng);
+    let y = vec![0.0; 40];
+    let m = LmaRegressor::fit(&x, &y, &hyp, &cfg(3, 1, 8)).unwrap();
+    assert!(matches!(m.predict(&Mat::zeros(5, 3)), Err(PgprError::Shape(_))));
+}
+
+#[test]
+fn cluster_mismatch_and_tiny_blocks() {
+    let mut rng = Pcg64::new(607);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(24, -3.0, 3.0));
+    let y: Vec<f64> = x.col(0).iter().map(|v| v.sin()).collect();
+    // M = 12 blocks on 24 points: ~2 points per block. Must still work.
+    let cc = ClusterConfig::gigabit(12, 1);
+    let par = ParallelLma::fit(&x, &y, &hyp, &cfg(12, 2, 6), &cc).unwrap();
+    let run = par.predict(&Mat::col_vec(&[0.1, 2.0])).unwrap();
+    assert!(run.prediction.mean.iter().all(|v| v.is_finite()));
+    // Mismatched cluster size rejected.
+    assert!(ParallelLma::fit(&x, &y, &hyp, &cfg(4, 1, 6), &cc).is_err());
+}
+
+#[test]
+fn constant_outputs_recovered() {
+    let mut rng = Pcg64::new(608);
+    let mut hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.05);
+    hyp.mean = 7.0;
+    let x = Mat::col_vec(&rng.uniform_vec(60, -3.0, 3.0));
+    let y = vec![7.0; 60];
+    let m = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 10)).unwrap();
+    let p = m.predict(&Mat::col_vec(&[0.0, 10.0])).unwrap();
+    assert!((p.mean[0] - 7.0).abs() < 1e-6);
+    assert!((p.mean[1] - 7.0).abs() < 1e-6); // reverts to prior mean
+}
+
+#[test]
+fn support_larger_than_data_is_clamped() {
+    let mut rng = Pcg64::new(609);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(30, -2.0, 2.0));
+    let y: Vec<f64> = x.col(0).iter().map(|v| v.sin()).collect();
+    // support_size 1000 > |D|=30 — silently clamped to 30.
+    let m = LmaRegressor::fit(&x, &y, &hyp, &cfg(3, 1, 1000)).unwrap();
+    assert_eq!(m.core().basis.size(), 30);
+}

@@ -1,0 +1,149 @@
+//! Cross-method equivalence tests — the spectrum property of Section 3
+//! verified between *independently implemented* engines:
+//!
+//! * LMA(B=0) vs the textbook dense PIC oracle (two separate derivations)
+//! * LMA(B=M−1) vs FGP (exactness endpoint)
+//! * parallel vs centralized engines (identical numbers)
+
+use pgpr::config::{ClusterConfig, LmaConfig, PartitionStrategy};
+use pgpr::gp::fgp::FgpRegressor;
+use pgpr::kernels::se_ard::{self, SeArdHyper};
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::LmaRegressor;
+use pgpr::sparse::pic::dense_oracle;
+use pgpr::util::rng::Pcg64;
+
+fn problem(seed: u64, n: usize, d: usize) -> (Mat, Vec<f64>, Mat, SeArdHyper) {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper {
+        sigma_s2: 1.2,
+        sigma_n2: 0.04,
+        lengthscales: vec![1.1; d],
+        mean: 0.4,
+    };
+    let x = Mat::randn(n, d, &mut rng);
+    let y: Vec<f64> = (0..n)
+        .map(|i| 0.4 + x.get(i, 0).sin() + 0.2 * rng.normal())
+        .collect();
+    let t = Mat::randn(30, d, &mut rng);
+    (x, y, t, hyp)
+}
+
+fn cfg(m: usize, b: usize, s: usize, seed: u64) -> LmaConfig {
+    LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    }
+}
+
+#[test]
+fn lma_b0_equals_dense_pic_oracle() {
+    let (x, y, t, hyp) = problem(501, 90, 2);
+    let c = cfg(4, 0, 14, 3);
+    let lma = LmaRegressor::fit(&x, &y, &hyp, &c).unwrap();
+    let p_lma = lma.predict(&t).unwrap();
+    // Oracle shares the exact same support set and partition (pull them
+    // from the fitted core so both engines see identical structure).
+    let core = lma.core();
+    let support = core.basis.s_scaled.clone();
+    let part = core.partition.clone();
+    let p_pic = dense_oracle::predict(&x, &y, &t, &hyp, &support, &part).unwrap();
+    for i in 0..30 {
+        assert!(
+            (p_lma.mean[i] - p_pic.mean[i]).abs() < 2e-4,
+            "mean[{i}]: {} vs {}",
+            p_lma.mean[i],
+            p_pic.mean[i]
+        );
+        assert!(
+            (p_lma.var[i] - p_pic.var[i]).abs() < 2e-4,
+            "var[{i}]: {} vs {}",
+            p_lma.var[i],
+            p_pic.var[i]
+        );
+    }
+}
+
+#[test]
+fn lma_full_band_equals_fgp_multidim() {
+    for (n, d, m) in [(80, 1, 4), (70, 3, 5), (60, 2, 3)] {
+        let (x, y, t, hyp) = problem(502 + n as u64, n, d);
+        let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&t).unwrap();
+        let lma = LmaRegressor::fit(&x, &y, &hyp, &cfg(m, m - 1, 10, 1))
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        for i in 0..30 {
+            assert!(
+                (fgp.mean[i] - lma.mean[i]).abs() < 1e-3,
+                "(n={n},d={d}) mean[{i}]: {} vs {}",
+                fgp.mean[i],
+                lma.mean[i]
+            );
+            assert!((fgp.var[i] - lma.var[i]).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn parallel_equals_centralized_across_topologies() {
+    let (x, y, t, hyp) = problem(503, 120, 2);
+    for (machines, cores, b) in [(6, 1, 1), (3, 2, 2), (1, 6, 0)] {
+        let m = machines * cores;
+        let c = cfg(m, b, 16, 7);
+        let cen = LmaRegressor::fit(&x, &y, &hyp, &c).unwrap().predict(&t).unwrap();
+        let cc = ClusterConfig::gigabit(machines, cores);
+        let par = ParallelLma::fit(&x, &y, &hyp, &c, &cc)
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        for i in 0..30 {
+            assert!(
+                (cen.mean[i] - par.prediction.mean[i]).abs() < 1e-9,
+                "topology {machines}x{cores} B={b}"
+            );
+            assert!((cen.var[i] - par.prediction.var[i]).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn monotone_b_spectrum_converges_to_fgp() {
+    // Gap to FGP shrinks (weakly) along B = 0, 2, 4, M−1 in aggregate.
+    let (x, y, t, hyp) = problem(504, 100, 1);
+    let fgp = FgpRegressor::fit(&x, &y, &hyp).unwrap().predict(&t).unwrap();
+    let m = 6;
+    let gap = |b: usize| -> f64 {
+        let p = LmaRegressor::fit(&x, &y, &hyp, &cfg(m, b, 8, 2))
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        pgpr::metrics::rmse(&p.mean, &fgp.mean)
+    };
+    let g0 = gap(0);
+    let g5 = gap(5);
+    assert!(g5 < 1e-3, "terminal gap {g5}");
+    assert!(g5 <= g0 + 1e-12, "B=5 ({g5}) worse than B=0 ({g0})");
+}
+
+#[test]
+fn pjrt_backend_covariance_agrees_inside_lma_pipeline() {
+    // When artifacts exist, the PJRT covariance must agree with native on
+    // a block-sized problem (f32 tolerance); otherwise skip.
+    let Some(lib) = pgpr::runtime::artifacts::ArtifactLibrary::try_default() else {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    };
+    let mut rng = Pcg64::new(505);
+    let hyp = SeArdHyper::isotropic(3, 1.0, 1.0, 0.1);
+    let x = Mat::randn(64, 3, &mut rng);
+    let xs = se_ard::scale_inputs(&x, &hyp).unwrap();
+    let native = se_ard::cov_cross_scaled(&xs, &xs, hyp.sigma_s2).unwrap();
+    let pjrt = lib.cov_cross_scaled(&xs, &xs, hyp.sigma_s2).unwrap();
+    assert!(native.max_abs_diff(&pjrt) < 1e-4);
+}

@@ -1,0 +1,141 @@
+//! Cross-layer integration: the AOT-compiled Pallas covariance kernel
+//! (Layers 1–2, python) executed from Rust via PJRT (Layer 3) must match
+//! the native Rust covariance to f32 precision.
+//!
+//! These tests are skipped (with a notice) when `artifacts/` has not been
+//! built — run `make artifacts` first.
+
+use std::rc::Rc;
+
+use pgpr::kernels::pjrt_cov::CovBackend;
+use pgpr::kernels::se_ard;
+use pgpr::linalg::matrix::Mat;
+use pgpr::runtime::artifacts::ArtifactLibrary;
+use pgpr::util::rng::Pcg64;
+
+fn lib_or_skip() -> Option<ArtifactLibrary> {
+    match ArtifactLibrary::try_default() {
+        Some(lib) => Some(lib),
+        None => {
+            eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_cov_matches_native_exact_bucket() {
+    let Some(lib) = lib_or_skip() else { return };
+    let mut rng = Pcg64::new(301);
+    let x1 = Mat::randn(32, 24, &mut rng);
+    let x2 = Mat::randn(32, 24, &mut rng);
+    let pjrt = lib.cov_cross_scaled(&x1, &x2, 1.3).unwrap();
+    let native = se_ard::cov_cross_scaled(&x1, &x2, 1.3).unwrap();
+    let diff = pjrt.max_abs_diff(&native);
+    assert!(diff < 1e-4, "pjrt vs native diff {diff}");
+}
+
+#[test]
+fn pjrt_cov_padding_correct() {
+    // Odd shapes force padding inside a bucket.
+    let Some(lib) = lib_or_skip() else { return };
+    let mut rng = Pcg64::new(302);
+    for (n1, n2, d) in [(5, 9, 3), (33, 60, 21), (100, 17, 6), (1, 1, 1)] {
+        let x1 = Mat::randn(n1, d, &mut rng);
+        let x2 = Mat::randn(n2, d, &mut rng);
+        let pjrt = lib.cov_cross_scaled(&x1, &x2, 0.9).unwrap();
+        let native = se_ard::cov_cross_scaled(&x1, &x2, 0.9).unwrap();
+        assert_eq!(pjrt.rows(), n1);
+        assert_eq!(pjrt.cols(), n2);
+        let diff = pjrt.max_abs_diff(&native);
+        assert!(diff < 1e-4, "({n1},{n2},{d}): diff {diff}");
+    }
+}
+
+#[test]
+fn pjrt_cov_oversize_falls_back_via_backend() {
+    let Some(lib) = lib_or_skip() else { return };
+    let backend = CovBackend::Pjrt(Rc::new(lib));
+    let mut rng = Pcg64::new(303);
+    // 300 > largest bucket (256) → backend must fall back to native.
+    let x1 = Mat::randn(300, 4, &mut rng);
+    let x2 = Mat::randn(10, 4, &mut rng);
+    let k = backend.cov_cross_scaled(&x1, &x2, 1.0).unwrap();
+    let native = se_ard::cov_cross_scaled(&x1, &x2, 1.0).unwrap();
+    assert!(k.max_abs_diff(&native) < 1e-10); // identical — native path
+}
+
+#[test]
+fn pjrt_cov_psd_after_roundtrip() {
+    // The compiled kernel's clamp keeps K(X, X) PSD enough for Cholesky
+    // with the standard noise floor.
+    let Some(lib) = lib_or_skip() else { return };
+    let mut rng = Pcg64::new(304);
+    let x = Mat::randn(50, 8, &mut rng);
+    let mut k = lib.cov_cross_scaled(&x, &x, 1.0).unwrap();
+    k.symmetrize();
+    k.add_diag(0.01);
+    assert!(pgpr::linalg::chol::cholesky(&k).is_ok());
+}
+
+#[test]
+fn lma_with_pjrt_backend_matches_native() {
+    // The full LMA pipeline with use_pjrt=true must reproduce the native
+    // pipeline to f32 precision — the compiled Pallas kernel is on the
+    // request path for every block that fits a bucket.
+    if lib_or_skip().is_none() {
+        return;
+    }
+    use pgpr::config::{LmaConfig, PartitionStrategy};
+    use pgpr::kernels::se_ard::SeArdHyper;
+    use pgpr::lma::LmaRegressor;
+    let mut rng = Pcg64::new(305);
+    let hyp = SeArdHyper::isotropic(3, 1.0, 1.0, 0.1);
+    let x = Mat::randn(400, 3, &mut rng);
+    let y: Vec<f64> = (0..400).map(|i| x.get(i, 0).sin() + 0.1 * rng.normal()).collect();
+    let t = Mat::randn(60, 3, &mut rng);
+    let mk = |use_pjrt: bool| LmaConfig {
+        num_blocks: 4,
+        markov_order: 1,
+        support_size: 32,
+        seed: 9,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt,
+    };
+    let native = LmaRegressor::fit(&x, &y, &hyp, &mk(false)).unwrap().predict(&t).unwrap();
+    let pjrt = LmaRegressor::fit(&x, &y, &hyp, &mk(true)).unwrap().predict(&t).unwrap();
+    assert!(pjrt.mean.iter().all(|v| v.is_finite()));
+    for i in 0..60 {
+        // f32 kernel + chained factorizations: allow a small tolerance.
+        assert!(
+            (native.mean[i] - pjrt.mean[i]).abs() < 5e-2,
+            "mean[{i}]: {} vs {}",
+            native.mean[i],
+            pjrt.mean[i]
+        );
+        assert!((native.var[i] - pjrt.var[i]).abs() < 5e-2);
+    }
+}
+
+#[test]
+fn pjrt_summary_gram_matches_native() {
+    let Some(lib) = lib_or_skip() else { return };
+    let mut rng = Pcg64::new(306);
+    for (k, m) in [(100, 20), (128, 32), (200, 50)] {
+        let v = Mat::randn(k, m, &mut rng);
+        let acc = {
+            let mut a = Mat::randn(m, m, &mut rng);
+            a.symmetrize();
+            a
+        };
+        let got = lib.summary_gram(&v, &acc).unwrap();
+        let want = acc.add(&pgpr::linalg::gemm::syrk_tn(&v)).unwrap();
+        let scale = want.max_abs().max(1.0);
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 2e-3 * scale, "(k={k},m={m}): diff {diff} scale {scale}");
+    }
+    // No bucket large enough → Artifact error, not a panic.
+    let v = Mat::randn(1000, 100, &mut rng);
+    let acc = Mat::zeros(100, 100);
+    assert!(lib.summary_gram(&v, &acc).is_err());
+}
