@@ -1,0 +1,94 @@
+//! Real wall-clock speedup of the multi-threaded execution backend:
+//! parallel LMA fit + predict on a |D|=8192 synthetic AIMPEAK field at
+//! 1 / 2 / 4 / all worker threads (`cluster::ThreadCluster`). Writes the
+//! machine-readable perf record `BENCH_parallel_speedup.json` so the
+//! speedup trajectory is tracked across PRs, plus the usual console
+//! report. Set `PGPR_BENCH_FAST=1` to shrink the problem for smoke runs.
+
+use pgpr::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy};
+use pgpr::experiments::common::{quick_hypers, Workload};
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::metrics::rmse;
+use pgpr::util::bench::{fmt_time, write_json_record};
+use pgpr::util::json::Json;
+
+fn main() {
+    let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+    let n = if fast { 2048 } else { 8192 };
+    let test = if fast { 256 } else { 1024 };
+    let blocks = 8;
+    let order = 1;
+    let support = if fast { 128 } else { 256 };
+
+    let ds = Workload::Aimpeak.generate(n, test, 99).expect("dataset generation");
+    let hyp = quick_hypers(&ds);
+    let cfg = LmaConfig {
+        num_blocks: blocks,
+        markov_order: order,
+        support_size: support,
+        seed: 99,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+
+    let hw = pgpr::util::par::available_cores();
+    let mut counts = vec![1usize, 2, 4];
+    if hw > 4 {
+        counts.push(hw);
+    }
+    counts.dedup();
+
+    println!(
+        "\n=== bench: parallel speedup (|D|={n}, |U|={test}, M={blocks}, B={order}, |S|={support}, hw cores={hw}) ==="
+    );
+    let mut runs = Vec::new();
+    let mut wall_by_threads: std::collections::BTreeMap<usize, f64> =
+        std::collections::BTreeMap::new();
+    let mut baseline_mean: Option<Vec<f64>> = None;
+    for &t in &counts {
+        let cc = ClusterConfig::gigabit(blocks, 1)
+            .with_backend(BackendKind::Threads { num_threads: t });
+        let model = ParallelLma::fit(&ds.train_x, &ds.train_y, &hyp, &cfg, &cc).expect("fit");
+        let run = model.predict(&ds.test_x).expect("predict");
+        let r = rmse(&run.prediction.mean, &ds.test_y);
+        match &baseline_mean {
+            None => baseline_mean = Some(run.prediction.mean.clone()),
+            Some(base) => {
+                // Thread count must not change a single bit of the output.
+                assert_eq!(base, &run.prediction.mean, "threads={t} changed predictions");
+            }
+        }
+        println!(
+            "  threads={t:<3} wall {:>12} (fit {:>12})  rmse {r:.4}",
+            fmt_time(run.wall_secs),
+            fmt_time(model.fit_wall_secs())
+        );
+        wall_by_threads.insert(t, run.wall_secs);
+        runs.push(Json::obj(vec![
+            ("threads", Json::Num(t as f64)),
+            ("wall_secs", Json::Num(run.wall_secs)),
+            ("parallel_secs", Json::Num(run.parallel_secs)),
+            ("rmse", Json::Num(r)),
+        ]));
+    }
+
+    let w1 = wall_by_threads[&1];
+    let w4 = wall_by_threads.get(&4).copied().unwrap_or(w1);
+    let speedup4 = w1 / w4;
+    println!("  speedup (4 threads vs 1): {speedup4:.2}x");
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("parallel_speedup".into())),
+        ("backend", Json::Str("threads".into())),
+        ("data_size", Json::Num(n as f64)),
+        ("test_size", Json::Num(test as f64)),
+        ("blocks", Json::Num(blocks as f64)),
+        ("markov_order", Json::Num(order as f64)),
+        ("support_size", Json::Num(support as f64)),
+        ("hw_cores", Json::Num(hw as f64)),
+        ("runs", Json::Arr(runs)),
+        ("speedup_4_vs_1", Json::Num(speedup4)),
+    ]);
+    write_json_record("BENCH_parallel_speedup.json", &record).expect("write perf record");
+    println!("=== wrote BENCH_parallel_speedup.json ===");
+}

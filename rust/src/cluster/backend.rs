@@ -1,0 +1,480 @@
+//! Execution backends for the parallel LMA protocol.
+//!
+//! [`Backend`] abstracts "where rank work runs and what time/traffic it
+//! costs". Two implementations ship today:
+//!
+//! * [`SimCluster`] — the deterministic virtual-time simulator: rank work
+//!   executes sequentially on the calling thread, wall-clock cost is
+//!   charged to per-rank virtual clocks, and messages advance receiver
+//!   clocks through a latency/bandwidth model. This is the backend the
+//!   paper-reproduction tables use (their "parallel incurred time" is the
+//!   virtual makespan).
+//! * [`ThreadCluster`] — real OS threads: every [`Backend::compute_all`]
+//!   batch is executed by a pool of scoped worker threads (no external
+//!   dependencies), so the Appendix-C wavefront, the Definition-1 local
+//!   summaries and the Theorem-2 per-rank evaluations genuinely run
+//!   concurrently. Message calls only count traffic — ranks share an
+//!   address space.
+//!
+//! Both backends execute the *identical* numeric code, and every
+//! parallelized loop preserves the sequential arithmetic order per output
+//! element, so predictions are bit-identical across backends (asserted in
+//! `rust/tests/method_equivalence.rs`). [`AnyCluster`] dispatches on
+//! [`BackendKind`] from the cluster config — the seam where a future
+//! process/RPC backend plugs in.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::cluster::sim::{ClusterMetrics, SimCluster};
+use crate::config::{BackendKind, ClusterConfig};
+use crate::util::error::{PgprError, Result};
+use crate::util::par;
+use crate::util::timer::time_it;
+
+/// One unit of rank-attributed work: `(rank, closure)`.
+pub type RankTask<'a, T> = (usize, Box<dyn FnOnce() -> T + Send + 'a>);
+
+/// A cluster execution backend: ranks, rank-attributed compute, and the
+/// collective operations the Remark-1 protocol needs.
+pub trait Backend {
+    /// Total number of ranks P.
+    fn num_ranks(&self) -> usize;
+
+    /// Degree of real parallelism this backend offers (1 for the
+    /// simulator). Used to pick the fit-time worker count.
+    fn parallelism(&self) -> usize;
+
+    /// Execute `f` as `rank`'s compute on the calling thread; measured
+    /// time is charged to that rank.
+    fn compute<T: Send, F: FnOnce() -> T + Send>(&mut self, rank: usize, f: F) -> Result<T>;
+
+    /// Execute a batch of independent per-rank tasks, returning results in
+    /// task order. The simulator runs them sequentially (deterministic
+    /// virtual time); the thread backend runs them concurrently.
+    fn compute_all<'a, T: Send>(&mut self, tasks: Vec<RankTask<'a, T>>) -> Result<Vec<T>>;
+
+    /// Charge pre-measured compute seconds to a rank.
+    fn charge(&mut self, rank: usize, secs: f64) -> Result<()>;
+
+    /// Account a point-to-point message of `bytes` from `from` to `to`.
+    fn send(&mut self, from: usize, to: usize, bytes: usize) -> Result<()>;
+
+    /// Synchronize all ranks.
+    fn barrier(&mut self);
+
+    /// Gather `bytes_per_rank[r]` from every rank to the master (rank 0).
+    fn reduce_to_master(&mut self, bytes_per_rank: &[usize]) -> Result<()>;
+
+    /// Send `bytes_per_rank[r]` from the master to every rank.
+    fn broadcast_from_master(&mut self, bytes_per_rank: &[usize]) -> Result<()>;
+
+    /// Parallel incurred time so far (max over rank clocks), seconds.
+    fn makespan(&self) -> f64;
+
+    /// Accumulated traffic/time statistics.
+    fn metrics(&self) -> &ClusterMetrics;
+}
+
+impl Backend for SimCluster {
+    fn num_ranks(&self) -> usize {
+        SimCluster::num_ranks(self)
+    }
+
+    fn parallelism(&self) -> usize {
+        1
+    }
+
+    fn compute<T: Send, F: FnOnce() -> T + Send>(&mut self, rank: usize, f: F) -> Result<T> {
+        SimCluster::compute(self, rank, f)
+    }
+
+    fn compute_all<'a, T: Send>(&mut self, tasks: Vec<RankTask<'a, T>>) -> Result<Vec<T>> {
+        let mut out = Vec::with_capacity(tasks.len());
+        for (rank, f) in tasks {
+            out.push(SimCluster::compute(self, rank, f)?);
+        }
+        Ok(out)
+    }
+
+    fn charge(&mut self, rank: usize, secs: f64) -> Result<()> {
+        SimCluster::charge(self, rank, secs)
+    }
+
+    fn send(&mut self, from: usize, to: usize, bytes: usize) -> Result<()> {
+        SimCluster::send(self, from, to, bytes)
+    }
+
+    fn barrier(&mut self) {
+        SimCluster::barrier(self)
+    }
+
+    fn reduce_to_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        SimCluster::reduce_to_master(self, bytes_per_rank)
+    }
+
+    fn broadcast_from_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        SimCluster::broadcast_from_master(self, bytes_per_rank)
+    }
+
+    fn makespan(&self) -> f64 {
+        SimCluster::makespan(self)
+    }
+
+    fn metrics(&self) -> &ClusterMetrics {
+        SimCluster::metrics(self)
+    }
+}
+
+/// Real multi-threaded backend.
+///
+/// Each [`Backend::compute_all`] batch runs on `workers` scoped threads
+/// pulling tasks off an atomic queue; per-rank clocks accumulate each
+/// task's measured seconds so `makespan`/`total_compute` stay comparable
+/// with the simulator. Message calls count traffic only (shared memory
+/// makes the transfer itself free); use [`ThreadCluster::elapsed_wall`]
+/// for the real end-to-end time.
+pub struct ThreadCluster {
+    cfg: ClusterConfig,
+    workers: usize,
+    clocks: Vec<f64>,
+    metrics: ClusterMetrics,
+    started: Instant,
+}
+
+impl ThreadCluster {
+    /// `workers = 0` means one worker per available core.
+    pub fn new(cfg: ClusterConfig, workers: usize) -> Result<ThreadCluster> {
+        cfg.validate()?;
+        let p = cfg.total_cores();
+        Ok(ThreadCluster {
+            cfg,
+            workers: par::resolve_threads(workers).max(1),
+            clocks: vec![0.0; p],
+            metrics: ClusterMetrics {
+                messages: 0,
+                bytes: 0,
+                compute_secs: vec![0.0; p],
+                comm_wait_secs: vec![0.0; p],
+            },
+            started: Instant::now(),
+        })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Real wall-clock seconds since this backend was created.
+    pub fn elapsed_wall(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn check_rank(&self, r: usize) -> Result<()> {
+        if r >= self.clocks.len() {
+            return Err(PgprError::Cluster(format!(
+                "rank {r} out of range (P={})",
+                self.clocks.len()
+            )));
+        }
+        Ok(())
+    }
+
+    fn charge_raw(&mut self, rank: usize, secs: f64) {
+        self.clocks[rank] += secs;
+        self.metrics.compute_secs[rank] += secs;
+    }
+}
+
+impl Backend for ThreadCluster {
+    fn num_ranks(&self) -> usize {
+        self.clocks.len()
+    }
+
+    fn parallelism(&self) -> usize {
+        self.workers
+    }
+
+    fn compute<T: Send, F: FnOnce() -> T + Send>(&mut self, rank: usize, f: F) -> Result<T> {
+        self.check_rank(rank)?;
+        let (out, secs) = time_it(f);
+        self.charge_raw(rank, secs);
+        Ok(out)
+    }
+
+    fn compute_all<'a, T: Send>(&mut self, tasks: Vec<RankTask<'a, T>>) -> Result<Vec<T>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        for (rank, _) in &tasks {
+            self.check_rank(*rank)?;
+        }
+        let ranks: Vec<usize> = tasks.iter().map(|(r, _)| *r).collect();
+        // FnOnce tasks behind Mutex slots so the Fn-based worker pool can
+        // take each one exactly once; `parallel_map` returns results in
+        // task order and propagates panics.
+        let slots: Vec<Mutex<Option<Box<dyn FnOnce() -> T + Send + 'a>>>> =
+            tasks.into_iter().map(|(_, f)| Mutex::new(Some(f))).collect();
+        let finished = par::parallel_map(n, self.workers, |i| {
+            let f = slots[i].lock().unwrap().take().expect("each task runs once");
+            let t0 = Instant::now();
+            let v = f();
+            (v, t0.elapsed().as_secs_f64())
+        });
+        let mut out = Vec::with_capacity(n);
+        for (i, (v, secs)) in finished.into_iter().enumerate() {
+            self.charge_raw(ranks[i], secs);
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    fn charge(&mut self, rank: usize, secs: f64) -> Result<()> {
+        self.check_rank(rank)?;
+        self.charge_raw(rank, secs);
+        Ok(())
+    }
+
+    fn send(&mut self, from: usize, to: usize, bytes: usize) -> Result<()> {
+        self.check_rank(from)?;
+        self.check_rank(to)?;
+        if from != to {
+            self.metrics.messages += 1;
+            self.metrics.bytes += bytes;
+        }
+        Ok(())
+    }
+
+    fn barrier(&mut self) {}
+
+    fn reduce_to_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        if bytes_per_rank.len() != self.clocks.len() {
+            return Err(PgprError::Cluster("reduce: wrong bytes_per_rank length".into()));
+        }
+        for &b in bytes_per_rank.iter().skip(1) {
+            self.metrics.messages += 1;
+            self.metrics.bytes += b;
+        }
+        Ok(())
+    }
+
+    fn broadcast_from_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        if bytes_per_rank.len() != self.clocks.len() {
+            return Err(PgprError::Cluster("broadcast: wrong bytes_per_rank length".into()));
+        }
+        for &b in bytes_per_rank.iter().skip(1) {
+            self.metrics.messages += 1;
+            self.metrics.bytes += b;
+        }
+        Ok(())
+    }
+
+    fn makespan(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    fn metrics(&self) -> &ClusterMetrics {
+        &self.metrics
+    }
+}
+
+/// Runtime-selected backend, constructed from [`ClusterConfig::backend`].
+pub enum AnyCluster {
+    Sim(SimCluster),
+    Threads(ThreadCluster),
+}
+
+impl AnyCluster {
+    pub fn new(cfg: &ClusterConfig) -> Result<AnyCluster> {
+        match cfg.backend {
+            BackendKind::Sim => Ok(AnyCluster::Sim(SimCluster::new(cfg.clone())?)),
+            BackendKind::Threads { num_threads } => {
+                Ok(AnyCluster::Threads(ThreadCluster::new(cfg.clone(), num_threads)?))
+            }
+        }
+    }
+}
+
+impl Backend for AnyCluster {
+    fn num_ranks(&self) -> usize {
+        match self {
+            AnyCluster::Sim(c) => Backend::num_ranks(c),
+            AnyCluster::Threads(c) => Backend::num_ranks(c),
+        }
+    }
+
+    fn parallelism(&self) -> usize {
+        match self {
+            AnyCluster::Sim(c) => Backend::parallelism(c),
+            AnyCluster::Threads(c) => Backend::parallelism(c),
+        }
+    }
+
+    fn compute<T: Send, F: FnOnce() -> T + Send>(&mut self, rank: usize, f: F) -> Result<T> {
+        match self {
+            AnyCluster::Sim(c) => Backend::compute(c, rank, f),
+            AnyCluster::Threads(c) => Backend::compute(c, rank, f),
+        }
+    }
+
+    fn compute_all<'a, T: Send>(&mut self, tasks: Vec<RankTask<'a, T>>) -> Result<Vec<T>> {
+        match self {
+            AnyCluster::Sim(c) => Backend::compute_all(c, tasks),
+            AnyCluster::Threads(c) => Backend::compute_all(c, tasks),
+        }
+    }
+
+    fn charge(&mut self, rank: usize, secs: f64) -> Result<()> {
+        match self {
+            AnyCluster::Sim(c) => Backend::charge(c, rank, secs),
+            AnyCluster::Threads(c) => Backend::charge(c, rank, secs),
+        }
+    }
+
+    fn send(&mut self, from: usize, to: usize, bytes: usize) -> Result<()> {
+        match self {
+            AnyCluster::Sim(c) => Backend::send(c, from, to, bytes),
+            AnyCluster::Threads(c) => Backend::send(c, from, to, bytes),
+        }
+    }
+
+    fn barrier(&mut self) {
+        match self {
+            AnyCluster::Sim(c) => Backend::barrier(c),
+            AnyCluster::Threads(c) => Backend::barrier(c),
+        }
+    }
+
+    fn reduce_to_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        match self {
+            AnyCluster::Sim(c) => Backend::reduce_to_master(c, bytes_per_rank),
+            AnyCluster::Threads(c) => Backend::reduce_to_master(c, bytes_per_rank),
+        }
+    }
+
+    fn broadcast_from_master(&mut self, bytes_per_rank: &[usize]) -> Result<()> {
+        match self {
+            AnyCluster::Sim(c) => Backend::broadcast_from_master(c, bytes_per_rank),
+            AnyCluster::Threads(c) => Backend::broadcast_from_master(c, bytes_per_rank),
+        }
+    }
+
+    fn makespan(&self) -> f64 {
+        match self {
+            AnyCluster::Sim(c) => Backend::makespan(c),
+            AnyCluster::Threads(c) => Backend::makespan(c),
+        }
+    }
+
+    fn metrics(&self) -> &ClusterMetrics {
+        match self {
+            AnyCluster::Sim(c) => Backend::metrics(c),
+            AnyCluster::Threads(c) => Backend::metrics(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tc(machines: usize, cores: usize, workers: usize) -> ThreadCluster {
+        ThreadCluster::new(ClusterConfig::gigabit(machines, cores), workers).unwrap()
+    }
+
+    #[test]
+    fn compute_all_returns_in_task_order() {
+        let mut c = tc(1, 4, 4);
+        let tasks: Vec<RankTask<'static, usize>> = (0..4)
+            .map(|r| {
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || {
+                    // Later ranks finish first — output order must not care.
+                    std::thread::sleep(std::time::Duration::from_millis((4 - r) as u64 * 3));
+                    r * 10
+                });
+                (r, f)
+            })
+            .collect();
+        let out = c.compute_all(tasks).unwrap();
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        for r in 0..4 {
+            assert!(
+                c.metrics().compute_secs[r] > 0.0,
+                "rank {r} never charged"
+            );
+        }
+        assert!(c.makespan() > 0.0);
+        assert!(c.elapsed_wall() > 0.0);
+    }
+
+    #[test]
+    fn compute_all_with_fewer_workers_than_tasks() {
+        let mut c = tc(1, 8, 2);
+        let tasks: Vec<RankTask<'static, usize>> = (0..8)
+            .map(|r| {
+                let f: Box<dyn FnOnce() -> usize + Send> = Box::new(move || r + 1);
+                (r, f)
+            })
+            .collect();
+        let out = c.compute_all(tasks).unwrap();
+        assert_eq!(out, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tasks_can_borrow_caller_state() {
+        let data: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut c = tc(1, 2, 2);
+        let tasks: Vec<RankTask<'_, f64>> = (0..2)
+            .map(|r| {
+                let d = &data;
+                let f: Box<dyn FnOnce() -> f64 + Send + '_> =
+                    Box::new(move || d[r * 50..(r + 1) * 50].iter().sum());
+                (r, f)
+            })
+            .collect();
+        let out = c.compute_all(tasks).unwrap();
+        assert_eq!(out[0] + out[1], data.iter().sum::<f64>());
+    }
+
+    fn drive<B: Backend>(b: &mut B) {
+        b.send(0, 1, 100).unwrap();
+        b.send(2, 2, 999).unwrap(); // self-send: not a message
+        b.reduce_to_master(&[0, 8, 8, 8]).unwrap();
+        b.broadcast_from_master(&[0, 4, 4, 4]).unwrap();
+    }
+
+    #[test]
+    fn thread_and_sim_count_messages_identically() {
+        let mut t = tc(2, 2, 2);
+        let mut s = SimCluster::new(ClusterConfig::gigabit(2, 2)).unwrap();
+        drive(&mut t);
+        drive(&mut s);
+        assert_eq!(Backend::metrics(&t).messages, Backend::metrics(&s).messages);
+        assert_eq!(Backend::metrics(&t).bytes, Backend::metrics(&s).bytes);
+    }
+
+    #[test]
+    fn bad_ranks_and_lengths_rejected() {
+        let mut c = tc(1, 2, 1);
+        assert!(Backend::charge(&mut c, 5, 1.0).is_err());
+        assert!(Backend::send(&mut c, 0, 9, 8).is_err());
+        assert!(Backend::reduce_to_master(&mut c, &[1]).is_err());
+        assert!(Backend::broadcast_from_master(&mut c, &[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn any_cluster_dispatches_on_kind() {
+        let sim = AnyCluster::new(&ClusterConfig::gigabit(2, 1)).unwrap();
+        assert!(matches!(sim, AnyCluster::Sim(_)));
+        assert_eq!(Backend::parallelism(&sim), 1);
+        let thr = AnyCluster::new(&ClusterConfig::threads(2, 1, 3)).unwrap();
+        assert!(matches!(thr, AnyCluster::Threads(_)));
+        assert_eq!(Backend::parallelism(&thr), 3);
+        assert_eq!(Backend::num_ranks(&thr), 2);
+    }
+}

@@ -119,8 +119,57 @@ fn bad(field: &'static str) -> impl Fn() -> PgprError {
     move || PgprError::Config(format!("field `{field}` must be a non-negative integer"))
 }
 
+/// Which execution backend runs the parallel LMA protocol (see
+/// `cluster::Backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Deterministic virtual-time cluster simulator (`cluster::SimCluster`):
+    /// rank work executes sequentially, time/traffic are modelled.
+    #[default]
+    Sim,
+    /// Real OS threads (`cluster::ThreadCluster`): each wavefront/summary
+    /// task runs on a scoped worker thread. `num_threads = 0` means one
+    /// worker per available core.
+    Threads { num_threads: usize },
+}
+
+impl BackendKind {
+    /// Parse a CLI/env selector (case-insensitive): `sim`, `threads`, or
+    /// `threads:<n>`.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        let t = s.trim().to_ascii_lowercase();
+        if t == "sim" {
+            return Ok(BackendKind::Sim);
+        }
+        if t == "threads" {
+            return Ok(BackendKind::Threads { num_threads: 0 });
+        }
+        if let Some(rest) = t.strip_prefix("threads:") {
+            let n = rest.parse().map_err(|_| {
+                PgprError::Config(format!("bad thread count `{rest}` in backend `{s}`"))
+            })?;
+            return Ok(BackendKind::Threads { num_threads: n });
+        }
+        Err(PgprError::Config(format!(
+            "unknown backend `{s}` (expected sim | threads | threads:<n>)"
+        )))
+    }
+
+    /// Degree of real parallelism this backend offers (1 for the
+    /// simulator, the resolved worker count for threads).
+    pub fn parallelism(&self) -> usize {
+        match self {
+            BackendKind::Sim => 1,
+            BackendKind::Threads { num_threads } => {
+                crate::util::par::resolve_threads(*num_threads)
+            }
+        }
+    }
+}
+
 /// Cluster topology description (machines × cores per machine), matching
-/// the paper's experimental platforms.
+/// the paper's experimental platforms, plus the execution backend that
+/// runs the protocol.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ClusterConfig {
     pub machines: usize,
@@ -131,10 +180,12 @@ pub struct ClusterConfig {
     pub inter_latency: f64,
     /// Link bandwidth in bytes/second (gigabit ≈ 1.25e8).
     pub bandwidth: f64,
+    /// Execution backend (virtual-time simulator or real threads).
+    pub backend: BackendKind,
 }
 
 impl ClusterConfig {
-    /// Paper's main platform: 32 nodes, gigabit ethernet.
+    /// Paper's main platform: 32 nodes, gigabit ethernet, simulated.
     pub fn gigabit(machines: usize, cores_per_machine: usize) -> ClusterConfig {
         ClusterConfig {
             machines,
@@ -142,7 +193,21 @@ impl ClusterConfig {
             intra_latency: 2e-6,  // shared-memory handoff
             inter_latency: 5e-5,  // gigabit + switch hop
             bandwidth: 1.25e8,    // 1 Gbps
+            backend: BackendKind::Sim,
         }
+    }
+
+    /// Same topology, executed on real OS threads (`num_threads = 0` means
+    /// one worker per available core).
+    pub fn threads(machines: usize, cores_per_machine: usize, num_threads: usize) -> ClusterConfig {
+        ClusterConfig::gigabit(machines, cores_per_machine)
+            .with_backend(BackendKind::Threads { num_threads })
+    }
+
+    /// Builder-style backend override.
+    pub fn with_backend(mut self, backend: BackendKind) -> ClusterConfig {
+        self.backend = backend;
+        self
     }
 
     pub fn total_cores(&self) -> usize {
@@ -194,6 +259,39 @@ mod tests {
         assert_eq!(c.total_cores(), 64);
         assert!(c.validate().is_ok());
         assert!(c.inter_latency > c.intra_latency);
+        assert_eq!(c.backend, BackendKind::Sim);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(
+            BackendKind::parse("threads").unwrap(),
+            BackendKind::Threads { num_threads: 0 }
+        );
+        assert_eq!(
+            BackendKind::parse("threads:4").unwrap(),
+            BackendKind::Threads { num_threads: 4 }
+        );
+        assert!(BackendKind::parse("mpi").is_err());
+        assert!(BackendKind::parse("threads:x").is_err());
+        assert!(BackendKind::parse("threadsgarbage").is_err());
+        // Case-insensitive selectors.
+        assert_eq!(BackendKind::parse("SIM").unwrap(), BackendKind::Sim);
+        assert_eq!(
+            BackendKind::parse("Threads:4").unwrap(),
+            BackendKind::Threads { num_threads: 4 }
+        );
+    }
+
+    #[test]
+    fn backend_parallelism_resolves() {
+        assert_eq!(BackendKind::Sim.parallelism(), 1);
+        assert_eq!(BackendKind::Threads { num_threads: 3 }.parallelism(), 3);
+        assert!(BackendKind::Threads { num_threads: 0 }.parallelism() >= 1);
+        let c = ClusterConfig::threads(2, 2, 4);
+        assert_eq!(c.backend, BackendKind::Threads { num_threads: 4 });
+        assert_eq!(c.total_cores(), 4);
     }
 
     #[test]

@@ -2,16 +2,20 @@
 
 use std::io::BufRead;
 
-use crate::config::{LmaConfig, PartitionStrategy};
-use crate::coordinator::service::{PredictionService, Request};
+use crate::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy};
+use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
+use crate::lma::parallel::ParallelLma;
 use crate::lma::LmaRegressor;
 use crate::util::cli::Args;
 use crate::util::csv::CsvTable;
 use crate::util::error::{PgprError, Result};
 
-/// `pgpr experiment <id> [--full]`.
-pub fn cmd_experiment(id: &str, full: bool) -> Result<()> {
+/// `pgpr experiment <id> [--full] [--backend sim|threads[:N]]`.
+///
+/// `backend` selects the execution backend for experiments with parallel
+/// runs (currently Table 2); the others are backend-independent.
+pub fn cmd_experiment(id: &str, full: bool, backend: BackendKind) -> Result<()> {
     match id {
         "table1a" => {
             let p = if full {
@@ -30,7 +34,9 @@ pub fn cmd_experiment(id: &str, full: bool) -> Result<()> {
             table1::run(&p)?;
         }
         "table2" => {
-            let p = if full { table2::Table2Params::full() } else { table2::Table2Params::default() };
+            let mut p =
+                if full { table2::Table2Params::full() } else { table2::Table2Params::default() };
+            p.backend = backend;
             table2::run(&p)?;
         }
         "table3" => {
@@ -49,7 +55,7 @@ pub fn cmd_experiment(id: &str, full: bool) -> Result<()> {
         }
         "all" => {
             for id in ["table1a", "table1b", "table2", "table3", "fig2", "fig6", "ablation"] {
-                cmd_experiment(id, full)?;
+                cmd_experiment(id, full, backend)?;
             }
         }
         other => {
@@ -156,7 +162,11 @@ pub fn cmd_eval(
 
 /// `pgpr serve` — line protocol: `predict v1,v2,...` → `id mean var`;
 /// `flush` forces a partial batch; EOF flushes and prints stats.
-pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64) -> Result<()> {
+///
+/// `backend` picks the prediction engine: `centralized` (single-process
+/// LMA), or `sim` / `threads[:N]` for the parallel engine on the
+/// corresponding `cluster::Backend`.
+pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64, backend: &str) -> Result<()> {
     let w = Workload::parse(dataset)?;
     let ds = w.generate(train, train / 4, seed)?;
     let hyp = crate::experiments::common::quick_hypers(&ds);
@@ -169,10 +179,16 @@ pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64) -> Result
         partition: PartitionStrategy::KMeans { iters: 8 },
         use_pjrt: false,
     };
-    let model = LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg)?;
-    let mut svc = PredictionService::new(model, batch)?;
+    let engine = if backend == "centralized" {
+        ServeEngine::Centralized(LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg)?)
+    } else {
+        let kind = BackendKind::parse(backend)?;
+        let cc = ClusterConfig::gigabit(1, m).with_backend(kind);
+        ServeEngine::Parallel(ParallelLma::fit(&ds.train_x, &ds.train_y, &hyp, &cfg, &cc)?)
+    };
+    let mut svc = PredictionService::with_engine(engine, batch)?;
     eprintln!(
-        "serving {} (dim {}, M={m}, batch {batch}); protocol: `predict v1,v2,...` | `flush` | EOF",
+        "serving {} (dim {}, M={m}, batch {batch}, backend {backend}); protocol: `predict v1,v2,...` | `flush` | EOF",
         ds.name,
         ds.dim()
     );
@@ -238,13 +254,19 @@ pub fn dispatch() -> Result<()> {
         "experiment" => {
             let a = Args::new("pgpr experiment", "run a paper experiment")
                 .switch("full", "paper-scale parameters (slow)")
+                .flag(
+                    "backend",
+                    "sim",
+                    "execution backend for parallel runs: sim | threads[:N]",
+                )
                 .parse_from(rest)?;
             let id = a
                 .positionals()
                 .first()
                 .cloned()
                 .unwrap_or_else(|| "all".to_string());
-            cmd_experiment(&id, a.get_bool("full"))
+            let backend = BackendKind::parse(&a.get("backend"))?;
+            cmd_experiment(&id, a.get_bool("full"), backend)
         }
         "data" => {
             let a = Args::new("pgpr data", "generate datasets")
@@ -288,22 +310,28 @@ pub fn dispatch() -> Result<()> {
                 .flag("train", "1000", "training rows")
                 .flag("batch", "16", "batch size")
                 .flag("seed", "0", "seed")
+                .flag(
+                    "backend",
+                    "centralized",
+                    "prediction engine: centralized | sim | threads[:N]",
+                )
                 .parse_from(rest)?;
             cmd_serve(
                 &a.get("dataset"),
                 a.get_usize("train"),
                 a.get_usize("batch"),
                 a.get_usize("seed") as u64,
+                &a.get("backend"),
             )
         }
         "bench-info" => cmd_bench_info(),
         _ => {
             println!(
                 "pgpr — Parallel GP Regression (LMA, AAAI 2015 reproduction)\n\n\
-                 USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full]\n  \
+                 USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full] [--backend sim|threads[:N]]\n  \
                  pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
                  pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
-                 pgpr serve --dataset aimpeak --train 1000 --batch 16\n  \
+                 pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
                  pgpr bench-info\n"
             );
             Ok(())
@@ -329,6 +357,6 @@ mod tests {
 
     #[test]
     fn unknown_experiment_rejected() {
-        assert!(cmd_experiment("bogus", false).is_err());
+        assert!(cmd_experiment("bogus", false, BackendKind::Sim).is_err());
     }
 }

@@ -9,9 +9,35 @@
 
 use crate::gp::Prediction;
 use crate::linalg::matrix::Mat;
+use crate::lma::parallel::ParallelLma;
+use crate::lma::residual::LmaFitCore;
 use crate::lma::LmaRegressor;
 use crate::util::error::{PgprError, Result};
 use crate::util::timer::time_it;
+
+/// Which prediction engine answers batches: the single-process
+/// centralized regressor, or the parallel engine on a cluster backend
+/// (virtual-time sim or real threads, per its `ClusterConfig::backend`).
+pub enum ServeEngine {
+    Centralized(LmaRegressor),
+    Parallel(ParallelLma),
+}
+
+impl ServeEngine {
+    fn core(&self) -> &LmaFitCore {
+        match self {
+            ServeEngine::Centralized(m) => m.core(),
+            ServeEngine::Parallel(m) => m.core(),
+        }
+    }
+
+    fn predict(&self, x: &Mat) -> Result<Prediction> {
+        match self {
+            ServeEngine::Centralized(m) => m.predict(x),
+            ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
+        }
+    }
+}
 
 /// One pending request.
 #[derive(Clone, Debug)]
@@ -30,9 +56,9 @@ pub struct Response {
     pub latency: f64,
 }
 
-/// Batching predictor over a fitted LMA model.
+/// Batching predictor over a fitted LMA engine.
 pub struct PredictionService {
-    model: LmaRegressor,
+    engine: ServeEngine,
     batch_size: usize,
     queue: Vec<(Request, std::time::Instant)>,
     /// Serving statistics.
@@ -43,12 +69,19 @@ pub struct PredictionService {
 }
 
 impl PredictionService {
+    /// Serve a centralized regressor (back-compat constructor).
     pub fn new(model: LmaRegressor, batch_size: usize) -> Result<PredictionService> {
+        Self::with_engine(ServeEngine::Centralized(model), batch_size)
+    }
+
+    /// Serve any engine (centralized, or parallel on a sim/thread
+    /// cluster backend).
+    pub fn with_engine(engine: ServeEngine, batch_size: usize) -> Result<PredictionService> {
         if batch_size == 0 {
             return Err(PgprError::Config("batch_size must be ≥ 1".into()));
         }
         Ok(PredictionService {
-            model,
+            engine,
             batch_size,
             queue: Vec::new(),
             served: 0,
@@ -59,7 +92,7 @@ impl PredictionService {
     }
 
     pub fn dim(&self) -> usize {
-        self.model.core().hyp.dim()
+        self.engine.core().hyp.dim()
     }
 
     /// Enqueue a request; answers the whole batch when full.
@@ -90,7 +123,7 @@ impl PredictionService {
         for (i, (req, _)) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&req.x);
         }
-        let (pred, secs) = time_it(|| self.model.predict(&x));
+        let (pred, secs) = time_it(|| self.engine.predict(&x));
         let pred: Prediction = pred?;
         self.predict_secs += secs;
         self.batches += 1;
@@ -174,6 +207,33 @@ mod tests {
     fn dimension_mismatch_rejected() {
         let mut s = service(2);
         assert!(s.submit(Request { id: 1, x: vec![0.0, 1.0] }).is_err());
+    }
+
+    #[test]
+    fn parallel_thread_engine_serves_batches() {
+        use crate::config::{BackendKind, ClusterConfig};
+        let mut rng = Pcg64::new(242);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+        let y: Vec<f64> = (0..120).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: 1,
+            support_size: 20,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        let cc = ClusterConfig::gigabit(1, 4)
+            .with_backend(BackendKind::Threads { num_threads: 2 });
+        let model = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap();
+        let mut s =
+            PredictionService::with_engine(ServeEngine::Parallel(model), 2).unwrap();
+        assert_eq!(s.dim(), 1);
+        assert!(s.submit(Request { id: 1, x: vec![0.5] }).unwrap().is_empty());
+        let out = s.submit(Request { id: 2, x: vec![1.0] }).unwrap();
+        assert_eq!(out.len(), 2);
+        assert!((out[0].mean - 0.5f64.sin()).abs() < 0.3);
     }
 
     #[test]

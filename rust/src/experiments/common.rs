@@ -23,6 +23,11 @@ pub struct RunRecord {
     pub cores: usize,
     pub rmse: f64,
     pub secs: f64,
+    /// Real wall-clock seconds of the run. Equal to `secs` for
+    /// centralized methods; for parallel methods `secs` is the backend's
+    /// reported parallel time (virtual makespan on the simulator) while
+    /// `wall_secs` is what a stopwatch measured.
+    pub wall_secs: f64,
     /// For parallel methods: the summed per-rank compute (≈ centralized
     /// equivalent); 0 for centralized methods.
     pub total_compute_secs: f64,
@@ -31,7 +36,17 @@ pub struct RunRecord {
 
 impl RunRecord {
     pub fn csv_header() -> Vec<&'static str> {
-        vec!["method", "dataset", "data_size", "cores", "rmse", "secs", "total_compute_secs", "bytes"]
+        vec![
+            "method",
+            "dataset",
+            "data_size",
+            "cores",
+            "rmse",
+            "secs",
+            "wall_secs",
+            "total_compute_secs",
+            "bytes",
+        ]
     }
 
     pub fn csv_row(&self) -> Vec<String> {
@@ -42,6 +57,7 @@ impl RunRecord {
             self.cores.to_string(),
             format!("{:.6}", self.rmse),
             format!("{:.6}", self.secs),
+            format!("{:.6}", self.wall_secs),
             format!("{:.6}", self.total_compute_secs),
             self.bytes.to_string(),
         ]
@@ -149,6 +165,7 @@ pub fn run_fgp(ds: &Dataset, hyp: &SeArdHyper) -> Result<RunRecord> {
         cores: 1,
         rmse: rmse(&pred.mean, &ds.test_y),
         secs,
+        wall_secs: secs,
         total_compute_secs: 0.0,
         bytes: 0,
     })
@@ -168,6 +185,7 @@ pub fn run_ssgp(ds: &Dataset, hyp: &SeArdHyper, s: usize, seed: u64) -> Result<R
         cores: 1,
         rmse: rmse(&pred.mean, &ds.test_y),
         secs,
+        wall_secs: secs,
         total_compute_secs: 0.0,
         bytes: 0,
     })
@@ -194,6 +212,7 @@ pub fn run_lma_centralized(
         cores: 1,
         rmse: rmse(&pred.mean, &ds.test_y),
         secs,
+        wall_secs: secs,
         total_compute_secs: 0.0,
         bytes: 0,
     })
@@ -219,8 +238,35 @@ pub fn run_pic_centralized(
         cores: 1,
         rmse: rmse(&pred.mean, &ds.test_y),
         secs,
+        wall_secs: secs,
         total_compute_secs: 0.0,
         bytes: 0,
+    })
+}
+
+/// Parallel LMA on an explicit cluster topology + execution backend
+/// (`cc.backend` picks the virtual-time simulator or real threads).
+pub fn run_lma_parallel_on(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    cc: &ClusterConfig,
+    b: usize,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
+    let m = cc.total_cores();
+    let model = ParallelLma::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, b, s, seed), cc)?;
+    let run = model.predict(&ds.test_x)?;
+    Ok(RunRecord {
+        method: format!("LMA-par(M={m},B={b},S={s})"),
+        dataset: ds.name.clone(),
+        data_size: ds.train_x.rows(),
+        cores: m,
+        rmse: rmse(&run.prediction.mean, &ds.test_y),
+        secs: run.parallel_secs,
+        wall_secs: run.wall_secs,
+        total_compute_secs: run.total_compute_secs,
+        bytes: run.bytes,
     })
 }
 
@@ -234,17 +280,28 @@ pub fn run_lma_parallel(
     s: usize,
     seed: u64,
 ) -> Result<RunRecord> {
-    let cc = ClusterConfig::gigabit(machines, cores);
+    run_lma_parallel_on(ds, hyp, &ClusterConfig::gigabit(machines, cores), b, s, seed)
+}
+
+/// Parallel PIC on an explicit cluster topology + execution backend.
+pub fn run_pic_parallel_on(
+    ds: &Dataset,
+    hyp: &SeArdHyper,
+    cc: &ClusterConfig,
+    s: usize,
+    seed: u64,
+) -> Result<RunRecord> {
     let m = cc.total_cores();
-    let model = ParallelLma::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, b, s, seed), &cc)?;
+    let model = ParallelPic::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, 0, s, seed), cc)?;
     let run = model.predict(&ds.test_x)?;
     Ok(RunRecord {
-        method: format!("LMA-par(M={m},B={b},S={s})"),
+        method: format!("PIC-par(M={m},S={s})"),
         dataset: ds.name.clone(),
         data_size: ds.train_x.rows(),
         cores: m,
         rmse: rmse(&run.prediction.mean, &ds.test_y),
         secs: run.parallel_secs,
+        wall_secs: run.wall_secs,
         total_compute_secs: run.total_compute_secs,
         bytes: run.bytes,
     })
@@ -259,20 +316,7 @@ pub fn run_pic_parallel(
     s: usize,
     seed: u64,
 ) -> Result<RunRecord> {
-    let cc = ClusterConfig::gigabit(machines, cores);
-    let m = cc.total_cores();
-    let model = ParallelPic::fit(&ds.train_x, &ds.train_y, hyp, &lma_cfg(m, 0, s, seed), &cc)?;
-    let run = model.predict(&ds.test_x)?;
-    Ok(RunRecord {
-        method: format!("PIC-par(M={m},S={s})"),
-        dataset: ds.name.clone(),
-        data_size: ds.train_x.rows(),
-        cores: m,
-        rmse: rmse(&run.prediction.mean, &ds.test_y),
-        secs: run.parallel_secs,
-        total_compute_secs: run.total_compute_secs,
-        bytes: run.bytes,
-    })
+    run_pic_parallel_on(ds, hyp, &ClusterConfig::gigabit(machines, cores), s, seed)
 }
 
 /// Write records to `results/<name>.csv`.

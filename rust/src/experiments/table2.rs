@@ -1,7 +1,13 @@
 //! Table 2 — speedups of parallel LMA/PIC over their centralized
 //! counterparts (plus centralized incurred times) on AIMPEAK, varying |D|
 //! and M. Speedup = centralized secs / parallel makespan (footnote 3).
+//!
+//! `Table2Params::backend` selects the execution backend: the default
+//! virtual-time simulator reproduces the paper's makespan accounting; the
+//! `threads` backend additionally makes the `wall_speedup` column a real
+//! measured quantity (parallel wall-clock vs centralized wall-clock).
 
+use crate::config::{BackendKind, ClusterConfig};
 use crate::experiments::common::*;
 use crate::metrics::speedup;
 use crate::util::error::Result;
@@ -16,6 +22,8 @@ pub struct Table2Params {
     pub lma_b: usize,
     pub pic_support: usize,
     pub seed: u64,
+    /// Execution backend for the parallel runs (sim or threads).
+    pub backend: BackendKind,
 }
 
 impl Default for Table2Params {
@@ -29,6 +37,7 @@ impl Default for Table2Params {
             lma_b: 1,
             pic_support: 640,
             seed: 21,
+            backend: BackendKind::Sim,
         }
     }
 }
@@ -43,6 +52,7 @@ impl Table2Params {
             lma_b: 1,
             pic_support: 5120,
             seed: 21,
+            backend: BackendKind::Sim,
         }
     }
 }
@@ -56,29 +66,28 @@ pub struct SpeedupRecord {
     pub centralized_secs: f64,
     pub parallel_secs: f64,
     pub speedup: f64,
+    /// Real wall-clock of the parallel run (fit + predict).
+    pub parallel_wall_secs: f64,
+    /// Measured wall-clock speedup (centralized wall / parallel wall) —
+    /// meaningful with the `threads` backend.
+    pub wall_speedup: f64,
     pub rmse_gap: f64,
 }
 
 pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
-    println!("\n=== Table 2 (AIMPEAK speedups) ===");
+    println!("\n=== Table 2 (AIMPEAK speedups, backend {:?}) ===", params.backend);
     let mut out = Vec::new();
     for &n in &params.data_sizes {
         let ds = Workload::Aimpeak.generate(n, params.test_size, params.seed)?;
         let hyp = quick_hypers(&ds);
         for &(machines, cores) in &params.core_grid {
             let m = machines * cores;
+            let cc = ClusterConfig::gigabit(machines, cores).with_backend(params.backend);
             // LMA centralized vs parallel (same M = number of blocks).
             let cen =
                 run_lma_centralized(&ds, &hyp, m, params.lma_b, params.lma_support, params.seed)?;
-            let par = run_lma_parallel(
-                &ds,
-                &hyp,
-                machines,
-                cores,
-                params.lma_b,
-                params.lma_support,
-                params.seed,
-            )?;
+            let par =
+                run_lma_parallel_on(&ds, &hyp, &cc, params.lma_b, params.lma_support, params.seed)?;
             out.push(SpeedupRecord {
                 method: "LMA".into(),
                 data_size: n,
@@ -86,12 +95,13 @@ pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
                 centralized_secs: cen.secs,
                 parallel_secs: par.secs,
                 speedup: speedup(cen.secs, par.secs),
+                parallel_wall_secs: par.wall_secs,
+                wall_speedup: speedup(cen.wall_secs, par.wall_secs),
                 rmse_gap: (cen.rmse - par.rmse).abs(),
             });
             // PIC centralized vs parallel.
             let cen_pic = run_pic_centralized(&ds, &hyp, m, params.pic_support, params.seed)?;
-            let par_pic =
-                run_pic_parallel(&ds, &hyp, machines, cores, params.pic_support, params.seed)?;
+            let par_pic = run_pic_parallel_on(&ds, &hyp, &cc, params.pic_support, params.seed)?;
             out.push(SpeedupRecord {
                 method: "PIC".into(),
                 data_size: n,
@@ -99,6 +109,8 @@ pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
                 centralized_secs: cen_pic.secs,
                 parallel_secs: par_pic.secs,
                 speedup: speedup(cen_pic.secs, par_pic.secs),
+                parallel_wall_secs: par_pic.wall_secs,
+                wall_speedup: speedup(cen_pic.wall_secs, par_pic.wall_secs),
                 rmse_gap: (cen_pic.rmse - par_pic.rmse).abs(),
             });
         }
@@ -112,6 +124,8 @@ pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
         "centralized_secs",
         "parallel_secs",
         "speedup",
+        "parallel_wall_secs",
+        "wall_speedup",
         "rmse_gap",
     ]);
     for r in &out {
@@ -122,6 +136,8 @@ pub fn run(params: &Table2Params) -> Result<Vec<SpeedupRecord>> {
             format!("{:.6}", r.centralized_secs),
             format!("{:.6}", r.parallel_secs),
             format!("{:.3}", r.speedup),
+            format!("{:.6}", r.parallel_wall_secs),
+            format!("{:.3}", r.wall_speedup),
             format!("{:.6}", r.rmse_gap),
         ]);
     }
@@ -157,9 +173,8 @@ fn print_table(params: &Table2Params, recs: &[SpeedupRecord]) {
 mod tests {
     use super::*;
 
-    #[test]
-    fn speedups_positive_and_parallel_consistent() {
-        let params = Table2Params {
+    fn mini_params(backend: BackendKind) -> Table2Params {
+        Table2Params {
             data_sizes: vec![150],
             test_size: 30,
             core_grid: vec![(3, 1)],
@@ -167,13 +182,30 @@ mod tests {
             lma_b: 1,
             pic_support: 32,
             seed: 5,
-        };
-        let recs = run(&params).unwrap();
+            backend,
+        }
+    }
+
+    #[test]
+    fn speedups_positive_and_parallel_consistent() {
+        let recs = run(&mini_params(BackendKind::Sim)).unwrap();
         assert_eq!(recs.len(), 2);
         for r in &recs {
             assert!(r.speedup > 0.0);
+            assert!(r.parallel_wall_secs > 0.0);
+            assert!(r.wall_speedup > 0.0);
             // Centralized vs parallel produce (near-)identical RMSE: the
             // parallel engine computes the same numbers.
+            assert!(r.rmse_gap < 1e-6, "{}: gap {}", r.method, r.rmse_gap);
+        }
+    }
+
+    #[test]
+    fn thread_backend_runs_the_grid() {
+        let recs = run(&mini_params(BackendKind::Threads { num_threads: 2 })).unwrap();
+        assert_eq!(recs.len(), 2);
+        for r in &recs {
+            assert!(r.parallel_wall_secs > 0.0);
             assert!(r.rmse_gap < 1e-6, "{}: gap {}", r.method, r.rmse_gap);
         }
     }

@@ -7,20 +7,24 @@
 //! native otherwise. Both produce the same numbers to f32 precision —
 //! `rust/tests/pjrt_integration.rs` asserts it whenever artifacts exist.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::kernels::se_ard;
 use crate::linalg::matrix::Mat;
 use crate::runtime::artifacts::ArtifactLibrary;
 use crate::util::error::Result;
 
-/// Which engine computes covariance blocks.
+/// Which engine computes covariance blocks. `Arc`-shared so a fitted
+/// model (and with it the `ThreadCluster` execution backend) can be used
+/// across worker threads.
 #[derive(Clone)]
 pub enum CovBackend {
     /// Pure-Rust SE-ARD builders.
     Native,
-    /// Compiled Pallas kernel when a bucket fits, else native.
-    Pjrt(Rc<ArtifactLibrary>),
+    /// Compiled Pallas kernel when a bucket fits, else native. Only
+    /// constructible in `pjrt`-feature builds (the stub library's loader
+    /// always returns `None`).
+    Pjrt(Arc<ArtifactLibrary>),
 }
 
 impl std::fmt::Debug for CovBackend {
@@ -37,7 +41,7 @@ impl CovBackend {
     /// to native when artifacts are not built.
     pub fn auto() -> CovBackend {
         match ArtifactLibrary::try_default() {
-            Some(lib) => CovBackend::Pjrt(Rc::new(lib)),
+            Some(lib) => CovBackend::Pjrt(Arc::new(lib)),
             None => CovBackend::Native,
         }
     }

@@ -100,6 +100,8 @@ pub fn cov_cross(x1: &Mat, x2: &Mat, hyp: &SeArdHyper) -> Result<Mat> {
 
 /// Cross-covariance from pre-scaled inputs (hot path: scaling each block
 /// once and reusing it across the many block-pair covariances LMA needs).
+/// The Gram product and the exp() sweep both split output rows across the
+/// `util::par` worker pool for large blocks (bit-identical to sequential).
 pub fn cov_cross_scaled(s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
     let n1 = s1.rows();
     let n2 = s2.rows();
@@ -108,17 +110,39 @@ pub fn cov_cross_scaled(s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
     let sq2: Vec<f64> = (0..n2).map(|i| gemm::dot(s2.row(i), s2.row(i))).collect();
     // G = S1 · S2ᵀ through the GEMM kernel.
     let mut g = gemm::matmul_nt(s1, s2)?;
+    let threads = {
+        let t = crate::util::par::num_threads();
+        if t <= 1 || n1 < 8 || n1 * n2 < (1 << 16) || crate::util::par::in_worker() {
+            1
+        } else {
+            t.min(n1)
+        }
+    };
     let gd = g.data_mut();
-    for i in 0..n1 {
-        let row = &mut gd[i * n2..(i + 1) * n2];
-        let qi = sq1[i];
+    if threads <= 1 {
+        exp_rows(gd, &sq1, &sq2, sigma_s2, 0, n1, n2);
+    } else {
+        let per = (n1 + threads - 1) / threads;
+        let sq1_ref = &sq1;
+        let sq2_ref = &sq2;
+        crate::util::par::run_row_chunks(gd, n1, n2, per, move |chunk, lo, hi| {
+            exp_rows(chunk, sq1_ref, sq2_ref, sigma_s2, lo, hi, n2)
+        });
+    }
+    Ok(g)
+}
+
+/// exp() sweep over rows `i0..i1` of the Gram product (chunk-local `gd`).
+fn exp_rows(gd: &mut [f64], sq1: &[f64], sq2: &[f64], sigma_s2: f64, i0: usize, i1: usize, n2: usize) {
+    for r in 0..(i1 - i0) {
+        let qi = sq1[i0 + r];
+        let row = &mut gd[r * n2..(r + 1) * n2];
         for (j, v) in row.iter_mut().enumerate() {
             // −½·d² = −½(‖x‖² + ‖x′‖²) + x·x′; clamp tiny negative zeros.
             let e = (-0.5 * (qi + sq2[j]) + *v).min(0.0);
             *v = sigma_s2 * e.exp();
         }
     }
-    Ok(g)
 }
 
 /// Symmetric covariance K(X, X) **with** the σ_n²·δ noise term on the

@@ -6,9 +6,17 @@
 //! AAAI 2015) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! * **Layer 3 (this crate)** — the parallel LMA coordinator: data
-//!   partitioning, local/global summary exchange over a simulated
-//!   multi-node cluster, the Theorem-2 predictive equations, and all
-//!   baselines the paper evaluates against (FGP, PIC, SSGP, local GPs).
+//!   partitioning, the Theorem-2 predictive equations, the local/global
+//!   summary exchange over a pluggable **execution backend**
+//!   (`cluster::Backend`), and all baselines the paper evaluates against
+//!   (FGP, PIC, SSGP, local GPs). Two backends ship: the deterministic
+//!   virtual-time cluster simulator (`cluster::SimCluster`, the paper's
+//!   makespan accounting) and a real multi-threaded backend
+//!   (`cluster::ThreadCluster`) that runs each wavefront/summary batch on
+//!   scoped OS threads for measured wall-clock speedup. Both produce
+//!   bit-identical predictions. The `linalg` GEMM/SYRK kernels and the
+//!   SE-ARD Gram builder can additionally split output rows across a
+//!   worker pool (`util::par`, opt-in via `PGPR_NUM_THREADS`).
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   covariance/summary hot spots, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled SE-ARD
@@ -16,8 +24,9 @@
 //!   against a pure-jnp oracle.
 //!
 //! Python never runs on the request path: `artifacts/*.hlo.txt` are loaded
-//! and executed through the PJRT C API (`runtime` module); everything else
-//! is pure Rust.
+//! and executed through the PJRT C API (`runtime` module, behind the
+//! `pjrt` cargo feature); everything else is pure Rust and the default
+//! build has no external dependencies at all.
 //!
 //! ## Quick start
 //!

@@ -12,13 +12,37 @@
 //! set. `syrk` exploits symmetry for the Gram products in the summaries
 //! (≈2× over a general GEMM). Perf history for this module lives in
 //! EXPERIMENTS.md §Perf.
+//!
+//! Large products additionally split their **output rows** across a scoped
+//! worker pool (`util::par`, default 1 worker — opt in via
+//! `PGPR_NUM_THREADS` or `util::par::set_num_threads`). Row splitting
+//! keeps every output element's accumulation order identical to the
+//! sequential kernel, so threaded results are bit-identical — the property
+//! the backend-equivalence tests rely on.
 
 use crate::linalg::matrix::Mat;
 use crate::util::error::{shape_err, Result};
+use crate::util::par::run_row_chunks;
 
 /// Cache-block sizes. KC·NC·8B ≈ 256 KiB fits comfortably in L2.
 const KC: usize = 256;
 const NC: usize = 128;
+
+/// Minimum flops before a product is worth splitting across workers.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+
+/// Worker count for a kernel over `rows` output rows and `flops` work.
+/// Stays sequential on pool worker threads (e.g. inside a
+/// `ThreadCluster` rank task) so the two parallelism levels never
+/// multiply into oversubscription.
+fn plan_threads(rows: usize, flops: usize) -> usize {
+    let t = crate::util::par::num_threads();
+    if t <= 1 || rows < 8 || flops < PAR_MIN_FLOPS || crate::util::par::in_worker() {
+        1
+    } else {
+        t.min(rows)
+    }
+}
 
 /// C = A·B.
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
@@ -36,9 +60,26 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
     if m == 0 || k == 0 || n == 0 {
         return Ok(c);
     }
-    let cd = c.data_mut();
     let ad = a.data();
     let bd = b.data();
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 {
+        matmul_rows(c.data_mut(), ad, bd, k, n, 0, m);
+        return Ok(c);
+    }
+    // Chunks sized in multiples of 4 rows so the register-blocked kernel
+    // groups rows exactly as the sequential path does (bit-identical).
+    let per = ((m + threads - 1) / threads + 3) / 4 * 4;
+    run_row_chunks(c.data_mut(), m, n, per, move |chunk, lo, hi| {
+        matmul_rows(chunk, ad, bd, k, n, lo, hi)
+    });
+    Ok(c)
+}
+
+/// The blocked i-k-j kernel over output rows `i0..i1`; `cd` holds exactly
+/// those rows (chunk-local indexing).
+fn matmul_rows(cd: &mut [f64], ad: &[f64], bd: &[f64], k: usize, n: usize, i0: usize, i1: usize) {
+    let rows = i1 - i0;
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
         for jb in (0..n).step_by(NC) {
@@ -46,11 +87,12 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
             let width = jend - jb;
             // 4-row register blocking: each streamed B row feeds four C
             // rows, cutting B-panel bandwidth 4× (§Perf).
-            let m4 = m / 4 * 4;
-            let mut i = 0;
-            while i < m4 {
+            let r4 = rows / 4 * 4;
+            let mut r = 0;
+            while r < r4 {
+                let i = i0 + r;
                 // Split cd into four disjoint row slices.
-                let (c0, rest) = cd[i * n..].split_at_mut(n);
+                let (c0, rest) = cd[r * n..].split_at_mut(n);
                 let (c1, rest) = rest.split_at_mut(n);
                 let (c2, c3) = rest.split_at_mut(n);
                 let c0 = &mut c0[jb..jend];
@@ -73,10 +115,11 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
                         c3[idx] += a3 * bv;
                     }
                 }
-                i += 4;
+                r += 4;
             }
-            for i in m4..m {
-                let crow = &mut cd[i * n + jb..i * n + jend];
+            for r in r4..rows {
+                let i = i0 + r;
+                let crow = &mut cd[r * n + jb..r * n + jend];
                 for p in kb..kend {
                     let aip = ad[i * k + p];
                     if aip == 0.0 {
@@ -90,7 +133,6 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
             }
         }
     }
-    Ok(c)
 }
 
 /// C = Aᵀ·B where A is (k×m), B is (k×n) → C is (m×n).
@@ -152,11 +194,26 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
     }
     let ad = a.data();
     let bd = b.data();
-    let cd = c.data_mut();
+    let threads = plan_threads(m, m * k * n);
+    if threads <= 1 {
+        matmul_nt_rows(c.data_mut(), ad, bd, k, n, 0, m);
+        return Ok(c);
+    }
+    let per = (m + threads - 1) / threads;
+    run_row_chunks(c.data_mut(), m, n, per, move |chunk, lo, hi| {
+        matmul_nt_rows(chunk, ad, bd, k, n, lo, hi)
+    });
+    Ok(c)
+}
+
+/// Dot-product kernel over output rows `i0..i1` (rows are independent, so
+/// any row split is bit-identical to the sequential sweep).
+fn matmul_nt_rows(cd: &mut [f64], ad: &[f64], bd: &[f64], k: usize, n: usize, i0: usize, i1: usize) {
     let n4 = n / 4 * 4;
-    for i in 0..m {
+    for r in 0..(i1 - i0) {
+        let i = i0 + r;
         let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * n..(i + 1) * n];
+        let crow = &mut cd[r * n..(r + 1) * n];
         let mut j = 0;
         while j < n4 {
             let out = dot4(
@@ -173,7 +230,6 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
             crow[j] = dot(arow, &bd[j * k..(j + 1) * k]);
         }
     }
-    Ok(c)
 }
 
 /// Unrolled dot product. `chunks_exact` removes bounds checks and the
@@ -246,30 +302,46 @@ pub fn syrk_tn(a: &Mat) -> Mat {
         return c;
     }
     let ad = a.data();
-    let cd = c.data_mut();
-    for kb in (0..k).step_by(KC) {
-        let kend = (kb + KC).min(k);
-        for p in kb..kend {
-            let arow = &ad[p * m..(p + 1) * m];
-            for i in 0..m {
-                let api = arow[i];
-                if api == 0.0 {
-                    continue;
-                }
-                let crow = &mut cd[i * m + i..(i + 1) * m];
-                for (cv, &av) in crow.iter_mut().zip(&arow[i..]) {
-                    *cv += api * av;
-                }
-            }
-        }
+    let threads = plan_threads(m, k * m * m / 2);
+    if threads <= 1 {
+        syrk_tn_rows(c.data_mut(), ad, k, m, 0, m);
+    } else {
+        let per = (m + threads - 1) / threads;
+        run_row_chunks(c.data_mut(), m, m, per, move |chunk, lo, hi| {
+            syrk_tn_rows(chunk, ad, k, m, lo, hi)
+        });
     }
     // Mirror upper → lower.
+    let cd = c.data_mut();
     for i in 0..m {
         for j in (i + 1)..m {
             cd[j * m + i] = cd[i * m + j];
         }
     }
     c
+}
+
+/// Upper-triangle SYRK accumulation over output rows `i0..i1`. Keeps the
+/// sequential (kb, p) accumulation order per element, so row splits are
+/// bit-identical.
+fn syrk_tn_rows(cd: &mut [f64], ad: &[f64], k: usize, m: usize, i0: usize, i1: usize) {
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for p in kb..kend {
+            let arow = &ad[p * m..(p + 1) * m];
+            for i in i0..i1 {
+                let api = arow[i];
+                if api == 0.0 {
+                    continue;
+                }
+                let r = i - i0;
+                let crow = &mut cd[r * m + i..(r + 1) * m];
+                for (cv, &av) in crow.iter_mut().zip(&arow[i..]) {
+                    *cv += api * av;
+                }
+            }
+        }
+    }
 }
 
 /// Symmetric rank-k: C = A·Aᵀ (n = A.rows).
@@ -423,5 +495,27 @@ mod tests {
         let got = matmul(&a, &b).unwrap();
         let want = naive(&a, &b);
         assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn threaded_kernels_are_bit_identical() {
+        // Row-split chunking must not change a single bit of any output
+        // element — the backend-equivalence guarantee. Sizes are chosen
+        // above PAR_MIN_FLOPS so the threaded path actually engages.
+        let mut rng = Pcg64::new(17);
+        let a = Mat::randn(301, 140, &mut rng);
+        let b = Mat::randn(140, 150, &mut rng);
+        let bt = Mat::randn(151, 140, &mut rng);
+        let seq_mm = matmul(&a, &b).unwrap();
+        let seq_nt = matmul_nt(&a, &bt).unwrap();
+        let seq_syrk = syrk_tn(&a);
+        crate::util::par::set_num_threads(4);
+        let par_mm = matmul(&a, &b).unwrap();
+        let par_nt = matmul_nt(&a, &bt).unwrap();
+        let par_syrk = syrk_tn(&a);
+        crate::util::par::set_num_threads(1);
+        assert_eq!(seq_mm.data(), par_mm.data());
+        assert_eq!(seq_nt.data(), par_nt.data());
+        assert_eq!(seq_syrk.data(), par_syrk.data());
     }
 }

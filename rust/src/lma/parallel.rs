@@ -1,5 +1,5 @@
-//! Parallel LMA over the simulated cluster (Remark 1 after Theorem 2 +
-//! Appendix C).
+//! Parallel LMA over a pluggable execution backend (Remark 1 after
+//! Theorem 2 + Appendix C).
 //!
 //! Rank m owns block m (its training data D_m ∪ D_m^B, per the paper's
 //! storage layout) and, at predict time, its test block U_m. The protocol:
@@ -12,16 +12,31 @@
 //!    R̄_{D_m U_{m+δ}} from its propagator and the frontier received from
 //!    rank m+1 at distance δ−1; symmetrically rank n computes
 //!    R̄_{U_n D_{n+δ}} and R̄_{D_n D_{n+δ}} and forwards the latter to rank
-//!    n−1. Only a B-diagonal sliding window of R̄_DD is ever alive.
+//!    n−1. Only a B-diagonal sliding window of R̄_DD is ever alive. All
+//!    blocks of one diagonal are independent, so each wavefront step is
+//!    one [`Backend::compute_all`] batch.
 //! 3. **Summaries** — rank m computes its Definition-1 local terms and
 //!    ships them to the master; the master reduces (Definition 2) and
 //!    broadcasts the per-rank slices; rank m evaluates Theorem 2 for U_m.
 //!
-//! The numbers are bit-identical to the centralized row sweep in
-//! `lma::sweep` (asserted in integration tests); what differs is where
-//! time is charged and what crosses the network.
+//! The protocol is generic over [`Backend`]: with the virtual-time
+//! `cluster::SimCluster` rank work runs sequentially under virtual-time
+//! accounting (the paper's "parallel incurred time"); with
+//! `cluster::ThreadCluster` every `compute_all` batch runs on
+//! real OS threads and `wall_secs` reports measured speedup. The
+//! *predictions* are bit-identical across backends and match the
+//! centralized row sweep in `lma::sweep` (asserted in integration tests);
+//! what differs is where the work runs, where time is charged and what
+//! crosses the network. Note the per-δ batching schedules sends slightly
+//! differently than the pre-backend interleaved loop, so the simulator's
+//! virtual clocks (not the predictions) can differ marginally from
+//! pre-refactor values; all modelled effects (frontier, window and
+//! transpose traffic, per-rank compute attribution) are preserved.
 
-use crate::cluster::SimCluster;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cluster::{AnyCluster, Backend, RankTask};
 use crate::config::{ClusterConfig, LmaConfig};
 use crate::gp::Prediction;
 use crate::kernels::se_ard::{self, SeArdHyper};
@@ -36,24 +51,30 @@ use crate::util::error::{PgprError, Result};
 
 const F64_BYTES: usize = 8;
 
-/// Result of a parallel run: the prediction plus the virtual-time account.
+/// Result of a parallel run: the prediction plus the time accounts.
 pub struct ParallelRun {
     pub prediction: Prediction,
-    /// Simulated parallel incurred time (makespan), seconds.
+    /// Backend-reported parallel incurred time (virtual makespan for the
+    /// simulator; max summed per-rank compute for threads), seconds.
     pub parallel_secs: f64,
     /// Sum of all ranks' compute seconds (≈ the centralized work).
     pub total_compute_secs: f64,
+    /// Real wall-clock seconds of fit + predict as actually executed —
+    /// the measured quantity for the thread backend.
+    pub wall_secs: f64,
     pub messages: usize,
     pub bytes: usize,
 }
 
-/// Parallel LMA: fit + predict on a simulated cluster. `cfg.num_blocks`
+/// Parallel LMA: fit + predict on a cluster backend. `cfg.num_blocks`
 /// must equal the cluster's total core count (one block per core, as in
-/// the paper's experiments).
+/// the paper's experiments). The backend is selected by
+/// `cluster_cfg.backend` (virtual-time sim or real threads).
 pub struct ParallelLma {
     core: LmaFitCore,
     cluster_cfg: ClusterConfig,
     fit_makespan: f64,
+    fit_wall_secs: f64,
 }
 
 impl ParallelLma {
@@ -71,26 +92,41 @@ impl ParallelLma {
                 cluster_cfg.total_cores()
             )));
         }
-        let core = LmaFitCore::fit(train_x, train_y, hyp, cfg)?;
+        let wall0 = Instant::now();
+        // The independent per-block fit work runs on the backend's real
+        // worker count (1 for the simulator — identical to sequential).
+        let core = LmaFitCore::fit_with_parallelism(
+            train_x,
+            train_y,
+            hyp,
+            cfg,
+            cluster_cfg.backend.parallelism(),
+        )?;
+        let fit_wall_secs = wall0.elapsed().as_secs_f64();
         // Charge the measured fit phases to the ranks that own them.
-        let mut sim = SimCluster::new(cluster_cfg.clone())?;
-        let p = sim.num_ranks();
+        let mut cl = AnyCluster::new(cluster_cfg)?;
+        let p = cl.num_ranks();
         let t = &core.timings;
         for r in 0..p {
             // Replicated preprocessing: every rank scales inputs and
             // factorizes Σ_SS locally (cheaper than shipping it).
-            sim.charge(r, t.scale_secs / p as f64 + t.basis_secs)?;
+            cl.charge(r, t.scale_secs / p as f64 + t.basis_secs)?;
             // Parallelized clustering: each rank handles its shard.
-            sim.charge(r, t.partition_secs / p as f64)?;
+            cl.charge(r, t.partition_secs / p as f64)?;
             // Whitened rows for the rank's own block.
-            sim.charge(r, t.wt_secs / p as f64)?;
-            sim.charge(r, t.per_block_secs[r])?;
+            cl.charge(r, t.wt_secs / p as f64)?;
+            cl.charge(r, t.per_block_secs[r])?;
         }
         // In-band residual blocks span neighbours' data: rank m needs
         // y/X over D_m^B, which the paper pre-places on machine m, so no
         // fit-time messages beyond the initial data distribution.
-        sim.barrier();
-        Ok(ParallelLma { core, cluster_cfg: cluster_cfg.clone(), fit_makespan: sim.makespan() })
+        cl.barrier();
+        Ok(ParallelLma {
+            core,
+            cluster_cfg: cluster_cfg.clone(),
+            fit_makespan: cl.makespan(),
+            fit_wall_secs,
+        })
     }
 
     pub fn core(&self) -> &LmaFitCore {
@@ -101,38 +137,67 @@ impl ParallelLma {
         self.fit_makespan
     }
 
-    /// Parallel predict. Returns predictions in the caller's test order
-    /// plus the simulated time account (fit makespan included).
+    /// Real wall-clock seconds spent in `fit`.
+    pub fn fit_wall_secs(&self) -> f64 {
+        self.fit_wall_secs
+    }
+
+    /// Parallel predict on the configured backend. Returns predictions in
+    /// the caller's test order plus the time accounts (fit included).
     pub fn predict(&self, test_x: &Mat) -> Result<ParallelRun> {
+        let mut cl = AnyCluster::new(&self.cluster_cfg)?;
+        self.predict_on(test_x, &mut cl)
+    }
+
+    /// Parallel predict on a caller-supplied backend (the generic seam:
+    /// any `Backend` implementation — sim, threads, future process/RPC —
+    /// executes the same protocol).
+    pub fn predict_on<B: Backend>(&self, test_x: &Mat, cl: &mut B) -> Result<ParallelRun> {
+        let wall0 = Instant::now();
         let core = &self.core;
         let mm = core.m();
         let b = core.b();
-        let mut sim = SimCluster::new(self.cluster_cfg.clone())?;
+        if cl.num_ranks() != mm {
+            return Err(PgprError::Cluster(format!(
+                "backend has {} ranks, model has {} blocks",
+                cl.num_ranks(),
+                mm
+            )));
+        }
 
         // --- test-side construction: rank n builds U_n's state ---
         let ts = TestSide::build(core, test_x)?;
         // Charge: scaling/assignment is tiny and replicated; wt_u and
         // R'^U_n belong to rank n. We measure by rebuilding per-rank
         // pieces (cheap relative to the sweep).
-        for n in 0..mm {
-            if ts.size(n) == 0 {
-                continue;
+        {
+            let mut tasks: Vec<RankTask<'_, Result<()>>> = Vec::new();
+            for n in 0..mm {
+                if ts.size(n) == 0 {
+                    continue;
+                }
+                let ts_ref = &ts;
+                tasks.push((
+                    n,
+                    Box::new(move || {
+                        let xn = ts_ref.x_block(n);
+                        core.basis.wt(&xn)?;
+                        if ts_ref.r_up[n].is_some() {
+                            let band = core.part.forward_band(n, b);
+                            let xb = core.x_scaled.rows_range(band.start, band.end);
+                            let wb = core.wt_d.rows_range(band.start, band.end);
+                            let xu = ts_ref.x_block(n);
+                            let wu = ts_ref.wt_block(n);
+                            let r_ub = r_cross(&xu, &wu, &xb, &wb, core.hyp.sigma_s2, None)?;
+                            let bf = core.band_chol[n].as_ref().expect("band factor exists");
+                            bf.solve_mat(&r_ub.transpose())?;
+                        }
+                        Ok(())
+                    }),
+                ));
             }
-            let xn = ts.x_block(n);
-            sim.compute(n, || {
-                let _ = core.basis.wt(&xn);
-            })?;
-            if ts.r_up[n].is_some() {
-                let band = core.part.forward_band(n, b);
-                let xb = core.x_scaled.rows_range(band.start, band.end);
-                let wb = core.wt_d.rows_range(band.start, band.end);
-                let xu = ts.x_block(n);
-                let wu = ts.wt_block(n);
-                sim.compute(n, || {
-                    let r_ub = r_cross(&xu, &wu, &xb, &wb, core.hyp.sigma_s2, None).unwrap();
-                    let bf = core.band_chol[n].as_ref().unwrap();
-                    let _ = bf.solve_mat(&r_ub.transpose());
-                })?;
+            for r in cl.compute_all(tasks)? {
+                r?;
             }
         }
 
@@ -141,28 +206,46 @@ impl ParallelLma {
         let mut rbar = Mat::zeros(core.part.total(), total_u);
 
         // In-band blocks: rank m computes row m's near diagonal.
-        for m in 0..mm {
-            let lo = m.saturating_sub(b);
-            let hi = (m + b).min(mm - 1);
-            let xm = core.x_block(m);
-            let wm = core.wt_block(m);
-            for n in lo..=hi {
-                if ts.size(n) == 0 {
-                    continue;
+        {
+            let mut tasks: Vec<RankTask<'_, Result<Vec<(usize, Mat)>>>> = Vec::new();
+            for m in 0..mm {
+                let ts_ref = &ts;
+                tasks.push((
+                    m,
+                    Box::new(move || {
+                        let lo = m.saturating_sub(b);
+                        let hi = (m + b).min(mm - 1);
+                        let xm = core.x_block(m);
+                        let wm = core.wt_block(m);
+                        let mut out = Vec::new();
+                        for n in lo..=hi {
+                            if ts_ref.size(n) == 0 {
+                                continue;
+                            }
+                            let blk = r_cross(
+                                &xm,
+                                &wm,
+                                &ts_ref.x_block(n),
+                                &ts_ref.wt_block(n),
+                                core.hyp.sigma_s2,
+                                None,
+                            )?;
+                            out.push((n, blk));
+                        }
+                        Ok(out)
+                    }),
+                ));
+            }
+            for (m, res) in cl.compute_all(tasks)?.into_iter().enumerate() {
+                for (n, blk) in res? {
+                    rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
                 }
-                let xu = ts.x_block(n);
-                let wu = ts.wt_block(n);
-                let blk = sim.compute(m, || {
-                    r_cross(&xm, &wm, &xu, &wu, core.hyp.sigma_s2, None)
-                })??;
-                rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
             }
         }
 
         if b > 0 && mm > b + 1 {
             // Sliding window of R̄_DD diagonals for the lower side:
             // dd_window[(n, k)] = R̄_{D_n D_k} for the last B distances.
-            use std::collections::HashMap;
             let mut dd_window: HashMap<(usize, usize), Mat> = HashMap::new();
             // Seed with the in-band blocks (distance ≤ B).
             for n in 0..mm {
@@ -172,43 +255,79 @@ impl ParallelLma {
             }
 
             for delta in (b + 1)..mm {
-                // Upper side: rank m computes R̄_{D_m U_{m+δ}} from rows
-                // m+1..m+B of R̄_DU (frontier received from rank m+1).
+                // Frontier messages for this wavefront step, in rank
+                // order: rank m+1 forwards the stacked R̄_DU band rows for
+                // column block m+δ plus the R̄_DD window blocks.
                 for m in 0..(mm - delta) {
                     let n = m + delta;
                     if ts.size(n) > 0 {
                         let band = core.part.forward_band(m, b);
-                        // Frontier bytes: rank m+1 forwards the stacked
-                        // band rows for column block n.
-                        let frontier_elems = band.len() * ts.size(n);
-                        sim.send(m + 1, m, frontier_elems * F64_BYTES)?;
-                        let f = rbar.block(band.start, band.end, ts.starts[n], ts.starts[n + 1]);
-                        let p_m = core.p[m].as_ref().expect("interior propagator");
-                        let blk = sim.compute(m, || p_m.matmul(&f))??;
-                        rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
+                        cl.send(m + 1, m, band.len() * ts.size(n) * F64_BYTES)?;
                     }
+                    let g_rows: usize =
+                        ((m + 1)..=(m + b).min(mm - 1)).map(|j| core.part.size(j)).sum();
+                    cl.send(m + 1, m, g_rows * core.part.size(n) * F64_BYTES)?;
+                }
 
-                    // Lower side (symmetric roles): rank m computes
-                    // R̄_{U_m D_{m+δ}} and R̄_{D_m D_{m+δ}} from the DD
-                    // frontier received from rank m+1.
-                    let k = m + delta;
-                    let g_blocks: Vec<&Mat> = ((m + 1)..=(m + b).min(mm - 1))
-                        .map(|j| dd_window.get(&(j, k)).expect("window holds last B diagonals"))
-                        .collect();
-                    let g = Mat::vstack(&g_blocks)?;
-                    sim.send(m + 1, m, g.rows() * g.cols() * F64_BYTES)?;
-                    let p_m = core.p[m].as_ref().expect("interior propagator");
-                    let dd = sim.compute(m, || p_m.matmul(&g))??;
-                    if ts.size(m) > 0 {
-                        let rup = ts.r_up[m].as_ref().expect("r_up for non-empty block");
-                        let ud = sim.compute(m, || rup.matmul(&g))??;
-                        // R̄_{D_k U_m} = (R̄_{U_m D_k})ᵀ — owned by rank k's
+                // All ranks compute their δ-diagonal blocks concurrently:
+                // rank m's upper block R̄_{D_m U_{m+δ}}, its window block
+                // R̄_{D_m D_{m+δ}}, and (if U_m is non-empty) the lower
+                // block R̄_{U_m D_{m+δ}}.
+                type DeltaOut = Result<(Option<Mat>, Mat, Option<Mat>)>;
+                let mut tasks: Vec<RankTask<'_, DeltaOut>> = Vec::new();
+                for m in 0..(mm - delta) {
+                    let rbar_ref = &rbar;
+                    let win = &dd_window;
+                    let ts_ref = &ts;
+                    tasks.push((
+                        m,
+                        Box::new(move || {
+                            let n = m + delta;
+                            let p_m = core.p[m].as_ref().expect("interior propagator");
+                            let upper = if ts_ref.size(n) > 0 {
+                                let band = core.part.forward_band(m, b);
+                                let f = rbar_ref.block(
+                                    band.start,
+                                    band.end,
+                                    ts_ref.starts[n],
+                                    ts_ref.starts[n + 1],
+                                );
+                                Some(p_m.matmul(&f)?)
+                            } else {
+                                None
+                            };
+                            let g_blocks: Vec<&Mat> = ((m + 1)..=(m + b).min(mm - 1))
+                                .map(|j| win.get(&(j, n)).expect("window holds last B diagonals"))
+                                .collect();
+                            let g = Mat::vstack(&g_blocks)?;
+                            let dd = p_m.matmul(&g)?;
+                            let ud = if ts_ref.size(m) > 0 {
+                                let rup = ts_ref.r_up[m].as_ref().expect("r_up for non-empty block");
+                                Some(rup.matmul(&g)?)
+                            } else {
+                                None
+                            };
+                            Ok((upper, dd, ud))
+                        }),
+                    ));
+                }
+                let results = cl.compute_all(tasks)?;
+
+                // Apply results and the Appendix-C transpose messages.
+                for (m, res) in results.into_iter().enumerate() {
+                    let n = m + delta;
+                    let (upper, dd, ud) = res?;
+                    if let Some(u) = upper {
+                        rbar.set_block(core.part.range(m).start, ts.starts[n], &u);
+                    }
+                    if let Some(ud) = ud {
+                        // R̄_{D_n U_m} = (R̄_{U_m D_n})ᵀ — owned by rank n's
                         // rows; rank m sends it over (Appendix C final
                         // transpose-communication step).
-                        sim.send(m, k, ud.rows() * ud.cols() * F64_BYTES)?;
-                        rbar.set_block(core.part.range(k).start, ts.starts[m], &ud.transpose());
+                        cl.send(m, n, ud.rows() * ud.cols() * F64_BYTES)?;
+                        rbar.set_block(core.part.range(n).start, ts.starts[m], &ud.transpose());
                     }
-                    dd_window.insert((m, k), dd);
+                    dd_window.insert((m, n), dd);
                 }
                 // Drop diagonals that slid out of the window.
                 if delta >= 2 * b {
@@ -222,15 +341,22 @@ impl ParallelLma {
         let sbar = sigma_bar_du(core, &ts, &rbar)?;
         let mut terms: Vec<LocalTerms> = Vec::with_capacity(mm);
         let mut term_bytes = vec![0usize; mm];
-        for m in 0..mm {
-            let t = sim.compute(m, || local_terms(core, &sbar, m, false))??;
-            term_bytes[m] = crate::lma::summary::local_terms_bytes(&t);
-            terms.push(t);
+        {
+            let mut tasks: Vec<RankTask<'_, Result<LocalTerms>>> = Vec::new();
+            for m in 0..mm {
+                let sb = &sbar;
+                tasks.push((m, Box::new(move || local_terms(core, sb, m, false))));
+            }
+            for (m, t) in cl.compute_all(tasks)?.into_iter().enumerate() {
+                let t = t?;
+                term_bytes[m] = crate::lma::summary::local_terms_bytes(&t);
+                terms.push(t);
+            }
         }
 
         // --- reduce to master, master builds the global summary ---
-        sim.reduce_to_master(&term_bytes)?;
-        let g = sim.compute(0, || reduce(core, &terms, total_u))??;
+        cl.reduce_to_master(&term_bytes)?;
+        let g = cl.compute(0, || reduce(core, &terms, total_u))??;
 
         // --- master broadcasts per-rank slices; ranks run Theorem 2 ---
         let s = core.basis.size();
@@ -240,7 +366,7 @@ impl ParallelLma {
                 F64_BYTES * (s + s * s + um + um * s + um)
             })
             .collect();
-        sim.broadcast_from_master(&bcast)?;
+        cl.broadcast_from_master(&bcast)?;
 
         // Each rank factorizes Σ̈_SS and solves for its own slice. The
         // factorization is identical work on every rank: measure once,
@@ -248,42 +374,56 @@ impl ParallelLma {
         let (sss_factor, fac_secs) = crate::util::timer::time_it(|| gp_cholesky(&g.sss));
         let (sss_factor, _jit) = sss_factor?;
         for m in 0..mm {
-            sim.charge(m, fac_secs)?;
+            cl.charge(m, fac_secs)?;
         }
         let a = sss_factor.solve_vec(&g.ys)?;
         let w = sss_factor.half_solve(&g.sus.transpose())?;
         let prior = se_ard::prior_var(&core.hyp);
         let mut mean = vec![0.0; total_u];
         let mut var = vec![0.0; total_u];
-        for m in 0..mm {
-            let r = ts.range(m);
-            if r.is_empty() {
-                continue;
-            }
-            let gy = &g.yu[r.clone()];
-            let out = sim.compute(m, || {
-                let mut mloc = Vec::with_capacity(r.len());
-                let mut vloc = Vec::with_capacity(r.len());
-                for (off, j) in r.clone().enumerate() {
-                    let corr: f64 = (0..s).map(|i| g.sus.get(j, i) * a[i]).sum();
-                    mloc.push(core.hyp.mean + gy[off] - corr);
-                    let wsq: f64 = (0..s).map(|i| w.get(i, j) * w.get(i, j)).sum();
-                    vloc.push((prior - g.suu_diag[j] + wsq).max(0.0));
+        {
+            type RankSlice = (usize, Vec<f64>, Vec<f64>);
+            let mut tasks: Vec<RankTask<'_, RankSlice>> = Vec::new();
+            for m in 0..mm {
+                let r = ts.range(m);
+                if r.is_empty() {
+                    continue;
                 }
-                (mloc, vloc)
-            })?;
-            mean[r.clone()].copy_from_slice(&out.0);
-            var[r].copy_from_slice(&out.1);
+                let g_ref = &g;
+                let a_ref = &a;
+                let w_ref = &w;
+                tasks.push((
+                    m,
+                    Box::new(move || {
+                        let mut mloc = Vec::with_capacity(r.len());
+                        let mut vloc = Vec::with_capacity(r.len());
+                        for j in r {
+                            let corr: f64 = (0..s).map(|i| g_ref.sus.get(j, i) * a_ref[i]).sum();
+                            mloc.push(core.hyp.mean + g_ref.yu[j] - corr);
+                            let wsq: f64 =
+                                (0..s).map(|i| w_ref.get(i, j) * w_ref.get(i, j)).sum();
+                            vloc.push((prior - g_ref.suu_diag[j] + wsq).max(0.0));
+                        }
+                        (m, mloc, vloc)
+                    }),
+                ));
+            }
+            for (m, mloc, vloc) in cl.compute_all(tasks)? {
+                let r = ts.range(m);
+                mean[r.clone()].copy_from_slice(&mloc);
+                var[r].copy_from_slice(&vloc);
+            }
         }
-        sim.barrier();
+        cl.barrier();
 
         let pred = scatter(&ts, Prediction { mean, var, cov: None });
-        let metrics_snapshot = sim.metrics().clone();
+        let metrics_snapshot = cl.metrics().clone();
         Ok(ParallelRun {
             prediction: pred,
-            parallel_secs: self.fit_makespan + sim.makespan(),
+            parallel_secs: self.fit_makespan + cl.makespan(),
             total_compute_secs: metrics_snapshot.compute_secs.iter().sum::<f64>()
                 + self.fit_makespan,
+            wall_secs: self.fit_wall_secs + wall0.elapsed().as_secs_f64(),
             messages: metrics_snapshot.messages,
             bytes: metrics_snapshot.bytes,
         })
@@ -309,7 +449,7 @@ pub fn run_parallel_lma(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PartitionStrategy;
+    use crate::config::{BackendKind, PartitionStrategy};
     use crate::lma::LmaRegressor;
     use crate::util::rng::Pcg64;
 
@@ -348,6 +488,36 @@ mod tests {
     }
 
     #[test]
+    fn thread_backend_matches_sim_backend_exactly() {
+        for (m, b) in [(6, 2), (5, 0), (4, 1)] {
+            let (x, y, t, hyp, cfg) = setup(150, m, b, 175);
+            let sim_cc = ClusterConfig::gigabit(m, 1);
+            let thr_cc = ClusterConfig::gigabit(m, 1)
+                .with_backend(BackendKind::Threads { num_threads: 4 });
+            let sim = ParallelLma::fit(&x, &y, &hyp, &cfg, &sim_cc).unwrap().predict(&t).unwrap();
+            let thr = ParallelLma::fit(&x, &y, &hyp, &cfg, &thr_cc).unwrap().predict(&t).unwrap();
+            assert_eq!(
+                thr.prediction.mean, sim.prediction.mean,
+                "M={m} B={b}: thread mean differs from sim"
+            );
+            assert_eq!(thr.prediction.var, sim.prediction.var, "M={m} B={b}");
+            // Same protocol ⇒ same traffic accounting.
+            assert_eq!(thr.messages, sim.messages, "M={m} B={b}");
+            assert_eq!(thr.bytes, sim.bytes, "M={m} B={b}");
+            assert!(thr.wall_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn predict_on_rejects_mismatched_backend() {
+        let (x, y, t, hyp, cfg) = setup(80, 4, 1, 176);
+        let cc = ClusterConfig::gigabit(4, 1);
+        let model = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap();
+        let mut wrong = AnyCluster::new(&ClusterConfig::gigabit(2, 1)).unwrap();
+        assert!(model.predict_on(&t, &mut wrong).is_err());
+    }
+
+    #[test]
     fn cluster_size_must_match_blocks() {
         let (x, y, _t, hyp, cfg) = setup(60, 4, 1, 172);
         let cc = ClusterConfig::gigabit(2, 1); // 2 cores ≠ 4 blocks
@@ -362,6 +532,7 @@ mod tests {
         assert!(run.messages > 0);
         assert!(run.bytes > 0);
         assert!(run.parallel_secs > 0.0);
+        assert!(run.wall_secs > 0.0);
         // Makespan cannot exceed total compute + all comm.
         assert!(run.parallel_secs <= run.total_compute_secs + 10.0);
     }

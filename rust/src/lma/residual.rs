@@ -252,12 +252,30 @@ impl LmaFitCore {
         sig.sub(&q)
     }
 
-    /// Fit the core given training data and config.
+    /// Fit the core given training data and config, running the
+    /// independent per-block work on the global `util::par` worker count
+    /// (1 by default — fully sequential).
     pub fn fit(
         train_x: &Mat,
         train_y: &[f64],
         hyp: &SeArdHyper,
         cfg: &LmaConfig,
+    ) -> Result<LmaFitCore> {
+        Self::fit_with_parallelism(train_x, train_y, hyp, cfg, crate::util::par::num_threads())
+    }
+
+    /// Fit with an explicit worker count for the per-block loops (the
+    /// in-band residual blocks and the band/conditional factorizations are
+    /// independent across blocks). Results are bit-identical for every
+    /// `threads` value: each block's arithmetic is unchanged, only the
+    /// placement differs. `cluster::ThreadCluster`-backed parallel LMA
+    /// routes its worker count through here.
+    pub fn fit_with_parallelism(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+        threads: usize,
     ) -> Result<LmaFitCore> {
         hyp.validate()?;
         cfg.validate(train_x.rows())?;
@@ -326,15 +344,17 @@ impl LmaFitCore {
             sig.sub(&wa.matmul_t(wb)?)
         };
 
-        // --- exact in-band residual blocks ---
-        let mut block_clock = vec![0.0f64; mm];
-        let mut r_diag = Vec::with_capacity(mm);
-        let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
-        for m in 0..mm {
+        // --- exact in-band residual blocks (independent per block) ---
+        // The PJRT artifact library goes through a foreign runtime whose
+        // thread-safety we cannot vouch for from this crate, so per-block
+        // work stays on one thread whenever that backend is active; the
+        // native path parallelizes freely.
+        let workers = if cov_backend.is_pjrt() { 1 } else { threads.max(1) };
+        let band_rows = crate::util::par::parallel_map(mm, workers, |m| -> Result<(Mat, Vec<Mat>, f64)> {
             let t0 = std::time::Instant::now();
             let xm = x_scaled.rows_range(part.range(m).start, part.range(m).end);
             let wm = wt_d.rows_range(part.range(m).start, part.range(m).end);
-            r_diag.push(bk_cross(&xm, &xm, Some(hyp.sigma_n2), &wm, &wm)?);
+            let diag = bk_cross(&xm, &xm, Some(hyp.sigma_n2), &wm, &wm)?;
             let hi = (m + b).min(mm - 1);
             let mut row = Vec::new();
             for k in (m + 1)..=hi {
@@ -342,8 +362,16 @@ impl LmaFitCore {
                 let wk = wt_d.rows_range(part.range(k).start, part.range(k).end);
                 row.push(bk_cross(&xm, &xk, None, &wm, &wk)?);
             }
+            Ok((diag, row, t0.elapsed().as_secs_f64()))
+        });
+        let mut block_clock = vec![0.0f64; mm];
+        let mut r_diag = Vec::with_capacity(mm);
+        let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
+        for (m, res) in band_rows.into_iter().enumerate() {
+            let (diag, row, secs) = res?;
+            r_diag.push(diag);
             r_band.push(row);
-            block_clock[m] += t0.elapsed().as_secs_f64();
+            block_clock[m] += secs;
         }
 
         // --- band factors, propagators, conditionals, Def-1 summaries ---
@@ -376,20 +404,18 @@ impl LmaFitCore {
             cov_backend: cov_backend.clone(),
         };
 
-        for m in 0..mm {
+        // Independent per-block factorizations, same worker pool.
+        type BlockFactors = (Option<CholFactor>, Option<Mat>, CholFactor, Vec<f64>, Mat);
+        let facs = crate::util::par::parallel_map(mm, workers, |m| -> Result<(BlockFactors, f64)> {
             let t0 = std::time::Instant::now();
             let r_mm = &core_tmp.r_diag[m];
             let sigma_ms = core_tmp.basis.sigma_as(&core_tmp.x_block(m))?;
-            match core_tmp.band_gram(m) {
+            let out = match core_tmp.band_gram(m) {
                 None => {
                     // Empty forward band (B=0 or last block): Def 1
                     // degenerates — ẏ=y−μ, C=R_mm, Σ̇_S=Σ_DS.
-                    band_chol.push(None);
-                    p_all.push(None);
                     let (cf, _) = gp_cholesky(r_mm)?;
-                    c_chol.push(cf);
-                    y_dot.push(core_tmp.y_block(m).to_vec());
-                    s_dot.push(sigma_ms);
+                    (None, None, cf, core_tmp.y_block(m).to_vec(), sigma_ms)
                 }
                 Some(gram) => {
                     let (bf, _) = gp_cholesky(&gram)?;
@@ -411,14 +437,19 @@ impl LmaFitCore {
                     let x_fb = core_tmp.x_scaled.rows_range(fb.start, fb.end);
                     let sigma_bs = core_tmp.basis.sigma_as(&x_fb)?;
                     let sdot_m = sigma_ms.sub(&p_m.matmul(&sigma_bs)?)?;
-                    band_chol.push(Some(bf));
-                    p_all.push(Some(p_m));
-                    c_chol.push(cf);
-                    y_dot.push(ym);
-                    s_dot.push(sdot_m);
+                    (Some(bf), Some(p_m), cf, ym, sdot_m)
                 }
-            }
-            block_clock[m] += t0.elapsed().as_secs_f64();
+            };
+            Ok((out, t0.elapsed().as_secs_f64()))
+        });
+        for (m, res) in facs.into_iter().enumerate() {
+            let ((bf, p_m, cf, ym, sdot_m), secs) = res?;
+            band_chol.push(bf);
+            p_all.push(p_m);
+            c_chol.push(cf);
+            y_dot.push(ym);
+            s_dot.push(sdot_m);
+            block_clock[m] += secs;
         }
         timings.per_block_secs = block_clock;
 
@@ -538,6 +569,23 @@ mod tests {
             // ẏ_m is just centered y.
             let want: Vec<f64> = core.y_block(m).to_vec();
             assert_eq!(core.y_dot[m], want);
+        }
+    }
+
+    #[test]
+    fn threaded_fit_is_bit_identical() {
+        let mut rng = Pcg64::new(117);
+        let (x, y, hyp) = toy_data(&mut rng, 90, 2);
+        let c = cfg(5, 2, 20);
+        let seq = LmaFitCore::fit_with_parallelism(&x, &y, &hyp, &c, 1).unwrap();
+        for threads in [2, 4, 8] {
+            let par = LmaFitCore::fit_with_parallelism(&x, &y, &hyp, &c, threads).unwrap();
+            assert_eq!(seq.perm, par.perm);
+            for m in 0..5 {
+                assert_eq!(seq.r_diag[m].data(), par.r_diag[m].data(), "threads={threads}");
+                assert_eq!(seq.y_dot[m], par.y_dot[m], "threads={threads}");
+                assert_eq!(seq.s_dot[m].data(), par.s_dot[m].data(), "threads={threads}");
+            }
         }
     }
 

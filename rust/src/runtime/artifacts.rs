@@ -15,9 +15,9 @@
 //! distance, padded rows are sliced away on unpadding) and caches one
 //! compiled executable per bucket, compiled lazily on first use.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use crate::linalg::matrix::Mat;
 use crate::runtime::pjrt::{PjrtEngine, PjrtExecutable};
@@ -39,8 +39,21 @@ pub struct ArtifactLibrary {
     dir: PathBuf,
     engine: PjrtEngine,
     entries: Vec<ArtifactEntry>,
-    cache: RefCell<HashMap<String, PjrtExecutable>>,
+    cache: Mutex<HashMap<String, Arc<PjrtExecutable>>>,
 }
+
+// SAFETY: the compiled-executable cache is Mutex-guarded, and the PJRT C
+// API specifies thread-safe clients/`Execute`. The `xla` *Rust wrapper*,
+// however, does not declare Send/Sync, and some versions share handles
+// via non-atomic `Rc` internally — this marker asserts the vendored
+// build uses thread-safe handle types, which MUST be checked when
+// vendoring the crate. Defense in depth: `LmaFitCore` forces its
+// per-block worker count to 1 whenever the PJRT covariance backend is
+// active (see `lma::residual`), so no concurrent PJRT calls are issued
+// by this crate today; the marker exists so `LmaFitCore` (which embeds
+// `CovBackend`) stays `Sync` for the `ThreadCluster` execution backend.
+unsafe impl Send for ArtifactLibrary {}
+unsafe impl Sync for ArtifactLibrary {}
 
 impl ArtifactLibrary {
     /// Default location relative to the repo root.
@@ -73,7 +86,7 @@ impl ArtifactLibrary {
             return Err(PgprError::Artifact("manifest has no artifacts".into()));
         }
         let engine = PjrtEngine::cpu()?;
-        Ok(ArtifactLibrary { dir: dir.to_path_buf(), engine, entries, cache: RefCell::new(HashMap::new()) })
+        Ok(ArtifactLibrary { dir: dir.to_path_buf(), engine, entries, cache: Mutex::new(HashMap::new()) })
     }
 
     /// Try the default directory; None if artifacts are not built.
@@ -103,13 +116,19 @@ impl ArtifactLibrary {
             })
     }
 
-    fn executable(&self, entry: &ArtifactEntry) -> Result<()> {
-        let key = entry.file.clone();
-        if !self.cache.borrow().contains_key(&key) {
-            let exe = self.engine.compile_hlo_text(&self.dir.join(&entry.file), &entry.name)?;
-            self.cache.borrow_mut().insert(key, exe);
+    /// Compiled executable for an entry, compiling lazily on first use.
+    /// The compile happens under the cache lock (so one artifact is never
+    /// compiled twice), but the returned `Arc` lets callers execute
+    /// *outside* the lock — concurrent `ThreadCluster` rank tasks run
+    /// their PJRT calls in parallel.
+    fn executable(&self, entry: &ArtifactEntry) -> Result<Arc<PjrtExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&entry.file) {
+            return Ok(exe.clone());
         }
-        Ok(())
+        let exe = Arc::new(self.engine.compile_hlo_text(&self.dir.join(&entry.file), &entry.name)?);
+        cache.insert(entry.file.clone(), exe.clone());
+        Ok(exe)
     }
 
     /// Cross-covariance through the compiled Pallas kernel:
@@ -121,7 +140,7 @@ impl ArtifactLibrary {
             return Err(PgprError::Shape("pjrt cov: dim mismatch".into()));
         }
         let entry = self.pick_bucket("cov_cross", n1, n2, d)?.clone();
-        self.executable(&entry)?;
+        let exe = self.executable(&entry)?;
 
         // Pad inputs to the bucket shape (f32).
         let pad = |m: &Mat, rows: usize, cols: usize| -> Vec<f32> {
@@ -137,8 +156,6 @@ impl ArtifactLibrary {
         let x2 = pad(s2, entry.n2, entry.d);
         let sig = vec![sigma_s2 as f32];
 
-        let cache = self.cache.borrow();
-        let exe = cache.get(&entry.file).expect("just compiled");
         let out = exe.run_f32(&[
             (&x1, &[entry.n1, entry.d]),
             (&x2, &[entry.n2, entry.d]),
@@ -170,7 +187,7 @@ impl ArtifactLibrary {
             return Err(PgprError::Shape("summary_gram: acc must be m×m".into()));
         }
         let entry = self.pick_bucket("summary_gram", k, m, m)?.clone();
-        self.executable(&entry)?;
+        let exe = self.executable(&entry)?;
         let pad = |src: &Mat, rows: usize, cols: usize| -> Vec<f32> {
             let mut out = vec![0.0f32; rows * cols];
             for i in 0..src.rows() {
@@ -182,8 +199,6 @@ impl ArtifactLibrary {
         };
         let vp = pad(v, entry.n1, entry.n2);
         let ap = pad(acc, entry.n2, entry.n2);
-        let cache = self.cache.borrow();
-        let exe = cache.get(&entry.file).expect("just compiled");
         let out = exe.run_f32(&[
             (&vp, &[entry.n1, entry.n2]),
             (&ap, &[entry.n2, entry.n2]),

@@ -5,6 +5,21 @@
 //! Interchange is HLO **text**, not serialized protos — jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The whole path is gated behind the `pjrt` cargo feature (which needs
+//! the `xla` bindings crate vendored into the build). Without the feature
+//! the [`artifacts`] module is a stub whose loader always reports "not
+//! built", so `CovBackend::auto()` and `pgpr bench-info` compile and fall
+//! back to the native covariance path on machines without artifacts or a
+//! PJRT plugin.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+#[cfg(feature = "pjrt")]
 pub mod artifacts;
+
+#[cfg(not(feature = "pjrt"))]
+mod artifacts_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use artifacts_stub as artifacts;

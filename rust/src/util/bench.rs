@@ -10,6 +10,8 @@
 use std::time::Instant;
 
 use crate::util::csv::CsvTable;
+use crate::util::error::Result;
+use crate::util::json::Json;
 
 /// One measured case.
 #[derive(Clone, Debug)]
@@ -136,6 +138,20 @@ impl BenchSuite {
     }
 }
 
+/// Write a machine-readable benchmark record (the `BENCH_*.json` files
+/// tracked across PRs for the perf trajectory). Creates parent
+/// directories as needed and appends a trailing newline.
+pub fn write_json_record(path: impl AsRef<std::path::Path>, record: &Json) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, record.to_string() + "\n")?;
+    Ok(())
+}
+
 /// Human-readable duration.
 pub fn fmt_time(s: f64) -> String {
     if s >= 1.0 {
@@ -165,6 +181,22 @@ mod tests {
         let r = &suite.results[0];
         assert!(r.iters >= 2);
         assert!(r.p10_s <= r.median_s && r.median_s <= r.p90_s);
+    }
+
+    #[test]
+    fn json_record_roundtrips() {
+        let dir = std::env::temp_dir().join("pgpr_bench_json_test");
+        let path = dir.join("BENCH_test.json");
+        let rec = Json::obj(vec![
+            ("bench", Json::Str("unit".into())),
+            ("speedup", Json::Num(2.5)),
+        ]);
+        write_json_record(&path, &rec).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(text.trim()).unwrap();
+        assert_eq!(back.req("bench").unwrap().as_str(), Some("unit"));
+        assert_eq!(back.req("speedup").unwrap().as_f64(), Some(2.5));
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

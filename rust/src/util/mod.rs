@@ -1,11 +1,13 @@
 //! Self-contained substrates: error type, PRNG, JSON, CSV, CLI parsing,
-//! bench harness, progress logging, table rendering and a tiny
-//! property-testing helper.
+//! bench harness, scoped-thread worker pool, progress logging, table
+//! rendering and a tiny property-testing helper.
 //!
 //! Everything here is written from scratch because the build environment is
-//! offline: the only external crates are `xla` (PJRT bindings) and `anyhow`.
+//! offline: the default build has **no external crates at all**; the only
+//! optional one is `xla` (PJRT bindings) behind the `pjrt` feature.
 
 pub mod error;
+pub mod par;
 pub mod rng;
 pub mod json;
 pub mod csv;

@@ -1,0 +1,186 @@
+//! Tiny scoped-thread helpers shared by the `linalg` kernels, the LMA fit
+//! and the `cluster::ThreadCluster` execution backend.
+//!
+//! No external dependencies: workers are `std::thread::scope` threads that
+//! pull indices off an atomic counter. Every parallelized loop in this
+//! crate is designed so the arithmetic per output element is identical to
+//! the sequential path — results are **bit-identical regardless of the
+//! thread count**, which is what lets the backend-equivalence tests assert
+//! exact equality between sequential and threaded execution.
+//!
+//! The global worker count consulted by the linalg kernels defaults to 1
+//! (fully deterministic single-threaded execution; the virtual-time
+//! `SimCluster` also assumes single-threaded measurement). Raise it with
+//! the `PGPR_NUM_THREADS` environment variable or [`set_num_threads`].
+//! `ThreadCluster` carries its own worker count and does not consult the
+//! global setting.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+static GLOBAL_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on pool worker threads. Kernels consult [`in_worker`] to stay
+    /// sequential inside an already-parallel region, so rank-level and
+    /// kernel-level parallelism never multiply into oversubscription.
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+/// Whether the current thread is a `util::par` pool worker.
+pub fn in_worker() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+/// Number of logical cores reported by the OS (≥ 1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a thread-count knob: 0 means "one worker per available core".
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        available_cores()
+    } else {
+        requested
+    }
+}
+
+/// Global worker count for the linalg kernels. Defaults to 1; initialized
+/// once from `PGPR_NUM_THREADS` (where 0 means all cores).
+pub fn num_threads() -> usize {
+    let v = GLOBAL_THREADS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::env::var("PGPR_NUM_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .map(resolve_threads)
+        .unwrap_or(1)
+        .max(1);
+    GLOBAL_THREADS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the global linalg worker count (0 = one worker per core).
+pub fn set_num_threads(n: usize) {
+    GLOBAL_THREADS.store(resolve_threads(n).max(1), Ordering::Relaxed);
+}
+
+/// Map `f` over `0..n` on up to `threads` scoped workers, returning the
+/// results in index order. Falls back to a plain sequential loop when one
+/// worker suffices. Panics in `f` propagate to the caller when the scope
+/// joins.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.min(n).max(1);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| {
+                IN_POOL.with(|c| c.set(true));
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                done.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut pairs = done.into_inner().unwrap();
+    pairs.sort_by_key(|&(i, _)| i);
+    pairs.into_iter().map(|(_, t)| t).collect()
+}
+
+/// Split a row-major buffer of `rows × cols` into per-worker chunks of
+/// `per` rows and run `kernel(chunk, row0, row1)` on scoped threads. The
+/// chunks are disjoint `&mut` slices, so kernels write without locks;
+/// callers pick `per` so chunk boundaries preserve whatever row grouping
+/// the sequential kernel uses (bit-identical outputs). Panics in `kernel`
+/// propagate when the scope joins.
+pub fn run_row_chunks<'a, K>(data: &'a mut [f64], rows: usize, cols: usize, per: usize, kernel: K)
+where
+    K: Fn(&mut [f64], usize, usize) + Sync + Send + Copy + 'a,
+{
+    let mut rest: &mut [f64] = data;
+    let mut i0 = 0;
+    std::thread::scope(|s| {
+        while i0 < rows {
+            let i1 = (i0 + per).min(rows);
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut((i1 - i0) * cols);
+            rest = tail;
+            let (lo, hi) = (i0, i1);
+            s.spawn(move || {
+                IN_POOL.with(|c| c.set(true));
+                kernel(chunk, lo, hi)
+            });
+            i0 = i1;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        for threads in [1, 2, 4, 8] {
+            let got = parallel_map(37, threads, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_empty_and_single() {
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_map_handles_fallible_bodies() {
+        let out: Vec<Result<usize, String>> =
+            parallel_map(10, 3, |i| if i == 7 { Err(format!("bad {i}")) } else { Ok(i) });
+        assert!(out[7].is_err());
+        assert_eq!(out[3], Ok(3));
+    }
+
+    #[test]
+    fn row_chunks_cover_all_rows_disjointly() {
+        let (rows, cols) = (23, 7);
+        let mut data = vec![0.0f64; rows * cols];
+        run_row_chunks(&mut data, rows, cols, 5, |chunk, lo, hi| {
+            for r in 0..(hi - lo) {
+                for c in 0..cols {
+                    chunk[r * cols + c] += (lo + r) as f64;
+                }
+            }
+        });
+        for i in 0..rows {
+            for c in 0..cols {
+                assert_eq!(data[i * cols + c], i as f64, "row {i} col {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn resolve_and_cores_sane() {
+        assert!(available_cores() >= 1);
+        assert_eq!(resolve_threads(3), 3);
+        assert!(resolve_threads(0) >= 1);
+    }
+}

@@ -5,7 +5,7 @@
 //! * LMA(B=M−1) vs FGP (exactness endpoint)
 //! * parallel vs centralized engines (identical numbers)
 
-use pgpr::config::{ClusterConfig, LmaConfig, PartitionStrategy};
+use pgpr::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy};
 use pgpr::gp::fgp::FgpRegressor;
 use pgpr::kernels::se_ard::{self, SeArdHyper};
 use pgpr::linalg::matrix::Mat;
@@ -109,6 +109,45 @@ fn parallel_equals_centralized_across_topologies() {
             );
             assert!((cen.var[i] - par.prediction.var[i]).abs() < 1e-9);
         }
+    }
+}
+
+#[test]
+fn thread_cluster_matches_sim_cluster_and_centralized() {
+    // The real multi-threaded backend must produce *bit-identical*
+    // predictions to the virtual-time simulator (same protocol, same
+    // arithmetic, different placement), and both must match the
+    // centralized engine, across Markov orders.
+    let (x, y, t, hyp) = problem(505, 150, 2);
+    for b in [0usize, 1, 2] {
+        let c = cfg(6, b, 16, 11);
+        let cen = LmaRegressor::fit(&x, &y, &hyp, &c).unwrap().predict(&t).unwrap();
+        let sim_cc = ClusterConfig::gigabit(3, 2);
+        let sim = ParallelLma::fit(&x, &y, &hyp, &c, &sim_cc)
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        let thr_cc = ClusterConfig::gigabit(3, 2)
+            .with_backend(BackendKind::Threads { num_threads: 4 });
+        let thr = ParallelLma::fit(&x, &y, &hyp, &c, &thr_cc)
+            .unwrap()
+            .predict(&t)
+            .unwrap();
+        assert_eq!(
+            thr.prediction.mean, sim.prediction.mean,
+            "B={b}: thread mean != sim mean"
+        );
+        assert_eq!(thr.prediction.var, sim.prediction.var, "B={b}: thread var != sim var");
+        for i in 0..30 {
+            assert!(
+                (thr.prediction.mean[i] - cen.mean[i]).abs() < 1e-9,
+                "B={b} mean[{i}]: {} vs centralized {}",
+                thr.prediction.mean[i],
+                cen.mean[i]
+            );
+            assert!((thr.prediction.var[i] - cen.var[i]).abs() < 1e-9, "B={b} var[{i}]");
+        }
+        assert!(thr.wall_secs > 0.0);
     }
 }
 

@@ -2,10 +2,13 @@
 //! (Layers 1–2, python) executed from Rust via PJRT (Layer 3) must match
 //! the native Rust covariance to f32 precision.
 //!
-//! These tests are skipped (with a notice) when `artifacts/` has not been
-//! built — run `make artifacts` first.
+//! The whole file is gated on the `pjrt` cargo feature (the default build
+//! compiles the stub artifact library); with the feature on, tests are
+//! still skipped (with a notice) when `artifacts/` has not been built —
+//! run `make artifacts` first.
+#![cfg(feature = "pjrt")]
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use pgpr::kernels::pjrt_cov::CovBackend;
 use pgpr::kernels::se_ard;
@@ -55,7 +58,7 @@ fn pjrt_cov_padding_correct() {
 #[test]
 fn pjrt_cov_oversize_falls_back_via_backend() {
     let Some(lib) = lib_or_skip() else { return };
-    let backend = CovBackend::Pjrt(Rc::new(lib));
+    let backend = CovBackend::Pjrt(Arc::new(lib));
     let mut rng = Pcg64::new(303);
     // 300 > largest bucket (256) → backend must fall back to native.
     let x1 = Mat::randn(300, 4, &mut rng);
