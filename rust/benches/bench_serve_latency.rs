@@ -1,0 +1,35 @@
+//! Serving-path latency benchmark: boots the in-process HTTP stack
+//! (ThreadCluster engine by default), drives it with the closed-loop
+//! load generator, and writes the machine-readable perf record
+//! `BENCH_serve_latency.json` (throughput + p50/p95/p99 latency) tracked
+//! across PRs. Set `PGPR_BENCH_FAST=1` for the CI smoke run.
+
+use pgpr::config::ServeOptions;
+use pgpr::coordinator::cli_run::{cmd_loadtest, LoadtestCmd};
+
+fn main() {
+    let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+    let cmd = LoadtestCmd {
+        addr: String::new(),
+        dataset: "aimpeak".into(),
+        train: if fast { 400 } else { 2000 },
+        seed: 7,
+        backend: "threads:0".into(),
+        opts: ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            workers: 4,
+            batch_size: 16,
+            max_delay_us: 2000,
+            queue_capacity: 1024,
+        },
+        concurrency: if fast { 4 } else { 16 },
+        requests: if fast { 120 } else { 2000 },
+        rows: 1,
+        out: "BENCH_serve_latency.json".into(),
+    };
+    println!(
+        "=== bench: serve latency (train {}, concurrency {}, {} requests) ===",
+        cmd.train, cmd.concurrency, cmd.requests
+    );
+    cmd_loadtest(&cmd).expect("loadtest run");
+}

@@ -119,6 +119,87 @@ fn bad(field: &'static str) -> impl Fn() -> PgprError {
     move || PgprError::Config(format!("field `{field}` must be a non-negative integer"))
 }
 
+/// Options for the serving front end (`pgpr serve` / `server::http`):
+/// where to listen and how the micro-batcher trades latency for batch
+/// occupancy.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// HTTP listen address, e.g. `127.0.0.1:8080` (`127.0.0.1:0` for an
+    /// ephemeral port). The CLI treats an empty string as "stdin line
+    /// protocol instead of HTTP".
+    pub listen: String,
+    /// Connection worker threads.
+    pub workers: usize,
+    /// Micro-batch flush threshold in rows.
+    pub batch_size: usize,
+    /// Partial-batch flush deadline in microseconds: a lone request is
+    /// answered within this bound even if the batch never fills.
+    pub max_delay_us: u64,
+    /// Bounded request-queue capacity (full queue ⇒ HTTP 503).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            listen: "127.0.0.1:8080".to_string(),
+            workers: 4,
+            batch_size: 16,
+            max_delay_us: 2000,
+            queue_capacity: 1024,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            return Err(PgprError::Config("serve: workers must be ≥ 1".into()));
+        }
+        if self.batch_size == 0 {
+            return Err(PgprError::Config("serve: batch_size must be ≥ 1".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(PgprError::Config("serve: queue_capacity must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("listen", Json::Str(self.listen.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("batch_size", Json::Num(self.batch_size as f64)),
+            ("max_delay_us", Json::Num(self.max_delay_us as f64)),
+            ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ServeOptions> {
+        let d = ServeOptions::default();
+        Ok(ServeOptions {
+            listen: j
+                .get("listen")
+                .and_then(|v| v.as_str())
+                .unwrap_or(&d.listen)
+                .to_string(),
+            workers: j.get("workers").and_then(|v| v.as_usize()).unwrap_or(d.workers),
+            batch_size: j
+                .get("batch_size")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.batch_size),
+            max_delay_us: j
+                .get("max_delay_us")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.max_delay_us as usize) as u64,
+            queue_capacity: j
+                .get("queue_capacity")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.queue_capacity),
+        })
+    }
+}
+
 /// Which execution backend runs the parallel LMA protocol (see
 /// `cluster::Backend`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -292,6 +373,29 @@ mod tests {
         let c = ClusterConfig::threads(2, 2, 4);
         assert_eq!(c.backend, BackendKind::Threads { num_threads: 4 });
         assert_eq!(c.total_cores(), 4);
+    }
+
+    #[test]
+    fn serve_options_roundtrip_and_validate() {
+        let o = ServeOptions {
+            listen: "127.0.0.1:0".into(),
+            workers: 8,
+            batch_size: 32,
+            max_delay_us: 500,
+            queue_capacity: 64,
+        };
+        assert!(o.validate().is_ok());
+        let parsed = Json::parse(&o.to_json().to_string()).unwrap();
+        let back = ServeOptions::from_json(&parsed).unwrap();
+        assert_eq!(back, o);
+        // Missing fields fall back to defaults.
+        let partial = ServeOptions::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(partial, ServeOptions::default());
+        assert!(ServeOptions { workers: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { batch_size: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { queue_capacity: 0, ..ServeOptions::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

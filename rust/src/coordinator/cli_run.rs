@@ -1,15 +1,19 @@
 //! Subcommand implementations for the `pgpr` binary.
 
 use std::io::BufRead;
+use std::time::Duration;
 
-use crate::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy};
+use crate::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, ServeOptions};
 use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
 use crate::lma::parallel::ParallelLma;
 use crate::lma::LmaRegressor;
+use crate::server::http::Server;
+use crate::server::loadgen;
 use crate::util::cli::Args;
 use crate::util::csv::CsvTable;
 use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
 
 /// `pgpr experiment <id> [--full] [--backend sim|threads[:N]]`.
 ///
@@ -40,7 +44,11 @@ pub fn cmd_experiment(id: &str, full: bool, backend: BackendKind) -> Result<()> 
             table2::run(&p)?;
         }
         "table3" => {
-            let p = if full { table3::Table3Params::full() } else { table3::Table3Params::default() };
+            let p = if full {
+                table3::Table3Params::full()
+            } else {
+                table3::Table3Params::default()
+            };
             table3::run(&p)?;
         }
         "fig2" => {
@@ -104,7 +112,10 @@ pub fn load_xy_csv(path: &str) -> Result<(crate::linalg::matrix::Mat, Vec<f64>)>
     let mut y = vec![0.0; n];
     for (i, row) in t.rows.iter().enumerate() {
         for j in 0..d {
-            x.set(i, j, row[j].parse().map_err(|_| PgprError::Data(format!("bad cell {}", row[j])))?);
+            let v = row[j]
+                .parse()
+                .map_err(|_| PgprError::Data(format!("bad cell {}", row[j])))?;
+            x.set(i, j, v);
         }
         y[i] = row[d].parse().map_err(|_| PgprError::Data(format!("bad cell {}", row[d])))?;
     }
@@ -160,13 +171,27 @@ pub fn cmd_eval(
     Ok(())
 }
 
-/// `pgpr serve` — line protocol: `predict v1,v2,...` → `id mean var`;
-/// `flush` forces a partial batch; EOF flushes and prints stats.
-///
-/// `backend` picks the prediction engine: `centralized` (single-process
-/// LMA), or `sim` / `threads[:N]` for the parallel engine on the
-/// corresponding `cluster::Backend`.
-pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64, backend: &str) -> Result<()> {
+/// `pgpr serve` parameters: which model to fit and how to front it.
+#[derive(Clone, Debug)]
+pub struct ServeCmd {
+    pub dataset: String,
+    pub train: usize,
+    pub seed: u64,
+    /// `centralized` | `sim` | `threads[:N]`.
+    pub backend: String,
+    /// HTTP/batching options; an empty `opts.listen` selects the stdin
+    /// line protocol instead of HTTP.
+    pub opts: ServeOptions,
+}
+
+/// Fit the serving engine the way `pgpr serve` always has: synthetic
+/// workload, quick hypers, M scaled to |D|.
+fn build_serve_engine(
+    dataset: &str,
+    train: usize,
+    seed: u64,
+    backend: &str,
+) -> Result<(ServeEngine, String)> {
     let w = Workload::parse(dataset)?;
     let ds = w.generate(train, train / 4, seed)?;
     let hyp = crate::experiments::common::quick_hypers(&ds);
@@ -186,15 +211,43 @@ pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64, backend: 
         let cc = ClusterConfig::gigabit(1, m).with_backend(kind);
         ServeEngine::Parallel(ParallelLma::fit(&ds.train_x, &ds.train_y, &hyp, &cfg, &cc)?)
     };
-    let mut svc = PredictionService::with_engine(engine, batch)?;
+    Ok((engine, ds.name))
+}
+
+/// `pgpr serve` — HTTP mode (`--listen host:port`): boots the
+/// `server::http` stack (acceptor, worker pool, micro-batcher) and runs
+/// until stdin closes or a `quit` line arrives, then prints the metrics
+/// summary. Stdin mode (`--listen ""`, the default): the legacy line
+/// protocol `predict v1,v2,...` → `id mean var`, with `flush` forcing a
+/// partial batch and EOF flushing and printing stats.
+pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
+    let (engine, name) = build_serve_engine(&c.dataset, c.train, c.seed, &c.backend)?;
+    if !c.opts.listen.is_empty() {
+        return serve_http(c, engine, &name);
+    }
+    // Same semantics as the HTTP batcher: 0 = no batching delay (the
+    // deadline is always already expired, so partial batches flush at
+    // the first opportunity).
+    let mut svc = PredictionService::with_engine(engine, c.opts.batch_size)?
+        .with_max_delay(Duration::from_micros(c.opts.max_delay_us));
     eprintln!(
-        "serving {} (dim {}, M={m}, batch {batch}, backend {backend}); protocol: `predict v1,v2,...` | `flush` | EOF",
-        ds.name,
-        ds.dim()
+        "serving {} (dim {}, batch {}, backend {}); protocol: `predict v1,v2,...` | `flush` | EOF",
+        name,
+        svc.dim(),
+        c.opts.batch_size,
+        c.backend
     );
     let stdin = std::io::stdin();
     let mut next_id = 0u64;
     for line in stdin.lock().lines() {
+        // Answer anything whose max_delay deadline lapsed while we
+        // waited for input. Stdin blocks with no timeout, so this only
+        // runs when the next line arrives — the hard deadline guarantee
+        // is the HTTP batcher's (it waits with recv_timeout); here it
+        // just keeps an interactive session from replaying stale rows.
+        for r in svc.flush_expired()? {
+            println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
+        }
         let line = line?;
         let line = line.trim();
         if line.is_empty() {
@@ -221,13 +274,152 @@ pub fn cmd_serve(dataset: &str, train: usize, batch: usize, seed: u64, backend: 
     for r in svc.flush()? {
         println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
     }
+    let (p50, p95, p99) = svc.latency_quantiles();
     eprintln!(
-        "served {} requests in {} batches; mean latency {:.4}s; throughput {:.1} req/s",
+        "served {} requests in {} batches; latency mean {:.4}s p50 {:.4}s p95 {:.4}s p99 {:.4}s; throughput {:.1} req/s",
         svc.served,
         svc.batches,
         svc.mean_latency(),
+        p50,
+        p95,
+        p99,
         svc.throughput()
     );
+    Ok(())
+}
+
+fn serve_http(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
+    let server = Server::start(engine, &c.opts)?;
+    let addr = server.addr();
+    eprintln!(
+        "serving {name} on http://{addr} (backend {}, workers {}, batch {}, max-delay {}µs, queue {})",
+        c.backend, c.opts.workers, c.opts.batch_size, c.opts.max_delay_us, c.opts.queue_capacity
+    );
+    eprintln!("endpoints: POST /predict  GET /healthz  GET /metrics — `quit` on stdin stops");
+    // Machine-readable bound address on stdout so scripts can pick up
+    // the ephemeral port from `--listen 127.0.0.1:0`.
+    println!("listening {addr}");
+    let stdin = std::io::stdin();
+    let mut quit = false;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        if line.trim() == "quit" {
+            quit = true;
+            break;
+        }
+    }
+    if !quit {
+        // Stdin closed (detached/daemonized run, `… </dev/null &`):
+        // keep serving until the process is killed.
+        eprintln!("stdin closed; serving until the process is terminated");
+        loop {
+            std::thread::park();
+        }
+    }
+    let metrics = server.shutdown();
+    eprintln!("{}", metrics.summary());
+    Ok(())
+}
+
+/// `pgpr loadtest` parameters.
+#[derive(Clone, Debug)]
+pub struct LoadtestCmd {
+    /// Target `host:port`; empty = boot an in-process server first.
+    pub addr: String,
+    /// Self-mode model parameters (ignored when `addr` is set).
+    pub dataset: String,
+    pub train: usize,
+    pub seed: u64,
+    pub backend: String,
+    pub opts: ServeOptions,
+    /// Load shape.
+    pub concurrency: usize,
+    pub requests: usize,
+    pub rows: usize,
+    /// Output path of the machine-readable record.
+    pub out: String,
+}
+
+impl Default for LoadtestCmd {
+    fn default() -> Self {
+        LoadtestCmd {
+            addr: String::new(),
+            dataset: "aimpeak".into(),
+            train: 600,
+            seed: 0,
+            backend: "threads:0".into(),
+            opts: ServeOptions { listen: "127.0.0.1:0".into(), ..ServeOptions::default() },
+            concurrency: 8,
+            requests: 200,
+            rows: 1,
+            out: "BENCH_serve_latency.json".into(),
+        }
+    }
+}
+
+/// Run the load test and return the `BENCH_serve_latency` record (also
+/// used by `bench_serve_latency`). Self-contained mode fits an engine,
+/// boots the HTTP stack on an ephemeral port, drives it and shuts it
+/// down, embedding both client- and server-side quantiles.
+pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
+    let (addr, server) = if c.addr.is_empty() {
+        let (engine, _name) = build_serve_engine(&c.dataset, c.train, c.seed, &c.backend)?;
+        let mut opts = c.opts.clone();
+        if opts.listen.is_empty() {
+            opts.listen = "127.0.0.1:0".into();
+        }
+        let server = Server::start(engine, &opts)?;
+        (server.addr().to_string(), Some(server))
+    } else {
+        (c.addr.clone(), None)
+    };
+    let dim = loadgen::fetch_dim(&addr)?;
+    let lc = loadgen::LoadConfig {
+        addr: addr.clone(),
+        concurrency: c.concurrency,
+        requests: c.requests,
+        rows_per_request: c.rows,
+        dim,
+        seed: c.seed,
+    };
+    let report = loadgen::run(&lc)?;
+    eprintln!("{}", report.render());
+    let mode = if server.is_some() { "self" } else { "remote" };
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("bench", Json::Str("serve_latency".into())),
+        ("mode", Json::Str(mode.to_string())),
+        ("addr", Json::Str(addr)),
+        ("concurrency", Json::Num(c.concurrency as f64)),
+        ("requests", Json::Num(c.requests as f64)),
+        ("rows_per_request", Json::Num(c.rows as f64)),
+        // Headline numbers duplicated at top level for easy extraction.
+        ("throughput_rps", Json::Num(report.throughput_rps)),
+        ("p50_s", Json::Num(report.p50_s)),
+        ("p95_s", Json::Num(report.p95_s)),
+        ("p99_s", Json::Num(report.p99_s)),
+        ("client", report.to_json()),
+    ];
+    if let Some(server) = server {
+        // Engine/batcher configuration is only known (and only true) in
+        // self-contained mode; a remote server's settings are its own.
+        fields.push(("backend", Json::Str(c.backend.clone())));
+        fields.push(("dataset", Json::Str(c.dataset.clone())));
+        fields.push(("train", Json::Num(c.train as f64)));
+        fields.push(("batch_size", Json::Num(c.opts.batch_size as f64)));
+        fields.push(("max_delay_us", Json::Num(c.opts.max_delay_us as f64)));
+        let metrics = server.shutdown();
+        eprintln!("{}", metrics.summary());
+        fields.push(("server", metrics.to_json()));
+    }
+    Ok(Json::obj(fields))
+}
+
+/// `pgpr loadtest` — drive a serving stack and write
+/// `BENCH_serve_latency.json`.
+pub fn cmd_loadtest(c: &LoadtestCmd) -> Result<()> {
+    let record = run_loadtest(c)?;
+    crate::util::bench::write_json_record(&c.out, &record)?;
+    println!("wrote {}", c.out);
     Ok(())
 }
 
@@ -305,24 +497,87 @@ pub fn dispatch() -> Result<()> {
             )
         }
         "serve" => {
-            let a = Args::new("pgpr serve", "batched prediction service")
+            let a = Args::new("pgpr serve", "batched prediction service (HTTP or stdin)")
                 .flag("dataset", "aimpeak", "sarcos | aimpeak | emslp")
                 .flag("train", "1000", "training rows")
-                .flag("batch", "16", "batch size")
+                .flag("batch", "16", "micro-batch size in rows")
                 .flag("seed", "0", "seed")
                 .flag(
                     "backend",
                     "centralized",
                     "prediction engine: centralized | sim | threads[:N]",
                 )
+                .flag(
+                    "listen",
+                    "",
+                    "HTTP listen address, e.g. 127.0.0.1:8080 (port 0 = ephemeral); empty = stdin line protocol",
+                )
+                .flag("workers", "4", "HTTP connection worker threads")
+                .flag(
+                    "max-delay-us",
+                    "2000",
+                    "partial-batch flush deadline in microseconds; 0 = no batching delay. \
+                     In stdin mode expiry is only checked when the next input line arrives",
+                )
+                .flag("queue", "1024", "bounded request queue capacity (full ⇒ 503)")
                 .parse_from(rest)?;
-            cmd_serve(
-                &a.get("dataset"),
-                a.get_usize("train"),
-                a.get_usize("batch"),
-                a.get_usize("seed") as u64,
-                &a.get("backend"),
-            )
+            let opts = ServeOptions {
+                listen: a.get("listen"),
+                workers: a.get_usize("workers"),
+                batch_size: a.get_usize("batch"),
+                max_delay_us: a.get_usize("max-delay-us") as u64,
+                queue_capacity: a.get_usize("queue"),
+            };
+            cmd_serve(&ServeCmd {
+                dataset: a.get("dataset"),
+                train: a.get_usize("train"),
+                seed: a.get_usize("seed") as u64,
+                backend: a.get("backend"),
+                opts,
+            })
+        }
+        "loadtest" => {
+            let a = Args::new("pgpr loadtest", "closed-loop load generator for the HTTP service")
+                .flag(
+                    "addr",
+                    "",
+                    "target host:port of a running `pgpr serve --listen`; empty = boot an in-process server",
+                )
+                .flag("dataset", "aimpeak", "self-mode dataset")
+                .flag("train", "600", "self-mode training rows")
+                .flag("seed", "0", "seed (model fit and query generation)")
+                .flag(
+                    "backend",
+                    "threads:0",
+                    "self-mode engine: centralized | sim | threads[:N]",
+                )
+                .flag("batch", "16", "self-mode micro-batch size")
+                .flag("workers", "4", "self-mode HTTP worker threads")
+                .flag("max-delay-us", "2000", "self-mode flush deadline (µs)")
+                .flag("queue", "1024", "self-mode queue capacity")
+                .flag("concurrency", "8", "closed-loop client threads")
+                .flag("requests", "200", "total requests to send")
+                .flag("rows", "1", "rows per request")
+                .flag("out", "BENCH_serve_latency.json", "output record path")
+                .parse_from(rest)?;
+            cmd_loadtest(&LoadtestCmd {
+                addr: a.get("addr"),
+                dataset: a.get("dataset"),
+                train: a.get_usize("train"),
+                seed: a.get_usize("seed") as u64,
+                backend: a.get("backend"),
+                opts: ServeOptions {
+                    listen: "127.0.0.1:0".into(),
+                    workers: a.get_usize("workers"),
+                    batch_size: a.get_usize("batch"),
+                    max_delay_us: a.get_usize("max-delay-us") as u64,
+                    queue_capacity: a.get_usize("queue"),
+                },
+                concurrency: a.get_usize("concurrency"),
+                requests: a.get_usize("requests"),
+                rows: a.get_usize("rows"),
+                out: a.get("out"),
+            })
         }
         "bench-info" => cmd_bench_info(),
         _ => {
@@ -332,6 +587,9 @@ pub fn dispatch() -> Result<()> {
                  pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
                  pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
+                 \u{20}          [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
+                 pgpr loadtest [--addr HOST:PORT | --dataset aimpeak --train 600 --backend threads:0]\n  \
+                 \u{20}          [--concurrency 8 --requests 200 --rows 1 --out BENCH_serve_latency.json]\n  \
                  pgpr bench-info\n"
             );
             Ok(())

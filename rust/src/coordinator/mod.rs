@@ -1,11 +1,14 @@
-//! Layer-3 coordinator: the `pgpr` binary's subcommands, the model
-//! registry and the batched prediction service loop.
+//! Layer-3 coordinator: the `pgpr` binary's subcommands and the batched
+//! prediction service loop (fronted over the network by `crate::server`).
 //!
 //! Subcommands:
 //! * `pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full]`
 //! * `pgpr data gen --dataset <sarcos|aimpeak|emslp> --train N --test N --out dir/`
-//! * `pgpr train --dataset ... | --train-csv ... --model out.json`
-//! * `pgpr serve --dataset ... [--batch N]` — line protocol on stdin
+//! * `pgpr eval --train-csv ... --test-csv ...`
+//! * `pgpr serve --dataset ... [--batch N] [--listen host:port --workers N --max-delay-us D]`
+//!   — HTTP service when `--listen` is set, stdin line protocol otherwise
+//! * `pgpr loadtest [--addr host:port | self-contained flags]` — closed-loop
+//!   load generator, writes `BENCH_serve_latency.json`
 //! * `pgpr bench-info` — print artifact/bucket status
 
 pub mod service;

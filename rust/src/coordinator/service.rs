@@ -6,37 +6,75 @@
 //! sweep/summary cost exactly like a serving system batches GPU calls.
 //! This is the request path a downstream user would deploy; Python is
 //! never involved.
+//!
+//! Two front ends drive it: the `pgpr serve` stdin line protocol (this
+//! module used directly) and the HTTP server (`server::http`), where a
+//! dedicated batcher thread (`server::batcher`) owns the service and uses
+//! [`PredictionService::deadline`] / [`PredictionService::flush_expired`]
+//! so a partial batch is answered within `max_delay` instead of waiting
+//! for `batch_size` forever. Latency/occupancy statistics go to a shared
+//! [`ServeMetrics`] (atomic histograms) exposing p50/p95/p99.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::gp::Prediction;
 use crate::linalg::matrix::Mat;
 use crate::lma::parallel::ParallelLma;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::LmaRegressor;
+use crate::server::metrics::ServeMetrics;
 use crate::util::error::{PgprError, Result};
 use crate::util::timer::time_it;
 
 /// Which prediction engine answers batches: the single-process
 /// centralized regressor, or the parallel engine on a cluster backend
 /// (virtual-time sim or real threads, per its `ClusterConfig::backend`).
+///
+/// All fitted state is immutable after construction, so the engine is
+/// `Send + Sync` and can be shared across serving threads behind an
+/// `Arc` (asserted at compile time below).
 pub enum ServeEngine {
     Centralized(LmaRegressor),
     Parallel(ParallelLma),
 }
 
 impl ServeEngine {
-    fn core(&self) -> &LmaFitCore {
+    pub fn core(&self) -> &LmaFitCore {
         match self {
             ServeEngine::Centralized(m) => m.core(),
             ServeEngine::Parallel(m) => m.core(),
         }
     }
 
-    fn predict(&self, x: &Mat) -> Result<Prediction> {
+    pub fn predict(&self, x: &Mat) -> Result<Prediction> {
         match self {
             ServeEngine::Centralized(m) => m.predict(x),
             ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
         }
     }
+
+    /// Human-readable engine selector (mirrors the `--backend` flag).
+    pub fn backend_name(&self) -> String {
+        match self {
+            ServeEngine::Centralized(_) => "centralized".to_string(),
+            ServeEngine::Parallel(m) => {
+                use crate::config::BackendKind;
+                match m.cluster_config().backend {
+                    BackendKind::Sim => "sim".to_string(),
+                    BackendKind::Threads { num_threads } => format!("threads:{num_threads}"),
+                }
+            }
+        }
+    }
+}
+
+// The serving threads share one engine behind `Arc`; keep that possible.
+#[allow(dead_code)]
+fn _assert_engine_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<ServeEngine>();
+    check::<Arc<ServeEngine>>();
 }
 
 /// One pending request.
@@ -60,8 +98,16 @@ pub struct Response {
 pub struct PredictionService {
     engine: ServeEngine,
     batch_size: usize,
-    queue: Vec<(Request, std::time::Instant)>,
-    /// Serving statistics.
+    /// Deadline for partial batches: the oldest queued request is
+    /// answered within this duration even if the batch never fills
+    /// (`None` = legacy wait-for-full-batch behavior).
+    max_delay: Option<Duration>,
+    queue: Vec<(Request, Instant)>,
+    /// Shared latency/occupancy histograms (p50/p95/p99 via
+    /// `server::metrics`); `Arc` so the HTTP layer renders the same
+    /// object the service records into.
+    metrics: Arc<ServeMetrics>,
+    /// Serving statistics (kept as plain fields for back-compat).
     pub served: usize,
     pub batches: usize,
     pub total_latency: f64,
@@ -83,7 +129,9 @@ impl PredictionService {
         Ok(PredictionService {
             engine,
             batch_size,
+            max_delay: None,
             queue: Vec::new(),
+            metrics: Arc::new(ServeMetrics::new()),
             served: 0,
             batches: 0,
             total_latency: 0.0,
@@ -91,8 +139,56 @@ impl PredictionService {
         })
     }
 
+    /// Builder-style partial-batch deadline: the oldest queued request is
+    /// flushed within `d` (via [`deadline`](Self::deadline) +
+    /// [`flush_expired`](Self::flush_expired), driven by the caller's
+    /// loop — the HTTP batcher thread, or the stdin loop between lines).
+    pub fn with_max_delay(mut self, d: Duration) -> PredictionService {
+        self.max_delay = Some(d);
+        self
+    }
+
+    pub fn max_delay(&self) -> Option<Duration> {
+        self.max_delay
+    }
+
+    /// Shared metrics handle (same object the service records into).
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    pub fn engine(&self) -> &ServeEngine {
+        &self.engine
+    }
+
     pub fn dim(&self) -> usize {
         self.engine.core().hyp.dim()
+    }
+
+    /// Rows currently waiting for a batch.
+    pub fn queued_rows(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// When the oldest queued request must be answered, if a deadline is
+    /// configured and anything is queued.
+    pub fn deadline(&self) -> Option<Instant> {
+        match (self.max_delay, self.queue.first()) {
+            (Some(d), Some((_, t0))) => Some(*t0 + d),
+            _ => None,
+        }
+    }
+
+    /// Flush iff the oldest queued request's deadline has expired. This is
+    /// the fix for the stranded-tail-request bug: callers with a
+    /// `max_delay` poll this (or sleep until [`deadline`](Self::deadline))
+    /// so a partial batch is answered within `max_delay` instead of
+    /// waiting for `batch_size` forever.
+    pub fn flush_expired(&mut self) -> Result<Vec<Response>> {
+        match self.deadline() {
+            Some(dl) if Instant::now() >= dl => self.flush(),
+            _ => Ok(Vec::new()),
+        }
     }
 
     /// Enqueue a request; answers the whole batch when full.
@@ -105,7 +201,8 @@ impl PredictionService {
                 self.dim()
             )));
         }
-        self.queue.push((req, std::time::Instant::now()));
+        self.queue.push((req, Instant::now()));
+        self.metrics.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         if self.queue.len() >= self.batch_size {
             self.flush()
         } else {
@@ -118,7 +215,7 @@ impl PredictionService {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
-        let batch: Vec<(Request, std::time::Instant)> = std::mem::take(&mut self.queue);
+        let batch: Vec<(Request, Instant)> = std::mem::take(&mut self.queue);
         let mut x = Mat::zeros(batch.len(), self.dim());
         for (i, (req, _)) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&req.x);
@@ -127,11 +224,16 @@ impl PredictionService {
         let pred: Prediction = pred?;
         self.predict_secs += secs;
         self.batches += 1;
+        self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.batch_rows.record(batch.len() as u64);
+        self.metrics.predict_us.record((secs * 1e6) as u64);
         let mut out = Vec::with_capacity(batch.len());
         for (i, (req, t0)) in batch.into_iter().enumerate() {
             let latency = t0.elapsed().as_secs_f64();
             self.total_latency += latency;
             self.served += 1;
+            self.metrics.latency_us.record((latency * 1e6) as u64);
+            self.metrics.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             out.push(Response { id: req.id, mean: pred.mean[i], var: pred.var[i], latency });
         }
         Ok(out)
@@ -144,6 +246,17 @@ impl PredictionService {
         } else {
             self.total_latency / self.served as f64
         }
+    }
+
+    /// (p50, p95, p99) request latency in seconds, from the shared
+    /// histogram.
+    pub fn latency_quantiles(&self) -> (f64, f64, f64) {
+        let h = &self.metrics.latency_us;
+        (
+            h.quantile(0.5) as f64 * 1e-6,
+            h.quantile(0.95) as f64 * 1e-6,
+            h.quantile(0.99) as f64 * 1e-6,
+        )
     }
 
     /// Throughput over pure predict time.
@@ -204,6 +317,27 @@ mod tests {
     }
 
     #[test]
+    fn deadline_flushes_partial_batch() {
+        let mut s = service(100).with_max_delay(Duration::from_millis(200));
+        // Nothing queued: no deadline, nothing to flush.
+        assert!(s.deadline().is_none());
+        assert!(s.flush_expired().unwrap().is_empty());
+        s.submit(Request { id: 1, x: vec![0.3] }).unwrap();
+        let dl = s.deadline().expect("deadline once queued");
+        // Well before the 200ms deadline: still queued.
+        assert!(s.flush_expired().unwrap().is_empty());
+        assert_eq!(s.queued_rows(), 1);
+        std::thread::sleep(Duration::from_millis(220));
+        assert!(Instant::now() >= dl);
+        // After the deadline: the lone request is answered.
+        let out = s.flush_expired().unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 1);
+        assert_eq!(s.queued_rows(), 0);
+        assert!(s.deadline().is_none());
+    }
+
+    #[test]
     fn dimension_mismatch_rejected() {
         let mut s = service(2);
         assert!(s.submit(Request { id: 1, x: vec![0.0, 1.0] }).is_err());
@@ -230,6 +364,7 @@ mod tests {
         let mut s =
             PredictionService::with_engine(ServeEngine::Parallel(model), 2).unwrap();
         assert_eq!(s.dim(), 1);
+        assert_eq!(s.engine().backend_name(), "threads:2");
         assert!(s.submit(Request { id: 1, x: vec![0.5] }).unwrap().is_empty());
         let out = s.submit(Request { id: 2, x: vec![1.0] }).unwrap();
         assert_eq!(out.len(), 2);
@@ -246,5 +381,13 @@ mod tests {
         assert_eq!(s.batches, 3);
         assert!(s.throughput() > 0.0);
         assert!(s.mean_latency() >= 0.0);
+        // The shared histogram saw the same traffic.
+        let m = s.metrics();
+        assert_eq!(m.responses.load(std::sync::atomic::Ordering::Relaxed), 6);
+        assert_eq!(m.batches.load(std::sync::atomic::Ordering::Relaxed), 3);
+        assert_eq!(m.batch_rows.quantile(0.5), 2);
+        let (p50, p95, p99) = s.latency_quantiles();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 > 0.0);
     }
 }

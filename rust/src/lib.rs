@@ -16,7 +16,13 @@
 //!   scoped OS threads for measured wall-clock speedup. Both produce
 //!   bit-identical predictions. The `linalg` GEMM/SYRK kernels and the
 //!   SE-ARD Gram builder can additionally split output rows across a
-//!   worker pool (`util::par`, opt-in via `PGPR_NUM_THREADS`).
+//!   worker pool (`util::par`, opt-in via `PGPR_NUM_THREADS`). The
+//!   fitted engine is served over the network by the std-only `server`
+//!   subsystem: an HTTP/1.1 front end (`POST /predict`, `GET /healthz`,
+//!   `GET /metrics`) whose micro-batching scheduler flushes on
+//!   `batch_size` **or** a `max_delay` deadline, with lock-cheap
+//!   p50/p95/p99 latency histograms and a built-in closed-loop load
+//!   generator (`pgpr serve --listen …`, `pgpr loadtest`).
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   covariance/summary hot spots, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled SE-ARD
@@ -53,6 +59,7 @@ pub mod data;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod server;
 pub mod experiments;
 
 /// Convenience re-exports covering the most common entry points.

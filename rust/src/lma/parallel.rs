@@ -133,6 +133,12 @@ impl ParallelLma {
         &self.core
     }
 
+    /// Cluster topology/backend this model was fitted for (predict runs
+    /// on a fresh backend of this configuration each call).
+    pub fn cluster_config(&self) -> &ClusterConfig {
+        &self.cluster_cfg
+    }
+
     pub fn fit_makespan(&self) -> f64 {
         self.fit_makespan
     }

@@ -1,7 +1,9 @@
 //! `pgpr` — leader entrypoint for the LMA reproduction.
 //!
-//! See `pgpr help` (or just `pgpr`) for subcommands. The heavy lifting
-//! lives in the `pgpr` library crate; this binary is a thin dispatcher.
+//! See `pgpr help` (or just `pgpr`) for subcommands — experiments, data
+//! generation, CSV eval, the HTTP/stdin prediction service (`serve`) and
+//! the closed-loop load generator (`loadtest`). The heavy lifting lives
+//! in the `pgpr` library crate; this binary is a thin dispatcher.
 
 fn main() {
     if let Err(e) = pgpr::coordinator::cli_run::dispatch() {

@@ -1,0 +1,400 @@
+//! Micro-batching scheduler: decouples connection threads from the model.
+//!
+//! Connection workers call [`BatcherHandle::submit`], which validates the
+//! rows, pushes them into a **bounded** MPSC queue (backpressure: a full
+//! queue is an immediate `Overloaded`, not an unbounded pile-up) and
+//! blocks on a per-request reply channel. A single dedicated batcher
+//! thread owns the [`PredictionService`] and loops:
+//!
+//! 1. wait for the next request — but only until the service's
+//!    [`deadline`](PredictionService::deadline) (oldest queued request +
+//!    `max_delay`);
+//! 2. on arrival, enqueue its rows — the service flushes itself when
+//!    `batch_size` rows are queued;
+//! 3. on deadline expiry, flush the partial batch, so a lone request is
+//!    answered within `max_delay` instead of waiting for a full batch.
+//!
+//! Every answered row is routed back to the waiting connection through
+//! its reply channel; a request spanning a batch boundary is completed
+//! when its last row is answered. Each submitted request is answered
+//! exactly once (a reply or an error), including at shutdown: when all
+//! handles drop, the thread drains the queue, flushes and exits.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::service::{PredictionService, Request, Response};
+use crate::server::metrics::ServeMetrics;
+use crate::util::error::{PgprError, Result};
+
+/// One answered multi-row request.
+#[derive(Clone, Debug)]
+pub struct BatchReply {
+    pub mean: Vec<f64>,
+    pub var: Vec<f64>,
+    /// Seconds between enqueue and the last row's batch completing.
+    pub latency_s: f64,
+}
+
+/// Why a submit failed — mapped to HTTP status codes by the server.
+#[derive(Clone, Debug)]
+pub enum SubmitError {
+    /// Malformed input (wrong dimension, empty, non-finite) → 400.
+    BadRequest(String),
+    /// The bounded queue is full → 503.
+    Overloaded,
+    /// The batcher has shut down → 503.
+    Closed,
+    /// The engine's predict call failed → 500.
+    Engine(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::BadRequest(m) => write!(f, "bad request: {m}"),
+            SubmitError::Overloaded => write!(f, "request queue is full"),
+            SubmitError::Closed => write!(f, "service is shut down"),
+            SubmitError::Engine(m) => write!(f, "prediction failed: {m}"),
+        }
+    }
+}
+
+type ReplyResult = std::result::Result<BatchReply, String>;
+
+struct Incoming {
+    rows: Vec<Vec<f64>>,
+    reply: Sender<ReplyResult>,
+    enqueued: Instant,
+}
+
+/// Cheap clonable submitter held by every connection worker.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: SyncSender<Incoming>,
+    dim: usize,
+    /// Requests currently sitting in the bounded queue (incremented on a
+    /// successful enqueue, decremented when the batcher dequeues) — the
+    /// depth whose saturation produces `Overloaded`/503.
+    depth: Arc<AtomicU64>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl BatcherHandle {
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Submit one or more rows and block until the micro-batcher answers
+    /// (bounded by `max_delay` plus one predict call).
+    pub fn submit(&self, rows: Vec<Vec<f64>>) -> std::result::Result<BatchReply, SubmitError> {
+        if rows.is_empty() {
+            return Err(SubmitError::BadRequest("no input rows".into()));
+        }
+        for r in &rows {
+            if r.len() != self.dim {
+                return Err(SubmitError::BadRequest(format!(
+                    "row has dim {}, model expects {}",
+                    r.len(),
+                    self.dim
+                )));
+            }
+            if r.iter().any(|v| !v.is_finite()) {
+                return Err(SubmitError::BadRequest("non-finite input value".into()));
+            }
+        }
+        let (rtx, rrx) = std::sync::mpsc::channel();
+        let inc = Incoming { rows, reply: rtx, enqueued: Instant::now() };
+        // Increment BEFORE try_send (and undo on failure): once the send
+        // succeeds the batcher may dequeue-and-decrement at any moment,
+        // and a decrement racing ahead of our increment would wrap the
+        // counter to u64::MAX.
+        let d = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        match self.tx.try_send(inc) {
+            Ok(()) => self.metrics.queue_depth.record(d),
+            Err(TrySendError::Full(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return Err(SubmitError::Overloaded);
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return Err(SubmitError::Closed);
+            }
+        }
+        match rrx.recv() {
+            Ok(Ok(rep)) => Ok(rep),
+            Ok(Err(msg)) => Err(SubmitError::Engine(msg)),
+            Err(_) => Err(SubmitError::Closed),
+        }
+    }
+}
+
+/// A request waiting for all of its rows to be answered.
+struct Waiter {
+    reply: Sender<ReplyResult>,
+    enqueued: Instant,
+    remaining: usize,
+    mean: Vec<f64>,
+    var: Vec<f64>,
+}
+
+/// Spawn the batcher thread over a configured service (batch size and
+/// `max_delay` are the service's own). Returns the submit handle and the
+/// thread's join handle; the thread exits after all handles drop and the
+/// queue is drained.
+pub fn spawn(
+    svc: PredictionService,
+    queue_capacity: usize,
+) -> Result<(BatcherHandle, JoinHandle<()>)> {
+    let dim = svc.dim();
+    let metrics = svc.metrics();
+    let depth = Arc::new(AtomicU64::new(0));
+    let depth_rx = Arc::clone(&depth);
+    let (tx, rx) = sync_channel::<Incoming>(queue_capacity.max(1));
+    let join = std::thread::Builder::new()
+        .name("pgpr-batcher".into())
+        .spawn(move || run_loop(svc, rx, depth_rx))
+        .map_err(|e| PgprError::Io(format!("spawn batcher thread: {e}")))?;
+    Ok((BatcherHandle { tx, dim, depth, metrics }, join))
+}
+
+fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<AtomicU64>) {
+    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
+    // Service request id → (waiter key, row slot within the waiter).
+    let mut routes: HashMap<u64, (u64, usize)> = HashMap::new();
+    let mut next_id: u64 = 0;
+    let mut next_waiter: u64 = 0;
+    let mut open = true;
+    while open || svc.queued_rows() > 0 {
+        let msg = match svc.deadline() {
+            // Nothing queued (or no max_delay): block for the next request.
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => {
+                    open = false;
+                    None
+                }
+            },
+            Some(dl) => {
+                let wait = dl.saturating_duration_since(Instant::now());
+                if wait.is_zero() {
+                    None // deadline already expired: flush below
+                } else {
+                    match rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            None
+                        }
+                    }
+                }
+            }
+        };
+        let mut answered: Vec<Response> = Vec::new();
+        let mut failure: Option<String> = None;
+        match msg {
+            Some(inc) => {
+                depth.fetch_sub(1, Ordering::Relaxed);
+                let wkey = next_waiter;
+                next_waiter += 1;
+                let n = inc.rows.len();
+                waiters.insert(
+                    wkey,
+                    Waiter {
+                        reply: inc.reply,
+                        enqueued: inc.enqueued,
+                        remaining: n,
+                        mean: vec![0.0; n],
+                        var: vec![0.0; n],
+                    },
+                );
+                for (slot, row) in inc.rows.into_iter().enumerate() {
+                    next_id += 1;
+                    routes.insert(next_id, (wkey, slot));
+                    match svc.submit(Request { id: next_id, x: row }) {
+                        Ok(resp) => answered.extend(resp),
+                        Err(e) => {
+                            failure = Some(e.to_string());
+                            break;
+                        }
+                    }
+                }
+            }
+            None => match svc.flush() {
+                Ok(resp) => answered.extend(resp),
+                Err(e) => failure = Some(e.to_string()),
+            },
+        }
+        // Deliver completed predictions first so a failure only affects
+        // the requests that are genuinely still unanswered.
+        deliver(answered, &mut waiters, &mut routes);
+        if let Some(m) = failure {
+            fail_all(&mut waiters, &mut routes, &m);
+        }
+    }
+    // Anything still waiting (e.g. after an engine failure) gets closed out.
+    fail_all(&mut waiters, &mut routes, "service shut down");
+}
+
+fn deliver(
+    answered: Vec<Response>,
+    waiters: &mut HashMap<u64, Waiter>,
+    routes: &mut HashMap<u64, (u64, usize)>,
+) {
+    for resp in answered {
+        let (wkey, slot) = match routes.remove(&resp.id) {
+            Some(r) => r,
+            None => continue,
+        };
+        let done = {
+            let w = waiters.get_mut(&wkey).expect("waiter exists for routed id");
+            w.mean[slot] = resp.mean;
+            w.var[slot] = resp.var;
+            w.remaining -= 1;
+            w.remaining == 0
+        };
+        if done {
+            let w = waiters.remove(&wkey).expect("completed waiter present");
+            let latency_s = w.enqueued.elapsed().as_secs_f64();
+            // Receiver may have given up (connection dropped): ignore.
+            let _ = w.reply.send(Ok(BatchReply { mean: w.mean, var: w.var, latency_s }));
+        }
+    }
+}
+
+/// Fail every still-waiting request. Error *counting* happens at the
+/// HTTP boundary (one per failed response), so this only routes the
+/// message — no metrics here, or engine failures would double-count.
+fn fail_all(
+    waiters: &mut HashMap<u64, Waiter>,
+    routes: &mut HashMap<u64, (u64, usize)>,
+    msg: &str,
+) {
+    for (_, w) in waiters.drain() {
+        let _ = w.reply.send(Err(msg.to_string()));
+    }
+    routes.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::coordinator::service::ServeEngine;
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::linalg::matrix::Mat;
+    use crate::lma::LmaRegressor;
+    use crate::util::rng::Pcg64;
+    use std::time::Duration;
+
+    fn fitted() -> LmaRegressor {
+        let mut rng = Pcg64::new(77);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(140, -4.0, 4.0));
+        let y: Vec<f64> = (0..140).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: 1,
+            support_size: 24,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap()
+    }
+
+    fn batcher(batch: usize, delay_us: u64) -> (BatcherHandle, JoinHandle<()>, LmaRegressor) {
+        let model = fitted();
+        let svc = PredictionService::new(fitted(), batch)
+            .unwrap()
+            .with_max_delay(Duration::from_micros(delay_us));
+        let (h, j) = spawn(svc, 64).unwrap();
+        (h, j, model)
+    }
+
+    #[test]
+    fn lone_request_is_answered_within_deadline() {
+        // Huge batch size: only the deadline can flush.
+        let (h, j, model) = batcher(1000, 2000);
+        let t0 = Instant::now();
+        let rep = h.submit(vec![vec![0.5]]).unwrap();
+        // Generous bound (CI machines are slow), but proves it didn't
+        // strand forever waiting for 1000 rows.
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        let direct = model.predict(&Mat::col_vec(&[0.5])).unwrap();
+        assert_eq!(rep.mean[0].to_bits(), direct.mean[0].to_bits());
+        assert_eq!(rep.var[0].to_bits(), direct.var[0].to_bits());
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn multi_row_request_is_answered_in_order() {
+        let (h, j, model) = batcher(4, 1000);
+        let rows: Vec<Vec<f64>> = vec![vec![-1.0], vec![0.0], vec![1.0]];
+        let rep = h.submit(rows).unwrap();
+        assert_eq!(rep.mean.len(), 3);
+        for (i, q) in [-1.0, 0.0, 1.0].iter().enumerate() {
+            let direct = model.predict(&Mat::col_vec(&[*q])).unwrap();
+            assert_eq!(rep.mean[i].to_bits(), direct.mean[0].to_bits(), "row {i}");
+        }
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn bad_rows_rejected_before_queueing() {
+        let (h, j, _model) = batcher(4, 1000);
+        assert!(matches!(h.submit(vec![]), Err(SubmitError::BadRequest(_))));
+        assert!(matches!(h.submit(vec![vec![0.0, 1.0]]), Err(SubmitError::BadRequest(_))));
+        assert!(matches!(h.submit(vec![vec![f64::NAN]]), Err(SubmitError::BadRequest(_))));
+        // A good request still works afterwards.
+        assert!(h.submit(vec![vec![0.2]]).is_ok());
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_submitters_each_answered_exactly_once() {
+        let (h, j, model) = batcher(3, 1500);
+        let queries: Vec<f64> = (0..24).map(|i| -3.0 + 0.25 * i as f64).collect();
+        let results: Vec<(usize, f64)> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..6)
+                .map(|w| {
+                    let h = h.clone();
+                    let queries = &queries;
+                    s.spawn(move || {
+                        let mut out = Vec::new();
+                        for i in (w..queries.len()).step_by(6) {
+                            let rep = h.submit(vec![vec![queries[i]]]).unwrap();
+                            out.push((i, rep.mean[0]));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|t| t.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), queries.len());
+        for (i, mean) in results {
+            let direct = model.predict(&Mat::col_vec(&[queries[i]])).unwrap();
+            assert_eq!(mean.to_bits(), direct.mean[0].to_bits(), "query {i}");
+        }
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn shutdown_drains_and_joins() {
+        let (h, j, _model) = batcher(100, 50_000);
+        let rep = h.submit(vec![vec![0.1]]).unwrap();
+        assert_eq!(rep.mean.len(), 1);
+        drop(h);
+        j.join().unwrap();
+    }
+}

@@ -1,0 +1,377 @@
+//! Minimal HTTP/1.1 server over `std::net::TcpListener` (no deps).
+//!
+//! One acceptor thread feeds accepted connections into a bounded channel
+//! drained by a pool of connection workers; each worker parses one
+//! request per connection (`Connection: close` semantics — keep-alive is
+//! a ROADMAP follow-on), routes it and writes the response:
+//!
+//! * `POST /predict` — JSON body `{"x": [..]}` (one row) or
+//!   `{"rows": [[..], ..]}` (many); answered by the micro-batcher with
+//!   `{"mean": [..], "var": [..], "latency_s": ..}`. Bad input → 400,
+//!   full queue → 503, engine failure → 500.
+//! * `GET /healthz` — engine/dimension liveness probe.
+//! * `GET /metrics` — Prometheus text exposition of the shared
+//!   [`ServeMetrics`] histograms (p50/p95/p99 latency, occupancy, depth).
+//!
+//! [`Server::start`] boots batcher + acceptor + workers and returns a
+//! handle; [`Server::shutdown`] stops accepting, drains the workers and
+//! the batcher, and returns the metrics for the shutdown summary.
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::ServeOptions;
+use crate::coordinator::service::{PredictionService, ServeEngine};
+use crate::server::batcher::{self, BatcherHandle, SubmitError};
+use crate::server::metrics::ServeMetrics;
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// State shared by every connection worker.
+struct Shared {
+    handle: BatcherHandle,
+    metrics: Arc<ServeMetrics>,
+    dim: usize,
+    backend: String,
+}
+
+/// A running HTTP serving stack (acceptor + workers + batcher).
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: JoinHandle<()>,
+    workers: Vec<JoinHandle<()>>,
+    batcher: JoinHandle<()>,
+    metrics: Arc<ServeMetrics>,
+}
+
+impl Server {
+    /// Fit-free boot: wraps an already-fitted engine. Binds `opts.listen`
+    /// (use port 0 for an ephemeral port; see [`Server::addr`]).
+    pub fn start(engine: ServeEngine, opts: &ServeOptions) -> Result<Server> {
+        opts.validate()?;
+        let backend = engine.backend_name();
+        let svc = PredictionService::with_engine(engine, opts.batch_size)?
+            .with_max_delay(Duration::from_micros(opts.max_delay_us));
+        let metrics = svc.metrics();
+        let dim = svc.dim();
+        let (handle, batcher_join) = batcher::spawn(svc, opts.queue_capacity)?;
+
+        let listener = TcpListener::bind(opts.listen.as_str())
+            .map_err(|e| PgprError::Io(format!("bind {}: {e}", opts.listen)))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (conn_tx, conn_rx) = sync_channel::<TcpStream>(opts.workers * 2 + 8);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let shared =
+            Arc::new(Shared { handle, metrics: Arc::clone(&metrics), dim, backend });
+
+        let mut workers = Vec::with_capacity(opts.workers);
+        for i in 0..opts.workers {
+            let rx = Arc::clone(&conn_rx);
+            let sh = Arc::clone(&shared);
+            let w = std::thread::Builder::new()
+                .name(format!("pgpr-http-{i}"))
+                .spawn(move || worker_loop(rx, sh))
+                .map_err(|e| PgprError::Io(format!("spawn http worker: {e}")))?;
+            workers.push(w);
+        }
+        // `shared` (and with it the BatcherHandle) is now owned solely by
+        // the workers: when they exit, the batcher sees disconnect.
+        drop(shared);
+
+        let stop_flag = Arc::clone(&stop);
+        let acceptor = std::thread::Builder::new()
+            .name("pgpr-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            if conn_tx.send(stream).is_err() {
+                                break;
+                            }
+                        }
+                        // Transient accept errors (EMFILE, ECONNABORTED):
+                        // back off briefly instead of spinning a core.
+                        Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                    }
+                }
+                // conn_tx drops here → workers drain the channel and exit.
+            })
+            .map_err(|e| PgprError::Io(format!("spawn acceptor: {e}")))?;
+
+        Ok(Server { addr, stop, acceptor, workers, batcher: batcher_join, metrics })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<ServeMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Graceful shutdown: stop accepting, let in-flight requests finish,
+    /// join every thread. Returns the metrics for the shutdown summary.
+    pub fn shutdown(self) -> Arc<ServeMetrics> {
+        let Server { addr, stop, acceptor, workers, batcher, metrics } = self;
+        stop.store(true, Ordering::SeqCst);
+        // Unblock the acceptor's accept() with a throwaway connection.
+        // A wildcard bind address (0.0.0.0 / ::) is not connectable on
+        // every platform — aim at loopback on the same port instead.
+        let ip = addr.ip();
+        let target_ip = match ip {
+            IpAddr::V4(v4) if v4.is_unspecified() => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(v6) if v6.is_unspecified() => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            other => other,
+        };
+        let _ = TcpStream::connect(SocketAddr::new(target_ip, addr.port()));
+        let _ = acceptor.join();
+        for w in workers {
+            let _ = w.join();
+        }
+        let _ = batcher.join();
+        metrics
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
+    loop {
+        // Hold the lock only while waiting for a connection, never while
+        // handling one — the other workers take over the receiver.
+        let stream = {
+            let guard = rx.lock().expect("connection receiver lock");
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_connection(s, &shared),
+            Err(_) => break, // acceptor gone and channel drained
+        }
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let (status, content_type, body) = match read_request(&mut stream) {
+        Ok(req) => route(&req, shared),
+        Err(msg) => (400, "application/json", error_body(&msg)),
+    };
+    if status >= 400 {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = write_response(&mut stream, status, content_type, &body);
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, String> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err("request headers too large".into());
+        }
+        let n = stream.read(&mut tmp).map_err(|e| format!("read: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-request".into());
+        }
+        buf.extend_from_slice(&tmp[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..header_end])
+        .map_err(|_| "request head is not utf-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_ascii_uppercase();
+    let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(format!("malformed request line `{request_line}`"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err("request body too large".into());
+    }
+    let mut body = buf.split_off(header_end + 4);
+    while body.len() < content_length {
+        let n = stream.read(&mut tmp).map_err(|e| format!("read body: {e}"))?;
+        if n == 0 {
+            return Err("connection closed mid-body".into());
+        }
+        body.extend_from_slice(&tmp[..n]);
+    }
+    body.truncate(content_length);
+    Ok(HttpRequest { method, path, body })
+}
+
+fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
+    // Match on the path alone — `/predict?trace=1` still routes.
+    let path = req.path.split('?').next().unwrap_or("");
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => {
+            let j = Json::obj(vec![
+                ("status", Json::Str("ok".into())),
+                ("model", Json::Str("lma".into())),
+                ("backend", Json::Str(shared.backend.clone())),
+                ("dim", Json::Num(shared.dim as f64)),
+            ]);
+            (200, "application/json", j.to_string())
+        }
+        ("GET", "/metrics") => {
+            (200, "text/plain; charset=utf-8", shared.metrics.render_prometheus())
+        }
+        ("POST", "/predict") => handle_predict(&req.body, shared),
+        _ => (
+            404,
+            "application/json",
+            error_body(&format!("no route for {} {}", req.method, req.path)),
+        ),
+    }
+}
+
+fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "application/json", error_body("body is not utf-8")),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return (400, "application/json", error_body(&format!("bad JSON: {e}"))),
+    };
+    let rows = match parse_rows(&json) {
+        Ok(r) => r,
+        Err(msg) => return (400, "application/json", error_body(&msg)),
+    };
+    match shared.handle.submit(rows) {
+        Ok(rep) => {
+            let j = Json::obj(vec![
+                ("mean", Json::arr_f64(&rep.mean)),
+                ("var", Json::arr_f64(&rep.var)),
+                ("latency_s", Json::Num(rep.latency_s)),
+            ]);
+            (200, "application/json", j.to_string())
+        }
+        Err(SubmitError::BadRequest(m)) => (400, "application/json", error_body(&m)),
+        Err(SubmitError::Overloaded) => {
+            (503, "application/json", error_body("request queue is full"))
+        }
+        Err(SubmitError::Closed) => {
+            (503, "application/json", error_body("service shutting down"))
+        }
+        Err(SubmitError::Engine(m)) => (500, "application/json", error_body(&m)),
+    }
+}
+
+fn parse_rows(j: &Json) -> std::result::Result<Vec<Vec<f64>>, String> {
+    if let Some(x) = j.get("x") {
+        let row = x
+            .as_f64_vec()
+            .ok_or_else(|| "`x` must be an array of numbers".to_string())?;
+        return Ok(vec![row]);
+    }
+    if let Some(rs) = j.get("rows") {
+        let arr = rs
+            .as_arr()
+            .ok_or_else(|| "`rows` must be an array of arrays".to_string())?;
+        let mut out = Vec::with_capacity(arr.len());
+        for r in arr {
+            out.push(
+                r.as_f64_vec()
+                    .ok_or_else(|| "`rows` entries must be arrays of numbers".to_string())?,
+            );
+        }
+        return Ok(out);
+    }
+    Err("body must contain `x` (one row) or `rows` (an array of rows)".into())
+}
+
+fn error_body(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_subslice_basics() {
+        assert_eq!(find_subslice(b"abc\r\n\r\nxyz", b"\r\n\r\n"), Some(3));
+        assert_eq!(find_subslice(b"abc", b"\r\n\r\n"), None);
+        assert_eq!(find_subslice(b"", b"\r\n\r\n"), None);
+    }
+
+    #[test]
+    fn parse_rows_accepts_x_and_rows() {
+        let one = Json::parse(r#"{"x": [1.0, 2.0]}"#).unwrap();
+        assert_eq!(parse_rows(&one).unwrap(), vec![vec![1.0, 2.0]]);
+        let many = Json::parse(r#"{"rows": [[1], [2], [3]]}"#).unwrap();
+        assert_eq!(parse_rows(&many).unwrap().len(), 3);
+        let bad = Json::parse(r#"{"q": 1}"#).unwrap();
+        assert!(parse_rows(&bad).is_err());
+        let bad_x = Json::parse(r#"{"x": ["a"]}"#).unwrap();
+        assert!(parse_rows(&bad_x).is_err());
+    }
+
+    #[test]
+    fn error_body_is_json() {
+        let b = error_body("boom \"quoted\"");
+        let j = Json::parse(&b).unwrap();
+        assert_eq!(j.req("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+}

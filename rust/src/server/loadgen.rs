@@ -1,0 +1,278 @@
+//! Closed-loop load generator for the HTTP serving path.
+//!
+//! `concurrency` client threads each loop: draw a random query row, open
+//! a connection, `POST /predict`, wait for the answer, record the
+//! end-to-end latency — the classic closed-loop model, so offered load
+//! adapts to service speed and the measured quantiles are honest (no
+//! coordinated-omission correction needed). Results aggregate into the
+//! same lock-cheap [`Histogram`] the server uses and are emitted as the
+//! `BENCH_serve_latency.json` perf record by `pgpr loadtest` /
+//! `bench_serve_latency`.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::server::metrics::Histogram;
+use crate::util::bench::fmt_time;
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+
+/// Load shape: who to hit and how hard.
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Target `host:port`.
+    pub addr: String,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Total requests across all threads.
+    pub requests: usize,
+    /// Rows per request (1 = single-point queries).
+    pub rows_per_request: usize,
+    /// Input dimension (see [`fetch_dim`]).
+    pub dim: usize,
+    pub seed: u64,
+}
+
+/// Aggregated client-side results.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub ok: usize,
+    pub errors: usize,
+    pub elapsed_s: f64,
+    /// Answered requests per wall-clock second.
+    pub throughput_rps: f64,
+    /// Answered rows per wall-clock second.
+    pub rows_per_sec: f64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("ok", Json::Num(self.ok as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("rows_per_sec", Json::Num(self.rows_per_sec)),
+            (
+                "latency_s",
+                Json::obj(vec![
+                    ("mean", Json::Num(self.mean_s)),
+                    ("p50", Json::Num(self.p50_s)),
+                    ("p95", Json::Num(self.p95_s)),
+                    ("p99", Json::Num(self.p99_s)),
+                    ("max", Json::Num(self.max_s)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable one-liner.
+    pub fn render(&self) -> String {
+        format!(
+            "loadgen: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}",
+            self.ok,
+            self.requests,
+            self.errors,
+            fmt_time(self.elapsed_s),
+            self.throughput_rps,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            fmt_time(self.p99_s),
+            fmt_time(self.max_s),
+        )
+    }
+}
+
+/// One blocking HTTP/1.1 exchange (`Connection: close`). Returns
+/// `(status, body)`. Shared by the load generator, `pgpr loadtest` and
+/// the integration tests.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| PgprError::Io(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let _ = stream.set_nodelay(true);
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let header_end = text
+        .find("\r\n\r\n")
+        .ok_or_else(|| PgprError::Data(format!("malformed HTTP response from {addr}")))?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| PgprError::Data("missing HTTP status code".into()))?;
+    Ok((status, text[header_end + 4..].to_string()))
+}
+
+/// Ask a running server for its model input dimension via `/healthz`.
+pub fn fetch_dim(addr: &str) -> Result<usize> {
+    let (status, body) = http_request(addr, "GET", "/healthz", None)?;
+    if status != 200 {
+        return Err(PgprError::Data(format!("{addr}/healthz returned {status}")));
+    }
+    Json::parse(&body)?
+        .req("dim")?
+        .as_usize()
+        .ok_or_else(|| PgprError::Data("healthz `dim` is not an integer".into()))
+}
+
+fn request_body(rng: &mut Pcg64, dim: usize, rows: usize) -> String {
+    if rows == 1 {
+        Json::obj(vec![("x", Json::arr_f64(&rng.uniform_vec(dim, -3.0, 3.0)))]).to_string()
+    } else {
+        let rs: Vec<Json> =
+            (0..rows).map(|_| Json::arr_f64(&rng.uniform_vec(dim, -3.0, 3.0))).collect();
+        Json::obj(vec![("rows", Json::Arr(rs))]).to_string()
+    }
+}
+
+/// Drive the server to completion of `cfg.requests` requests.
+pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
+    if cfg.concurrency == 0 || cfg.requests == 0 || cfg.rows_per_request == 0 || cfg.dim == 0 {
+        return Err(PgprError::Config(
+            "loadgen: concurrency, requests, rows and dim must all be ≥ 1".into(),
+        ));
+    }
+    let latency = Histogram::new();
+    let next = AtomicUsize::new(0);
+    let ok = AtomicUsize::new(0);
+    let errors = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..cfg.concurrency {
+            let latency = &latency;
+            let next = &next;
+            let ok = &ok;
+            let errors = &errors;
+            s.spawn(move || {
+                let mut rng = Pcg64::new(cfg.seed).split(w as u64 + 1);
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg.requests {
+                        break;
+                    }
+                    let body = request_body(&mut rng, cfg.dim, cfg.rows_per_request);
+                    let t = Instant::now();
+                    match http_request(&cfg.addr, "POST", "/predict", Some(&body)) {
+                        Ok((200, _)) => {
+                            latency.record(t.elapsed().as_micros() as u64);
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Ok(_) | Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let okc = ok.load(Ordering::Relaxed);
+    let q = |p: f64| latency.quantile(p) as f64 * 1e-6;
+    Ok(LoadReport {
+        requests: cfg.requests,
+        ok: okc,
+        errors: errors.load(Ordering::Relaxed),
+        elapsed_s,
+        throughput_rps: if elapsed_s > 0.0 { okc as f64 / elapsed_s } else { 0.0 },
+        rows_per_sec: if elapsed_s > 0.0 {
+            (okc * cfg.rows_per_request) as f64 / elapsed_s
+        } else {
+            0.0
+        },
+        mean_s: latency.mean() * 1e-6,
+        p50_s: q(0.5),
+        p95_s: q(0.95),
+        p99_s: q(0.99),
+        max_s: latency.max() as f64 * 1e-6,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_has_quantiles() {
+        let r = LoadReport {
+            requests: 10,
+            ok: 9,
+            errors: 1,
+            elapsed_s: 2.0,
+            throughput_rps: 4.5,
+            rows_per_sec: 4.5,
+            mean_s: 0.01,
+            p50_s: 0.008,
+            p95_s: 0.02,
+            p99_s: 0.03,
+            max_s: 0.04,
+        };
+        let j = r.to_json();
+        assert_eq!(j.req("ok").unwrap().as_usize(), Some(9));
+        let lat = j.req("latency_s").unwrap();
+        assert_eq!(lat.req("p99").unwrap().as_f64(), Some(0.03));
+        assert!(r.render().contains("9/10 ok"));
+    }
+
+    #[test]
+    fn body_shapes() {
+        let mut rng = Pcg64::new(1);
+        let one = Json::parse(&request_body(&mut rng, 3, 1)).unwrap();
+        assert_eq!(one.req("x").unwrap().as_arr().unwrap().len(), 3);
+        let many = Json::parse(&request_body(&mut rng, 2, 4)).unwrap();
+        assert_eq!(many.req("rows").unwrap().as_arr().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        let cfg = LoadConfig {
+            addr: "127.0.0.1:1".into(),
+            concurrency: 0,
+            requests: 1,
+            rows_per_request: 1,
+            dim: 1,
+            seed: 0,
+        };
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn unreachable_server_counts_errors() {
+        // Port 1 on localhost: connection refused, all requests error.
+        let cfg = LoadConfig {
+            addr: "127.0.0.1:1".into(),
+            concurrency: 2,
+            requests: 4,
+            rows_per_request: 1,
+            dim: 1,
+            seed: 3,
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.ok, 0);
+        assert_eq!(r.errors, 4);
+    }
+}

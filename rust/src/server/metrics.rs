@@ -1,0 +1,401 @@
+//! Lock-cheap serving metrics: atomic log-linear histograms and counters.
+//!
+//! [`Histogram`] records `u64` samples (latencies in microseconds, batch
+//! occupancies, queue depths) into fixed log-linear buckets — 8 sub-buckets
+//! per octave, ≤ 12.5% relative error — using only relaxed atomic
+//! increments, so many connection workers can record concurrently with no
+//! lock and no allocation. Quantiles are computed on read by a bucket
+//! scan. [`ServeMetrics`] groups the histograms and counters the serving
+//! path shares, renders them in Prometheus text format for `GET /metrics`
+//! and as a human summary for shutdown.
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Values below this get exact unit buckets; above, log-linear octaves.
+const LINEAR_MAX: u64 = 8;
+/// Sub-buckets per octave (power of two; 8 ⇒ ≤ 1/8 relative error).
+const SUB: usize = 8;
+/// 8 exact buckets + 8 sub-buckets for each octave 2³..2⁶³.
+const NUM_BUCKETS: usize = LINEAR_MAX as usize + (64 - 3) * SUB;
+
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR_MAX {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros() as usize; // ≥ 3 since v ≥ 8
+    let group = msb - 3;
+    let sub = ((v >> (msb - 3)) & 0x7) as usize;
+    LINEAR_MAX as usize + group * SUB + sub
+}
+
+/// Representative (midpoint) value of a bucket.
+fn bucket_value(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let group = (idx - LINEAR_MAX as usize) / SUB;
+    let sub = ((idx - LINEAR_MAX as usize) % SUB) as u64;
+    let width = 1u64 << group;
+    let lower = (LINEAR_MAX + sub) << group;
+    lower + width / 2
+}
+
+/// Concurrent log-linear histogram over `u64` samples.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+/// A point-in-time read of a [`Histogram`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: u64,
+    pub p95: u64,
+    pub p99: u64,
+    pub max: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free: three relaxed atomic RMWs.
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// The `q`-quantile (q in [0, 1]) of everything recorded so far,
+    /// accurate to the bucket resolution and capped at the observed max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let mut target = ((q * n as f64).ceil() as u64).clamp(1, n);
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c >= target {
+                return bucket_value(i).min(self.max());
+            }
+            target -= c;
+        }
+        self.max()
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.quantile(0.5),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: self.max(),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Shared metrics for the serving path. All members use interior
+/// mutability (atomics), so one `Arc<ServeMetrics>` is read and written
+/// from connection workers, the batcher thread and `/metrics` renders
+/// concurrently.
+pub struct ServeMetrics {
+    /// Per-row latency, enqueue → batch answered, microseconds.
+    pub latency_us: Histogram,
+    /// Engine predict call duration per batch, microseconds.
+    pub predict_us: Histogram,
+    /// Rows per flushed batch (occupancy).
+    pub batch_rows: Histogram,
+    /// Requests waiting in the bounded submit queue (the one whose
+    /// saturation produces 503s), sampled at each successful enqueue
+    /// including the new request.
+    pub queue_depth: Histogram,
+    /// Rows accepted into the queue.
+    pub requests: AtomicU64,
+    /// Rows answered.
+    pub responses: AtomicU64,
+    /// Failed requests, counted once per 4xx/5xx response at the HTTP
+    /// boundary (engine failures surface there as 500s).
+    pub errors: AtomicU64,
+    /// Batches flushed.
+    pub batches: AtomicU64,
+    started: Instant,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            latency_us: Histogram::new(),
+            predict_us: Histogram::new(),
+            batch_rows: Histogram::new(),
+            queue_depth: Histogram::new(),
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    /// Rows answered per wall-clock second since the metrics were created.
+    pub fn rows_per_sec(&self) -> f64 {
+        let secs = self.elapsed_secs();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.responses.load(Ordering::Relaxed) as f64 / secs
+        }
+    }
+
+    /// Prometheus text exposition for `GET /metrics`.
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let _ = writeln!(s, "pgpr_requests_total {}", c(&self.requests));
+        let _ = writeln!(s, "pgpr_responses_total {}", c(&self.responses));
+        let _ = writeln!(s, "pgpr_errors_total {}", c(&self.errors));
+        let _ = writeln!(s, "pgpr_batches_total {}", c(&self.batches));
+        let _ = writeln!(s, "pgpr_throughput_rows_per_sec {:.3}", self.rows_per_sec());
+        let _ = writeln!(s, "pgpr_uptime_seconds {:.3}", self.elapsed_secs());
+        for (name, h) in [
+            ("pgpr_request_latency_seconds", &self.latency_us),
+            ("pgpr_predict_seconds", &self.predict_us),
+        ] {
+            let snap = h.snapshot();
+            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
+                let _ = writeln!(s, "{name}{{quantile=\"{q}\"}} {:.6e}", v as f64 * 1e-6);
+            }
+            let _ = writeln!(s, "{name}_mean {:.6e}", snap.mean * 1e-6);
+            let _ = writeln!(s, "{name}_max {:.6e}", snap.max as f64 * 1e-6);
+            let _ = writeln!(s, "{name}_count {}", snap.count);
+        }
+        for (name, h) in [
+            ("pgpr_batch_occupancy_rows", &self.batch_rows),
+            ("pgpr_queue_depth_requests", &self.queue_depth),
+        ] {
+            let snap = h.snapshot();
+            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
+                let _ = writeln!(s, "{name}{{quantile=\"{q}\"}} {v}");
+            }
+            let _ = writeln!(s, "{name}_mean {:.3}", snap.mean);
+            let _ = writeln!(s, "{name}_max {}", snap.max);
+        }
+        s
+    }
+
+    /// Human-readable shutdown summary.
+    pub fn summary(&self) -> String {
+        let lat = self.latency_us.snapshot();
+        let occ = self.batch_rows.snapshot();
+        let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        format!(
+            "served {} rows in {} batches ({} errors); latency mean {:.3}ms p50 {:.3}ms p95 {:.3}ms p99 {:.3}ms max {:.3}ms; \
+             mean batch occupancy {:.2} rows; throughput {:.1} rows/s over {:.2}s",
+            c(&self.responses),
+            c(&self.batches),
+            c(&self.errors),
+            lat.mean * 1e-3,
+            lat.p50 as f64 * 1e-3,
+            lat.p95 as f64 * 1e-3,
+            lat.p99 as f64 * 1e-3,
+            lat.max as f64 * 1e-3,
+            occ.mean,
+            self.rows_per_sec(),
+            self.elapsed_secs(),
+        )
+    }
+
+    /// Machine-readable snapshot (embedded in `BENCH_serve_latency.json`).
+    pub fn to_json(&self) -> Json {
+        let lat = self.latency_us.snapshot();
+        let occ = self.batch_rows.snapshot();
+        let qd = self.queue_depth.snapshot();
+        let c = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("requests", c(&self.requests)),
+            ("responses", c(&self.responses)),
+            ("errors", c(&self.errors)),
+            ("batches", c(&self.batches)),
+            ("throughput_rows_per_sec", Json::Num(self.rows_per_sec())),
+            (
+                "latency_s",
+                Json::obj(vec![
+                    ("mean", Json::Num(lat.mean * 1e-6)),
+                    ("p50", Json::Num(lat.p50 as f64 * 1e-6)),
+                    ("p95", Json::Num(lat.p95 as f64 * 1e-6)),
+                    ("p99", Json::Num(lat.p99 as f64 * 1e-6)),
+                    ("max", Json::Num(lat.max as f64 * 1e-6)),
+                ]),
+            ),
+            (
+                "batch_occupancy_rows",
+                Json::obj(vec![
+                    ("mean", Json::Num(occ.mean)),
+                    ("p50", Json::Num(occ.p50 as f64)),
+                    ("max", Json::Num(occ.max as f64)),
+                ]),
+            ),
+            (
+                "queue_depth_requests",
+                Json::obj(vec![
+                    ("mean", Json::Num(qd.mean)),
+                    ("p99", Json::Num(qd.p99 as f64)),
+                    ("max", Json::Num(qd.max as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut prev = 0usize;
+        for v in [0u64, 1, 7, 8, 9, 15, 16, 31, 100, 1000, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let idx = bucket_index(v);
+            assert!(idx < NUM_BUCKETS, "v={v} idx={idx}");
+            assert!(idx >= prev, "index not monotone at v={v}");
+            prev = idx;
+        }
+    }
+
+    #[test]
+    fn bucket_value_within_relative_error() {
+        for v in [12u64, 100, 999, 4096, 123_456, 9_999_999] {
+            let rep = bucket_value(bucket_index(v));
+            let err = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 0.13, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let h = Histogram::new();
+        for v in 0..8u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), 7);
+        assert_eq!(h.quantile(0.01), 0);
+        assert_eq!(h.quantile(1.0), 7);
+    }
+
+    #[test]
+    fn quantiles_order_correctly() {
+        let h = Histogram::new();
+        // 90 fast samples around 100, 10 slow around 10_000.
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(10_000);
+        }
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 >= 80 && p50 <= 120, "p50={p50}");
+        assert!(p95 >= 8_000, "p95={p95}");
+        assert!(p99 >= p95 && p99 <= h.max());
+        assert!((h.mean() - (90.0 * 100.0 + 10.0 * 10_000.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_reads_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        let s = h.snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.p99, 0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let h = Histogram::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let h = &h;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        h.record(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(h.count(), 4000);
+        assert_eq!(h.max(), 3999);
+    }
+
+    #[test]
+    fn serve_metrics_render_and_json() {
+        let m = ServeMetrics::new();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.responses.fetch_add(5, Ordering::Relaxed);
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.latency_us.record(1500);
+        m.batch_rows.record(3);
+        m.batch_rows.record(2);
+        let text = m.render_prometheus();
+        assert!(text.contains("pgpr_requests_total 5"));
+        assert!(text.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("pgpr_batch_occupancy_rows"));
+        let j = m.to_json();
+        assert_eq!(j.req("responses").unwrap().as_usize(), Some(5));
+        assert!(j.req("latency_s").unwrap().get("p99").unwrap().as_f64().unwrap() > 0.0);
+        let s = m.summary();
+        assert!(s.contains("served 5 rows in 2 batches"));
+    }
+}

@@ -1,0 +1,33 @@
+//! Network serving subsystem: a dependency-free HTTP/1.1 front end for
+//! the fitted LMA engine.
+//!
+//! Layers (request path, top to bottom):
+//!
+//! * [`http`] — `std::net::TcpListener` server: one acceptor thread feeds
+//!   a pool of connection workers; routes `POST /predict` (JSON rows),
+//!   `GET /healthz` and `GET /metrics`.
+//! * [`batcher`] — the micro-batching scheduler. Connection workers hand
+//!   requests into a bounded MPSC queue; a dedicated batcher thread owns
+//!   the [`PredictionService`](crate::coordinator::service::PredictionService)
+//!   and flushes when `batch_size` rows are queued **or** the oldest
+//!   request's `max_delay` deadline expires, so a lone request is never
+//!   stranded waiting for a full batch. Each waiting connection is
+//!   answered through its own reply channel, exactly once.
+//! * [`metrics`] — lock-cheap atomic histograms (log-linear buckets) for
+//!   request latency, per-batch occupancy and queue depth, reporting
+//!   p50/p95/p99; rendered on `/metrics` and in the shutdown summary.
+//! * [`loadgen`] — a multi-threaded closed-loop client that drives the
+//!   server at fixed concurrency and produces the `BENCH_serve_latency`
+//!   record (`pgpr loadtest`, `bench_serve_latency`).
+//!
+//! The engine behind the service is a
+//! [`ServeEngine`](crate::coordinator::service::ServeEngine) — centralized
+//! LMA or the cluster-parallel engine (`sim` / `threads[:N]`), so real
+//! network traffic exercises the `cluster::Backend` layer end to end.
+
+pub mod batcher;
+pub mod http;
+pub mod loadgen;
+pub mod metrics;
+
+pub use http::Server;

@@ -126,6 +126,17 @@ impl Json {
         }
     }
 
+    /// A numeric array as `Vec<f64>`; `None` if not an array or any
+    /// element is non-numeric (used by the `/predict` row parser).
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        let xs = self.as_arr()?;
+        let mut out = Vec::with_capacity(xs.len());
+        for x in xs {
+            out.push(x.as_f64()?);
+        }
+        Some(out)
+    }
+
     /// `obj.get("a").get("b")`-style access that tolerates missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|m| m.get(key))
@@ -397,6 +408,15 @@ mod tests {
         assert_eq!(v.get("b").unwrap().as_bool(), Some(false));
         assert!(v.req("missing").is_err());
         assert_eq!(v.get("n").unwrap().as_str(), None);
+    }
+
+    #[test]
+    fn f64_vec_accessor() {
+        let v = Json::parse("[1, 2.5, -3]").unwrap();
+        assert_eq!(v.as_f64_vec(), Some(vec![1.0, 2.5, -3.0]));
+        assert_eq!(Json::parse(r#"[1, "x"]"#).unwrap().as_f64_vec(), None);
+        assert_eq!(Json::parse("7").unwrap().as_f64_vec(), None);
+        assert_eq!(Json::parse("[]").unwrap().as_f64_vec(), Some(vec![]));
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! End-to-end tests for the network serving subsystem: boot the HTTP
+//! server on an ephemeral port, fire concurrent clients at it, and assert
+//! the answers are bit-identical to direct `LmaRegressor::predict` — for
+//! both the centralized engine and the ThreadCluster-parallel engine —
+//! and that every request is answered exactly once.
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use pgpr::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::LmaRegressor;
+use pgpr::server::loadgen::{self, http_request};
+use pgpr::server::Server;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+const N_TRAIN: usize = 150;
+const M_BLOCKS: usize = 5;
+
+fn training_data(seed: u64) -> (Mat, Vec<f64>, SeArdHyper, LmaConfig) {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(N_TRAIN, -4.0, 4.0));
+    let y: Vec<f64> = (0..N_TRAIN).map(|i| x.get(i, 0).sin()).collect();
+    let cfg = LmaConfig {
+        num_blocks: M_BLOCKS,
+        markov_order: 1,
+        support_size: 24,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    };
+    (x, y, hyp, cfg)
+}
+
+fn opts(batch: usize, max_delay_us: u64) -> ServeOptions {
+    ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 3,
+        batch_size: batch,
+        max_delay_us,
+        queue_capacity: 64,
+    }
+}
+
+fn post_predict_one(addr: &str, q: f64) -> (f64, f64) {
+    let body = Json::obj(vec![("x", Json::arr_f64(&[q]))]).to_string();
+    let (status, resp) = http_request(addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    let mean = j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+    let var = j.req("var").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+    (mean, var)
+}
+
+/// Fire `queries` from 8 concurrent client threads; return (index, mean,
+/// var) triples.
+fn concurrent_queries(addr: &str, queries: &[f64]) -> Vec<(usize, f64, f64)> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    let mut i = w;
+                    while i < queries.len() {
+                        let (mean, var) = post_predict_one(addr, queries[i]);
+                        out.push((i, mean, var));
+                        i += 8;
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    })
+}
+
+#[test]
+fn concurrent_clients_match_centralized_predict_bitwise() {
+    let (x, y, hyp, cfg) = training_data(31);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let queries: Vec<f64> = (0..40).map(|i| -3.5 + 7.0 * i as f64 / 39.0).collect();
+    let direct: Vec<(f64, f64)> = queries
+        .iter()
+        .map(|&q| {
+            let p = model.predict(&Mat::col_vec(&[q])).unwrap();
+            (p.mean[0], p.var[0])
+        })
+        .collect();
+
+    let server = Server::start(ServeEngine::Centralized(model), &opts(4, 1500)).unwrap();
+    let addr = server.addr().to_string();
+    let results = concurrent_queries(&addr, &queries);
+    assert_eq!(results.len(), queries.len());
+    for (i, mean, var) in results {
+        assert_eq!(mean.to_bits(), direct[i].0.to_bits(), "query {i}: mean differs");
+        assert_eq!(var.to_bits(), direct[i].1.to_bits(), "query {i}: var differs");
+    }
+
+    // Exactly-once accounting: every row accepted was answered, none
+    // twice, and the micro-batcher actually batched (fewer batches than
+    // rows under concurrency — at least not more).
+    let metrics = server.shutdown();
+    let n = queries.len() as u64;
+    assert_eq!(metrics.requests.load(Ordering::Relaxed), n);
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), n);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 0);
+    assert!(metrics.batches.load(Ordering::Relaxed) <= n);
+    assert!(metrics.latency_us.count() == n);
+}
+
+#[test]
+fn thread_cluster_engine_matches_centralized_over_http() {
+    let (x, y, hyp, cfg) = training_data(32);
+    let centralized = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let cc = ClusterConfig::gigabit(1, M_BLOCKS)
+        .with_backend(BackendKind::Threads { num_threads: 4 });
+    let parallel = ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap();
+
+    let queries: Vec<f64> = (0..24).map(|i| -3.0 + 0.25 * i as f64).collect();
+    let direct: Vec<(f64, f64)> = queries
+        .iter()
+        .map(|&q| {
+            let p = centralized.predict(&Mat::col_vec(&[q])).unwrap();
+            (p.mean[0], p.var[0])
+        })
+        .collect();
+
+    let server = Server::start(ServeEngine::Parallel(parallel), &opts(4, 1500)).unwrap();
+    let addr = server.addr().to_string();
+
+    // The health probe reports the engine.
+    let (status, body) = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("backend").unwrap().as_str(), Some("threads:4"));
+    assert_eq!(j.req("dim").unwrap().as_usize(), Some(1));
+
+    let results = concurrent_queries(&addr, &queries);
+    assert_eq!(results.len(), queries.len());
+    for (i, mean, var) in results {
+        assert_eq!(mean.to_bits(), direct[i].0.to_bits(), "query {i}: mean differs");
+        assert_eq!(var.to_bits(), direct[i].1.to_bits(), "query {i}: var differs");
+    }
+    let metrics = server.shutdown();
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), queries.len() as u64);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn lone_request_completes_within_max_delay() {
+    let (x, y, hyp, cfg) = training_data(33);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    // Batch size far above 1: only the 2ms deadline can flush.
+    let server = Server::start(ServeEngine::Centralized(model), &opts(1000, 2000)).unwrap();
+    let addr = server.addr().to_string();
+    let t0 = Instant::now();
+    let (mean, var) = post_predict_one(&addr, 0.7);
+    let elapsed = t0.elapsed();
+    assert!(mean.is_finite() && var >= 0.0);
+    // Deadline is 2ms; allow generous slack for slow CI, but far below
+    // "stranded forever".
+    assert!(elapsed < Duration::from_secs(10), "lone request took {elapsed:?}");
+    let metrics = server.shutdown();
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.batches.load(Ordering::Relaxed), 1);
+    assert_eq!(metrics.batch_rows.max(), 1);
+}
+
+#[test]
+fn multi_row_requests_and_metrics_endpoint() {
+    let (x, y, hyp, cfg) = training_data(34);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let direct = model.predict(&Mat::col_vec(&[-1.0])).unwrap();
+    let server = Server::start(ServeEngine::Centralized(model), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+
+    let body =
+        Json::obj(vec![("rows", Json::Arr(vec![
+            Json::arr_f64(&[-1.0]),
+            Json::arr_f64(&[0.5]),
+            Json::arr_f64(&[2.0]),
+        ]))])
+        .to_string();
+    let (status, resp) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    let mean = j.req("mean").unwrap().as_f64_vec().unwrap();
+    let var = j.req("var").unwrap().as_f64_vec().unwrap();
+    assert_eq!(mean.len(), 3);
+    assert_eq!(var.len(), 3);
+    assert_eq!(mean[0].to_bits(), direct.mean[0].to_bits());
+    assert!(j.req("latency_s").unwrap().as_f64().unwrap() >= 0.0);
+
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("pgpr_responses_total 3"), "metrics:\n{text}");
+    assert!(text.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
+    assert!(text.contains("pgpr_batch_occupancy_rows"));
+    server.shutdown();
+}
+
+#[test]
+fn bad_requests_get_http_errors_not_hangs() {
+    let (x, y, hyp, cfg) = training_data(35);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let server = Server::start(ServeEngine::Centralized(model), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+
+    // Wrong dimension → 400.
+    let body = Json::obj(vec![("x", Json::arr_f64(&[1.0, 2.0]))]).to_string();
+    let (status, resp) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 400, "body: {resp}");
+    // Not JSON → 400.
+    let (status, _) = http_request(&addr, "POST", "/predict", Some("not json")).unwrap();
+    assert_eq!(status, 400);
+    // Missing keys → 400.
+    let (status, _) = http_request(&addr, "POST", "/predict", Some("{\"q\":1}")).unwrap();
+    assert_eq!(status, 400);
+    // Unknown route → 404.
+    let (status, _) = http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(status, 404);
+    // A good request still succeeds after all that.
+    let (mean, _var) = post_predict_one(&addr, 0.0);
+    assert!(mean.is_finite());
+    let metrics = server.shutdown();
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 1);
+    assert!(metrics.errors.load(Ordering::Relaxed) >= 4);
+}
+
+#[test]
+fn loadgen_drives_the_server_and_reports_quantiles() {
+    let (x, y, hyp, cfg) = training_data(36);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let server = Server::start(ServeEngine::Centralized(model), &opts(8, 1500)).unwrap();
+    let addr = server.addr().to_string();
+    assert_eq!(loadgen::fetch_dim(&addr).unwrap(), 1);
+    let report = loadgen::run(&loadgen::LoadConfig {
+        addr,
+        concurrency: 4,
+        requests: 40,
+        rows_per_request: 1,
+        dim: 1,
+        seed: 9,
+    })
+    .unwrap();
+    assert_eq!(report.ok, 40);
+    assert_eq!(report.errors, 0);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_s <= report.p95_s && report.p95_s <= report.p99_s);
+    assert!(report.p99_s <= report.max_s + 1e-9);
+    let metrics = server.shutdown();
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 40);
+}
