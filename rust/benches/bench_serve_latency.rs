@@ -21,11 +21,17 @@ fn main() {
             batch_size: 16,
             max_delay_us: 2000,
             queue_capacity: 1024,
+            ..ServeOptions::default()
         },
         concurrency: if fast { 4 } else { 16 },
         requests: if fast { 120 } else { 2000 },
         rows: 1,
         out: "BENCH_serve_latency.json".into(),
+        // Both connection modes (keep-alive and per-request close), so
+        // the record tracks the TCP-setup cost the keep-alive path saves.
+        mode: "both".into(),
+        models: Vec::new(),
+        artifacts: Vec::new(),
     };
     println!(
         "=== bench: serve latency (train {}, concurrency {}, {} requests) ===",

@@ -120,8 +120,8 @@ fn bad(field: &'static str) -> impl Fn() -> PgprError {
 }
 
 /// Options for the serving front end (`pgpr serve` / `server::http`):
-/// where to listen and how the micro-batcher trades latency for batch
-/// occupancy.
+/// where to listen, how the micro-batcher trades latency for batch
+/// occupancy, and how long idle keep-alive connections are held.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ServeOptions {
     /// HTTP listen address, e.g. `127.0.0.1:8080` (`127.0.0.1:0` for an
@@ -137,6 +137,15 @@ pub struct ServeOptions {
     pub max_delay_us: u64,
     /// Bounded request-queue capacity (full queue ⇒ HTTP 503).
     pub queue_capacity: usize,
+    /// Honor HTTP/1.1 keep-alive: serve multiple requests per connection
+    /// (`false` ⇒ legacy one-request-per-connection `Connection: close`).
+    pub keep_alive: bool,
+    /// How long an idle keep-alive connection is held open before the
+    /// worker closes it, milliseconds.
+    pub idle_timeout_ms: u64,
+    /// Requests served on one connection before it is closed (bounds how
+    /// long a single client can monopolize a connection worker).
+    pub max_conn_requests: usize,
 }
 
 impl Default for ServeOptions {
@@ -147,6 +156,9 @@ impl Default for ServeOptions {
             batch_size: 16,
             max_delay_us: 2000,
             queue_capacity: 1024,
+            keep_alive: true,
+            idle_timeout_ms: 5000,
+            max_conn_requests: 1000,
         }
     }
 }
@@ -162,6 +174,11 @@ impl ServeOptions {
         if self.queue_capacity == 0 {
             return Err(PgprError::Config("serve: queue_capacity must be ≥ 1".into()));
         }
+        if self.keep_alive && (self.idle_timeout_ms == 0 || self.max_conn_requests == 0) {
+            return Err(PgprError::Config(
+                "serve: keep-alive needs idle_timeout_ms ≥ 1 and max_conn_requests ≥ 1".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -172,6 +189,9 @@ impl ServeOptions {
             ("batch_size", Json::Num(self.batch_size as f64)),
             ("max_delay_us", Json::Num(self.max_delay_us as f64)),
             ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+            ("keep_alive", Json::Bool(self.keep_alive)),
+            ("idle_timeout_ms", Json::Num(self.idle_timeout_ms as f64)),
+            ("max_conn_requests", Json::Num(self.max_conn_requests as f64)),
         ])
     }
 
@@ -196,6 +216,58 @@ impl ServeOptions {
                 .get("queue_capacity")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.queue_capacity),
+            keep_alive: j.get("keep_alive").and_then(|v| v.as_bool()).unwrap_or(d.keep_alive),
+            idle_timeout_ms: j
+                .get("idle_timeout_ms")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.idle_timeout_ms as usize) as u64,
+            max_conn_requests: j
+                .get("max_conn_requests")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.max_conn_requests),
+        })
+    }
+}
+
+/// Options for the multi-model registry (`registry::ModelRegistry`): how
+/// many fitted engines one serving process keeps resident and what
+/// happens when a load would exceed that bound.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RegistryOptions {
+    /// Maximum resident models. A load beyond this either evicts the
+    /// least-recently-used non-default model (`lru_evict`) or fails with
+    /// a capacity error (HTTP 507).
+    pub max_models: usize,
+    /// Evict the LRU non-default model to make room instead of rejecting.
+    pub lru_evict: bool,
+}
+
+impl Default for RegistryOptions {
+    fn default() -> Self {
+        RegistryOptions { max_models: 8, lru_evict: true }
+    }
+}
+
+impl RegistryOptions {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_models == 0 {
+            return Err(PgprError::Config("registry: max_models must be ≥ 1".into()));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("max_models", Json::Num(self.max_models as f64)),
+            ("lru_evict", Json::Bool(self.lru_evict)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RegistryOptions> {
+        let d = RegistryOptions::default();
+        Ok(RegistryOptions {
+            max_models: j.get("max_models").and_then(|v| v.as_usize()).unwrap_or(d.max_models),
+            lru_evict: j.get("lru_evict").and_then(|v| v.as_bool()).unwrap_or(d.lru_evict),
         })
     }
 }
@@ -234,6 +306,15 @@ impl BackendKind {
         Err(PgprError::Config(format!(
             "unknown backend `{s}` (expected sim | threads | threads:<n>)"
         )))
+    }
+
+    /// The CLI selector string this kind parses back from (`sim`,
+    /// `threads:<n>`) — used by artifact manifests and `/healthz`.
+    pub fn selector(&self) -> String {
+        match self {
+            BackendKind::Sim => "sim".to_string(),
+            BackendKind::Threads { num_threads } => format!("threads:{num_threads}"),
+        }
     }
 
     /// Degree of real parallelism this backend offers (1 for the
@@ -303,6 +384,37 @@ impl ClusterConfig {
             return Err(PgprError::Config("bandwidth must be positive".into()));
         }
         Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machines", Json::Num(self.machines as f64)),
+            ("cores_per_machine", Json::Num(self.cores_per_machine as f64)),
+            ("intra_latency", Json::Num(self.intra_latency)),
+            ("inter_latency", Json::Num(self.inter_latency)),
+            ("bandwidth", Json::Num(self.bandwidth)),
+            ("backend", Json::Str(self.backend.selector())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterConfig> {
+        let backend = match j.get("backend").and_then(|v| v.as_str()) {
+            Some(s) => BackendKind::parse(s)?,
+            None => BackendKind::Sim,
+        };
+        let num = |field: &'static str| -> Result<f64> {
+            j.req(field)?.as_f64().ok_or_else(|| {
+                PgprError::Config(format!("cluster field `{field}` must be a number"))
+            })
+        };
+        Ok(ClusterConfig {
+            machines: num("machines")? as usize,
+            cores_per_machine: num("cores_per_machine")? as usize,
+            intra_latency: num("intra_latency")?,
+            inter_latency: num("inter_latency")?,
+            bandwidth: num("bandwidth")?,
+            backend,
+        })
     }
 }
 
@@ -383,6 +495,9 @@ mod tests {
             batch_size: 32,
             max_delay_us: 500,
             queue_capacity: 64,
+            keep_alive: false,
+            idle_timeout_ms: 250,
+            max_conn_requests: 16,
         };
         assert!(o.validate().is_ok());
         let parsed = Json::parse(&o.to_json().to_string()).unwrap();
@@ -396,6 +511,41 @@ mod tests {
         assert!(ServeOptions { queue_capacity: 0, ..ServeOptions::default() }
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn cluster_config_json_roundtrip() {
+        let c = ClusterConfig::gigabit(4, 2).with_backend(BackendKind::Threads { num_threads: 3 });
+        let parsed = Json::parse(&c.to_json().to_string()).unwrap();
+        let back = ClusterConfig::from_json(&parsed).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.backend.selector(), "threads:3");
+        assert_eq!(BackendKind::Sim.selector(), "sim");
+    }
+
+    #[test]
+    fn registry_options_roundtrip_and_validate() {
+        let r = RegistryOptions { max_models: 3, lru_evict: false };
+        assert!(r.validate().is_ok());
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(RegistryOptions::from_json(&parsed).unwrap(), r);
+        // Missing fields fall back to defaults.
+        let partial = RegistryOptions::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(partial, RegistryOptions::default());
+        assert!(RegistryOptions { max_models: 0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn serve_options_keepalive_validation() {
+        let bad = ServeOptions { keep_alive: true, idle_timeout_ms: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let off = ServeOptions {
+            keep_alive: false,
+            idle_timeout_ms: 0,
+            max_conn_requests: 0,
+            ..Default::default()
+        };
+        assert!(off.validate().is_ok());
     }
 
     #[test]

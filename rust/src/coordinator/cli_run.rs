@@ -1,13 +1,17 @@
 //! Subcommand implementations for the `pgpr` binary.
 
 use std::io::BufRead;
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, ServeOptions};
+use crate::config::{
+    BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions,
+};
 use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
 use crate::lma::parallel::ParallelLma;
 use crate::lma::LmaRegressor;
+use crate::registry::{artifact, ModelRegistry};
 use crate::server::http::Server;
 use crate::server::loadgen;
 use crate::util::cli::Args;
@@ -171,7 +175,7 @@ pub fn cmd_eval(
     Ok(())
 }
 
-/// `pgpr serve` parameters: which model to fit and how to front it.
+/// `pgpr serve` parameters: which model(s) to front and how.
 #[derive(Clone, Debug)]
 pub struct ServeCmd {
     pub dataset: String,
@@ -182,24 +186,36 @@ pub struct ServeCmd {
     /// HTTP/batching options; an empty `opts.listen` selects the stdin
     /// line protocol instead of HTTP.
     pub opts: ServeOptions,
+    /// `name=path` artifact specs (repeatable `--model`). Non-empty ⇒
+    /// boot from saved artifacts **without touching training data**; the
+    /// first listed model is the default.
+    pub models: Vec<String>,
+    /// Registry capacity for `PUT /models/<name>` loads at runtime.
+    pub max_models: usize,
 }
 
-/// Fit the serving engine the way `pgpr serve` always has: synthetic
-/// workload, quick hypers, M scaled to |D|.
+/// Fit a serving engine: synthetic workload, quick hypers. `blocks`,
+/// `order` and `support` of 0 mean "auto-scale to |D|" (the historical
+/// `pgpr serve` behavior: M = |D|/128, B = 1, |S| = |D|/16).
 fn build_serve_engine(
     dataset: &str,
     train: usize,
     seed: u64,
     backend: &str,
+    blocks: usize,
+    order: usize,
+    support: usize,
 ) -> Result<(ServeEngine, String)> {
     let w = Workload::parse(dataset)?;
     let ds = w.generate(train, train / 4, seed)?;
     let hyp = crate::experiments::common::quick_hypers(&ds);
-    let m = (train / 128).clamp(2, 32);
+    let m = if blocks == 0 { (train / 128).clamp(2, 32) } else { blocks };
+    let b = if order == 0 { 1.min(m - 1) } else { order.min(m - 1) };
+    let s = if support == 0 { (train / 16).clamp(8, 512) } else { support };
     let cfg = LmaConfig {
         num_blocks: m,
-        markov_order: 1,
-        support_size: (train / 16).clamp(8, 512),
+        markov_order: b,
+        support_size: s,
         seed,
         partition: PartitionStrategy::KMeans { iters: 8 },
         use_pjrt: false,
@@ -214,20 +230,129 @@ fn build_serve_engine(
     Ok((engine, ds.name))
 }
 
+/// Parse a `--model name=path` / `--artifact name=path` spec.
+fn parse_model_spec(s: &str) -> Result<(String, String)> {
+    match s.split_once('=') {
+        Some((name, path)) if !name.trim().is_empty() && !path.trim().is_empty() => {
+            Ok((name.trim().to_string(), path.trim().to_string()))
+        }
+        _ => Err(PgprError::Config(format!("expected name=path, got `{s}`"))),
+    }
+}
+
+/// Load `name=path` artifact specs into a fresh registry (the shared
+/// boot path of `pgpr serve --model` and self-contained
+/// `pgpr loadtest --artifact`). The first spec becomes the default
+/// model; capacity is at least the number of specs.
+fn registry_from_artifacts(
+    specs: &[String],
+    opts: &ServeOptions,
+    max_models: usize,
+    log_prefix: &str,
+) -> Result<Arc<ModelRegistry>> {
+    let specs: Vec<(String, String)> =
+        specs.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
+    let registry = Arc::new(ModelRegistry::new(
+        RegistryOptions { max_models: max_models.max(specs.len()).max(1), lru_evict: true },
+        opts,
+    ));
+    for (name, path) in &specs {
+        let engine = artifact::load_engine(path)?;
+        registry
+            .load(name, Arc::new(engine))
+            .map_err(|e| PgprError::Config(e.to_string()))?;
+        eprintln!("{log_prefix}loaded model `{name}` from {path}");
+    }
+    Ok(registry)
+}
+
+/// `pgpr fit` parameters: fit once, snapshot the engine to disk.
+#[derive(Clone, Debug)]
+pub struct FitCmd {
+    pub dataset: String,
+    pub train: usize,
+    pub seed: u64,
+    pub backend: String,
+    /// 0 = auto (M = |D|/128 clamped to [2, 32]).
+    pub blocks: usize,
+    /// Markov order B (clamped to M−1).
+    pub order: usize,
+    /// 0 = auto (|S| = |D|/16 clamped to [8, 512]).
+    pub support: usize,
+    /// Artifact output path.
+    pub save: String,
+}
+
+/// `pgpr fit` — fit a serving engine and save it as a model artifact
+/// (`registry::artifact` format) for later `pgpr serve --model`.
+pub fn cmd_fit(c: &FitCmd) -> Result<()> {
+    let (engine, name) = build_serve_engine(
+        &c.dataset,
+        c.train,
+        c.seed,
+        &c.backend,
+        c.blocks,
+        c.order,
+        c.support,
+    )?;
+    let core = engine.core();
+    artifact::save_engine(&engine, &c.save)?;
+    let bytes = std::fs::metadata(&c.save).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "fitted {name} (|D|={}, M={}, B={}, |S|={}, backend {}) -> {} ({bytes} bytes)",
+        core.part.total(),
+        core.m(),
+        core.b(),
+        core.basis.size(),
+        engine.backend_name(),
+        c.save
+    );
+    Ok(())
+}
+
 /// `pgpr serve` — HTTP mode (`--listen host:port`): boots the
-/// `server::http` stack (acceptor, worker pool, micro-batcher) and runs
-/// until stdin closes or a `quit` line arrives, then prints the metrics
-/// summary. Stdin mode (`--listen ""`, the default): the legacy line
-/// protocol `predict v1,v2,...` → `id mean var`, with `flush` forcing a
-/// partial batch and EOF flushing and printing stats.
+/// `server::http` stack (acceptor, keep-alive worker pool, per-model
+/// micro-batchers) and runs until stdin closes or a `quit` line arrives,
+/// then prints the metrics summary. With repeatable `--model name=path`
+/// the engines are loaded from saved artifacts — no training data is
+/// read or fitted — and all models are served from one registry. Stdin
+/// mode (`--listen ""`, the default): the legacy line protocol
+/// `predict v1,v2,...` → `id mean var`, with `flush` forcing a partial
+/// batch and EOF flushing and printing stats.
 pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
-    let (engine, name) = build_serve_engine(&c.dataset, c.train, c.seed, &c.backend)?;
+    if !c.models.is_empty() {
+        if c.opts.listen.is_empty() {
+            let specs: Vec<(String, String)> =
+                c.models.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
+            if specs.len() > 1 {
+                return Err(PgprError::Config(
+                    "stdin mode serves a single model; use --listen for the multi-model registry"
+                        .into(),
+                ));
+            }
+            let (name, path) = &specs[0];
+            let engine = artifact::load_engine(path)?;
+            eprintln!("loaded model `{name}` from {path} (no training data touched)");
+            return serve_stdin(c, engine, name);
+        }
+        let registry = registry_from_artifacts(&c.models, &c.opts, c.max_models, "")?;
+        let server = Server::start_with_registry(registry, &c.opts)?;
+        return serve_http_run(c, server, "artifacts");
+    }
+    let (engine, name) =
+        build_serve_engine(&c.dataset, c.train, c.seed, &c.backend, 0, 1, 0)?;
     if !c.opts.listen.is_empty() {
         return serve_http(c, engine, &name);
     }
+    serve_stdin(c, engine, &name)
+}
+
+/// Stdin line-protocol serving over one engine.
+fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     // Same semantics as the HTTP batcher: 0 = no batching delay (the
     // deadline is always already expired, so partial batches flush at
     // the first opportunity).
+    let backend = engine.backend_name();
     let mut svc = PredictionService::with_engine(engine, c.opts.batch_size)?
         .with_max_delay(Duration::from_micros(c.opts.max_delay_us));
     eprintln!(
@@ -235,7 +360,7 @@ pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
         name,
         svc.dim(),
         c.opts.batch_size,
-        c.backend
+        backend
     );
     let stdin = std::io::stdin();
     let mut next_id = 0u64;
@@ -289,13 +414,37 @@ pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
 }
 
 fn serve_http(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
-    let server = Server::start(engine, &c.opts)?;
+    // Build the registry here (rather than Server::start) so the
+    // `--max-models` cap applies to runtime `PUT /models` loads too.
+    let registry = Arc::new(ModelRegistry::new(
+        RegistryOptions { max_models: c.max_models.max(1), lru_evict: true },
+        &c.opts,
+    ));
+    registry
+        .load(crate::server::http::DEFAULT_MODEL, Arc::new(engine))
+        .map_err(|e| PgprError::Config(e.to_string()))?;
+    let server = Server::start_with_registry(registry, &c.opts)?;
+    serve_http_run(c, server, name)
+}
+
+/// Shared HTTP serving loop: print the bound address, run until `quit`
+/// or stdin EOF, shut down with a metrics summary.
+fn serve_http_run(c: &ServeCmd, server: Server, name: &str) -> Result<()> {
     let addr = server.addr();
+    let models: Vec<String> =
+        server.registry().list().into_iter().map(|i| i.name).collect();
     eprintln!(
-        "serving {name} on http://{addr} (backend {}, workers {}, batch {}, max-delay {}µs, queue {})",
-        c.backend, c.opts.workers, c.opts.batch_size, c.opts.max_delay_us, c.opts.queue_capacity
+        "serving {name} [{}] on http://{addr} (workers {}, batch {}, max-delay {}µs, queue {}, keep-alive {})",
+        models.join(", "),
+        c.opts.workers,
+        c.opts.batch_size,
+        c.opts.max_delay_us,
+        c.opts.queue_capacity,
+        if c.opts.keep_alive { "on" } else { "off" }
     );
-    eprintln!("endpoints: POST /predict  GET /healthz  GET /metrics — `quit` on stdin stops");
+    eprintln!(
+        "endpoints: POST /predict  GET/PUT/DELETE /models[/name]  GET /healthz  GET /metrics — `quit` on stdin stops"
+    );
     // Machine-readable bound address on stdout so scripts can pick up
     // the ephemeral port from `--listen 127.0.0.1:0`.
     println!("listening {addr}");
@@ -338,6 +487,15 @@ pub struct LoadtestCmd {
     pub rows: usize,
     /// Output path of the machine-readable record.
     pub out: String,
+    /// Connection mode(s): `keepalive`, `close` or `both`.
+    pub mode: String,
+    /// Named registry models the traffic round-robins across. In
+    /// self-contained mode these are also fitted and registered: each
+    /// name gets its own (|S|, B) operating point along the LMA spectrum.
+    pub models: Vec<String>,
+    /// Self-mode `name=path` artifact specs: serve these saved models
+    /// instead of fitting (the artifact round-trip smoke path).
+    pub artifacts: Vec<String>,
 }
 
 impl Default for LoadtestCmd {
@@ -353,38 +511,107 @@ impl Default for LoadtestCmd {
             requests: 200,
             rows: 1,
             out: "BENCH_serve_latency.json".into(),
+            mode: "both".into(),
+            models: Vec::new(),
+            artifacts: Vec::new(),
         }
     }
 }
 
-/// Run the load test and return the `BENCH_serve_latency` record (also
-/// used by `bench_serve_latency`). Self-contained mode fits an engine,
-/// boots the HTTP stack on an ephemeral port, drives it and shuts it
-/// down, embedding both client- and server-side quantiles.
-pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
-    let (addr, server) = if c.addr.is_empty() {
-        let (engine, _name) = build_serve_engine(&c.dataset, c.train, c.seed, &c.backend)?;
-        let mut opts = c.opts.clone();
-        if opts.listen.is_empty() {
-            opts.listen = "127.0.0.1:0".into();
+/// Boot the self-contained server for `run_loadtest`: from saved
+/// artifacts when given, else fit — one engine per requested model name
+/// (stepping the (|S|, B) operating point per variant), or the single
+/// anonymous default engine.
+fn boot_self_server(c: &LoadtestCmd) -> Result<Server> {
+    let mut opts = c.opts.clone();
+    if opts.listen.is_empty() {
+        opts.listen = "127.0.0.1:0".into();
+    }
+    // Keep-alive pins one persistent connection to one worker for the
+    // whole run, so fewer workers than closed-loop clients would leave
+    // the excess clients unserved until a worker frees — their
+    // run-length waits would poison the recorded latency quantiles.
+    if opts.keep_alive {
+        opts.workers = opts.workers.max(c.concurrency);
+    }
+    if !c.artifacts.is_empty() {
+        let registry = registry_from_artifacts(&c.artifacts, &opts, 8, "loadtest: ")?;
+        return Server::start_with_registry(registry, &opts);
+    }
+    if !c.models.is_empty() {
+        let registry = Arc::new(ModelRegistry::new(
+            RegistryOptions { max_models: c.models.len().max(8), lru_evict: true },
+            &opts,
+        ));
+        for (i, name) in c.models.iter().enumerate() {
+            // Walk the LMA spectrum across variants: halve the support
+            // set and raise the Markov order with each successive model.
+            let support = ((c.train / 16) >> i).clamp(8, 512);
+            let (engine, _) = build_serve_engine(
+                &c.dataset,
+                c.train,
+                c.seed,
+                &c.backend,
+                0,
+                1 + i,
+                support,
+            )?;
+            registry
+                .load(name, Arc::new(engine))
+                .map_err(|e| PgprError::Config(e.to_string()))?;
+            eprintln!("loadtest: fitted model `{name}` (|S|={support}, B=1+{i} capped)");
         }
-        let server = Server::start(engine, &opts)?;
+        return Server::start_with_registry(registry, &opts);
+    }
+    let (engine, _name) =
+        build_serve_engine(&c.dataset, c.train, c.seed, &c.backend, 0, 1, 0)?;
+    Server::start(engine, &opts)
+}
+
+/// Run the load test and return the `BENCH_serve_latency` record (also
+/// used by `bench_serve_latency`). Self-contained mode boots the HTTP
+/// stack on an ephemeral port (fitting engines, or loading `--artifact`
+/// snapshots), drives it in the requested connection mode(s) and shuts
+/// it down, embedding both client- and server-side quantiles.
+pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
+    let ka_modes: Vec<bool> = match c.mode.as_str() {
+        "both" => vec![true, false],
+        "keepalive" | "keep-alive" => vec![true],
+        "close" => vec![false],
+        other => {
+            return Err(PgprError::Config(format!(
+                "unknown loadtest mode `{other}` (expected keepalive | close | both)"
+            )))
+        }
+    };
+    let (addr, server) = if c.addr.is_empty() {
+        let server = boot_self_server(c)?;
         (server.addr().to_string(), Some(server))
     } else {
         (c.addr.clone(), None)
     };
-    let dim = loadgen::fetch_dim(&addr)?;
-    let lc = loadgen::LoadConfig {
-        addr: addr.clone(),
-        concurrency: c.concurrency,
-        requests: c.requests,
-        rows_per_request: c.rows,
-        dim,
-        seed: c.seed,
-    };
-    let report = loadgen::run(&lc)?;
-    eprintln!("{}", report.render());
+    // With named model targets the loadgen resolves each model's dim
+    // from `GET /models/<name>` itself; the default-model dim is only
+    // needed for anonymous traffic.
+    let dim = if c.models.is_empty() { loadgen::fetch_dim(&addr)? } else { 0 };
+    let mut reports = Vec::with_capacity(ka_modes.len());
+    for keep_alive in ka_modes {
+        let lc = loadgen::LoadConfig {
+            addr: addr.clone(),
+            concurrency: c.concurrency,
+            requests: c.requests,
+            rows_per_request: c.rows,
+            dim,
+            seed: c.seed,
+            keep_alive,
+            models: c.models.clone(),
+        };
+        let report = loadgen::run(&lc)?;
+        eprintln!("{}", report.render());
+        reports.push(report);
+    }
     let mode = if server.is_some() { "self" } else { "remote" };
+    let headline = &reports[0];
     let mut fields: Vec<(&str, Json)> = vec![
         ("bench", Json::Str("serve_latency".into())),
         ("mode", Json::Str(mode.to_string())),
@@ -392,13 +619,27 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
         ("concurrency", Json::Num(c.concurrency as f64)),
         ("requests", Json::Num(c.requests as f64)),
         ("rows_per_request", Json::Num(c.rows as f64)),
-        // Headline numbers duplicated at top level for easy extraction.
-        ("throughput_rps", Json::Num(report.throughput_rps)),
-        ("p50_s", Json::Num(report.p50_s)),
-        ("p95_s", Json::Num(report.p95_s)),
-        ("p99_s", Json::Num(report.p99_s)),
-        ("client", report.to_json()),
+        // Headline numbers duplicated at top level for easy extraction
+        // (the first requested connection mode — keep-alive for `both`).
+        ("throughput_rps", Json::Num(headline.throughput_rps)),
+        ("p50_s", Json::Num(headline.p50_s)),
+        ("p95_s", Json::Num(headline.p95_s)),
+        ("p99_s", Json::Num(headline.p99_s)),
+        ("client", headline.to_json()),
     ];
+    if !c.models.is_empty() {
+        let names: Vec<Json> = c.models.iter().map(|m| Json::Str(m.clone())).collect();
+        fields.push(("models", Json::Arr(names)));
+    }
+    for r in &reports {
+        // One entry per connection mode so the record tracks the
+        // keep-alive vs per-request-TCP gap across PRs.
+        fields.push(if r.keep_alive {
+            ("client_keepalive", r.to_json())
+        } else {
+            ("client_close", r.to_json())
+        });
+    }
     if let Some(server) = server {
         // Engine/batcher configuration is only known (and only true) in
         // self-contained mode; a remote server's settings are its own.
@@ -407,6 +648,21 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
         fields.push(("train", Json::Num(c.train as f64)));
         fields.push(("batch_size", Json::Num(c.opts.batch_size as f64)));
         fields.push(("max_delay_us", Json::Num(c.opts.max_delay_us as f64)));
+        // Per-model server-side histograms (each model batches its own
+        // traffic), so multi-model runs aren't summarized by just the
+        // default model's numbers.
+        let per_model: std::collections::BTreeMap<String, Json> = server
+            .registry()
+            .metrics_by_model()
+            .into_iter()
+            .map(|(n, m)| (n, m.to_json()))
+            .collect();
+        if per_model.len() > 1 {
+            fields.push(("server_models", Json::Obj(per_model)));
+        }
+        // NB: `server` is the default model's metrics and spans every
+        // connection mode driven above; per-mode client numbers live in
+        // `client_keepalive` / `client_close`.
         let metrics = server.shutdown();
         eprintln!("{}", metrics.summary());
         fields.push(("server", metrics.to_json()));
@@ -496,6 +752,32 @@ pub fn dispatch() -> Result<()> {
                 &a.get("out"),
             )
         }
+        "fit" => {
+            let a = Args::new("pgpr fit", "fit a serving engine and save it as a model artifact")
+                .flag("dataset", "aimpeak", "sarcos | aimpeak | emslp")
+                .flag("train", "1000", "training rows")
+                .flag("seed", "0", "seed")
+                .flag(
+                    "backend",
+                    "centralized",
+                    "prediction engine: centralized | sim | threads[:N]",
+                )
+                .flag("blocks", "0", "M — number of blocks (0 = auto from |D|)")
+                .flag("order", "1", "B — Markov order (clamped to M−1)")
+                .flag("support", "0", "|S| — support set size (0 = auto from |D|)")
+                .required("save", "artifact output path, e.g. model.pgpr")
+                .parse_from(rest)?;
+            cmd_fit(&FitCmd {
+                dataset: a.get("dataset"),
+                train: a.get_usize("train"),
+                seed: a.get_usize("seed") as u64,
+                backend: a.get("backend"),
+                blocks: a.get_usize("blocks"),
+                order: a.get_usize("order"),
+                support: a.get_usize("support"),
+                save: a.get("save"),
+            })
+        }
         "serve" => {
             let a = Args::new("pgpr serve", "batched prediction service (HTTP or stdin)")
                 .flag("dataset", "aimpeak", "sarcos | aimpeak | emslp")
@@ -507,6 +789,11 @@ pub fn dispatch() -> Result<()> {
                     "centralized",
                     "prediction engine: centralized | sim | threads[:N]",
                 )
+                .multi(
+                    "model",
+                    "name=path of a saved artifact (repeatable); boots from snapshots without touching training data",
+                )
+                .flag("max-models", "8", "registry capacity for runtime PUT /models loads")
                 .flag(
                     "listen",
                     "",
@@ -520,6 +807,9 @@ pub fn dispatch() -> Result<()> {
                      In stdin mode expiry is only checked when the next input line arrives",
                 )
                 .flag("queue", "1024", "bounded request queue capacity (full ⇒ 503)")
+                .switch("no-keepalive", "one request per connection (legacy Connection: close)")
+                .flag("idle-timeout-ms", "5000", "keep-alive idle timeout")
+                .flag("max-conn-requests", "1000", "requests served per connection before close")
                 .parse_from(rest)?;
             let opts = ServeOptions {
                 listen: a.get("listen"),
@@ -527,6 +817,9 @@ pub fn dispatch() -> Result<()> {
                 batch_size: a.get_usize("batch"),
                 max_delay_us: a.get_usize("max-delay-us") as u64,
                 queue_capacity: a.get_usize("queue"),
+                keep_alive: !a.get_bool("no-keepalive"),
+                idle_timeout_ms: a.get_usize("idle-timeout-ms") as u64,
+                max_conn_requests: a.get_usize("max-conn-requests"),
             };
             cmd_serve(&ServeCmd {
                 dataset: a.get("dataset"),
@@ -534,6 +827,8 @@ pub fn dispatch() -> Result<()> {
                 seed: a.get_usize("seed") as u64,
                 backend: a.get("backend"),
                 opts,
+                models: a.get_multi("model"),
+                max_models: a.get_usize("max-models"),
             })
         }
         "loadtest" => {
@@ -551,6 +846,15 @@ pub fn dispatch() -> Result<()> {
                     "threads:0",
                     "self-mode engine: centralized | sim | threads[:N]",
                 )
+                .multi(
+                    "model",
+                    "registry model name to target (repeatable: traffic round-robins the names; self mode fits one variant per name)",
+                )
+                .multi(
+                    "artifact",
+                    "self-mode name=path artifact to serve instead of fitting (repeatable)",
+                )
+                .flag("mode", "both", "connection mode: keepalive | close | both")
                 .flag("batch", "16", "self-mode micro-batch size")
                 .flag("workers", "4", "self-mode HTTP worker threads")
                 .flag("max-delay-us", "2000", "self-mode flush deadline (µs)")
@@ -572,11 +876,15 @@ pub fn dispatch() -> Result<()> {
                     batch_size: a.get_usize("batch"),
                     max_delay_us: a.get_usize("max-delay-us") as u64,
                     queue_capacity: a.get_usize("queue"),
+                    ..ServeOptions::default()
                 },
                 concurrency: a.get_usize("concurrency"),
                 requests: a.get_usize("requests"),
                 rows: a.get_usize("rows"),
                 out: a.get("out"),
+                mode: a.get("mode"),
+                models: a.get_multi("model"),
+                artifacts: a.get_multi("artifact"),
             })
         }
         "bench-info" => cmd_bench_info(),
@@ -586,9 +894,11 @@ pub fn dispatch() -> Result<()> {
                  USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full] [--backend sim|threads[:N]]\n  \
                  pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
                  pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
+                 pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
-                 \u{20}          [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
+                 \u{20}          [--model name=model.pgpr ...] [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
                  pgpr loadtest [--addr HOST:PORT | --dataset aimpeak --train 600 --backend threads:0]\n  \
+                 \u{20}          [--model NAME ...] [--artifact name=model.pgpr ...] [--mode both|keepalive|close]\n  \
                  \u{20}          [--concurrency 8 --requests 200 --rows 1 --out BENCH_serve_latency.json]\n  \
                  pgpr bench-info\n"
             );
@@ -616,5 +926,49 @@ mod tests {
     #[test]
     fn unknown_experiment_rejected() {
         assert!(cmd_experiment("bogus", false, BackendKind::Sim).is_err());
+    }
+
+    #[test]
+    fn model_spec_parsing() {
+        assert_eq!(
+            parse_model_spec("alpha=/tmp/a.pgpr").unwrap(),
+            ("alpha".to_string(), "/tmp/a.pgpr".to_string())
+        );
+        assert_eq!(
+            parse_model_spec(" b = path with spaces ").unwrap(),
+            ("b".to_string(), "path with spaces".to_string())
+        );
+        assert!(parse_model_spec("noequals").is_err());
+        assert!(parse_model_spec("=path").is_err());
+        assert!(parse_model_spec("name=").is_err());
+    }
+
+    #[test]
+    fn fit_saves_a_loadable_artifact() {
+        let dir = std::env::temp_dir().join("pgpr_fit_cli_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let save = dir.join("m.pgpr");
+        let save = save.to_str().unwrap().to_string();
+        cmd_fit(&FitCmd {
+            dataset: "aimpeak".into(),
+            train: 160,
+            seed: 5,
+            backend: "centralized".into(),
+            blocks: 2,
+            order: 1,
+            support: 16,
+            save: save.clone(),
+        })
+        .unwrap();
+        let engine = artifact::load_engine(&save).unwrap();
+        assert_eq!(engine.backend_name(), "centralized");
+        assert_eq!(engine.core().m(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bad_loadtest_mode_rejected() {
+        let cmd = LoadtestCmd { mode: "sometimes".into(), ..LoadtestCmd::default() };
+        assert!(run_loadtest(&cmd).is_err());
     }
 }

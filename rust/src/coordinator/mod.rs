@@ -5,10 +5,15 @@
 //! * `pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full]`
 //! * `pgpr data gen --dataset <sarcos|aimpeak|emslp> --train N --test N --out dir/`
 //! * `pgpr eval --train-csv ... --test-csv ...`
-//! * `pgpr serve --dataset ... [--batch N] [--listen host:port --workers N --max-delay-us D]`
-//!   — HTTP service when `--listen` is set, stdin line protocol otherwise
-//! * `pgpr loadtest [--addr host:port | self-contained flags]` — closed-loop
-//!   load generator, writes `BENCH_serve_latency.json`
+//! * `pgpr fit --dataset ... --save model.pgpr` — fit once, snapshot the
+//!   engine to a versioned artifact (`registry::artifact`)
+//! * `pgpr serve --dataset ... [--model name=path ...] [--batch N]
+//!   [--listen host:port --workers N --max-delay-us D]` — HTTP service when
+//!   `--listen` is set (multi-model registry when `--model` artifacts are
+//!   given), stdin line protocol otherwise
+//! * `pgpr loadtest [--addr host:port | self-contained flags]
+//!   [--model NAME ...] [--artifact name=path ...]` — closed-loop load
+//!   generator (keep-alive and close modes), writes `BENCH_serve_latency.json`
 //! * `pgpr bench-info` — print artifact/bucket status
 
 pub mod service;

@@ -58,13 +58,7 @@ impl ServeEngine {
     pub fn backend_name(&self) -> String {
         match self {
             ServeEngine::Centralized(_) => "centralized".to_string(),
-            ServeEngine::Parallel(m) => {
-                use crate::config::BackendKind;
-                match m.cluster_config().backend {
-                    BackendKind::Sim => "sim".to_string(),
-                    BackendKind::Threads { num_threads } => format!("threads:{num_threads}"),
-                }
-            }
+            ServeEngine::Parallel(m) => m.cluster_config().backend.selector(),
         }
     }
 }
@@ -94,9 +88,12 @@ pub struct Response {
     pub latency: f64,
 }
 
-/// Batching predictor over a fitted LMA engine.
+/// Batching predictor over a fitted LMA engine. The engine is held
+/// behind an `Arc` so the same fitted state can simultaneously live in
+/// the model registry, in this service (on the batcher thread) and in
+/// any in-flight eviction — all without copying the fitted matrices.
 pub struct PredictionService {
-    engine: ServeEngine,
+    engine: Arc<ServeEngine>,
     batch_size: usize,
     /// Deadline for partial batches: the oldest queued request is
     /// answered within this duration even if the batch never fills
@@ -123,6 +120,12 @@ impl PredictionService {
     /// Serve any engine (centralized, or parallel on a sim/thread
     /// cluster backend).
     pub fn with_engine(engine: ServeEngine, batch_size: usize) -> Result<PredictionService> {
+        Self::with_shared(Arc::new(engine), batch_size)
+    }
+
+    /// Serve an engine that is shared with other owners (the model
+    /// registry hands every batcher an `Arc` of its entry's engine).
+    pub fn with_shared(engine: Arc<ServeEngine>, batch_size: usize) -> Result<PredictionService> {
         if batch_size == 0 {
             return Err(PgprError::Config("batch_size must be ≥ 1".into()));
         }
@@ -159,6 +162,11 @@ impl PredictionService {
 
     pub fn engine(&self) -> &ServeEngine {
         &self.engine
+    }
+
+    /// Shared handle to the engine this service answers with.
+    pub fn shared_engine(&self) -> Arc<ServeEngine> {
+        Arc::clone(&self.engine)
     }
 
     pub fn dim(&self) -> usize {

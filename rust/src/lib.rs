@@ -18,11 +18,16 @@
 //!   SE-ARD Gram builder can additionally split output rows across a
 //!   worker pool (`util::par`, opt-in via `PGPR_NUM_THREADS`). The
 //!   fitted engine is served over the network by the std-only `server`
-//!   subsystem: an HTTP/1.1 front end (`POST /predict`, `GET /healthz`,
-//!   `GET /metrics`) whose micro-batching scheduler flushes on
-//!   `batch_size` **or** a `max_delay` deadline, with lock-cheap
-//!   p50/p95/p99 latency histograms and a built-in closed-loop load
-//!   generator (`pgpr serve --listen …`, `pgpr loadtest`).
+//!   subsystem: an HTTP/1.1 keep-alive front end (`POST /predict`,
+//!   `GET /healthz`, `GET /metrics`) whose micro-batching scheduler
+//!   flushes on `batch_size` **or** a `max_delay` deadline, with
+//!   lock-cheap p50/p95/p99 latency histograms and a built-in
+//!   closed-loop load generator (`pgpr serve --listen …`,
+//!   `pgpr loadtest`). Fitted engines snapshot to versioned,
+//!   checksummed on-disk artifacts (`registry::artifact`,
+//!   `pgpr fit --save`) and many models serve side by side from one
+//!   process through the multi-model `registry` (per-model batchers and
+//!   metrics, `GET/PUT/DELETE /models[/name]`).
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   covariance/summary hot spots, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled SE-ARD
@@ -59,6 +64,7 @@ pub mod data;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod registry;
 pub mod server;
 pub mod experiments;
 

@@ -30,6 +30,20 @@ impl CholFactor {
         &self.l
     }
 
+    /// Rebuild a factor from a stored lower-triangular matrix (artifact
+    /// deserialization). The caller vouches that `l` came from a prior
+    /// factorization; only the shape is checked here.
+    pub fn from_lower(l: Mat) -> Result<CholFactor> {
+        if !l.is_square() {
+            return Err(PgprError::Shape(format!(
+                "CholFactor::from_lower: non-square {}x{}",
+                l.rows(),
+                l.cols()
+            )));
+        }
+        Ok(CholFactor { l })
+    }
+
     pub fn n(&self) -> usize {
         self.l.rows()
     }

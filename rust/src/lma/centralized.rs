@@ -36,6 +36,12 @@ impl LmaRegressor {
         Ok(LmaRegressor { core, profiler })
     }
 
+    /// Rebuild a regressor around an already-fitted core (artifact
+    /// deserialization — the core carries everything `predict` reads).
+    pub fn from_core(core: LmaFitCore) -> LmaRegressor {
+        LmaRegressor { core, profiler: PhaseProfiler::new() }
+    }
+
     pub fn core(&self) -> &LmaFitCore {
         &self.core
     }

@@ -129,6 +129,22 @@ impl ParallelLma {
         })
     }
 
+    /// Rebuild a parallel engine around an already-fitted core (artifact
+    /// deserialization). The fit-time clocks are gone, so the makespan and
+    /// wall-clock accounts restart at zero; `predict` is unaffected —
+    /// everything Theorem 2 reads lives in the core.
+    pub fn from_parts(core: LmaFitCore, cluster_cfg: ClusterConfig) -> Result<ParallelLma> {
+        cluster_cfg.validate()?;
+        if core.cfg.num_blocks != cluster_cfg.total_cores() {
+            return Err(PgprError::Config(format!(
+                "parallel LMA: num_blocks {} != cluster cores {}",
+                core.cfg.num_blocks,
+                cluster_cfg.total_cores()
+            )));
+        }
+        Ok(ParallelLma { core, cluster_cfg, fit_makespan: 0.0, fit_wall_secs: 0.0 })
+    }
+
     pub fn core(&self) -> &LmaFitCore {
         &self.core
     }

@@ -1,0 +1,688 @@
+//! Versioned, checksummed on-disk snapshots of fitted serving engines.
+//!
+//! The deployable unit of the LMA spectrum is the *fitted* state — the
+//! per-block Definition-1 summaries (ẏ_m, Σ̇_S^m, C_m factors), the
+//! support-set basis, the banded residual factors and the kernel
+//! hyperparameters — not the raw training data. This module freezes that
+//! state ([`LmaFitCore`] plus the engine/backend selector) into a single
+//! self-describing file so `pgpr serve` can boot a model without ever
+//! touching the data it was fitted on, with **exact** round-trip:
+//! `save → load → predict` is bit-identical to the in-memory engine
+//! (every f64 is stored verbatim, and the few scalars that travel through
+//! the JSON manifest round-trip exactly via shortest-form printing).
+//!
+//! Layout (all integers little-endian):
+//!
+//! | offset      | size | field                                        |
+//! |-------------|------|----------------------------------------------|
+//! | 0           | 8    | magic `PGPRART\0`                            |
+//! | 8           | 4    | u32 format version (currently 1)             |
+//! | 12          | 4    | u32 reserved (0)                             |
+//! | 16          | 8    | u64 manifest length in bytes                 |
+//! | 24          | 8    | u64 payload length in f64 count              |
+//! | 32          | —    | manifest: UTF-8 JSON (`util::json`)          |
+//! | 32+manifest | —    | payload: packed little-endian f64            |
+//! | end−8       | 8    | u64 FNV-1a checksum of all preceding bytes   |
+//!
+//! The manifest names the engine kind (`centralized`/`parallel` + cluster
+//! topology), the hyperparameters, the `LmaConfig`, and a tensor table
+//! (name, rows, cols, f64 offset) indexing the payload. Truncation, bit
+//! flips, unknown versions and missing tensors all fail with a clean
+//! `PgprError::Artifact` — never a panic.
+
+use std::collections::BTreeMap;
+
+use crate::config::{ClusterConfig, LmaConfig};
+use crate::coordinator::service::ServeEngine;
+use crate::kernels::pjrt_cov::CovBackend;
+use crate::kernels::se_ard::SeArdHyper;
+use crate::linalg::banded::BlockPartition;
+use crate::linalg::chol::CholFactor;
+use crate::linalg::matrix::Mat;
+use crate::lma::parallel::ParallelLma;
+use crate::lma::partition::Partition;
+use crate::lma::residual::{FitTimings, LmaFitCore, SupportBasis};
+use crate::lma::LmaRegressor;
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+
+/// File magic: identifies a pgpr model artifact.
+pub const MAGIC: [u8; 8] = *b"PGPRART\0";
+/// Current snapshot format version.
+pub const FORMAT_VERSION: u32 = 1;
+/// Fixed-size header: magic + version + reserved + two u64 lengths.
+const HEADER_BYTES: usize = 32;
+/// Trailing checksum.
+const TRAILER_BYTES: usize = 8;
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn art_err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(PgprError::Artifact(msg.into()))
+}
+
+// ---------------------------------------------------------------------
+// Tensor table: named f64 blocks packed into one payload vector.
+// ---------------------------------------------------------------------
+
+struct TensorWriter {
+    payload: Vec<f64>,
+    entries: Vec<Json>,
+}
+
+impl TensorWriter {
+    fn new() -> TensorWriter {
+        TensorWriter { payload: Vec::new(), entries: Vec::new() }
+    }
+
+    fn push(&mut self, name: String, rows: usize, cols: usize, data: &[f64]) {
+        debug_assert_eq!(data.len(), rows * cols, "tensor `{name}` shape mismatch");
+        self.entries.push(Json::obj(vec![
+            ("name", Json::Str(name)),
+            ("rows", Json::Num(rows as f64)),
+            ("cols", Json::Num(cols as f64)),
+            ("offset", Json::Num(self.payload.len() as f64)),
+        ]));
+        self.payload.extend_from_slice(data);
+    }
+
+    fn push_mat(&mut self, name: String, m: &Mat) {
+        self.push(name, m.rows(), m.cols(), m.data());
+    }
+
+    fn push_vec(&mut self, name: String, v: &[f64]) {
+        self.push(name, 1, v.len(), v);
+    }
+
+    /// Index arrays travel as f64 (exact below 2^53 — far above any
+    /// realistic |D|).
+    fn push_indices(&mut self, name: String, v: &[usize]) {
+        let as_f: Vec<f64> = v.iter().map(|&i| i as f64).collect();
+        self.push_vec(name, &as_f);
+    }
+}
+
+struct TensorReader<'a> {
+    payload: &'a [f64],
+    /// name → (rows, cols, offset in f64 units).
+    index: BTreeMap<String, (usize, usize, usize)>,
+}
+
+impl<'a> TensorReader<'a> {
+    fn new(manifest: &Json, payload: &'a [f64]) -> Result<TensorReader<'a>> {
+        let entries = manifest
+            .req("tensors")?
+            .as_arr()
+            .ok_or_else(|| PgprError::Artifact("manifest `tensors` is not an array".into()))?;
+        let mut index = BTreeMap::new();
+        for e in entries {
+            let name = e
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| PgprError::Artifact("tensor name is not a string".into()))?
+                .to_string();
+            let rows = e.req("rows")?.as_usize();
+            let cols = e.req("cols")?.as_usize();
+            let offset = e.req("offset")?.as_usize();
+            let (rows, cols, offset) = match (rows, cols, offset) {
+                (Some(r), Some(c), Some(o)) => (r, c, o),
+                _ => return art_err(format!("tensor `{name}`: bad rows/cols/offset")),
+            };
+            let end = offset
+                .checked_add(rows.checked_mul(cols).ok_or_else(|| {
+                    PgprError::Artifact(format!("tensor `{name}`: shape overflow"))
+                })?)
+                .ok_or_else(|| PgprError::Artifact(format!("tensor `{name}`: offset overflow")))?;
+            if end > payload.len() {
+                return art_err(format!(
+                    "tensor `{name}` spans [{offset}, {end}) but payload has {} values",
+                    payload.len()
+                ));
+            }
+            if index.insert(name.clone(), (rows, cols, offset)).is_some() {
+                return art_err(format!("duplicate tensor `{name}`"));
+            }
+        }
+        Ok(TensorReader { payload, index })
+    }
+
+    fn slice(&self, name: &str) -> Result<(usize, usize, &'a [f64])> {
+        let &(rows, cols, offset) = self
+            .index
+            .get(name)
+            .ok_or_else(|| PgprError::Artifact(format!("missing tensor `{name}`")))?;
+        Ok((rows, cols, &self.payload[offset..offset + rows * cols]))
+    }
+
+    fn mat(&self, name: &str) -> Result<Mat> {
+        let (rows, cols, data) = self.slice(name)?;
+        Ok(Mat::from_vec(rows, cols, data.to_vec()))
+    }
+
+    fn vec(&self, name: &str) -> Result<Vec<f64>> {
+        let (_, _, data) = self.slice(name)?;
+        Ok(data.to_vec())
+    }
+
+    fn indices(&self, name: &str) -> Result<Vec<usize>> {
+        let (_, _, data) = self.slice(name)?;
+        let mut out = Vec::with_capacity(data.len());
+        for &v in data {
+            if !(v.is_finite() && v >= 0.0 && v.fract() == 0.0) {
+                return art_err(format!("tensor `{name}`: `{v}` is not a valid index"));
+            }
+            out.push(v as usize);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// LmaFitCore <-> tensors
+// ---------------------------------------------------------------------
+
+fn hyp_to_json(hyp: &SeArdHyper) -> Json {
+    Json::obj(vec![
+        ("sigma_s2", Json::Num(hyp.sigma_s2)),
+        ("sigma_n2", Json::Num(hyp.sigma_n2)),
+        ("mean", Json::Num(hyp.mean)),
+        ("lengthscales", Json::arr_f64(&hyp.lengthscales)),
+    ])
+}
+
+fn hyp_from_json(j: &Json) -> Result<SeArdHyper> {
+    let num = |field: &'static str| -> Result<f64> {
+        j.req(field)?
+            .as_f64()
+            .ok_or_else(|| PgprError::Artifact(format!("hyp `{field}` is not a number")))
+    };
+    let lengthscales = j
+        .req("lengthscales")?
+        .as_f64_vec()
+        .ok_or_else(|| PgprError::Artifact("hyp `lengthscales` is not numeric".into()))?;
+    Ok(SeArdHyper {
+        sigma_s2: num("sigma_s2")?,
+        sigma_n2: num("sigma_n2")?,
+        mean: num("mean")?,
+        lengthscales,
+    })
+}
+
+fn core_to_tensors(core: &LmaFitCore, w: &mut TensorWriter) {
+    let mm = core.m();
+    w.push_mat("partition.centers".into(), &core.partition.centers);
+    for (m, blk) in core.partition.blocks.iter().enumerate() {
+        w.push_indices(format!("partition.blocks.{m}"), blk);
+    }
+    w.push_indices("perm".into(), &core.perm);
+    let sizes: Vec<usize> = (0..mm).map(|m| core.part.size(m)).collect();
+    w.push_indices("part.sizes".into(), &sizes);
+    w.push_mat("x_scaled".into(), &core.x_scaled);
+    w.push_vec("y_cent".into(), &core.y_cent);
+    w.push_mat("basis.s_scaled".into(), &core.basis.s_scaled);
+    w.push_mat("basis.chol_ss".into(), core.basis.chol_ss.l());
+    w.push_mat("wt_d".into(), &core.wt_d);
+    for m in 0..mm {
+        w.push_mat(format!("r_diag.{m}"), &core.r_diag[m]);
+        for (j, blk) in core.r_band[m].iter().enumerate() {
+            w.push_mat(format!("r_band.{m}.{j}"), blk);
+        }
+        if let Some(bf) = &core.band_chol[m] {
+            w.push_mat(format!("band_chol.{m}"), bf.l());
+        }
+        if let Some(p) = &core.p[m] {
+            w.push_mat(format!("p.{m}"), p);
+        }
+        w.push_mat(format!("c_chol.{m}"), core.c_chol[m].l());
+        w.push_vec(format!("y_dot.{m}"), &core.y_dot[m]);
+        w.push_mat(format!("s_dot.{m}"), &core.s_dot[m]);
+    }
+}
+
+fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> {
+    let cfg = LmaConfig::from_json(manifest.req("lma")?)?;
+    let hyp = hyp_from_json(manifest.req("hyp")?)?;
+    hyp.validate()?;
+    let jitter = manifest
+        .req("jitter")?
+        .as_f64()
+        .ok_or_else(|| PgprError::Artifact("manifest `jitter` is not a number".into()))?;
+
+    let mm = cfg.num_blocks;
+    let b = cfg.markov_order;
+    // Bound M by the tensor table before any M-sized allocation: every
+    // block contributes several tensors, so a manifest claiming more
+    // blocks than tensors is corrupt — and a huge M would otherwise
+    // panic in Vec::with_capacity before cfg.validate runs.
+    if mm == 0 || mm > r.index.len() {
+        return art_err(format!(
+            "implausible num_blocks {mm} for a table of {} tensors",
+            r.index.len()
+        ));
+    }
+    let centers = r.mat("partition.centers")?;
+    let mut blocks = Vec::with_capacity(mm);
+    for m in 0..mm {
+        blocks.push(r.indices(&format!("partition.blocks.{m}"))?);
+    }
+    let partition = Partition { centers, blocks };
+    let perm = r.indices("perm")?;
+    let sizes = r.indices("part.sizes")?;
+    if sizes.len() != mm {
+        return art_err(format!("part.sizes has {} blocks, config says {mm}", sizes.len()));
+    }
+    let part = BlockPartition::from_sizes(&sizes)?;
+    let x_scaled = r.mat("x_scaled")?;
+    let y_cent = r.vec("y_cent")?;
+    let n = part.total();
+    if perm.len() != n || x_scaled.rows() != n || y_cent.len() != n {
+        return art_err(format!(
+            "inconsistent training size: part {n}, perm {}, x {}, y {}",
+            perm.len(),
+            x_scaled.rows(),
+            y_cent.len()
+        ));
+    }
+    cfg.validate(n)?;
+    if x_scaled.cols() != hyp.dim() {
+        return art_err(format!(
+            "x_scaled has d={}, hyperparameters have d={}",
+            x_scaled.cols(),
+            hyp.dim()
+        ));
+    }
+
+    let s_scaled = r.mat("basis.s_scaled")?;
+    if s_scaled.cols() != hyp.dim() {
+        return art_err(format!(
+            "basis.s_scaled has d={}, hyperparameters have d={}",
+            s_scaled.cols(),
+            hyp.dim()
+        ));
+    }
+    let chol_ss = CholFactor::from_lower(r.mat("basis.chol_ss")?)?;
+    if chol_ss.n() != s_scaled.rows() {
+        return art_err(format!(
+            "basis.chol_ss is {}x{} but the support set has {} rows",
+            chol_ss.n(),
+            chol_ss.n(),
+            s_scaled.rows()
+        ));
+    }
+    let basis = SupportBasis { s_scaled, chol_ss, sigma_s2: hyp.sigma_s2, jitter };
+    let wt_d = r.mat("wt_d")?;
+    if wt_d.rows() != n || wt_d.cols() != basis.size() {
+        return art_err(format!(
+            "wt_d is {}x{}, expected {n}x{}",
+            wt_d.rows(),
+            wt_d.cols(),
+            basis.size()
+        ));
+    }
+
+    let mut r_diag = Vec::with_capacity(mm);
+    let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
+    let mut band_chol = Vec::with_capacity(mm);
+    let mut p_all: Vec<Option<Mat>> = Vec::with_capacity(mm);
+    let mut c_chol = Vec::with_capacity(mm);
+    let mut y_dot = Vec::with_capacity(mm);
+    let mut s_dot = Vec::with_capacity(mm);
+    for m in 0..mm {
+        let nm = part.size(m);
+        let diag = r.mat(&format!("r_diag.{m}"))?;
+        if diag.rows() != nm || diag.cols() != nm {
+            return art_err(format!(
+                "r_diag.{m} is {}x{}, expected {nm}x{nm}",
+                diag.rows(),
+                diag.cols()
+            ));
+        }
+        r_diag.push(diag);
+        // Forward-band width is determined by (M, B): min(B, M−1−m).
+        let width = b.min(mm - 1 - m);
+        let mut row = Vec::with_capacity(width);
+        for j in 0..width {
+            let blk = r.mat(&format!("r_band.{m}.{j}"))?;
+            let nk = part.size(m + 1 + j);
+            if blk.rows() != nm || blk.cols() != nk {
+                return art_err(format!(
+                    "r_band.{m}.{j} is {}x{}, expected {nm}x{nk}",
+                    blk.rows(),
+                    blk.cols()
+                ));
+            }
+            row.push(blk);
+        }
+        r_band.push(row);
+        // Rows of D_m's forward band D_m^B (the propagator's column
+        // count and the band Gram's order).
+        let band_total: usize = (1..=width).map(|j| part.size(m + j)).sum();
+        if width > 0 {
+            let bf = CholFactor::from_lower(r.mat(&format!("band_chol.{m}"))?)?;
+            if bf.n() != band_total {
+                return art_err(format!(
+                    "band_chol.{m} has order {}, expected {band_total}",
+                    bf.n()
+                ));
+            }
+            band_chol.push(Some(bf));
+            let p_m = r.mat(&format!("p.{m}"))?;
+            if p_m.rows() != nm || p_m.cols() != band_total {
+                return art_err(format!(
+                    "p.{m} is {}x{}, expected {nm}x{band_total}",
+                    p_m.rows(),
+                    p_m.cols()
+                ));
+            }
+            p_all.push(Some(p_m));
+        } else {
+            band_chol.push(None);
+            p_all.push(None);
+        }
+        let cf = CholFactor::from_lower(r.mat(&format!("c_chol.{m}"))?)?;
+        if cf.n() != nm {
+            return art_err(format!("c_chol.{m} has order {}, expected {nm}", cf.n()));
+        }
+        c_chol.push(cf);
+        let yd = r.vec(&format!("y_dot.{m}"))?;
+        if yd.len() != nm {
+            return art_err(format!("y_dot.{m} has {} values, expected {nm}", yd.len()));
+        }
+        y_dot.push(yd);
+        let sd = r.mat(&format!("s_dot.{m}"))?;
+        if sd.rows() != nm || sd.cols() != basis.size() {
+            return art_err(format!(
+                "s_dot.{m} is {}x{}, expected {nm}x{}",
+                sd.rows(),
+                sd.cols(),
+                basis.size()
+            ));
+        }
+        s_dot.push(sd);
+    }
+    let p_t: Vec<Option<Mat>> = p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
+    // Fit-time clocks are not part of the snapshot; predict never reads
+    // them.
+    let timings = FitTimings { per_block_secs: vec![0.0; mm], ..FitTimings::default() };
+    let cov_backend = if cfg.use_pjrt { CovBackend::auto() } else { CovBackend::Native };
+    Ok(LmaFitCore {
+        hyp,
+        cfg,
+        partition,
+        perm,
+        part,
+        x_scaled,
+        y_cent,
+        basis,
+        wt_d,
+        r_diag,
+        r_band,
+        band_chol,
+        p: p_all,
+        p_t,
+        c_chol,
+        y_dot,
+        s_dot,
+        timings,
+        cov_backend,
+    })
+}
+
+// ---------------------------------------------------------------------
+// ServeEngine <-> bytes
+// ---------------------------------------------------------------------
+
+/// Serialize a fitted engine into the artifact byte format. Deterministic:
+/// the same engine always produces identical bytes.
+pub fn engine_to_bytes(engine: &ServeEngine) -> Result<Vec<u8>> {
+    let core = engine.core();
+    let mut w = TensorWriter::new();
+    core_to_tensors(core, &mut w);
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("format", Json::Str("pgpr-model-artifact".into())),
+        ("version", Json::Num(FORMAT_VERSION as f64)),
+        ("backend", Json::Str(engine.backend_name())),
+        ("hyp", hyp_to_json(&core.hyp)),
+        ("lma", core.cfg.to_json()),
+        ("jitter", Json::Num(core.basis.jitter)),
+        ("num_blocks", Json::Num(core.m() as f64)),
+        ("dim", Json::Num(core.hyp.dim() as f64)),
+        ("train_rows", Json::Num(core.part.total() as f64)),
+        ("support_rows", Json::Num(core.basis.size() as f64)),
+        ("tensors", Json::Arr(w.entries)),
+    ];
+    match engine {
+        ServeEngine::Centralized(_) => {
+            fields.push(("engine", Json::Str("centralized".into())));
+        }
+        ServeEngine::Parallel(m) => {
+            fields.push(("engine", Json::Str("parallel".into())));
+            fields.push(("cluster", m.cluster_config().to_json()));
+        }
+    }
+    let manifest = Json::obj(fields).to_string().into_bytes();
+
+    let mut out =
+        Vec::with_capacity(HEADER_BYTES + manifest.len() + 8 * w.payload.len() + TRAILER_BYTES);
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(w.payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&manifest);
+    for v in &w.payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = fnv1a(&out);
+    out.extend_from_slice(&sum.to_le_bytes());
+    Ok(out)
+}
+
+/// Deserialize an artifact produced by [`engine_to_bytes`]. Every failure
+/// mode (truncation, corruption, wrong magic/version, missing tensors)
+/// returns a `PgprError::Artifact` describing what went wrong.
+pub fn engine_from_bytes(bytes: &[u8]) -> Result<ServeEngine> {
+    if bytes.len() < HEADER_BYTES + TRAILER_BYTES {
+        return art_err(format!("artifact too short ({} bytes)", bytes.len()));
+    }
+    if bytes[..8] != MAGIC {
+        return art_err("bad magic: not a pgpr model artifact");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return art_err(format!(
+            "unsupported artifact format version {version} (this build reads {FORMAT_VERSION})"
+        ));
+    }
+    let manifest_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
+    let payload_len = u64::from_le_bytes(bytes[24..32].try_into().unwrap()) as usize;
+    let expected = HEADER_BYTES
+        .checked_add(manifest_len)
+        .and_then(|v| payload_len.checked_mul(8).and_then(|p| v.checked_add(p)))
+        .and_then(|v| v.checked_add(TRAILER_BYTES));
+    match expected {
+        Some(e) if e == bytes.len() => {}
+        _ => {
+            return art_err(format!(
+                "artifact length {} does not match header (manifest {manifest_len} B, payload {payload_len} f64)",
+                bytes.len()
+            ))
+        }
+    }
+    let body_end = bytes.len() - TRAILER_BYTES;
+    let stored_sum = u64::from_le_bytes(bytes[body_end..].try_into().unwrap());
+    let actual_sum = fnv1a(&bytes[..body_end]);
+    if stored_sum != actual_sum {
+        return art_err(format!(
+            "checksum mismatch: stored {stored_sum:#018x}, computed {actual_sum:#018x} (corrupted artifact)"
+        ));
+    }
+
+    let manifest_bytes = &bytes[HEADER_BYTES..HEADER_BYTES + manifest_len];
+    let manifest_text = std::str::from_utf8(manifest_bytes)
+        .map_err(|_| PgprError::Artifact("manifest is not UTF-8".into()))?;
+    let manifest = Json::parse(manifest_text)
+        .map_err(|e| PgprError::Artifact(format!("manifest parse: {e}")))?;
+    if manifest.get("format").and_then(|v| v.as_str()) != Some("pgpr-model-artifact") {
+        return art_err("manifest `format` is not `pgpr-model-artifact`");
+    }
+
+    let payload_bytes = &bytes[HEADER_BYTES + manifest_len..body_end];
+    let mut payload = Vec::with_capacity(payload_len);
+    for chunk in payload_bytes.chunks_exact(8) {
+        payload.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    let reader = TensorReader::new(&manifest, &payload)?;
+    let core = core_from_parts(&manifest, &reader)?;
+
+    match manifest.req("engine")?.as_str() {
+        Some("centralized") => Ok(ServeEngine::Centralized(LmaRegressor::from_core(core))),
+        Some("parallel") => {
+            let cluster = ClusterConfig::from_json(manifest.req("cluster")?)?;
+            Ok(ServeEngine::Parallel(ParallelLma::from_parts(core, cluster)?))
+        }
+        other => art_err(format!("unknown engine kind {other:?}")),
+    }
+}
+
+/// Save a fitted engine to `path` (parent directories are not created).
+pub fn save_engine(engine: &ServeEngine, path: &str) -> Result<()> {
+    let bytes = engine_to_bytes(engine)?;
+    std::fs::write(path, &bytes).map_err(|e| PgprError::Io(format!("write {path}: {e}")))?;
+    Ok(())
+}
+
+/// Load a fitted engine from `path`.
+pub fn load_engine(path: &str) -> Result<ServeEngine> {
+    let bytes =
+        std::fs::read(path).map_err(|e| PgprError::Io(format!("read {path}: {e}")))?;
+    engine_from_bytes(&bytes)
+        .map_err(|e| PgprError::Artifact(format!("{path}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{BackendKind, PartitionStrategy};
+    use crate::util::rng::Pcg64;
+
+    fn fitted_engine(seed: u64, support: usize, b: usize) -> ServeEngine {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+        let y: Vec<f64> = (0..120).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: b,
+            support_size: support,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap())
+    }
+
+    #[test]
+    fn fnv1a_known_values() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn bytes_roundtrip_bit_identical_predictions() {
+        let engine = fitted_engine(41, 20, 1);
+        let bytes = engine_to_bytes(&engine).unwrap();
+        let loaded = engine_from_bytes(&bytes).unwrap();
+        let q = Mat::col_vec(&[-2.0, 0.25, 3.1]);
+        let a = engine.predict(&q).unwrap();
+        let b = loaded.predict(&q).unwrap();
+        for i in 0..3 {
+            assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean {i}");
+            assert_eq!(a.var[i].to_bits(), b.var[i].to_bits(), "var {i}");
+        }
+        // Serialization is deterministic: re-encoding the loaded engine
+        // reproduces the exact bytes.
+        assert_eq!(engine_to_bytes(&loaded).unwrap(), bytes);
+    }
+
+    #[test]
+    fn parallel_engine_roundtrips_with_cluster_config() {
+        let mut rng = Pcg64::new(43);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(100, -4.0, 4.0));
+        let y: Vec<f64> = (0..100).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 4,
+            markov_order: 1,
+            support_size: 16,
+            seed: 2,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        let cc = ClusterConfig::gigabit(1, 4)
+            .with_backend(BackendKind::Threads { num_threads: 2 });
+        let engine =
+            ServeEngine::Parallel(ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap());
+        let loaded = engine_from_bytes(&engine_to_bytes(&engine).unwrap()).unwrap();
+        assert_eq!(loaded.backend_name(), "threads:2");
+        let q = Mat::col_vec(&[0.4, -1.3]);
+        let a = engine.predict(&q).unwrap();
+        let b = loaded.predict(&q).unwrap();
+        assert_eq!(a.mean[0].to_bits(), b.mean[0].to_bits());
+        assert_eq!(a.var[1].to_bits(), b.var[1].to_bits());
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let engine = fitted_engine(44, 16, 0);
+        let bytes = engine_to_bytes(&engine).unwrap();
+        // Wrong magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(engine_from_bytes(&bad), Err(PgprError::Artifact(_))));
+        // Unsupported version.
+        let mut bad = bytes.clone();
+        bad[8] = 99;
+        assert!(matches!(engine_from_bytes(&bad), Err(PgprError::Artifact(_))));
+        // Flipped payload bit → checksum mismatch.
+        let mut bad = bytes.clone();
+        let mid = bytes.len() / 2;
+        bad[mid] ^= 0x01;
+        assert!(matches!(engine_from_bytes(&bad), Err(PgprError::Artifact(_))));
+        // Truncation (both mid-payload and missing trailer).
+        assert!(matches!(
+            engine_from_bytes(&bytes[..bytes.len() - 3]),
+            Err(PgprError::Artifact(_))
+        ));
+        assert!(matches!(engine_from_bytes(&bytes[..20]), Err(PgprError::Artifact(_))));
+        assert!(matches!(engine_from_bytes(&[]), Err(PgprError::Artifact(_))));
+        // The pristine bytes still load.
+        assert!(engine_from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let engine = fitted_engine(45, 24, 2);
+        let dir = std::env::temp_dir().join("pgpr_artifact_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.pgpr");
+        let path = path.to_str().unwrap();
+        save_engine(&engine, path).unwrap();
+        let loaded = load_engine(path).unwrap();
+        let q = Mat::col_vec(&[1.5]);
+        assert_eq!(
+            engine.predict(&q).unwrap().mean[0].to_bits(),
+            loaded.predict(&q).unwrap().mean[0].to_bits()
+        );
+        assert!(matches!(load_engine("/nonexistent/nope.pgpr"), Err(PgprError::Io(_))));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,26 @@
+//! Model artifact persistence and the multi-model registry.
+//!
+//! Two pieces turn the serving process from "one fitted model" into a
+//! model-serving node:
+//!
+//! * [`artifact`] — a versioned, checksummed on-disk snapshot of a fitted
+//!   [`ServeEngine`](crate::coordinator::service::ServeEngine) (per-block
+//!   LMA summaries, support-set state, banded residual factors, kernel
+//!   hyperparameters) with exact `save → load → predict` round-trip, so
+//!   serving is decoupled from fitting (`pgpr fit --save` /
+//!   `pgpr serve --model name=path`).
+//! * [`registry`] — an `RwLock`-based name → engine table where every
+//!   model owns a dedicated micro-batcher (one batch never mixes models)
+//!   and private metrics, with load/evict/list over HTTP
+//!   (`GET/PUT/DELETE /models[/name]`), per-model prediction counters and
+//!   an LRU-ish capacity bound.
+
+pub mod artifact;
+// The subsystem and its core module intentionally share a name (the
+// issue-specified layout: `registry/registry.rs` holds the name→engine
+// table; `registry/artifact.rs` holds the snapshot format).
+#[allow(clippy::module_inception)]
+pub mod registry;
+
+pub use artifact::{engine_from_bytes, engine_to_bytes, load_engine, save_engine};
+pub use registry::{ModelEntry, ModelInfo, ModelRegistry, RegistryError};

@@ -1,0 +1,515 @@
+//! Multi-model registry: name → fitted engine, each behind its own
+//! micro-batcher.
+//!
+//! One serving process realistically wants many fitted LMA variants live
+//! at once — per dataset and per (support-set size, Markov order B)
+//! operating point. The registry maps model names to [`ServeEngine`]s and
+//! gives every model a **dedicated** batcher thread (so one micro-batch
+//! never mixes rows from two models) plus its own [`ServeMetrics`]
+//! histograms for per-model latency/occupancy on `/metrics`.
+//!
+//! Concurrency model: the name table is an `RwLock<HashMap>` whose
+//! entries are `Arc`s. Lookups (`get`/`entry_for`) take the read lock
+//! only to clone an `Arc`; a prediction in flight keeps its entry — and
+//! with it the engine and batcher — alive even if the model is evicted
+//! mid-request, so an evict can never make a request panic or be
+//! answered by a different model. Loads take the write lock, and an
+//! over-capacity load either evicts the least-recently-used non-default
+//! model (`RegistryOptions::lru_evict`) or fails with
+//! [`RegistryError::Capacity`] (HTTP 507).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::{RegistryOptions, ServeOptions};
+use crate::coordinator::service::{PredictionService, ServeEngine};
+use crate::server::batcher::{self, BatcherHandle};
+use crate::server::metrics::ServeMetrics;
+use crate::util::json::Json;
+
+/// Why a registry operation failed — mapped to HTTP statuses by the
+/// server (400 / 404 / 409 / 507 / 500).
+#[derive(Clone, Debug)]
+pub enum RegistryError {
+    /// No model under that name → 404.
+    NotFound(String),
+    /// A model with that name is already loaded → 409.
+    Duplicate(String),
+    /// The default model cannot be evicted → 409.
+    Protected(String),
+    /// The registry is full and nothing is evictable → 507.
+    Capacity { limit: usize },
+    /// The requested model name is malformed (client input) → 400.
+    InvalidName(String),
+    /// Batcher spawn / service construction failed → 500.
+    Internal(String),
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::NotFound(n) => write!(f, "unknown model `{n}`"),
+            RegistryError::Duplicate(n) => write!(f, "model `{n}` is already loaded"),
+            RegistryError::Protected(n) => {
+                write!(f, "model `{n}` is the default model and cannot be evicted")
+            }
+            RegistryError::Capacity { limit } => {
+                write!(f, "registry is at capacity ({limit} models) and nothing is evictable")
+            }
+            RegistryError::InvalidName(n) => {
+                write!(f, "model name `{n}` must be non-empty [A-Za-z0-9._-]")
+            }
+            RegistryError::Internal(m) => write!(f, "registry internal error: {m}"),
+        }
+    }
+}
+
+/// One resident model: the shared engine, its dedicated batcher handle
+/// and its private metrics.
+pub struct ModelEntry {
+    name: String,
+    engine: Arc<ServeEngine>,
+    handle: BatcherHandle,
+    metrics: Arc<ServeMetrics>,
+    /// `/predict` requests routed to this model.
+    hits: AtomicU64,
+    /// Logical-clock stamp of the last lookup (drives LRU eviction).
+    last_used: AtomicU64,
+    /// Load order (monotone across the registry's lifetime).
+    seq: u64,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn engine(&self) -> &Arc<ServeEngine> {
+        &self.engine
+    }
+
+    /// Submit handle of this model's dedicated batcher.
+    pub fn handle(&self) -> &BatcherHandle {
+        &self.handle
+    }
+
+    pub fn metrics(&self) -> &Arc<ServeMetrics> {
+        &self.metrics
+    }
+
+    /// Count one routed `/predict` request.
+    pub fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time description of a resident model (for `GET /models` and
+/// the per-model `/metrics` section).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub backend: String,
+    pub dim: usize,
+    pub train_rows: usize,
+    pub support_size: usize,
+    pub markov_order: usize,
+    pub is_default: bool,
+    /// `/predict` requests routed here.
+    pub requests: u64,
+    /// Prediction rows answered.
+    pub rows: u64,
+    pub seq: u64,
+}
+
+impl ModelInfo {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            ("dim", Json::Num(self.dim as f64)),
+            ("train_rows", Json::Num(self.train_rows as f64)),
+            ("support_size", Json::Num(self.support_size as f64)),
+            ("markov_order", Json::Num(self.markov_order as f64)),
+            ("default", Json::Bool(self.is_default)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("loaded_seq", Json::Num(self.seq as f64)),
+        ])
+    }
+}
+
+/// Batching parameters every per-model batcher is spawned with (taken
+/// from the server's [`ServeOptions`]).
+#[derive(Clone, Copy, Debug)]
+struct BatchParams {
+    batch_size: usize,
+    max_delay_us: u64,
+    queue_capacity: usize,
+}
+
+/// The registry: name → resident model.
+pub struct ModelRegistry {
+    models: RwLock<HashMap<String, Arc<ModelEntry>>>,
+    /// The model `/predict` uses when the request names none. Protected
+    /// from LRU eviction and `DELETE`.
+    default: RwLock<Option<String>>,
+    /// Joins for every batcher thread ever spawned; drained at shutdown
+    /// (threads exit once their entry's last `Arc` drops).
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    clock: AtomicU64,
+    next_seq: AtomicU64,
+    opts: RegistryOptions,
+    batch: BatchParams,
+}
+
+impl ModelRegistry {
+    /// An empty registry whose future batchers use `serve`'s batching
+    /// parameters.
+    pub fn new(opts: RegistryOptions, serve: &ServeOptions) -> ModelRegistry {
+        ModelRegistry {
+            models: RwLock::new(HashMap::new()),
+            default: RwLock::new(None),
+            joins: Mutex::new(Vec::new()),
+            clock: AtomicU64::new(0),
+            next_seq: AtomicU64::new(0),
+            opts,
+            batch: BatchParams {
+                batch_size: serve.batch_size,
+                max_delay_us: serve.max_delay_us,
+                queue_capacity: serve.queue_capacity,
+            },
+        }
+    }
+
+    /// Number of resident models.
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The name `/predict` falls back to.
+    pub fn default_name(&self) -> Option<String> {
+        self.default.read().expect("registry default lock").clone()
+    }
+
+    /// Mark `name` as the default model (it must be resident). The
+    /// models lock is held across the membership check and the default
+    /// swap so a concurrent `evict` cannot interleave between them
+    /// (lock order everywhere: models, then default).
+    pub fn set_default(&self, name: &str) -> Result<(), RegistryError> {
+        let map = self.models.read().expect("registry lock");
+        if !map.contains_key(name) {
+            return Err(RegistryError::NotFound(name.to_string()));
+        }
+        *self.default.write().expect("registry default lock") = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Load a fitted engine under `name`, spawning its dedicated batcher.
+    /// The first load becomes the default model.
+    pub fn load(&self, name: &str, engine: Arc<ServeEngine>) -> Result<(), RegistryError> {
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || "-_.".contains(c))
+        {
+            return Err(RegistryError::InvalidName(name.to_string()));
+        }
+        let svc = PredictionService::with_shared(Arc::clone(&engine), self.batch.batch_size)
+            .map_err(|e| RegistryError::Internal(e.to_string()))?
+            .with_max_delay(Duration::from_micros(self.batch.max_delay_us));
+        let metrics = svc.metrics();
+
+        let mut map = self.models.write().expect("registry lock");
+        if map.contains_key(name) {
+            return Err(RegistryError::Duplicate(name.to_string()));
+        }
+        if map.len() >= self.opts.max_models {
+            if !self.opts.lru_evict {
+                return Err(RegistryError::Capacity { limit: self.opts.max_models });
+            }
+            let default = self.default_name();
+            let victim = map
+                .iter()
+                .filter(|(k, _)| Some(k.as_str()) != default.as_deref())
+                .min_by_key(|(_, e)| e.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(v) => {
+                    map.remove(&v);
+                }
+                None => return Err(RegistryError::Capacity { limit: self.opts.max_models }),
+            }
+        }
+        // Spawn the batcher only after the capacity/duplicate checks
+        // passed, so a rejected load leaves no orphan thread behind.
+        let (handle, join) = batcher::spawn(svc, self.batch.queue_capacity)
+            .map_err(|e| RegistryError::Internal(e.to_string()))?;
+        {
+            // Reap batchers of evicted models that have already exited,
+            // so load/evict churn doesn't grow the join list forever.
+            let mut joins = self.joins.lock().expect("registry joins lock");
+            let mut live = Vec::with_capacity(joins.len() + 1);
+            for j in joins.drain(..) {
+                if j.is_finished() {
+                    let _ = j.join();
+                } else {
+                    live.push(j);
+                }
+            }
+            live.push(join);
+            *joins = live;
+        }
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            engine,
+            handle,
+            metrics,
+            hits: AtomicU64::new(0),
+            last_used: AtomicU64::new(self.tick()),
+            seq,
+        });
+        map.insert(name.to_string(), entry);
+        drop(map);
+        let mut default = self.default.write().expect("registry default lock");
+        if default.is_none() {
+            *default = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Look up a model, bumping its LRU stamp.
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        let map = self.models.read().expect("registry lock");
+        let entry = map.get(name).cloned()?;
+        entry.last_used.store(self.tick(), Ordering::Relaxed);
+        Some(entry)
+    }
+
+    /// Resolve a request's model: an explicit name, else the default.
+    pub fn entry_for(&self, name: Option<&str>) -> Result<Arc<ModelEntry>, RegistryError> {
+        match name {
+            Some(n) => self.get(n).ok_or_else(|| RegistryError::NotFound(n.to_string())),
+            None => {
+                let default = self
+                    .default_name()
+                    .ok_or_else(|| RegistryError::NotFound("(default)".to_string()))?;
+                self.get(&default).ok_or(RegistryError::NotFound(default))
+            }
+        }
+    }
+
+    /// Remove a model. Its batcher thread exits once the last in-flight
+    /// request's `Arc` drops; requests already submitted are still
+    /// answered by the evicted engine. The default check happens under
+    /// the models write lock so a racing `set_default` cannot leave the
+    /// default pointing at an evicted model.
+    pub fn evict(&self, name: &str) -> Result<(), RegistryError> {
+        let mut map = self.models.write().expect("registry lock");
+        if self.default_name().as_deref() == Some(name) {
+            return Err(RegistryError::Protected(name.to_string()));
+        }
+        match map.remove(name) {
+            Some(_) => Ok(()),
+            None => Err(RegistryError::NotFound(name.to_string())),
+        }
+    }
+
+    /// Stable-ordered (by load sequence) descriptions of every resident
+    /// model.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let default = self.default_name();
+        let map = self.models.read().expect("registry lock");
+        let mut infos: Vec<ModelInfo> = map
+            .values()
+            .map(|e| {
+                let core = e.engine.core();
+                ModelInfo {
+                    name: e.name.clone(),
+                    backend: e.engine.backend_name(),
+                    dim: core.hyp.dim(),
+                    train_rows: core.part.total(),
+                    support_size: core.basis.size(),
+                    markov_order: core.b(),
+                    is_default: default.as_deref() == Some(e.name.as_str()),
+                    requests: e.hits(),
+                    rows: e.metrics.responses.load(Ordering::Relaxed),
+                    seq: e.seq,
+                }
+            })
+            .collect();
+        infos.sort_by_key(|i| i.seq);
+        infos
+    }
+
+    /// Snapshot of (name, metrics) pairs for the per-model `/metrics`
+    /// section, in load order.
+    pub fn metrics_by_model(&self) -> Vec<(String, Arc<ServeMetrics>)> {
+        let map = self.models.read().expect("registry lock");
+        let mut out: Vec<(u64, String, Arc<ServeMetrics>)> = map
+            .values()
+            .map(|e| (e.seq, e.name.clone(), Arc::clone(&e.metrics)))
+            .collect();
+        out.sort_by_key(|(seq, _, _)| *seq);
+        out.into_iter().map(|(_, n, m)| (n, m)).collect()
+    }
+
+    /// Drop every model and join every batcher thread ever spawned.
+    /// Callers must first ensure no connection worker still holds entry
+    /// `Arc`s (the HTTP server joins its workers before calling this).
+    pub fn shutdown(&self) {
+        self.models.write().expect("registry lock").clear();
+        *self.default.write().expect("registry default lock") = None;
+        let joins: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.joins.lock().expect("registry joins lock"));
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::linalg::matrix::Mat;
+    use crate::lma::LmaRegressor;
+    use crate::util::rng::Pcg64;
+
+    fn engine(seed: u64) -> Arc<ServeEngine> {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(90, -4.0, 4.0));
+        let y: Vec<f64> = (0..90).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: 3,
+            markov_order: 1,
+            support_size: 12,
+            seed: 1,
+            partition: PartitionStrategy::KMeans { iters: 4 },
+            use_pjrt: false,
+        };
+        Arc::new(ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap()))
+    }
+
+    fn registry(max_models: usize, lru: bool) -> ModelRegistry {
+        let serve = ServeOptions { batch_size: 4, max_delay_us: 500, ..Default::default() };
+        ModelRegistry::new(RegistryOptions { max_models, lru_evict: lru }, &serve)
+    }
+
+    #[test]
+    fn load_get_evict_lifecycle() {
+        let reg = registry(4, true);
+        assert!(reg.is_empty());
+        reg.load("alpha", engine(1)).unwrap();
+        reg.load("beta", engine(2)).unwrap();
+        assert_eq!(reg.len(), 2);
+        // First load became the default.
+        assert_eq!(reg.default_name().as_deref(), Some("alpha"));
+        assert!(reg.get("alpha").is_some());
+        assert!(reg.get("gamma").is_none());
+        // Default fallback resolves.
+        assert_eq!(reg.entry_for(None).unwrap().name(), "alpha");
+        assert_eq!(reg.entry_for(Some("beta")).unwrap().name(), "beta");
+        assert!(matches!(
+            reg.entry_for(Some("gamma")),
+            Err(RegistryError::NotFound(_))
+        ));
+        // Duplicate load rejected.
+        assert!(matches!(reg.load("beta", engine(3)), Err(RegistryError::Duplicate(_))));
+        // Default is protected; others evict fine.
+        assert!(matches!(reg.evict("alpha"), Err(RegistryError::Protected(_))));
+        reg.evict("beta").unwrap();
+        assert!(matches!(reg.evict("beta"), Err(RegistryError::NotFound(_))));
+        assert_eq!(reg.len(), 1);
+        reg.shutdown();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn capacity_evicts_lru_but_never_default() {
+        let reg = registry(2, true);
+        reg.load("a", engine(1)).unwrap();
+        reg.load("b", engine(2)).unwrap();
+        // Touch b so a would be LRU — but a is the default, so b goes.
+        reg.get("b");
+        reg.load("c", engine(3)).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get("a").is_some(), "default survived");
+        assert!(reg.get("b").is_none(), "LRU non-default evicted");
+        assert!(reg.get("c").is_some());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn capacity_without_lru_is_a_hard_error() {
+        let reg = registry(1, false);
+        reg.load("only", engine(1)).unwrap();
+        assert!(matches!(
+            reg.load("more", engine(2)),
+            Err(RegistryError::Capacity { limit: 1 })
+        ));
+        // With LRU eviction but only the default resident, still stuck.
+        let reg2 = registry(1, true);
+        reg2.load("only", engine(3)).unwrap();
+        assert!(matches!(
+            reg2.load("more", engine(4)),
+            Err(RegistryError::Capacity { limit: 1 })
+        ));
+        reg.shutdown();
+        reg2.shutdown();
+    }
+
+    #[test]
+    fn bad_names_rejected() {
+        let reg = registry(4, true);
+        assert!(matches!(reg.load("", engine(1)), Err(RegistryError::InvalidName(_))));
+        assert!(matches!(reg.load("sp ace", engine(2)), Err(RegistryError::InvalidName(_))));
+        assert!(reg.load("ok-name_1.2", engine(3)).is_ok());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn predictions_flow_through_entry_batchers() {
+        let reg = registry(4, true);
+        let e = engine(9);
+        reg.load("m", Arc::clone(&e)).unwrap();
+        let entry = reg.get("m").unwrap();
+        entry.record_hit();
+        let rep = entry.handle().submit(vec![vec![0.5]]).unwrap();
+        let direct = e.predict(&Mat::col_vec(&[0.5])).unwrap();
+        assert_eq!(rep.mean[0].to_bits(), direct.mean[0].to_bits());
+        let info = reg
+            .list()
+            .into_iter()
+            .find(|i| i.name == "m")
+            .expect("listed");
+        assert_eq!(info.requests, 1);
+        assert_eq!(info.rows, 1);
+        assert!(info.is_default);
+        assert_eq!(info.dim, 1);
+        // An entry held across eviction still answers (and with the same
+        // engine it was loaded with).
+        reg.load("other", engine(10)).unwrap();
+        reg.set_default("other").unwrap();
+        reg.evict("m").unwrap();
+        let rep2 = entry.handle().submit(vec![vec![-1.0]]).unwrap();
+        let direct2 = e.predict(&Mat::col_vec(&[-1.0])).unwrap();
+        assert_eq!(rep2.mean[0].to_bits(), direct2.mean[0].to_bits());
+        drop(entry);
+        reg.shutdown();
+    }
+}

@@ -1,23 +1,44 @@
 //! Minimal HTTP/1.1 server over `std::net::TcpListener` (no deps).
 //!
 //! One acceptor thread feeds accepted connections into a bounded channel
-//! drained by a pool of connection workers; each worker parses one
-//! request per connection (`Connection: close` semantics — keep-alive is
-//! a ROADMAP follow-on), routes it and writes the response:
+//! drained by a pool of connection workers. Workers speak real HTTP/1.1
+//! **keep-alive**: a connection serves requests in a loop until the
+//! client sends `Connection: close` (or is HTTP/1.0 without
+//! `keep-alive`), the idle timeout expires between requests, or the
+//! per-connection request cap is reached — removing the per-request TCP
+//! setup cost the load generator used to measure.
+//!
+//! Requests route against a [`ModelRegistry`] — one process serves many
+//! fitted models, each with its own micro-batcher (a batch never mixes
+//! models) and its own metrics:
 //!
 //! * `POST /predict` — JSON body `{"x": [..]}` (one row) or
-//!   `{"rows": [[..], ..]}` (many); answered by the micro-batcher with
-//!   `{"mean": [..], "var": [..], "latency_s": ..}`. Bad input → 400,
-//!   full queue → 503, engine failure → 500.
-//! * `GET /healthz` — engine/dimension liveness probe.
-//! * `GET /metrics` — Prometheus text exposition of the shared
-//!   [`ServeMetrics`] histograms (p50/p95/p99 latency, occupancy, depth).
+//!   `{"rows": [[..], ..]}` (many), with an optional `"model": "name"`
+//!   field (default model when absent); answered with
+//!   `{"model": .., "mean": [..], "var": [..], "latency_s": ..}`.
+//!   Bad input → 400, unknown model → 404, full queue → 503, engine
+//!   failure → 500.
+//! * `GET /models` — list resident models with per-model counters.
+//! * `GET /models/<name>` — one model's description (404 unknown).
+//! * `PUT /models/<name>` — body `{"path": "model.pgpr"}` loads a saved
+//!   artifact (`registry::artifact`) into the registry: 200 on success,
+//!   400 bad artifact, 409 duplicate, 507 capacity.
+//! * `DELETE /models/<name>` — evict (404 unknown, 409 default model).
+//! * `GET /healthz` — liveness + default-engine description + model list.
+//! * `GET /metrics` — Prometheus text: the boot-default model's full
+//!   histogram section (back-compat) plus `pgpr_models_resident` and a
+//!   `{model="…"}`-labeled section per resident model.
 //!
-//! [`Server::start`] boots batcher + acceptor + workers and returns a
-//! handle; [`Server::shutdown`] stops accepting, drains the workers and
-//! the batcher, and returns the metrics for the shutdown summary.
+//! Every response — including every error — carries `Content-Type`, an
+//! exact byte-accurate `Content-Length` and an explicit `Connection`
+//! header, so clients can reuse connections safely.
+//!
+//! [`Server::start`] wraps a single engine as the `default` model;
+//! [`Server::start_with_registry`] boots over a pre-loaded registry.
+//! [`Server::shutdown`] stops accepting, drains the workers, shuts the
+//! registry's batchers down and returns the primary metrics handle.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
@@ -25,9 +46,11 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use crate::config::ServeOptions;
-use crate::coordinator::service::{PredictionService, ServeEngine};
-use crate::server::batcher::{self, BatcherHandle, SubmitError};
+use crate::config::{RegistryOptions, ServeOptions};
+use crate::coordinator::service::ServeEngine;
+use crate::registry::artifact;
+use crate::registry::registry::{ModelRegistry, RegistryError};
+use crate::server::batcher::SubmitError;
 use crate::server::metrics::ServeMetrics;
 use crate::util::error::{PgprError, Result};
 use crate::util::json::Json;
@@ -35,36 +58,66 @@ use crate::util::json::Json;
 const MAX_HEADER_BYTES: usize = 64 * 1024;
 const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
 const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Socket-read poll slice: blocked workers re-check the shutdown flag
+/// (and their idle/I-O deadlines) this often, so joining a worker that
+/// guards an idle keep-alive connection costs at most one slice.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+/// Name `Server::start` registers its single engine under.
+pub const DEFAULT_MODEL: &str = "default";
 
 /// State shared by every connection worker.
 struct Shared {
-    handle: BatcherHandle,
+    registry: Arc<ModelRegistry>,
+    /// Server-wide counters (the boot-default model's metrics object):
+    /// HTTP-boundary errors are counted here.
     metrics: Arc<ServeMetrics>,
-    dim: usize,
-    backend: String,
+    keep_alive: bool,
+    idle_timeout: Duration,
+    max_conn_requests: usize,
+    /// Set by [`Server::shutdown`]: a worker blocked on an idle
+    /// connection notices within one [`READ_POLL`] slice and closes; a
+    /// worker serving a request finishes it, announces
+    /// `Connection: close` and closes — so worker join latency is
+    /// bounded by one in-flight request plus one poll slice, not by how
+    /// long a client keeps its connection alive.
+    stop: Arc<AtomicBool>,
 }
 
-/// A running HTTP serving stack (acceptor + workers + batcher).
+/// A running HTTP serving stack (acceptor + workers + registry batchers).
 pub struct Server {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: JoinHandle<()>,
     workers: Vec<JoinHandle<()>>,
-    batcher: JoinHandle<()>,
+    registry: Arc<ModelRegistry>,
     metrics: Arc<ServeMetrics>,
 }
 
 impl Server {
-    /// Fit-free boot: wraps an already-fitted engine. Binds `opts.listen`
-    /// (use port 0 for an ephemeral port; see [`Server::addr`]).
+    /// Fit-free boot over a single engine, registered as the `default`
+    /// model of a fresh registry. Binds `opts.listen` (use port 0 for an
+    /// ephemeral port; see [`Server::addr`]).
     pub fn start(engine: ServeEngine, opts: &ServeOptions) -> Result<Server> {
+        let registry = Arc::new(ModelRegistry::new(RegistryOptions::default(), opts));
+        registry
+            .load(DEFAULT_MODEL, Arc::new(engine))
+            .map_err(|e| PgprError::Config(e.to_string()))?;
+        Self::start_with_registry(registry, opts)
+    }
+
+    /// Boot over a pre-loaded registry (≥ 1 model; the registry's default
+    /// model answers `/predict` requests that name none).
+    pub fn start_with_registry(
+        registry: Arc<ModelRegistry>,
+        opts: &ServeOptions,
+    ) -> Result<Server> {
         opts.validate()?;
-        let backend = engine.backend_name();
-        let svc = PredictionService::with_engine(engine, opts.batch_size)?
-            .with_max_delay(Duration::from_micros(opts.max_delay_us));
-        let metrics = svc.metrics();
-        let dim = svc.dim();
-        let (handle, batcher_join) = batcher::spawn(svc, opts.queue_capacity)?;
+        let primary = registry.entry_for(None).map_err(|e| {
+            PgprError::Config(format!("cannot serve an empty registry: {e}"))
+        })?;
+        let metrics = Arc::clone(primary.metrics());
+        drop(primary);
 
         let listener = TcpListener::bind(opts.listen.as_str())
             .map_err(|e| PgprError::Io(format!("bind {}: {e}", opts.listen)))?;
@@ -72,8 +125,14 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(opts.workers * 2 + 8);
         let conn_rx = Arc::new(Mutex::new(conn_rx));
-        let shared =
-            Arc::new(Shared { handle, metrics: Arc::clone(&metrics), dim, backend });
+        let shared = Arc::new(Shared {
+            registry: Arc::clone(&registry),
+            metrics: Arc::clone(&metrics),
+            keep_alive: opts.keep_alive,
+            idle_timeout: Duration::from_millis(opts.idle_timeout_ms.max(1)),
+            max_conn_requests: opts.max_conn_requests.max(1),
+            stop: Arc::clone(&stop),
+        });
 
         let mut workers = Vec::with_capacity(opts.workers);
         for i in 0..opts.workers {
@@ -85,8 +144,6 @@ impl Server {
                 .map_err(|e| PgprError::Io(format!("spawn http worker: {e}")))?;
             workers.push(w);
         }
-        // `shared` (and with it the BatcherHandle) is now owned solely by
-        // the workers: when they exit, the batcher sees disconnect.
         drop(shared);
 
         let stop_flag = Arc::clone(&stop);
@@ -112,7 +169,7 @@ impl Server {
             })
             .map_err(|e| PgprError::Io(format!("spawn acceptor: {e}")))?;
 
-        Ok(Server { addr, stop, acceptor, workers, batcher: batcher_join, metrics })
+        Ok(Server { addr, stop, acceptor, workers, registry, metrics })
     }
 
     /// The actually-bound address (resolves `:0` ephemeral ports).
@@ -124,10 +181,17 @@ impl Server {
         Arc::clone(&self.metrics)
     }
 
+    /// The registry this server routes against (load/evict from the
+    /// owning process without going through HTTP).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
     /// Graceful shutdown: stop accepting, let in-flight requests finish,
-    /// join every thread. Returns the metrics for the shutdown summary.
+    /// join every worker, then drain the registry's batcher threads.
+    /// Returns the primary metrics for the shutdown summary.
     pub fn shutdown(self) -> Arc<ServeMetrics> {
-        let Server { addr, stop, acceptor, workers, batcher, metrics } = self;
+        let Server { addr, stop, acceptor, workers, registry, metrics } = self;
         stop.store(true, Ordering::SeqCst);
         // Unblock the acceptor's accept() with a throwaway connection.
         // A wildcard bind address (0.0.0.0 / ::) is not connectable on
@@ -143,7 +207,7 @@ impl Server {
         for w in workers {
             let _ = w.join();
         }
-        let _ = batcher.join();
+        registry.shutdown();
         metrics
     }
 }
@@ -164,78 +228,190 @@ fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
 }
 
 fn handle_connection(mut stream: TcpStream, shared: &Shared) {
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_nodelay(true);
-    let (status, content_type, body) = match read_request(&mut stream) {
-        Ok(req) => route(&req, shared),
-        Err(msg) => (400, "application/json", error_body(&msg)),
-    };
-    if status >= 400 {
-        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    // Short read timeout: reads poll in READ_POLL slices so the worker
+    // can observe the stop flag and its own deadlines while blocked.
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    // Bytes read past the previous request's body (pipelined requests).
+    let mut leftover: Vec<u8> = Vec::new();
+    let mut served = 0usize;
+    loop {
+        // First request gets the full I/O timeout to arrive; between
+        // keep-alive requests the shorter idle timeout applies.
+        let idle = if served == 0 { IO_TIMEOUT } else { shared.idle_timeout };
+        let req = match read_request(&mut stream, &mut leftover, idle, &shared.stop) {
+            ReadOutcome::Request(r) => r,
+            // Clean end of a keep-alive conversation.
+            ReadOutcome::Eof | ReadOutcome::IdleTimeout => break,
+            ReadOutcome::Malformed(msg) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let _ = write_response(
+                    &mut stream,
+                    400,
+                    "application/json",
+                    error_body(&msg).as_bytes(),
+                    true,
+                );
+                break;
+            }
+        };
+        served += 1;
+        let keep = shared.keep_alive
+            && served < shared.max_conn_requests
+            && req.wants_keep_alive()
+            && !shared.stop.load(Ordering::SeqCst);
+        let (status, content_type, body) = route(&req, shared);
+        if status >= 400 {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        if write_response(&mut stream, status, content_type, body.as_bytes(), !keep).is_err() {
+            break;
+        }
+        if !keep {
+            break;
+        }
     }
-    let _ = write_response(&mut stream, status, content_type, &body);
     let _ = stream.shutdown(Shutdown::Both);
 }
 
 struct HttpRequest {
     method: String,
     path: String,
+    /// `HTTP/1.1`, `HTTP/1.0`, … (third request-line token).
+    version: String,
+    /// Raw `Connection` header value, lowercased ("" when absent).
+    connection: String,
     body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// HTTP/1.1 defaults to keep-alive unless the client says `close`;
+    /// HTTP/1.0 defaults to close unless it says `keep-alive`.
+    fn wants_keep_alive(&self) -> bool {
+        if self.connection.split(',').any(|t| t.trim() == "close") {
+            return false;
+        }
+        if self.version.eq_ignore_ascii_case("HTTP/1.0") {
+            return self.connection.split(',').any(|t| t.trim() == "keep-alive");
+        }
+        true
+    }
+}
+
+/// One attempt to read a request off a (possibly reused) connection.
+enum ReadOutcome {
+    Request(HttpRequest),
+    /// Peer closed cleanly between requests.
+    Eof,
+    /// Nothing arrived within the read timeout between requests.
+    IdleTimeout,
+    /// Bytes arrived but don't form a valid request (or the peer died
+    /// mid-request) → answer 400 and close.
+    Malformed(String),
 }
 
 fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
     hay.windows(needle.len()).position(|w| w == needle)
 }
 
-fn read_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, String> {
-    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+}
+
+/// Read one request. `idle` bounds how long we wait for its *first*
+/// byte; once bytes are flowing the full [`IO_TIMEOUT`] applies (so a
+/// slow upload behaves the same on a fresh and a reused connection).
+/// Reads poll in [`READ_POLL`] slices and bail out when `stop` is set.
+fn read_request(
+    stream: &mut TcpStream,
+    leftover: &mut Vec<u8>,
+    idle: Duration,
+    stop: &AtomicBool,
+) -> ReadOutcome {
+    let started = std::time::Instant::now();
+    let mut buf: Vec<u8> = std::mem::take(leftover);
     let mut tmp = [0u8; 4096];
     let header_end = loop {
         if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
             break pos;
         }
         if buf.len() > MAX_HEADER_BYTES {
-            return Err("request headers too large".into());
+            return ReadOutcome::Malformed("request headers too large".into());
         }
-        let n = stream.read(&mut tmp).map_err(|e| format!("read: {e}"))?;
-        if n == 0 {
-            return Err("connection closed mid-request".into());
+        match stream.read(&mut tmp) {
+            Ok(0) if buf.is_empty() => return ReadOutcome::Eof,
+            Ok(0) => return ReadOutcome::Malformed("connection closed mid-request".into()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if is_timeout(&e) => {
+                if buf.is_empty() {
+                    // Waiting for a request to start: shutdown and the
+                    // idle deadline both end the conversation cleanly.
+                    if stop.load(Ordering::SeqCst) || started.elapsed() >= idle {
+                        return ReadOutcome::IdleTimeout;
+                    }
+                } else if stop.load(Ordering::SeqCst) {
+                    // Shutting down: don't wait out a trickling client.
+                    return ReadOutcome::Malformed("server shutting down".into());
+                } else if started.elapsed() >= IO_TIMEOUT {
+                    return ReadOutcome::Malformed("timed out mid-request".into());
+                }
+            }
+            Err(e) => return ReadOutcome::Malformed(format!("read: {e}")),
         }
-        buf.extend_from_slice(&tmp[..n]);
     };
-    let head = std::str::from_utf8(&buf[..header_end])
-        .map_err(|_| "request head is not utf-8".to_string())?;
+    let head = match std::str::from_utf8(&buf[..header_end]) {
+        Ok(h) => h,
+        Err(_) => return ReadOutcome::Malformed("request head is not utf-8".into()),
+    };
     let mut lines = head.split("\r\n");
     let request_line = lines.next().unwrap_or("");
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_ascii_uppercase();
     let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1").to_string();
     if method.is_empty() || path.is_empty() {
-        return Err(format!("malformed request line `{request_line}`"));
+        return ReadOutcome::Malformed(format!("malformed request line `{request_line}`"));
     }
     let mut content_length = 0usize;
+    let mut connection = String::new();
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length =
-                    value.trim().parse().map_err(|_| "bad Content-Length".to_string())?;
+            let name = name.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = match value.trim().parse() {
+                    Ok(v) => v,
+                    Err(_) => return ReadOutcome::Malformed("bad Content-Length".into()),
+                };
+            } else if name.eq_ignore_ascii_case("connection") {
+                connection = value.trim().to_ascii_lowercase();
             }
         }
     }
     if content_length > MAX_BODY_BYTES {
-        return Err("request body too large".into());
+        return ReadOutcome::Malformed("request body too large".into());
     }
-    let mut body = buf.split_off(header_end + 4);
-    while body.len() < content_length {
-        let n = stream.read(&mut tmp).map_err(|e| format!("read body: {e}"))?;
-        if n == 0 {
-            return Err("connection closed mid-body".into());
+    let total = header_end + 4 + content_length;
+    while buf.len() < total {
+        match stream.read(&mut tmp) {
+            Ok(0) => return ReadOutcome::Malformed("connection closed mid-body".into()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e) if is_timeout(&e) => {
+                if stop.load(Ordering::SeqCst) {
+                    return ReadOutcome::Malformed("server shutting down".into());
+                }
+                if started.elapsed() >= IO_TIMEOUT {
+                    return ReadOutcome::Malformed("timed out mid-body".into());
+                }
+            }
+            Err(e) => return ReadOutcome::Malformed(format!("read body: {e}")),
         }
-        body.extend_from_slice(&tmp[..n]);
     }
-    body.truncate(content_length);
-    Ok(HttpRequest { method, path, body })
+    // Anything past this request's body belongs to the next (pipelined)
+    // request on the same connection.
+    *leftover = buf.split_off(total);
+    let body = buf.split_off(header_end + 4);
+    ReadOutcome::Request(HttpRequest { method, path, version, connection, body })
 }
 
 fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
@@ -243,22 +419,148 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
     let path = req.path.split('?').next().unwrap_or("");
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
+            let list = shared.registry.list();
+            let names: Vec<Json> =
+                list.iter().map(|i| Json::Str(i.name.clone())).collect();
+            let default = shared.registry.default_name().unwrap_or_default();
+            let (backend, dim) = list
+                .iter()
+                .find(|i| i.name == default)
+                .map(|i| (i.backend.clone(), i.dim))
+                .unwrap_or_default();
             let j = Json::obj(vec![
                 ("status", Json::Str("ok".into())),
                 ("model", Json::Str("lma".into())),
-                ("backend", Json::Str(shared.backend.clone())),
-                ("dim", Json::Num(shared.dim as f64)),
+                ("backend", Json::Str(backend)),
+                ("dim", Json::Num(dim as f64)),
+                ("default", Json::Str(default)),
+                ("models", Json::Arr(names)),
             ]);
             (200, "application/json", j.to_string())
         }
-        ("GET", "/metrics") => {
-            (200, "text/plain; charset=utf-8", shared.metrics.render_prometheus())
-        }
+        ("GET", "/metrics") => (200, "text/plain; charset=utf-8", metrics_text(shared)),
         ("POST", "/predict") => handle_predict(&req.body, shared),
+        ("GET", "/models") => {
+            let infos: Vec<Json> = shared.registry.list().iter().map(|i| i.to_json()).collect();
+            let default = shared.registry.default_name().unwrap_or_default();
+            let j = Json::obj(vec![
+                ("models", Json::Arr(infos)),
+                ("default", Json::Str(default)),
+            ]);
+            (200, "application/json", j.to_string())
+        }
+        (method, p) if p.starts_with("/models/") => {
+            let name = &p["/models/".len()..];
+            if name.is_empty() || name.contains('/') {
+                return (
+                    404,
+                    "application/json",
+                    error_body(&format!("no route for {} {}", req.method, req.path)),
+                );
+            }
+            handle_model_admin(method, name, &req.body, shared)
+        }
         _ => (
             404,
             "application/json",
             error_body(&format!("no route for {} {}", req.method, req.path)),
+        ),
+    }
+}
+
+/// The multi-model `/metrics` page: the primary (boot-default) model's
+/// full unlabeled section, the resident-model gauge, then a
+/// `{model="…"}`-labeled section per model.
+fn metrics_text(shared: &Shared) -> String {
+    let mut s = shared.metrics.render_prometheus();
+    let by_model = shared.registry.metrics_by_model();
+    s.push_str(&format!("pgpr_models_resident {}\n", by_model.len()));
+    for info in shared.registry.list() {
+        s.push_str(&format!(
+            "pgpr_model_requests_total{{model=\"{}\"}} {}\n",
+            info.name, info.requests
+        ));
+    }
+    for (name, m) in by_model {
+        s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
+    }
+    s
+}
+
+fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {
+    let status = match e {
+        RegistryError::InvalidName(_) => 400,
+        RegistryError::NotFound(_) => 404,
+        RegistryError::Duplicate(_) | RegistryError::Protected(_) => 409,
+        RegistryError::Capacity { .. } => 507,
+        RegistryError::Internal(_) => 500,
+    };
+    (status, "application/json", error_body(&e.to_string()))
+}
+
+fn handle_model_admin(
+    method: &str,
+    name: &str,
+    body: &[u8],
+    shared: &Shared,
+) -> (u16, &'static str, String) {
+    match method {
+        "GET" => match shared.registry.list().into_iter().find(|i| i.name == name) {
+            Some(info) => (200, "application/json", info.to_json().to_string()),
+            None => registry_error_response(&RegistryError::NotFound(name.to_string())),
+        },
+        "PUT" => {
+            let text = match std::str::from_utf8(body) {
+                Ok(t) => t,
+                Err(_) => return (400, "application/json", error_body("body is not utf-8")),
+            };
+            let path = match Json::parse(text).and_then(|j| {
+                j.req("path").map(|p| p.as_str().map(str::to_string))
+            }) {
+                Ok(Some(p)) => p,
+                Ok(None) => {
+                    return (400, "application/json", error_body("`path` must be a string"))
+                }
+                Err(e) => {
+                    return (
+                        400,
+                        "application/json",
+                        error_body(&format!("body must be {{\"path\": …}}: {e}")),
+                    )
+                }
+            };
+            let engine = match artifact::load_engine(&path) {
+                Ok(e) => e,
+                Err(e) => {
+                    return (
+                        400,
+                        "application/json",
+                        error_body(&format!("cannot load artifact: {e}")),
+                    )
+                }
+            };
+            match shared.registry.load(name, Arc::new(engine)) {
+                Ok(()) => {
+                    let j = Json::obj(vec![
+                        ("loaded", Json::Str(name.to_string())),
+                        ("path", Json::Str(path)),
+                    ]);
+                    (200, "application/json", j.to_string())
+                }
+                Err(e) => registry_error_response(&e),
+            }
+        }
+        "DELETE" => match shared.registry.evict(name) {
+            Ok(()) => {
+                let j = Json::obj(vec![("evicted", Json::Str(name.to_string()))]);
+                (200, "application/json", j.to_string())
+            }
+            Err(e) => registry_error_response(&e),
+        },
+        _ => (
+            404,
+            "application/json",
+            error_body(&format!("no route for {method} /models/{name}")),
         ),
     }
 }
@@ -272,13 +574,30 @@ fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
         Ok(j) => j,
         Err(e) => return (400, "application/json", error_body(&format!("bad JSON: {e}"))),
     };
+    let model = match json.get("model") {
+        None => None,
+        Some(m) => match m.as_str() {
+            Some(s) => Some(s),
+            None => {
+                return (400, "application/json", error_body("`model` must be a string"))
+            }
+        },
+    };
+    let entry = match shared.registry.entry_for(model) {
+        Ok(e) => e,
+        Err(e) => return registry_error_response(&e),
+    };
     let rows = match parse_rows(&json) {
         Ok(r) => r,
         Err(msg) => return (400, "application/json", error_body(&msg)),
     };
-    match shared.handle.submit(rows) {
+    match entry.handle().submit(rows) {
         Ok(rep) => {
+            // Count the hit only once the model actually answered, so
+            // per-model counters reflect served traffic, not 400s/503s.
+            entry.record_hit();
             let j = Json::obj(vec![
+                ("model", Json::Str(entry.name().to_string())),
                 ("mean", Json::arr_f64(&rep.mean)),
                 ("var", Json::arr_f64(&rep.var)),
                 ("latency_s", Json::Num(rep.latency_s)),
@@ -323,25 +642,35 @@ fn error_body(msg: &str) -> String {
     Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
 }
 
+fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        503 => "Service Unavailable",
+        507 => "Insufficient Storage",
+        _ => "Internal Server Error",
+    }
+}
+
+/// Write one response. Always emits `Content-Type`, a byte-exact
+/// `Content-Length` and an explicit `Connection` header.
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
-    body: &str,
+    body: &[u8],
+    close: bool,
 ) -> std::io::Result<()> {
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        503 => "Service Unavailable",
-        _ => "Internal Server Error",
-    };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_reason(status),
+        body.len(),
+        if close { "close" } else { "keep-alive" },
     );
     stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
+    stream.write_all(body)?;
     stream.flush()
 }
 
@@ -373,5 +702,31 @@ mod tests {
         let b = error_body("boom \"quoted\"");
         let j = Json::parse(&b).unwrap();
         assert_eq!(j.req("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn keep_alive_negotiation() {
+        let req = |version: &str, connection: &str| HttpRequest {
+            method: "GET".into(),
+            path: "/healthz".into(),
+            version: version.into(),
+            connection: connection.into(),
+            body: Vec::new(),
+        };
+        assert!(req("HTTP/1.1", "").wants_keep_alive());
+        assert!(req("HTTP/1.1", "keep-alive").wants_keep_alive());
+        assert!(!req("HTTP/1.1", "close").wants_keep_alive());
+        assert!(!req("HTTP/1.0", "").wants_keep_alive());
+        assert!(req("HTTP/1.0", "keep-alive").wants_keep_alive());
+        assert!(!req("HTTP/1.0", "close").wants_keep_alive());
+        // Token lists parse.
+        assert!(!req("HTTP/1.1", "upgrade, close").wants_keep_alive());
+    }
+
+    #[test]
+    fn status_reasons_cover_registry_codes() {
+        assert_eq!(status_reason(409), "Conflict");
+        assert_eq!(status_reason(507), "Insufficient Storage");
+        assert_eq!(status_reason(500), "Internal Server Error");
     }
 }

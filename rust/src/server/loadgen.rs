@@ -1,13 +1,19 @@
 //! Closed-loop load generator for the HTTP serving path.
 //!
-//! `concurrency` client threads each loop: draw a random query row, open
-//! a connection, `POST /predict`, wait for the answer, record the
-//! end-to-end latency — the classic closed-loop model, so offered load
-//! adapts to service speed and the measured quantiles are honest (no
-//! coordinated-omission correction needed). Results aggregate into the
-//! same lock-cheap [`Histogram`] the server uses and are emitted as the
-//! `BENCH_serve_latency.json` perf record by `pgpr loadtest` /
-//! `bench_serve_latency`.
+//! `concurrency` client threads each loop: draw a random query row,
+//! `POST /predict`, wait for the answer, record the end-to-end latency —
+//! the classic closed-loop model, so offered load adapts to service
+//! speed and the measured quantiles are honest (no coordinated-omission
+//! correction needed). With `keep_alive` each thread holds one
+//! persistent HTTP/1.1 connection ([`HttpConn`]) and reuses it for every
+//! request, exercising the server's keep-alive path and removing the
+//! per-request TCP setup cost; without it every request opens a fresh
+//! `Connection: close` exchange — `pgpr loadtest` reports both modes.
+//! With `models` the traffic round-robins named registry models, so one
+//! run interleaves requests across several fitted variants. Results
+//! aggregate into the same lock-cheap [`Histogram`] the server uses and
+//! are emitted as the `BENCH_serve_latency.json` perf record by
+//! `pgpr loadtest` / `bench_serve_latency`.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -31,9 +37,19 @@ pub struct LoadConfig {
     pub requests: usize,
     /// Rows per request (1 = single-point queries).
     pub rows_per_request: usize,
-    /// Input dimension (see [`fetch_dim`]).
+    /// Input dimension (see [`fetch_dim`]) — used when `models` is empty.
     pub dim: usize,
     pub seed: u64,
+    /// Reuse one connection per client thread (HTTP/1.1 keep-alive)
+    /// instead of a fresh `Connection: close` exchange per request.
+    /// Each persistent connection pins one server connection worker, so
+    /// the target should run with `workers ≥ concurrency` for honest
+    /// quantiles (self-contained `pgpr loadtest` arranges this).
+    pub keep_alive: bool,
+    /// Named registry models to round-robin across (empty = the server's
+    /// default model). Per-model input dimensions are fetched from
+    /// `GET /models/<name>`.
+    pub models: Vec<String>,
 }
 
 /// Aggregated client-side results.
@@ -42,6 +58,8 @@ pub struct LoadReport {
     pub requests: usize,
     pub ok: usize,
     pub errors: usize,
+    /// Whether connections were reused (HTTP/1.1 keep-alive).
+    pub keep_alive: bool,
     pub elapsed_s: f64,
     /// Answered requests per wall-clock second.
     pub throughput_rps: f64,
@@ -60,6 +78,7 @@ impl LoadReport {
             ("requests", Json::Num(self.requests as f64)),
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
+            ("keep_alive", Json::Bool(self.keep_alive)),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("rows_per_sec", Json::Num(self.rows_per_sec)),
@@ -79,7 +98,8 @@ impl LoadReport {
     /// Human-readable one-liner.
     pub fn render(&self) -> String {
         format!(
-            "loadgen: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}",
+            "loadgen[{}]: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}",
+            if self.keep_alive { "keep-alive" } else { "close" },
             self.ok,
             self.requests,
             self.errors,
@@ -96,36 +116,120 @@ impl LoadReport {
 
 /// One blocking HTTP/1.1 exchange (`Connection: close`). Returns
 /// `(status, body)`. Shared by the load generator, `pgpr loadtest` and
-/// the integration tests.
+/// the integration tests. Responses are framed by their exact
+/// `Content-Length` (which the pgpr server always sends).
 pub fn http_request(
     addr: &str,
     method: &str,
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, String)> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| PgprError::Io(format!("connect {addr}: {e}")))?;
-    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
-    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
-    let _ = stream.set_nodelay(true);
-    let body = body.unwrap_or("");
-    let req = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(req.as_bytes())?;
-    let mut raw = Vec::new();
-    stream.read_to_end(&mut raw)?;
-    let text = String::from_utf8_lossy(&raw).into_owned();
-    let header_end = text
-        .find("\r\n\r\n")
-        .ok_or_else(|| PgprError::Data(format!("malformed HTTP response from {addr}")))?;
-    let status: u16 = text
-        .split_whitespace()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .ok_or_else(|| PgprError::Data("missing HTTP status code".into()))?;
-    Ok((status, text[header_end + 4..].to_string()))
+    let mut conn = HttpConn::connect(addr)?;
+    let (status, body, _closes) = conn.request_with(method, path, body, true)?;
+    Ok((status, body))
+}
+
+/// A persistent HTTP/1.1 client connection: requests are written with
+/// `Connection: keep-alive` and responses are framed by their exact
+/// `Content-Length`, so the same TCP stream carries many exchanges.
+pub struct HttpConn {
+    stream: TcpStream,
+    /// Bytes read past the previous response (server-side pipelining
+    /// never produces these, but framing stays robust anyway).
+    leftover: Vec<u8>,
+}
+
+impl HttpConn {
+    pub fn connect(addr: &str) -> Result<HttpConn> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| PgprError::Io(format!("connect {addr}: {e}")))?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(HttpConn { stream, leftover: Vec::new() })
+    }
+
+    /// One request/response exchange on the persistent connection.
+    /// Returns `(status, body, server_closes)`; when `server_closes` is
+    /// true the peer announced `Connection: close` and this connection
+    /// must not be reused.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String, bool)> {
+        self.request_with(method, path, body, false)
+    }
+
+    /// Like [`request`](Self::request) but announcing `Connection:
+    /// close` when `close` is set (the one-shot [`http_request`] path —
+    /// both paths share this single response parser).
+    pub fn request_with(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        close: bool,
+    ) -> Result<(u16, String, bool)> {
+        let body = body.unwrap_or("");
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: pgpr\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+            body.len(),
+            if close { "close" } else { "keep-alive" },
+        );
+        self.stream.write_all(req.as_bytes())?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<(u16, String, bool)> {
+        let mut buf = std::mem::take(&mut self.leftover);
+        let mut tmp = [0u8; 4096];
+        let header_end = loop {
+            if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break pos;
+            }
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                return Err(PgprError::Io("connection closed mid-response".into()));
+            }
+            buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| PgprError::Data("missing HTTP status code".into()))?;
+        let mut content_length = 0usize;
+        let mut closes = false;
+        for line in head.split("\r\n").skip(1) {
+            if let Some((name, value)) = line.split_once(':') {
+                let name = name.trim();
+                if name.eq_ignore_ascii_case("content-length") {
+                    content_length = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| PgprError::Data("bad Content-Length".into()))?;
+                } else if name.eq_ignore_ascii_case("connection")
+                    && value.trim().eq_ignore_ascii_case("close")
+                {
+                    closes = true;
+                }
+            }
+        }
+        let total = header_end + 4 + content_length;
+        while buf.len() < total {
+            let n = self.stream.read(&mut tmp)?;
+            if n == 0 {
+                return Err(PgprError::Io("connection closed mid-body".into()));
+            }
+            buf.extend_from_slice(&tmp[..n]);
+        }
+        self.leftover = buf.split_off(total);
+        let body = buf.split_off(header_end + 4);
+        Ok((status, String::from_utf8_lossy(&body).into_owned(), closes))
+    }
 }
 
 /// Ask a running server for its model input dimension via `/healthz`.
@@ -140,23 +244,58 @@ pub fn fetch_dim(addr: &str) -> Result<usize> {
         .ok_or_else(|| PgprError::Data("healthz `dim` is not an integer".into()))
 }
 
-fn request_body(rng: &mut Pcg64, dim: usize, rows: usize) -> String {
+/// Ask a running server for a named registry model's input dimension via
+/// `GET /models/<name>`.
+pub fn fetch_model_dim(addr: &str, model: &str) -> Result<usize> {
+    let (status, body) = http_request(addr, "GET", &format!("/models/{model}"), None)?;
+    if status != 200 {
+        return Err(PgprError::Data(format!(
+            "{addr}/models/{model} returned {status}: {body}"
+        )));
+    }
+    Json::parse(&body)?
+        .req("dim")?
+        .as_usize()
+        .ok_or_else(|| PgprError::Data("model `dim` is not an integer".into()))
+}
+
+fn request_body(rng: &mut Pcg64, dim: usize, rows: usize, model: Option<&str>) -> String {
+    let mut fields: Vec<(&str, Json)> = Vec::with_capacity(2);
+    if let Some(m) = model {
+        fields.push(("model", Json::Str(m.to_string())));
+    }
     if rows == 1 {
-        Json::obj(vec![("x", Json::arr_f64(&rng.uniform_vec(dim, -3.0, 3.0)))]).to_string()
+        fields.push(("x", Json::arr_f64(&rng.uniform_vec(dim, -3.0, 3.0))));
     } else {
         let rs: Vec<Json> =
             (0..rows).map(|_| Json::arr_f64(&rng.uniform_vec(dim, -3.0, 3.0))).collect();
-        Json::obj(vec![("rows", Json::Arr(rs))]).to_string()
+        fields.push(("rows", Json::Arr(rs)));
     }
+    Json::obj(fields).to_string()
 }
 
 /// Drive the server to completion of `cfg.requests` requests.
 pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
-    if cfg.concurrency == 0 || cfg.requests == 0 || cfg.rows_per_request == 0 || cfg.dim == 0 {
+    if cfg.concurrency == 0 || cfg.requests == 0 || cfg.rows_per_request == 0 {
         return Err(PgprError::Config(
-            "loadgen: concurrency, requests, rows and dim must all be ≥ 1".into(),
+            "loadgen: concurrency, requests and rows must all be ≥ 1".into(),
         ));
     }
+    // Resolve the input dimension per target: named models each carry
+    // their own dim; anonymous traffic uses the default model's.
+    let targets: Vec<(Option<String>, usize)> = if cfg.models.is_empty() {
+        if cfg.dim == 0 {
+            return Err(PgprError::Config("loadgen: dim must be ≥ 1".into()));
+        }
+        vec![(None, cfg.dim)]
+    } else {
+        let mut t = Vec::with_capacity(cfg.models.len());
+        for m in &cfg.models {
+            t.push((Some(m.clone()), fetch_model_dim(&cfg.addr, m)?));
+        }
+        t
+    };
+    let targets = &targets;
     let latency = Histogram::new();
     let next = AtomicUsize::new(0);
     let ok = AtomicUsize::new(0);
@@ -170,15 +309,37 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
             let errors = &errors;
             s.spawn(move || {
                 let mut rng = Pcg64::new(cfg.seed).split(w as u64 + 1);
+                // One persistent connection per thread in keep-alive
+                // mode, re-established on error or server-side close.
+                let mut conn: Option<HttpConn> = None;
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= cfg.requests {
                         break;
                     }
-                    let body = request_body(&mut rng, cfg.dim, cfg.rows_per_request);
+                    let (model, dim) = &targets[i % targets.len()];
+                    let body =
+                        request_body(&mut rng, *dim, cfg.rows_per_request, model.as_deref());
                     let t = Instant::now();
-                    match http_request(&cfg.addr, "POST", "/predict", Some(&body)) {
-                        Ok((200, _)) => {
+                    let status = if cfg.keep_alive {
+                        let c = match conn.take() {
+                            Some(c) => Ok(c),
+                            None => HttpConn::connect(&cfg.addr),
+                        };
+                        c.and_then(|mut c| {
+                            let (status, _, closes) =
+                                c.request("POST", "/predict", Some(&body))?;
+                            if !closes {
+                                conn = Some(c);
+                            }
+                            Ok(status)
+                        })
+                    } else {
+                        http_request(&cfg.addr, "POST", "/predict", Some(&body))
+                            .map(|(status, _)| status)
+                    };
+                    match status {
+                        Ok(200) => {
                             latency.record(t.elapsed().as_micros() as u64);
                             ok.fetch_add(1, Ordering::Relaxed);
                         }
@@ -197,6 +358,7 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         requests: cfg.requests,
         ok: okc,
         errors: errors.load(Ordering::Relaxed),
+        keep_alive: cfg.keep_alive,
         elapsed_s,
         throughput_rps: if elapsed_s > 0.0 { okc as f64 / elapsed_s } else { 0.0 },
         rows_per_sec: if elapsed_s > 0.0 {
@@ -222,6 +384,7 @@ mod tests {
             requests: 10,
             ok: 9,
             errors: 1,
+            keep_alive: true,
             elapsed_s: 2.0,
             throughput_rps: 4.5,
             rows_per_sec: 4.5,
@@ -233,18 +396,22 @@ mod tests {
         };
         let j = r.to_json();
         assert_eq!(j.req("ok").unwrap().as_usize(), Some(9));
+        assert_eq!(j.req("keep_alive").unwrap().as_bool(), Some(true));
         let lat = j.req("latency_s").unwrap();
         assert_eq!(lat.req("p99").unwrap().as_f64(), Some(0.03));
         assert!(r.render().contains("9/10 ok"));
+        assert!(r.render().contains("keep-alive"));
     }
 
     #[test]
     fn body_shapes() {
         let mut rng = Pcg64::new(1);
-        let one = Json::parse(&request_body(&mut rng, 3, 1)).unwrap();
+        let one = Json::parse(&request_body(&mut rng, 3, 1, None)).unwrap();
         assert_eq!(one.req("x").unwrap().as_arr().unwrap().len(), 3);
-        let many = Json::parse(&request_body(&mut rng, 2, 4)).unwrap();
+        assert!(one.get("model").is_none());
+        let many = Json::parse(&request_body(&mut rng, 2, 4, Some("alpha"))).unwrap();
         assert_eq!(many.req("rows").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(many.req("model").unwrap().as_str(), Some("alpha"));
     }
 
     #[test]
@@ -256,23 +423,30 @@ mod tests {
             rows_per_request: 1,
             dim: 1,
             seed: 0,
+            keep_alive: false,
+            models: Vec::new(),
         };
         assert!(run(&cfg).is_err());
     }
 
     #[test]
     fn unreachable_server_counts_errors() {
-        // Port 1 on localhost: connection refused, all requests error.
-        let cfg = LoadConfig {
-            addr: "127.0.0.1:1".into(),
-            concurrency: 2,
-            requests: 4,
-            rows_per_request: 1,
-            dim: 1,
-            seed: 3,
-        };
-        let r = run(&cfg).unwrap();
-        assert_eq!(r.ok, 0);
-        assert_eq!(r.errors, 4);
+        // Port 1 on localhost: connection refused, all requests error —
+        // in both connection modes.
+        for keep_alive in [false, true] {
+            let cfg = LoadConfig {
+                addr: "127.0.0.1:1".into(),
+                concurrency: 2,
+                requests: 4,
+                rows_per_request: 1,
+                dim: 1,
+                seed: 3,
+                keep_alive,
+                models: Vec::new(),
+            };
+            let r = run(&cfg).unwrap();
+            assert_eq!(r.ok, 0);
+            assert_eq!(r.errors, 4);
+        }
     }
 }

@@ -192,25 +192,44 @@ impl ServeMetrics {
 
     /// Prometheus text exposition for `GET /metrics`.
     pub fn render_prometheus(&self) -> String {
+        self.render_prometheus_with(None)
+    }
+
+    /// Prometheus text with an optional label attached to every series —
+    /// `Some(("model", "alpha"))` renders the per-model section of a
+    /// multi-model `/metrics` page; `None` keeps the legacy unlabeled
+    /// format byte-for-byte.
+    pub fn render_prometheus_with(&self, label: Option<(&str, &str)>) -> String {
+        // Build `{k="v"}`, `{quantile="q"}` or `{k="v",quantile="q"}`.
+        let lbl = |extra: &str| -> String {
+            match (label, extra.is_empty()) {
+                (None, true) => String::new(),
+                (None, false) => format!("{{{extra}}}"),
+                (Some((k, v)), true) => format!("{{{k}=\"{v}\"}}"),
+                (Some((k, v)), false) => format!("{{{k}=\"{v}\",{extra}}}"),
+            }
+        };
+        let plain = lbl("");
         let mut s = String::with_capacity(1024);
         let c = |a: &AtomicU64| a.load(Ordering::Relaxed);
-        let _ = writeln!(s, "pgpr_requests_total {}", c(&self.requests));
-        let _ = writeln!(s, "pgpr_responses_total {}", c(&self.responses));
-        let _ = writeln!(s, "pgpr_errors_total {}", c(&self.errors));
-        let _ = writeln!(s, "pgpr_batches_total {}", c(&self.batches));
-        let _ = writeln!(s, "pgpr_throughput_rows_per_sec {:.3}", self.rows_per_sec());
-        let _ = writeln!(s, "pgpr_uptime_seconds {:.3}", self.elapsed_secs());
+        let _ = writeln!(s, "pgpr_requests_total{plain} {}", c(&self.requests));
+        let _ = writeln!(s, "pgpr_responses_total{plain} {}", c(&self.responses));
+        let _ = writeln!(s, "pgpr_errors_total{plain} {}", c(&self.errors));
+        let _ = writeln!(s, "pgpr_batches_total{plain} {}", c(&self.batches));
+        let _ = writeln!(s, "pgpr_throughput_rows_per_sec{plain} {:.3}", self.rows_per_sec());
+        let _ = writeln!(s, "pgpr_uptime_seconds{plain} {:.3}", self.elapsed_secs());
         for (name, h) in [
             ("pgpr_request_latency_seconds", &self.latency_us),
             ("pgpr_predict_seconds", &self.predict_us),
         ] {
             let snap = h.snapshot();
             for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
-                let _ = writeln!(s, "{name}{{quantile=\"{q}\"}} {:.6e}", v as f64 * 1e-6);
+                let qs = lbl(&format!("quantile=\"{q}\""));
+                let _ = writeln!(s, "{name}{qs} {:.6e}", v as f64 * 1e-6);
             }
-            let _ = writeln!(s, "{name}_mean {:.6e}", snap.mean * 1e-6);
-            let _ = writeln!(s, "{name}_max {:.6e}", snap.max as f64 * 1e-6);
-            let _ = writeln!(s, "{name}_count {}", snap.count);
+            let _ = writeln!(s, "{name}_mean{plain} {:.6e}", snap.mean * 1e-6);
+            let _ = writeln!(s, "{name}_max{plain} {:.6e}", snap.max as f64 * 1e-6);
+            let _ = writeln!(s, "{name}_count{plain} {}", snap.count);
         }
         for (name, h) in [
             ("pgpr_batch_occupancy_rows", &self.batch_rows),
@@ -218,10 +237,11 @@ impl ServeMetrics {
         ] {
             let snap = h.snapshot();
             for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
-                let _ = writeln!(s, "{name}{{quantile=\"{q}\"}} {v}");
+                let qs = lbl(&format!("quantile=\"{q}\""));
+                let _ = writeln!(s, "{name}{qs} {v}");
             }
-            let _ = writeln!(s, "{name}_mean {:.3}", snap.mean);
-            let _ = writeln!(s, "{name}_max {}", snap.max);
+            let _ = writeln!(s, "{name}_mean{plain} {:.3}", snap.mean);
+            let _ = writeln!(s, "{name}_max{plain} {}", snap.max);
         }
         s
     }
@@ -377,6 +397,21 @@ mod tests {
         });
         assert_eq!(h.count(), 4000);
         assert_eq!(h.max(), 3999);
+    }
+
+    #[test]
+    fn labeled_render_tags_every_series() {
+        let m = ServeMetrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.latency_us.record(900);
+        let text = m.render_prometheus_with(Some(("model", "alpha")));
+        assert!(text.contains("pgpr_requests_total{model=\"alpha\"} 2"));
+        assert!(text.contains("pgpr_request_latency_seconds{model=\"alpha\",quantile=\"0.99\"}"));
+        assert!(text.contains("pgpr_request_latency_seconds_count{model=\"alpha\"} 1"));
+        // Unlabeled stays in the legacy format.
+        let plain = m.render_prometheus();
+        assert!(plain.contains("pgpr_requests_total 2"));
+        assert!(plain.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! Layers (request path, top to bottom):
 //!
 //! * [`http`] — `std::net::TcpListener` server: one acceptor thread feeds
-//!   a pool of connection workers; routes `POST /predict` (JSON rows),
-//!   `GET /healthz` and `GET /metrics`.
+//!   a pool of connection workers speaking HTTP/1.1 keep-alive; routes
+//!   `POST /predict` (JSON rows, optional `"model"` field) against the
+//!   [`ModelRegistry`](crate::registry::ModelRegistry), plus
+//!   `GET/PUT/DELETE /models[/name]` management, `GET /healthz` and
+//!   `GET /metrics` (per-model labeled series).
 //! * [`batcher`] — the micro-batching scheduler. Connection workers hand
 //!   requests into a bounded MPSC queue; a dedicated batcher thread owns
 //!   the [`PredictionService`](crate::coordinator::service::PredictionService)

@@ -15,6 +15,7 @@ struct FlagSpec {
     help: String,
     default: Option<String>,
     is_bool: bool,
+    is_multi: bool,
 }
 
 /// Builder-style argument parser.
@@ -24,6 +25,7 @@ pub struct Args {
     about: String,
     flags: Vec<FlagSpec>,
     values: BTreeMap<String, String>,
+    multi_values: BTreeMap<String, Vec<String>>,
     positionals: Vec<String>,
 }
 
@@ -43,6 +45,7 @@ impl Args {
             help: help.to_string(),
             default: Some(default.to_string()),
             is_bool: false,
+            is_multi: false,
         });
         self
     }
@@ -54,6 +57,7 @@ impl Args {
             help: help.to_string(),
             default: None,
             is_bool: false,
+            is_multi: false,
         });
         self
     }
@@ -65,6 +69,20 @@ impl Args {
             help: help.to_string(),
             default: Some("false".to_string()),
             is_bool: true,
+            is_multi: false,
+        });
+        self
+    }
+
+    /// Declare a repeatable flag: every occurrence appends a value
+    /// (e.g. `pgpr serve --model a=a.pgpr --model b=b.pgpr`).
+    pub fn multi(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(String::new()),
+            is_bool: false,
+            is_multi: true,
         });
         self
     }
@@ -73,9 +91,15 @@ impl Args {
     pub fn help_text(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n", self.program, self.about, self.program);
         for f in &self.flags {
-            let kind = if f.is_bool { "" } else { " <value>" };
+            let kind = if f.is_bool {
+                ""
+            } else if f.is_multi {
+                " <value> (repeatable)"
+            } else {
+                " <value>"
+            };
             let def = match &f.default {
-                Some(d) if !f.is_bool => format!(" [default: {d}]"),
+                Some(d) if !f.is_bool && !f.is_multi => format!(" [default: {d}]"),
                 _ => String::new(),
             };
             s.push_str(&format!("  --{}{kind}\n      {}{def}\n", f.name, f.help));
@@ -117,7 +141,11 @@ impl Args {
                         })?,
                     }
                 };
-                self.values.insert(name, value);
+                if spec.is_multi {
+                    self.multi_values.entry(name).or_default().push(value);
+                } else {
+                    self.values.insert(name, value);
+                }
             } else {
                 self.positionals.push(arg);
             }
@@ -179,6 +207,16 @@ impl Args {
 
     pub fn get_bool(&self, name: &str) -> bool {
         matches!(self.raw(name).as_str(), "true" | "1" | "yes")
+    }
+
+    /// All values of a repeatable flag, in argv order (empty when the
+    /// flag never appeared).
+    pub fn get_multi(&self, name: &str) -> Vec<String> {
+        debug_assert!(
+            self.flags.iter().any(|f| f.name == name && f.is_multi),
+            "flag --{name} was never declared as multi"
+        );
+        self.multi_values.get(name).cloned().unwrap_or_default()
     }
 
     /// Comma-separated list of usizes, e.g. `--sizes 1000,2000,4000`.
@@ -248,6 +286,20 @@ mod tests {
     fn missing_required_rejected() {
         let r = Args::new("t", "t").required("path", "p").parse_from(argv(&[]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn multi_flag_accumulates_in_order() {
+        let a = Args::new("t", "t")
+            .multi("model", "name=path")
+            .flag("n", "1", "n")
+            .parse_from(argv(&["--model", "a=1", "--n", "2", "--model=b=2"]))
+            .unwrap();
+        assert_eq!(a.get_multi("model"), vec!["a=1".to_string(), "b=2".to_string()]);
+        assert_eq!(a.get_usize("n"), 2);
+        // Absent multi flag is an empty list.
+        let b = Args::new("t", "t").multi("model", "m").parse_from(argv(&[])).unwrap();
+        assert!(b.get_multi("model").is_empty());
     }
 
     #[test]

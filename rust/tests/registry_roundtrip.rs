@@ -1,0 +1,331 @@
+//! End-to-end tests for model artifact persistence and the multi-model
+//! registry: `fit → save → load → predict` must be bit-identical to the
+//! in-memory engine (for centralized and `threads:N` engines, across
+//! several (support, B) operating points); corrupted snapshots must be
+//! rejected cleanly; and concurrent load/evict under live `/predict`
+//! traffic must never panic or answer with the wrong model.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use pgpr::config::{
+    BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions,
+};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::LmaRegressor;
+use pgpr::registry::{self, ModelRegistry};
+use pgpr::server::http::Server;
+use pgpr::server::loadgen::http_request;
+use pgpr::util::error::PgprError;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+const N_TRAIN: usize = 140;
+const M_BLOCKS: usize = 4;
+
+fn training_data(seed: u64) -> (Mat, Vec<f64>, SeArdHyper) {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(N_TRAIN, -4.0, 4.0));
+    let y: Vec<f64> = (0..N_TRAIN).map(|i| x.get(i, 0).sin()).collect();
+    (x, y, hyp)
+}
+
+fn lma_cfg(support: usize, b: usize) -> LmaConfig {
+    LmaConfig {
+        num_blocks: M_BLOCKS,
+        markov_order: b,
+        support_size: support,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    }
+}
+
+fn queries() -> Mat {
+    Mat::col_vec(&(0..25).map(|i| -3.0 + 0.25 * i as f64).collect::<Vec<f64>>())
+}
+
+fn assert_bit_identical(a: &pgpr::gp::Prediction, b: &pgpr::gp::Prediction, tag: &str) {
+    assert_eq!(a.mean.len(), b.mean.len(), "{tag}: length");
+    for i in 0..a.mean.len() {
+        assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "{tag}: mean {i}");
+        assert_eq!(a.var[i].to_bits(), b.var[i].to_bits(), "{tag}: var {i}");
+    }
+}
+
+#[test]
+fn roundtrip_bit_identical_across_operating_points_and_engines() {
+    let (x, y, hyp) = training_data(61);
+    let q = queries();
+    // Two operating points along the LMA spectrum: small support + B=1,
+    // large support + B=2 (and B=0 for the PIC endpoint).
+    for (support, b) in [(16, 1), (48, 2), (24, 0)] {
+        let cfg = lma_cfg(support, b);
+        // Centralized engine.
+        let engine =
+            ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap());
+        let direct = engine.predict(&q).unwrap();
+        let bytes = registry::engine_to_bytes(&engine).unwrap();
+        let loaded = registry::engine_from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.backend_name(), "centralized");
+        assert_bit_identical(
+            &direct,
+            &loaded.predict(&q).unwrap(),
+            &format!("centralized |S|={support} B={b}"),
+        );
+        // Thread-cluster engine of the same configuration.
+        let cc = ClusterConfig::gigabit(1, M_BLOCKS)
+            .with_backend(BackendKind::Threads { num_threads: 2 });
+        let engine =
+            ServeEngine::Parallel(ParallelLma::fit(&x, &y, &hyp, &cfg, &cc).unwrap());
+        let direct = engine.predict(&q).unwrap();
+        let bytes = registry::engine_to_bytes(&engine).unwrap();
+        let loaded = registry::engine_from_bytes(&bytes).unwrap();
+        assert_eq!(loaded.backend_name(), "threads:2");
+        assert_bit_identical(
+            &direct,
+            &loaded.predict(&q).unwrap(),
+            &format!("threads |S|={support} B={b}"),
+        );
+    }
+}
+
+#[test]
+fn corrupted_artifacts_rejected_with_clean_errors() {
+    let (x, y, hyp) = training_data(62);
+    let engine =
+        ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &lma_cfg(16, 1)).unwrap());
+    let dir = std::env::temp_dir().join("pgpr_registry_roundtrip_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let good = dir.join("good.pgpr");
+    let good = good.to_str().unwrap().to_string();
+    registry::save_engine(&engine, &good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // Truncated file.
+    let trunc = dir.join("trunc.pgpr");
+    std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
+    match registry::load_engine(trunc.to_str().unwrap()) {
+        Err(PgprError::Artifact(msg)) => assert!(msg.contains("trunc.pgpr"), "msg: {msg}"),
+        other => panic!("truncated artifact must fail cleanly, got {other:?}"),
+    }
+
+    // Flipped byte deep in the payload.
+    let mut corrupt = bytes.clone();
+    let at = corrupt.len() - 100;
+    corrupt[at] ^= 0x40;
+    let bad = dir.join("bad.pgpr");
+    std::fs::write(&bad, &corrupt).unwrap();
+    match registry::load_engine(bad.to_str().unwrap()) {
+        Err(PgprError::Artifact(msg)) => {
+            assert!(msg.contains("checksum"), "msg: {msg}")
+        }
+        other => panic!("corrupted artifact must fail cleanly, got {other:?}"),
+    }
+
+    // Wrong format version.
+    let mut wrong = bytes.clone();
+    wrong[8] = 0xfe;
+    let vpath = dir.join("version.pgpr");
+    std::fs::write(&vpath, &wrong).unwrap();
+    match registry::load_engine(vpath.to_str().unwrap()) {
+        Err(PgprError::Artifact(msg)) => assert!(msg.contains("version"), "msg: {msg}"),
+        other => panic!("future-version artifact must fail cleanly, got {other:?}"),
+    }
+
+    // The pristine file still loads and predicts.
+    let loaded = registry::load_engine(&good).unwrap();
+    assert_bit_identical(
+        &engine.predict(&queries()).unwrap(),
+        &loaded.predict(&queries()).unwrap(),
+        "pristine reload",
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Concurrent load/evict churn under live traffic: requests to the
+/// stable model are always answered bit-identically by the stable
+/// engine; requests to the churning model either succeed (bit-identical
+/// to the churn engine) or fail with a clean 404 while it is unloaded —
+/// never a panic, never the wrong model's numbers.
+#[test]
+fn concurrent_load_evict_under_live_traffic() {
+    let (x, y, hyp) = training_data(63);
+    let stable = Arc::new(ServeEngine::Centralized(
+        LmaRegressor::fit(&x, &y, &hyp, &lma_cfg(24, 1)).unwrap(),
+    ));
+    // A genuinely different model (different data): its predictions
+    // differ from `stable`'s, so a misrouted answer would be caught.
+    let (x2, y2, hyp2) = training_data(64);
+    let churn = Arc::new(ServeEngine::Centralized(
+        LmaRegressor::fit(&x2, &y2, &hyp2, &lma_cfg(16, 2)).unwrap(),
+    ));
+    let dir = std::env::temp_dir().join("pgpr_registry_churn_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let churn_path = dir.join("churn.pgpr");
+    let churn_path = churn_path.to_str().unwrap().to_string();
+    registry::save_engine(&churn, &churn_path).unwrap();
+
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 6,
+        batch_size: 4,
+        max_delay_us: 500,
+        queue_capacity: 128,
+        ..ServeOptions::default()
+    };
+    let reg = Arc::new(ModelRegistry::new(RegistryOptions::default(), &opts));
+    reg.load("stable", Arc::clone(&stable)).unwrap();
+    let server = Server::start_with_registry(reg, &opts).unwrap();
+    let addr = server.addr().to_string();
+
+    let q = 0.8f64;
+    let stable_direct = stable.predict(&Mat::col_vec(&[q])).unwrap();
+    let churn_direct = churn.predict(&Mat::col_vec(&[q])).unwrap();
+    let churn_ok = AtomicUsize::new(0);
+    let churn_missing = AtomicUsize::new(0);
+
+    std::thread::scope(|s| {
+        // Admin thread: load/evict the churning model in a tight loop.
+        let admin_addr = addr.clone();
+        let churn_path = churn_path.clone();
+        s.spawn(move || {
+            let put = Json::obj(vec![("path", Json::Str(churn_path))]).to_string();
+            for _ in 0..12 {
+                let (status, body) =
+                    http_request(&admin_addr, "PUT", "/models/churn", Some(&put)).unwrap();
+                assert!(status == 200 || status == 409, "PUT status {status}: {body}");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                let (status, body) =
+                    http_request(&admin_addr, "DELETE", "/models/churn", None).unwrap();
+                assert!(status == 200 || status == 404, "DELETE status {status}: {body}");
+            }
+        });
+        // Traffic threads: half hit the stable model, half the churning
+        // one.
+        for w in 0..4 {
+            let addr = addr.clone();
+            let stable_mean = stable_direct.mean[0];
+            let churn_mean = churn_direct.mean[0];
+            let churn_ok = &churn_ok;
+            let churn_missing = &churn_missing;
+            s.spawn(move || {
+                let model = if w % 2 == 0 { "stable" } else { "churn" };
+                let body = Json::obj(vec![
+                    ("model", Json::Str(model.into())),
+                    ("x", Json::arr_f64(&[q])),
+                ])
+                .to_string();
+                for i in 0..25 {
+                    let (status, resp) =
+                        http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+                    match (model, status) {
+                        ("stable", 200) => {
+                            let j = Json::parse(&resp).unwrap();
+                            let mean =
+                                j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+                            assert_eq!(
+                                mean.to_bits(),
+                                stable_mean.to_bits(),
+                                "stable answer changed at request {i}"
+                            );
+                        }
+                        ("stable", other) => panic!("stable request {i} got {other}: {resp}"),
+                        ("churn", 200) => {
+                            let j = Json::parse(&resp).unwrap();
+                            let mean =
+                                j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+                            assert_eq!(
+                                mean.to_bits(),
+                                churn_mean.to_bits(),
+                                "churn answered with another model at request {i}"
+                            );
+                            churn_ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        ("churn", 404) => {
+                            churn_missing.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Mid-evict the entry's batcher may be draining.
+                        ("churn", 503) => {}
+                        ("churn", other) => panic!("churn request {i} got {other}: {resp}"),
+                        _ => unreachable!(),
+                    }
+                }
+            });
+        }
+    });
+
+    // The churn traffic saw both worlds (resident and evicted) at least
+    // once across the 12 load/evict cycles.
+    assert!(
+        churn_ok.load(Ordering::Relaxed) + churn_missing.load(Ordering::Relaxed) > 0,
+        "churn traffic never completed"
+    );
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// `pgpr fit --save` / `pgpr serve --model` acceptance path, driven
+/// through the library: fit two operating points, snapshot both, boot a
+/// registry server purely from the artifacts, and check both models
+/// serve bit-identical predictions side by side with per-model metrics.
+#[test]
+fn serve_two_models_from_artifacts_without_training_data() {
+    let (x, y, hyp) = training_data(65);
+    let a = ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &lma_cfg(16, 1)).unwrap());
+    let b = ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &lma_cfg(48, 2)).unwrap());
+    let qa = a.predict(&queries()).unwrap();
+    let qb = b.predict(&queries()).unwrap();
+    let dir = std::env::temp_dir().join("pgpr_two_model_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pa = dir.join("a.pgpr");
+    let pb = dir.join("b.pgpr");
+    registry::save_engine(&a, pa.to_str().unwrap()).unwrap();
+    registry::save_engine(&b, pb.to_str().unwrap()).unwrap();
+    drop((a, b)); // only the artifacts survive
+
+    let opts = ServeOptions { listen: "127.0.0.1:0".into(), ..ServeOptions::default() };
+    let reg = Arc::new(ModelRegistry::new(RegistryOptions::default(), &opts));
+    reg.load("small", Arc::new(registry::load_engine(pa.to_str().unwrap()).unwrap()))
+        .unwrap();
+    reg.load("big", Arc::new(registry::load_engine(pb.to_str().unwrap()).unwrap()))
+        .unwrap();
+    let server = Server::start_with_registry(reg, &opts).unwrap();
+    let addr = server.addr().to_string();
+
+    let q = queries();
+    for (name, expect) in [("small", &qa), ("big", &qb)] {
+        for i in 0..q.rows() {
+            let body = Json::obj(vec![
+                ("model", Json::Str(name.into())),
+                ("x", Json::arr_f64(&[q.get(i, 0)])),
+            ])
+            .to_string();
+            let (status, resp) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+            assert_eq!(status, 200, "{name} query {i}: {resp}");
+            let j = Json::parse(&resp).unwrap();
+            let mean = j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+            let var = j.req("var").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+            assert_eq!(mean.to_bits(), expect.mean[i].to_bits(), "{name} mean {i}");
+            assert_eq!(var.to_bits(), expect.var[i].to_bits(), "{name} var {i}");
+        }
+    }
+    // The two operating points genuinely differ somewhere (so the
+    // bit-identity checks above could not pass by accident).
+    assert!(
+        qa.mean.iter().zip(&qb.mean).any(|(u, v)| u.to_bits() != v.to_bits()),
+        "operating points produced identical predictions"
+    );
+    // Per-model metrics visible on /metrics.
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("pgpr_models_resident 2"));
+    assert!(text.contains(&format!("pgpr_model_requests_total{{model=\"small\"}} {}", q.rows())));
+    assert!(text.contains(&format!("pgpr_model_requests_total{{model=\"big\"}} {}", q.rows())));
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -44,6 +44,7 @@ fn opts(batch: usize, max_delay_us: u64) -> ServeOptions {
         batch_size: batch,
         max_delay_us,
         queue_capacity: 64,
+        ..ServeOptions::default()
     }
 }
 
@@ -233,6 +234,150 @@ fn bad_requests_get_http_errors_not_hangs() {
 }
 
 #[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    let (x, y, hyp, cfg) = training_data(37);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let direct = model.predict(&Mat::col_vec(&[0.5])).unwrap();
+    let server = Server::start(ServeEngine::Centralized(model), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+
+    let mut conn = loadgen::HttpConn::connect(&addr).unwrap();
+    for i in 0..10 {
+        let body = Json::obj(vec![("x", Json::arr_f64(&[0.5]))]).to_string();
+        let (status, resp, closes) = conn.request("POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 200, "request {i}: {resp}");
+        assert!(!closes, "request {i}: server closed a keep-alive connection");
+        let j = Json::parse(&resp).unwrap();
+        let mean = j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+        assert_eq!(mean.to_bits(), direct.mean[0].to_bits(), "request {i}");
+    }
+    // Interleave a GET on the same connection.
+    let (status, body, closes) = conn.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(!closes);
+    assert_eq!(Json::parse(&body).unwrap().req("dim").unwrap().as_usize(), Some(1));
+    drop(conn);
+
+    let metrics = server.shutdown();
+    assert_eq!(metrics.responses.load(Ordering::Relaxed), 10);
+    assert_eq!(metrics.errors.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn keep_alive_respects_request_cap_and_opt_out() {
+    let (x, y, hyp, cfg) = training_data(38);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    // Cap at 2 requests per connection.
+    let o = ServeOptions { max_conn_requests: 2, ..opts(4, 500) };
+    let server = Server::start(ServeEngine::Centralized(model), &o).unwrap();
+    let addr = server.addr().to_string();
+    let mut conn = loadgen::HttpConn::connect(&addr).unwrap();
+    let body = Json::obj(vec![("x", Json::arr_f64(&[0.1]))]).to_string();
+    let (status, _, closes) = conn.request("POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert!(!closes, "first request keeps the connection");
+    let (status, _, closes) = conn.request("POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert!(closes, "second request hits the cap and closes");
+    server.shutdown();
+
+    // keep_alive=false: every response announces close.
+    let (x, y, hyp, cfg) = training_data(39);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    let o = ServeOptions { keep_alive: false, ..opts(4, 500) };
+    let server = Server::start(ServeEngine::Centralized(model), &o).unwrap();
+    let addr = server.addr().to_string();
+    let mut conn = loadgen::HttpConn::connect(&addr).unwrap();
+    let (status, _, closes) = conn.request("POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+    assert!(closes, "keep-alive disabled: server closes after one request");
+    server.shutdown();
+}
+
+#[test]
+fn model_management_endpoints_and_status_codes() {
+    let (x, y, hyp, cfg) = training_data(40);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    // Save an artifact to load over HTTP.
+    let dir = std::env::temp_dir().join("pgpr_http_models_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let art_path = dir.join("side.pgpr");
+    let art_path = art_path.to_str().unwrap().to_string();
+    let (x2, y2, hyp2, mut cfg2) = training_data(41);
+    cfg2.support_size = 16;
+    let side = LmaRegressor::fit(&x2, &y2, &hyp2, &cfg2).unwrap();
+    pgpr::registry::save_engine(&ServeEngine::Centralized(side), &art_path).unwrap();
+
+    let server = Server::start(ServeEngine::Centralized(model), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+
+    // Listing starts with just the default model.
+    let (status, body) = http_request(&addr, "GET", "/models", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("models").unwrap().as_arr().unwrap().len(), 1);
+    assert_eq!(j.req("default").unwrap().as_str(), Some("default"));
+
+    // Load the artifact under a new name.
+    let put = Json::obj(vec![("path", Json::Str(art_path.clone()))]).to_string();
+    let (status, body) = http_request(&addr, "PUT", "/models/side", Some(&put)).unwrap();
+    assert_eq!(status, 200, "PUT body: {body}");
+    // Duplicate load → 409.
+    let (status, _) = http_request(&addr, "PUT", "/models/side", Some(&put)).unwrap();
+    assert_eq!(status, 409);
+    // Bad artifact path → 400.
+    let bad = Json::obj(vec![("path", Json::Str("/nope/missing.pgpr".into()))]).to_string();
+    let (status, _) = http_request(&addr, "PUT", "/models/ghost", Some(&bad)).unwrap();
+    assert_eq!(status, 400);
+
+    // Info for the loaded model; unknown name → 404.
+    let (status, body) = http_request(&addr, "GET", "/models/side", None).unwrap();
+    assert_eq!(status, 200);
+    assert_eq!(Json::parse(&body).unwrap().req("support_size").unwrap().as_usize(), Some(16));
+    let (status, _) = http_request(&addr, "GET", "/models/ghost", None).unwrap();
+    assert_eq!(status, 404);
+
+    // Routed prediction answers with the named model, bit-identical to a
+    // freshly loaded copy of the artifact.
+    let loaded = pgpr::registry::load_engine(&art_path).unwrap();
+    let expect = loaded.predict(&Mat::col_vec(&[0.7])).unwrap();
+    let body =
+        Json::obj(vec![("model", Json::Str("side".into())), ("x", Json::arr_f64(&[0.7]))])
+            .to_string();
+    let (status, resp) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200, "predict body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.req("model").unwrap().as_str(), Some("side"));
+    let mean = j.req("mean").unwrap().as_arr().unwrap()[0].as_f64().unwrap();
+    assert_eq!(mean.to_bits(), expect.mean[0].to_bits());
+
+    // Unknown model on /predict → 404.
+    let body =
+        Json::obj(vec![("model", Json::Str("ghost".into())), ("x", Json::arr_f64(&[0.7]))])
+            .to_string();
+    let (status, _) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 404);
+
+    // Per-model series show up on /metrics.
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("pgpr_models_resident 2"), "metrics:\n{text}");
+    assert!(text.contains("pgpr_model_requests_total{model=\"side\"} 1"));
+    assert!(text.contains("pgpr_responses_total{model=\"side\"} 1"));
+
+    // Deleting the default → 409; deleting `side` works, then 404s.
+    let (status, _) = http_request(&addr, "DELETE", "/models/default", None).unwrap();
+    assert_eq!(status, 409);
+    let (status, _) = http_request(&addr, "DELETE", "/models/side", None).unwrap();
+    assert_eq!(status, 200);
+    let (status, _) = http_request(&addr, "DELETE", "/models/side", None).unwrap();
+    assert_eq!(status, 404);
+
+    server.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn loadgen_drives_the_server_and_reports_quantiles() {
     let (x, y, hyp, cfg) = training_data(36);
     let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
@@ -246,6 +391,8 @@ fn loadgen_drives_the_server_and_reports_quantiles() {
         rows_per_request: 1,
         dim: 1,
         seed: 9,
+        keep_alive: false,
+        models: Vec::new(),
     })
     .unwrap();
     assert_eq!(report.ok, 40);
