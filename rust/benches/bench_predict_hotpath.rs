@@ -1,0 +1,201 @@
+//! Predict hot-path benchmark: single-point and batch-64 latency of the
+//! context-backed fast path vs the `PGPR_PREDICT_LEGACY`-style per-call
+//! recompute path, plus the retained pre-context dense pipeline — with a
+//! per-phase µs profile and a counting allocator that verifies the
+//! steady-state serve path performs no dense N×|U| allocation.
+//!
+//! Writes the machine-readable record `BENCH_predict_hotpath.json`
+//! tracked across PRs. `PGPR_BENCH_FAST=1` shrinks the problem for the
+//! CI smoke run; the full run uses the acceptance operating point
+//! (M=32, B=2, |S|=64, N=4096).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use pgpr::config::{LmaConfig, PartitionStrategy};
+use pgpr::experiments::common::{quick_hypers, Workload};
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::context::PredictScratch;
+use pgpr::lma::LmaRegressor;
+use pgpr::util::bench::{write_json_record, BenchSuite};
+use pgpr::util::json::Json;
+
+/// System allocator wrapper counting allocations, total bytes and the
+/// largest single request — enough to prove the fast path never asks for
+/// an N×|U| dense buffer in steady state.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicUsize = AtomicUsize::new(0);
+static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
+static ALLOC_MAX: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
+        ALLOC_MAX.fetch_max(layout.size(), Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn alloc_snapshot() -> (usize, usize) {
+    (ALLOC_COUNT.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+fn phases_to_json(prof: &pgpr::util::timer::PhaseProfiler) -> Json {
+    Json::Obj(
+        prof.breakdown()
+            .into_iter()
+            .map(|(name, secs, _)| (name, Json::Num(secs * 1e6)))
+            .collect(),
+    )
+}
+
+fn main() {
+    let fast_mode = std::env::var("PGPR_BENCH_FAST").is_ok();
+    let (n, m, b, s) = if fast_mode { (1024, 8, 2, 48) } else { (4096, 32, 2, 64) };
+    println!("=== bench: predict hot path (N={n}, M={m}, B={b}, |S|={s}) ===");
+
+    let ds = Workload::parse("aimpeak").unwrap().generate(n, 128, 7).unwrap();
+    let hyp = quick_hypers(&ds);
+    let cfg = LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed: 7,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+    let (model, fit_secs) =
+        pgpr::util::timer::time_it(|| LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg));
+    let model = model.expect("fit");
+    let ctx_bytes = model.core().context().approx_bytes();
+    println!(
+        "fit {:.2}s; context {} KiB resident",
+        fit_secs,
+        ctx_bytes / 1024
+    );
+
+    let single = ds.test_x.rows_range(0, 1);
+    let batch = ds.test_x.rows_range(0, 64.min(ds.test_x.rows()));
+
+    let mut suite = BenchSuite::new("predict_hotpath");
+    let mut medians: Vec<(String, f64)> = Vec::new();
+    {
+        let mut run = |name: &str, q: &Mat, recompute: bool, dense: bool| {
+            let res = suite.case(name, || {
+                let p = if dense {
+                    model.predict_dense(q, false).expect("predict").0
+                } else {
+                    model.predict_mode(q, false, recompute).expect("predict").0
+                };
+                std::hint::black_box(p.mean[0]);
+            });
+            medians.push((name.to_string(), res.median_s));
+        };
+        run("single/context", &single, false, false);
+        run("single/recompute_legacy", &single, true, false);
+        run("single/dense_prepr", &single, false, true);
+        run("batch64/context", &batch, false, false);
+        run("batch64/recompute_legacy", &batch, true, false);
+        run("batch64/dense_prepr", &batch, false, true);
+    }
+    suite.finish();
+    let median = |name: &str| -> f64 {
+        medians.iter().find(|(k, _)| k.as_str() == name).map(|(_, v)| *v).unwrap()
+    };
+
+    // Per-phase profiles (one instrumented call per mode).
+    let (_, prof_fast) = model.predict_mode(&single, false, false).expect("profile");
+    let (_, prof_legacy) = model.predict_mode(&single, false, true).expect("profile");
+    let (_, prof_dense) = model.predict_dense(&single, false).expect("profile");
+
+    // Steady-state allocation profile: warm a scratch, then measure.
+    let mut scratch = PredictScratch::new();
+    for _ in 0..3 {
+        let _ = model.predict_with_scratch(&single, &mut scratch).expect("warm");
+    }
+    ALLOC_MAX.store(0, Ordering::Relaxed);
+    let (c0, b0) = alloc_snapshot();
+    let steady_iters = 20usize;
+    for _ in 0..steady_iters {
+        let p = model.predict_with_scratch(&single, &mut scratch).expect("steady");
+        std::hint::black_box(p.mean[0]);
+    }
+    let (c1, b1) = alloc_snapshot();
+    let max_single_alloc = ALLOC_MAX.load(Ordering::Relaxed);
+    let dense_nxu_bytes = n * 8; // the N×|U| buffer the old sweep allocated (u = 1)
+    let no_dense_alloc = max_single_alloc < dense_nxu_bytes;
+    println!(
+        "steady state: {:.1} allocs / {:.0} B per predict; largest single alloc {} B (dense N×u would be {} B) -> no_dense_nxu_alloc={}",
+        (c1 - c0) as f64 / steady_iters as f64,
+        (b1 - b0) as f64 / steady_iters as f64,
+        max_single_alloc,
+        dense_nxu_bytes,
+        no_dense_alloc
+    );
+
+    let speedup_single = median("single/recompute_legacy") / median("single/context");
+    let speedup_single_dense = median("single/dense_prepr") / median("single/context");
+    let speedup_batch = median("batch64/recompute_legacy") / median("batch64/context");
+    println!(
+        "single-point speedup: {speedup_single:.2}x vs recompute-legacy, {speedup_single_dense:.2}x vs dense pre-PR pipeline"
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("predict_hotpath".into())),
+        ("n", Json::Num(n as f64)),
+        ("m", Json::Num(m as f64)),
+        ("b", Json::Num(b as f64)),
+        ("s", Json::Num(s as f64)),
+        ("fast_mode", Json::Bool(fast_mode)),
+        ("fit_secs", Json::Num(fit_secs)),
+        ("context_bytes", Json::Num(ctx_bytes as f64)),
+        ("single_context_us", Json::Num(median("single/context") * 1e6)),
+        ("single_recompute_us", Json::Num(median("single/recompute_legacy") * 1e6)),
+        ("single_dense_us", Json::Num(median("single/dense_prepr") * 1e6)),
+        ("batch64_context_us", Json::Num(median("batch64/context") * 1e6)),
+        ("batch64_recompute_us", Json::Num(median("batch64/recompute_legacy") * 1e6)),
+        ("batch64_dense_us", Json::Num(median("batch64/dense_prepr") * 1e6)),
+        ("speedup_single_vs_recompute", Json::Num(speedup_single)),
+        ("speedup_single_vs_dense", Json::Num(speedup_single_dense)),
+        ("speedup_batch64_vs_recompute", Json::Num(speedup_batch)),
+        ("phases_context_us", phases_to_json(&prof_fast)),
+        ("phases_recompute_us", phases_to_json(&prof_legacy)),
+        ("phases_dense_us", phases_to_json(&prof_dense)),
+        ("steady_allocs_per_predict", Json::Num((c1 - c0) as f64 / steady_iters as f64)),
+        ("steady_alloc_bytes_per_predict", Json::Num((b1 - b0) as f64 / steady_iters as f64)),
+        ("max_single_alloc_bytes", Json::Num(max_single_alloc as f64)),
+        ("dense_nxu_bytes", Json::Num(dense_nxu_bytes as f64)),
+        ("no_dense_nxu_alloc", Json::Bool(no_dense_alloc)),
+    ]);
+    // Persist the record BEFORE enforcing the acceptance bars, so a
+    // failing run still leaves the per-phase/alloc numbers behind for
+    // diagnosis.
+    write_json_record("BENCH_predict_hotpath.json", &record).expect("write record");
+    println!("wrote BENCH_predict_hotpath.json");
+
+    // Enforce the acceptance invariants rather than just recording them.
+    // The alloc bound is structural (machine-independent): steady-state
+    // serving must never ask for a dense N×|U| buffer.
+    assert!(
+        no_dense_alloc,
+        "steady-state predict performed a {max_single_alloc}-byte allocation ≥ the dense N×u bound ({dense_nxu_bytes} B)"
+    );
+    // The ≥3× single-point bar is defined at the full operating point
+    // (M=32, B=2, |S|=64, N=4096); the shrunken PGPR_BENCH_FAST smoke
+    // config only records it (small problems + noisy CI runners).
+    if !fast_mode {
+        assert!(
+            speedup_single >= 3.0,
+            "single-point context speedup {speedup_single:.2}x < 3x vs the recompute-legacy path"
+        );
+    }
+}

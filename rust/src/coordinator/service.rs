@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 
 use crate::gp::Prediction;
 use crate::linalg::matrix::Mat;
+use crate::lma::context::PredictScratch;
 use crate::lma::parallel::ParallelLma;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::LmaRegressor;
@@ -50,6 +51,21 @@ impl ServeEngine {
     pub fn predict(&self, x: &Mat) -> Result<Prediction> {
         match self {
             ServeEngine::Centralized(m) => m.predict(x),
+            ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
+        }
+    }
+
+    /// Predict reusing a caller-owned scratch workspace. The centralized
+    /// engine recycles its per-call buffers through it (near-zero heap
+    /// traffic in steady state); the cluster engines manage their own
+    /// per-rank state, so the scratch is unused there.
+    pub fn predict_with_scratch(
+        &self,
+        x: &Mat,
+        scratch: &mut PredictScratch,
+    ) -> Result<Prediction> {
+        match self {
+            ServeEngine::Centralized(m) => m.predict_with_scratch(x, scratch),
             ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
         }
     }
@@ -104,6 +120,10 @@ pub struct PredictionService {
     /// `server::metrics`); `Arc` so the HTTP layer renders the same
     /// object the service records into.
     metrics: Arc<ServeMetrics>,
+    /// Reusable predict workspace — this service is owned by one thread
+    /// (the batcher / stdin loop), so steady-state batches recycle the
+    /// per-call buffers instead of reallocating them.
+    scratch: PredictScratch,
     /// Serving statistics (kept as plain fields for back-compat).
     pub served: usize,
     pub batches: usize,
@@ -135,6 +155,7 @@ impl PredictionService {
             max_delay: None,
             queue: Vec::new(),
             metrics: Arc::new(ServeMetrics::new()),
+            scratch: PredictScratch::new(),
             served: 0,
             batches: 0,
             total_latency: 0.0,
@@ -228,7 +249,8 @@ impl PredictionService {
         for (i, (req, _)) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&req.x);
         }
-        let (pred, secs) = time_it(|| self.engine.predict(&x));
+        let engine = Arc::clone(&self.engine);
+        let (pred, secs) = time_it(|| engine.predict_with_scratch(&x, &mut self.scratch));
         let pred: Prediction = pred?;
         self.predict_secs += secs;
         self.batches += 1;

@@ -10,7 +10,7 @@
 use std::sync::Arc;
 
 use crate::kernels::se_ard;
-use crate::linalg::matrix::Mat;
+use crate::linalg::matrix::{Mat, MatView};
 use crate::runtime::artifacts::ArtifactLibrary;
 use crate::util::error::Result;
 
@@ -62,6 +62,21 @@ impl CovBackend {
                 }
                 Err(e) => Err(e),
             },
+        }
+    }
+
+    /// [`cov_cross_scaled`](Self::cov_cross_scaled) over borrowed views.
+    /// The native path is fully zero-copy; the PJRT runtime needs owned
+    /// host buffers, so that arm materializes the operands first.
+    pub fn cov_cross_scaled_view(
+        &self,
+        s1: MatView<'_>,
+        s2: MatView<'_>,
+        sigma_s2: f64,
+    ) -> Result<Mat> {
+        match self {
+            CovBackend::Native => se_ard::cov_cross_scaled_view(s1, s2, sigma_s2),
+            CovBackend::Pjrt(_) => self.cov_cross_scaled(&s1.to_mat(), &s2.to_mat(), sigma_s2),
         }
     }
 }

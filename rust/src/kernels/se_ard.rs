@@ -8,7 +8,7 @@
 //! trick the Pallas kernel (Layer 1) uses to hit the MXU.
 
 use crate::linalg::gemm;
-use crate::linalg::matrix::Mat;
+use crate::linalg::matrix::{Mat, MatView};
 use crate::util::error::{PgprError, Result};
 
 /// Hyperparameters of the SE-ARD kernel.
@@ -103,13 +103,20 @@ pub fn cov_cross(x1: &Mat, x2: &Mat, hyp: &SeArdHyper) -> Result<Mat> {
 /// The Gram product and the exp() sweep both split output rows across the
 /// `util::par` worker pool for large blocks (bit-identical to sequential).
 pub fn cov_cross_scaled(s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
+    cov_cross_scaled_view(s1.view(), s2.view(), sigma_s2)
+}
+
+/// [`cov_cross_scaled`] over borrowed row-range views — the serve hot
+/// path's zero-copy entry (the row norms, the Gram GEMM and the exp()
+/// sweep all read the same bytes, so results are bit-identical).
+pub fn cov_cross_scaled_view(s1: MatView<'_>, s2: MatView<'_>, sigma_s2: f64) -> Result<Mat> {
     let n1 = s1.rows();
     let n2 = s2.rows();
     // ‖x‖² per row.
     let sq1: Vec<f64> = (0..n1).map(|i| gemm::dot(s1.row(i), s1.row(i))).collect();
     let sq2: Vec<f64> = (0..n2).map(|i| gemm::dot(s2.row(i), s2.row(i))).collect();
     // G = S1 · S2ᵀ through the GEMM kernel.
-    let mut g = gemm::matmul_nt(s1, s2)?;
+    let mut g = gemm::matmul_nt_view(s1, s2)?;
     let threads = {
         let t = crate::util::par::num_threads();
         if t <= 1 || n1 < 8 || n1 * n2 < (1 << 16) || crate::util::par::in_worker() {
@@ -264,6 +271,16 @@ mod tests {
             let k = cov_sym(&x, &hyp).unwrap();
             assert!(crate::linalg::chol::cholesky(&k).is_ok());
         });
+    }
+
+    #[test]
+    fn view_covariance_matches_owned() {
+        let mut rng = Pcg64::new(65);
+        let a = Mat::randn(20, 3, &mut rng);
+        let b = Mat::randn(15, 3, &mut rng);
+        let want = cov_cross_scaled(&a.rows_range(4, 17), &b.rows_range(1, 12), 1.7).unwrap();
+        let got = cov_cross_scaled_view(a.rows_view(4, 17), b.rows_view(1, 12), 1.7).unwrap();
+        assert_eq!(got.data(), want.data());
     }
 
     #[test]

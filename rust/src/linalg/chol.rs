@@ -71,6 +71,12 @@ impl CholFactor {
         forward_sub_mat(&self.l, b)
     }
 
+    /// [`half_solve`](Self::half_solve) into a caller-owned buffer
+    /// (allocation-free in steady state; bit-identical to `half_solve`).
+    pub fn half_solve_into(&self, b: &Mat, out: &mut Mat) -> Result<()> {
+        forward_sub_mat_into(&self.l, b, out)
+    }
+
     /// Explicit inverse (only for small matrices, e.g. |S|×|S| summaries).
     pub fn inverse(&self) -> Result<Mat> {
         self.solve_mat(&Mat::identity(self.n()))
@@ -219,18 +225,41 @@ pub fn back_sub_t(l: &Mat, y: &[f64]) -> Result<Vec<f64>> {
 /// Solve L·Y = B for matrix B (column-blocked so the inner loops stay on
 /// contiguous rows of B/Y).
 pub fn forward_sub_mat(l: &Mat, b: &Mat) -> Result<Mat> {
-    let n = l.rows();
-    if b.rows() != n {
+    let mut y = b.clone();
+    forward_sub_mat_run(l, &mut y)?;
+    Ok(y)
+}
+
+/// [`forward_sub_mat`] writing into a caller-owned buffer: `out` becomes a
+/// copy of `b` (reusing its allocation) and is solved in place — the same
+/// arithmetic as the allocating variant, bit for bit. The shape check runs
+/// first, so on error `out` is left untouched.
+pub fn forward_sub_mat_into(l: &Mat, b: &Mat, out: &mut Mat) -> Result<()> {
+    if b.rows() != l.rows() {
         return Err(PgprError::Shape(format!(
             "forward_sub_mat: L {}x{}, B {}x{}",
-            n,
+            l.rows(),
             l.cols(),
             b.rows(),
             b.cols()
         )));
     }
-    let ncols = b.cols();
-    let mut y = b.clone();
+    out.assign(b);
+    forward_sub_mat_run(l, out)
+}
+
+fn forward_sub_mat_run(l: &Mat, y: &mut Mat) -> Result<()> {
+    let n = l.rows();
+    if y.rows() != n {
+        return Err(PgprError::Shape(format!(
+            "forward_sub_mat: L {}x{}, B {}x{}",
+            n,
+            l.cols(),
+            y.rows(),
+            y.cols()
+        )));
+    }
+    let ncols = y.cols();
     let ld = l.data();
     let yd = y.data_mut();
     for i in 0..n {
@@ -251,7 +280,7 @@ pub fn forward_sub_mat(l: &Mat, b: &Mat) -> Result<Mat> {
             *v /= lii;
         }
     }
-    Ok(y)
+    Ok(())
 }
 
 /// Solve Lᵀ·X = Y for matrix Y.
@@ -411,6 +440,19 @@ mod tests {
         let v = f.half_solve(&a).unwrap();
         let vtv = v.t_matmul(&v).unwrap();
         assert!(vtv.max_abs_diff(&a) < 1e-8 * a.max_abs());
+    }
+
+    #[test]
+    fn half_solve_into_matches_half_solve() {
+        let mut rng = Pcg64::new(27);
+        let a = spd(&mut rng, 24);
+        let f = cholesky(&a).unwrap();
+        let b = Mat::randn(24, 5, &mut rng);
+        let want = f.half_solve(&b).unwrap();
+        let mut out = Mat::zeros(3, 3); // wrong shape on purpose: into reshapes
+        f.half_solve_into(&b, &mut out).unwrap();
+        assert_eq!(out.data(), want.data());
+        assert!(f.half_solve_into(&Mat::zeros(7, 2), &mut out).is_err());
     }
 
     #[test]

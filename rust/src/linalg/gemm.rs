@@ -20,7 +20,7 @@
 //! sequential kernel, so threaded results are bit-identical — the property
 //! the backend-equivalence tests rely on.
 
-use crate::linalg::matrix::Mat;
+use crate::linalg::matrix::{Mat, MatView};
 use crate::util::error::{shape_err, Result};
 use crate::util::par::run_row_chunks;
 
@@ -178,6 +178,28 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
 
 /// C = A·Bᵀ where A is (m×k), B is (n×k) → C is (m×n).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
+    matmul_nt_view(a.view(), b.view())
+}
+
+/// [`matmul_nt`] over borrowed views (zero-copy row-range operands). The
+/// dot-product kernel computes each output row independently, so feeding
+/// it a view of rows `[r0, r1)` is bit-identical to feeding a copy.
+pub fn matmul_nt_view(a: MatView<'_>, b: MatView<'_>) -> Result<Mat> {
+    let mut c = Mat::zeros(a.rows(), b.rows());
+    matmul_nt_view_run(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// [`matmul_nt_view`] writing into a caller-owned buffer (reshaped via
+/// [`Mat::reset`], so steady-state serving reuses the allocation). The
+/// shape check runs first — on error the buffer is left untouched.
+pub fn matmul_nt_into(a: MatView<'_>, b: MatView<'_>, c: &mut Mat) -> Result<()> {
+    check_nt_shapes(a, b)?;
+    c.reset(a.rows(), b.rows());
+    matmul_nt_view_run(a, b, c)
+}
+
+fn check_nt_shapes(a: MatView<'_>, b: MatView<'_>) -> Result<()> {
     if a.cols() != b.cols() {
         return shape_err(format!(
             "matmul_nt: {}x{} · ({}x{})ᵀ",
@@ -187,23 +209,28 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Result<Mat> {
             b.cols()
         ));
     }
+    Ok(())
+}
+
+fn matmul_nt_view_run(a: MatView<'_>, b: MatView<'_>, c: &mut Mat) -> Result<()> {
+    check_nt_shapes(a, b)?;
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Mat::zeros(m, n);
+    debug_assert_eq!((c.rows(), c.cols()), (m, n));
     if m == 0 || k == 0 || n == 0 {
-        return Ok(c);
+        return Ok(());
     }
     let ad = a.data();
     let bd = b.data();
     let threads = plan_threads(m, m * k * n);
     if threads <= 1 {
         matmul_nt_rows(c.data_mut(), ad, bd, k, n, 0, m);
-        return Ok(c);
+        return Ok(());
     }
     let per = (m + threads - 1) / threads;
     run_row_chunks(c.data_mut(), m, n, per, move |chunk, lo, hi| {
         matmul_nt_rows(chunk, ad, bd, k, n, lo, hi)
     });
-    Ok(c)
+    Ok(())
 }
 
 /// Dot-product kernel over output rows `i0..i1` (rows are independent, so
@@ -495,6 +522,24 @@ mod tests {
         let got = matmul(&a, &b).unwrap();
         let want = naive(&a, &b);
         assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn view_and_into_variants_are_bit_identical() {
+        let mut rng = Pcg64::new(18);
+        let big_a = Mat::randn(40, 23, &mut rng);
+        let big_b = Mat::randn(31, 23, &mut rng);
+        // Row-range view vs an explicit copy of the same rows.
+        let want = matmul_nt(&big_a.rows_range(5, 29), &big_b.rows_range(2, 30)).unwrap();
+        let got = matmul_nt_view(big_a.rows_view(5, 29), big_b.rows_view(2, 30)).unwrap();
+        assert_eq!(got.data(), want.data());
+        // Into-variant reuses an oversized buffer and matches exactly.
+        let mut buf = Mat::zeros(100, 100);
+        matmul_nt_into(big_a.rows_view(5, 29), big_b.rows_view(2, 30), &mut buf).unwrap();
+        assert_eq!((buf.rows(), buf.cols()), (24, 28));
+        assert_eq!(buf.data(), want.data());
+        // Shape errors still surface through the view path.
+        assert!(matmul_nt_view(big_a.view(), Mat::zeros(3, 7).view()).is_err());
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Dense row-major matrix type used throughout the library.
 //!
-//! `Mat` owns a `Vec<f64>` in row-major order. It is deliberately plain —
-//! no lifetimes/views — because the GP algorithms here are dominated by
-//! O(n³) factorizations and O(n²·d) kernel evaluations; the occasional
-//! O(n²) copy for a gather is noise (verified in §Perf) and keeps every
-//! call site simple and safe.
+//! `Mat` owns a `Vec<f64>` in row-major order. Fit-time code is dominated
+//! by O(n³) factorizations and O(n²·d) kernel evaluations, where the
+//! occasional O(n²) copy for a gather is noise — those call sites stay on
+//! plain owned `Mat`s. The serve hot path is different: per-query block
+//! slicing used to dominate its allocation profile, so contiguous row
+//! ranges can now be borrowed as zero-copy [`MatView`]s (§Perf), and
+//! buffers can be recycled across calls via [`Mat::reset`]/[`Mat::assign`]
+//! (capacity is retained, so steady-state serving stops allocating).
 
 use std::fmt;
 
@@ -17,6 +20,54 @@ pub struct Mat {
     rows: usize,
     cols: usize,
     data: Vec<f64>,
+}
+
+/// Borrowed view of a contiguous row range of a [`Mat`] (zero-copy).
+///
+/// Row-major storage makes any `[r0, r1)` row range a contiguous slice,
+/// so the serve hot path can hand blocks to the covariance and GEMM
+/// kernels without the per-call copies `rows_range` makes. The kernels
+/// read the exact same bytes either way — view-fed results are
+/// bit-identical to copy-fed ones.
+#[derive(Clone, Copy)]
+pub struct MatView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f64],
+}
+
+impl<'a> MatView<'a> {
+    /// View over an explicit slice (must hold exactly `rows*cols` values).
+    pub fn new(rows: usize, cols: usize, data: &'a [f64]) -> MatView<'a> {
+        assert_eq!(data.len(), rows * cols, "MatView: slice length mismatch");
+        MatView { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &'a [f64] {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Materialize an owned copy (needed by backends that require owned
+    /// buffers, e.g. the PJRT covariance path).
+    pub fn to_mat(&self) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.to_vec() }
+    }
 }
 
 impl fmt::Debug for Mat {
@@ -194,6 +245,39 @@ impl Mat {
             cols: self.cols,
             data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
         }
+    }
+
+    /// Borrowed view of the contiguous row block [r0, r1) — the zero-copy
+    /// twin of [`rows_range`](Self::rows_range).
+    pub fn rows_view(&self, r0: usize, r1: usize) -> MatView<'_> {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        MatView {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: &self.data[r0 * self.cols..r1 * self.cols],
+        }
+    }
+
+    /// Borrowed view of the whole matrix.
+    pub fn view(&self) -> MatView<'_> {
+        MatView { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+
+    /// Reshape to `rows × cols` filled with zeros, keeping the allocation
+    /// (scratch-buffer reuse across serve calls).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `src`, keeping this buffer's allocation.
+    pub fn assign(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
     }
 
     /// Sub-block [r0,r1) × [c0,c1).
@@ -471,5 +555,34 @@ mod tests {
         let mut m = Mat::zeros(3, 3);
         m.add_diag(2.5);
         assert_eq!(m.trace(), 7.5);
+    }
+
+    #[test]
+    fn views_alias_rows_without_copy() {
+        let m = Mat::from_fn(5, 3, |i, j| (i * 3 + j) as f64);
+        let v = m.rows_view(1, 4);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.cols(), 3);
+        assert_eq!(v.row(0), m.row(1));
+        assert_eq!(v.data(), &m.data()[3..12]);
+        assert_eq!(v.to_mat(), m.rows_range(1, 4));
+        let whole = m.view();
+        assert_eq!(whole.rows(), 5);
+        assert_eq!(whole.data(), m.data());
+    }
+
+    #[test]
+    fn reset_and_assign_reuse_capacity() {
+        let mut buf = Mat::zeros(8, 8);
+        let cap = {
+            buf.reset(2, 3);
+            assert_eq!((buf.rows(), buf.cols()), (2, 3));
+            assert!(buf.data().iter().all(|&x| x == 0.0));
+            buf.data.capacity()
+        };
+        let src = Mat::from_fn(3, 2, |i, j| (i + j) as f64);
+        buf.assign(&src);
+        assert_eq!(buf, src);
+        assert!(buf.data.capacity() >= cap.min(64));
     }
 }

@@ -7,10 +7,14 @@ use crate::config::LmaConfig;
 use crate::gp::Prediction;
 use crate::kernels::se_ard::SeArdHyper;
 use crate::linalg::matrix::Mat;
+use crate::lma::context::{legacy_mode, LegacyMode, PredictContext, PredictScratch};
 use crate::lma::predict::scatter;
 use crate::lma::residual::LmaFitCore;
-use crate::lma::summary::{local_terms, reduce, sigma_bar_du, LocalTerms};
-use crate::lma::sweep::{rbar_du, TestSide};
+use crate::lma::summary::{
+    local_terms, local_terms_fast_in, reduce, reduce_u, sigma_bar_du, sigma_bar_rows_into,
+    LocalTerms, UTerms,
+};
+use crate::lma::sweep::{rbar_du, rbar_du_blocks, TestSide};
 use crate::util::error::Result;
 use crate::util::timer::PhaseProfiler;
 
@@ -60,9 +64,108 @@ impl LmaRegressor {
         self.predict_opts(test_x, false).map(|(p, _)| p)
     }
 
+    /// Predict reusing a caller-owned scratch workspace (the serving
+    /// batcher holds one per thread, so steady-state traffic recycles the
+    /// per-call buffers instead of reallocating them).
+    pub fn predict_with_scratch(
+        &self,
+        test_x: &Mat,
+        scratch: &mut PredictScratch,
+    ) -> Result<Prediction> {
+        match legacy_mode() {
+            LegacyMode::Dense => self.predict_dense(test_x, false).map(|(p, _)| p),
+            mode => self
+                .predict_mode_with(test_x, false, mode == LegacyMode::Recompute, scratch)
+                .map(|(p, _)| p),
+        }
+    }
+
     /// Predict with options; returns the prediction and the phase profile
-    /// of this call.
+    /// of this call. Honors the `PGPR_PREDICT_LEGACY` escape hatch:
+    /// `1` recomputes the predict context per call (bit-identical to the
+    /// fast path, only slower); `dense` runs the full pre-context
+    /// pipeline, reproducing pre-upgrade predictions byte for byte.
     pub fn predict_opts(&self, test_x: &Mat, full_cov: bool) -> Result<(Prediction, PhaseProfiler)> {
+        match legacy_mode() {
+            LegacyMode::Dense => self.predict_dense(test_x, full_cov),
+            mode => self.predict_mode(test_x, full_cov, mode == LegacyMode::Recompute),
+        }
+    }
+
+    /// Predict choosing the context mode explicitly: `recompute_context`
+    /// rebuilds every test-independent quantity on this call (the "old
+    /// recompute path") instead of reading the fit-time cache. Both modes
+    /// execute identical arithmetic — predictions are bit-identical.
+    pub fn predict_mode(
+        &self,
+        test_x: &Mat,
+        full_cov: bool,
+        recompute_context: bool,
+    ) -> Result<(Prediction, PhaseProfiler)> {
+        let mut scratch = PredictScratch::new();
+        self.predict_mode_with(test_x, full_cov, recompute_context, &mut scratch)
+    }
+
+    /// The full-control predict entry: context mode + scratch workspace.
+    pub fn predict_mode_with(
+        &self,
+        test_x: &Mat,
+        full_cov: bool,
+        recompute_context: bool,
+        scratch: &mut PredictScratch,
+    ) -> Result<(Prediction, PhaseProfiler)> {
+        let mut prof = PhaseProfiler::new();
+        let rebuilt;
+        let ctx: &PredictContext = if recompute_context {
+            rebuilt =
+                prof.scope("predict/context_recompute", || PredictContext::build(&self.core))?;
+            &rebuilt
+        } else {
+            self.core.context()
+        };
+        let mm = self.core.m();
+        let ts = prof.scope("predict/test_side", || TestSide::build(&self.core, test_x))?;
+        let rbar =
+            prof.scope("predict/sweep_rbar_du", || rbar_du_blocks(&self.core, ctx, &ts))?;
+        scratch.ensure_blocks(mm);
+        let PredictScratch { sbar, udot, vu } = scratch;
+        prof.scope("predict/sigma_bar", || {
+            sigma_bar_rows_into(&self.core, &ts, &rbar, &mut *sbar)
+        })?;
+        let terms: Result<Vec<UTerms>> = prof.scope("predict/local_summaries", || {
+            (0..mm)
+                .map(|m| {
+                    local_terms_fast_in(&self.core, ctx, &*sbar, m, full_cov, &mut *udot, &mut *vu)
+                })
+                .collect()
+        });
+        let terms = terms?;
+        let g = prof.scope("predict/global_summary", || {
+            reduce_u(&terms, ts.total(), self.core.basis.size())
+        })?;
+        let pred = prof.scope("predict/theorem2", || {
+            crate::lma::predict::predict_from_context(
+                &self.core,
+                &ts,
+                ctx,
+                &g,
+                if full_cov { Some(&rbar) } else { None },
+            )
+        })?;
+        Ok((scatter(&ts, pred), prof))
+    }
+
+    /// The pre-context reference pipeline: dense R̄_DU sweep + per-call
+    /// local summaries + per-call Σ̈_SS factorization. Kept for
+    /// benchmarking (`bench_predict_hotpath`'s "dense" series) and
+    /// cross-checks; the fast path agrees with it to rounding
+    /// (bit-identical except the lower-sweep association, asserted in
+    /// `rust/tests/predict_context.rs`).
+    pub fn predict_dense(
+        &self,
+        test_x: &Mat,
+        full_cov: bool,
+    ) -> Result<(Prediction, PhaseProfiler)> {
         let mut prof = PhaseProfiler::new();
         let ts = prof.scope("predict/test_side", || TestSide::build(&self.core, test_x))?;
         let rbar = prof.scope("predict/sweep_rbar_du", || rbar_du(&self.core, &ts))?;
@@ -202,5 +305,63 @@ mod tests {
         assert!(prof.total("predict/sweep_rbar_du") >= 0.0);
         assert!(prof.grand_total() > 0.0);
         assert!(model.profiler().total("fit/core") > 0.0);
+    }
+
+    #[test]
+    fn context_and_recompute_modes_are_bit_identical() {
+        let mut rng = Pcg64::new(156);
+        let (x, y, hyp) = sine_data(&mut rng, 140, 0.1);
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(5, 2, 20, 6)).unwrap();
+        let t = Mat::col_vec(&rng.uniform_vec(20, -4.5, 4.5));
+        let (fast, _) = model.predict_mode(&t, true, false).unwrap();
+        let (slow, _) = model.predict_mode(&t, true, true).unwrap();
+        assert_eq!(fast.mean, slow.mean);
+        assert_eq!(fast.var, slow.var);
+        assert_eq!(fast.cov.unwrap().data(), slow.cov.unwrap().data());
+    }
+
+    #[test]
+    fn fast_path_agrees_with_dense_reference() {
+        let mut rng = Pcg64::new(157);
+        let (x, y, hyp) = sine_data(&mut rng, 150, 0.1);
+        for b in [0usize, 2, 4] {
+            let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(5, b, 24, 7)).unwrap();
+            let t = Mat::col_vec(&rng.uniform_vec(25, -4.5, 4.5));
+            let (fast, _) = model.predict_opts(&t, false).unwrap();
+            let (dense, _) = model.predict_dense(&t, false).unwrap();
+            for i in 0..25 {
+                assert!(
+                    (fast.mean[i] - dense.mean[i]).abs() < 1e-10,
+                    "B={b} mean[{i}]: {} vs {}",
+                    fast.mean[i],
+                    dense.mean[i]
+                );
+                assert!((fast.var[i] - dense.var[i]).abs() < 1e-10, "B={b} var[{i}]");
+            }
+            if b == 0 || b == 4 {
+                // No lower out-of-band chaining ⇒ exactly the same ops.
+                assert!(fast.mean == dense.mean, "B={b}: expected exact mean equality");
+                assert!(fast.var == dense.var, "B={b}: expected exact var equality");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_across_calls() {
+        let mut rng = Pcg64::new(158);
+        let (x, y, hyp) = sine_data(&mut rng, 120, 0.1);
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(4, 1, 16, 8)).unwrap();
+        let mut scratch = crate::lma::context::PredictScratch::new();
+        // Different batch shapes through the same scratch: a big batch
+        // first (grows the buffers), then single points.
+        let big = Mat::col_vec(&rng.uniform_vec(30, -4.0, 4.0));
+        let _ = model.predict_with_scratch(&big, &mut scratch).unwrap();
+        for _ in 0..3 {
+            let q = Mat::col_vec(&[rng.uniform_in(-4.0, 4.0)]);
+            let a = model.predict_with_scratch(&q, &mut scratch).unwrap();
+            let b = model.predict(&q).unwrap();
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.var, b.var);
+        }
     }
 }

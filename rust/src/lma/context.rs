@@ -1,0 +1,313 @@
+//! Fit-time predict context — every test-independent piece of the
+//! Theorem-2 pipeline, hoisted out of the serve hot path.
+//!
+//! The Definition-1/2 algebra splits cleanly: per machine m the
+//! half-solves `vs_m = L_{C_m}⁻¹·Σ̇_S^m` and `vy_m = L_{C_m}⁻¹·ẏ_m`, their
+//! reductions ÿ_S and Σ̈_SS (with the jittered Σ_SS prior term), the
+//! Σ̈_SS Cholesky and `a = Σ̈_SS⁻¹·ÿ_S` depend only on the training data —
+//! yet the pre-context code recomputed all of them on **every** predict
+//! call. [`PredictContext::build`] runs that algebra once at fit time with
+//! the exact operations (and therefore the exact bits) the per-call path
+//! used, so a query now only pays for the U-dependent terms
+//! (`vu`, ÿ_U, Σ̈_US, diag Σ̈_UU) plus the R̄_DU sweep.
+//!
+//! `h_init` additionally hoists the lower-sweep frontier seeds
+//! `[R̄_{D_m D_{m−B}} … R̄_{D_m D_{m−1}}]` — pure data movement the old
+//! sweep re-assembled (transposes + hstack) per call per row.
+//!
+//! The context is persisted in model artifacts (format v2) so
+//! `pgpr serve --model` boots straight into the fast path; v1 artifacts
+//! rebuild it on load, which is deterministic and therefore preserves the
+//! bit-identical save→load→predict guarantee.
+//!
+//! `PGPR_PREDICT_LEGACY=1` (read once per process) switches serving back
+//! to per-call recomputation of this context — the before/after escape
+//! hatch `bench_predict_hotpath` measures. Both modes execute identical
+//! arithmetic, so predictions are bit-identical; only where the work
+//! happens changes. `PGPR_PREDICT_LEGACY=dense` goes further and runs
+//! the full pre-context pipeline (dense sweep included), reproducing
+//! pre-upgrade predictions byte for byte for A/B verification.
+
+use std::sync::OnceLock;
+
+use crate::linalg::chol::CholFactor;
+use crate::linalg::gemm;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::residual::LmaFitCore;
+use crate::util::error::Result;
+
+/// Test-independent predict state, computed once per fit (or artifact
+/// load) and reused by every query.
+#[derive(Clone, Debug)]
+pub struct PredictContext {
+    /// vs_m = L_{C_m}⁻¹·Σ̇_S^m per block (n_m × |S|).
+    pub vs: Vec<Mat>,
+    /// vy_m = L_{C_m}⁻¹·ẏ_m per block (n_m × 1).
+    pub vy: Vec<Mat>,
+    /// ÿ_S = Σ_m vs_mᵀ·vy_m (|S|).
+    pub ys: Vec<f64>,
+    /// Cholesky of Σ̈_SS = Σ_SS + jitter·I + Σ_m vs_mᵀ·vs_m.
+    pub sss_chol: CholFactor,
+    /// a = Σ̈_SS⁻¹·ÿ_S (the mean correction's test-independent factor).
+    pub a: Vec<f64>,
+    /// Lower-sweep frontier seed [R̄_{D_m D_{m−B}} … R̄_{D_m D_{m−1}}]
+    /// (n_m × |D_{m−B..m−1}|); None for m ≤ B or B = 0.
+    pub h_init: Vec<Option<Mat>>,
+}
+
+impl PredictContext {
+    /// Build the context from a fitted core. Deterministic, and performs
+    /// the same floating-point operations (in the same order) as the
+    /// pre-context per-call path, so cached and recomputed predictions
+    /// are bit-identical.
+    pub fn build(core: &LmaFitCore) -> Result<PredictContext> {
+        let (ctx, _, _) = Self::build_timed(core, 1)?;
+        Ok(ctx)
+    }
+
+    /// [`build`](Self::build) with per-block wall-clock attribution: the
+    /// per-block half-solves belong to the rank that owns the block, the
+    /// reduction (ÿ_S, Σ̈_SS, its Cholesky, `a`) to the master — the
+    /// parallel fit charges its simulated/threaded ranks accordingly.
+    /// Results are bit-identical for every `threads` value.
+    pub fn build_timed(
+        core: &LmaFitCore,
+        threads: usize,
+    ) -> Result<(PredictContext, Vec<f64>, f64)> {
+        let mm = core.m();
+        let b = core.b();
+        let s = core.basis.size();
+        type BlockCtx = (Mat, Mat, Option<Mat>, f64);
+        let per_block =
+            crate::util::par::parallel_map(mm, threads.max(1), |m| -> Result<BlockCtx> {
+                let t0 = std::time::Instant::now();
+                let cf = &core.c_chol[m];
+                let vs_m = cf.half_solve(&core.s_dot[m])?;
+                let vy_m = cf.half_solve(&Mat::col_vec(&core.y_dot[m]))?;
+                let h_m = if b == 0 || m < b + 1 {
+                    None
+                } else {
+                    let blocks: Vec<Mat> = ((m - b)..m).map(|k| core.r_in_band(m, k)).collect();
+                    let refs: Vec<&Mat> = blocks.iter().collect();
+                    Some(Mat::hstack(&refs)?)
+                };
+                Ok((vs_m, vy_m, h_m, t0.elapsed().as_secs_f64()))
+            });
+        let mut vs = Vec::with_capacity(mm);
+        let mut vy = Vec::with_capacity(mm);
+        let mut h_init = Vec::with_capacity(mm);
+        let mut per_block_secs = Vec::with_capacity(mm);
+        for res in per_block {
+            let (vs_m, vy_m, h_m, secs) = res?;
+            vs.push(vs_m);
+            vy.push(vy_m);
+            h_init.push(h_m);
+            per_block_secs.push(secs);
+        }
+
+        let t0 = std::time::Instant::now();
+        // Σ̈_SS's prior term must be the SAME (jittered) Σ_SS that defines
+        // Q = Σ_·S·Σ_SS⁻¹·Σ_S· — see `summary::reduce` for why the jitters
+        // must agree. Summation order over m matches the per-call reduce.
+        let mut sss = crate::kernels::se_ard::cov_cross_scaled(
+            &core.basis.s_scaled,
+            &core.basis.s_scaled,
+            core.hyp.sigma_s2,
+        )?;
+        sss.add_diag(core.basis.jitter);
+        let mut ys = vec![0.0; s];
+        for m in 0..mm {
+            let ys_m = vs[m].t_matmul(&vy[m])?.into_data();
+            for (acc, v) in ys.iter_mut().zip(&ys_m) {
+                *acc += v;
+            }
+            sss.axpy(1.0, &gemm::syrk_tn(&vs[m]))?;
+        }
+        let (sss_chol, _jitter) = gp_cholesky(&sss)?;
+        let a = sss_chol.solve_vec(&ys)?;
+        let reduce_secs = t0.elapsed().as_secs_f64();
+
+        Ok((PredictContext { vs, vy, ys, sss_chol, a, h_init }, per_block_secs, reduce_secs))
+    }
+
+    /// Approximate resident size of the context in bytes (README's
+    /// memory-cost note; dominated by the |D|×|S| `vs` cache and the
+    /// B-band `h_init` seeds).
+    pub fn approx_bytes(&self) -> usize {
+        let f = 8usize;
+        let mats = |v: &[Mat]| -> usize { v.iter().map(|m| m.rows() * m.cols()).sum() };
+        f * (mats(&self.vs)
+            + mats(&self.vy)
+            + self.ys.len()
+            + self.a.len()
+            + self.sss_chol.l().rows() * self.sss_chol.l().cols()
+            + self
+                .h_init
+                .iter()
+                .flatten()
+                .map(|m| m.rows() * m.cols())
+                .sum::<usize>())
+    }
+}
+
+/// Reusable per-caller predict workspace. One lives in each
+/// `PredictionService` (the batcher thread owns it), so steady-state
+/// serving recycles the large per-call buffers — the per-block Σ̄_{D_m U}
+/// rows plus the Σ̇_U / vu temporaries — instead of reallocating them on
+/// every request. A fresh (empty) scratch is always valid; buffers grow
+/// to the largest batch seen and stay there.
+#[derive(Debug, Default)]
+pub struct PredictScratch {
+    /// Σ̄_{D_m U} rows, one buffer per training block.
+    pub(crate) sbar: Vec<Mat>,
+    /// Σ̇_U^m buffer (reused across blocks within a call).
+    pub(crate) udot: Mat,
+    /// vu = L_{C_m}⁻¹·Σ̇_U^m buffer.
+    pub(crate) vu: Mat,
+}
+
+impl PredictScratch {
+    pub fn new() -> PredictScratch {
+        PredictScratch::default()
+    }
+
+    /// Ensure one Σ̄ row buffer per block exists.
+    pub(crate) fn ensure_blocks(&mut self, mm: usize) {
+        while self.sbar.len() < mm {
+            self.sbar.push(Mat::zeros(0, 0));
+        }
+    }
+}
+
+/// What `PGPR_PREDICT_LEGACY` asks the predict path to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LegacyMode {
+    /// Default: read the fit-time context (the fast path).
+    Off,
+    /// `PGPR_PREDICT_LEGACY=1` (or any other non-`dense` value): rebuild
+    /// the context on every call — the "old recompute path" with
+    /// **bit-identical** outputs, the before/after benchmarking hatch.
+    Recompute,
+    /// `PGPR_PREDICT_LEGACY=dense`: the full pre-context pipeline (dense
+    /// R̄_DU sweep + per-call summaries + per-call Σ̈_SS factorization) —
+    /// reproduces pre-upgrade predictions **byte for byte** for A/B
+    /// verification against stored outputs. Centralized engines only;
+    /// cluster engines fall back to `Recompute` (their wavefront sweep
+    /// never changed, so `Recompute` already reproduces their old bits).
+    Dense,
+}
+
+/// The `PGPR_PREDICT_LEGACY` escape hatch, read once per process so the
+/// hot path never touches the environment.
+pub fn legacy_mode() -> LegacyMode {
+    static LEGACY: OnceLock<LegacyMode> = OnceLock::new();
+    *LEGACY.get_or_init(|| parse_legacy(std::env::var("PGPR_PREDICT_LEGACY").ok().as_deref()))
+}
+
+fn parse_legacy(value: Option<&str>) -> LegacyMode {
+    let Some(raw) = value else { return LegacyMode::Off };
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "0" | "off" | "false" | "no" => LegacyMode::Off,
+        "dense" => LegacyMode::Dense,
+        "1" | "true" | "yes" | "recompute" => LegacyMode::Recompute,
+        other => {
+            // Fail loud, act conservative: a typo should not silently
+            // select a different A/B baseline than intended.
+            eprintln!(
+                "warning: unrecognized PGPR_PREDICT_LEGACY value `{other}` — treating as `1` \
+                 (recompute); valid values: 0/off, 1/recompute, dense"
+            );
+            LegacyMode::Recompute
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::util::rng::Pcg64;
+
+    fn fitted(seed: u64, n: usize, m: usize, b: usize, s: usize) -> LmaFitCore {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.9, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -4.0, 4.0));
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: s,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        LmaFitCore::fit(&x, &y, &hyp, &cfg).unwrap()
+    }
+
+    #[test]
+    fn build_matches_per_call_reduce() {
+        // The cached ÿ_S / Σ̈_SS must be bit-identical to what the legacy
+        // per-call summary pipeline computes for an empty test set.
+        let core = fitted(301, 100, 5, 2, 18);
+        let ctx = PredictContext::build(&core).unwrap();
+        let ts = crate::lma::sweep::TestSide::build(&core, &Mat::zeros(0, 1)).unwrap();
+        let rb = crate::lma::sweep::rbar_du(&core, &ts).unwrap();
+        let sbar = crate::lma::summary::sigma_bar_du(&core, &ts, &rb).unwrap();
+        let terms: Vec<_> = (0..5)
+            .map(|m| crate::lma::summary::local_terms(&core, &sbar, m, false).unwrap())
+            .collect();
+        let g = crate::lma::summary::reduce(&core, &terms, 0).unwrap();
+        assert_eq!(ctx.ys, g.ys);
+        let (f, _) = gp_cholesky(&g.sss).unwrap();
+        assert_eq!(ctx.sss_chol.l().data(), f.l().data());
+        assert_eq!(ctx.a, f.solve_vec(&g.ys).unwrap());
+    }
+
+    #[test]
+    fn build_is_thread_invariant() {
+        let core = fitted(302, 120, 6, 1, 16);
+        let (seq, _, _) = PredictContext::build_timed(&core, 1).unwrap();
+        let (par, per_blk, _) = PredictContext::build_timed(&core, 4).unwrap();
+        assert_eq!(per_blk.len(), 6);
+        assert_eq!(seq.ys, par.ys);
+        assert_eq!(seq.a, par.a);
+        for m in 0..6 {
+            assert_eq!(seq.vs[m].data(), par.vs[m].data());
+            assert_eq!(seq.vy[m].data(), par.vy[m].data());
+        }
+    }
+
+    #[test]
+    fn legacy_env_parsing() {
+        assert_eq!(parse_legacy(None), LegacyMode::Off);
+        assert_eq!(parse_legacy(Some("")), LegacyMode::Off);
+        assert_eq!(parse_legacy(Some("0")), LegacyMode::Off);
+        assert_eq!(parse_legacy(Some("off")), LegacyMode::Off);
+        assert_eq!(parse_legacy(Some("false")), LegacyMode::Off);
+        assert_eq!(parse_legacy(Some("1")), LegacyMode::Recompute);
+        assert_eq!(parse_legacy(Some("true")), LegacyMode::Recompute);
+        assert_eq!(parse_legacy(Some("dense")), LegacyMode::Dense);
+        assert_eq!(parse_legacy(Some(" DENSE ")), LegacyMode::Dense);
+        // Unknown values fall back to the conservative recompute baseline
+        // (with a loud warning).
+        assert_eq!(parse_legacy(Some("bogus")), LegacyMode::Recompute);
+    }
+
+    #[test]
+    fn h_init_matches_sweep_seed() {
+        let core = fitted(303, 90, 5, 2, 14);
+        let ctx = PredictContext::build(&core).unwrap();
+        assert!(ctx.h_init[0].is_none());
+        assert!(ctx.h_init[2].is_none());
+        for m in 3..5 {
+            let h = ctx.h_init[m].as_ref().unwrap();
+            let blocks: Vec<Mat> = ((m - 2)..m).map(|k| core.r_in_band(m, k)).collect();
+            let refs: Vec<&Mat> = blocks.iter().collect();
+            let want = Mat::hstack(&refs).unwrap();
+            assert_eq!(h.data(), want.data());
+        }
+        assert!(ctx.approx_bytes() > 0);
+    }
+}

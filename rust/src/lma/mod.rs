@@ -18,6 +18,11 @@
 //!    into the global summary (Definition 2).
 //! 5. [`predict`] evaluates the Theorem-2 predictive mean/variance.
 //!
+//! [`context`] hoists every test-independent piece of 3–5 (the
+//! Definition-1 half-solves, ÿ_S, the Σ̈_SS Cholesky, the lower-sweep
+//! frontier seeds) into a fit-time [`context::PredictContext`], so a
+//! query only pays for U-dependent algebra — the serve hot path.
+//!
 //! [`centralized`] wires 1–5 into [`LmaRegressor`]; `cluster`-backed
 //! parallel execution lives in [`parallel`]; [`spectrum`] provides the
 //! B-sweep utilities and the PIC/FGP-equivalence checks (B=0 / B=M−1).
@@ -26,6 +31,7 @@ pub mod partition;
 pub mod residual;
 pub mod sweep;
 pub mod summary;
+pub mod context;
 pub mod predict;
 pub mod centralized;
 pub mod parallel;

@@ -15,9 +15,12 @@
 //!    n−1. Only a B-diagonal sliding window of R̄_DD is ever alive. All
 //!    blocks of one diagonal are independent, so each wavefront step is
 //!    one [`Backend::compute_all`] batch.
-//! 3. **Summaries** — rank m computes its Definition-1 local terms and
-//!    ships them to the master; the master reduces (Definition 2) and
-//!    broadcasts the per-rank slices; rank m evaluates Theorem 2 for U_m.
+//! 3. **Summaries** — rank m computes its *query-dependent* Definition-1
+//!    terms (ÿ_U, Σ̈_US, diag Σ̈_UU summands) against the fit-time
+//!    [`PredictContext`] (the S-side half-solves, ÿ_S and the Σ̈_SS
+//!    Cholesky were computed and replicated once at fit) and ships them
+//!    to the master; the master reduces the U-side and broadcasts the
+//!    per-rank slices; rank m evaluates Theorem 2 for U_m.
 //!
 //! The protocol is generic over [`Backend`]: with the virtual-time
 //! `cluster::SimCluster` rank work runs sequentially under virtual-time
@@ -41,11 +44,11 @@ use crate::config::{ClusterConfig, LmaConfig};
 use crate::gp::Prediction;
 use crate::kernels::se_ard::{self, SeArdHyper};
 use crate::linalg::matrix::Mat;
-use crate::linalg::solve::gp_cholesky;
+use crate::lma::context::{legacy_mode, LegacyMode, PredictContext};
 use crate::lma::predict::scatter;
-use crate::lma::residual::{r_cross, LmaFitCore};
-use crate::lma::summary::{local_terms, reduce, sigma_bar_du, LocalTerms};
-use crate::lma::sweep::TestSide;
+use crate::lma::residual::{r_cross_view, LmaFitCore};
+use crate::lma::summary::{local_terms_fast, reduce_u, sigma_bar_rows, u_terms_bytes, UTerms};
+use crate::lma::sweep::{RbarBlocks, TestSide};
 use crate::metrics;
 use crate::util::error::{PgprError, Result};
 
@@ -116,7 +119,11 @@ impl ParallelLma {
             // Whitened rows for the rank's own block.
             cl.charge(r, t.wt_secs / p as f64)?;
             cl.charge(r, t.per_block_secs[r])?;
+            // Predict-context: per-block half-solves on the owning rank,
+            // the Σ̈_SS reduction on the master.
+            cl.charge(r, t.ctx_per_block_secs[r])?;
         }
+        cl.charge(0, t.ctx_reduce_secs)?;
         // In-band residual blocks span neighbours' data: rank m needs
         // y/X over D_m^B, which the paper pre-places on machine m, so no
         // fit-time messages beyond the initial data distribution.
@@ -166,15 +173,39 @@ impl ParallelLma {
 
     /// Parallel predict on the configured backend. Returns predictions in
     /// the caller's test order plus the time accounts (fit included).
+    /// Honors the `PGPR_PREDICT_LEGACY` escape hatch (per-call context
+    /// recomputation; bit-identical, only slower — the cluster wavefront
+    /// sweep never changed, so `dense` also maps to recomputation here).
     pub fn predict(&self, test_x: &Mat) -> Result<ParallelRun> {
+        self.predict_opts(test_x, legacy_mode() != LegacyMode::Off)
+    }
+
+    /// [`predict`](Self::predict) with the context mode chosen
+    /// explicitly (`recompute_context` = the old per-call behavior).
+    pub fn predict_opts(&self, test_x: &Mat, recompute_context: bool) -> Result<ParallelRun> {
         let mut cl = AnyCluster::new(&self.cluster_cfg)?;
-        self.predict_on(test_x, &mut cl)
+        self.predict_on_opts(test_x, &mut cl, recompute_context)
     }
 
     /// Parallel predict on a caller-supplied backend (the generic seam:
     /// any `Backend` implementation — sim, threads, future process/RPC —
     /// executes the same protocol).
     pub fn predict_on<B: Backend>(&self, test_x: &Mat, cl: &mut B) -> Result<ParallelRun> {
+        self.predict_on_opts(test_x, cl, legacy_mode() != LegacyMode::Off)
+    }
+
+    /// The full protocol with an explicit context mode. With
+    /// `recompute_context` the Definition-1 half-solves and the Σ̈_SS
+    /// factorization are redone on the owning ranks (charged to them),
+    /// reproducing the pre-context per-query cost; otherwise the fit-time
+    /// [`PredictContext`] is read. Predictions are bit-identical either
+    /// way.
+    pub fn predict_on_opts<B: Backend>(
+        &self,
+        test_x: &Mat,
+        cl: &mut B,
+        recompute_context: bool,
+    ) -> Result<ParallelRun> {
         let wall0 = Instant::now();
         let core = &self.core;
         let mm = core.m();
@@ -186,6 +217,20 @@ impl ParallelLma {
                 mm
             )));
         }
+        // Context: cached from fit, or recomputed per call — rank m owns
+        // its block's half-solves, the master owns the Σ̈_SS reduction.
+        let rebuilt;
+        let ctx: &PredictContext = if recompute_context {
+            let (c, per_block_secs, reduce_secs) = PredictContext::build_timed(core, 1)?;
+            for (m, secs) in per_block_secs.iter().enumerate() {
+                cl.charge(m, *secs)?;
+            }
+            cl.charge(0, reduce_secs)?;
+            rebuilt = c;
+            &rebuilt
+        } else {
+            core.context()
+        };
 
         // --- test-side construction: rank n builds U_n's state ---
         let ts = TestSide::build(core, test_x)?;
@@ -206,11 +251,11 @@ impl ParallelLma {
                         core.basis.wt(&xn)?;
                         if ts_ref.r_up[n].is_some() {
                             let band = core.part.forward_band(n, b);
-                            let xb = core.x_scaled.rows_range(band.start, band.end);
-                            let wb = core.wt_d.rows_range(band.start, band.end);
-                            let xu = ts_ref.x_block(n);
-                            let wu = ts_ref.wt_block(n);
-                            let r_ub = r_cross(&xu, &wu, &xb, &wb, core.hyp.sigma_s2, None)?;
+                            let xb = core.x_scaled.rows_view(band.start, band.end);
+                            let wb = core.wt_d.rows_view(band.start, band.end);
+                            let xu = ts_ref.x_block_view(n);
+                            let wu = ts_ref.wt_block_view(n);
+                            let r_ub = r_cross_view(xu, wu, xb, wb, core.hyp.sigma_s2, None)?;
                             let bf = core.band_chol[n].as_ref().expect("band factor exists");
                             bf.solve_mat(&r_ub.transpose())?;
                         }
@@ -223,9 +268,9 @@ impl ParallelLma {
             }
         }
 
-        // --- R̄_DU via the Appendix-C wavefront ---
+        // --- R̄_DU via the Appendix-C wavefront, stored band-sparse ---
         let total_u = ts.total();
-        let mut rbar = Mat::zeros(core.part.total(), total_u);
+        let mut rbar = RbarBlocks::new(mm);
 
         // In-band blocks: rank m computes row m's near diagonal.
         {
@@ -237,18 +282,18 @@ impl ParallelLma {
                     Box::new(move || {
                         let lo = m.saturating_sub(b);
                         let hi = (m + b).min(mm - 1);
-                        let xm = core.x_block(m);
-                        let wm = core.wt_block(m);
+                        let xm = core.x_block_view(m);
+                        let wm = core.wt_block_view(m);
                         let mut out = Vec::new();
                         for n in lo..=hi {
                             if ts_ref.size(n) == 0 {
                                 continue;
                             }
-                            let blk = r_cross(
-                                &xm,
-                                &wm,
-                                &ts_ref.x_block(n),
-                                &ts_ref.wt_block(n),
+                            let blk = r_cross_view(
+                                xm,
+                                wm,
+                                ts_ref.x_block_view(n),
+                                ts_ref.wt_block_view(n),
                                 core.hyp.sigma_s2,
                                 None,
                             )?;
@@ -260,7 +305,7 @@ impl ParallelLma {
             }
             for (m, res) in cl.compute_all(tasks)?.into_iter().enumerate() {
                 for (n, blk) in res? {
-                    rbar.set_block(core.part.range(m).start, ts.starts[n], &blk);
+                    rbar.set(m, n, blk);
                 }
             }
         }
@@ -307,13 +352,7 @@ impl ParallelLma {
                             let n = m + delta;
                             let p_m = core.p[m].as_ref().expect("interior propagator");
                             let upper = if ts_ref.size(n) > 0 {
-                                let band = core.part.forward_band(m, b);
-                                let f = rbar_ref.block(
-                                    band.start,
-                                    band.end,
-                                    ts_ref.starts[n],
-                                    ts_ref.starts[n + 1],
-                                );
+                                let f = rbar_ref.band_rows(core, ts_ref, m, n)?;
                                 Some(p_m.matmul(&f)?)
                             } else {
                                 None
@@ -340,14 +379,14 @@ impl ParallelLma {
                     let n = m + delta;
                     let (upper, dd, ud) = res?;
                     if let Some(u) = upper {
-                        rbar.set_block(core.part.range(m).start, ts.starts[n], &u);
+                        rbar.set(m, n, u);
                     }
                     if let Some(ud) = ud {
                         // R̄_{D_n U_m} = (R̄_{U_m D_n})ᵀ — owned by rank n's
                         // rows; rank m sends it over (Appendix C final
                         // transpose-communication step).
                         cl.send(m, n, ud.rows() * ud.cols() * F64_BYTES)?;
-                        rbar.set_block(core.part.range(n).start, ts.starts[m], &ud.transpose());
+                        rbar.set(n, m, ud.transpose());
                     }
                     dd_window.insert((m, n), dd);
                 }
@@ -359,47 +398,43 @@ impl ParallelLma {
             }
         }
 
-        // --- Σ̄_DU and local summaries on the owning ranks ---
-        let sbar = sigma_bar_du(core, &ts, &rbar)?;
-        let mut terms: Vec<LocalTerms> = Vec::with_capacity(mm);
+        // --- Σ̄_DU block rows and U-side local summaries on the owning
+        // ranks (the S-side lives in the context since fit time) ---
+        let sbar = sigma_bar_rows(core, &ts, &rbar)?;
+        let mut terms: Vec<UTerms> = Vec::with_capacity(mm);
         let mut term_bytes = vec![0usize; mm];
         {
-            let mut tasks: Vec<RankTask<'_, Result<LocalTerms>>> = Vec::new();
+            let mut tasks: Vec<RankTask<'_, Result<UTerms>>> = Vec::new();
             for m in 0..mm {
                 let sb = &sbar;
-                tasks.push((m, Box::new(move || local_terms(core, sb, m, false))));
+                let cx = ctx;
+                tasks.push((m, Box::new(move || local_terms_fast(core, cx, sb, m, false))));
             }
             for (m, t) in cl.compute_all(tasks)?.into_iter().enumerate() {
                 let t = t?;
-                term_bytes[m] = crate::lma::summary::local_terms_bytes(&t);
+                term_bytes[m] = u_terms_bytes(&t);
                 terms.push(t);
             }
         }
 
-        // --- reduce to master, master builds the global summary ---
+        // --- reduce to master, master builds the U-side summary ---
         cl.reduce_to_master(&term_bytes)?;
-        let g = cl.compute(0, || reduce(core, &terms, total_u))??;
+        let g = cl.compute(0, || reduce_u(&terms, total_u, core.basis.size()))??;
 
-        // --- master broadcasts per-rank slices; ranks run Theorem 2 ---
+        // --- master broadcasts per-rank slices; ranks run Theorem 2.
+        // Only U-dependent data crosses the network per query: ÿ_S, Σ̈_SS
+        // and `a` were replicated once at fit time with the context. ---
         let s = core.basis.size();
         let bcast: Vec<usize> = (0..mm)
             .map(|m| {
                 let um = ts.size(m);
-                F64_BYTES * (s + s * s + um + um * s + um)
+                F64_BYTES * (um + um * s + um)
             })
             .collect();
         cl.broadcast_from_master(&bcast)?;
 
-        // Each rank factorizes Σ̈_SS and solves for its own slice. The
-        // factorization is identical work on every rank: measure once,
-        // charge everywhere.
-        let (sss_factor, fac_secs) = crate::util::timer::time_it(|| gp_cholesky(&g.sss));
-        let (sss_factor, _jit) = sss_factor?;
-        for m in 0..mm {
-            cl.charge(m, fac_secs)?;
-        }
-        let a = sss_factor.solve_vec(&g.ys)?;
-        let w = sss_factor.half_solve(&g.sus.transpose())?;
+        let a = &ctx.a;
+        let w = ctx.sss_chol.half_solve(&g.sus.transpose())?;
         let prior = se_ard::prior_var(&core.hyp);
         let mut mean = vec![0.0; total_u];
         let mut var = vec![0.0; total_u];

@@ -12,9 +12,10 @@ use crate::gp::Prediction;
 use crate::kernels::se_ard;
 use crate::linalg::matrix::Mat;
 use crate::linalg::solve::gp_cholesky;
+use crate::lma::context::PredictContext;
 use crate::lma::residual::LmaFitCore;
-use crate::lma::summary::GlobalSummary;
-use crate::lma::sweep::TestSide;
+use crate::lma::summary::{GlobalSummary, UTerms};
+use crate::lma::sweep::{RbarBlocks, TestSide};
 use crate::util::error::Result;
 
 /// Σ̄_UU of equation (2): exact Σ blocks within the B-band, and the
@@ -23,6 +24,26 @@ use crate::util::error::Result;
 /// lower side), where R̄_{D_m^B U_n} are rows of the already-materialized
 /// R̄_DU. Includes the σ_n² noise diagonal (predicting observables).
 pub fn sigma_bar_uu(core: &LmaFitCore, ts: &TestSide, rbar_du: &Mat) -> Result<Mat> {
+    sigma_bar_uu_with(core, ts, |m, n| {
+        let band = core.part.forward_band(m, core.b());
+        Ok(rbar_du.block(band.start, band.end, ts.starts[n], ts.starts[n + 1]))
+    })
+}
+
+/// Σ̄_UU over the band-sparse sweep output — the same assembly as
+/// [`sigma_bar_uu`], reading the out-of-band band rows from
+/// [`RbarBlocks`] instead of a dense matrix.
+pub fn sigma_bar_uu_blocks(core: &LmaFitCore, ts: &TestSide, rbar: &RbarBlocks) -> Result<Mat> {
+    sigma_bar_uu_with(core, ts, |m, n| rbar.band_rows(core, ts, m, n))
+}
+
+/// Shared Σ̄_UU assembly, parameterized over how the stacked band rows
+/// R̄_{D_m^B U_n} are produced (dense slice vs band-sparse stack) so the
+/// two representations can never drift apart.
+fn sigma_bar_uu_with<F>(core: &LmaFitCore, ts: &TestSide, band_rows: F) -> Result<Mat>
+where
+    F: Fn(usize, usize) -> Result<Mat>,
+{
     let mm = core.m();
     let b = core.b();
     let nu = ts.total();
@@ -49,8 +70,7 @@ pub fn sigma_bar_uu(core: &LmaFitCore, ts: &TestSide, rbar_du: &Mat) -> Result<M
                 Mat::zeros(ts.size(m), ts.size(n))
             } else {
                 // R̄_{U_m U_n} = R'^U_m · R̄_{D_m^B U_n}.
-                let band = core.part.forward_band(m, b);
-                let rows = rbar_du.block(band.start, band.end, ts.starts[n], ts.starts[n + 1]);
+                let rows = band_rows(m, n)?;
                 let rup = ts.r_up[m].as_ref().expect("interior test block has R'^U");
                 rup.matmul(&rows)?
             };
@@ -72,6 +92,52 @@ pub fn sigma_bar_uu(core: &LmaFitCore, ts: &TestSide, rbar_du: &Mat) -> Result<M
     Ok(out)
 }
 
+/// The shared Theorem-2 tail: predictive mean and marginal variances from
+/// a Σ̈_SS factor, `a = Σ̈_SS⁻¹·ÿ_S` and the reduced U-side terms. Returns
+/// the half-solve W = L⁻¹·Σ̈_USᵀ as well, since the full-covariance
+/// correction reuses it. Both the legacy and the context path call this,
+/// so their per-element arithmetic cannot drift apart.
+fn theorem2_marginals(
+    core: &LmaFitCore,
+    sss_chol: &crate::linalg::chol::CholFactor,
+    a: &[f64],
+    yu: &[f64],
+    sus: &Mat,
+    suu_diag: &[f64],
+) -> Result<(Vec<f64>, Vec<f64>, Mat)> {
+    let total_u = yu.len();
+    let correction = sus.matvec(a)?;
+    let mean: Vec<f64> = yu
+        .iter()
+        .zip(&correction)
+        .map(|(yu, c)| core.hyp.mean + yu - c)
+        .collect();
+
+    // diag of Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ via the half-solve W = L⁻¹·Σ̈_USᵀ.
+    let w = sss_chol.half_solve(&sus.transpose())?;
+    let mut corr_diag = vec![0.0; total_u];
+    for i in 0..w.rows() {
+        for (d, v) in corr_diag.iter_mut().zip(w.row(i)) {
+            *d += v * v;
+        }
+    }
+    let prior = se_ard::prior_var(&core.hyp);
+    let var: Vec<f64> = (0..total_u)
+        .map(|j| (prior - suu_diag[j] + corr_diag[j]).max(0.0))
+        .collect();
+    Ok((mean, var, w))
+}
+
+/// The shared full-covariance correction of equation (4):
+/// Σ̄_UU − Σ̈_UU + Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ (the last term as WᵀW).
+fn theorem2_cov(sigma_uu: Mat, suu_full: &Mat, w: &Mat) -> Result<Mat> {
+    let corr = crate::linalg::gemm::syrk_tn(w);
+    let mut c = sigma_uu.sub(suu_full)?;
+    c.axpy(1.0, &corr)?;
+    c.symmetrize();
+    Ok(c)
+}
+
 /// Evaluate Theorem 2 on a reduced global summary. Output order follows
 /// the *permuted* test layout; [`scatter`] restores the caller's order.
 ///
@@ -85,49 +151,47 @@ pub fn predict_from_summary_cov(
     g: &GlobalSummary,
     rbar_du_for_cov: Option<&Mat>,
 ) -> Result<Prediction> {
-    let _full_cov = rbar_du_for_cov.is_some();
-    let total_u = ts.total();
     let (f, _) = gp_cholesky(&g.sss)?;
-
     // a = Σ̈_SS⁻¹·ÿ_S
     let a = f.solve_vec(&g.ys)?;
-    let correction = g.sus.matvec(&a)?;
-    let mean: Vec<f64> = g
-        .yu
-        .iter()
-        .zip(&correction)
-        .map(|(yu, c)| core.hyp.mean + yu - c)
-        .collect();
-
-    // diag of Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ via the half-solve W = L⁻¹·Σ̈_USᵀ.
-    let w = f.half_solve(&g.sus.transpose())?;
-    let mut corr_diag = vec![0.0; total_u];
-    for i in 0..w.rows() {
-        for (d, v) in corr_diag.iter_mut().zip(w.row(i)) {
-            *d += v * v;
-        }
-    }
-    let prior = se_ard::prior_var(&core.hyp);
-    let var: Vec<f64> = (0..total_u)
-        .map(|j| (prior - g.suu_diag[j] + corr_diag[j]).max(0.0))
-        .collect();
-
+    let (mean, var, w) = theorem2_marginals(core, &f, &a, &g.yu, &g.sus, &g.suu_diag)?;
     let cov = if let Some(rbar) = rbar_du_for_cov {
         let suu = g
             .suu_full
             .as_ref()
             .expect("full_cov requires suu_full in the global summary");
         // Equation (4): Σ̄_UU − Σ̈_UU + Σ̈_US·Σ̈_SS⁻¹·Σ̈_USᵀ.
-        let sigma_uu = sigma_bar_uu(core, ts, rbar)?;
-        let corr = crate::linalg::gemm::syrk_tn(&w);
-        let mut c = sigma_uu.sub(suu)?;
-        c.axpy(1.0, &corr)?;
-        c.symmetrize();
-        Some(c)
+        Some(theorem2_cov(sigma_bar_uu(core, ts, rbar)?, suu, &w)?)
     } else {
         None
     };
+    Ok(Prediction { mean, var, cov })
+}
 
+/// Theorem 2 on the context-backed fast path: the Σ̈_SS Cholesky and
+/// `a = Σ̈_SS⁻¹·ÿ_S` come from the fit-time [`PredictContext`] (no per-call
+/// |S|³ factorization), the U-side from the reduced [`UTerms`]. Shares the
+/// per-element arithmetic with [`predict_from_summary_cov`] through
+/// `theorem2_marginals`/`theorem2_cov`, so outputs are bit-identical
+/// given bit-identical summaries.
+pub fn predict_from_context(
+    core: &LmaFitCore,
+    ts: &TestSide,
+    ctx: &PredictContext,
+    g: &UTerms,
+    rbar_for_cov: Option<&RbarBlocks>,
+) -> Result<Prediction> {
+    let (mean, var, w) =
+        theorem2_marginals(core, &ctx.sss_chol, &ctx.a, &g.yu, &g.sus, &g.suu_diag)?;
+    let cov = if let Some(rbar) = rbar_for_cov {
+        let suu = g
+            .suu_full
+            .as_ref()
+            .expect("full_cov requires suu_full in the reduced U-terms");
+        Some(theorem2_cov(sigma_bar_uu_blocks(core, ts, rbar)?, suu, &w)?)
+    } else {
+        None
+    };
     Ok(Prediction { mean, var, cov })
 }
 

@@ -18,8 +18,9 @@ use crate::kernels::pjrt_cov::CovBackend;
 use crate::kernels::se_ard::{self, SeArdHyper};
 use crate::linalg::banded::BlockPartition;
 use crate::linalg::chol::CholFactor;
-use crate::linalg::matrix::Mat;
+use crate::linalg::matrix::{Mat, MatView};
 use crate::linalg::solve::gp_cholesky;
+use crate::lma::context::PredictContext;
 use crate::lma::partition::{self, Partition};
 use crate::util::error::{PgprError, Result};
 use crate::util::rng::Pcg64;
@@ -81,11 +82,24 @@ pub fn r_cross(
     sigma_s2: f64,
     noise_diag: Option<f64>,
 ) -> Result<Mat> {
-    let mut sig = se_ard::cov_cross_scaled(xa, xb, sigma_s2)?;
+    r_cross_view(xa.view(), wta.view(), xb.view(), wtb.view(), sigma_s2, noise_diag)
+}
+
+/// [`r_cross`] over borrowed views (zero-copy block slices; identical
+/// arithmetic, native covariance path).
+pub fn r_cross_view(
+    xa: MatView<'_>,
+    wta: MatView<'_>,
+    xb: MatView<'_>,
+    wtb: MatView<'_>,
+    sigma_s2: f64,
+    noise_diag: Option<f64>,
+) -> Result<Mat> {
+    let mut sig = se_ard::cov_cross_scaled_view(xa, xb, sigma_s2)?;
     if let Some(n2) = noise_diag {
         sig.add_diag(n2);
     }
-    let q = wta.matmul_t(wtb)?;
+    let q = crate::linalg::gemm::matmul_nt_view(wta, wtb)?;
     sig.sub(&q)
 }
 
@@ -107,6 +121,11 @@ pub struct FitTimings {
     /// Per-block residual work: in-band R blocks, band Cholesky, P_m,
     /// C_m, ẏ_m, Σ̇_S^m — machine m's own fit work.
     pub per_block_secs: Vec<f64>,
+    /// Per-block predict-context work (the Definition-1 half-solves
+    /// vs_m/vy_m and the frontier seed H_m) — owned by machine m.
+    pub ctx_per_block_secs: Vec<f64>,
+    /// Context reduction on the master: ÿ_S, Σ̈_SS, its Cholesky, `a`.
+    pub ctx_reduce_secs: f64,
 }
 
 /// Per-fit state: everything Theorem 2 needs that does not depend on U.
@@ -151,6 +170,9 @@ pub struct LmaFitCore {
     /// Covariance engine for request-path blocks: native Rust or the
     /// AOT-compiled Pallas kernel via PJRT (cfg.use_pjrt).
     pub cov_backend: CovBackend,
+    /// Fit-time predict context (always attached by `fit` and the
+    /// artifact loader; `Option` only to break the construction cycle).
+    pub ctx: Option<PredictContext>,
 }
 
 impl LmaFitCore {
@@ -174,6 +196,24 @@ impl LmaFitCore {
     pub fn wt_block(&self, m: usize) -> Mat {
         let r = self.part.range(m);
         self.wt_d.rows_range(r.start, r.end)
+    }
+
+    /// Zero-copy view of block m's scaled inputs (serve hot path).
+    pub fn x_block_view(&self, m: usize) -> MatView<'_> {
+        let r = self.part.range(m);
+        self.x_scaled.rows_view(r.start, r.end)
+    }
+
+    /// Zero-copy view of block m's whitened rows.
+    pub fn wt_block_view(&self, m: usize) -> MatView<'_> {
+        let r = self.part.range(m);
+        self.wt_d.rows_view(r.start, r.end)
+    }
+
+    /// The fit-time predict context. Every construction path (`fit`,
+    /// artifact load) attaches one; its absence is a programmer error.
+    pub fn context(&self) -> &PredictContext {
+        self.ctx.as_ref().expect("LmaFitCore carries a PredictContext after fit/load")
     }
 
     /// Centered outputs of block m.
@@ -244,11 +284,24 @@ impl LmaFitCore {
         wtb: &Mat,
         noise_diag: Option<f64>,
     ) -> Result<Mat> {
-        let mut sig = self.cov_backend.cov_cross_scaled(xa, xb, self.hyp.sigma_s2)?;
+        self.r_cross_v(xa.view(), wta.view(), xb.view(), wtb.view(), noise_diag)
+    }
+
+    /// [`r_cross_b`](Self::r_cross_b) over borrowed views — the serve hot
+    /// path's zero-copy residual block (bit-identical to the owned form).
+    pub fn r_cross_v(
+        &self,
+        xa: MatView<'_>,
+        wta: MatView<'_>,
+        xb: MatView<'_>,
+        wtb: MatView<'_>,
+        noise_diag: Option<f64>,
+    ) -> Result<Mat> {
+        let mut sig = self.cov_backend.cov_cross_scaled_view(xa, xb, self.hyp.sigma_s2)?;
         if let Some(n2) = noise_diag {
             sig.add_diag(n2);
         }
-        let q = wta.matmul_t(wtb)?;
+        let q = crate::linalg::gemm::matmul_nt_view(wta, wtb)?;
         sig.sub(&q)
     }
 
@@ -402,6 +455,7 @@ impl LmaFitCore {
             s_dot: Vec::new(),
             timings: FitTimings::default(),
             cov_backend: cov_backend.clone(),
+            ctx: None,
         };
 
         // Independent per-block factorizations, same worker pool.
@@ -454,7 +508,16 @@ impl LmaFitCore {
         timings.per_block_secs = block_clock;
 
         let p_t: Vec<Option<Mat>> = p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
-        Ok(LmaFitCore { band_chol, p: p_all, p_t, c_chol, y_dot, s_dot, timings, ..core_tmp })
+        let mut core =
+            LmaFitCore { band_chol, p: p_all, p_t, c_chol, y_dot, s_dot, timings, ..core_tmp };
+
+        // --- fit-time predict context (test-independent Theorem-2 state) ---
+        let (ctx, ctx_per_block_secs, ctx_reduce_secs) =
+            PredictContext::build_timed(&core, workers)?;
+        core.timings.ctx_per_block_secs = ctx_per_block_secs;
+        core.timings.ctx_reduce_secs = ctx_reduce_secs;
+        core.ctx = Some(ctx);
+        Ok(core)
     }
 }
 

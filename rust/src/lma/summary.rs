@@ -12,8 +12,9 @@
 
 use crate::linalg::gemm;
 use crate::linalg::matrix::Mat;
+use crate::lma::context::PredictContext;
 use crate::lma::residual::LmaFitCore;
-use crate::lma::sweep::TestSide;
+use crate::lma::sweep::{RbarBlocks, TestSide};
 use crate::util::error::Result;
 
 /// The m-th machine's additive contribution to the global summary.
@@ -143,6 +144,163 @@ pub fn sigma_bar_du(core: &LmaFitCore, ts: &TestSide, rbar: &Mat) -> Result<Mat>
     Ok(q)
 }
 
+// ---------------------------------------------------------------------
+// Context-backed fast path: block-row Σ̄_DU and U-only summaries.
+// ---------------------------------------------------------------------
+
+/// The query-dependent summands of Definition 2 — what a machine ships
+/// per query once the [`PredictContext`] carries the S-side. Also the
+/// shape of their reduction ([`reduce_u`]).
+#[derive(Clone, Debug)]
+pub struct UTerms {
+    /// (Σ̇_U^m)ᵀ·Ṙ_m·ẏ_m — summand of ÿ_U (|U|).
+    pub yu: Vec<f64>,
+    /// (Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_S^m — summand of Σ̈_US (|U|×|S|).
+    pub sus: Mat,
+    /// diag[(Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_U^m] — summand of diag Σ̈_UU (|U|).
+    pub suu_diag: Vec<f64>,
+    /// Full (Σ̇_U^m)ᵀ·Ṙ_m·Σ̇_U^m when requested (|U|×|U|).
+    pub suu_full: Option<Mat>,
+}
+
+/// Block rows Σ̄_{D_m U} = Q_{D_m U} + R̄_{D_m U} from the band-sparse
+/// sweep output — never materializing the dense N×|U| matrix. The Q GEMM
+/// computes each output row independently, so the per-block products are
+/// bit-identical to row ranges of the dense `sigma_bar_du`.
+pub fn sigma_bar_rows(core: &LmaFitCore, ts: &TestSide, rbar: &RbarBlocks) -> Result<Vec<Mat>> {
+    let mut rows: Vec<Mat> = (0..core.m()).map(|_| Mat::zeros(0, 0)).collect();
+    sigma_bar_rows_into(core, ts, rbar, &mut rows)?;
+    Ok(rows)
+}
+
+/// [`sigma_bar_rows`] into caller-owned buffers (one per block; the serve
+/// scratch reuses them across calls).
+pub fn sigma_bar_rows_into(
+    core: &LmaFitCore,
+    ts: &TestSide,
+    rbar: &RbarBlocks,
+    rows: &mut [Mat],
+) -> Result<()> {
+    let mm = core.m();
+    debug_assert!(rows.len() >= mm);
+    let wt_u = ts.wt_u.view();
+    for (m, row) in rows.iter_mut().enumerate().take(mm) {
+        gemm::matmul_nt_into(core.wt_block_view(m), wt_u, row)?;
+        for n in 0..mm {
+            if let Some(blk) = rbar.block(m, n) {
+                let c0 = ts.starts[n];
+                for i in 0..blk.rows() {
+                    let dst = &mut row.row_mut(i)[c0..c0 + blk.cols()];
+                    for (d, v) in dst.iter_mut().zip(blk.row(i)) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Σ̇_U^m from the block rows: Σ̄_{D_m U} − P_m·Σ̄_{D_m^B U}, written into
+/// `out` (the same subtraction the dense [`sigma_dot_u`] performs on row
+/// ranges — bit-identical).
+pub fn sigma_dot_u_rows(core: &LmaFitCore, sbar: &[Mat], m: usize, out: &mut Mat) -> Result<()> {
+    out.assign(&sbar[m]);
+    if let Some(p_m) = &core.p[m] {
+        let hi = (m + core.b()).min(core.m() - 1);
+        let refs: Vec<&Mat> = sbar[(m + 1)..=hi].iter().collect();
+        let fwd = Mat::vstack(&refs)?;
+        let prod = p_m.matmul(&fwd)?;
+        for (a, v) in out.data_mut().iter_mut().zip(prod.data()) {
+            *a -= v;
+        }
+    }
+    Ok(())
+}
+
+/// Machine m's query-dependent terms, using the fit-time context for
+/// everything test-independent (vs_m, vy_m). Allocating convenience
+/// around [`local_terms_fast_in`].
+pub fn local_terms_fast(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    sbar: &[Mat],
+    m: usize,
+    want_full_uu: bool,
+) -> Result<UTerms> {
+    let mut udot = Mat::zeros(0, 0);
+    let mut vu = Mat::zeros(0, 0);
+    local_terms_fast_in(core, ctx, sbar, m, want_full_uu, &mut udot, &mut vu)
+}
+
+/// [`local_terms_fast`] with caller-owned Σ̇_U / vu buffers (the serve
+/// scratch). Performs the identical arithmetic the per-call
+/// [`local_terms`] did for the U-dependent pieces, against the cached
+/// vs_m/vy_m — bit-identical outputs.
+pub fn local_terms_fast_in(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    sbar: &[Mat],
+    m: usize,
+    want_full_uu: bool,
+    udot: &mut Mat,
+    vu: &mut Mat,
+) -> Result<UTerms> {
+    sigma_dot_u_rows(core, sbar, m, udot)?;
+    core.c_chol[m].half_solve_into(udot, vu)?;
+    let yu = vu.t_matmul(&ctx.vy[m])?.into_data();
+    let sus = vu.t_matmul(&ctx.vs[m])?;
+    let nu = vu.cols();
+    let mut suu_diag = vec![0.0; nu];
+    for i in 0..vu.rows() {
+        let row = vu.row(i);
+        for (d, v) in suu_diag.iter_mut().zip(row) {
+            *d += v * v;
+        }
+    }
+    let suu_full = if want_full_uu { Some(gemm::syrk_tn(vu)) } else { None };
+    Ok(UTerms { yu, sus, suu_diag, suu_full })
+}
+
+/// Reduce per-machine U-terms (elementwise sums in machine order — the
+/// same order [`reduce`] used, so the result is bit-identical to the
+/// U-side of the legacy global summary).
+pub fn reduce_u(terms: &[UTerms], total_u: usize, s: usize) -> Result<UTerms> {
+    let mut g = UTerms {
+        yu: vec![0.0; total_u],
+        sus: Mat::zeros(total_u, s),
+        suu_diag: vec![0.0; total_u],
+        suu_full: terms
+            .first()
+            .and_then(|t| t.suu_full.as_ref())
+            .map(|_| Mat::zeros(total_u, total_u)),
+    };
+    for t in terms {
+        for (a, b) in g.yu.iter_mut().zip(&t.yu) {
+            *a += b;
+        }
+        g.sus.axpy(1.0, &t.sus)?;
+        for (a, b) in g.suu_diag.iter_mut().zip(&t.suu_diag) {
+            *a += b;
+        }
+        if let (Some(full), Some(tf)) = (g.suu_full.as_mut(), t.suu_full.as_ref()) {
+            full.axpy(1.0, tf)?;
+        }
+    }
+    Ok(g)
+}
+
+/// Approximate message size in bytes of machine m's query-dependent
+/// terms (the post-context reduction traffic: the S-side summaries no
+/// longer cross the network per query).
+pub fn u_terms_bytes(t: &UTerms) -> usize {
+    let f = 8usize;
+    f * (t.yu.len()
+        + t.sus.rows() * t.sus.cols()
+        + t.suu_diag.len()
+        + t.suu_full.as_ref().map(|m| m.rows() * m.cols()).unwrap_or(0))
+}
+
 /// Approximate message size in bytes of machine m's local terms (used by
 /// the cluster simulator's communication model).
 pub fn local_terms_bytes(t: &LocalTerms) -> usize {
@@ -228,5 +386,60 @@ mod tests {
         let t = local_terms(&core, &sbar, 0, false).unwrap();
         let bytes = local_terms_bytes(&t);
         assert!(bytes > 8 * (t.ys.len() + t.yu.len()));
+    }
+
+    #[test]
+    fn fast_terms_match_legacy_terms_bitwise() {
+        // The context-backed U-side pipeline must reproduce the legacy
+        // per-call pipeline bit for bit on the same Σ̄_DU input.
+        let (core, ts, sbar_dense) = setup(135, 90, 5, 2);
+        let ctx = core.context();
+        // Feed the *same* dense-sweep Σ̄ to both paths, block-row form for
+        // the fast one.
+        let rows: Vec<Mat> = (0..5)
+            .map(|m| {
+                let r = core.part.range(m);
+                sbar_dense.rows_range(r.start, r.end)
+            })
+            .collect();
+        let mut fast = Vec::new();
+        for m in 0..5 {
+            fast.push(local_terms_fast(&core, ctx, &rows, m, true).unwrap());
+        }
+        let legacy: Vec<LocalTerms> =
+            (0..5).map(|m| local_terms(&core, &sbar_dense, m, true).unwrap()).collect();
+        for m in 0..5 {
+            assert_eq!(fast[m].yu, legacy[m].yu, "block {m} yu");
+            assert_eq!(fast[m].sus.data(), legacy[m].sus.data(), "block {m} sus");
+            assert_eq!(fast[m].suu_diag, legacy[m].suu_diag, "block {m} suu");
+            assert_eq!(
+                fast[m].suu_full.as_ref().unwrap().data(),
+                legacy[m].suu_full.as_ref().unwrap().data()
+            );
+        }
+        let g_fast = reduce_u(&fast, ts.total(), core.basis.size()).unwrap();
+        let g_legacy = reduce(&core, &legacy, ts.total()).unwrap();
+        assert_eq!(g_fast.yu, g_legacy.yu);
+        assert_eq!(g_fast.sus.data(), g_legacy.sus.data());
+        assert_eq!(g_fast.suu_diag, g_legacy.suu_diag);
+        // And the context's cached S-side matches the legacy reduction.
+        assert_eq!(ctx.ys, g_legacy.ys);
+        assert!(u_terms_bytes(&fast[0]) > 0);
+        assert!(u_terms_bytes(&fast[0]) < local_terms_bytes(&legacy[0]));
+    }
+
+    #[test]
+    fn sigma_bar_rows_match_dense_rows() {
+        let (core, ts, _) = setup(136, 80, 4, 1);
+        let rb_dense = crate::lma::sweep::rbar_du(&core, &ts).unwrap();
+        let sb_dense = sigma_bar_du(&core, &ts, &rb_dense).unwrap();
+        let rb_blocks = crate::lma::sweep::rbar_du_blocks(&core, core.context(), &ts).unwrap();
+        let rows = sigma_bar_rows(&core, &ts, &rb_blocks).unwrap();
+        for m in 0..4 {
+            let r = core.part.range(m);
+            let want = sb_dense.rows_range(r.start, r.end);
+            let diff = rows[m].max_abs_diff(&want);
+            assert!(diff < 1e-10, "block {m}: diff {diff}");
+        }
     }
 }

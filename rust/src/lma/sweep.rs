@@ -16,8 +16,23 @@
 //! The centralized row sweep here and the simulated-cluster wavefront in
 //! `lma::parallel` compute identical numbers (asserted in integration
 //! tests); they differ only in work placement and communication.
+//!
+//! The serve hot path uses [`rbar_du_blocks`] instead of the dense
+//! [`rbar_du`]: R̄_DU is kept **band-sparse** ([`RbarBlocks`] — one small
+//! `Mat` per (training block, non-empty test block) pair, never a dense
+//! N×|U| allocation), and the lower side is evaluated per *target* test
+//! block by chaining the propagator transfer right-to-left. The per-row
+//! R̄_DD frontier rolls of the dense sweep are test-independent work
+//! (O(M²) block GEMMs per call); the chained form replaces them with
+//! O(M) transfer steps of width |U_n| per non-empty test block —
+//! algebraically the same product, associated from the other end (results
+//! agree to rounding: ≲1e-12 relative, asserted in tests; in-band and
+//! upper-side blocks are bit-identical).
 
-use crate::linalg::matrix::Mat;
+use std::rc::Rc;
+
+use crate::linalg::matrix::{Mat, MatView};
+use crate::lma::context::PredictContext;
 use crate::lma::residual::{r_cross, LmaFitCore};
 use crate::util::error::{PgprError, Result};
 
@@ -63,6 +78,16 @@ impl TestSide {
         self.wt_u.rows_range(self.starts[n], self.starts[n + 1])
     }
 
+    /// Zero-copy view of test block n's scaled inputs.
+    pub fn x_block_view(&self, n: usize) -> MatView<'_> {
+        self.x_scaled.rows_view(self.starts[n], self.starts[n + 1])
+    }
+
+    /// Zero-copy view of test block n's whitened rows.
+    pub fn wt_block_view(&self, n: usize) -> MatView<'_> {
+        self.wt_u.rows_view(self.starts[n], self.starts[n + 1])
+    }
+
     /// Build the test side for raw test inputs against a fitted core.
     pub fn build(core: &LmaFitCore, test_x: &Mat) -> Result<TestSide> {
         if test_x.cols() != core.hyp.dim() {
@@ -94,12 +119,13 @@ impl TestSide {
                 r_up.push(None);
                 continue;
             }
-            // R_{U_n D_n^B}: all in-band exact blocks, stacked.
-            let xu = ts_partial.x_block(n);
-            let wu = ts_partial.wt_block(n);
-            let xb = core.x_scaled.rows_range(band.start, band.end);
-            let wb = core.wt_d.rows_range(band.start, band.end);
-            let r_ub = core.r_cross_b(&xu, &wu, &xb, &wb, None)?;
+            // R_{U_n D_n^B}: all in-band exact blocks, stacked. Borrowed
+            // views — no per-call copies of the band slices (§Perf).
+            let xu = ts_partial.x_block_view(n);
+            let wu = ts_partial.wt_block_view(n);
+            let xb = core.x_scaled.rows_view(band.start, band.end);
+            let wb = core.wt_d.rows_view(band.start, band.end);
+            let r_ub = core.r_cross_v(xu, wu, xb, wb, None)?;
             let bf = core.band_chol[n].as_ref().expect("band factor exists when band non-empty");
             // R'^U = R_{U D^B} · G⁻¹  via  G·Xᵀ = R_{U D^B}ᵀ.
             let rup = bf.solve_mat(&r_ub.transpose())?.transpose();
@@ -195,6 +221,169 @@ pub fn rbar_du(core: &LmaFitCore, ts: &TestSide) -> Result<Mat> {
     Ok(rbar)
 }
 
+/// Band-sparse R̄_DU: one block per (training block m, test block n) pair.
+/// `None` marks structurally-zero blocks (B=0 off the diagonal) and empty
+/// test blocks — the dense N×|U| matrix is never materialized, which is
+/// what lets steady-state serving avoid the per-call `Mat::zeros(N, u)`
+/// allocation plus its fill.
+pub struct RbarBlocks {
+    mm: usize,
+    blocks: Vec<Vec<Option<Mat>>>,
+}
+
+impl RbarBlocks {
+    pub fn new(mm: usize) -> RbarBlocks {
+        let mut blocks = Vec::with_capacity(mm);
+        for _ in 0..mm {
+            blocks.push((0..mm).map(|_| None).collect());
+        }
+        RbarBlocks { mm, blocks }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.mm
+    }
+
+    /// R̄_{D_m U_n} if materialized (None ⇔ structurally zero or empty).
+    pub fn block(&self, m: usize, n: usize) -> Option<&Mat> {
+        self.blocks[m][n].as_ref()
+    }
+
+    pub fn set(&mut self, m: usize, n: usize, blk: Mat) {
+        self.blocks[m][n] = Some(blk);
+    }
+
+    /// Stacked forward-band rows R̄_{D_m^B U_n} (blocks m+1..=min(m+B, M−1)
+    /// of column n; zeros where a block is structurally absent) — what the
+    /// upper recursion and the full-covariance assembly consume.
+    pub fn band_rows(&self, core: &LmaFitCore, ts: &TestSide, m: usize, n: usize) -> Result<Mat> {
+        let hi = (m + core.b()).min(self.mm - 1);
+        let un = ts.size(n);
+        let zeros: Vec<Mat> = ((m + 1)..=hi)
+            .filter(|&k| self.blocks[k][n].is_none())
+            .map(|k| Mat::zeros(core.part.size(k), un))
+            .collect();
+        let mut zi = 0;
+        let mut refs: Vec<&Mat> = Vec::with_capacity(hi.saturating_sub(m));
+        for k in (m + 1)..=hi {
+            match &self.blocks[k][n] {
+                Some(blk) => refs.push(blk),
+                None => {
+                    refs.push(&zeros[zi]);
+                    zi += 1;
+                }
+            }
+        }
+        Mat::vstack(&refs)
+    }
+
+    /// Dense materialization (tests and the full-covariance reference).
+    pub fn to_dense(&self, core: &LmaFitCore, ts: &TestSide) -> Mat {
+        let mut out = Mat::zeros(core.part.total(), ts.total());
+        for (m, row) in self.blocks.iter().enumerate() {
+            for (n, blk) in row.iter().enumerate() {
+                if let Some(blk) = blk {
+                    out.set_block(core.part.range(m).start, ts.starts[n], blk);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Band-sparse materialization of R̄_DU — the serve hot path's sweep.
+///
+/// In-band blocks are exact residuals (bit-identical to [`rbar_du`]'s).
+/// Upper out-of-band blocks reuse the same propagator recursion, split
+/// per test-block column — a column split of the identical GEMM, also
+/// bit-identical. Lower out-of-band blocks chain the frontier transfer
+/// right-to-left per non-empty test block (see the module docs):
+/// emit(m, n) = H_m · M_{m−B−1} ··· M_{n+1} · (R'^U_n)ᵀ with the product
+/// accumulated from the (R'^U_n)ᵀ end, so the per-query cost is
+/// O(M·B·(|D|/M)²·|U_n|) instead of the dense sweep's test-independent
+/// O(M²) frontier rolls. `ctx` supplies the precomputed frontier seeds
+/// H_m; pass a freshly built context to reproduce the legacy
+/// recompute-per-call behavior bit for bit.
+pub fn rbar_du_blocks(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    ts: &TestSide,
+) -> Result<RbarBlocks> {
+    let mm = core.m();
+    let b = core.b();
+    let mut rb = RbarBlocks::new(mm);
+    if ts.total() == 0 {
+        return Ok(rb);
+    }
+
+    // --- in-band: exact residual blocks, and upper out-of-band: the
+    // propagator recursion on the already-filled rows (m descending) ---
+    for m in (0..mm).rev() {
+        let xm = core.x_block_view(m);
+        let wm = core.wt_block_view(m);
+        let lo = m.saturating_sub(b);
+        let hi = (m + b).min(mm - 1);
+        for n in lo..=hi {
+            if ts.size(n) == 0 {
+                continue;
+            }
+            let blk =
+                core.r_cross_v(xm, wm, ts.x_block_view(n), ts.wt_block_view(n), None)?;
+            rb.set(m, n, blk);
+        }
+        if b > 0 && m + b + 1 < mm {
+            let p_m = core.p[m].as_ref().expect("unclipped band has a propagator");
+            for n in (m + b + 1)..mm {
+                if ts.size(n) == 0 {
+                    continue;
+                }
+                let f = rb.band_rows(core, ts, m, n)?;
+                let blk = p_m.matmul(&f)?;
+                rb.set(m, n, blk);
+            }
+        }
+    }
+
+    // --- lower out-of-band: right-to-left transfer chain per non-empty
+    // test block n, sharing the chained vector across rows m ---
+    if b > 0 {
+        for n in 0..mm {
+            if ts.size(n) == 0 || n + b + 1 >= mm {
+                continue;
+            }
+            let rup_t = ts.r_up_t[n].as_ref().expect("non-empty interior test block has R'^U");
+            // w spans blocks j+1..j+B after advancing through M_j; it
+            // starts as (R'^U_n)ᵀ spanning n+1..n+B.
+            let mut w_owned: Option<Mat> = None;
+            for m in (n + b + 1)..mm {
+                if m > n + b + 1 {
+                    // Advance: w ← M_j·w with j = m−B−1, i.e.
+                    // P_jᵀ·(top block j of w) plus the remaining blocks
+                    // shifted up (the frontier's dropped-last/prepend).
+                    let j = m - b - 1;
+                    let prev: &Mat = w_owned.as_ref().unwrap_or(rup_t);
+                    let nj = core.part.size(j);
+                    let top = prev.rows_range(0, nj);
+                    let p_t_j = core.p_t[j].as_ref().expect("interior band has a propagator");
+                    let mut next = p_t_j.matmul(&top)?;
+                    let rest = prev.rows() - nj;
+                    for r in 0..rest {
+                        let src = prev.row(nj + r);
+                        for (acc, v) in next.row_mut(r).iter_mut().zip(src) {
+                            *acc += v;
+                        }
+                    }
+                    w_owned = Some(next);
+                }
+                let h = ctx.h_init[m].as_ref().expect("lower rows carry a frontier seed");
+                let w: &Mat = w_owned.as_ref().unwrap_or(rup_t);
+                rb.set(m, n, h.matmul(w)?);
+            }
+        }
+    }
+    Ok(rb)
+}
+
 /// Dense reference implementation of R̄_VV over an arbitrary block layout,
 /// directly transcribing equation (1). Exponential-free but O(M²) block
 /// recursions with memoization — used by tests and the toy example only.
@@ -210,14 +399,16 @@ pub mod dense_ref {
     }
 
     /// Exact residual R between training blocks (noise on diagonal
-    /// blocks), memoized.
+    /// blocks), memoized. Blocks are stored behind `Rc` so memo hits are
+    /// pointer bumps — the old map cloned every block on insert *and* on
+    /// every hit, doubling the reference sweep's allocation traffic.
     pub struct RbarCalc<'a> {
         pub core: &'a LmaFitCore,
         pub d: BlockSet,
         pub u: BlockSet,
-        memo_dd: HashMap<(usize, usize), Mat>,
-        memo_du: HashMap<(usize, usize), Mat>,
-        memo_ud: HashMap<(usize, usize), Mat>,
+        memo_dd: HashMap<(usize, usize), Rc<Mat>>,
+        memo_du: HashMap<(usize, usize), Rc<Mat>>,
+        memo_ud: HashMap<(usize, usize), Rc<Mat>>,
     }
 
     impl<'a> RbarCalc<'a> {
@@ -264,16 +455,17 @@ pub mod dense_ref {
             let b = self.core.b();
             let mm = self.core.m();
             let hi = (m + b).min(mm - 1);
-            let blocks: Vec<Mat> = ((m + 1)..=hi)
+            let blocks: Vec<Rc<Mat>> = ((m + 1)..=hi)
                 .map(|k| if du { self.rbar_du_block(k, n) } else { self.rbar_dd_block(k, n) })
                 .collect();
-            Mat::vstack(&blocks.iter().collect::<Vec<_>>()).unwrap()
+            let refs: Vec<&Mat> = blocks.iter().map(|b| b.as_ref()).collect();
+            Mat::vstack(&refs).unwrap()
         }
 
         /// R̄_{D_m D_n} per equation (1).
-        pub fn rbar_dd_block(&mut self, m: usize, n: usize) -> Mat {
+        pub fn rbar_dd_block(&mut self, m: usize, n: usize) -> Rc<Mat> {
             if let Some(v) = self.memo_dd.get(&(m, n)) {
-                return v.clone();
+                return Rc::clone(v);
             }
             let b = self.core.b();
             let out = if m.abs_diff(n) <= b {
@@ -289,14 +481,15 @@ pub mod dense_ref {
                 // symmetric transpose of the n>m case.
                 self.rbar_dd_block(n, m).transpose()
             };
-            self.memo_dd.insert((m, n), out.clone());
+            let out = Rc::new(out);
+            self.memo_dd.insert((m, n), Rc::clone(&out));
             out
         }
 
         /// R̄_{U_m D_n} per equation (1) (rows from U).
-        pub fn rbar_ud_block(&mut self, m: usize, n: usize) -> Mat {
+        pub fn rbar_ud_block(&mut self, m: usize, n: usize) -> Rc<Mat> {
             if let Some(v) = self.memo_ud.get(&(m, n)) {
-                return v.clone();
+                return Rc::clone(v);
             }
             let b = self.core.b();
             let out = if m.abs_diff(n) <= b {
@@ -321,12 +514,14 @@ pub mod dense_ref {
                 // m − n > B: R̄_{U_m D_n} = R̄_{U_m D_n^B}·P_nᵀ.
                 let mm = self.core.m();
                 let hi = (n + b).min(mm - 1);
-                let blocks: Vec<Mat> =
+                let blocks: Vec<Rc<Mat>> =
                     ((n + 1)..=hi).map(|k| self.rbar_ud_block(m, k)).collect();
-                let stacked = Mat::hstack(&blocks.iter().collect::<Vec<_>>()).unwrap();
+                let refs: Vec<&Mat> = blocks.iter().map(|b| b.as_ref()).collect();
+                let stacked = Mat::hstack(&refs).unwrap();
                 stacked.matmul_t(self.core.p[n].as_ref().unwrap()).unwrap()
             };
-            self.memo_ud.insert((m, n), out.clone());
+            let out = Rc::new(out);
+            self.memo_ud.insert((m, n), Rc::clone(&out));
             out
         }
 
@@ -350,9 +545,9 @@ pub mod dense_ref {
         }
 
         /// R̄_{D_m U_n} per equation (1).
-        pub fn rbar_du_block(&mut self, m: usize, n: usize) -> Mat {
+        pub fn rbar_du_block(&mut self, m: usize, n: usize) -> Rc<Mat> {
             if let Some(v) = self.memo_du.get(&(m, n)) {
-                return v.clone();
+                return Rc::clone(v);
             }
             let b = self.core.b();
             let out = if m.abs_diff(n) <= b {
@@ -365,7 +560,8 @@ pub mod dense_ref {
             } else {
                 self.rbar_ud_block(n, m).transpose()
             };
-            self.memo_du.insert((m, n), out.clone());
+            let out = Rc::new(out);
+            self.memo_du.insert((m, n), Rc::clone(&out));
             out
         }
 
@@ -494,5 +690,86 @@ mod tests {
         let ts = TestSide::build(&core, &test).unwrap();
         let r = rbar_du(&core, &ts).unwrap();
         assert_eq!(r.cols(), 0);
+        let rb = rbar_du_blocks(&core, core.context(), &ts).unwrap();
+        assert_eq!(rb.to_dense(&core, &ts).cols(), 0);
+    }
+
+    #[test]
+    fn block_sweep_matches_dense_sweep() {
+        // In-band and upper out-of-band blocks are bit-identical; lower
+        // out-of-band blocks chain the same propagator product from the
+        // other end, so they agree to rounding.
+        for_cases(126, 6, |rng| {
+            let m = 4 + rng.below(3);
+            let b = 1 + rng.below((m - 1).min(3));
+            let n = 80 + rng.below(40);
+            let (core, test) = fit_core(rng, n, m, b, 14);
+            let ts = TestSide::build(&core, &test).unwrap();
+            let dense = rbar_du(&core, &ts).unwrap();
+            let blocks = rbar_du_blocks(&core, core.context(), &ts).unwrap();
+            let diff = blocks.to_dense(&core, &ts).max_abs_diff(&dense);
+            assert!(diff < 1e-10, "M={m} B={b}: diff {diff}");
+            // In-band + upper blocks (nn ≥ mm_−B): exact bit equality.
+            for mm_ in 0..m {
+                for nn in mm_.saturating_sub(b)..m {
+                    if ts.size(nn) == 0 {
+                        continue;
+                    }
+                    let blk = blocks.block(mm_, nn).expect("in-band/upper block present");
+                    let want = dense.block(
+                        core.part.range(mm_).start,
+                        core.part.range(mm_).end,
+                        ts.starts[nn],
+                        ts.starts[nn + 1],
+                    );
+                    assert_eq!(blk.data(), want.data(), "block ({mm_},{nn})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn block_sweep_b_zero_stores_only_diagonal() {
+        let mut rng = Pcg64::new(127);
+        let (core, test) = fit_core(&mut rng, 90, 5, 0, 12);
+        let ts = TestSide::build(&core, &test).unwrap();
+        let rb = rbar_du_blocks(&core, core.context(), &ts).unwrap();
+        for m in 0..5 {
+            for n in 0..5 {
+                if m == n && ts.size(n) > 0 {
+                    assert!(rb.block(m, n).is_some());
+                } else {
+                    assert!(rb.block(m, n).is_none(), "off-diagonal ({m},{n}) materialized");
+                }
+            }
+        }
+        let dense = rbar_du(&core, &ts).unwrap();
+        assert_eq!(rb.to_dense(&core, &ts).data(), dense.data());
+    }
+
+    #[test]
+    fn block_sweep_matches_dense_reference_with_empty_blocks() {
+        let mut rng = Pcg64::new(128);
+        let (core, _) = fit_core(&mut rng, 80, 5, 2, 12);
+        // All test points at one end → most blocks empty (exercises the
+        // chained lower side with sparse targets).
+        let test = Mat::col_vec(&rng.uniform_vec(6, -5.0, -4.4));
+        let ts = TestSide::build(&core, &test).unwrap();
+        let rb = rbar_du_blocks(&core, core.context(), &ts).unwrap();
+        let mut calc = dense_ref::RbarCalc::new(&core, &ts);
+        let slow = calc.full_du(&ts);
+        let diff = rb.to_dense(&core, &ts).max_abs_diff(&slow);
+        assert!(diff < 1e-8, "diff {diff}");
+    }
+
+    #[test]
+    fn dense_ref_memo_hits_share_storage() {
+        let mut rng = Pcg64::new(129);
+        let (core, test) = fit_core(&mut rng, 60, 4, 1, 10);
+        let ts = TestSide::build(&core, &test).unwrap();
+        let mut calc = dense_ref::RbarCalc::new(&core, &ts);
+        let a = calc.rbar_du_block(3, 0);
+        let b = calc.rbar_du_block(3, 0);
+        assert!(std::rc::Rc::ptr_eq(&a, &b), "memo hit should be pointer-shared");
     }
 }

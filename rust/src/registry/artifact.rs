@@ -16,7 +16,7 @@
 //! | offset      | size | field                                        |
 //! |-------------|------|----------------------------------------------|
 //! | 0           | 8    | magic `PGPRART\0`                            |
-//! | 8           | 4    | u32 format version (currently 1)             |
+//! | 8           | 4    | u32 format version (currently 2)             |
 //! | 12          | 4    | u32 reserved (0)                             |
 //! | 16          | 8    | u64 manifest length in bytes                 |
 //! | 24          | 8    | u64 payload length in f64 count              |
@@ -29,6 +29,14 @@
 //! (name, rows, cols, f64 offset) indexing the payload. Truncation, bit
 //! flips, unknown versions and missing tensors all fail with a clean
 //! `PgprError::Artifact` — never a panic.
+//!
+//! **Version 2** additionally snapshots the fit-time
+//! [`PredictContext`](crate::lma::context::PredictContext) (`ctx.*`
+//! tensors: per-block vs/vy half-solves, ÿ_S, the Σ̈_SS Cholesky, `a`,
+//! lower-sweep frontier seeds), so `pgpr serve --model` boots straight
+//! into the precomputed predict hot path. Version-1 files still load:
+//! the context is rebuilt from the core on load, which is deterministic
+//! and therefore preserves bit-identical predictions.
 
 use std::collections::BTreeMap;
 
@@ -39,6 +47,7 @@ use crate::kernels::se_ard::SeArdHyper;
 use crate::linalg::banded::BlockPartition;
 use crate::linalg::chol::CholFactor;
 use crate::linalg::matrix::Mat;
+use crate::lma::context::PredictContext;
 use crate::lma::parallel::ParallelLma;
 use crate::lma::partition::Partition;
 use crate::lma::residual::{FitTimings, LmaFitCore, SupportBasis};
@@ -48,8 +57,10 @@ use crate::util::json::Json;
 
 /// File magic: identifies a pgpr model artifact.
 pub const MAGIC: [u8; 8] = *b"PGPRART\0";
-/// Current snapshot format version.
-pub const FORMAT_VERSION: u32 = 1;
+/// Current snapshot format version (2 = predict context included).
+pub const FORMAT_VERSION: u32 = 2;
+/// Oldest format version this build still reads (context rebuilt).
+pub const MIN_FORMAT_VERSION: u32 = 1;
 /// Fixed-size header: magic + version + reserved + two u64 lengths.
 const HEADER_BYTES: usize = 32;
 /// Trailing checksum.
@@ -246,6 +257,74 @@ fn core_to_tensors(core: &LmaFitCore, w: &mut TensorWriter) {
     }
 }
 
+fn ctx_to_tensors(core: &LmaFitCore, w: &mut TensorWriter) {
+    let ctx = core.context();
+    for m in 0..core.m() {
+        w.push_mat(format!("ctx.vs.{m}"), &ctx.vs[m]);
+        w.push_mat(format!("ctx.vy.{m}"), &ctx.vy[m]);
+        if let Some(h) = &ctx.h_init[m] {
+            w.push_mat(format!("ctx.h_init.{m}"), h);
+        }
+    }
+    w.push_vec("ctx.ys".into(), &ctx.ys);
+    w.push_vec("ctx.a".into(), &ctx.a);
+    w.push_mat("ctx.sss_chol".into(), ctx.sss_chol.l());
+}
+
+fn ctx_from_parts(r: &TensorReader<'_>, core: &LmaFitCore) -> Result<PredictContext> {
+    let mm = core.m();
+    let b = core.b();
+    let s = core.basis.size();
+    let mut vs = Vec::with_capacity(mm);
+    let mut vy = Vec::with_capacity(mm);
+    let mut h_init = Vec::with_capacity(mm);
+    for m in 0..mm {
+        let nm = core.part.size(m);
+        let vs_m = r.mat(&format!("ctx.vs.{m}"))?;
+        if vs_m.rows() != nm || vs_m.cols() != s {
+            return art_err(format!(
+                "ctx.vs.{m} is {}x{}, expected {nm}x{s}",
+                vs_m.rows(),
+                vs_m.cols()
+            ));
+        }
+        vs.push(vs_m);
+        let vy_m = r.mat(&format!("ctx.vy.{m}"))?;
+        if vy_m.rows() != nm || vy_m.cols() != 1 {
+            return art_err(format!(
+                "ctx.vy.{m} is {}x{}, expected {nm}x1",
+                vy_m.rows(),
+                vy_m.cols()
+            ));
+        }
+        vy.push(vy_m);
+        if b == 0 || m < b + 1 {
+            h_init.push(None);
+        } else {
+            let width: usize = ((m - b)..m).map(|k| core.part.size(k)).sum();
+            let h = r.mat(&format!("ctx.h_init.{m}"))?;
+            if h.rows() != nm || h.cols() != width {
+                return art_err(format!(
+                    "ctx.h_init.{m} is {}x{}, expected {nm}x{width}",
+                    h.rows(),
+                    h.cols()
+                ));
+            }
+            h_init.push(Some(h));
+        }
+    }
+    let ys = r.vec("ctx.ys")?;
+    let a = r.vec("ctx.a")?;
+    if ys.len() != s || a.len() != s {
+        return art_err(format!("ctx.ys/ctx.a have {}/{} values, expected {s}", ys.len(), a.len()));
+    }
+    let sss_chol = CholFactor::from_lower(r.mat("ctx.sss_chol")?)?;
+    if sss_chol.n() != s {
+        return art_err(format!("ctx.sss_chol has order {}, expected {s}", sss_chol.n()));
+    }
+    Ok(PredictContext { vs, vy, ys, sss_chol, a, h_init })
+}
+
 fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> {
     let cfg = LmaConfig::from_json(manifest.req("lma")?)?;
     let hyp = hyp_from_json(manifest.req("hyp")?)?;
@@ -410,7 +489,11 @@ fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> 
     let p_t: Vec<Option<Mat>> = p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
     // Fit-time clocks are not part of the snapshot; predict never reads
     // them.
-    let timings = FitTimings { per_block_secs: vec![0.0; mm], ..FitTimings::default() };
+    let timings = FitTimings {
+        per_block_secs: vec![0.0; mm],
+        ctx_per_block_secs: vec![0.0; mm],
+        ..FitTimings::default()
+    };
     let cov_backend = if cfg.use_pjrt { CovBackend::auto() } else { CovBackend::Native };
     Ok(LmaFitCore {
         hyp,
@@ -432,6 +515,7 @@ fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> 
         s_dot,
         timings,
         cov_backend,
+        ctx: None,
     })
 }
 
@@ -442,12 +526,27 @@ fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> 
 /// Serialize a fitted engine into the artifact byte format. Deterministic:
 /// the same engine always produces identical bytes.
 pub fn engine_to_bytes(engine: &ServeEngine) -> Result<Vec<u8>> {
+    engine_to_bytes_versioned(engine, FORMAT_VERSION)
+}
+
+/// Serialize at an explicit format version. Version 1 omits the predict
+/// context (the pre-v2 layout — used by tests and for emitting artifacts
+/// older deployments can read); version 2 includes it.
+pub fn engine_to_bytes_versioned(engine: &ServeEngine, version: u32) -> Result<Vec<u8>> {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
+        return art_err(format!(
+            "cannot write artifact format version {version} (supported: {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
+        ));
+    }
     let core = engine.core();
     let mut w = TensorWriter::new();
     core_to_tensors(core, &mut w);
+    if version >= 2 {
+        ctx_to_tensors(core, &mut w);
+    }
     let mut fields: Vec<(&str, Json)> = vec![
         ("format", Json::Str("pgpr-model-artifact".into())),
-        ("version", Json::Num(FORMAT_VERSION as f64)),
+        ("version", Json::Num(version as f64)),
         ("backend", Json::Str(engine.backend_name())),
         ("hyp", hyp_to_json(&core.hyp)),
         ("lma", core.cfg.to_json()),
@@ -472,7 +571,7 @@ pub fn engine_to_bytes(engine: &ServeEngine) -> Result<Vec<u8>> {
     let mut out =
         Vec::with_capacity(HEADER_BYTES + manifest.len() + 8 * w.payload.len() + TRAILER_BYTES);
     out.extend_from_slice(&MAGIC);
-    out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&0u32.to_le_bytes());
     out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
     out.extend_from_slice(&(w.payload.len() as u64).to_le_bytes());
@@ -496,9 +595,9 @@ pub fn engine_from_bytes(bytes: &[u8]) -> Result<ServeEngine> {
         return art_err("bad magic: not a pgpr model artifact");
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    if version != FORMAT_VERSION {
+    if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return art_err(format!(
-            "unsupported artifact format version {version} (this build reads {FORMAT_VERSION})"
+            "unsupported artifact format version {version} (this build reads {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
         ));
     }
     let manifest_len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
@@ -540,7 +639,15 @@ pub fn engine_from_bytes(bytes: &[u8]) -> Result<ServeEngine> {
         payload.push(f64::from_le_bytes(chunk.try_into().unwrap()));
     }
     let reader = TensorReader::new(&manifest, &payload)?;
-    let core = core_from_parts(&manifest, &reader)?;
+    let mut core = core_from_parts(&manifest, &reader)?;
+    // Version 2 snapshots the predict context; version-1 artifacts rebuild
+    // it from the core (deterministic ⇒ bit-identical predictions either
+    // way, v2 just skips the recomputation at boot).
+    core.ctx = Some(if version >= 2 {
+        ctx_from_parts(&reader, &core)?
+    } else {
+        PredictContext::build(&core)?
+    });
 
     match manifest.req("engine")?.as_str() {
         Some("centralized") => Ok(ServeEngine::Centralized(LmaRegressor::from_core(core))),
@@ -638,6 +745,53 @@ mod tests {
         let b = loaded.predict(&q).unwrap();
         assert_eq!(a.mean[0].to_bits(), b.mean[0].to_bits());
         assert_eq!(a.var[1].to_bits(), b.var[1].to_bits());
+    }
+
+    #[test]
+    fn v1_artifact_loads_with_rebuilt_context() {
+        // Old-format artifacts (no ctx.* tensors) must still load; the
+        // context is rebuilt deterministically, so predictions stay
+        // bit-identical to the in-memory engine.
+        let engine = fitted_engine(46, 20, 2);
+        let v1 = engine_to_bytes_versioned(&engine, 1).unwrap();
+        let v2 = engine_to_bytes(&engine).unwrap();
+        assert!(v1.len() < v2.len(), "v2 must carry the context payload");
+        assert_eq!(u32::from_le_bytes(v1[8..12].try_into().unwrap()), 1);
+        let loaded = engine_from_bytes(&v1).unwrap();
+        let q = Mat::col_vec(&[-1.5, 0.0, 2.25]);
+        let a = engine.predict(&q).unwrap();
+        let b = loaded.predict(&q).unwrap();
+        for i in 0..3 {
+            assert_eq!(a.mean[i].to_bits(), b.mean[i].to_bits(), "mean {i}");
+            assert_eq!(a.var[i].to_bits(), b.var[i].to_bits(), "var {i}");
+        }
+        // The rebuilt context matches the fit-time one bit for bit.
+        let lc = loaded.core().context();
+        let ec = engine.core().context();
+        assert_eq!(lc.ys, ec.ys);
+        assert_eq!(lc.a, ec.a);
+        assert_eq!(lc.sss_chol.l().data(), ec.sss_chol.l().data());
+        // Unsupported write versions are rejected cleanly.
+        assert!(engine_to_bytes_versioned(&engine, 0).is_err());
+        assert!(engine_to_bytes_versioned(&engine, 99).is_err());
+    }
+
+    #[test]
+    fn v2_artifact_carries_context_tensors() {
+        let engine = fitted_engine(47, 16, 1);
+        let bytes = engine_to_bytes(&engine).unwrap();
+        let loaded = engine_from_bytes(&bytes).unwrap();
+        let lc = loaded.core().context();
+        let ec = engine.core().context();
+        for m in 0..loaded.core().m() {
+            assert_eq!(lc.vs[m].data(), ec.vs[m].data(), "vs {m}");
+            assert_eq!(lc.vy[m].data(), ec.vy[m].data(), "vy {m}");
+            match (&lc.h_init[m], &ec.h_init[m]) {
+                (Some(a), Some(b)) => assert_eq!(a.data(), b.data(), "h_init {m}"),
+                (None, None) => {}
+                _ => panic!("h_init presence mismatch at block {m}"),
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Property tests for the fit-time predict context: across a
+//! (|S|, B, backend) grid, the fast context-backed path and the "old
+//! recompute path" (every test-independent quantity rebuilt per call —
+//! the `PGPR_PREDICT_LEGACY=1` behavior, driven here through the explicit
+//! `recompute_context` APIs so tests stay env-free and parallel-safe)
+//! must produce **bit-identical** predictions, including full-covariance
+//! and empty-test-block edge cases. The retained pre-context dense
+//! pipeline (`predict_dense`) is cross-checked to rounding (its lower
+//! out-of-band sweep associates the same propagator products from the
+//! other end), and exactly at the B ∈ {0, M−1} endpoints where the two
+//! pipelines perform identical operations.
+
+use pgpr::config::{BackendKind, ClusterConfig, LmaConfig, PartitionStrategy};
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::LmaRegressor;
+use pgpr::util::rng::Pcg64;
+
+const M: usize = 5;
+
+fn problem(seed: u64, n: usize) -> (Mat, Vec<f64>, SeArdHyper) {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 0.9, 1.0, 0.12);
+    let x = Mat::col_vec(&rng.uniform_vec(n, -5.0, 5.0));
+    let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin() + 0.1 * rng.normal()).collect();
+    (x, y, hyp)
+}
+
+fn cfg(b: usize, s: usize, seed: u64) -> LmaConfig {
+    LmaConfig {
+        num_blocks: M,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    }
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn context_matches_recompute_bitwise_across_grid() {
+    let (x, y, hyp) = problem(601, 160);
+    let mut rng = Pcg64::new(602);
+    let spread = Mat::col_vec(&rng.uniform_vec(24, -4.8, 4.8));
+    // Concentrated: most test blocks empty.
+    let concentrated = Mat::col_vec(&rng.uniform_vec(6, 4.2, 4.9));
+    let empty = Mat::zeros(0, 1);
+    for &s in &[8usize, 24] {
+        for &b in &[0usize, 1, 2, M - 1] {
+            let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(b, s, 11)).unwrap();
+            for (tag, t) in
+                [("spread", &spread), ("concentrated", &concentrated), ("empty", &empty)]
+            {
+                let (fast, _) = model.predict_mode(t, false, false).unwrap();
+                let (slow, _) = model.predict_mode(t, false, true).unwrap();
+                let what = format!("|S|={s} B={b} {tag}");
+                assert_bits_eq(&fast.mean, &slow.mean, &format!("{what} mean"));
+                assert_bits_eq(&fast.var, &slow.var, &format!("{what} var"));
+            }
+        }
+    }
+}
+
+#[test]
+fn context_matches_recompute_bitwise_full_cov() {
+    let (x, y, hyp) = problem(603, 140);
+    let mut rng = Pcg64::new(604);
+    let t = Mat::col_vec(&rng.uniform_vec(18, -4.5, 4.5));
+    for &b in &[0usize, 2, M - 1] {
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(b, 16, 13)).unwrap();
+        let (fast, _) = model.predict_mode(&t, true, false).unwrap();
+        let (slow, _) = model.predict_mode(&t, true, true).unwrap();
+        assert_bits_eq(&fast.mean, &slow.mean, &format!("B={b} mean"));
+        assert_bits_eq(&fast.var, &slow.var, &format!("B={b} var"));
+        assert_bits_eq(
+            fast.cov.as_ref().unwrap().data(),
+            slow.cov.as_ref().unwrap().data(),
+            &format!("B={b} cov"),
+        );
+    }
+}
+
+#[test]
+fn parallel_backends_match_recompute_bitwise() {
+    let (x, y, hyp) = problem(605, 150);
+    let mut rng = Pcg64::new(606);
+    let spread = Mat::col_vec(&rng.uniform_vec(20, -4.8, 4.8));
+    let concentrated = Mat::col_vec(&rng.uniform_vec(5, -4.9, -4.3));
+    let backends = [
+        ClusterConfig::gigabit(M, 1),
+        ClusterConfig::gigabit(M, 1).with_backend(BackendKind::Threads { num_threads: 2 }),
+    ];
+    for &s in &[8usize, 24] {
+        for &b in &[0usize, 2] {
+            let mut by_backend = Vec::new();
+            for cc in &backends {
+                let model = ParallelLma::fit(&x, &y, &hyp, &cfg(b, s, 17), cc).unwrap();
+                for t in [&spread, &concentrated] {
+                    let fast = model.predict_opts(t, false).unwrap();
+                    let slow = model.predict_opts(t, true).unwrap();
+                    let what = format!("|S|={s} B={b} {}", cc.backend.selector());
+                    assert_bits_eq(
+                        &fast.prediction.mean,
+                        &slow.prediction.mean,
+                        &format!("{what} mean"),
+                    );
+                    assert_bits_eq(
+                        &fast.prediction.var,
+                        &slow.prediction.var,
+                        &format!("{what} var"),
+                    );
+                }
+                by_backend.push(model.predict_opts(&spread, false).unwrap().prediction);
+            }
+            // sim and threads:2 agree bit for bit on the fast path too.
+            assert_bits_eq(&by_backend[0].mean, &by_backend[1].mean, "sim vs threads mean");
+            assert_bits_eq(&by_backend[0].var, &by_backend[1].var, "sim vs threads var");
+        }
+    }
+}
+
+#[test]
+fn fast_path_tracks_dense_reference_pipeline() {
+    let (x, y, hyp) = problem(607, 150);
+    let mut rng = Pcg64::new(608);
+    let t = Mat::col_vec(&rng.uniform_vec(22, -4.8, 4.8));
+    for &b in &[0usize, 1, 2, M - 1] {
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg(b, 20, 19)).unwrap();
+        let (fast, _) = model.predict_opts(&t, false).unwrap();
+        let (dense, _) = model.predict_dense(&t, false).unwrap();
+        for i in 0..t.rows() {
+            assert!(
+                (fast.mean[i] - dense.mean[i]).abs() < 1e-10,
+                "B={b} mean[{i}]: {} vs {}",
+                fast.mean[i],
+                dense.mean[i]
+            );
+            assert!(
+                (fast.var[i] - dense.var[i]).abs() < 1e-10,
+                "B={b} var[{i}]: {} vs {}",
+                fast.var[i],
+                dense.var[i]
+            );
+        }
+        if b == 0 || b == M - 1 {
+            // No chained lower side at the endpoints ⇒ the two pipelines
+            // run identical operations.
+            assert!(fast.mean == dense.mean, "B={b}: expected exact agreement");
+            assert!(fast.var == dense.var, "B={b}: expected exact agreement");
+        }
+    }
+}
+
+#[test]
+fn serve_engine_scratch_path_is_bit_identical() {
+    use pgpr::coordinator::service::ServeEngine;
+    use pgpr::lma::context::PredictScratch;
+    let (x, y, hyp) = problem(609, 130);
+    let mut rng = Pcg64::new(610);
+    let engine =
+        ServeEngine::Centralized(LmaRegressor::fit(&x, &y, &hyp, &cfg(2, 16, 23)).unwrap());
+    let mut scratch = PredictScratch::new();
+    for rows in [1usize, 7, 64, 1, 3] {
+        let t = Mat::col_vec(&rng.uniform_vec(rows, -4.5, 4.5));
+        let a = engine.predict_with_scratch(&t, &mut scratch).unwrap();
+        let b = engine.predict(&t).unwrap();
+        assert_bits_eq(&a.mean, &b.mean, "scratch mean");
+        assert_bits_eq(&a.var, &b.var, "scratch var");
+    }
+}
