@@ -1,0 +1,310 @@
+//! Online-update benchmark: observe throughput, per-update latency
+//! quantiles, seam-vs-M scaling evidence and predict-latency-under-ingest.
+//!
+//! Writes `BENCH_online_update.json`. `PGPR_BENCH_FAST=1` shrinks the
+//! problem for the CI smoke run; the full run asserts the acceptance
+//! bars (update cost scales with the O(B) seam rather than with M, and
+//! predict p99 under concurrent ingest stays below 2× idle serving).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use pgpr::config::{LmaConfig, PartitionStrategy, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::experiments::common::{quick_hypers, Workload};
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::residual::LmaFitCore;
+use pgpr::lma::LmaRegressor;
+use pgpr::online::{absorb, BlockPolicy};
+use pgpr::server::http::Server;
+use pgpr::server::loadgen::{self, LoadConfig};
+use pgpr::server::metrics::Histogram;
+use pgpr::util::bench::write_json_record;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+fn sine(x: &Mat) -> Vec<f64> {
+    (0..x.rows()).map(|i| x.get(i, 0).sin()).collect()
+}
+
+/// Fit a 1-D model with evenly sized contiguous blocks (deterministic
+/// block granularity — the scaling comparison needs equal block sizes at
+/// every M).
+fn fit_1d(n: usize, m: usize, b: usize, s: usize, seed: u64) -> (LmaFitCore, Mat, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let mut xs = rng.uniform_vec(n, -5.0, 5.0);
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let x = Mat::col_vec(&xs);
+    let y = sine(&x);
+    let hyp = SeArdHyper::isotropic(1, 0.8, 1.0, 0.1);
+    let cfg = LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::Contiguous,
+        use_pjrt: false,
+    };
+    let core = LmaFitCore::fit(&x, &y, &hyp, &cfg).unwrap();
+    (core, x, y)
+}
+
+/// Median seconds of `reps` single-batch absorbs against `core` (each
+/// rep re-absorbs the same batch against the same base — pure update
+/// cost, no model drift).
+fn median_update_secs(core: &LmaFitCore, batch: usize, reps: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::new(seed);
+    let bx = Mat::col_vec(&rng.uniform_vec(batch, 5.0, 5.5));
+    let by = sine(&bx);
+    let policy = BlockPolicy::from_core(core);
+    let plan = policy.plan(core.part.size(core.m() - 1), batch);
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            let (newc, _) = absorb(core, &bx, &by, &plan, 1).unwrap();
+            std::hint::black_box(newc.m());
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn main() {
+    let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
+    println!("=== bench: online update ({} mode) ===", if fast { "fast" } else { "full" });
+
+    // ---------------------------------------------------------------
+    // 1) Streaming ingestion: absorb a long observation stream batch by
+    //    batch; record per-update latency and overall observe throughput,
+    //    and verify update-equals-refit at the end.
+    // ---------------------------------------------------------------
+    let (n0, m0, b, s) = if fast { (768, 6, 2, 32) } else { (3072, 12, 2, 64) };
+    let updates = if fast { 8 } else { 24 };
+    let (core, x0, y0) = fit_1d(n0, m0, b, s, 17);
+    let policy = BlockPolicy::from_core(&core);
+    let batch_rows = (policy.target_rows / 2).max(4);
+
+    let mut rng = Pcg64::new(18);
+    let upd_hist = Histogram::new();
+    let mut cur = core;
+    let mut all_x = x0.clone();
+    let mut all_y = y0.clone();
+    let t_stream = std::time::Instant::now();
+    for _ in 0..updates {
+        let bx = Mat::col_vec(&rng.uniform_vec(batch_rows, 5.0, 6.0));
+        let by = sine(&bx);
+        let plan = policy.plan(cur.part.size(cur.m() - 1), batch_rows);
+        let t0 = std::time::Instant::now();
+        let (next, stats) = absorb(&cur, &bx, &by, &plan, 1).unwrap();
+        upd_hist.record(t0.elapsed().as_micros() as u64);
+        assert!(
+            stats.touched() <= cur.b() + 1 + plan.new_blocks.len(),
+            "seam exceeded: touched {}",
+            stats.touched()
+        );
+        all_x = Mat::vstack(&[&all_x, &bx]).unwrap();
+        all_y.extend_from_slice(&by);
+        cur = next;
+    }
+    let stream_secs = t_stream.elapsed().as_secs_f64();
+    let observe_rows_per_sec = (updates * batch_rows) as f64 / stream_secs;
+    let upd = upd_hist.snapshot();
+    println!(
+        "streamed {} rows in {updates} updates over {stream_secs:.2}s ({observe_rows_per_sec:.0} rows/s); \
+         update latency p50 {:.2}ms p99 {:.2}ms (M {} -> {})",
+        updates * batch_rows,
+        upd.p50 as f64 * 1e-3,
+        upd.p99 as f64 * 1e-3,
+        m0,
+        cur.m()
+    );
+
+    // Update-equals-refit sanity at the streamed endpoint.
+    let refit = LmaFitCore::fit_with_layout(
+        &all_x,
+        &all_y,
+        &cur.hyp,
+        &cur.cfg,
+        cur.partition.clone(),
+        cur.basis.s_scaled.clone(),
+        1,
+    )
+    .unwrap();
+    let q = Mat::col_vec(&Pcg64::new(19).uniform_vec(30, -5.0, 6.0));
+    let final_blocks = cur.m();
+    let ps = LmaRegressor::from_core(cur).predict(&q).unwrap();
+    let pr = LmaRegressor::from_core(refit).predict(&q).unwrap();
+    let mut max_gap = 0.0f64;
+    for i in 0..q.rows() {
+        max_gap = max_gap.max((ps.mean[i] - pr.mean[i]).abs());
+    }
+    println!("update-equals-refit max |Δmean| = {max_gap:.2e}");
+    assert!(max_gap < 1e-6, "streamed model diverged from refit: {max_gap}");
+
+    // ---------------------------------------------------------------
+    // 2) Seam scaling: same block size and B, small vs large M. The
+    //    incremental update touches O(B) blocks either way, while a
+    //    refit touches all M — the cost ratio between model sizes is the
+    //    evidence.
+    // ---------------------------------------------------------------
+    let target = policy.target_rows;
+    let m_small = m0;
+    let m_large = if fast { 2 * m0 } else { 4 * m0 };
+    let reps = if fast { 3 } else { 5 };
+    let (core_s, xs_s, ys_s) = fit_1d(target * m_small, m_small, b, s, 21);
+    let (core_l, xs_l, ys_l) = fit_1d(target * m_large, m_large, b, s, 22);
+    let upd_small = median_update_secs(&core_s, batch_rows, reps, 23);
+    let upd_large = median_update_secs(&core_l, batch_rows, reps, 23);
+    let refit_secs = |core: &LmaFitCore, x: &Mat, y: &[f64]| -> f64 {
+        let t0 = std::time::Instant::now();
+        let r = LmaFitCore::fit_with_layout(
+            x,
+            y,
+            &core.hyp,
+            &core.cfg,
+            core.partition.clone(),
+            core.basis.s_scaled.clone(),
+            1,
+        )
+        .unwrap();
+        std::hint::black_box(r.m());
+        t0.elapsed().as_secs_f64()
+    };
+    let refit_small = refit_secs(&core_s, &xs_s, &ys_s);
+    let refit_large = refit_secs(&core_l, &xs_l, &ys_l);
+    let update_ratio = upd_large / upd_small.max(1e-9);
+    let refit_ratio = refit_large / refit_small.max(1e-9);
+    let seam_scaling_ok = update_ratio < refit_ratio;
+    println!(
+        "seam scaling: M {m_small}->{m_large}: update {:.2}ms -> {:.2}ms ({update_ratio:.2}x), \
+         refit {:.1}ms -> {:.1}ms ({refit_ratio:.2}x) -> seam_scaling_ok={seam_scaling_ok}",
+        upd_small * 1e3,
+        upd_large * 1e3,
+        refit_small * 1e3,
+        refit_large * 1e3
+    );
+
+    // ---------------------------------------------------------------
+    // 3) Predict latency under concurrent ingest vs idle serving.
+    // ---------------------------------------------------------------
+    let train = if fast { 512 } else { 1536 };
+    let ds = Workload::parse("aimpeak").unwrap().generate(train, 64, 29).unwrap();
+    let hyp = quick_hypers(&ds);
+    let cfg = LmaConfig {
+        num_blocks: (train / 128).clamp(2, 16),
+        markov_order: 1,
+        support_size: (train / 16).clamp(8, 256),
+        seed: 29,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+    let model = LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg).unwrap();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 6,
+        batch_size: 8,
+        max_delay_us: 1000,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(ServeEngine::Centralized(model), &opts).unwrap();
+    let addr = server.addr().to_string();
+    let requests = if fast { 120 } else { 600 };
+    let load = |seed: u64| LoadConfig {
+        addr: addr.clone(),
+        concurrency: 4,
+        requests,
+        rows_per_request: 1,
+        dim: ds.train_x.cols(),
+        seed,
+        keep_alive: true,
+        models: Vec::new(),
+        rate_rps: 0.0,
+    };
+    let idle = loadgen::run(&load(31)).unwrap();
+    println!("idle    : {}", idle.render());
+
+    // Ingest thread: stream observation batches through the registry
+    // while the second measurement runs.
+    let stop = Arc::new(AtomicBool::new(false));
+    let registry = Arc::clone(server.registry());
+    let stream_ds = Workload::parse("aimpeak").unwrap().generate(2048, 8, 33).unwrap();
+    let ingest = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut off = 0usize;
+            let mut published = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                let take = 16.min(stream_ds.train_x.rows() - off);
+                if take == 0 {
+                    break;
+                }
+                let rows: Vec<Vec<f64>> =
+                    (off..off + take).map(|i| stream_ds.train_x.row(i).to_vec()).collect();
+                let ys = stream_ds.train_y[off..off + take].to_vec();
+                registry
+                    .observe(Some("default"), &rows, &ys, false, true)
+                    .expect("observe during ingest");
+                off += take;
+                published += 1;
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            published
+        })
+    };
+    let under_ingest = loadgen::run(&load(37)).unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let published = ingest.join().unwrap();
+    println!("ingest  : {} ({published} generations published meanwhile)", under_ingest.render());
+    assert!(published > 0, "the ingest thread must publish generations during the measurement");
+    let p99_ratio = under_ingest.p99_s / idle.p99_s.max(1e-9);
+    println!("predict p99 under ingest / idle = {p99_ratio:.2}x");
+    let metrics = server.shutdown();
+    eprintln!("{}", metrics.summary());
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("online_update".into())),
+        ("fast_mode", Json::Bool(fast)),
+        ("n0", Json::Num(n0 as f64)),
+        ("m0", Json::Num(m0 as f64)),
+        ("b", Json::Num(b as f64)),
+        ("s", Json::Num(s as f64)),
+        ("updates", Json::Num(updates as f64)),
+        ("batch_rows", Json::Num(batch_rows as f64)),
+        ("final_blocks", Json::Num(final_blocks as f64)),
+        ("observe_rows_per_sec", Json::Num(observe_rows_per_sec)),
+        ("update_p50_ms", Json::Num(upd.p50 as f64 * 1e-3)),
+        ("update_p99_ms", Json::Num(upd.p99 as f64 * 1e-3)),
+        ("update_mean_ms", Json::Num(upd.mean * 1e-3)),
+        ("refit_gap_max_abs", Json::Num(max_gap)),
+        ("m_small", Json::Num(m_small as f64)),
+        ("m_large", Json::Num(m_large as f64)),
+        ("update_small_ms", Json::Num(upd_small * 1e3)),
+        ("update_large_ms", Json::Num(upd_large * 1e3)),
+        ("refit_small_ms", Json::Num(refit_small * 1e3)),
+        ("refit_large_ms", Json::Num(refit_large * 1e3)),
+        ("update_ratio", Json::Num(update_ratio)),
+        ("refit_ratio", Json::Num(refit_ratio)),
+        ("seam_scaling_ok", Json::Bool(seam_scaling_ok)),
+        ("predict_p99_idle_s", Json::Num(idle.p99_s)),
+        ("predict_p99_under_ingest_s", Json::Num(under_ingest.p99_s)),
+        ("predict_p99_ratio", Json::Num(p99_ratio)),
+        ("generations_during_ingest", Json::Num(published as f64)),
+    ]);
+    write_json_record("BENCH_online_update.json", &record).expect("write record");
+    println!("wrote BENCH_online_update.json");
+
+    // Acceptance bars at the full operating point only (the shrunken CI
+    // smoke config records them — small problems + noisy runners).
+    if !fast {
+        assert!(
+            seam_scaling_ok,
+            "update cost grew faster than refit cost across M ({update_ratio:.2}x vs {refit_ratio:.2}x)"
+        );
+        assert!(
+            p99_ratio < 2.0,
+            "predict p99 degraded {p99_ratio:.2}x under ingest (bar: < 2x)"
+        );
+    }
+}

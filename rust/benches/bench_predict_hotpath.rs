@@ -141,6 +141,22 @@ fn main() {
         dense_nxu_bytes,
         no_dense_alloc
     );
+    // Pooling coverage: a warm scratch (RbarBlocks + Σ̄ rows + UTerms all
+    // recycled) must allocate strictly less per call than a cold scratch
+    // built fresh every call — the structural evidence that the sweep's
+    // per-call buffers really are pooled now.
+    let (c2, _) = alloc_snapshot();
+    for _ in 0..steady_iters {
+        let mut cold = PredictScratch::new();
+        let p = model.predict_with_scratch(&single, &mut cold).expect("cold");
+        std::hint::black_box(p.mean[0]);
+    }
+    let (c3, _) = alloc_snapshot();
+    let warm_allocs = (c1 - c0) as f64 / steady_iters as f64;
+    let cold_allocs = (c3 - c2) as f64 / steady_iters as f64;
+    println!(
+        "allocs per predict: warm scratch {warm_allocs:.1} vs cold scratch {cold_allocs:.1}"
+    );
 
     let speedup_single = median("single/recompute_legacy") / median("single/context");
     let speedup_single_dense = median("single/dense_prepr") / median("single/context");
@@ -170,7 +186,8 @@ fn main() {
         ("phases_context_us", phases_to_json(&prof_fast)),
         ("phases_recompute_us", phases_to_json(&prof_legacy)),
         ("phases_dense_us", phases_to_json(&prof_dense)),
-        ("steady_allocs_per_predict", Json::Num((c1 - c0) as f64 / steady_iters as f64)),
+        ("steady_allocs_per_predict", Json::Num(warm_allocs)),
+        ("cold_scratch_allocs_per_predict", Json::Num(cold_allocs)),
         ("steady_alloc_bytes_per_predict", Json::Num((b1 - b0) as f64 / steady_iters as f64)),
         ("max_single_alloc_bytes", Json::Num(max_single_alloc as f64)),
         ("dense_nxu_bytes", Json::Num(dense_nxu_bytes as f64)),
@@ -188,6 +205,10 @@ fn main() {
     assert!(
         no_dense_alloc,
         "steady-state predict performed a {max_single_alloc}-byte allocation ≥ the dense N×u bound ({dense_nxu_bytes} B)"
+    );
+    assert!(
+        warm_allocs < cold_allocs,
+        "pooled scratch ({warm_allocs:.1} allocs/predict) is not cheaper than a cold scratch ({cold_allocs:.1})"
     );
     // The ≥3× single-point bar is defined at the full operating point
     // (M=32, B=2, |S|=64, N=4096); the shrunken PGPR_BENCH_FAST smoke

@@ -26,6 +26,9 @@ fn main() {
         concurrency: if fast { 4 } else { 16 },
         requests: if fast { 120 } else { 2000 },
         rows: 1,
+        // A modest open-loop pass rides along so the record tracks the
+        // coordinated-omission-corrected quantiles too.
+        rate: if fast { 50.0 } else { 200.0 },
         out: "BENCH_serve_latency.json".into(),
         // Both connection modes (keep-alive and per-request close), so
         // the record tracks the TCP-setup cost the keep-alive path saves.

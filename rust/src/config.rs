@@ -240,11 +240,25 @@ pub struct RegistryOptions {
     pub max_models: usize,
     /// Evict the LRU non-default model to make room instead of rejecting.
     pub lru_evict: bool,
+    /// Observed rows a model buffers before the incremental update runs
+    /// (1 = every observe request publishes a new generation; larger
+    /// values amortize the seam refit across bigger batches). A request
+    /// can force either behavior per call (`"buffer"`/`"flush"`).
+    pub observe_flush_rows: usize,
+    /// After each published generation, rewrite the model's artifact
+    /// snapshot in place (only for models loaded from a snapshot path);
+    /// untouched blocks reuse their previously encoded bytes.
+    pub resnapshot: bool,
 }
 
 impl Default for RegistryOptions {
     fn default() -> Self {
-        RegistryOptions { max_models: 8, lru_evict: true }
+        RegistryOptions {
+            max_models: 8,
+            lru_evict: true,
+            observe_flush_rows: 1,
+            resnapshot: false,
+        }
     }
 }
 
@@ -253,6 +267,9 @@ impl RegistryOptions {
         if self.max_models == 0 {
             return Err(PgprError::Config("registry: max_models must be ≥ 1".into()));
         }
+        if self.observe_flush_rows == 0 {
+            return Err(PgprError::Config("registry: observe_flush_rows must be ≥ 1".into()));
+        }
         Ok(())
     }
 
@@ -260,6 +277,8 @@ impl RegistryOptions {
         Json::obj(vec![
             ("max_models", Json::Num(self.max_models as f64)),
             ("lru_evict", Json::Bool(self.lru_evict)),
+            ("observe_flush_rows", Json::Num(self.observe_flush_rows as f64)),
+            ("resnapshot", Json::Bool(self.resnapshot)),
         ])
     }
 
@@ -268,6 +287,11 @@ impl RegistryOptions {
         Ok(RegistryOptions {
             max_models: j.get("max_models").and_then(|v| v.as_usize()).unwrap_or(d.max_models),
             lru_evict: j.get("lru_evict").and_then(|v| v.as_bool()).unwrap_or(d.lru_evict),
+            observe_flush_rows: j
+                .get("observe_flush_rows")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.observe_flush_rows),
+            resnapshot: j.get("resnapshot").and_then(|v| v.as_bool()).unwrap_or(d.resnapshot),
         })
     }
 }
@@ -525,7 +549,12 @@ mod tests {
 
     #[test]
     fn registry_options_roundtrip_and_validate() {
-        let r = RegistryOptions { max_models: 3, lru_evict: false };
+        let r = RegistryOptions {
+            max_models: 3,
+            lru_evict: false,
+            observe_flush_rows: 16,
+            resnapshot: true,
+        };
         assert!(r.validate().is_ok());
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
         assert_eq!(RegistryOptions::from_json(&parsed).unwrap(), r);
@@ -533,6 +562,9 @@ mod tests {
         let partial = RegistryOptions::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(partial, RegistryOptions::default());
         assert!(RegistryOptions { max_models: 0, ..Default::default() }.validate().is_err());
+        assert!(RegistryOptions { observe_flush_rows: 0, ..Default::default() }
+            .validate()
+            .is_err());
     }
 
     #[test]

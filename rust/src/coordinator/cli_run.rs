@@ -192,6 +192,24 @@ pub struct ServeCmd {
     pub models: Vec<String>,
     /// Registry capacity for `PUT /models/<name>` loads at runtime.
     pub max_models: usize,
+    /// Observed rows buffered per model before an incremental update
+    /// publishes a new generation (`POST /models/<name>/observe`).
+    pub observe_flush_rows: usize,
+    /// Rewrite a model's artifact in place after each published update
+    /// (models loaded from snapshots only; untouched blocks reuse their
+    /// previous encodings).
+    pub resnapshot: bool,
+}
+
+impl ServeCmd {
+    fn registry_options(&self, min_models: usize) -> RegistryOptions {
+        RegistryOptions {
+            max_models: self.max_models.max(min_models).max(1),
+            lru_evict: true,
+            observe_flush_rows: self.observe_flush_rows.max(1),
+            resnapshot: self.resnapshot,
+        }
+    }
 }
 
 /// Fit a serving engine: synthetic workload, quick hypers. `blocks`,
@@ -243,23 +261,26 @@ fn parse_model_spec(s: &str) -> Result<(String, String)> {
 /// Load `name=path` artifact specs into a fresh registry (the shared
 /// boot path of `pgpr serve --model` and self-contained
 /// `pgpr loadtest --artifact`). The first spec becomes the default
-/// model; capacity is at least the number of specs.
+/// model; capacity is at least the number of specs. Each model remembers
+/// its snapshot path, so `--resnapshot` can rewrite it after online
+/// updates.
 fn registry_from_artifacts(
     specs: &[String],
     opts: &ServeOptions,
-    max_models: usize,
+    reg_opts: RegistryOptions,
     log_prefix: &str,
 ) -> Result<Arc<ModelRegistry>> {
     let specs: Vec<(String, String)> =
         specs.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
-    let registry = Arc::new(ModelRegistry::new(
-        RegistryOptions { max_models: max_models.max(specs.len()).max(1), lru_evict: true },
-        opts,
-    ));
+    let reg_opts = RegistryOptions {
+        max_models: reg_opts.max_models.max(specs.len()).max(1),
+        ..reg_opts
+    };
+    let registry = Arc::new(ModelRegistry::new(reg_opts, opts));
     for (name, path) in &specs {
         let engine = artifact::load_engine(path)?;
         registry
-            .load(name, Arc::new(engine))
+            .load_from_path(name, Arc::new(engine), path)
             .map_err(|e| PgprError::Config(e.to_string()))?;
         eprintln!("{log_prefix}loaded model `{name}` from {path}");
     }
@@ -335,7 +356,7 @@ pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
             eprintln!("loaded model `{name}` from {path} (no training data touched)");
             return serve_stdin(c, engine, name);
         }
-        let registry = registry_from_artifacts(&c.models, &c.opts, c.max_models, "")?;
+        let registry = registry_from_artifacts(&c.models, &c.opts, c.registry_options(0), "")?;
         let server = Server::start_with_registry(registry, &c.opts)?;
         return serve_http_run(c, server, "artifacts");
     }
@@ -415,11 +436,9 @@ fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
 
 fn serve_http(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     // Build the registry here (rather than Server::start) so the
-    // `--max-models` cap applies to runtime `PUT /models` loads too.
-    let registry = Arc::new(ModelRegistry::new(
-        RegistryOptions { max_models: c.max_models.max(1), lru_evict: true },
-        &c.opts,
-    ));
+    // `--max-models` cap (and the observe options) apply to runtime
+    // `PUT /models` loads too.
+    let registry = Arc::new(ModelRegistry::new(c.registry_options(0), &c.opts));
     registry
         .load(crate::server::http::DEFAULT_MODEL, Arc::new(engine))
         .map_err(|e| PgprError::Config(e.to_string()))?;
@@ -485,6 +504,9 @@ pub struct LoadtestCmd {
     pub concurrency: usize,
     pub requests: usize,
     pub rows: usize,
+    /// Open-loop arrival rate (req/s) for the additional
+    /// coordinated-omission-corrected pass; 0 = closed-loop only.
+    pub rate: f64,
     /// Output path of the machine-readable record.
     pub out: String,
     /// Connection mode(s): `keepalive`, `close` or `both`.
@@ -510,6 +532,7 @@ impl Default for LoadtestCmd {
             concurrency: 8,
             requests: 200,
             rows: 1,
+            rate: 0.0,
             out: "BENCH_serve_latency.json".into(),
             mode: "both".into(),
             models: Vec::new(),
@@ -535,12 +558,13 @@ fn boot_self_server(c: &LoadtestCmd) -> Result<Server> {
         opts.workers = opts.workers.max(c.concurrency);
     }
     if !c.artifacts.is_empty() {
-        let registry = registry_from_artifacts(&c.artifacts, &opts, 8, "loadtest: ")?;
+        let registry =
+            registry_from_artifacts(&c.artifacts, &opts, RegistryOptions::default(), "loadtest: ")?;
         return Server::start_with_registry(registry, &opts);
     }
     if !c.models.is_empty() {
         let registry = Arc::new(ModelRegistry::new(
-            RegistryOptions { max_models: c.models.len().max(8), lru_evict: true },
+            RegistryOptions { max_models: c.models.len().max(8), ..Default::default() },
             &opts,
         ));
         for (i, name) in c.models.iter().enumerate() {
@@ -605,11 +629,34 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
             seed: c.seed,
             keep_alive,
             models: c.models.clone(),
+            rate_rps: 0.0,
         };
         let report = loadgen::run(&lc)?;
         eprintln!("{}", report.render());
         reports.push(report);
     }
+    // Optional open-loop pass: fixed arrival rate over keep-alive
+    // connections, latency measured from the scheduled arrival
+    // (coordinated-omission corrected) — reported alongside the
+    // closed-loop records.
+    let open_report = if c.rate > 0.0 {
+        let lc = loadgen::LoadConfig {
+            addr: addr.clone(),
+            concurrency: c.concurrency,
+            requests: c.requests,
+            rows_per_request: c.rows,
+            dim,
+            seed: c.seed,
+            keep_alive: true,
+            models: c.models.clone(),
+            rate_rps: c.rate,
+        };
+        let report = loadgen::run(&lc)?;
+        eprintln!("{}", report.render());
+        Some(report)
+    } else {
+        None
+    };
     let mode = if server.is_some() { "self" } else { "remote" };
     let headline = &reports[0];
     let mut fields: Vec<(&str, Json)> = vec![
@@ -639,6 +686,10 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
         } else {
             ("client_close", r.to_json())
         });
+    }
+    if let Some(r) = &open_report {
+        fields.push(("rate_rps", Json::Num(c.rate)));
+        fields.push(("client_open", r.to_json()));
     }
     if let Some(server) = server {
         // Engine/batcher configuration is only known (and only true) in
@@ -676,6 +727,89 @@ pub fn cmd_loadtest(c: &LoadtestCmd) -> Result<()> {
     let record = run_loadtest(c)?;
     crate::util::bench::write_json_record(&c.out, &record)?;
     println!("wrote {}", c.out);
+    Ok(())
+}
+
+/// `pgpr observe` parameters: replay a CSV observation stream into a
+/// served model.
+#[derive(Clone, Debug)]
+pub struct ObserveCmd {
+    /// Target `host:port` of a running `pgpr serve --listen`.
+    pub addr: String,
+    /// Registry model name to stream into.
+    pub model: String,
+    /// Observation CSV (same `x0..xd-1, y` schema as `pgpr eval` inputs).
+    pub csv: String,
+    /// Rows per observe request.
+    pub batch_rows: usize,
+    /// Buffer intermediate batches server-side and publish one update at
+    /// the end (the last request flushes).
+    pub buffer: bool,
+    /// Replay at most this many rows (0 = the whole file).
+    pub limit: usize,
+}
+
+/// `pgpr observe` — offline replay of an observation stream into a live
+/// model over `POST /models/<name>/observe` (one keep-alive connection).
+pub fn cmd_observe(c: &ObserveCmd) -> Result<()> {
+    if c.addr.is_empty() {
+        return Err(PgprError::Config("observe: --addr host:port is required".into()));
+    }
+    if c.batch_rows == 0 {
+        return Err(PgprError::Config("observe: --batch-rows must be ≥ 1".into()));
+    }
+    let (x, y) = load_xy_csv(&c.csv)?;
+    let total = if c.limit == 0 { x.rows() } else { c.limit.min(x.rows()) };
+    if total == 0 {
+        return Err(PgprError::Data(format!("{}: no observation rows", c.csv)));
+    }
+    let mut conn = loadgen::HttpConn::connect(&c.addr)?;
+    let path = format!("/models/{}/observe", c.model);
+    let t0 = std::time::Instant::now();
+    let mut sent = 0usize;
+    let mut batches = 0usize;
+    let mut last = Json::Null;
+    while sent < total {
+        let take = c.batch_rows.min(total - sent);
+        let rows: Vec<Json> = (sent..sent + take).map(|i| Json::arr_f64(x.row(i))).collect();
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("rows", Json::Arr(rows)),
+            ("y", Json::arr_f64(&y[sent..sent + take])),
+        ];
+        // Intermediate batches only buffer when requested; the final
+        // batch always publishes whatever is pending (even when the
+        // server's flush threshold is larger than the batch).
+        if c.buffer && sent + take < total {
+            fields.push(("buffer", Json::Bool(true)));
+        } else if sent + take >= total {
+            fields.push(("flush", Json::Bool(true)));
+        }
+        let body = Json::obj(fields).to_string();
+        let (status, resp, closes) = conn.request("POST", &path, Some(&body))?;
+        if status != 200 {
+            return Err(PgprError::Data(format!(
+                "observe batch at row {sent} returned {status}: {resp}"
+            )));
+        }
+        // The server closes a connection after max-conn-requests;
+        // re-establish so replays longer than that cap keep going.
+        if closes {
+            conn = loadgen::HttpConn::connect(&c.addr)?;
+        }
+        last = Json::parse(&resp)?;
+        sent += take;
+        batches += 1;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let gen = last.get("generation").and_then(|v| v.as_usize()).unwrap_or(0);
+    let blocks = last.get("blocks").and_then(|v| v.as_usize()).unwrap_or(0);
+    let train_rows = last.get("train_rows").and_then(|v| v.as_usize()).unwrap_or(0);
+    println!(
+        "observed {sent} rows in {batches} batches over {secs:.2}s ({:.1} rows/s); \
+         model `{}` now at generation {gen} ({blocks} blocks, {train_rows} rows)",
+        sent as f64 / secs.max(1e-9),
+        c.model,
+    );
     Ok(())
 }
 
@@ -810,6 +944,15 @@ pub fn dispatch() -> Result<()> {
                 .switch("no-keepalive", "one request per connection (legacy Connection: close)")
                 .flag("idle-timeout-ms", "5000", "keep-alive idle timeout")
                 .flag("max-conn-requests", "1000", "requests served per connection before close")
+                .flag(
+                    "observe-flush-rows",
+                    "1",
+                    "observed rows buffered per model before an incremental update publishes a new generation",
+                )
+                .switch(
+                    "resnapshot",
+                    "rewrite a model's artifact in place after each published online update",
+                )
                 .parse_from(rest)?;
             let opts = ServeOptions {
                 listen: a.get("listen"),
@@ -829,6 +972,29 @@ pub fn dispatch() -> Result<()> {
                 opts,
                 models: a.get_multi("model"),
                 max_models: a.get_usize("max-models"),
+                observe_flush_rows: a.get_usize("observe-flush-rows"),
+                resnapshot: a.get_bool("resnapshot"),
+            })
+        }
+        "observe" => {
+            let a = Args::new("pgpr observe", "replay an observation stream into a served model")
+                .required("addr", "target host:port of a running `pgpr serve --listen`")
+                .flag("model", "default", "registry model name to stream into")
+                .required("csv", "observation CSV (x0..xd-1, y header)")
+                .flag("batch-rows", "64", "rows per observe request")
+                .switch(
+                    "buffer",
+                    "buffer intermediate batches server-side; publish one update at the end",
+                )
+                .flag("limit", "0", "replay at most this many rows (0 = all)")
+                .parse_from(rest)?;
+            cmd_observe(&ObserveCmd {
+                addr: a.get("addr"),
+                model: a.get("model"),
+                csv: a.get("csv"),
+                batch_rows: a.get_usize("batch-rows"),
+                buffer: a.get_bool("buffer"),
+                limit: a.get_usize("limit"),
             })
         }
         "loadtest" => {
@@ -855,6 +1021,11 @@ pub fn dispatch() -> Result<()> {
                     "self-mode name=path artifact to serve instead of fitting (repeatable)",
                 )
                 .flag("mode", "both", "connection mode: keepalive | close | both")
+                .flag(
+                    "rate",
+                    "0",
+                    "open-loop arrival rate in req/s (adds a coordinated-omission-corrected pass; 0 = closed-loop only)",
+                )
                 .flag("batch", "16", "self-mode micro-batch size")
                 .flag("workers", "4", "self-mode HTTP worker threads")
                 .flag("max-delay-us", "2000", "self-mode flush deadline (µs)")
@@ -881,6 +1052,7 @@ pub fn dispatch() -> Result<()> {
                 concurrency: a.get_usize("concurrency"),
                 requests: a.get_usize("requests"),
                 rows: a.get_usize("rows"),
+                rate: a.get_f64("rate"),
                 out: a.get("out"),
                 mode: a.get("mode"),
                 models: a.get_multi("model"),
@@ -897,9 +1069,10 @@ pub fn dispatch() -> Result<()> {
                  pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
                  \u{20}          [--model name=model.pgpr ...] [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
+                 pgpr observe --addr HOST:PORT --csv data.csv [--model default --batch-rows 64 --buffer --limit 0]\n  \
                  pgpr loadtest [--addr HOST:PORT | --dataset aimpeak --train 600 --backend threads:0]\n  \
                  \u{20}          [--model NAME ...] [--artifact name=model.pgpr ...] [--mode both|keepalive|close]\n  \
-                 \u{20}          [--concurrency 8 --requests 200 --rows 1 --out BENCH_serve_latency.json]\n  \
+                 \u{20}          [--rate 0] [--concurrency 8 --requests 200 --rows 1 --out BENCH_serve_latency.json]\n  \
                  pgpr bench-info\n"
             );
             Ok(())

@@ -11,9 +11,15 @@
 //!   [--listen host:port --workers N --max-delay-us D]` — HTTP service when
 //!   `--listen` is set (multi-model registry when `--model` artifacts are
 //!   given), stdin line protocol otherwise
+//! * `pgpr observe --addr host:port --csv stream.csv [--model name]` —
+//!   replay a CSV observation stream into a served model over
+//!   `POST /models/<name>/observe` (incremental per-block updates,
+//!   atomic generation swaps)
 //! * `pgpr loadtest [--addr host:port | self-contained flags]
-//!   [--model NAME ...] [--artifact name=path ...]` — closed-loop load
-//!   generator (keep-alive and close modes), writes `BENCH_serve_latency.json`
+//!   [--model NAME ...] [--artifact name=path ...] [--rate R]` —
+//!   closed-loop load generator (keep-alive and close modes) plus an
+//!   optional open-loop coordinated-omission-corrected pass, writes
+//!   `BENCH_serve_latency.json`
 //! * `pgpr bench-info` — print artifact/bucket status
 
 pub mod service;

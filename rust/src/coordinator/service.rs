@@ -77,6 +77,50 @@ impl ServeEngine {
             ServeEngine::Parallel(m) => m.cluster_config().backend.selector(),
         }
     }
+
+    /// Rebuild the same engine kind around an updated fitted core — how
+    /// an online update publishes a new generation. Parallel engines keep
+    /// their backend/latency model but the topology tracks the (possibly
+    /// grown) block count: the core count stays one-block-per-core.
+    pub fn with_core(&self, core: LmaFitCore) -> Result<ServeEngine> {
+        match self {
+            ServeEngine::Centralized(_) => {
+                Ok(ServeEngine::Centralized(LmaRegressor::from_core(core)))
+            }
+            ServeEngine::Parallel(m) => {
+                let mut cc = m.cluster_config().clone();
+                let mm = core.m();
+                if cc.total_cores() != mm {
+                    // One block per core must keep holding. Keep as many
+                    // machines as divide the new M (largest divisor ≤ the
+                    // current count); an indivisible M falls back to fewer
+                    // machines. The fallback is sticky — the config does
+                    // not remember the boot machine count — which only
+                    // affects the simulator's latency/traffic model,
+                    // never predictions. (The serving CLI always builds
+                    // single-machine topologies, where this is exact.)
+                    let machines = (1..=cc.machines.max(1))
+                        .rev()
+                        .find(|w| mm % w == 0)
+                        .unwrap_or(1);
+                    cc.machines = machines;
+                    cc.cores_per_machine = mm / machines;
+                }
+                Ok(ServeEngine::Parallel(ParallelLma::from_parts(core, cc)?))
+            }
+        }
+    }
+
+    /// Worker-pool width for the independent per-block work of an online
+    /// update: the cluster backend's real parallelism for parallel
+    /// engines (new blocks are fitted on their owning rank's workers),
+    /// the global `util::par` count for centralized ones.
+    pub fn update_parallelism(&self) -> usize {
+        match self {
+            ServeEngine::Centralized(_) => crate::util::par::num_threads(),
+            ServeEngine::Parallel(m) => m.cluster_config().backend.parallelism(),
+        }
+    }
 }
 
 // The serving threads share one engine behind `Arc`; keep that possible.
@@ -146,6 +190,18 @@ impl PredictionService {
     /// Serve an engine that is shared with other owners (the model
     /// registry hands every batcher an `Arc` of its entry's engine).
     pub fn with_shared(engine: Arc<ServeEngine>, batch_size: usize) -> Result<PredictionService> {
+        Self::with_shared_metrics(engine, batch_size, Arc::new(ServeMetrics::new()))
+    }
+
+    /// [`with_shared`](Self::with_shared) recording into a caller-owned
+    /// metrics object — the registry passes the *previous* generation's
+    /// metrics when an online update swaps engines, so per-model
+    /// histograms and counters persist across generations.
+    pub fn with_shared_metrics(
+        engine: Arc<ServeEngine>,
+        batch_size: usize,
+        metrics: Arc<ServeMetrics>,
+    ) -> Result<PredictionService> {
         if batch_size == 0 {
             return Err(PgprError::Config("batch_size must be ≥ 1".into()));
         }
@@ -154,7 +210,7 @@ impl PredictionService {
             batch_size,
             max_delay: None,
             queue: Vec::new(),
-            metrics: Arc::new(ServeMetrics::new()),
+            metrics,
             scratch: PredictScratch::new(),
             served: 0,
             batches: 0,

@@ -110,13 +110,27 @@ pub fn cov_cross_scaled(s1: &Mat, s2: &Mat, sigma_s2: f64) -> Result<Mat> {
 /// path's zero-copy entry (the row norms, the Gram GEMM and the exp()
 /// sweep all read the same bytes, so results are bit-identical).
 pub fn cov_cross_scaled_view(s1: MatView<'_>, s2: MatView<'_>, sigma_s2: f64) -> Result<Mat> {
+    let mut g = Mat::zeros(0, 0);
+    cov_cross_scaled_view_into(s1, s2, sigma_s2, &mut g)?;
+    Ok(g)
+}
+
+/// [`cov_cross_scaled_view`] writing into a caller-owned buffer (reshaped
+/// via `Mat::reset`, retaining its allocation — serve-scratch reuse).
+/// Same Gram GEMM + exp() sweep, bit-identical output.
+pub fn cov_cross_scaled_view_into(
+    s1: MatView<'_>,
+    s2: MatView<'_>,
+    sigma_s2: f64,
+    g: &mut Mat,
+) -> Result<()> {
     let n1 = s1.rows();
     let n2 = s2.rows();
     // ‖x‖² per row.
     let sq1: Vec<f64> = (0..n1).map(|i| gemm::dot(s1.row(i), s1.row(i))).collect();
     let sq2: Vec<f64> = (0..n2).map(|i| gemm::dot(s2.row(i), s2.row(i))).collect();
     // G = S1 · S2ᵀ through the GEMM kernel.
-    let mut g = gemm::matmul_nt_view(s1, s2)?;
+    gemm::matmul_nt_into(s1, s2, g)?;
     let threads = {
         let t = crate::util::par::num_threads();
         if t <= 1 || n1 < 8 || n1 * n2 < (1 << 16) || crate::util::par::in_worker() {
@@ -136,7 +150,7 @@ pub fn cov_cross_scaled_view(s1: MatView<'_>, s2: MatView<'_>, sigma_s2: f64) ->
             exp_rows(chunk, sq1_ref, sq2_ref, sigma_s2, lo, hi, n2)
         });
     }
-    Ok(g)
+    Ok(())
 }
 
 /// exp() sweep over rows `i0..i1` of the Gram product (chunk-local `gd`).

@@ -27,7 +27,12 @@
 //!   checksummed on-disk artifacts (`registry::artifact`,
 //!   `pgpr fit --save`) and many models serve side by side from one
 //!   process through the multi-model `registry` (per-model batchers and
-//!   metrics, `GET/PUT/DELETE /models[/name]`).
+//!   metrics, `GET/PUT/DELETE /models[/name]`). Live models absorb
+//!   streamed observations through the `online` subsystem
+//!   (`POST /models/{name}/observe`, `pgpr observe`): an incremental
+//!   per-block refit touches only the O(B) Markov seam and each update
+//!   is published as a new immutable engine generation, swapped in
+//!   atomically under traffic.
 //! * **Layer 2 (python/compile/model.py)** — JAX compute graphs for the
 //!   covariance/summary hot spots, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels (tiled SE-ARD
@@ -58,6 +63,7 @@ pub mod kernels;
 pub mod gp;
 pub mod sparse;
 pub mod lma;
+pub mod online;
 pub mod cluster;
 pub mod runtime;
 pub mod data;

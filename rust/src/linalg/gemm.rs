@@ -46,6 +46,15 @@ fn plan_threads(rows: usize, flops: usize) -> usize {
 
 /// C = A·B.
 pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
+    let mut c = Mat::zeros(0, 0);
+    matmul_into(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// [`matmul`] writing into a caller-owned buffer (reshaped via
+/// [`Mat::reset`], retaining its allocation — serve-scratch reuse). The
+/// shape check runs first; on error the buffer is left untouched.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     if a.cols() != b.rows() {
         return shape_err(format!(
             "matmul: {}x{} · {}x{}",
@@ -56,16 +65,16 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
         ));
     }
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
+    c.reset(m, n);
     if m == 0 || k == 0 || n == 0 {
-        return Ok(c);
+        return Ok(());
     }
     let ad = a.data();
     let bd = b.data();
     let threads = plan_threads(m, m * k * n);
     if threads <= 1 {
         matmul_rows(c.data_mut(), ad, bd, k, n, 0, m);
-        return Ok(c);
+        return Ok(());
     }
     // Chunks sized in multiples of 4 rows so the register-blocked kernel
     // groups rows exactly as the sequential path does (bit-identical).
@@ -73,7 +82,7 @@ pub fn matmul(a: &Mat, b: &Mat) -> Result<Mat> {
     run_row_chunks(c.data_mut(), m, n, per, move |chunk, lo, hi| {
         matmul_rows(chunk, ad, bd, k, n, lo, hi)
     });
-    Ok(c)
+    Ok(())
 }
 
 /// The blocked i-k-j kernel over output rows `i0..i1`; `cd` holds exactly
@@ -137,6 +146,15 @@ fn matmul_rows(cd: &mut [f64], ad: &[f64], bd: &[f64], k: usize, n: usize, i0: u
 
 /// C = Aᵀ·B where A is (k×m), B is (k×n) → C is (m×n).
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
+    let mut c = Mat::zeros(0, 0);
+    matmul_tn_into(a, b, &mut c)?;
+    Ok(c)
+}
+
+/// [`matmul_tn`] writing into a caller-owned buffer (reshaped via
+/// [`Mat::reset`], retaining its allocation — serve-scratch reuse). The
+/// shape check runs first; on error the buffer is left untouched.
+pub fn matmul_tn_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     if a.rows() != b.rows() {
         return shape_err(format!(
             "matmul_tn: ({}x{})ᵀ · {}x{}",
@@ -147,9 +165,9 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
         ));
     }
     let (k, m, n) = (a.rows(), a.cols(), b.cols());
-    let mut c = Mat::zeros(m, n);
+    c.reset(m, n);
     if m == 0 || k == 0 || n == 0 {
-        return Ok(c);
+        return Ok(());
     }
     let cd = c.data_mut();
     let ad = a.data();
@@ -173,7 +191,7 @@ pub fn matmul_tn(a: &Mat, b: &Mat) -> Result<Mat> {
             }
         }
     }
-    Ok(c)
+    Ok(())
 }
 
 /// C = A·Bᵀ where A is (m×k), B is (n×k) → C is (m×n).

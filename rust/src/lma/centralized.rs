@@ -11,10 +11,10 @@ use crate::lma::context::{legacy_mode, LegacyMode, PredictContext, PredictScratc
 use crate::lma::predict::scatter;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::summary::{
-    local_terms, local_terms_fast_in, reduce, reduce_u, sigma_bar_du, sigma_bar_rows_into,
-    LocalTerms, UTerms,
+    local_terms, local_terms_fast_into, reduce, reduce_u_into, sigma_bar_du, sigma_bar_rows_into,
+    LocalTerms,
 };
-use crate::lma::sweep::{rbar_du, rbar_du_blocks, TestSide};
+use crate::lma::sweep::{rbar_du, rbar_du_blocks_in, TestSide};
 use crate::util::error::Result;
 use crate::util::timer::PhaseProfiler;
 
@@ -125,31 +125,40 @@ impl LmaRegressor {
         };
         let mm = self.core.m();
         let ts = prof.scope("predict/test_side", || TestSide::build(&self.core, test_x))?;
-        let rbar =
-            prof.scope("predict/sweep_rbar_du", || rbar_du_blocks(&self.core, ctx, &ts))?;
         scratch.ensure_blocks(mm);
-        let PredictScratch { sbar, udot, vu } = scratch;
-        prof.scope("predict/sigma_bar", || {
-            sigma_bar_rows_into(&self.core, &ts, &rbar, &mut *sbar)
+        let PredictScratch { sbar, udot, vu, rbar, qtmp, terms, gsum, colbuf } = scratch;
+        prof.scope("predict/sweep_rbar_du", || {
+            rbar_du_blocks_in(&self.core, ctx, &ts, &mut *rbar, &mut *qtmp)
         })?;
-        let terms: Result<Vec<UTerms>> = prof.scope("predict/local_summaries", || {
-            (0..mm)
-                .map(|m| {
-                    local_terms_fast_in(&self.core, ctx, &*sbar, m, full_cov, &mut *udot, &mut *vu)
-                })
-                .collect()
-        });
-        let terms = terms?;
-        let g = prof.scope("predict/global_summary", || {
-            reduce_u(&terms, ts.total(), self.core.basis.size())
+        prof.scope("predict/sigma_bar", || {
+            sigma_bar_rows_into(&self.core, &ts, &*rbar, &mut *sbar)
+        })?;
+        prof.scope("predict/local_summaries", || -> Result<()> {
+            for (m, term) in terms.iter_mut().enumerate().take(mm) {
+                local_terms_fast_into(
+                    &self.core,
+                    ctx,
+                    &*sbar,
+                    m,
+                    full_cov,
+                    &mut *udot,
+                    &mut *vu,
+                    &mut *colbuf,
+                    term,
+                )?;
+            }
+            Ok(())
+        })?;
+        prof.scope("predict/global_summary", || {
+            reduce_u_into(&terms[..mm], ts.total(), self.core.basis.size(), &mut *gsum)
         })?;
         let pred = prof.scope("predict/theorem2", || {
             crate::lma::predict::predict_from_context(
                 &self.core,
                 &ts,
                 ctx,
-                &g,
-                if full_cov { Some(&rbar) } else { None },
+                &*gsum,
+                if full_cov { Some(&*rbar) } else { None },
             )
         })?;
         Ok((scatter(&ts, pred), prof))

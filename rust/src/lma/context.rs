@@ -47,7 +47,11 @@ pub struct PredictContext {
     pub vy: Vec<Mat>,
     /// ÿ_S = Σ_m vs_mᵀ·vy_m (|S|).
     pub ys: Vec<f64>,
-    /// Cholesky of Σ̈_SS = Σ_SS + jitter·I + Σ_m vs_mᵀ·vs_m.
+    /// Raw Σ̈_SS = Σ_SS + jitter·I + Σ_m vs_mᵀ·vs_m (pre-factorization).
+    /// Kept so the online updater can subtract a touched block's old
+    /// contribution and add its new one without an O(|D||S|²) resum.
+    pub sss: Mat,
+    /// Cholesky of Σ̈_SS.
     pub sss_chol: CholFactor,
     /// a = Σ̈_SS⁻¹·ÿ_S (the mean correction's test-independent factor).
     pub a: Vec<f64>,
@@ -76,22 +80,12 @@ impl PredictContext {
         threads: usize,
     ) -> Result<(PredictContext, Vec<f64>, f64)> {
         let mm = core.m();
-        let b = core.b();
         let s = core.basis.size();
         type BlockCtx = (Mat, Mat, Option<Mat>, f64);
         let per_block =
             crate::util::par::parallel_map(mm, threads.max(1), |m| -> Result<BlockCtx> {
                 let t0 = std::time::Instant::now();
-                let cf = &core.c_chol[m];
-                let vs_m = cf.half_solve(&core.s_dot[m])?;
-                let vy_m = cf.half_solve(&Mat::col_vec(&core.y_dot[m]))?;
-                let h_m = if b == 0 || m < b + 1 {
-                    None
-                } else {
-                    let blocks: Vec<Mat> = ((m - b)..m).map(|k| core.r_in_band(m, k)).collect();
-                    let refs: Vec<&Mat> = blocks.iter().collect();
-                    Some(Mat::hstack(&refs)?)
-                };
+                let (vs_m, vy_m, h_m) = Self::block_parts(core, m)?;
                 Ok((vs_m, vy_m, h_m, t0.elapsed().as_secs_f64()))
             });
         let mut vs = Vec::with_capacity(mm);
@@ -107,28 +101,58 @@ impl PredictContext {
         }
 
         let t0 = std::time::Instant::now();
-        // Σ̈_SS's prior term must be the SAME (jittered) Σ_SS that defines
-        // Q = Σ_·S·Σ_SS⁻¹·Σ_S· — see `summary::reduce` for why the jitters
-        // must agree. Summation order over m matches the per-call reduce.
-        let mut sss = crate::kernels::se_ard::cov_cross_scaled(
-            &core.basis.s_scaled,
-            &core.basis.s_scaled,
-            core.hyp.sigma_s2,
-        )?;
-        sss.add_diag(core.basis.jitter);
         let mut ys = vec![0.0; s];
         for m in 0..mm {
             let ys_m = vs[m].t_matmul(&vy[m])?.into_data();
             for (acc, v) in ys.iter_mut().zip(&ys_m) {
                 *acc += v;
             }
-            sss.axpy(1.0, &gemm::syrk_tn(&vs[m]))?;
         }
+        let sss = Self::sss_from_vs(core, &vs)?;
         let (sss_chol, _jitter) = gp_cholesky(&sss)?;
         let a = sss_chol.solve_vec(&ys)?;
         let reduce_secs = t0.elapsed().as_secs_f64();
 
-        Ok((PredictContext { vs, vy, ys, sss_chol, a, h_init }, per_block_secs, reduce_secs))
+        Ok((PredictContext { vs, vy, ys, sss, sss_chol, a, h_init }, per_block_secs, reduce_secs))
+    }
+
+    /// Raw Σ̈_SS from per-block half-solves: prior + jitter, then
+    /// syrk(vs_m) in block order. Σ̈_SS's prior term must be the SAME
+    /// (jittered) Σ_SS that defines Q = Σ_·S·Σ_SS⁻¹·Σ_S· — see
+    /// `summary::reduce` for why the jitters must agree. The **one**
+    /// implementation shared by fit-time construction and the artifact
+    /// loader's rebuild, so the bit-exact accumulator the online updater
+    /// subtracts against can never drift between the two sites.
+    pub(crate) fn sss_from_vs(core: &LmaFitCore, vs: &[Mat]) -> Result<Mat> {
+        let mut sss = crate::kernels::se_ard::cov_cross_scaled(
+            &core.basis.s_scaled,
+            &core.basis.s_scaled,
+            core.hyp.sigma_s2,
+        )?;
+        sss.add_diag(core.basis.jitter);
+        for vs_m in vs {
+            sss.axpy(1.0, &gemm::syrk_tn(vs_m))?;
+        }
+        Ok(sss)
+    }
+
+    /// Block m's context contribution: the Definition-1 half-solves
+    /// vs_m/vy_m and the lower-sweep frontier seed H_m. Shared verbatim
+    /// by [`build_timed`](Self::build_timed) and the online updater, so
+    /// an updated block's context state is bit-identical to a refit's.
+    pub(crate) fn block_parts(core: &LmaFitCore, m: usize) -> Result<(Mat, Mat, Option<Mat>)> {
+        let b = core.b();
+        let cf = &core.c_chol[m];
+        let vs_m = cf.half_solve(&core.s_dot[m])?;
+        let vy_m = cf.half_solve(&Mat::col_vec(&core.y_dot[m]))?;
+        let h_m = if b == 0 || m < b + 1 {
+            None
+        } else {
+            let blocks: Vec<Mat> = ((m - b)..m).map(|k| core.r_in_band(m, k)).collect();
+            let refs: Vec<&Mat> = blocks.iter().collect();
+            Some(Mat::hstack(&refs)?)
+        };
+        Ok((vs_m, vy_m, h_m))
     }
 
     /// Approximate resident size of the context in bytes (README's
@@ -141,6 +165,7 @@ impl PredictContext {
             + mats(&self.vy)
             + self.ys.len()
             + self.a.len()
+            + self.sss.rows() * self.sss.cols()
             + self.sss_chol.l().rows() * self.sss_chol.l().cols()
             + self
                 .h_init
@@ -153,10 +178,11 @@ impl PredictContext {
 
 /// Reusable per-caller predict workspace. One lives in each
 /// `PredictionService` (the batcher thread owns it), so steady-state
-/// serving recycles the large per-call buffers — the per-block Σ̄_{D_m U}
-/// rows plus the Σ̇_U / vu temporaries — instead of reallocating them on
-/// every request. A fresh (empty) scratch is always valid; buffers grow
-/// to the largest batch seen and stay there.
+/// serving recycles the large per-call buffers — the band-sparse R̄_DU
+/// blocks, the per-block Σ̄_{D_m U} rows, the Σ̇_U / vu temporaries and
+/// the per-block/global U-side summary terms — instead of reallocating
+/// them on every request. A fresh (empty) scratch is always valid;
+/// buffers grow to the largest batch seen and stay there.
 #[derive(Debug, Default)]
 pub struct PredictScratch {
     /// Σ̄_{D_m U} rows, one buffer per training block.
@@ -165,6 +191,17 @@ pub struct PredictScratch {
     pub(crate) udot: Mat,
     /// vu = L_{C_m}⁻¹·Σ̇_U^m buffer.
     pub(crate) vu: Mat,
+    /// Pooled band-sparse R̄_DU container (block Mats recycled via its
+    /// internal free list).
+    pub(crate) rbar: crate::lma::sweep::RbarBlocks,
+    /// GEMM scratch for the in-band residual blocks' Q term.
+    pub(crate) qtmp: Mat,
+    /// Per-block query-dependent summary terms, reused across calls.
+    pub(crate) terms: Vec<crate::lma::summary::UTerms>,
+    /// Reduced global U-side terms, reused across calls.
+    pub(crate) gsum: crate::lma::summary::UTerms,
+    /// Column-vector GEMM scratch (ÿ_U summands).
+    pub(crate) colbuf: Mat,
 }
 
 impl PredictScratch {
@@ -172,10 +209,13 @@ impl PredictScratch {
         PredictScratch::default()
     }
 
-    /// Ensure one Σ̄ row buffer per block exists.
+    /// Ensure one Σ̄ row / summary-term buffer per block exists.
     pub(crate) fn ensure_blocks(&mut self, mm: usize) {
         while self.sbar.len() < mm {
             self.sbar.push(Mat::zeros(0, 0));
+        }
+        while self.terms.len() < mm {
+            self.terms.push(crate::lma::summary::UTerms::default());
         }
     }
 }

@@ -305,6 +305,34 @@ impl LmaFitCore {
         sig.sub(&q)
     }
 
+    /// [`r_cross_v`](Self::r_cross_v) into caller-owned buffers: `out`
+    /// receives the residual block, `qtmp` is a scratch for the Q GEMM
+    /// (both reshaped via `Mat::reset`, retaining their allocations).
+    /// Identical arithmetic — `out = Σ − Q` is evaluated as
+    /// `out += (−1)·Q`, which is bit-identical elementwise in IEEE.
+    #[allow(clippy::too_many_arguments)]
+    pub fn r_cross_v_pooled(
+        &self,
+        xa: MatView<'_>,
+        wta: MatView<'_>,
+        xb: MatView<'_>,
+        wtb: MatView<'_>,
+        noise_diag: Option<f64>,
+        out: &mut Mat,
+        qtmp: &mut Mat,
+    ) -> Result<()> {
+        if self.cov_backend.is_pjrt() {
+            out.assign(&self.cov_backend.cov_cross_scaled_view(xa, xb, self.hyp.sigma_s2)?);
+        } else {
+            se_ard::cov_cross_scaled_view_into(xa, xb, self.hyp.sigma_s2, out)?;
+        }
+        if let Some(n2) = noise_diag {
+            out.add_diag(n2);
+        }
+        crate::linalg::gemm::matmul_nt_into(wta, wtb, qtmp)?;
+        out.axpy(-1.0, qtmp)
+    }
+
     /// Fit the core given training data and config, running the
     /// independent per-block work on the global `util::par` worker count
     /// (1 by default — fully sequential).
@@ -341,7 +369,6 @@ impl LmaFitCore {
         }
         let n = train_x.rows();
         let mm = cfg.num_blocks;
-        let b = cfg.markov_order;
         let mut rng = Pcg64::new(cfg.seed);
         let mut timings = FitTimings::default();
 
@@ -371,6 +398,78 @@ impl LmaFitCore {
         let partition = partition?;
         timings.partition_secs = secs;
 
+        Self::fit_from_layout(x_all_scaled, train_y, hyp, cfg, basis, partition, timings, threads)
+    }
+
+    /// Fit with an **explicit** layout: the support basis rows and the
+    /// partition are taken as given instead of being selected from the
+    /// data. This is the reference the online-update subsystem is tested
+    /// against — a streamed model keeps its fit-time support set and
+    /// grows its partition deterministically, so "refit from scratch on
+    /// the concatenated data" means fitting under that exact layout.
+    /// For identical layouts, `fit` and `fit_with_layout` execute the
+    /// same per-block operations and produce bit-identical cores.
+    pub fn fit_with_layout(
+        train_x: &Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+        partition: Partition,
+        s_scaled: Mat,
+        threads: usize,
+    ) -> Result<LmaFitCore> {
+        hyp.validate()?;
+        cfg.validate(train_x.rows())?;
+        if train_x.rows() != train_y.len() {
+            return Err(PgprError::Shape(format!(
+                "LMA fit: X rows {} != y len {}",
+                train_x.rows(),
+                train_y.len()
+            )));
+        }
+        if partition.num_blocks() != cfg.num_blocks {
+            return Err(PgprError::Config(format!(
+                "fit_with_layout: partition has {} blocks, config says {}",
+                partition.num_blocks(),
+                cfg.num_blocks
+            )));
+        }
+        let covered: usize = partition.blocks.iter().map(|b| b.len()).sum();
+        if covered != train_x.rows() {
+            return Err(PgprError::Shape(format!(
+                "fit_with_layout: partition covers {covered} rows, data has {}",
+                train_x.rows()
+            )));
+        }
+        let mut timings = FitTimings::default();
+        let (x_all_scaled, secs) =
+            crate::util::timer::time_it(|| se_ard::scale_inputs(train_x, hyp));
+        let x_all_scaled = x_all_scaled?;
+        timings.scale_secs = secs;
+        let (basis, secs) =
+            crate::util::timer::time_it(|| SupportBasis::new(s_scaled, hyp.sigma_s2));
+        let basis = basis?;
+        timings.basis_secs = secs;
+        Self::fit_from_layout(x_all_scaled, train_y, hyp, cfg, basis, partition, timings, threads)
+    }
+
+    /// The shared fit tail: given scaled inputs, a support basis and a
+    /// partition, run the permute → whitened rows → per-block residual
+    /// factorizations → predict-context pipeline.
+    #[allow(clippy::too_many_arguments)]
+    fn fit_from_layout(
+        x_all_scaled: Mat,
+        train_y: &[f64],
+        hyp: &SeArdHyper,
+        cfg: &LmaConfig,
+        basis: SupportBasis,
+        partition: Partition,
+        mut timings: FitTimings,
+        threads: usize,
+    ) -> Result<LmaFitCore> {
+        let n = x_all_scaled.rows();
+        let mm = cfg.num_blocks;
+
         // --- permute into block order ---
         let mut perm = Vec::with_capacity(n);
         let mut sizes = Vec::with_capacity(mm);
@@ -389,53 +488,14 @@ impl LmaFitCore {
 
         // --- covariance backend (native or compiled-Pallas via PJRT) ---
         let cov_backend = if cfg.use_pjrt { CovBackend::auto() } else { CovBackend::Native };
-        let bk_cross = |xa: &Mat, xb: &Mat, noise: Option<f64>, wa: &Mat, wb: &Mat| -> Result<Mat> {
-            let mut sig = cov_backend.cov_cross_scaled(xa, xb, hyp.sigma_s2)?;
-            if let Some(n2) = noise {
-                sig.add_diag(n2);
-            }
-            sig.sub(&wa.matmul_t(wb)?)
-        };
-
-        // --- exact in-band residual blocks (independent per block) ---
         // The PJRT artifact library goes through a foreign runtime whose
         // thread-safety we cannot vouch for from this crate, so per-block
         // work stays on one thread whenever that backend is active; the
         // native path parallelizes freely.
         let workers = if cov_backend.is_pjrt() { 1 } else { threads.max(1) };
-        let band_rows = crate::util::par::parallel_map(mm, workers, |m| -> Result<(Mat, Vec<Mat>, f64)> {
-            let t0 = std::time::Instant::now();
-            let xm = x_scaled.rows_range(part.range(m).start, part.range(m).end);
-            let wm = wt_d.rows_range(part.range(m).start, part.range(m).end);
-            let diag = bk_cross(&xm, &xm, Some(hyp.sigma_n2), &wm, &wm)?;
-            let hi = (m + b).min(mm - 1);
-            let mut row = Vec::new();
-            for k in (m + 1)..=hi {
-                let xk = x_scaled.rows_range(part.range(k).start, part.range(k).end);
-                let wk = wt_d.rows_range(part.range(k).start, part.range(k).end);
-                row.push(bk_cross(&xm, &xk, None, &wm, &wk)?);
-            }
-            Ok((diag, row, t0.elapsed().as_secs_f64()))
-        });
-        let mut block_clock = vec![0.0f64; mm];
-        let mut r_diag = Vec::with_capacity(mm);
-        let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
-        for (m, res) in band_rows.into_iter().enumerate() {
-            let (diag, row, secs) = res?;
-            r_diag.push(diag);
-            r_band.push(row);
-            block_clock[m] += secs;
-        }
 
-        // --- band factors, propagators, conditionals, Def-1 summaries ---
-        let mut band_chol = Vec::with_capacity(mm);
-        let mut p_all = Vec::with_capacity(mm);
-        let mut c_chol = Vec::with_capacity(mm);
-        let mut y_dot = Vec::with_capacity(mm);
-        let mut s_dot = Vec::with_capacity(mm);
-
-        // Pre-assemble helper state; per-m work below.
-        let core_tmp = LmaFitCore {
+        // Pre-assemble helper state; per-m work below reads it.
+        let mut core = LmaFitCore {
             hyp: hyp.clone(),
             cfg: cfg.clone(),
             partition,
@@ -445,8 +505,8 @@ impl LmaFitCore {
             y_cent,
             basis,
             wt_d,
-            r_diag,
-            r_band,
+            r_diag: Vec::new(),
+            r_band: Vec::new(),
             band_chol: Vec::new(),
             p: Vec::new(),
             p_t: Vec::new(),
@@ -458,44 +518,41 @@ impl LmaFitCore {
             ctx: None,
         };
 
-        // Independent per-block factorizations, same worker pool.
-        type BlockFactors = (Option<CholFactor>, Option<Mat>, CholFactor, Vec<f64>, Mat);
-        let facs = crate::util::par::parallel_map(mm, workers, |m| -> Result<(BlockFactors, f64)> {
-            let t0 = std::time::Instant::now();
-            let r_mm = &core_tmp.r_diag[m];
-            let sigma_ms = core_tmp.basis.sigma_as(&core_tmp.x_block(m))?;
-            let out = match core_tmp.band_gram(m) {
-                None => {
-                    // Empty forward band (B=0 or last block): Def 1
-                    // degenerates — ẏ=y−μ, C=R_mm, Σ̇_S=Σ_DS.
-                    let (cf, _) = gp_cholesky(r_mm)?;
-                    (None, None, cf, core_tmp.y_block(m).to_vec(), sigma_ms)
-                }
-                Some(gram) => {
-                    let (bf, _) = gp_cholesky(&gram)?;
-                    let r_row = core_tmp.r_row_band(m).expect("non-empty band");
-                    // P_m = R_{D_m D_m^B}·G⁻¹  (solve Gᵀ·Pᵀ = R_rowᵀ).
-                    let p_m = bf.solve_mat(&r_row.transpose())?.transpose();
-                    // C_m = R_mm − P_m·R_{D_m^B D_m}.
-                    let c_m = r_mm.sub(&p_m.matmul_t(&r_row)?)?;
-                    let (cf, _) = gp_cholesky(&c_m)?;
-                    // ẏ_m = (y−μ)_m − P_m·(y−μ)_{D_m^B}.
-                    let yb = core_tmp.y_forward_band(m);
-                    let mut ym = core_tmp.y_block(m).to_vec();
-                    let corr = p_m.matvec(&yb)?;
-                    for (a, c) in ym.iter_mut().zip(&corr) {
-                        *a -= c;
-                    }
-                    // Σ̇_S^m = Σ_{D_m S} − P_m·Σ_{D_m^B S}.
-                    let fb = core_tmp.part.forward_band(m, b);
-                    let x_fb = core_tmp.x_scaled.rows_range(fb.start, fb.end);
-                    let sigma_bs = core_tmp.basis.sigma_as(&x_fb)?;
-                    let sdot_m = sigma_ms.sub(&p_m.matmul(&sigma_bs)?)?;
-                    (Some(bf), Some(p_m), cf, ym, sdot_m)
-                }
-            };
-            Ok((out, t0.elapsed().as_secs_f64()))
-        });
+        // --- exact in-band residual blocks (independent per block) ---
+        let band_rows = {
+            let core_ref = &core;
+            crate::util::par::parallel_map(mm, workers, |m| -> Result<(Mat, Vec<Mat>, f64)> {
+                let t0 = std::time::Instant::now();
+                let (diag, row) = core_ref.compute_band_row(m)?;
+                Ok((diag, row, t0.elapsed().as_secs_f64()))
+            })
+        };
+        let mut block_clock = vec![0.0f64; mm];
+        let mut r_diag = Vec::with_capacity(mm);
+        let mut r_band: Vec<Vec<Mat>> = Vec::with_capacity(mm);
+        for (m, res) in band_rows.into_iter().enumerate() {
+            let (diag, row, secs) = res?;
+            r_diag.push(diag);
+            r_band.push(row);
+            block_clock[m] += secs;
+        }
+        core.r_diag = r_diag;
+        core.r_band = r_band;
+
+        // --- band factors, propagators, conditionals, Def-1 summaries ---
+        let facs = {
+            let core_ref = &core;
+            crate::util::par::parallel_map(mm, workers, |m| -> Result<(BlockFactors, f64)> {
+                let t0 = std::time::Instant::now();
+                let out = core_ref.compute_block_factors(m)?;
+                Ok((out, t0.elapsed().as_secs_f64()))
+            })
+        };
+        let mut band_chol = Vec::with_capacity(mm);
+        let mut p_all = Vec::with_capacity(mm);
+        let mut c_chol = Vec::with_capacity(mm);
+        let mut y_dot = Vec::with_capacity(mm);
+        let mut s_dot = Vec::with_capacity(mm);
         for (m, res) in facs.into_iter().enumerate() {
             let ((bf, p_m, cf, ym, sdot_m), secs) = res?;
             band_chol.push(bf);
@@ -507,9 +564,15 @@ impl LmaFitCore {
         }
         timings.per_block_secs = block_clock;
 
-        let p_t: Vec<Option<Mat>> = p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
-        let mut core =
-            LmaFitCore { band_chol, p: p_all, p_t, c_chol, y_dot, s_dot, timings, ..core_tmp };
+        let p_t: Vec<Option<Mat>> =
+            p_all.iter().map(|p| p.as_ref().map(|m| m.transpose())).collect();
+        core.band_chol = band_chol;
+        core.p = p_all;
+        core.p_t = p_t;
+        core.c_chol = c_chol;
+        core.y_dot = y_dot;
+        core.s_dot = s_dot;
+        core.timings = timings;
 
         // --- fit-time predict context (test-independent Theorem-2 state) ---
         let (ctx, ctx_per_block_secs, ctx_reduce_secs) =
@@ -519,7 +582,80 @@ impl LmaFitCore {
         core.ctx = Some(ctx);
         Ok(core)
     }
+
+    /// Exact in-band residual stripe of block m: the diagonal block
+    /// R_{D_m D_m} (with noise) and the forward band blocks
+    /// R_{D_m D_{m+1..m+B}} — through the configured covariance backend.
+    /// Shared verbatim by `fit` and the online updater, so an updated
+    /// block's residual state is bit-identical to a from-scratch refit's.
+    pub(crate) fn compute_band_row(&self, m: usize) -> Result<(Mat, Vec<Mat>)> {
+        let bk_cross =
+            |xa: &Mat, xb: &Mat, noise: Option<f64>, wa: &Mat, wb: &Mat| -> Result<Mat> {
+                let mut sig = self.cov_backend.cov_cross_scaled(xa, xb, self.hyp.sigma_s2)?;
+                if let Some(n2) = noise {
+                    sig.add_diag(n2);
+                }
+                sig.sub(&wa.matmul_t(wb)?)
+            };
+        let r = self.part.range(m);
+        let xm = self.x_scaled.rows_range(r.start, r.end);
+        let wm = self.wt_d.rows_range(r.start, r.end);
+        let diag = bk_cross(&xm, &xm, Some(self.hyp.sigma_n2), &wm, &wm)?;
+        let hi = (m + self.b()).min(self.m() - 1);
+        let mut row = Vec::new();
+        for k in (m + 1)..=hi {
+            let rk = self.part.range(k);
+            let xk = self.x_scaled.rows_range(rk.start, rk.end);
+            let wk = self.wt_d.rows_range(rk.start, rk.end);
+            row.push(bk_cross(&xm, &xk, None, &wm, &wk)?);
+        }
+        Ok((diag, row))
+    }
+
+    /// Block m's Definition-1 factors from its (already computed) in-band
+    /// residual stripe: the band Gram Cholesky, the propagator P_m, the
+    /// conditional factor C_m's Cholesky, ẏ_m and Σ̇_S^m. Shared verbatim
+    /// by `fit` and the online updater (bit-identical per-block state).
+    pub(crate) fn compute_block_factors(&self, m: usize) -> Result<BlockFactors> {
+        let b = self.b();
+        let r_mm = &self.r_diag[m];
+        let sigma_ms = self.basis.sigma_as(&self.x_block(m))?;
+        match self.band_gram(m) {
+            None => {
+                // Empty forward band (B=0 or last block): Def 1
+                // degenerates — ẏ=y−μ, C=R_mm, Σ̇_S=Σ_DS.
+                let (cf, _) = gp_cholesky(r_mm)?;
+                Ok((None, None, cf, self.y_block(m).to_vec(), sigma_ms))
+            }
+            Some(gram) => {
+                let (bf, _) = gp_cholesky(&gram)?;
+                let r_row = self.r_row_band(m).expect("non-empty band");
+                // P_m = R_{D_m D_m^B}·G⁻¹  (solve Gᵀ·Pᵀ = R_rowᵀ).
+                let p_m = bf.solve_mat(&r_row.transpose())?.transpose();
+                // C_m = R_mm − P_m·R_{D_m^B D_m}.
+                let c_m = r_mm.sub(&p_m.matmul_t(&r_row)?)?;
+                let (cf, _) = gp_cholesky(&c_m)?;
+                // ẏ_m = (y−μ)_m − P_m·(y−μ)_{D_m^B}.
+                let yb = self.y_forward_band(m);
+                let mut ym = self.y_block(m).to_vec();
+                let corr = p_m.matvec(&yb)?;
+                for (a, c) in ym.iter_mut().zip(&corr) {
+                    *a -= c;
+                }
+                // Σ̇_S^m = Σ_{D_m S} − P_m·Σ_{D_m^B S}.
+                let fb = self.part.forward_band(m, b);
+                let x_fb = self.x_scaled.rows_range(fb.start, fb.end);
+                let sigma_bs = self.basis.sigma_as(&x_fb)?;
+                let sdot_m = sigma_ms.sub(&p_m.matmul(&sigma_bs)?)?;
+                Ok((Some(bf), Some(p_m), cf, ym, sdot_m))
+            }
+        }
+    }
 }
+
+/// Per-block Definition-1 factors: (band Gram Cholesky, propagator P_m,
+/// C_m Cholesky, ẏ_m, Σ̇_S^m).
+pub(crate) type BlockFactors = (Option<CholFactor>, Option<Mat>, CholFactor, Vec<f64>, Mat);
 
 #[cfg(test)]
 mod tests {

@@ -163,6 +163,14 @@ pub struct UTerms {
     pub suu_full: Option<Mat>,
 }
 
+impl Default for UTerms {
+    /// An empty term set — the valid starting state for the pooled
+    /// `PredictScratch` buffers (shapes are reset on first use).
+    fn default() -> UTerms {
+        UTerms { yu: Vec::new(), sus: Mat::zeros(0, 0), suu_diag: Vec::new(), suu_full: None }
+    }
+}
+
 /// Block rows Σ̄_{D_m U} = Q_{D_m U} + R̄_{D_m U} from the band-sparse
 /// sweep output — never materializing the dense N×|U| matrix. The Q GEMM
 /// computes each output row independently, so the per-block products are
@@ -262,19 +270,64 @@ pub fn local_terms_fast_in(
     Ok(UTerms { yu, sus, suu_diag, suu_full })
 }
 
+/// [`local_terms_fast_in`] writing every output into caller-owned
+/// buffers (`colbuf` is a column GEMM scratch, `out` the pooled term
+/// set) — the fully-pooled serve hot path. Identical arithmetic through
+/// the same GEMM kernels, so outputs are bit-identical to the
+/// allocating forms.
+#[allow(clippy::too_many_arguments)]
+pub fn local_terms_fast_into(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    sbar: &[Mat],
+    m: usize,
+    want_full_uu: bool,
+    udot: &mut Mat,
+    vu: &mut Mat,
+    colbuf: &mut Mat,
+    out: &mut UTerms,
+) -> Result<()> {
+    sigma_dot_u_rows(core, sbar, m, udot)?;
+    core.c_chol[m].half_solve_into(udot, vu)?;
+    gemm::matmul_tn_into(vu, &ctx.vy[m], colbuf)?;
+    out.yu.clear();
+    out.yu.extend_from_slice(colbuf.data());
+    gemm::matmul_tn_into(vu, &ctx.vs[m], &mut out.sus)?;
+    let nu = vu.cols();
+    out.suu_diag.clear();
+    out.suu_diag.resize(nu, 0.0);
+    for i in 0..vu.rows() {
+        let row = vu.row(i);
+        for (d, v) in out.suu_diag.iter_mut().zip(row) {
+            *d += v * v;
+        }
+    }
+    out.suu_full = if want_full_uu { Some(gemm::syrk_tn(vu)) } else { None };
+    Ok(())
+}
+
 /// Reduce per-machine U-terms (elementwise sums in machine order — the
 /// same order [`reduce`] used, so the result is bit-identical to the
 /// U-side of the legacy global summary).
 pub fn reduce_u(terms: &[UTerms], total_u: usize, s: usize) -> Result<UTerms> {
-    let mut g = UTerms {
-        yu: vec![0.0; total_u],
-        sus: Mat::zeros(total_u, s),
-        suu_diag: vec![0.0; total_u],
-        suu_full: terms
-            .first()
-            .and_then(|t| t.suu_full.as_ref())
-            .map(|_| Mat::zeros(total_u, total_u)),
-    };
+    let mut g = UTerms::default();
+    reduce_u_into(terms, total_u, s, &mut g)?;
+    Ok(g)
+}
+
+/// [`reduce_u`] into a caller-owned (pooled) accumulator. Buffers are
+/// zeroed and re-summed in machine order, so the result is bit-identical
+/// to a fresh reduction.
+pub fn reduce_u_into(terms: &[UTerms], total_u: usize, s: usize, g: &mut UTerms) -> Result<()> {
+    g.yu.clear();
+    g.yu.resize(total_u, 0.0);
+    g.sus.reset(total_u, s);
+    g.suu_diag.clear();
+    g.suu_diag.resize(total_u, 0.0);
+    g.suu_full = terms
+        .first()
+        .and_then(|t| t.suu_full.as_ref())
+        .map(|_| Mat::zeros(total_u, total_u));
     for t in terms {
         for (a, b) in g.yu.iter_mut().zip(&t.yu) {
             *a += b;
@@ -287,7 +340,7 @@ pub fn reduce_u(terms: &[UTerms], total_u: usize, s: usize) -> Result<UTerms> {
             full.axpy(1.0, tf)?;
         }
     }
-    Ok(g)
+    Ok(())
 }
 
 /// Approximate message size in bytes of machine m's query-dependent

@@ -225,19 +225,53 @@ pub fn rbar_du(core: &LmaFitCore, ts: &TestSide) -> Result<Mat> {
 /// `None` marks structurally-zero blocks (B=0 off the diagonal) and empty
 /// test blocks — the dense N×|U| matrix is never materialized, which is
 /// what lets steady-state serving avoid the per-call `Mat::zeros(N, u)`
-/// allocation plus its fill.
+/// allocation plus its fill. The container is reusable: `recycle` moves
+/// the previous call's block buffers into an internal free list and
+/// `take_buf` hands them back out, so a `PredictScratch`-held instance
+/// stops allocating block storage in steady state.
+#[derive(Debug, Default)]
 pub struct RbarBlocks {
     mm: usize,
     blocks: Vec<Vec<Option<Mat>>>,
+    /// Recycled block buffers from the previous call (serve scratch).
+    pool: Vec<Mat>,
 }
 
 impl RbarBlocks {
     pub fn new(mm: usize) -> RbarBlocks {
-        let mut blocks = Vec::with_capacity(mm);
-        for _ in 0..mm {
-            blocks.push((0..mm).map(|_| None).collect());
+        let mut rb = RbarBlocks::default();
+        rb.recycle(mm);
+        rb
+    }
+
+    /// Reset to an empty `mm × mm` grid, harvesting the previous call's
+    /// block buffers into the free list. The pool is bounded: it holds at
+    /// most one call's worth of blocks (the previous grid), so repeated
+    /// serving cannot grow it without bound.
+    pub fn recycle(&mut self, mm: usize) {
+        self.pool.clear();
+        for row in self.blocks.iter_mut() {
+            for slot in row.iter_mut() {
+                if let Some(m) = slot.take() {
+                    self.pool.push(m);
+                }
+            }
         }
-        RbarBlocks { mm, blocks }
+        self.blocks.truncate(mm);
+        for row in self.blocks.iter_mut() {
+            row.truncate(mm);
+            row.resize(mm, None);
+        }
+        while self.blocks.len() < mm {
+            self.blocks.push(vec![None; mm]);
+        }
+        self.mm = mm;
+    }
+
+    /// A recycled (or fresh, empty) buffer for a block about to be
+    /// computed; pass it back via [`set`](Self::set).
+    pub fn take_buf(&mut self) -> Mat {
+        self.pool.pop().unwrap_or_else(|| Mat::zeros(0, 0))
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -309,11 +343,29 @@ pub fn rbar_du_blocks(
     ctx: &PredictContext,
     ts: &TestSide,
 ) -> Result<RbarBlocks> {
+    let mut rb = RbarBlocks::default();
+    let mut qtmp = Mat::zeros(0, 0);
+    rbar_du_blocks_in(core, ctx, ts, &mut rb, &mut qtmp)?;
+    Ok(rb)
+}
+
+/// [`rbar_du_blocks`] into a caller-owned container (+ a GEMM scratch for
+/// the in-band Q terms): the serve scratch holds both, so steady-state
+/// traffic recycles every block buffer instead of reallocating them.
+/// Identical arithmetic — outputs are bit-identical to the allocating
+/// form (`Σ − Q` evaluated as `Σ += (−1)·Q`, exact in IEEE).
+pub fn rbar_du_blocks_in(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    ts: &TestSide,
+    rb: &mut RbarBlocks,
+    qtmp: &mut Mat,
+) -> Result<()> {
     let mm = core.m();
     let b = core.b();
-    let mut rb = RbarBlocks::new(mm);
+    rb.recycle(mm);
     if ts.total() == 0 {
-        return Ok(rb);
+        return Ok(());
     }
 
     // --- in-band: exact residual blocks, and upper out-of-band: the
@@ -327,9 +379,17 @@ pub fn rbar_du_blocks(
             if ts.size(n) == 0 {
                 continue;
             }
-            let blk =
-                core.r_cross_v(xm, wm, ts.x_block_view(n), ts.wt_block_view(n), None)?;
-            rb.set(m, n, blk);
+            let mut dst = rb.take_buf();
+            core.r_cross_v_pooled(
+                xm,
+                wm,
+                ts.x_block_view(n),
+                ts.wt_block_view(n),
+                None,
+                &mut dst,
+                qtmp,
+            )?;
+            rb.set(m, n, dst);
         }
         if b > 0 && m + b + 1 < mm {
             let p_m = core.p[m].as_ref().expect("unclipped band has a propagator");
@@ -338,8 +398,9 @@ pub fn rbar_du_blocks(
                     continue;
                 }
                 let f = rb.band_rows(core, ts, m, n)?;
-                let blk = p_m.matmul(&f)?;
-                rb.set(m, n, blk);
+                let mut dst = rb.take_buf();
+                crate::linalg::gemm::matmul_into(p_m, &f, &mut dst)?;
+                rb.set(m, n, dst);
             }
         }
     }
@@ -377,11 +438,13 @@ pub fn rbar_du_blocks(
                 }
                 let h = ctx.h_init[m].as_ref().expect("lower rows carry a frontier seed");
                 let w: &Mat = w_owned.as_ref().unwrap_or(rup_t);
-                rb.set(m, n, h.matmul(w)?);
+                let mut dst = rb.take_buf();
+                crate::linalg::gemm::matmul_into(h, w, &mut dst)?;
+                rb.set(m, n, dst);
             }
         }
     }
-    Ok(rb)
+    Ok(())
 }
 
 /// Dense reference implementation of R̄_VV over an arbitrary block layout,

@@ -1,0 +1,202 @@
+//! Per-model observation buffering and the streaming blocking policy.
+//!
+//! Streams are absorbed at the tail of the Markov chain: arriving rows
+//! first fill the tail block up to the model's fitted block granularity
+//! ([`BlockPolicy::target_rows`]), then cut new blocks of that size. The
+//! policy is deterministic, so a stream replayed through `pgpr observe`
+//! produces the same partition — and therefore the same model — as the
+//! live ingestion did.
+
+use crate::linalg::matrix::Mat;
+use crate::lma::residual::LmaFitCore;
+use crate::online::update::UpdatePlan;
+use crate::util::error::{PgprError, Result};
+
+/// How streamed rows are cut into Markov blocks.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockPolicy {
+    /// Rows a block holds before a new one is cut — the fitted model's
+    /// **largest** block size (see [`BlockPolicy::from_core`]), so
+    /// streamed blocks match the batch granularity and the derivation is
+    /// stable under the policy's own streaming.
+    pub target_rows: usize,
+}
+
+impl BlockPolicy {
+    /// Derive the policy from a fitted core: target = the **largest**
+    /// block's row count. This statistic is invariant under the policy's
+    /// own streaming (extensions stop at the target and new blocks never
+    /// exceed it, so the maximum can neither grow nor shrink), which
+    /// makes the derivation stable across snapshot/reload — a replayed
+    /// stream cuts the same blocks whether or not the server restarted
+    /// mid-stream.
+    pub fn from_core(core: &LmaFitCore) -> BlockPolicy {
+        let target = (0..core.m()).map(|m| core.part.size(m)).max().unwrap_or(1);
+        BlockPolicy { target_rows: target.max(1) }
+    }
+
+    /// Split `incoming` rows into a tail-block extension and new-block
+    /// cuts, given the current tail block's occupancy.
+    pub fn plan(&self, tail_rows: usize, incoming: usize) -> UpdatePlan {
+        let extend_tail = incoming.min(self.target_rows.saturating_sub(tail_rows));
+        let mut rem = incoming - extend_tail;
+        let mut new_blocks = Vec::new();
+        while rem > 0 {
+            let take = rem.min(self.target_rows);
+            new_blocks.push(take);
+            rem -= take;
+        }
+        UpdatePlan { extend_tail, new_blocks }
+    }
+}
+
+/// Accumulates streamed (x, y) observations for one model until the
+/// owner decides to absorb them. Row-major storage, no per-row allocation.
+#[derive(Clone, Debug)]
+pub struct ObservationBuffer {
+    dim: usize,
+    xs: Vec<f64>,
+    ys: Vec<f64>,
+}
+
+impl ObservationBuffer {
+    pub fn new(dim: usize) -> ObservationBuffer {
+        ObservationBuffer { dim, xs: Vec::new(), ys: Vec::new() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Rows currently buffered (not yet absorbed into the model).
+    pub fn rows(&self) -> usize {
+        self.ys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ys.is_empty()
+    }
+
+    /// Append one observation. Rejects wrong dimensions and non-finite
+    /// values before they can reach the factorization.
+    pub fn push(&mut self, x: &[f64], y: f64) -> Result<()> {
+        if x.len() != self.dim {
+            return Err(PgprError::Shape(format!(
+                "observe: row has dim {}, model expects {}",
+                x.len(),
+                self.dim
+            )));
+        }
+        if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+            return Err(PgprError::Data("observe: non-finite observation value".into()));
+        }
+        self.xs.extend_from_slice(x);
+        self.ys.push(y);
+        Ok(())
+    }
+
+    /// Validate-then-append a whole batch **atomically**: either every
+    /// row passes the dimension/finiteness rules and all are buffered,
+    /// or nothing is. The single home of the observation-validity rules
+    /// (the registry's observe path routes through here).
+    pub fn push_batch(&mut self, rows: &[Vec<f64>], ys: &[f64]) -> Result<()> {
+        if rows.len() != ys.len() {
+            return Err(PgprError::Shape(format!(
+                "observe: {} rows but {} targets",
+                rows.len(),
+                ys.len()
+            )));
+        }
+        for (x, y) in rows.iter().zip(ys) {
+            if x.len() != self.dim {
+                return Err(PgprError::Shape(format!(
+                    "observe: row has dim {}, model expects {}",
+                    x.len(),
+                    self.dim
+                )));
+            }
+            if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+                return Err(PgprError::Data("observe: non-finite observation value".into()));
+            }
+        }
+        for (x, y) in rows.iter().zip(ys) {
+            self.xs.extend_from_slice(x);
+            self.ys.push(*y);
+        }
+        Ok(())
+    }
+
+    /// Take everything buffered as an (X, y) batch, leaving the buffer
+    /// empty (allocation handed to the caller).
+    pub fn drain(&mut self) -> (Mat, Vec<f64>) {
+        let n = self.rows();
+        let x = Mat::from_vec(n, self.dim, std::mem::take(&mut self.xs));
+        (x, std::mem::take(&mut self.ys))
+    }
+
+    /// Put a drained batch back (a publish that could not complete must
+    /// not lose observations). The caller holds the buffer across the
+    /// whole observe, so re-appending preserves arrival order.
+    pub fn restore(&mut self, x: &Mat, y: &[f64]) {
+        for i in 0..x.rows() {
+            self.xs.extend_from_slice(x.row(i));
+        }
+        self.ys.extend_from_slice(y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_extends_then_cuts() {
+        let p = BlockPolicy { target_rows: 10 };
+        // Tail has room: extend only.
+        let plan = p.plan(7, 3);
+        assert_eq!(plan.extend_tail, 3);
+        assert!(plan.new_blocks.is_empty());
+        // Tail fills, remainder cut into target-sized blocks + partial.
+        let plan = p.plan(7, 28);
+        assert_eq!(plan.extend_tail, 3);
+        assert_eq!(plan.new_blocks, vec![10, 10, 5]);
+        assert_eq!(plan.rows(), 28);
+        // Full tail: everything goes to new blocks.
+        let plan = p.plan(10, 12);
+        assert_eq!(plan.extend_tail, 0);
+        assert_eq!(plan.new_blocks, vec![10, 2]);
+        // Overfull tail (possible when the policy target shrank): same.
+        let plan = p.plan(14, 4);
+        assert_eq!(plan.extend_tail, 0);
+        assert_eq!(plan.new_blocks, vec![4]);
+    }
+
+    #[test]
+    fn buffer_accumulates_and_drains() {
+        let mut b = ObservationBuffer::new(2);
+        assert!(b.is_empty());
+        b.push(&[1.0, 2.0], 0.5).unwrap();
+        b.push(&[3.0, 4.0], -0.5).unwrap();
+        assert_eq!(b.rows(), 2);
+        let (x, y) = b.drain();
+        assert!(b.is_empty());
+        assert_eq!(x.rows(), 2);
+        assert_eq!(x.row(1), &[3.0, 4.0]);
+        assert_eq!(y, vec![0.5, -0.5]);
+        // Restore puts the batch back intact.
+        b.restore(&x, &y);
+        assert_eq!(b.rows(), 2);
+        let (x2, y2) = b.drain();
+        assert_eq!(x2.data(), x.data());
+        assert_eq!(y2, y);
+    }
+
+    #[test]
+    fn buffer_rejects_bad_rows() {
+        let mut b = ObservationBuffer::new(2);
+        assert!(b.push(&[1.0], 0.0).is_err());
+        assert!(b.push(&[1.0, f64::NAN], 0.0).is_err());
+        assert!(b.push(&[1.0, 2.0], f64::INFINITY).is_err());
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,37 @@
+//! Online update subsystem: stream observations into live models.
+//!
+//! The LMA factorization is naturally incremental. The Definition-1
+//! support-set summaries are **additive** across blocks (ÿ_S and Σ̈_SS are
+//! sums of per-block contributions), and the B-th-order Markov property
+//! localizes the effect of new data in block m to the residual factors of
+//! its B-neighborhood. Absorbing a fresh batch of observations therefore
+//! costs O(touched blocks) factorization work — the B-wide *seam* at the
+//! tail of the block chain — not a full O(M) refit:
+//!
+//! * [`buffer::ObservationBuffer`] accumulates streamed rows per model and
+//!   [`buffer::BlockPolicy`] cuts them into tail-block extensions and new
+//!   Markov blocks under the fitted model's blocking granularity (streams
+//!   arrive in chain order: the tail block is "the present").
+//! * [`update::absorb`] is the incremental fitter: it recomputes only the
+//!   touched blocks' in-band residual stripes, band/conditional Cholesky
+//!   factors, propagators and Definition-1 half-solves — through the
+//!   *same* per-block routines `LmaFitCore::fit` uses, so every untouched
+//!   block's state is carried over bit-identically and every touched
+//!   block's state matches a from-scratch refit bit for bit. Only the
+//!   additive ÿ_S / Σ̈_SS accumulators differ from a refit (old seam
+//!   contributions are subtracted and new ones added instead of resumming
+//!   all M blocks), which agrees with the refit to rounding; the |S|×|S|
+//!   Σ̈_SS Cholesky is re-factorized per update (cheap).
+//!
+//! The produced [`LmaFitCore`](crate::lma::residual::LmaFitCore) is a
+//! complete fitted core — `registry::ModelRegistry::observe` wraps it in
+//! a fresh immutable `ServeEngine` **generation** and swaps it in
+//! atomically: in-flight predicts finish on their pinned generation, and
+//! no micro-batch ever mixes generations (each generation owns its own
+//! batcher thread).
+
+pub mod buffer;
+pub mod update;
+
+pub use buffer::{BlockPolicy, ObservationBuffer};
+pub use update::{absorb, UpdatePlan, UpdateStats};

@@ -1,0 +1,439 @@
+//! The incremental per-block fitter: absorb a batch of observations into
+//! a fitted [`LmaFitCore`], recomputing only the seam.
+//!
+//! New rows land at the tail of the Markov chain (a tail-block extension
+//! and/or newly cut blocks), so the only blocks whose fitted state can
+//! change are those whose forward band D_m^B reaches a changed block:
+//! the contiguous range `[t0 − B, M_new)` where t0 is the first changed
+//! block. For every touched block the updater runs the *same* per-block
+//! routines `LmaFitCore::fit` runs (`compute_band_row`,
+//! `compute_block_factors`, `PredictContext::block_parts`), so per-block
+//! state is bit-identical to a from-scratch refit under the same layout
+//! ([`LmaFitCore::fit_with_layout`]); untouched blocks are carried over
+//! unchanged. The additive S-side accumulators ÿ_S and Σ̈_SS are updated
+//! by subtracting the touched blocks' old contributions and adding their
+//! new ones (O(B·(|D|/M)·|S|²) instead of O(|D|·|S|²)), then the
+//! |S|×|S| Cholesky and `a = Σ̈_SS⁻¹·ÿ_S` are redone — the one place the
+//! streamed model differs from a refit, by accumulation rounding only.
+
+use std::time::Instant;
+
+use crate::config::LmaConfig;
+use crate::kernels::se_ard;
+use crate::linalg::banded::BlockPartition;
+use crate::linalg::gemm;
+use crate::linalg::matrix::Mat;
+use crate::linalg::solve::gp_cholesky;
+use crate::lma::context::PredictContext;
+use crate::lma::partition::Partition;
+use crate::lma::residual::{FitTimings, LmaFitCore, SupportBasis};
+use crate::util::error::{PgprError, Result};
+
+/// How a batch of streamed rows is cut into blocks (see
+/// [`BlockPolicy::plan`](crate::online::buffer::BlockPolicy::plan)).
+/// Rows are consumed in order: the first `extend_tail` extend the current
+/// tail block, the rest fill `new_blocks` front to back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct UpdatePlan {
+    /// Rows appended to the current tail block.
+    pub extend_tail: usize,
+    /// Sizes of the newly cut blocks, in chain order (each ≥ 1).
+    pub new_blocks: Vec<usize>,
+}
+
+impl UpdatePlan {
+    /// Total rows the plan consumes.
+    pub fn rows(&self) -> usize {
+        self.extend_tail + self.new_blocks.iter().sum::<usize>()
+    }
+}
+
+/// What one absorb did — the seam evidence the bench and the observe
+/// response report, and the snapshot layer's invalidation source.
+#[derive(Clone, Debug)]
+pub struct UpdateStats {
+    /// Rows absorbed.
+    pub rows_added: usize,
+    /// Newly cut blocks.
+    pub new_blocks: usize,
+    /// The contiguous recomputed block range `[t0 − B, M_new)`.
+    pub touched_blocks: std::ops::Range<usize>,
+    /// Total blocks after the update.
+    pub total_blocks: usize,
+    /// Seconds in the touched in-band residual stripes.
+    pub band_secs: f64,
+    /// Seconds in the touched band/conditional factorizations.
+    pub factor_secs: f64,
+    /// Seconds in the touched context half-solves.
+    pub ctx_secs: f64,
+    /// Seconds in the ÿ_S/Σ̈_SS accumulator update + |S|×|S| re-factorization.
+    pub reduce_secs: f64,
+}
+
+impl UpdateStats {
+    /// Total update wall-clock (the per-phase sums; extension/bookkeeping
+    /// copies are not separately timed).
+    pub fn update_secs(&self) -> f64 {
+        self.band_secs + self.factor_secs + self.ctx_secs + self.reduce_secs
+    }
+
+    /// Number of blocks whose state was recomputed.
+    pub fn touched(&self) -> usize {
+        self.touched_blocks.len()
+    }
+}
+
+/// Absorb `new_x`/`new_y` into `core` per `plan`, producing a complete
+/// new fitted core (the input is untouched — generations are immutable).
+/// `threads` bounds the worker pool for the independent touched-block
+/// work (results are bit-identical for every value, as in `fit`).
+pub fn absorb(
+    core: &LmaFitCore,
+    new_x: &Mat,
+    new_y: &[f64],
+    plan: &UpdatePlan,
+    threads: usize,
+) -> Result<(LmaFitCore, UpdateStats)> {
+    let k = plan.rows();
+    if k == 0 {
+        return Err(PgprError::Config("absorb: empty update plan".into()));
+    }
+    if plan.new_blocks.iter().any(|&s| s == 0) {
+        return Err(PgprError::Config("absorb: new blocks must be non-empty".into()));
+    }
+    if new_x.rows() != k || new_y.len() != k {
+        return Err(PgprError::Shape(format!(
+            "absorb: plan consumes {k} rows, got X {}x{} and y {}",
+            new_x.rows(),
+            new_x.cols(),
+            new_y.len()
+        )));
+    }
+    if new_x.cols() != core.hyp.dim() {
+        return Err(PgprError::Shape(format!(
+            "absorb: row dim {} != model dim {}",
+            new_x.cols(),
+            core.hyp.dim()
+        )));
+    }
+    if new_x.data().iter().any(|v| !v.is_finite()) || new_y.iter().any(|v| !v.is_finite()) {
+        return Err(PgprError::Data("absorb: non-finite observation value".into()));
+    }
+
+    let mm_old = core.m();
+    let b = core.b();
+    let old_n = core.part.total();
+    let mm_new = mm_old + plan.new_blocks.len();
+
+    // --- scale + whiten the new rows (per-row independent: identical to
+    // what a refit computes for these rows) ---
+    let xs_new = se_ard::scale_inputs(new_x, &core.hyp)?;
+    let wt_new = core.basis.wt(&xs_new)?;
+
+    // --- extend the global tensors (memcpy, no arithmetic) ---
+    let x_scaled = Mat::vstack(&[&core.x_scaled, &xs_new])?;
+    let wt_d = Mat::vstack(&[&core.wt_d, &wt_new])?;
+    let mut y_cent = core.y_cent.clone();
+    y_cent.extend(new_y.iter().map(|v| v - core.hyp.mean));
+    let mut perm = core.perm.clone();
+    perm.extend(old_n..old_n + k);
+
+    // --- partition bookkeeping: tail extension + new blocks ---
+    let mut sizes: Vec<usize> = (0..mm_old).map(|m| core.part.size(m)).collect();
+    sizes[mm_old - 1] += plan.extend_tail;
+    sizes.extend(plan.new_blocks.iter().copied());
+    let part = BlockPartition::from_sizes(&sizes)?;
+
+    let mut blocks = core.partition.blocks.clone();
+    let mut next_orig = old_n;
+    for _ in 0..plan.extend_tail {
+        blocks[mm_old - 1].push(next_orig);
+        next_orig += 1;
+    }
+    for &sz in &plan.new_blocks {
+        blocks.push((next_orig..next_orig + sz).collect());
+        next_orig += sz;
+    }
+
+    // Centroids (scaled space, used only to route test points): keep
+    // untouched blocks' centers; recompute where membership changed.
+    let d = x_scaled.cols();
+    let mut centers = Mat::zeros(mm_new, d);
+    for m in 0..mm_new {
+        if m + 1 < mm_old || (m + 1 == mm_old && plan.extend_tail == 0) {
+            centers.row_mut(m).copy_from_slice(core.partition.centers.row(m));
+        } else {
+            let r = part.range(m);
+            let inv = 1.0 / r.len().max(1) as f64;
+            for i in r {
+                for (c, v) in centers.row_mut(m).iter_mut().zip(x_scaled.row(i)) {
+                    *c += v * inv;
+                }
+            }
+        }
+    }
+
+    let cfg = LmaConfig { num_blocks: mm_new, ..core.cfg.clone() };
+
+    // First changed block, and the first block whose forward band can
+    // reach it: everything in [start, mm_new) is recomputed, everything
+    // below is carried over bit-identically.
+    let t0 = if plan.extend_tail > 0 { mm_old - 1 } else { mm_old };
+    let start = t0.saturating_sub(b);
+
+    let basis = SupportBasis {
+        s_scaled: core.basis.s_scaled.clone(),
+        chol_ss: core.basis.chol_ss.clone(),
+        sigma_s2: core.basis.sigma_s2,
+        jitter: core.basis.jitter,
+    };
+    let mut newc = LmaFitCore {
+        hyp: core.hyp.clone(),
+        cfg,
+        partition: Partition { centers, blocks },
+        perm,
+        part,
+        x_scaled,
+        y_cent,
+        basis,
+        wt_d,
+        r_diag: Vec::new(),
+        r_band: Vec::new(),
+        band_chol: Vec::new(),
+        p: Vec::new(),
+        p_t: Vec::new(),
+        c_chol: Vec::new(),
+        y_dot: Vec::new(),
+        s_dot: Vec::new(),
+        timings: FitTimings {
+            per_block_secs: vec![0.0; mm_new],
+            ctx_per_block_secs: vec![0.0; mm_new],
+            ..FitTimings::default()
+        },
+        cov_backend: core.cov_backend.clone(),
+        ctx: None,
+    };
+    let workers = if newc.cov_backend.is_pjrt() { 1 } else { threads.max(1) };
+    let touched = mm_new - start;
+
+    // --- touched in-band residual stripes ---
+    let t_band = Instant::now();
+    let band = {
+        let newc_ref = &newc;
+        crate::util::par::parallel_map(touched, workers, |i| {
+            newc_ref.compute_band_row(start + i)
+        })
+    };
+    let mut r_diag = Vec::with_capacity(mm_new);
+    let mut r_band = Vec::with_capacity(mm_new);
+    for m in 0..start {
+        r_diag.push(core.r_diag[m].clone());
+        r_band.push(core.r_band[m].clone());
+    }
+    for res in band {
+        let (diag, row) = res?;
+        r_diag.push(diag);
+        r_band.push(row);
+    }
+    newc.r_diag = r_diag;
+    newc.r_band = r_band;
+    let band_secs = t_band.elapsed().as_secs_f64();
+
+    // --- touched Definition-1 factors ---
+    let t_fac = Instant::now();
+    let facs = {
+        let newc_ref = &newc;
+        crate::util::par::parallel_map(touched, workers, |i| {
+            newc_ref.compute_block_factors(start + i)
+        })
+    };
+    let mut band_chol = Vec::with_capacity(mm_new);
+    let mut p_all = Vec::with_capacity(mm_new);
+    let mut p_t = Vec::with_capacity(mm_new);
+    let mut c_chol = Vec::with_capacity(mm_new);
+    let mut y_dot = Vec::with_capacity(mm_new);
+    let mut s_dot = Vec::with_capacity(mm_new);
+    for m in 0..start {
+        band_chol.push(core.band_chol[m].clone());
+        p_all.push(core.p[m].clone());
+        p_t.push(core.p_t[m].clone());
+        c_chol.push(core.c_chol[m].clone());
+        y_dot.push(core.y_dot[m].clone());
+        s_dot.push(core.s_dot[m].clone());
+    }
+    for res in facs {
+        let (bf, p_m, cf, ym, sdot_m) = res?;
+        p_t.push(p_m.as_ref().map(|p| p.transpose()));
+        band_chol.push(bf);
+        p_all.push(p_m);
+        c_chol.push(cf);
+        y_dot.push(ym);
+        s_dot.push(sdot_m);
+    }
+    newc.band_chol = band_chol;
+    newc.p = p_all;
+    newc.p_t = p_t;
+    newc.c_chol = c_chol;
+    newc.y_dot = y_dot;
+    newc.s_dot = s_dot;
+    let factor_secs = t_fac.elapsed().as_secs_f64();
+
+    // --- touched context half-solves + frontier seeds ---
+    let old_ctx = core.context();
+    let t_ctx = Instant::now();
+    let parts = {
+        let newc_ref = &newc;
+        crate::util::par::parallel_map(touched, workers, |i| {
+            PredictContext::block_parts(newc_ref, start + i)
+        })
+    };
+    let mut vs = Vec::with_capacity(mm_new);
+    let mut vy = Vec::with_capacity(mm_new);
+    let mut h_init = Vec::with_capacity(mm_new);
+    for m in 0..start {
+        vs.push(old_ctx.vs[m].clone());
+        vy.push(old_ctx.vy[m].clone());
+        h_init.push(old_ctx.h_init[m].clone());
+    }
+    for res in parts {
+        let (vs_m, vy_m, h_m) = res?;
+        vs.push(vs_m);
+        vy.push(vy_m);
+        h_init.push(h_m);
+    }
+    let ctx_secs = t_ctx.elapsed().as_secs_f64();
+
+    // --- additive S-side accumulators: subtract the touched blocks' old
+    // contributions, add their new ones, re-factorize |S|×|S| ---
+    let t_red = Instant::now();
+    let mut ys = old_ctx.ys.clone();
+    let mut sss = old_ctx.sss.clone();
+    for m in start..mm_old {
+        let ys_m = old_ctx.vs[m].t_matmul(&old_ctx.vy[m])?.into_data();
+        for (acc, v) in ys.iter_mut().zip(&ys_m) {
+            *acc -= v;
+        }
+        sss.axpy(-1.0, &gemm::syrk_tn(&old_ctx.vs[m]))?;
+    }
+    for m in start..mm_new {
+        let ys_m = vs[m].t_matmul(&vy[m])?.into_data();
+        for (acc, v) in ys.iter_mut().zip(&ys_m) {
+            *acc += v;
+        }
+        sss.axpy(1.0, &gemm::syrk_tn(&vs[m]))?;
+    }
+    let (sss_chol, _jitter) = gp_cholesky(&sss)?;
+    let a = sss_chol.solve_vec(&ys)?;
+    let reduce_secs = t_red.elapsed().as_secs_f64();
+
+    newc.ctx = Some(PredictContext { vs, vy, ys, sss, sss_chol, a, h_init });
+
+    let stats = UpdateStats {
+        rows_added: k,
+        new_blocks: plan.new_blocks.len(),
+        touched_blocks: start..mm_new,
+        total_blocks: mm_new,
+        band_secs,
+        factor_secs,
+        ctx_secs,
+        reduce_secs,
+    };
+    Ok((newc, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PartitionStrategy;
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::online::buffer::BlockPolicy;
+    use crate::util::rng::Pcg64;
+
+    fn fitted(seed: u64, n: usize, m: usize, b: usize) -> (LmaFitCore, Mat, Vec<f64>, SeArdHyper) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.9, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -4.0, 4.0));
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: 16,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 6 },
+            use_pjrt: false,
+        };
+        let core = LmaFitCore::fit(&x, &y, &hyp, &cfg).unwrap();
+        (core, x, y, hyp)
+    }
+
+    fn stream(rng: &mut Pcg64, k: usize) -> (Mat, Vec<f64>) {
+        let x = Mat::col_vec(&rng.uniform_vec(k, 3.5, 5.0));
+        let y: Vec<f64> = (0..k).map(|i| x.get(i, 0).sin()).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn absorb_extends_and_cuts_blocks() {
+        let (core, _, _, _) = fitted(501, 80, 4, 1);
+        let mut rng = Pcg64::new(777);
+        let policy = BlockPolicy::from_core(&core);
+        let tail = core.part.size(3);
+        let (x, y) = stream(&mut rng, policy.target_rows + 3);
+        let plan = policy.plan(tail, x.rows());
+        let (newc, stats) = absorb(&core, &x, &y, &plan, 1).unwrap();
+        assert_eq!(newc.part.total(), 80 + x.rows());
+        assert_eq!(newc.m(), 4 + plan.new_blocks.len());
+        assert_eq!(stats.total_blocks, newc.m());
+        assert_eq!(stats.rows_added, x.rows());
+        assert!(stats.touched() <= 1 + core.b() + plan.new_blocks.len());
+        // Untouched prefix is carried over bit-identically.
+        for m in 0..stats.touched_blocks.start {
+            assert_eq!(newc.r_diag[m].data(), core.r_diag[m].data(), "block {m}");
+            assert_eq!(newc.y_dot[m], core.y_dot[m], "block {m}");
+        }
+        // The new core predicts (sanity; equivalence is asserted in the
+        // integration suite against fit_with_layout).
+        let ctx = newc.context();
+        assert_eq!(ctx.vs.len(), newc.m());
+        assert!(ctx.a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn absorb_is_thread_invariant() {
+        let (core, _, _, _) = fitted(502, 90, 5, 2);
+        let mut rng = Pcg64::new(778);
+        let (x, y) = stream(&mut rng, 30);
+        let plan = BlockPolicy::from_core(&core).plan(core.part.size(4), 30);
+        let (seq, _) = absorb(&core, &x, &y, &plan, 1).unwrap();
+        let (par, _) = absorb(&core, &x, &y, &plan, 4).unwrap();
+        assert_eq!(seq.m(), par.m());
+        for m in 0..seq.m() {
+            assert_eq!(seq.r_diag[m].data(), par.r_diag[m].data(), "block {m}");
+            assert_eq!(seq.s_dot[m].data(), par.s_dot[m].data(), "block {m}");
+        }
+        assert_eq!(seq.context().a, par.context().a);
+    }
+
+    #[test]
+    fn absorb_rejects_bad_input() {
+        let (core, _, _, _) = fitted(503, 60, 3, 1);
+        let x = Mat::col_vec(&[0.1, 0.2]);
+        let y = vec![0.0, 0.0];
+        // Plan/rows mismatch.
+        let plan = UpdatePlan { extend_tail: 3, new_blocks: vec![] };
+        assert!(absorb(&core, &x, &y, &plan, 1).is_err());
+        // Empty plan.
+        let plan = UpdatePlan { extend_tail: 0, new_blocks: vec![] };
+        assert!(absorb(&core, &x, &y, &plan, 1).is_err());
+        // Empty new block.
+        let plan = UpdatePlan { extend_tail: 2, new_blocks: vec![0] };
+        assert!(absorb(&core, &x, &y, &plan, 1).is_err());
+        // Non-finite value.
+        let plan = UpdatePlan { extend_tail: 2, new_blocks: vec![] };
+        let bad = Mat::col_vec(&[0.1, f64::NAN]);
+        assert!(absorb(&core, &bad, &y, &plan, 1).is_err());
+        // Wrong dimension.
+        let wide = Mat::zeros(2, 3);
+        assert!(absorb(&core, &wide, &y, &plan, 1).is_err());
+    }
+}

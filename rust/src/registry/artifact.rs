@@ -86,15 +86,19 @@ fn art_err<T>(msg: impl Into<String>) -> Result<T> {
 struct TensorWriter {
     payload: Vec<f64>,
     entries: Vec<Json>,
+    /// (name, offset, len) per tensor — the incremental snapshot writer's
+    /// view of the payload layout.
+    spans: Vec<(String, usize, usize)>,
 }
 
 impl TensorWriter {
     fn new() -> TensorWriter {
-        TensorWriter { payload: Vec::new(), entries: Vec::new() }
+        TensorWriter { payload: Vec::new(), entries: Vec::new(), spans: Vec::new() }
     }
 
     fn push(&mut self, name: String, rows: usize, cols: usize, data: &[f64]) {
         debug_assert_eq!(data.len(), rows * cols, "tensor `{name}` shape mismatch");
+        self.spans.push((name.clone(), self.payload.len(), data.len()));
         self.entries.push(Json::obj(vec![
             ("name", Json::Str(name)),
             ("rows", Json::Num(rows as f64)),
@@ -268,6 +272,10 @@ fn ctx_to_tensors(core: &LmaFitCore, w: &mut TensorWriter) {
     }
     w.push_vec("ctx.ys".into(), &ctx.ys);
     w.push_vec("ctx.a".into(), &ctx.a);
+    // Raw (pre-factorization) Σ̈_SS: |S|² extra floats that spare every
+    // load the O(|D|·|S|²) accumulator rebuild the online updater would
+    // otherwise force onto models that never see an observe.
+    w.push_mat("ctx.sss".into(), &ctx.sss);
     w.push_mat("ctx.sss_chol".into(), ctx.sss_chol.l());
 }
 
@@ -322,7 +330,19 @@ fn ctx_from_parts(r: &TensorReader<'_>, core: &LmaFitCore) -> Result<PredictCont
     if sss_chol.n() != s {
         return art_err(format!("ctx.sss_chol has order {}, expected {s}", sss_chol.n()));
     }
-    Ok(PredictContext { vs, vy, ys, sss_chol, a, h_init })
+    // Raw (pre-factorization) Σ̈_SS: stored since the online-update PR.
+    // Pre-PR v2 artifacts lack the tensor — rebuild it through the same
+    // accumulation `PredictContext::build` runs (shared helper, so the
+    // two sites cannot drift): deterministic, hence bit-identical to the
+    // fit-time accumulator the online updater subtracts against.
+    let sss = match r.mat("ctx.sss") {
+        Ok(m) if m.rows() == s && m.cols() == s => m,
+        Ok(m) => {
+            return art_err(format!("ctx.sss is {}x{}, expected {s}x{s}", m.rows(), m.cols()))
+        }
+        Err(_) => PredictContext::sss_from_vs(core, &vs)?,
+    };
+    Ok(PredictContext { vs, vy, ys, sss, sss_chol, a, h_init })
 }
 
 fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> {
@@ -533,6 +553,80 @@ pub fn engine_to_bytes(engine: &ServeEngine) -> Result<Vec<u8>> {
 /// context (the pre-v2 layout — used by tests and for emitting artifacts
 /// older deployments can read); version 2 includes it.
 pub fn engine_to_bytes_versioned(engine: &ServeEngine, version: u32) -> Result<Vec<u8>> {
+    assemble_bytes(engine, version, None).map(|(bytes, _)| bytes)
+}
+
+/// Per-model cache of each tensor's encoded payload bytes, keyed by
+/// tensor name. Feeding it to [`engine_to_bytes_cached`] makes repeated
+/// snapshots of an incrementally-updated model reuse the untouched
+/// blocks' encodings — the f64→LE loop only runs over the seam.
+#[derive(Debug, Default)]
+pub struct SnapshotCache {
+    bytes: std::collections::HashMap<String, Vec<u8>>,
+}
+
+impl SnapshotCache {
+    pub fn new() -> SnapshotCache {
+        SnapshotCache::default()
+    }
+
+    /// Cached tensors (one entry per tensor of the last snapshot).
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
+/// Block index of a per-block tensor name (`r_diag.3`, `ctx.vs.12`,
+/// `r_band.3.1`, …); `None` for global tensors. Used to decide cache
+/// reuse — an unparseable name conservatively counts as global (always
+/// re-encoded).
+fn tensor_block_index(name: &str) -> Option<usize> {
+    for p in [
+        "partition.blocks.",
+        "r_diag.",
+        "band_chol.",
+        "p.",
+        "c_chol.",
+        "y_dot.",
+        "s_dot.",
+        "ctx.vs.",
+        "ctx.vy.",
+        "ctx.h_init.",
+    ] {
+        if let Some(rest) = name.strip_prefix(p) {
+            return rest.parse().ok();
+        }
+    }
+    if let Some(rest) = name.strip_prefix("r_band.") {
+        return rest.split('.').next().and_then(|s| s.parse().ok());
+    }
+    None
+}
+
+/// [`engine_to_bytes`] with **incremental payload encoding**: per-block
+/// tensors of blocks below `stale_from_block` (the first block the
+/// producing update touched) reuse the cached bytes of the previous
+/// snapshot; everything else — the seam and the global tensors — is
+/// re-encoded and the cache updated. Output bytes are identical to a
+/// full [`engine_to_bytes`] write; returns `(bytes, reused_bytes)` where
+/// the second component counts payload bytes served from the cache.
+pub fn engine_to_bytes_cached(
+    engine: &ServeEngine,
+    cache: &mut SnapshotCache,
+    stale_from_block: usize,
+) -> Result<(Vec<u8>, usize)> {
+    assemble_bytes(engine, FORMAT_VERSION, Some((cache, stale_from_block)))
+}
+
+fn assemble_bytes(
+    engine: &ServeEngine,
+    version: u32,
+    cache: Option<(&mut SnapshotCache, usize)>,
+) -> Result<(Vec<u8>, usize)> {
     if !(MIN_FORMAT_VERSION..=FORMAT_VERSION).contains(&version) {
         return art_err(format!(
             "cannot write artifact format version {version} (supported: {MIN_FORMAT_VERSION}..={FORMAT_VERSION})"
@@ -555,7 +649,7 @@ pub fn engine_to_bytes_versioned(engine: &ServeEngine, version: u32) -> Result<V
         ("dim", Json::Num(core.hyp.dim() as f64)),
         ("train_rows", Json::Num(core.part.total() as f64)),
         ("support_rows", Json::Num(core.basis.size() as f64)),
-        ("tensors", Json::Arr(w.entries)),
+        ("tensors", Json::Arr(std::mem::take(&mut w.entries))),
     ];
     match engine {
         ServeEngine::Centralized(_) => {
@@ -576,12 +670,47 @@ pub fn engine_to_bytes_versioned(engine: &ServeEngine, version: u32) -> Result<V
     out.extend_from_slice(&(manifest.len() as u64).to_le_bytes());
     out.extend_from_slice(&(w.payload.len() as u64).to_le_bytes());
     out.extend_from_slice(&manifest);
-    for v in &w.payload {
-        out.extend_from_slice(&v.to_le_bytes());
+    let mut reused = 0usize;
+    match cache {
+        None => {
+            for v in &w.payload {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Some((cache, stale_from)) => {
+            let encode = |slice: &[f64]| -> Vec<u8> {
+                let mut b = Vec::with_capacity(8 * slice.len());
+                for v in slice {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+                b
+            };
+            let mut next = std::collections::HashMap::with_capacity(w.spans.len());
+            for (name, off, len) in &w.spans {
+                let per_block = tensor_block_index(name);
+                let reusable = per_block.is_some_and(|block| block < stale_from);
+                let cached = if reusable { cache.bytes.remove(name) } else { None };
+                let bytes = match cached {
+                    Some(b) if b.len() == 8 * len => {
+                        reused += b.len();
+                        b
+                    }
+                    _ => encode(&w.payload[*off..*off + *len]),
+                };
+                out.extend_from_slice(&bytes);
+                // Only per-block tensors can ever be reused; caching the
+                // global ones (x_scaled, wt_d, …) would roughly double
+                // resident memory for pure dead weight.
+                if per_block.is_some() {
+                    next.insert(name.clone(), bytes);
+                }
+            }
+            cache.bytes = next;
+        }
     }
     let sum = fnv1a(&out);
     out.extend_from_slice(&sum.to_le_bytes());
-    Ok(out)
+    Ok((out, reused))
 }
 
 /// Deserialize an artifact produced by [`engine_to_bytes`]. Every failure
@@ -792,6 +921,41 @@ mod tests {
                 _ => panic!("h_init presence mismatch at block {m}"),
             }
         }
+    }
+
+    #[test]
+    fn cached_snapshot_is_byte_identical_and_reuses_blocks() {
+        let engine = fitted_engine(48, 16, 1);
+        let mut cache = SnapshotCache::new();
+        let (b1, reused1) = engine_to_bytes_cached(&engine, &mut cache, 0).unwrap();
+        assert_eq!(b1, engine_to_bytes(&engine).unwrap());
+        assert_eq!(reused1, 0);
+        assert!(!cache.is_empty());
+        // Absorb a batch; re-snapshot with only the seam invalidated.
+        let core = engine.core();
+        let plan = crate::online::BlockPolicy::from_core(core)
+            .plan(core.part.size(core.m() - 1), 2);
+        let x = Mat::col_vec(&[4.1, 4.3]);
+        let y = vec![4.1f64.sin(), 4.3f64.sin()];
+        let (newc, stats) = crate::online::absorb(core, &x, &y, &plan, 1).unwrap();
+        let new_engine = engine.with_core(newc).unwrap();
+        let (b2, reused2) =
+            engine_to_bytes_cached(&new_engine, &mut cache, stats.touched_blocks.start).unwrap();
+        assert_eq!(b2, engine_to_bytes(&new_engine).unwrap(), "cached write must be byte-exact");
+        assert!(reused2 > 0, "untouched blocks should reuse cached bytes");
+        assert!(reused2 < b2.len(), "the seam must re-encode");
+        // The reused-bytes snapshot still loads and predicts identically.
+        let loaded = engine_from_bytes(&b2).unwrap();
+        let q = Mat::col_vec(&[0.7]);
+        assert_eq!(
+            loaded.predict(&q).unwrap().mean[0].to_bits(),
+            new_engine.predict(&q).unwrap().mean[0].to_bits()
+        );
+        // An empty cache (everything stale) matches too, reusing nothing.
+        let (b3, reused3) =
+            engine_to_bytes_cached(&new_engine, &mut SnapshotCache::new(), 0).unwrap();
+        assert_eq!(b3, b2);
+        assert_eq!(reused3, 0);
     }
 
     #[test]

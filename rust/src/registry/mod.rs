@@ -22,5 +22,10 @@ pub mod artifact;
 #[allow(clippy::module_inception)]
 pub mod registry;
 
-pub use artifact::{engine_from_bytes, engine_to_bytes, load_engine, save_engine};
-pub use registry::{ModelEntry, ModelInfo, ModelRegistry, RegistryError};
+pub use artifact::{
+    engine_from_bytes, engine_to_bytes, engine_to_bytes_cached, load_engine, save_engine,
+    SnapshotCache,
+};
+pub use registry::{
+    ModelEntry, ModelInfo, ModelRegistry, ObserveOutcome, RegistryError, SnapshotOutcome,
+};

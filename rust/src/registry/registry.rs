@@ -22,10 +22,12 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::{PredictionService, ServeEngine};
+use crate::online::{absorb, BlockPolicy, ObservationBuffer};
+use crate::registry::artifact::{self, SnapshotCache};
 use crate::server::batcher::{self, BatcherHandle};
 use crate::server::metrics::ServeMetrics;
 use crate::util::json::Json;
@@ -40,11 +42,15 @@ pub enum RegistryError {
     Duplicate(String),
     /// The default model cannot be evicted → 409.
     Protected(String),
+    /// A generation publish raced a concurrent load/evict → 409.
+    Conflict(String),
     /// The registry is full and nothing is evictable → 507.
     Capacity { limit: usize },
     /// The requested model name is malformed (client input) → 400.
     InvalidName(String),
-    /// Batcher spawn / service construction failed → 500.
+    /// Malformed observation payload (client input) → 400.
+    BadInput(String),
+    /// Batcher spawn / service construction / update failure → 500.
     Internal(String),
 }
 
@@ -56,29 +62,117 @@ impl std::fmt::Display for RegistryError {
             RegistryError::Protected(n) => {
                 write!(f, "model `{n}` is the default model and cannot be evicted")
             }
+            RegistryError::Conflict(m) => write!(f, "generation conflict: {m}"),
             RegistryError::Capacity { limit } => {
                 write!(f, "registry is at capacity ({limit} models) and nothing is evictable")
             }
             RegistryError::InvalidName(n) => {
                 write!(f, "model name `{n}` must be non-empty [A-Za-z0-9._-]")
             }
+            RegistryError::BadInput(m) => write!(f, "bad observation: {m}"),
             RegistryError::Internal(m) => write!(f, "registry internal error: {m}"),
         }
     }
 }
 
-/// One resident model: the shared engine, its dedicated batcher handle
-/// and its private metrics.
+/// Hard cap on rows a model's observation buffer may hold (≈ tens of MB
+/// at realistic dims) — `"buffer": true` loops cannot grow memory
+/// without bound; clients must flush.
+const MAX_BUFFERED_ROWS: usize = 1 << 20;
+
+/// Per-model ingestion state, shared across a model's generations (the
+/// entry is swapped on every published update; the buffer and snapshot
+/// cache must survive the swap). The single mutex serializes a model's
+/// observe path end-to-end — buffer, absorb, publish — so two concurrent
+/// observes can never base updates on the same generation.
+pub struct IngestState {
+    inner: Mutex<IngestInner>,
+}
+
+struct IngestInner {
+    buffer: ObservationBuffer,
+    policy: BlockPolicy,
+    /// Artifact path the model was loaded from (in-place re-snapshot
+    /// target when `RegistryOptions::resnapshot` is set).
+    snapshot_path: Option<String>,
+    /// Encoded-tensor byte cache for incremental re-snapshotting.
+    snapshot_cache: SnapshotCache,
+}
+
+impl IngestState {
+    fn new(engine: &ServeEngine, snapshot_path: Option<String>) -> IngestState {
+        let core = engine.core();
+        IngestState {
+            inner: Mutex::new(IngestInner {
+                buffer: ObservationBuffer::new(core.hyp.dim()),
+                policy: BlockPolicy::from_core(core),
+                snapshot_path,
+                snapshot_cache: SnapshotCache::new(),
+            }),
+        }
+    }
+}
+
+/// In-place artifact rewrite evidence from an observe that re-snapshotted.
+#[derive(Clone, Debug)]
+pub struct SnapshotOutcome {
+    pub path: String,
+    /// Total snapshot size.
+    pub bytes: usize,
+    /// Payload bytes reused from the previous snapshot's encoding
+    /// (untouched blocks).
+    pub reused_bytes: usize,
+    pub secs: f64,
+}
+
+/// What one observe call did.
+#[derive(Clone, Debug)]
+pub struct ObserveOutcome {
+    pub model: String,
+    /// Generation now serving (bumped iff `applied_rows > 0`).
+    pub generation: u64,
+    /// Rows still waiting in the buffer.
+    pub buffered_rows: usize,
+    /// Rows absorbed into the model by this call.
+    pub applied_rows: usize,
+    /// Markov blocks after the call.
+    pub blocks: usize,
+    /// Training rows after the call.
+    pub train_rows: usize,
+    /// Blocks recomputed by the update (0 when nothing was applied).
+    pub touched_blocks: usize,
+    /// Seconds spent in the incremental update (0 when nothing applied).
+    pub update_secs: f64,
+    pub snapshot: Option<SnapshotOutcome>,
+    /// A snapshot failure does not unpublish the generation; it is
+    /// reported here instead.
+    pub snapshot_error: Option<String>,
+}
+
+/// One resident model **generation**: the shared engine, its dedicated
+/// batcher handle and the model's metrics. Entries are immutable — an
+/// online update builds a new entry (generation + 1, fresh batcher over
+/// the new engine, same metrics/ingest objects) and swaps it into the
+/// name table atomically. An in-flight request holds the `Arc` of the
+/// entry it resolved, so it completes on its pinned generation, and a
+/// micro-batch can never mix generations (one batcher per entry).
 pub struct ModelEntry {
     name: String,
     engine: Arc<ServeEngine>,
     handle: BatcherHandle,
     metrics: Arc<ServeMetrics>,
-    /// `/predict` requests routed to this model.
-    hits: AtomicU64,
+    /// Monotone per-model generation (0 at load, +1 per published update).
+    generation: u64,
+    /// Ingestion state shared across this model's generations.
+    ingest: Arc<IngestState>,
+    /// `/predict` requests routed to this model — shared across
+    /// generations, so a hit recorded against a just-swapped entry is
+    /// still counted.
+    hits: Arc<AtomicU64>,
     /// Logical-clock stamp of the last lookup (drives LRU eviction).
     last_used: AtomicU64,
-    /// Load order (monotone across the registry's lifetime).
+    /// Load order (monotone across the registry's lifetime; preserved
+    /// across generation swaps).
     seq: u64,
 }
 
@@ -98,6 +192,11 @@ impl ModelEntry {
 
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
         &self.metrics
+    }
+
+    /// Generation this entry serves (0 = as loaded).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// Count one routed `/predict` request.
@@ -120,7 +219,12 @@ pub struct ModelInfo {
     pub train_rows: usize,
     pub support_size: usize,
     pub markov_order: usize,
+    pub num_blocks: usize,
     pub is_default: bool,
+    /// Serving generation (0 = as loaded; +1 per published online update).
+    pub generation: u64,
+    /// Observed rows accepted into this model's stream so far.
+    pub observed_rows: u64,
     /// `/predict` requests routed here.
     pub requests: u64,
     /// Prediction rows answered.
@@ -137,7 +241,10 @@ impl ModelInfo {
             ("train_rows", Json::Num(self.train_rows as f64)),
             ("support_size", Json::Num(self.support_size as f64)),
             ("markov_order", Json::Num(self.markov_order as f64)),
+            ("num_blocks", Json::Num(self.num_blocks as f64)),
             ("default", Json::Bool(self.is_default)),
+            ("generation", Json::Num(self.generation as f64)),
+            ("observed_rows", Json::Num(self.observed_rows as f64)),
             ("requests", Json::Num(self.requests as f64)),
             ("rows", Json::Num(self.rows as f64)),
             ("loaded_seq", Json::Num(self.seq as f64)),
@@ -218,6 +325,27 @@ impl ModelRegistry {
     /// Load a fitted engine under `name`, spawning its dedicated batcher.
     /// The first load becomes the default model.
     pub fn load(&self, name: &str, engine: Arc<ServeEngine>) -> Result<(), RegistryError> {
+        self.load_inner(name, engine, None)
+    }
+
+    /// [`load`](Self::load) recording the artifact path the engine came
+    /// from — the in-place target for incremental re-snapshotting after
+    /// online updates (when `RegistryOptions::resnapshot` is set).
+    pub fn load_from_path(
+        &self,
+        name: &str,
+        engine: Arc<ServeEngine>,
+        path: &str,
+    ) -> Result<(), RegistryError> {
+        self.load_inner(name, engine, Some(path.to_string()))
+    }
+
+    fn load_inner(
+        &self,
+        name: &str,
+        engine: Arc<ServeEngine>,
+        snapshot_path: Option<String>,
+    ) -> Result<(), RegistryError> {
         if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || "-_.".contains(c))
         {
             return Err(RegistryError::InvalidName(name.to_string()));
@@ -252,28 +380,17 @@ impl ModelRegistry {
         // passed, so a rejected load leaves no orphan thread behind.
         let (handle, join) = batcher::spawn(svc, self.batch.queue_capacity)
             .map_err(|e| RegistryError::Internal(e.to_string()))?;
-        {
-            // Reap batchers of evicted models that have already exited,
-            // so load/evict churn doesn't grow the join list forever.
-            let mut joins = self.joins.lock().expect("registry joins lock");
-            let mut live = Vec::with_capacity(joins.len() + 1);
-            for j in joins.drain(..) {
-                if j.is_finished() {
-                    let _ = j.join();
-                } else {
-                    live.push(j);
-                }
-            }
-            live.push(join);
-            *joins = live;
-        }
+        self.track_join(join);
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let ingest = Arc::new(IngestState::new(&engine, snapshot_path));
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             engine,
             handle,
             metrics,
-            hits: AtomicU64::new(0),
+            generation: 0,
+            ingest,
+            hits: Arc::new(AtomicU64::new(0)),
             last_used: AtomicU64::new(self.tick()),
             seq,
         });
@@ -284,6 +401,231 @@ impl ModelRegistry {
             *default = Some(name.to_string());
         }
         Ok(())
+    }
+
+    /// Publish a new generation of `name`: a fresh entry (generation + 1,
+    /// dedicated batcher over `engine`, the previous generation's metrics
+    /// and ingest state) swapped into the name table atomically. Fails
+    /// with [`RegistryError::Conflict`] unless the resident entry is
+    /// exactly `expected` — a concurrent `PUT`/`DELETE` between resolve
+    /// and publish must not be silently overwritten.
+    fn replace_generation(
+        &self,
+        name: &str,
+        expected: &Arc<ModelEntry>,
+        engine: Arc<ServeEngine>,
+    ) -> Result<Arc<ModelEntry>, RegistryError> {
+        let svc = PredictionService::with_shared_metrics(
+            Arc::clone(&engine),
+            self.batch.batch_size,
+            Arc::clone(&expected.metrics),
+        )
+        .map_err(|e| RegistryError::Internal(e.to_string()))?
+        .with_max_delay(Duration::from_micros(self.batch.max_delay_us));
+        // Spawn the new batcher *before* taking the write lock: thread
+        // creation must not stall every concurrent lookup. If the swap
+        // check then fails, dropping the handle makes the thread exit and
+        // its (tracked) join is reaped on a later churn.
+        let (handle, join) = batcher::spawn(svc, self.batch.queue_capacity)
+            .map_err(|e| RegistryError::Internal(e.to_string()))?;
+
+        let mut map = self.models.write().expect("registry lock");
+        let check = match map.get(name) {
+            Some(cur) if Arc::ptr_eq(cur, expected) => Ok(()),
+            Some(_) => Err(RegistryError::Conflict(format!(
+                "model `{name}` was replaced while the update ran"
+            ))),
+            None => Err(RegistryError::NotFound(name.to_string())),
+        };
+        if let Err(e) = check {
+            drop(handle);
+            drop(map);
+            self.track_join(join);
+            return Err(e);
+        }
+        let entry = Arc::new(ModelEntry {
+            name: name.to_string(),
+            engine,
+            handle,
+            metrics: Arc::clone(&expected.metrics),
+            generation: expected.generation + 1,
+            ingest: Arc::clone(&expected.ingest),
+            hits: Arc::clone(&expected.hits),
+            last_used: AtomicU64::new(self.tick()),
+            seq: expected.seq,
+        });
+        map.insert(name.to_string(), Arc::clone(&entry));
+        drop(map);
+        self.track_join(join);
+        Ok(entry)
+    }
+
+    /// Remember a batcher join handle, reaping any already-finished ones
+    /// (shared by `load` and generation swaps so churn never grows the
+    /// list without bound). Callers must not hold the models lock wanting
+    /// the joins lock in the opposite order elsewhere — the only nesting
+    /// used is models → joins.
+    fn track_join(&self, join: JoinHandle<()>) {
+        let mut joins = self.joins.lock().expect("registry joins lock");
+        let mut live = Vec::with_capacity(joins.len() + 1);
+        for j in joins.drain(..) {
+            if j.is_finished() {
+                let _ = j.join();
+            } else {
+                live.push(j);
+            }
+        }
+        live.push(join);
+        *joins = live;
+    }
+
+    /// Stream observations into a model. Rows are buffered per model and,
+    /// once the flush policy fires (or `force_flush`), absorbed by the
+    /// incremental fitter ([`online::absorb`](crate::online::absorb)) on
+    /// the engine's own parallelism; the resulting core is published as a
+    /// new immutable generation. The per-model ingest mutex serializes
+    /// the whole path, while predicts keep flowing against the resident
+    /// generation throughout (and in-flight ones finish on the entry they
+    /// resolved).
+    pub fn observe(
+        &self,
+        name: Option<&str>,
+        rows: &[Vec<f64>],
+        ys: &[f64],
+        buffer_only: bool,
+        force_flush: bool,
+    ) -> Result<ObserveOutcome, RegistryError> {
+        let first = self.entry_for(name)?;
+        let model = first.name().to_string();
+        let ingest = Arc::clone(&first.ingest);
+        drop(first);
+        // Serialize this model's updates; re-resolve under the lock so a
+        // swap that happened while we waited is the base we extend.
+        let mut g = ingest.inner.lock().expect("ingest lock");
+        let entry = self.entry_for(Some(model.as_str()))?;
+        if !Arc::ptr_eq(&entry.ingest, &ingest) {
+            // The name was evicted and reloaded as an unrelated model.
+            return Err(RegistryError::Conflict(format!(
+                "model `{model}` was replaced while the observe waited"
+            )));
+        }
+
+        // Bound the per-model buffer: every other server-side queue is
+        // bounded, and a client looping `"buffer": true` must not be able
+        // to grow resident memory without limit.
+        if g.buffer.rows() + rows.len() > MAX_BUFFERED_ROWS {
+            return Err(RegistryError::BadInput(format!(
+                "observation buffer would exceed {MAX_BUFFERED_ROWS} rows ({} buffered); flush first",
+                g.buffer.rows()
+            )));
+        }
+        // Validation (dim/finiteness/length) lives in the buffer; a bad
+        // batch is rejected whole, nothing partially buffered.
+        g.buffer
+            .push_batch(rows, ys)
+            .map_err(|e| RegistryError::BadInput(e.to_string()))?;
+        entry.metrics.observe_rows.fetch_add(rows.len() as u64, Ordering::Relaxed);
+
+        let core = entry.engine.core();
+        let should_flush = !g.buffer.is_empty()
+            && (force_flush || (!buffer_only && g.buffer.rows() >= self.opts.observe_flush_rows));
+        if !should_flush {
+            return Ok(ObserveOutcome {
+                model,
+                generation: entry.generation,
+                buffered_rows: g.buffer.rows(),
+                applied_rows: 0,
+                blocks: core.m(),
+                train_rows: core.part.total(),
+                touched_blocks: 0,
+                update_secs: 0.0,
+                snapshot: None,
+                snapshot_error: None,
+            });
+        }
+
+        let (batch_x, batch_y) = g.buffer.drain();
+        let plan = g.policy.plan(core.part.size(core.m() - 1), batch_x.rows());
+        let t0 = Instant::now();
+        let absorbed = absorb(core, &batch_x, &batch_y, &plan, entry.engine.update_parallelism());
+        let (new_core, stats) = match absorbed {
+            Ok(v) => v,
+            Err(e) => {
+                // Numerical/internal failure: the rows are not lost.
+                g.buffer.restore(&batch_x, &batch_y);
+                return Err(RegistryError::Internal(format!("incremental update failed: {e}")));
+            }
+        };
+        let new_engine = match entry.engine.with_core(new_core) {
+            Ok(v) => Arc::new(v),
+            Err(e) => {
+                g.buffer.restore(&batch_x, &batch_y);
+                return Err(RegistryError::Internal(format!("engine rebuild failed: {e}")));
+            }
+        };
+        let new_entry = match self.replace_generation(&model, &entry, Arc::clone(&new_engine)) {
+            Ok(v) => v,
+            Err(e) => {
+                g.buffer.restore(&batch_x, &batch_y);
+                return Err(e);
+            }
+        };
+        let update_secs = t0.elapsed().as_secs_f64();
+        entry.metrics.observe_us.record((update_secs * 1e6) as u64);
+
+        // Optional in-place artifact rewrite: untouched blocks reuse the
+        // previous snapshot's encoded bytes. A failure here is reported
+        // but does not unpublish the (already live) generation.
+        let mut snapshot = None;
+        let mut snapshot_error = None;
+        if self.opts.resnapshot {
+            if let Some(path) = g.snapshot_path.clone() {
+                let t1 = Instant::now();
+                match artifact::engine_to_bytes_cached(
+                    &new_engine,
+                    &mut g.snapshot_cache,
+                    stats.touched_blocks.start,
+                ) {
+                    Ok((bytes, reused_bytes)) => {
+                        // Write-then-rename: the target is the model's
+                        // only durable copy, so a crash mid-write must
+                        // never leave it truncated.
+                        let tmp = format!("{path}.tmp");
+                        let written = std::fs::write(&tmp, &bytes)
+                            .and_then(|()| std::fs::rename(&tmp, &path));
+                        match written {
+                            Ok(()) => {
+                                snapshot = Some(SnapshotOutcome {
+                                    path,
+                                    bytes: bytes.len(),
+                                    reused_bytes,
+                                    secs: t1.elapsed().as_secs_f64(),
+                                });
+                            }
+                            Err(e) => {
+                                let _ = std::fs::remove_file(&tmp);
+                                snapshot_error = Some(format!("write {path}: {e}"));
+                            }
+                        }
+                    }
+                    Err(e) => snapshot_error = Some(e.to_string()),
+                }
+            }
+        }
+
+        let nc = new_entry.engine.core();
+        Ok(ObserveOutcome {
+            model,
+            generation: new_entry.generation,
+            buffered_rows: g.buffer.rows(),
+            applied_rows: stats.rows_added,
+            blocks: nc.m(),
+            train_rows: nc.part.total(),
+            touched_blocks: stats.touched(),
+            update_secs,
+            snapshot,
+            snapshot_error,
+        })
     }
 
     fn tick(&self) -> u64 {
@@ -343,7 +685,10 @@ impl ModelRegistry {
                     train_rows: core.part.total(),
                     support_size: core.basis.size(),
                     markov_order: core.b(),
+                    num_blocks: core.m(),
                     is_default: default.as_deref() == Some(e.name.as_str()),
+                    generation: e.generation,
+                    observed_rows: e.metrics.observe_rows.load(Ordering::Relaxed),
                     requests: e.hits(),
                     rows: e.metrics.responses.load(Ordering::Relaxed),
                     seq: e.seq,
@@ -407,7 +752,10 @@ mod tests {
 
     fn registry(max_models: usize, lru: bool) -> ModelRegistry {
         let serve = ServeOptions { batch_size: 4, max_delay_us: 500, ..Default::default() };
-        ModelRegistry::new(RegistryOptions { max_models, lru_evict: lru }, &serve)
+        ModelRegistry::new(
+            RegistryOptions { max_models, lru_evict: lru, ..Default::default() },
+            &serve,
+        )
     }
 
     #[test]
@@ -479,6 +827,60 @@ mod tests {
         assert!(matches!(reg.load("", engine(1)), Err(RegistryError::InvalidName(_))));
         assert!(matches!(reg.load("sp ace", engine(2)), Err(RegistryError::InvalidName(_))));
         assert!(reg.load("ok-name_1.2", engine(3)).is_ok());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn observe_publishes_new_generations() {
+        let reg = registry(4, true);
+        reg.load("live", engine(21)).unwrap();
+        let gen0 = reg.get("live").unwrap();
+        assert_eq!(gen0.generation(), 0);
+        // Buffer-only: nothing published.
+        let out = reg
+            .observe(Some("live"), &[vec![4.2]], &[4.2f64.sin()], true, false)
+            .unwrap();
+        assert_eq!(out.generation, 0);
+        assert_eq!(out.buffered_rows, 1);
+        assert_eq!(out.applied_rows, 0);
+        // Flush: the buffered row plus a new one are absorbed.
+        let out = reg
+            .observe(Some("live"), &[vec![4.4]], &[4.4f64.sin()], false, true)
+            .unwrap();
+        assert_eq!(out.generation, 1);
+        assert_eq!(out.applied_rows, 2);
+        assert_eq!(out.buffered_rows, 0);
+        assert_eq!(out.train_rows, 92);
+        assert!(out.touched_blocks >= 1);
+        let gen1 = reg.get("live").unwrap();
+        assert_eq!(gen1.generation(), 1);
+        assert_eq!(gen1.engine().core().part.total(), 92);
+        // Metrics persisted across the swap (same object).
+        assert!(Arc::ptr_eq(gen0.metrics(), gen1.metrics()));
+        assert_eq!(gen1.metrics().observe_rows.load(Ordering::Relaxed), 2);
+        // The pinned old generation still answers, on its own engine.
+        let rep0 = gen0.handle().submit(vec![vec![0.5]]).unwrap();
+        let d0 = gen0.engine().predict(&Mat::col_vec(&[0.5])).unwrap();
+        assert_eq!(rep0.mean[0].to_bits(), d0.mean[0].to_bits());
+        // And the live generation answers with the updated engine.
+        let rep1 = gen1.handle().submit(vec![vec![0.5]]).unwrap();
+        let d1 = gen1.engine().predict(&Mat::col_vec(&[0.5])).unwrap();
+        assert_eq!(rep1.mean[0].to_bits(), d1.mean[0].to_bits());
+        // Bad payloads are rejected with client errors.
+        assert!(matches!(
+            reg.observe(Some("live"), &[vec![0.0, 1.0]], &[0.0], false, true),
+            Err(RegistryError::BadInput(_))
+        ));
+        assert!(matches!(
+            reg.observe(Some("live"), &[vec![f64::NAN]], &[0.0], false, true),
+            Err(RegistryError::BadInput(_))
+        ));
+        assert!(matches!(
+            reg.observe(Some("nope"), &[vec![0.0]], &[0.0], false, true),
+            Err(RegistryError::NotFound(_))
+        ));
+        drop(gen0);
+        drop(gen1);
         reg.shutdown();
     }
 

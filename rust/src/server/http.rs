@@ -450,15 +450,25 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
             (200, "application/json", j.to_string())
         }
         (method, p) if p.starts_with("/models/") => {
-            let name = &p["/models/".len()..];
-            if name.is_empty() || name.contains('/') {
+            let rest = &p["/models/".len()..];
+            if let Some(name) = rest.strip_suffix("/observe") {
+                if method == "POST" && !name.is_empty() && !name.contains('/') {
+                    return handle_observe(name, &req.body, shared);
+                }
                 return (
                     404,
                     "application/json",
                     error_body(&format!("no route for {} {}", req.method, req.path)),
                 );
             }
-            handle_model_admin(method, name, &req.body, shared)
+            if rest.is_empty() || rest.contains('/') {
+                return (
+                    404,
+                    "application/json",
+                    error_body(&format!("no route for {} {}", req.method, req.path)),
+                );
+            }
+            handle_model_admin(method, rest, &req.body, shared)
         }
         _ => (
             404,
@@ -480,6 +490,14 @@ fn metrics_text(shared: &Shared) -> String {
             "pgpr_model_requests_total{{model=\"{}\"}} {}\n",
             info.name, info.requests
         ));
+        s.push_str(&format!(
+            "pgpr_model_generation{{model=\"{}\"}} {}\n",
+            info.name, info.generation
+        ));
+        s.push_str(&format!(
+            "pgpr_model_train_rows{{model=\"{}\"}} {}\n",
+            info.name, info.train_rows
+        ));
     }
     for (name, m) in by_model {
         s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
@@ -489,13 +507,115 @@ fn metrics_text(shared: &Shared) -> String {
 
 fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {
     let status = match e {
-        RegistryError::InvalidName(_) => 400,
+        RegistryError::InvalidName(_) | RegistryError::BadInput(_) => 400,
         RegistryError::NotFound(_) => 404,
-        RegistryError::Duplicate(_) | RegistryError::Protected(_) => 409,
+        RegistryError::Duplicate(_)
+        | RegistryError::Protected(_)
+        | RegistryError::Conflict(_) => 409,
         RegistryError::Capacity { .. } => 507,
         RegistryError::Internal(_) => 500,
     };
     (status, "application/json", error_body(&e.to_string()))
+}
+
+/// `POST /models/<name>/observe` — stream observations into a live model.
+/// Body: `{"x": [..], "y": v}` (one row) or `{"rows": [[..], ..],
+/// "y": [..]}` (a batch), plus optional `"buffer": true` (accumulate
+/// without publishing) or `"flush": true` (publish even below the flush
+/// threshold; with no rows this flushes whatever is buffered). Answers
+/// with the model's generation, row counts and the update-seam evidence.
+fn handle_observe(name: &str, body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return (400, "application/json", error_body("body is not utf-8")),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return (400, "application/json", error_body(&format!("bad JSON: {e}"))),
+    };
+    let buffer_only = json.get("buffer").and_then(|v| v.as_bool()).unwrap_or(false);
+    let force_flush = json.get("flush").and_then(|v| v.as_bool()).unwrap_or(false);
+    if buffer_only && force_flush {
+        return (400, "application/json", error_body("`buffer` and `flush` are exclusive"));
+    }
+    let (rows, ys) = match parse_observations(&json) {
+        Ok(v) => v,
+        Err(msg) => return (400, "application/json", error_body(&msg)),
+    };
+    if rows.is_empty() && !force_flush {
+        return (
+            400,
+            "application/json",
+            error_body("no observations (send `x`+`y`, `rows`+`y`, or `flush`)"),
+        );
+    }
+    match shared.registry.observe(Some(name), &rows, &ys, buffer_only, force_flush) {
+        Ok(out) => {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("model", Json::Str(out.model.clone())),
+                ("generation", Json::Num(out.generation as f64)),
+                ("applied_rows", Json::Num(out.applied_rows as f64)),
+                ("buffered_rows", Json::Num(out.buffered_rows as f64)),
+                ("train_rows", Json::Num(out.train_rows as f64)),
+                ("blocks", Json::Num(out.blocks as f64)),
+                ("touched_blocks", Json::Num(out.touched_blocks as f64)),
+                ("update_s", Json::Num(out.update_secs)),
+            ];
+            if let Some(s) = &out.snapshot {
+                fields.push((
+                    "snapshot",
+                    Json::obj(vec![
+                        ("path", Json::Str(s.path.clone())),
+                        ("bytes", Json::Num(s.bytes as f64)),
+                        ("reused_bytes", Json::Num(s.reused_bytes as f64)),
+                        ("secs", Json::Num(s.secs)),
+                    ]),
+                ));
+            }
+            if let Some(e) = &out.snapshot_error {
+                fields.push(("snapshot_error", Json::Str(e.clone())));
+            }
+            (200, "application/json", Json::obj(fields).to_string())
+        }
+        Err(e) => registry_error_response(&e),
+    }
+}
+
+/// Parse observe rows+targets: `{"x": [..], "y": v}` or
+/// `{"rows": [[..]..], "y": [..]}`; an empty body (flush-only) yields
+/// zero rows.
+fn parse_observations(j: &Json) -> std::result::Result<(Vec<Vec<f64>>, Vec<f64>), String> {
+    if let Some(x) = j.get("x") {
+        let row = x
+            .as_f64_vec()
+            .ok_or_else(|| "`x` must be an array of numbers".to_string())?;
+        let y = j
+            .get("y")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| "`y` must be a number when `x` is given".to_string())?;
+        return Ok((vec![row], vec![y]));
+    }
+    if let Some(rs) = j.get("rows") {
+        let arr = rs
+            .as_arr()
+            .ok_or_else(|| "`rows` must be an array of arrays".to_string())?;
+        let mut rows = Vec::with_capacity(arr.len());
+        for r in arr {
+            rows.push(
+                r.as_f64_vec()
+                    .ok_or_else(|| "`rows` entries must be arrays of numbers".to_string())?,
+            );
+        }
+        let ys = j
+            .get("y")
+            .and_then(|v| v.as_f64_vec())
+            .ok_or_else(|| "`y` must be an array of numbers when `rows` is given".to_string())?;
+        if ys.len() != rows.len() {
+            return Err(format!("{} rows but {} targets", rows.len(), ys.len()));
+        }
+        return Ok((rows, ys));
+    }
+    Ok((Vec::new(), Vec::new()))
 }
 
 fn handle_model_admin(
@@ -539,7 +659,7 @@ fn handle_model_admin(
                     )
                 }
             };
-            match shared.registry.load(name, Arc::new(engine)) {
+            match shared.registry.load_from_path(name, Arc::new(engine), &path) {
                 Ok(()) => {
                     let j = Json::obj(vec![
                         ("loaded", Json::Str(name.to_string())),
@@ -598,6 +718,7 @@ fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
             entry.record_hit();
             let j = Json::obj(vec![
                 ("model", Json::Str(entry.name().to_string())),
+                ("generation", Json::Num(entry.generation() as f64)),
                 ("mean", Json::arr_f64(&rep.mean)),
                 ("var", Json::arr_f64(&rep.var)),
                 ("latency_s", Json::Num(rep.latency_s)),

@@ -50,6 +50,13 @@ pub struct LoadConfig {
     /// default model). Per-model input dimensions are fetched from
     /// `GET /models/<name>`.
     pub models: Vec<String>,
+    /// Open-loop arrival rate in requests/second; 0 = closed loop. In
+    /// open-loop mode request i is *scheduled* at `i/rate` and its
+    /// latency is measured from that scheduled instant — so a stalled
+    /// server accrues the queueing delay of every late send instead of
+    /// silently slowing the offered load (coordinated-omission
+    /// correction).
+    pub rate_rps: f64,
 }
 
 /// Aggregated client-side results.
@@ -60,6 +67,10 @@ pub struct LoadReport {
     pub errors: usize,
     /// Whether connections were reused (HTTP/1.1 keep-alive).
     pub keep_alive: bool,
+    /// Open-loop run (fixed arrival rate, latency from scheduled arrival).
+    pub open_loop: bool,
+    /// Offered arrival rate for open-loop runs (0 for closed loop).
+    pub offered_rps: f64,
     pub elapsed_s: f64,
     /// Answered requests per wall-clock second.
     pub throughput_rps: f64,
@@ -79,6 +90,8 @@ impl LoadReport {
             ("ok", Json::Num(self.ok as f64)),
             ("errors", Json::Num(self.errors as f64)),
             ("keep_alive", Json::Bool(self.keep_alive)),
+            ("open_loop", Json::Bool(self.open_loop)),
+            ("offered_rps", Json::Num(self.offered_rps)),
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("rows_per_sec", Json::Num(self.rows_per_sec)),
@@ -97,9 +110,15 @@ impl LoadReport {
 
     /// Human-readable one-liner.
     pub fn render(&self) -> String {
+        let mode = match (self.open_loop, self.keep_alive) {
+            (true, true) => format!("open@{:.0}rps keep-alive", self.offered_rps),
+            (true, false) => format!("open@{:.0}rps close", self.offered_rps),
+            (false, true) => "keep-alive".to_string(),
+            (false, false) => "close".to_string(),
+        };
         format!(
             "loadgen[{}]: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}",
-            if self.keep_alive { "keep-alive" } else { "close" },
+            mode,
             self.ok,
             self.requests,
             self.errors,
@@ -312,15 +331,43 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                 // One persistent connection per thread in keep-alive
                 // mode, re-established on error or server-side close.
                 let mut conn: Option<HttpConn> = None;
+                let open = cfg.rate_rps > 0.0;
+                // Open loop: worker w owns arrivals w, w+C, w+2C, … each
+                // pinned to its global scheduled instant; closed loop:
+                // pull from the shared counter as responses come back.
+                let mut own_i = w;
                 loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= cfg.requests {
-                        break;
-                    }
+                    let i = if open {
+                        if own_i >= cfg.requests {
+                            break;
+                        }
+                        let i = own_i;
+                        own_i += cfg.concurrency;
+                        i
+                    } else {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= cfg.requests {
+                            break;
+                        }
+                        i
+                    };
                     let (model, dim) = &targets[i % targets.len()];
                     let body =
                         request_body(&mut rng, *dim, cfg.rows_per_request, model.as_deref());
-                    let t = Instant::now();
+                    // Open loop measures from the *scheduled* arrival, so
+                    // a send delayed by a slow previous response still
+                    // charges the wait to the server (no coordinated
+                    // omission).
+                    let t = if open {
+                        let sched = t0 + Duration::from_secs_f64(i as f64 / cfg.rate_rps);
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        sched
+                    } else {
+                        Instant::now()
+                    };
                     let status = if cfg.keep_alive {
                         let c = match conn.take() {
                             Some(c) => Ok(c),
@@ -359,6 +406,8 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         ok: okc,
         errors: errors.load(Ordering::Relaxed),
         keep_alive: cfg.keep_alive,
+        open_loop: cfg.rate_rps > 0.0,
+        offered_rps: cfg.rate_rps,
         elapsed_s,
         throughput_rps: if elapsed_s > 0.0 { okc as f64 / elapsed_s } else { 0.0 },
         rows_per_sec: if elapsed_s > 0.0 {
@@ -385,6 +434,8 @@ mod tests {
             ok: 9,
             errors: 1,
             keep_alive: true,
+            open_loop: false,
+            offered_rps: 0.0,
             elapsed_s: 2.0,
             throughput_rps: 4.5,
             rows_per_sec: 4.5,
@@ -425,6 +476,7 @@ mod tests {
             seed: 0,
             keep_alive: false,
             models: Vec::new(),
+            rate_rps: 0.0,
         };
         assert!(run(&cfg).is_err());
     }
@@ -443,6 +495,7 @@ mod tests {
                 seed: 3,
                 keep_alive,
                 models: Vec::new(),
+                rate_rps: 0.0,
             };
             let r = run(&cfg).unwrap();
             assert_eq!(r.ok, 0);

@@ -149,6 +149,11 @@ pub struct ServeMetrics {
     /// saturation produces 503s), sampled at each successful enqueue
     /// including the new request.
     pub queue_depth: Histogram,
+    /// End-to-end latency of published online updates (absorb + generation
+    /// swap), microseconds.
+    pub observe_us: Histogram,
+    /// Observation rows accepted into the model's stream.
+    pub observe_rows: AtomicU64,
     /// Rows accepted into the queue.
     pub requests: AtomicU64,
     /// Rows answered.
@@ -168,6 +173,8 @@ impl ServeMetrics {
             predict_us: Histogram::new(),
             batch_rows: Histogram::new(),
             queue_depth: Histogram::new(),
+            observe_us: Histogram::new(),
+            observe_rows: AtomicU64::new(0),
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
@@ -218,9 +225,11 @@ impl ServeMetrics {
         let _ = writeln!(s, "pgpr_batches_total{plain} {}", c(&self.batches));
         let _ = writeln!(s, "pgpr_throughput_rows_per_sec{plain} {:.3}", self.rows_per_sec());
         let _ = writeln!(s, "pgpr_uptime_seconds{plain} {:.3}", self.elapsed_secs());
+        let _ = writeln!(s, "pgpr_observe_rows_total{plain} {}", c(&self.observe_rows));
         for (name, h) in [
             ("pgpr_request_latency_seconds", &self.latency_us),
             ("pgpr_predict_seconds", &self.predict_us),
+            ("pgpr_observe_update_seconds", &self.observe_us),
         ] {
             let snap = h.snapshot();
             for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
@@ -273,6 +282,7 @@ impl ServeMetrics {
         let lat = self.latency_us.snapshot();
         let occ = self.batch_rows.snapshot();
         let qd = self.queue_depth.snapshot();
+        let obs = self.observe_us.snapshot();
         let c = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
         Json::obj(vec![
             ("requests", c(&self.requests)),
@@ -304,6 +314,16 @@ impl ServeMetrics {
                     ("mean", Json::Num(qd.mean)),
                     ("p99", Json::Num(qd.p99 as f64)),
                     ("max", Json::Num(qd.max as f64)),
+                ]),
+            ),
+            ("observe_rows", c(&self.observe_rows)),
+            (
+                "observe_update_s",
+                Json::obj(vec![
+                    ("mean", Json::Num(obs.mean * 1e-6)),
+                    ("p50", Json::Num(obs.p50 as f64 * 1e-6)),
+                    ("p99", Json::Num(obs.p99 as f64 * 1e-6)),
+                    ("max", Json::Num(obs.max as f64 * 1e-6)),
                 ]),
             ),
         ])

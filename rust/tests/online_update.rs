@@ -1,0 +1,467 @@
+//! Online-update acceptance suite.
+//!
+//! * **Update-equals-refit** — a model grown by streaming observes must
+//!   be equivalent to a from-scratch `fit_with_layout` refit on the
+//!   concatenated data under the streamed layout: per-block state is
+//!   bit-identical (the updater runs the same per-block routines `fit`
+//!   runs), and the additive ÿ_S/Σ̈_SS accumulators (hence predictions)
+//!   agree to tight tolerance. Exercised for tail-block extension,
+//!   new-block cuts and cross-seam B > 1, on the centralized and
+//!   `threads:2` cluster engines.
+//! * **Generation atomicity** — concurrent observe-vs-predict traffic
+//!   never sees a torn generation: every answered batch bit-matches the
+//!   engine of the entry that answered it, and generations only move
+//!   forward.
+//! * **HTTP observe** — `POST /models/<name>/observe` end to end,
+//!   including buffering/flush, error mapping, per-model generation and
+//!   ingest series on `/metrics`, and incremental re-snapshotting.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use pgpr::config::{
+    BackendKind, ClusterConfig, LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions,
+};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::parallel::ParallelLma;
+use pgpr::lma::residual::LmaFitCore;
+use pgpr::lma::LmaRegressor;
+use pgpr::online::{absorb, BlockPolicy};
+use pgpr::registry::{artifact, ModelRegistry};
+use pgpr::server::http::Server;
+use pgpr::server::loadgen::http_request;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+fn hyp() -> SeArdHyper {
+    SeArdHyper::isotropic(1, 0.9, 1.0, 0.1)
+}
+
+fn lma_cfg(m: usize, b: usize, s: usize, seed: u64) -> LmaConfig {
+    LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    }
+}
+
+fn sine(x: &Mat) -> Vec<f64> {
+    (0..x.rows()).map(|i| x.get(i, 0).sin()).collect()
+}
+
+/// Stream a sequence of observe batches through `absorb`, returning the
+/// final core plus the concatenated (original-order) data.
+fn stream_through(
+    core: LmaFitCore,
+    init_x: &Mat,
+    init_y: &[f64],
+    batches: &[(Mat, Vec<f64>)],
+    threads: usize,
+) -> (LmaFitCore, Mat, Vec<f64>) {
+    let policy = BlockPolicy::from_core(&core);
+    let mut cur = core;
+    let mut all_x = init_x.clone();
+    let mut all_y = init_y.to_vec();
+    for (bx, by) in batches {
+        let plan = policy.plan(cur.part.size(cur.m() - 1), bx.rows());
+        let (next, stats) = absorb(&cur, bx, by, &plan, threads).unwrap();
+        // The seam is bounded: at most the B-neighborhood of the first
+        // changed block plus the new blocks — never all M blocks (unless
+        // B reaches across the whole chain).
+        assert!(
+            stats.touched() <= cur.b() + 1 + plan.new_blocks.len(),
+            "touched {} blocks for B={} + {} new",
+            stats.touched(),
+            cur.b(),
+            plan.new_blocks.len()
+        );
+        all_x = Mat::vstack(&[&all_x, bx]).unwrap();
+        all_y.extend_from_slice(by);
+        cur = next;
+    }
+    (cur, all_x, all_y)
+}
+
+/// Assert streamed-core ≡ refit-core: per-block state bitwise, additive
+/// accumulators and predictions to tight tolerance.
+fn assert_update_equals_refit(streamed: LmaFitCore, all_x: &Mat, all_y: &[f64], tag: &str) {
+    let refit = LmaFitCore::fit_with_layout(
+        all_x,
+        all_y,
+        &streamed.hyp,
+        &streamed.cfg,
+        streamed.partition.clone(),
+        streamed.basis.s_scaled.clone(),
+        1,
+    )
+    .unwrap();
+    assert_eq!(streamed.perm, refit.perm, "{tag}: perm");
+    assert_eq!(streamed.x_scaled.data(), refit.x_scaled.data(), "{tag}: x_scaled");
+    assert_eq!(streamed.wt_d.data(), refit.wt_d.data(), "{tag}: wt_d");
+    for m in 0..streamed.m() {
+        assert_eq!(streamed.r_diag[m].data(), refit.r_diag[m].data(), "{tag}: r_diag[{m}]");
+        for (j, blk) in streamed.r_band[m].iter().enumerate() {
+            assert_eq!(blk.data(), refit.r_band[m][j].data(), "{tag}: r_band[{m}][{j}]");
+        }
+        assert_eq!(
+            streamed.c_chol[m].l().data(),
+            refit.c_chol[m].l().data(),
+            "{tag}: c_chol[{m}]"
+        );
+        assert_eq!(streamed.y_dot[m], refit.y_dot[m], "{tag}: y_dot[{m}]");
+        assert_eq!(streamed.s_dot[m].data(), refit.s_dot[m].data(), "{tag}: s_dot[{m}]");
+        match (&streamed.p[m], &refit.p[m]) {
+            (Some(a), Some(b)) => assert_eq!(a.data(), b.data(), "{tag}: p[{m}]"),
+            (None, None) => {}
+            _ => panic!("{tag}: propagator presence mismatch at block {m}"),
+        }
+        let (sc, rc) = (streamed.context(), refit.context());
+        assert_eq!(sc.vs[m].data(), rc.vs[m].data(), "{tag}: ctx.vs[{m}]");
+        assert_eq!(sc.vy[m].data(), rc.vy[m].data(), "{tag}: ctx.vy[{m}]");
+        match (&sc.h_init[m], &rc.h_init[m]) {
+            (Some(a), Some(b)) => assert_eq!(a.data(), b.data(), "{tag}: h_init[{m}]"),
+            (None, None) => {}
+            _ => panic!("{tag}: h_init presence mismatch at block {m}"),
+        }
+    }
+    // The additive accumulators agree to rounding (subtract/add vs a
+    // fresh ordered resum), and so do predictions.
+    let (sc, rc) = (streamed.context(), refit.context());
+    for (a, b) in sc.ys.iter().zip(&rc.ys) {
+        assert!((a - b).abs() <= 1e-8 * (1.0 + b.abs()), "{tag}: ys {a} vs {b}");
+    }
+    for (a, b) in sc.a.iter().zip(&rc.a) {
+        assert!((a - b).abs() <= 1e-6 * (1.0 + b.abs()), "{tag}: a {a} vs {b}");
+    }
+    assert!(sc.sss.max_abs_diff(&rc.sss) <= 1e-8, "{tag}: sss");
+    let mut rng = Pcg64::new(4242);
+    let q = Mat::col_vec(&rng.uniform_vec(40, -4.5, 5.5));
+    let ps = LmaRegressor::from_core(streamed).predict(&q).unwrap();
+    let pr = LmaRegressor::from_core(refit).predict(&q).unwrap();
+    for i in 0..q.rows() {
+        assert!(
+            (ps.mean[i] - pr.mean[i]).abs() < 1e-8,
+            "{tag}: mean[{i}] {} vs {}",
+            ps.mean[i],
+            pr.mean[i]
+        );
+        assert!((ps.var[i] - pr.var[i]).abs() < 1e-8, "{tag}: var[{i}]");
+    }
+}
+
+#[test]
+fn update_equals_refit_centralized() {
+    for (m0, b) in [(4usize, 1usize), (5, 2), (4, 0)] {
+        let mut rng = Pcg64::new(900 + b as u64);
+        let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+        let y = sine(&x);
+        let core = LmaFitCore::fit(&x, &y, &hyp(), &lma_cfg(m0, b, 20, 3)).unwrap();
+        let target = BlockPolicy::from_core(&core).target_rows;
+        // Three batches: a small tail extension, a cut of one-plus new
+        // blocks (crosses the seam for B > 1), and a large multi-block
+        // batch.
+        let mk = |rng: &mut Pcg64, k: usize| {
+            let bx = Mat::col_vec(&rng.uniform_vec(k, -4.0, 5.0));
+            let by = sine(&bx);
+            (bx, by)
+        };
+        let batches =
+            vec![mk(&mut rng, 3), mk(&mut rng, target + 2), mk(&mut rng, 2 * target + 5)];
+        let (streamed, all_x, all_y) = stream_through(core, &x, &y, &batches, 1);
+        assert!(streamed.m() > m0, "stream must have cut new blocks");
+        assert_eq!(streamed.part.total(), all_x.rows());
+        assert_update_equals_refit(streamed, &all_x, &all_y, &format!("M0={m0} B={b}"));
+    }
+}
+
+#[test]
+fn observe_matches_refit_on_thread_backend() {
+    // The registry path with a threads:2 parallel engine: observes run
+    // the per-block work on the cluster backend's workers; the published
+    // engine's predictions match a centralized refit under the streamed
+    // layout to tight tolerance, and the topology tracks the new M.
+    let mut rng = Pcg64::new(911);
+    let m0 = 4;
+    let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+    let y = sine(&x);
+    let cfg = lma_cfg(m0, 1, 20, 5);
+    let cc = ClusterConfig::gigabit(1, m0).with_backend(BackendKind::Threads { num_threads: 2 });
+    let par = ParallelLma::fit(&x, &y, &hyp(), &cfg, &cc).unwrap();
+    let serve = ServeOptions { batch_size: 4, max_delay_us: 500, ..Default::default() };
+    let reg = ModelRegistry::new(RegistryOptions::default(), &serve);
+    reg.load("par", Arc::new(ServeEngine::Parallel(par))).unwrap();
+
+    let target = BlockPolicy::from_core(reg.get("par").unwrap().engine().core()).target_rows;
+    let k = target + 4; // forces at least one new block
+    let bx = Mat::col_vec(&rng.uniform_vec(k, -4.0, 5.0));
+    let by = sine(&bx);
+    let rows: Vec<Vec<f64>> = (0..k).map(|i| bx.row(i).to_vec()).collect();
+    let out = reg.observe(Some("par"), &rows, &by, false, true).unwrap();
+    assert_eq!(out.generation, 1);
+    assert_eq!(out.applied_rows, k);
+    assert_eq!(out.train_rows, 120 + k);
+
+    let entry = reg.get("par").unwrap();
+    let newc = entry.engine().core();
+    assert!(newc.m() > m0);
+    match entry.engine().as_ref() {
+        ServeEngine::Parallel(p) => {
+            assert_eq!(p.cluster_config().total_cores(), newc.m(), "topology tracks M");
+        }
+        _ => panic!("engine kind must be preserved"),
+    }
+    // Parallel predictions on the streamed model match a from-scratch
+    // centralized refit under the same layout.
+    let mut all_y = y.clone();
+    all_y.extend_from_slice(&by);
+    let all_x = Mat::vstack(&[&x, &bx]).unwrap();
+    let refit = LmaFitCore::fit_with_layout(
+        &all_x,
+        &all_y,
+        &newc.hyp,
+        &newc.cfg,
+        newc.partition.clone(),
+        newc.basis.s_scaled.clone(),
+        1,
+    )
+    .unwrap();
+    let refit_model = LmaRegressor::from_core(refit);
+    let q = Mat::col_vec(&rng.uniform_vec(25, -4.0, 5.0));
+    let pp = entry.engine().predict(&q).unwrap();
+    let pc = refit_model.predict(&q).unwrap();
+    for i in 0..q.rows() {
+        assert!(
+            (pp.mean[i] - pc.mean[i]).abs() < 1e-6,
+            "mean[{i}]: {} vs {}",
+            pp.mean[i],
+            pc.mean[i]
+        );
+        assert!((pp.var[i] - pc.var[i]).abs() < 1e-6, "var[{i}]");
+    }
+    drop(entry);
+    reg.shutdown();
+}
+
+#[test]
+fn concurrent_observe_and_predict_never_torn() {
+    let mut rng = Pcg64::new(921);
+    let x = Mat::col_vec(&rng.uniform_vec(100, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, 1, 16, 7)).unwrap();
+    let serve = ServeOptions { batch_size: 4, max_delay_us: 300, ..Default::default() };
+    let reg = Arc::new(ModelRegistry::new(RegistryOptions::default(), &serve));
+    reg.load("live", Arc::new(ServeEngine::Centralized(model))).unwrap();
+
+    let stop = AtomicBool::new(false);
+    let max_gen_seen = AtomicU64::new(0);
+    let queries: Vec<f64> = (0..8).map(|i| -3.5 + i as f64).collect();
+    std::thread::scope(|s| {
+        // Predictors: every answer must bit-match the engine of the
+        // entry that answered it (same-generation batcher), and observed
+        // generations must be monotone per thread.
+        for w in 0..3usize {
+            let reg = &reg;
+            let stop = &stop;
+            let max_gen_seen = &max_gen_seen;
+            let queries = &queries;
+            s.spawn(move || {
+                let mut last_gen = 0u64;
+                let mut i = w;
+                while !stop.load(Ordering::Relaxed) {
+                    let q = queries[i % queries.len()];
+                    i += 1;
+                    let entry = reg.get("live").expect("model resident");
+                    let gen = entry.generation();
+                    assert!(gen >= last_gen, "generation went backwards: {gen} < {last_gen}");
+                    last_gen = gen;
+                    max_gen_seen.fetch_max(gen, Ordering::Relaxed);
+                    let rep = entry.handle().submit(vec![vec![q]]).expect("predict");
+                    let direct = entry.engine().predict(&Mat::col_vec(&[q])).unwrap();
+                    assert_eq!(
+                        rep.mean[0].to_bits(),
+                        direct.mean[0].to_bits(),
+                        "torn generation: batch answer differs from the entry's engine"
+                    );
+                    assert_eq!(rep.var[0].to_bits(), direct.var[0].to_bits());
+                }
+            });
+        }
+        // Ingester: publish several generations while predicts fly.
+        let mut srng = Pcg64::new(303);
+        for _ in 0..4 {
+            let k = 6;
+            let bx = Mat::col_vec(&srng.uniform_vec(k, -4.0, 4.5));
+            let by = sine(&bx);
+            let rows: Vec<Vec<f64>> = (0..k).map(|i| bx.row(i).to_vec()).collect();
+            reg.observe(Some("live"), &rows, &by, false, true).unwrap();
+        }
+        // Let predictors run against the final generation briefly.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert_eq!(reg.get("live").unwrap().generation(), 4);
+    assert!(max_gen_seen.load(Ordering::Relaxed) >= 1, "predictors saw updated generations");
+    reg.shutdown();
+}
+
+#[test]
+fn http_observe_end_to_end() {
+    let mut rng = Pcg64::new(931);
+    let x = Mat::col_vec(&rng.uniform_vec(96, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(3, 1, 16, 9)).unwrap();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        batch_size: 4,
+        max_delay_us: 500,
+        ..Default::default()
+    };
+    let server = Server::start(ServeEngine::Centralized(model), &opts).unwrap();
+    let addr = server.addr().to_string();
+
+    // Single-row observe publishes generation 1.
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/models/default/observe",
+        Some(&format!(r#"{{"x": [4.5], "y": {}}}"#, 4.5f64.sin())),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize(), Some(1));
+    assert_eq!(j.req("applied_rows").unwrap().as_usize(), Some(1));
+    assert_eq!(j.req("train_rows").unwrap().as_usize(), Some(97));
+    assert!(j.req("touched_blocks").unwrap().as_usize().unwrap() >= 1);
+
+    // Batch observe with buffering, then an explicit flush.
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/models/default/observe",
+        Some(&format!(
+            r#"{{"rows": [[4.6], [4.7]], "y": [{}, {}], "buffer": true}}"#,
+            4.6f64.sin(),
+            4.7f64.sin()
+        )),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize(), Some(1), "buffered: not published");
+    assert_eq!(j.req("buffered_rows").unwrap().as_usize(), Some(2));
+    let (status, body) =
+        http_request(&addr, "POST", "/models/default/observe", Some(r#"{"flush": true}"#))
+            .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize(), Some(2));
+    assert_eq!(j.req("applied_rows").unwrap().as_usize(), Some(2));
+    assert_eq!(j.req("train_rows").unwrap().as_usize(), Some(99));
+
+    // /predict reports the serving generation and answers with the
+    // updated model (bit-match against the resident engine).
+    let (status, body) =
+        http_request(&addr, "POST", "/predict", Some(r#"{"x": [4.55]}"#)).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize(), Some(2));
+    let served_mean = j.req("mean").unwrap().as_f64_vec().unwrap()[0];
+    let entry = server.registry().get("default").unwrap();
+    let direct = entry.engine().predict(&Mat::col_vec(&[4.55])).unwrap();
+    assert_eq!(served_mean.to_bits(), direct.mean[0].to_bits());
+    drop(entry);
+
+    // /models/<name> and /metrics carry the generation + ingest series.
+    let (status, body) = http_request(&addr, "GET", "/models/default", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("generation").unwrap().as_usize(), Some(2));
+    assert_eq!(j.req("observed_rows").unwrap().as_usize(), Some(3));
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(text.contains("pgpr_model_generation{model=\"default\"} 2"), "metrics:\n{text}");
+    assert!(text.contains("pgpr_observe_rows_total"), "metrics:\n{text}");
+    assert!(text.contains("pgpr_observe_update_seconds"), "metrics:\n{text}");
+
+    // Error mapping: unknown model → 404, malformed payloads → 400.
+    let (status, _) = http_request(
+        &addr,
+        "POST",
+        "/models/ghost/observe",
+        Some(r#"{"x": [0.0], "y": 0.0}"#),
+    )
+    .unwrap();
+    assert_eq!(status, 404);
+    for bad in [
+        r#"{"x": [0.0]}"#,                         // missing y
+        r#"{"rows": [[0.0], [1.0]], "y": [0.0]}"#, // length mismatch
+        r#"{"x": [0.0, 1.0], "y": 0.0}"#,          // wrong dim
+        r#"{"x": [0.0], "y": "nope"}"#,            // non-numeric target
+        r#"{}"#,                                   // nothing to do
+        r#"{"x": [0.0], "y": 0.0, "buffer": true, "flush": true}"#,
+    ] {
+        let (status, body) =
+            http_request(&addr, "POST", "/models/default/observe", Some(bad)).unwrap();
+        assert_eq!(status, 400, "payload {bad} → {body}");
+    }
+    // GET on the observe route is not a thing.
+    let (status, _) = http_request(&addr, "GET", "/models/default/observe", None).unwrap();
+    assert_eq!(status, 404);
+
+    server.shutdown();
+}
+
+#[test]
+fn observe_resnapshots_artifacts_incrementally() {
+    let mut rng = Pcg64::new(941);
+    let x = Mat::col_vec(&rng.uniform_vec(100, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, 1, 16, 11)).unwrap();
+    let engine = Arc::new(ServeEngine::Centralized(model));
+    let dir = std::env::temp_dir().join("pgpr_online_resnapshot");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("live.pgpr");
+    let path = path.to_str().unwrap().to_string();
+    artifact::save_engine(&engine, &path).unwrap();
+
+    let serve = ServeOptions { batch_size: 4, max_delay_us: 500, ..Default::default() };
+    let reg = ModelRegistry::new(
+        RegistryOptions { resnapshot: true, ..Default::default() },
+        &serve,
+    );
+    reg.load_from_path("live", Arc::clone(&engine), &path).unwrap();
+
+    let mut total_reused = 0usize;
+    for step in 0..2u64 {
+        let k = 5;
+        let bx = Mat::col_vec(&rng.uniform_vec(k, 3.5, 5.0));
+        let by = sine(&bx);
+        let rows: Vec<Vec<f64>> = (0..k).map(|i| bx.row(i).to_vec()).collect();
+        let out = reg.observe(Some("live"), &rows, &by, false, true).unwrap();
+        assert_eq!(out.generation, step + 1);
+        assert!(out.snapshot_error.is_none(), "snapshot failed: {:?}", out.snapshot_error);
+        let snap = out.snapshot.expect("resnapshot enabled and path known");
+        assert_eq!(snap.path, path);
+        total_reused += snap.reused_bytes;
+        // The rewritten artifact loads and predicts exactly like the
+        // resident generation.
+        let loaded = artifact::load_engine(&path).unwrap();
+        let cur = reg.get("live").unwrap();
+        let q = Mat::col_vec(&[0.25, 4.0]);
+        let a = loaded.predict(&q).unwrap();
+        let b = cur.engine().predict(&q).unwrap();
+        assert_eq!(a.mean[0].to_bits(), b.mean[0].to_bits());
+        assert_eq!(a.var[1].to_bits(), b.var[1].to_bits());
+    }
+    // The second snapshot must have reused untouched-block encodings.
+    assert!(total_reused > 0, "incremental snapshots reused no bytes");
+    reg.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -393,6 +393,7 @@ fn loadgen_drives_the_server_and_reports_quantiles() {
         seed: 9,
         keep_alive: false,
         models: Vec::new(),
+        rate_rps: 0.0,
     })
     .unwrap();
     assert_eq!(report.ok, 40);
