@@ -1,0 +1,209 @@
+//! GEMM microkernel roofline + reduced-precision serve benchmark.
+//!
+//! Part 1 times the packed drivers in `linalg::micro` (GEMM, SYRK, the
+//! Cholesky trailing update) at n ∈ {128, 256, 512} under the scalar
+//! reference tile and the runtime-dispatched SIMD tile, reporting GFLOP/s
+//! for each. On hosts where a SIMD microkernel is compiled in and
+//! supported, the n=512 single-thread GEMM must come out ≥ 1.5× the
+//! scalar tile — the structural evidence that the packed path clears the
+//! autovectorized baseline. Elsewhere (default feature set, or no
+//! AVX2/NEON) the bar is recorded as skipped.
+//!
+//! Part 2 fits a small LMA model and serves the same query batch through
+//! the exact f64 path and the `--f32-u` reduced-precision path, asserting
+//! the predictive-mean agreement budget (mean relative error < 1e-5) that
+//! `pgpr serve --f32-u` promises, and recording both latencies.
+//!
+//! Writes the machine-readable record `BENCH_gemm.json` tracked across
+//! PRs. `PGPR_BENCH_FAST=1` shrinks the measurement windows and the model
+//! fit for the CI smoke run; the roofline sizes stay fixed so records are
+//! comparable across runs.
+
+use pgpr::config::{LmaConfig, PartitionStrategy};
+use pgpr::experiments::common::{quick_hypers, Workload};
+use pgpr::linalg::matrix::Mat;
+use pgpr::linalg::micro::{self, Epilogue};
+use pgpr::lma::LmaRegressor;
+use pgpr::util::bench::{write_json_record, BenchSuite};
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+/// Median seconds for one `gemm_nn` at n×n×n under the given kernel pin.
+fn time_gemm(
+    suite: &mut BenchSuite,
+    name: &str,
+    a: &Mat,
+    b: &Mat,
+    threads: usize,
+    scalar: bool,
+) -> f64 {
+    let n = a.rows();
+    let mut c = vec![0.0f64; n * n];
+    micro::force_scalar(scalar);
+    let res = suite.case(name, || {
+        micro::gemm_nn(a.data(), b.data(), &mut c, n, n, n, threads);
+        std::hint::black_box(c[n * n - 1]);
+    });
+    let median = res.median_s;
+    micro::force_scalar(false);
+    median
+}
+
+fn main() {
+    let fast_mode = std::env::var("PGPR_BENCH_FAST").is_ok();
+    let kernel = micro::active_kernel().name();
+    let simd = micro::simd_available();
+    println!("=== bench: packed GEMM roofline (kernel {kernel}, simd_available {simd}) ===");
+
+    let mut suite = BenchSuite::new("gemm");
+    let mut rng = Pcg64::new(42);
+    let sizes = [128usize, 256, 512];
+    let mut gemm_rows: Vec<Json> = Vec::new();
+    let mut scalar_512 = 0.0f64;
+    let mut active_512 = 0.0f64;
+    for &n in &sizes {
+        let a = Mat::randn(n, n, &mut rng);
+        let b = Mat::randn(n, n, &mut rng);
+        let flops = 2.0 * (n * n * n) as f64;
+        let t_scalar = time_gemm(&mut suite, &format!("gemm_nn/{n}/scalar/t1"), &a, &b, 1, true);
+        let t_active =
+            time_gemm(&mut suite, &format!("gemm_nn/{n}/{kernel}/t1"), &a, &b, 1, false);
+        let t_threads =
+            time_gemm(&mut suite, &format!("gemm_nn/{n}/{kernel}/t4"), &a, &b, 4, false);
+        if n == 512 {
+            scalar_512 = t_scalar;
+            active_512 = t_active;
+        }
+        gemm_rows.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("scalar_gflops", Json::Num(flops / t_scalar / 1e9)),
+            ("active_gflops", Json::Num(flops / t_active / 1e9)),
+            ("active_t4_gflops", Json::Num(flops / t_threads / 1e9)),
+            ("speedup_active_vs_scalar", Json::Num(t_scalar / t_active)),
+        ]));
+    }
+
+    // SYRK (A·Aᵀ upper) and the fused SE-ARD epilogue at the middle size.
+    let n = 256usize;
+    let a = Mat::randn(n, n, &mut rng);
+    let syrk_flops = (n * n * n) as f64; // upper triangle only
+    let mut c = vec![0.0f64; n * n];
+    let syrk_median = suite
+        .case(&format!("syrk_nt_upper/{n}/{kernel}/t1"), || {
+            micro::syrk_nt_upper(a.data(), &mut c, n, n, 1);
+            std::hint::black_box(c[n * n - 1]);
+        })
+        .median_s;
+    let sq: Vec<f64> = (0..n).map(|i| a.row(i).iter().map(|v| v * v).sum::<f64>()).collect();
+    let fused_median = suite
+        .case(&format!("gemm_nt_se_ard/{n}/{kernel}/t1"), || {
+            micro::gemm_nt(
+                a.data(),
+                a.data(),
+                &mut c,
+                n,
+                n,
+                n,
+                1,
+                Epilogue::SeArd { sq1: &sq, sq2: &sq, sigma_s2: 1.3 },
+            );
+            std::hint::black_box(c[n * n - 1]);
+        })
+        .median_s;
+
+    // Cholesky trailing update: the cubic term of the blocked
+    // factorization. The update mutates its buffer, so each iteration
+    // starts from a fresh copy (the memcpy is small next to the flops).
+    let tn = 512usize;
+    let (k0, kb) = (0usize, 256usize);
+    let base = Mat::randn(tn, tn, &mut rng);
+    let tm = (tn - kb) as f64;
+    let chol_flops = tm * (tm + 1.0) * (kb - k0) as f64; // lower triangle, 2 flops/madd
+    let chol_median = suite
+        .case(&format!("chol_trailing/{tn}/{kernel}"), || {
+            let mut work = base.data().to_vec();
+            micro::chol_trailing(&mut work, tn, k0, kb);
+            std::hint::black_box(work[tn * tn - 1]);
+        })
+        .median_s;
+
+    // Part 2: f32 U-side serve mode vs the exact f64 path.
+    let rows = if fast_mode { 600 } else { 2000 };
+    let (m, b, s) = (8usize, 1usize, 48usize);
+    println!("=== f32-u serve mode (N={rows}, M={m}, B={b}, |S|={s}) ===");
+    let ds = Workload::parse("aimpeak").unwrap().generate(rows, 128, 7).unwrap();
+    let hyp = quick_hypers(&ds);
+    let cfg = LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed: 7,
+        partition: PartitionStrategy::KMeans { iters: 8 },
+        use_pjrt: false,
+    };
+    let model = LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg).expect("fit");
+    let batch = ds.test_x.rows_range(0, 64.min(ds.test_x.rows()));
+    let p64 = model.predict(&batch).expect("f64 predict");
+    let p32 = model.predict_f32u(&batch).expect("f32u predict");
+    let scale = p64.mean.iter().fold(1e-12f64, |acc, v| acc.max(v.abs()));
+    let mean_rel_err = p64
+        .mean
+        .iter()
+        .zip(&p32.mean)
+        .map(|(a, b)| (a - b).abs())
+        .sum::<f64>()
+        / (p64.mean.len() as f64 * scale);
+    println!("f32-u mean relative error {mean_rel_err:.3e} (budget 1e-5)");
+
+    let single = ds.test_x.rows_range(0, 1);
+    let f64_median = suite
+        .case("serve/single/f64", || {
+            let p = model.predict(&single).expect("predict");
+            std::hint::black_box(p.mean[0]);
+        })
+        .median_s;
+    let f32u_median = suite
+        .case("serve/single/f32u", || {
+            let p = model.predict_f32u(&single).expect("predict");
+            std::hint::black_box(p.mean[0]);
+        })
+        .median_s;
+    suite.finish();
+
+    let speedup_512 = scalar_512 / active_512;
+    println!(
+        "n=512 single-thread speedup ({kernel} vs scalar): {speedup_512:.2}x{}",
+        if simd { "" } else { " [simd bar skipped: scalar-only build or host]" }
+    );
+
+    let record = Json::obj(vec![
+        ("bench", Json::Str("gemm".into())),
+        ("kernel", Json::Str(kernel.into())),
+        ("simd_available", Json::Bool(simd)),
+        ("fast_mode", Json::Bool(fast_mode)),
+        ("gemm", Json::Arr(gemm_rows)),
+        ("speedup_512_active_vs_scalar", Json::Num(speedup_512)),
+        ("simd_bar_enforced", Json::Bool(simd)),
+        ("syrk_nt_256_gflops", Json::Num(syrk_flops / syrk_median / 1e9)),
+        ("gemm_nt_se_ard_256_gflops", Json::Num(2.0 * (n * n * n) as f64 / fused_median / 1e9)),
+        ("chol_trailing_512_gflops", Json::Num(chol_flops / chol_median / 1e9)),
+        ("f32u_mean_rel_err", Json::Num(mean_rel_err)),
+        ("serve_single_f64_us", Json::Num(f64_median * 1e6)),
+        ("serve_single_f32u_us", Json::Num(f32u_median * 1e6)),
+    ]);
+    // Persist before enforcing the bars so a failing run still leaves the
+    // numbers behind for diagnosis.
+    write_json_record("BENCH_gemm.json", &record).expect("write record");
+    println!("wrote BENCH_gemm.json");
+
+    assert!(
+        mean_rel_err < 1e-5,
+        "f32-u predictive mean diverged: mean relative error {mean_rel_err:.3e} ≥ 1e-5"
+    );
+    if simd {
+        assert!(
+            speedup_512 >= 1.5,
+            "SIMD microkernel ({kernel}) only {speedup_512:.2}x over scalar at n=512 (bar: 1.5x)"
+        );
+    }
+}

@@ -146,6 +146,12 @@ pub struct ServeOptions {
     /// Requests served on one connection before it is closed (bounds how
     /// long a single client can monopolize a connection worker).
     pub max_conn_requests: usize,
+    /// Serve predictions through the reduced-precision f32 U-side path
+    /// (`PredictMode::F32U`): one-time f32 copies of the context tensors,
+    /// f64 accumulation, predictive mean within 1e-5 relative of the f64
+    /// path. Centralized engines only — parallel engines keep serving the
+    /// exact f64 path regardless.
+    pub f32_u: bool,
 }
 
 impl Default for ServeOptions {
@@ -159,6 +165,7 @@ impl Default for ServeOptions {
             keep_alive: true,
             idle_timeout_ms: 5000,
             max_conn_requests: 1000,
+            f32_u: false,
         }
     }
 }
@@ -192,6 +199,7 @@ impl ServeOptions {
             ("keep_alive", Json::Bool(self.keep_alive)),
             ("idle_timeout_ms", Json::Num(self.idle_timeout_ms as f64)),
             ("max_conn_requests", Json::Num(self.max_conn_requests as f64)),
+            ("f32_u", Json::Bool(self.f32_u)),
         ])
     }
 
@@ -225,6 +233,7 @@ impl ServeOptions {
                 .get("max_conn_requests")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.max_conn_requests),
+            f32_u: j.get("f32_u").and_then(|v| v.as_bool()).unwrap_or(d.f32_u),
         })
     }
 }
@@ -522,6 +531,7 @@ mod tests {
             keep_alive: false,
             idle_timeout_ms: 250,
             max_conn_requests: 16,
+            f32_u: true,
         };
         assert!(o.validate().is_ok());
         let parsed = Json::parse(&o.to_json().to_string()).unwrap();

@@ -10,7 +10,7 @@ use crate::config::{
 use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
 use crate::lma::parallel::ParallelLma;
-use crate::lma::LmaRegressor;
+use crate::lma::{LmaRegressor, PredictMode};
 use crate::registry::{artifact, ModelRegistry};
 use crate::server::http::Server;
 use crate::server::loadgen;
@@ -374,8 +374,19 @@ fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     // deadline is always already expired, so partial batches flush at
     // the first opportunity).
     let backend = engine.backend_name();
+    let mode = if c.opts.f32_u {
+        if matches!(engine, ServeEngine::Parallel(_)) {
+            eprintln!(
+                "--f32-u: cluster backends have no f32 context; serving the exact f64 path"
+            );
+        }
+        PredictMode::F32U
+    } else {
+        PredictMode::F64
+    };
     let mut svc = PredictionService::with_engine(engine, c.opts.batch_size)?
-        .with_max_delay(Duration::from_micros(c.opts.max_delay_us));
+        .with_max_delay(Duration::from_micros(c.opts.max_delay_us))
+        .with_predict_mode(mode);
     eprintln!(
         "serving {} (dim {}, batch {}, backend {}); protocol: `predict v1,v2,...` | `flush` | EOF",
         name,
@@ -953,6 +964,12 @@ pub fn dispatch() -> Result<()> {
                     "resnapshot",
                     "rewrite a model's artifact in place after each published online update",
                 )
+                .switch(
+                    "f32-u",
+                    "reduced-precision serve: f32 U-side context tensors with f64 \
+                     accumulation (mean within 1e-5 relative of the f64 path; \
+                     centralized engines only)",
+                )
                 .parse_from(rest)?;
             let opts = ServeOptions {
                 listen: a.get("listen"),
@@ -963,6 +980,7 @@ pub fn dispatch() -> Result<()> {
                 keep_alive: !a.get_bool("no-keepalive"),
                 idle_timeout_ms: a.get_usize("idle-timeout-ms") as u64,
                 max_conn_requests: a.get_usize("max-conn-requests"),
+                f32_u: a.get_bool("f32-u"),
             };
             cmd_serve(&ServeCmd {
                 dataset: a.get("dataset"),

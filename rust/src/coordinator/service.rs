@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use crate::gp::Prediction;
 use crate::linalg::matrix::Mat;
 use crate::lma::context::PredictScratch;
+use crate::lma::f32u::PredictMode;
 use crate::lma::parallel::ParallelLma;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::LmaRegressor;
@@ -66,6 +67,22 @@ impl ServeEngine {
     ) -> Result<Prediction> {
         match self {
             ServeEngine::Centralized(m) => m.predict_with_scratch(x, scratch),
+            ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
+        }
+    }
+
+    /// [`predict_with_scratch`](Self::predict_with_scratch) in an explicit
+    /// [`PredictMode`]. Parallel engines have no f32 context — they serve
+    /// the exact f64 path regardless of the requested mode (documented
+    /// fallback; the CLI warns when `--f32-u` meets a cluster backend).
+    pub fn predict_with_mode(
+        &self,
+        x: &Mat,
+        mode: PredictMode,
+        scratch: &mut PredictScratch,
+    ) -> Result<Prediction> {
+        match self {
+            ServeEngine::Centralized(m) => m.predict_with_mode(x, mode, scratch),
             ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
         }
     }
@@ -168,6 +185,9 @@ pub struct PredictionService {
     /// (the batcher / stdin loop), so steady-state batches recycle the
     /// per-call buffers instead of reallocating them.
     scratch: PredictScratch,
+    /// Arithmetic mode batches are answered in (`--f32-u` opts into
+    /// [`PredictMode::F32U`]; default is the exact f64 path).
+    mode: PredictMode,
     /// Serving statistics (kept as plain fields for back-compat).
     pub served: usize,
     pub batches: usize,
@@ -212,6 +232,7 @@ impl PredictionService {
             queue: Vec::new(),
             metrics,
             scratch: PredictScratch::new(),
+            mode: PredictMode::F64,
             served: 0,
             batches: 0,
             total_latency: 0.0,
@@ -230,6 +251,17 @@ impl PredictionService {
 
     pub fn max_delay(&self) -> Option<Duration> {
         self.max_delay
+    }
+
+    /// Builder-style predict mode (`--f32-u` passes
+    /// [`PredictMode::F32U`]).
+    pub fn with_predict_mode(mut self, mode: PredictMode) -> PredictionService {
+        self.mode = mode;
+        self
+    }
+
+    pub fn predict_mode(&self) -> PredictMode {
+        self.mode
     }
 
     /// Shared metrics handle (same object the service records into).
@@ -306,7 +338,8 @@ impl PredictionService {
             x.row_mut(i).copy_from_slice(&req.x);
         }
         let engine = Arc::clone(&self.engine);
-        let (pred, secs) = time_it(|| engine.predict_with_scratch(&x, &mut self.scratch));
+        let (pred, secs) =
+            time_it(|| engine.predict_with_mode(&x, self.mode, &mut self.scratch));
         let pred: Prediction = pred?;
         self.predict_secs += secs;
         self.batches += 1;
@@ -455,6 +488,29 @@ mod tests {
         let out = s.submit(Request { id: 2, x: vec![1.0] }).unwrap();
         assert_eq!(out.len(), 2);
         assert!((out[0].mean - 0.5f64.sin()).abs() < 0.3);
+    }
+
+    #[test]
+    fn f32u_mode_serves_within_mean_budget() {
+        // Same deterministic model, served in both modes: the reduced-
+        // precision answers stay within the 1e-5 relative mean budget.
+        let mut exact = service(2);
+        let mut reduced = service(2).with_predict_mode(PredictMode::F32U);
+        assert_eq!(exact.predict_mode(), PredictMode::F64);
+        assert_eq!(reduced.predict_mode(), PredictMode::F32U);
+        let xs = [0.4, -1.2, 2.1, -0.3];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for (i, &x) in xs.iter().enumerate() {
+            a.extend(exact.submit(Request { id: i as u64, x: vec![x] }).unwrap());
+            b.extend(reduced.submit(Request { id: i as u64, x: vec![x] }).unwrap());
+        }
+        assert_eq!(a.len(), 4);
+        assert_eq!(b.len(), 4);
+        for (e, r) in a.iter().zip(&b) {
+            assert!((e.mean - r.mean).abs() < 1e-5, "{} vs {}", e.mean, r.mean);
+            assert!((e.var - r.var).abs() < 1e-4);
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 
 use crate::linalg::gemm;
 use crate::linalg::matrix::{Mat, MatView};
+use crate::linalg::micro;
 use crate::util::error::{PgprError, Result};
 
 /// Hyperparameters of the SE-ARD kernel.
@@ -126,11 +127,10 @@ pub fn cov_cross_scaled_view_into(
 ) -> Result<()> {
     let n1 = s1.rows();
     let n2 = s2.rows();
+    let d = s1.cols();
     // ‖x‖² per row.
     let sq1: Vec<f64> = (0..n1).map(|i| gemm::dot(s1.row(i), s1.row(i))).collect();
     let sq2: Vec<f64> = (0..n2).map(|i| gemm::dot(s2.row(i), s2.row(i))).collect();
-    // G = S1 · S2ᵀ through the GEMM kernel.
-    gemm::matmul_nt_into(s1, s2, g)?;
     let threads = {
         let t = crate::util::par::num_threads();
         if t <= 1 || n1 < 8 || n1 * n2 < (1 << 16) || crate::util::par::in_worker() {
@@ -139,6 +139,25 @@ pub fn cov_cross_scaled_view_into(
             t.min(n1)
         }
     };
+    // Fused path for large blocks: the packed Gram product applies the
+    // norms + −½d² + exp epilogue per cache-resident C tile as it stores
+    // — one pass over the output instead of GEMM-then-sweep.
+    if d == s2.cols() && n1 * n2 * d >= micro::PACK_MIN_FLOPS {
+        g.reset(n1, n2);
+        micro::gemm_nt(
+            s1.data(),
+            s2.data(),
+            g.data_mut(),
+            n1,
+            d,
+            n2,
+            threads,
+            micro::Epilogue::SeArd { sq1: &sq1, sq2: &sq2, sigma_s2 },
+        );
+        return Ok(());
+    }
+    // G = S1 · S2ᵀ through the GEMM kernel.
+    gemm::matmul_nt_into(s1, s2, g)?;
     let gd = g.data_mut();
     if threads <= 1 {
         exp_rows(gd, &sq1, &sq2, sigma_s2, 0, n1, n2);
@@ -173,24 +192,70 @@ pub fn cov_sym(x: &Mat, hyp: &SeArdHyper) -> Result<Mat> {
     cov_sym_scaled(&s, hyp.sigma_s2, hyp.sigma_n2)
 }
 
-/// Symmetric covariance from pre-scaled inputs.
+/// Symmetric covariance from pre-scaled inputs. The upper-triangle exp
+/// epilogue splits output rows across the `util::par` worker pool for
+/// large blocks (like [`cov_cross_scaled`]; bit-identical to sequential),
+/// with the triangular mirror applied after the sweep.
 pub fn cov_sym_scaled(s: &Mat, sigma_s2: f64, sigma_n2: f64) -> Result<Mat> {
     let n = s.rows();
     let sq: Vec<f64> = (0..n).map(|i| gemm::dot(s.row(i), s.row(i))).collect();
     let mut g = gemm::syrk_nt(s);
+    let threads = {
+        let t = crate::util::par::num_threads();
+        if t <= 1 || n < 8 || n * n < (1 << 16) || crate::util::par::in_worker() {
+            1
+        } else {
+            t.min(n)
+        }
+    };
+    {
+        let gd = g.data_mut();
+        if threads <= 1 {
+            exp_rows_sym(gd, &sq, sigma_s2, sigma_n2, 0, n, n);
+        } else {
+            let per = (n + threads - 1) / threads;
+            let sq_ref = &sq;
+            crate::util::par::run_row_chunks(gd, n, n, per, move |chunk, lo, hi| {
+                exp_rows_sym(chunk, sq_ref, sigma_s2, sigma_n2, lo, hi, n)
+            });
+        }
+    }
+    // Mirror upper → lower after the (possibly parallel) sweep.
     let gd = g.data_mut();
     for i in 0..n {
-        for j in i..n {
-            let e = (-0.5 * (sq[i] + sq[j]) + gd[i * n + j]).min(0.0);
-            let mut v = sigma_s2 * e.exp();
-            if i == j {
-                v += sigma_n2;
-            }
-            gd[i * n + j] = v;
-            gd[j * n + i] = v;
+        for j in (i + 1)..n {
+            gd[j * n + i] = gd[i * n + j];
         }
     }
     Ok(g)
+}
+
+/// Upper-triangle (j ≥ i) exp epilogue over rows `i0..i1` of the Gram
+/// product (chunk-local `gd`), adding the σ_n² noise on the diagonal.
+/// The lower triangle is left for the caller to mirror.
+fn exp_rows_sym(
+    gd: &mut [f64],
+    sq: &[f64],
+    sigma_s2: f64,
+    sigma_n2: f64,
+    i0: usize,
+    i1: usize,
+    n: usize,
+) {
+    for r in 0..(i1 - i0) {
+        let i = i0 + r;
+        let qi = sq[i];
+        let row = &mut gd[r * n + i..(r + 1) * n];
+        for (off, v) in row.iter_mut().enumerate() {
+            let j = i + off;
+            let e = (-0.5 * (qi + sq[j]) + *v).min(0.0);
+            let mut val = sigma_s2 * e.exp();
+            if j == i {
+                val += sigma_n2;
+            }
+            *v = val;
+        }
+    }
 }
 
 /// Prior variance of a single input (σ_s² + σ_n²) — the diagonal of Σ_UU
@@ -295,6 +360,48 @@ mod tests {
         let want = cov_cross_scaled(&a.rows_range(4, 17), &b.rows_range(1, 12), 1.7).unwrap();
         let got = cov_cross_scaled_view(a.rows_view(4, 17), b.rows_view(1, 12), 1.7).unwrap();
         assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn fused_epilogue_path_matches_scalar_reference() {
+        // Large enough that the packed fused Gram+exp path engages
+        // (n1·n2·d ≥ PACK_MIN_FLOPS); verify against the scalar formula.
+        let mut rng = Pcg64::new(66);
+        let (n1, n2, d) = (310, 300, 24);
+        assert!(n1 * n2 * d >= crate::linalg::micro::PACK_MIN_FLOPS);
+        let hyp = SeArdHyper::isotropic(d, 1.3, 1.2, 0.0);
+        let x1 = Mat::randn(n1, d, &mut rng);
+        let x2 = Mat::randn(n2, d, &mut rng);
+        let k = cov_cross(&x1, &x2, &hyp).unwrap();
+        for &(i, j) in &[(0, 0), (1, 7), (117, 203), (n1 - 1, n2 - 1), (200, 5)] {
+            let want = cov_scalar(x1.row(i), x2.row(j), &hyp);
+            let got = k.get(i, j);
+            assert!(
+                (got - want).abs() < 1e-11 * (1.0 + want.abs()),
+                "({i},{j}): {got} vs {want}"
+            );
+        }
+        // And the fused path is invariant to the worker count.
+        let s1 = scale_inputs(&x1, &hyp).unwrap();
+        let s2 = scale_inputs(&x2, &hyp).unwrap();
+        let seq = cov_cross_scaled(&s1, &s2, hyp.sigma_s2).unwrap();
+        crate::util::par::set_num_threads(4);
+        let par = cov_cross_scaled(&s1, &s2, hyp.sigma_s2).unwrap();
+        crate::util::par::set_num_threads(1);
+        assert_eq!(seq.data(), par.data());
+    }
+
+    #[test]
+    fn sym_epilogue_threading_is_bit_identical() {
+        let mut rng = Pcg64::new(67);
+        let n = 260; // n² ≥ 1<<16 so the row-chunk split engages
+        let s = Mat::randn(n, 3, &mut rng);
+        let seq = cov_sym_scaled(&s, 1.4, 0.07).unwrap();
+        crate::util::par::set_num_threads(4);
+        let par = cov_sym_scaled(&s, 1.4, 0.07).unwrap();
+        crate::util::par::set_num_threads(1);
+        assert_eq!(seq.data(), par.data());
+        assert!(seq.max_abs_diff(&seq.transpose()) == 0.0);
     }
 
     #[test]

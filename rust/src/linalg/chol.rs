@@ -123,6 +123,15 @@ pub fn cholesky(a: &Mat) -> Result<CholFactor> {
             }
         }
         // --- trailing update: A[kb.., kb..] -= L[kb.., k0..kb] · L[kb.., k0..kb]ᵀ ---
+        // The cubic term. Large trailing blocks route through the packed
+        // register-tile microkernel (linalg::micro, SIMD-dispatched);
+        // small ones keep the 4-way dot panel loop below.
+        let m2 = n - kb;
+        if m2 * m2 * (kb - k0) >= crate::linalg::micro::PACK_MIN_FLOPS {
+            crate::linalg::micro::chol_trailing(ld, n, k0, kb);
+            k0 = kb;
+            continue;
+        }
         // Row-wise: for i in kb..n, for j in kb..=i: a[i,j] -= dot(Lrow_i_panel, Lrow_j_panel)
         let mut rowi_panel = vec![0.0; kb - k0];
         for i in kb..n {
@@ -470,5 +479,27 @@ mod tests {
         let f = cholesky(&a).unwrap();
         assert_eq!(f.l().get(0, 0), 2.0);
         assert_eq!(f.solve_vec(&[8.0]).unwrap(), vec![2.0]);
+    }
+
+    #[test]
+    fn packed_trailing_update_reconstructs() {
+        // n large enough that the first trailing updates cross
+        // PACK_MIN_FLOPS and run through the packed microkernel, while the
+        // later (smaller) panels fall back to the dot4 loop — the mixed
+        // path must still reconstruct A = L·Lᵀ.
+        let mut rng = Pcg64::new(28);
+        let n = 280;
+        assert!((n - 64) * (n - 64) * 64 >= crate::linalg::micro::PACK_MIN_FLOPS);
+        let a = spd(&mut rng, n);
+        let f = cholesky(&a).unwrap();
+        let rec = f.l().matmul_t(f.l()).unwrap();
+        let scale = a.max_abs().max(1.0);
+        assert!(rec.max_abs_diff(&a) < 1e-9 * scale);
+        // Strict upper triangle stays clean.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(f.l().get(i, j), 0.0);
+            }
+        }
     }
 }

@@ -1,0 +1,277 @@
+//! Reduced-precision (f32) matrix storage with f64 accumulation — the
+//! substrate of the opt-in `--f32-u` serve mode.
+//!
+//! The serve hot path is memory-bound on the context tensors (the
+//! whitened rows, propagators and Definition-1 half-solves), so storing a
+//! one-time f32 copy halves the bytes streamed per query. Every kernel in
+//! this module keeps the *accumulator* in f64: each product term rounds
+//! its f32 operands up to f64 before the multiply, so the only error
+//! source is the one-time storage rounding (≈1.2e-7 relative per entry),
+//! not compounding summation error. `rust/src/lma/f32u.rs` builds the
+//! reduced-precision predict pipeline on these kernels; the predictive
+//! mean stays within the 1e-5 relative budget asserted by its tests and
+//! `bench_gemm`.
+//!
+//! The default f64 path never touches this module — it exists strictly
+//! behind `PredictMode::F32U`.
+
+use crate::linalg::matrix::{Mat, MatView};
+
+/// Row-major f32 matrix (storage only — all arithmetic on it happens in
+/// f64 inside the kernels below).
+#[derive(Clone, Debug)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF32 {
+        MatF32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// One-time rounding of an f64 matrix to f32 storage.
+    pub fn from_mat(m: &Mat) -> MatF32 {
+        MatF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.data().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// One-time rounding of an f64 row-range view to f32 storage.
+    pub fn from_view(v: MatView<'_>) -> MatF32 {
+        MatF32 {
+            rows: v.rows(),
+            cols: v.cols(),
+            data: v.data().iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Storage footprint in bytes (README's memory-cost note).
+    pub fn bytes(&self) -> usize {
+        4 * self.data.len()
+    }
+}
+
+/// C = A·Bᵀ with f64 accumulation (A: m×k, B: n×k) → m×n in f64.
+pub fn matmul_nt_acc(a: &MatF32, b: &MatF32) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt_acc: inner dims");
+    let (m, n) = (a.rows(), b.rows());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let ar = a.row(i);
+        let cr = c.row_mut(i);
+        for (j, cv) in cr.iter_mut().enumerate() {
+            let br = b.row(j);
+            let mut acc = 0.0f64;
+            for (&x, &y) in ar.iter().zip(br) {
+                acc += x as f64 * y as f64;
+            }
+            *cv = acc;
+        }
+    }
+    c
+}
+
+/// C = A·B with f64 accumulation (A: m×k, B: k×n) → m×n in f64.
+pub fn matmul_acc(a: &MatF32, b: &MatF32) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul_acc: inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let ar = a.row(i);
+        let cr = c.row_mut(i);
+        for (t, &aik) in ar.iter().enumerate().take(k) {
+            let aik = aik as f64;
+            let br = b.row(t);
+            for (cv, &bv) in cr.iter_mut().zip(br) {
+                *cv += aik * bv as f64;
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ·B with A in f64 (r×m) and B in f32 (r×n) → m×n in f64. Used
+/// where a freshly-computed f64 intermediate (vu) meets a stored f32
+/// context tensor (vs_m, vy_m).
+pub fn matmul_tn_mixed(a: &Mat, b: &MatF32) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn_mixed: inner dims");
+    let (r, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(m, n);
+    for t in 0..r {
+        let ar = a.row(t);
+        let br = b.row(t);
+        for (i, &av) in ar.iter().enumerate().take(m) {
+            let cr = c.row_mut(i);
+            for (cv, &bv) in cr.iter_mut().zip(br) {
+                *cv += av * bv as f64;
+            }
+        }
+    }
+    c
+}
+
+/// Solve L·X = B by forward substitution with an f32 lower-triangular
+/// factor and f64 right-hand side / working rows. The per-row recurrence
+/// runs entirely in f64; only the L entries are read rounded.
+pub fn forward_sub_f32(l: &MatF32, b: &Mat) -> Mat {
+    let n = l.rows();
+    assert_eq!(l.cols(), n, "forward_sub_f32: L must be square");
+    assert_eq!(b.rows(), n, "forward_sub_f32: rhs rows");
+    let c = b.cols();
+    let mut x = Mat::zeros(n, c);
+    for i in 0..n {
+        let li = l.row(i);
+        let (done, rest) = x.data_mut().split_at_mut(i * c);
+        let xi = &mut rest[..c];
+        xi.copy_from_slice(b.row(i));
+        for (k, &lik) in li.iter().enumerate().take(i) {
+            if lik != 0.0 {
+                let lik = lik as f64;
+                let xk = &done[k * c..(k + 1) * c];
+                for (xv, &kv) in xi.iter_mut().zip(xk) {
+                    *xv -= lik * kv;
+                }
+            }
+        }
+        let d = li[i] as f64;
+        for xv in xi.iter_mut() {
+            *xv /= d;
+        }
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::util::proptest::{assert_close, for_cases, gen_size, gen_vec};
+
+    fn to_f64(m: &MatF32) -> Mat {
+        Mat::from_fn(m.rows(), m.cols(), |i, j| m.get(i, j) as f64)
+    }
+
+    #[test]
+    fn f32_products_track_f64_reference_over_shape_grid() {
+        // Satellite: f32-storage/f64-accumulation kernels vs the f64 gemm
+        // reference, over shapes exercising remainders and tiny dims. The
+        // reference runs on the *rounded* operands, so the only allowed
+        // difference is summation-order noise — far below 1e-10.
+        for_cases(0xF32A, 24, |rng| {
+            let m = gen_size(rng, 1, 9);
+            let k = gen_size(rng, 1, 17);
+            let n = gen_size(rng, 1, 9);
+            let a = MatF32::from_mat(&Mat::from_vec(m, k, gen_vec(rng, m * k, 2.0)));
+            let b = MatF32::from_mat(&Mat::from_vec(n, k, gen_vec(rng, n * k, 2.0)));
+            let got = matmul_nt_acc(&a, &b);
+            let want = gemm::matmul_nt(&to_f64(&a), &to_f64(&b)).unwrap();
+            assert_close(got.data(), want.data(), 1e-10);
+            let b2 = MatF32::from_mat(&Mat::from_vec(k, n, gen_vec(rng, k * n, 2.0)));
+            let got2 = matmul_acc(&a, &b2);
+            let want2 = to_f64(&a).matmul(&to_f64(&b2)).unwrap();
+            assert_close(got2.data(), want2.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn mixed_tn_product_matches_f64_reference() {
+        for_cases(0xF32B, 16, |rng| {
+            let r = gen_size(rng, 1, 14);
+            let m = gen_size(rng, 1, 7);
+            let n = gen_size(rng, 1, 7);
+            let a = Mat::from_vec(r, m, gen_vec(rng, r * m, 1.5));
+            let b = MatF32::from_mat(&Mat::from_vec(r, n, gen_vec(rng, r * n, 1.5)));
+            let got = matmul_tn_mixed(&a, &b);
+            let want = a.t_matmul(&to_f64(&b)).unwrap();
+            assert_close(got.data(), want.data(), 1e-10);
+        });
+    }
+
+    #[test]
+    fn forward_sub_f32_matches_f64_solve_on_rounded_factor() {
+        // With the SAME rounded L fed to both, the f32-storage solve and a
+        // plain f64 forward solve perform identical f64 arithmetic.
+        for_cases(0xF32C, 12, |rng| {
+            let n = gen_size(rng, 1, 12);
+            let c = gen_size(rng, 1, 5);
+            let mut lf = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..=i {
+                    let v = if i == j {
+                        1.0 + rng.uniform_in(0.0, 1.0)
+                    } else {
+                        rng.uniform_in(-0.4, 0.4)
+                    };
+                    lf.set(i, j, v);
+                }
+            }
+            let l32 = MatF32::from_mat(&lf);
+            let b = Mat::from_vec(n, c, gen_vec(rng, n * c, 1.0));
+            let got = forward_sub_f32(&l32, &b);
+            // Reference: same recurrence in f64 on the rounded entries.
+            let lr = to_f64(&l32);
+            let mut want = Mat::zeros(n, c);
+            for i in 0..n {
+                for j in 0..c {
+                    let mut v = b.get(i, j);
+                    for k in 0..i {
+                        v -= lr.get(i, k) * want.get(k, j);
+                    }
+                    want.set(i, j, v / lr.get(i, i));
+                }
+            }
+            assert_eq!(got.data(), want.data());
+        });
+    }
+
+    #[test]
+    fn zero_sized_dims_are_safe() {
+        let e = MatF32::zeros(0, 5);
+        let f = MatF32::zeros(3, 0);
+        assert_eq!(matmul_nt_acc(&f, &MatF32::zeros(2, 0)).rows(), 3);
+        assert_eq!(matmul_acc(&e, &MatF32::zeros(5, 2)).rows(), 0);
+        assert_eq!(matmul_tn_mixed(&Mat::zeros(0, 3), &e).cols(), 5);
+        let x = forward_sub_f32(&MatF32::zeros(0, 0), &Mat::zeros(0, 4));
+        assert_eq!(x.cols(), 4);
+        assert!(x.is_empty());
+    }
+
+    #[test]
+    fn storage_rounding_error_is_f32_scale() {
+        // A full f64 → f32 → product round trip lands near the operand
+        // rounding floor, nowhere near the f32-accumulation floor.
+        let mut rng = crate::util::rng::Pcg64::new(0xF32D);
+        let a64 = Mat::from_vec(20, 40, gen_vec(&mut rng, 800, 1.0));
+        let b64 = Mat::from_vec(20, 40, gen_vec(&mut rng, 800, 1.0));
+        let exact = gemm::matmul_nt(&a64, &b64).unwrap();
+        let rounded = matmul_nt_acc(&MatF32::from_mat(&a64), &MatF32::from_mat(&b64));
+        let scale = exact.max_abs().max(1.0);
+        let diff = rounded.max_abs_diff(&exact);
+        assert!(diff / scale < 1e-5, "rounding error {diff} vs scale {scale}");
+        assert!(rounded.max_abs_diff(&exact) > 0.0, "rounding must actually occur");
+    }
+}

@@ -21,6 +21,7 @@
 //! the backend-equivalence tests rely on.
 
 use crate::linalg::matrix::{Mat, MatView};
+use crate::linalg::micro;
 use crate::util::error::{shape_err, Result};
 use crate::util::par::run_row_chunks;
 
@@ -72,6 +73,12 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     let ad = a.data();
     let bd = b.data();
     let threads = plan_threads(m, m * k * n);
+    // Large products go through the packed register-tile microkernels
+    // (linalg::micro); small ones keep the allocation-free blocked kernel.
+    if m * k * n >= micro::PACK_MIN_FLOPS {
+        micro::gemm_nn(ad, bd, c.data_mut(), m, k, n, threads);
+        return Ok(());
+    }
     if threads <= 1 {
         matmul_rows(c.data_mut(), ad, bd, k, n, 0, m);
         return Ok(());
@@ -169,9 +176,16 @@ pub fn matmul_tn_into(a: &Mat, b: &Mat, c: &mut Mat) -> Result<()> {
     if m == 0 || k == 0 || n == 0 {
         return Ok(());
     }
-    let cd = c.data_mut();
     let ad = a.data();
     let bd = b.data();
+    // Large products go through the packed microkernels (and gain the row
+    // split the rank-1 kernel below never had); small ones keep it.
+    if m * k * n >= micro::PACK_MIN_FLOPS {
+        let threads = plan_threads(m, m * k * n);
+        micro::gemm_tn(ad, bd, c.data_mut(), k, m, n, threads);
+        return Ok(());
+    }
+    let cd = c.data_mut();
     for kb in (0..k).step_by(KC) {
         let kend = (kb + KC).min(k);
         for jb in (0..n).step_by(NC) {
@@ -240,6 +254,10 @@ fn matmul_nt_view_run(a: MatView<'_>, b: MatView<'_>, c: &mut Mat) -> Result<()>
     let ad = a.data();
     let bd = b.data();
     let threads = plan_threads(m, m * k * n);
+    if m * k * n >= micro::PACK_MIN_FLOPS {
+        micro::gemm_nt(ad, bd, c.data_mut(), m, k, n, threads, micro::Epilogue::None);
+        return Ok(());
+    }
     if threads <= 1 {
         matmul_nt_rows(c.data_mut(), ad, bd, k, n, 0, m);
         return Ok(());
@@ -348,7 +366,9 @@ pub fn syrk_tn(a: &Mat) -> Mat {
     }
     let ad = a.data();
     let threads = plan_threads(m, k * m * m / 2);
-    if threads <= 1 {
+    if k * m * m / 2 >= micro::PACK_MIN_FLOPS {
+        micro::syrk_tn_upper(ad, c.data_mut(), k, m, threads);
+    } else if threads <= 1 {
         syrk_tn_rows(c.data_mut(), ad, k, m, 0, m);
     } else {
         let per = (m + threads - 1) / threads;
@@ -389,19 +409,64 @@ fn syrk_tn_rows(cd: &mut [f64], ad: &[f64], k: usize, m: usize, i0: usize, i1: u
     }
 }
 
-/// Symmetric rank-k: C = A·Aᵀ (n = A.rows).
+/// Symmetric rank-k: C = A·Aᵀ (n = A.rows). Blocked over the upper
+/// triangle with output rows split across `util::par` (row dots are
+/// independent, so the split is bit-identical to sequential), mirrored to
+/// the lower triangle afterwards; large blocks route through the packed
+/// microkernels.
 pub fn syrk_nt(a: &Mat) -> Mat {
     let (n, k) = (a.rows(), a.cols());
     let mut c = Mat::zeros(n, n);
+    if n == 0 || k == 0 {
+        return c;
+    }
     let ad = a.data();
+    let threads = plan_threads(n, n * n * k / 2);
+    if n * n * k / 2 >= micro::PACK_MIN_FLOPS {
+        micro::syrk_nt_upper(ad, c.data_mut(), n, k, threads);
+    } else if threads <= 1 {
+        syrk_nt_rows(c.data_mut(), ad, k, n, 0, n);
+    } else {
+        let per = (n + threads - 1) / threads;
+        run_row_chunks(c.data_mut(), n, n, per, move |chunk, lo, hi| {
+            syrk_nt_rows(chunk, ad, k, n, lo, hi)
+        });
+    }
+    // Mirror upper → lower.
+    let cd = c.data_mut();
     for i in 0..n {
-        for j in i..n {
-            let v = dot(&ad[i * k..(i + 1) * k], &ad[j * k..(j + 1) * k]);
-            c.set(i, j, v);
-            c.set(j, i, v);
+        for j in (i + 1)..n {
+            cd[j * n + i] = cd[i * n + j];
         }
     }
     c
+}
+
+/// Upper-triangle NT SYRK over output rows `i0..i1` (each row's dot
+/// products are independent, so row splits are bit-identical). Uses the
+/// 4-way register-blocked dot kernel like [`matmul_nt`].
+fn syrk_nt_rows(cd: &mut [f64], ad: &[f64], k: usize, n: usize, i0: usize, i1: usize) {
+    for r in 0..(i1 - i0) {
+        let i = i0 + r;
+        let arow = &ad[i * k..(i + 1) * k];
+        let crow = &mut cd[r * n..(r + 1) * n];
+        let mut j = i;
+        while j + 4 <= n {
+            let out = dot4(
+                arow,
+                &ad[j * k..(j + 1) * k],
+                &ad[(j + 1) * k..(j + 2) * k],
+                &ad[(j + 2) * k..(j + 3) * k],
+                &ad[(j + 3) * k..(j + 4) * k],
+            );
+            crow[j..j + 4].copy_from_slice(&out);
+            j += 4;
+        }
+        while j < n {
+            crow[j] = dot(arow, &ad[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
 }
 
 /// Weighted inner product xᵀ·M·y (no temporaries).
@@ -580,5 +645,50 @@ mod tests {
         assert_eq!(seq_mm.data(), par_mm.data());
         assert_eq!(seq_nt.data(), par_nt.data());
         assert_eq!(seq_syrk.data(), par_syrk.data());
+    }
+
+    #[test]
+    fn syrk_nt_threading_is_bit_identical_and_blocked() {
+        // The blocked upper-triangle rewrite must match the mirrored
+        // definition and be invariant to the worker count.
+        let mut rng = Pcg64::new(19);
+        let a = Mat::randn(260, 170, &mut rng); // above PAR_MIN_FLOPS
+        let seq = syrk_nt(&a);
+        crate::util::par::set_num_threads(4);
+        let par = syrk_nt(&a);
+        crate::util::par::set_num_threads(1);
+        assert_eq!(seq.data(), par.data());
+        assert!(seq.max_abs_diff(&seq.transpose()) == 0.0);
+        let want = matmul_nt(&a, &a).unwrap();
+        assert!(seq.max_abs_diff(&want) < 1e-10 * (1.0 + want.max_abs()));
+    }
+
+    #[test]
+    fn packed_route_matches_legacy_kernels() {
+        // Sizes straddling PACK_MIN_FLOPS: the packed microkernel route
+        // must agree with the unpacked kernels to 1e-12 relative.
+        let mut rng = Pcg64::new(20);
+        let (m, k, n) = (140, 160, 130); // m·k·n ≈ 2.9M ≥ PACK_MIN_FLOPS
+        assert!(m * k * n >= micro::PACK_MIN_FLOPS);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(k, n, &mut rng);
+        let bt = b.transpose();
+        let at = a.transpose();
+        let got_nn = matmul(&a, &b).unwrap();
+        let got_tn = matmul_tn(&at, &b).unwrap();
+        let got_nt = matmul_nt(&a, &bt).unwrap();
+        // Legacy reference via the small-size kernels, run directly.
+        let mut want = Mat::zeros(m, n);
+        matmul_rows(want.data_mut(), a.data(), b.data(), k, n, 0, m);
+        assert_close(got_nn.data(), want.data(), 1e-12);
+        assert_close(got_tn.data(), want.data(), 1e-12);
+        let mut want_nt = Mat::zeros(m, n);
+        matmul_nt_rows(want_nt.data_mut(), a.data(), bt.data(), k, n, 0, m);
+        assert_close(got_nt.data(), want_nt.data(), 1e-12);
+        // Row-range views flow through the packed route unchanged.
+        let va = a.rows_view(3, m);
+        let got_view = matmul_nt_view(va, bt.view()).unwrap();
+        let want_view = matmul_nt(&a.rows_range(3, m), &bt).unwrap();
+        assert_eq!(got_view.data(), want_view.data());
     }
 }

@@ -1,0 +1,715 @@
+//! Packed, register-tiled GEMM microkernels.
+//!
+//! The blocked kernels in `gemm.rs` stream operands straight out of the
+//! row-major matrices and rely on LLVM autovectorization. This module is
+//! the next rung on the roofline: operands are explicitly **packed** into
+//! contiguous KC×MR / KC×NR panels (zero-padded at the edges) and fed to
+//! an MR×NR register-tile microkernel, BLIS-style. The microkernel has
+//! three implementations:
+//!
+//! * a portable scalar tile (always compiled — the reference path),
+//! * an AVX2/FMA tile (`--features simd`, x86_64, runtime-detected),
+//! * a NEON tile (`--features simd`, aarch64).
+//!
+//! Dispatch is resolved **once per driver call on the calling thread**
+//! (see [`active_kernel`]) and passed down into the row-chunk workers, so
+//! a thread-local [`force_scalar`] override — the bench/equivalence-test
+//! hook — applies to the whole product regardless of worker threads.
+//!
+//! Numerics contract: for a fixed microkernel, every output element is
+//! accumulated in the same order regardless of thread count (each row of
+//! an MR tile owns its accumulators, and k-blocks are swept in order
+//! inside the tile), so results are **bit-identical across thread
+//! counts**. Across microkernels (scalar vs FMA) results differ in the
+//! last bits; the equivalence tests bound that at 1e-12 relative.
+//!
+//! The packed drivers only pay off above a size threshold
+//! ([`PACK_MIN_FLOPS`]); `gemm.rs`/`chol.rs`/`se_ard.rs` keep their
+//! existing allocation-free kernels for small products (the serve hot
+//! path) and route large ones here.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+use crate::util::par::run_row_chunks;
+
+/// Microkernel tile height (rows of C per tile).
+pub const MR: usize = 4;
+/// Microkernel tile width (cols of C per tile).
+pub const NR: usize = 8;
+/// Depth of one packed k-block. KC·(MR+NR)·8B ≈ 24 KiB stays L1-resident.
+pub const KC: usize = 256;
+
+/// Minimum multiply-add count before packing amortizes; below this the
+/// unpacked kernels in `gemm.rs` win (and stay allocation-free).
+pub const PACK_MIN_FLOPS: usize = 1 << 21;
+
+/// Which microkernel implementation a driver call resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Kernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+static DETECTED: OnceLock<Kernel> = OnceLock::new();
+
+thread_local! {
+    static FORCE_SCALAR: Cell<bool> = Cell::new(false);
+}
+
+fn detect() -> Kernel {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Kernel::Avx2;
+        }
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // NEON is baseline on aarch64.
+        return Kernel::Neon;
+    }
+    #[allow(unreachable_code)]
+    Kernel::Scalar
+}
+
+/// The microkernel the packed drivers will use on this thread: the
+/// runtime-detected SIMD tile when compiled in and supported, unless
+/// [`force_scalar`] is set.
+pub fn active_kernel() -> Kernel {
+    if FORCE_SCALAR.with(|c| c.get()) {
+        return Kernel::Scalar;
+    }
+    *DETECTED.get_or_init(detect)
+}
+
+/// Pin the packed drivers to the scalar microkernel on the current thread
+/// (bench + equivalence-test hook). The kernel is resolved once at driver
+/// entry on the calling thread, so worker threads inherit the choice.
+pub fn force_scalar(on: bool) {
+    FORCE_SCALAR.with(|c| c.set(on));
+}
+
+/// Whether a SIMD microkernel is compiled in *and* supported by the host
+/// (ignores [`force_scalar`]).
+pub fn simd_available() -> bool {
+    *DETECTED.get_or_init(detect) != Kernel::Scalar
+}
+
+/// Optional transform applied per element as a C tile is stored (while it
+/// is still cache-resident).
+#[derive(Clone, Copy)]
+pub enum Epilogue<'a> {
+    /// Plain store: C = A·B.
+    None,
+    /// SE-ARD covariance fusion: with `v` the Gram value S1·S2ᵀ at (i, j),
+    /// store `σ_s² · exp(min(−½(sq1[i] + sq2[j]) + v, 0))` — the
+    /// distance+exp sweep folded into the GEMM epilogue. Indices are
+    /// global row/col positions in C.
+    SeArd {
+        sq1: &'a [f64],
+        sq2: &'a [f64],
+        sigma_s2: f64,
+    },
+}
+
+/// Which part of each tile reaches C.
+#[derive(Clone, Copy)]
+enum Store {
+    Full,
+    /// Only elements with `col ≥ row` (SYRK upper triangle; the caller
+    /// mirrors afterwards).
+    Upper,
+}
+
+/// How an operand's k axis is laid out in the row-major source.
+#[derive(Clone, Copy)]
+enum Layout {
+    /// Element (x, p) lives at `src[x·stride + k0 + p]` — k is the
+    /// contiguous minor axis (rows of A in A·Bᵀ, rows of B in A·Bᵀ).
+    KMinor,
+    /// Element (x, p) lives at `src[(k0 + p)·stride + x0 + x]` — k is the
+    /// major axis (B in A·B, A in Aᵀ·B).
+    KMajor,
+}
+
+fn num_kb(k: usize) -> usize {
+    (k + KC - 1) / KC
+}
+
+/// Pack one `width`-wide panel across depth `kc` into `out` (layout
+/// `out[p·width + x]`), zero-padding entries with `x ≥ avail`.
+#[allow(clippy::too_many_arguments)]
+fn pack_panel(
+    src: &[f64],
+    stride: usize,
+    layout: Layout,
+    x0: usize,
+    avail: usize,
+    k0: usize,
+    kc: usize,
+    width: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(avail >= 1 && avail <= width);
+    debug_assert!(out.len() >= kc * width);
+    match layout {
+        Layout::KMinor => {
+            for p in 0..kc {
+                let dst = &mut out[p * width..(p + 1) * width];
+                for (x, v) in dst.iter_mut().enumerate() {
+                    *v = if x < avail { src[(x0 + x) * stride + k0 + p] } else { 0.0 };
+                }
+            }
+        }
+        Layout::KMajor => {
+            for p in 0..kc {
+                let base = (k0 + p) * stride + x0;
+                let dst = &mut out[p * width..(p + 1) * width];
+                dst[..avail].copy_from_slice(&src[base..base + avail]);
+                for v in &mut dst[avail..] {
+                    *v = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack every NR-wide panel of the B operand across all k-blocks. Panel
+/// (kbi, jp) lives at offset `(kbi·npan + jp)·KC·NR`.
+fn pack_all(src: &[f64], stride: usize, layout: Layout, n: usize, k: usize) -> Vec<f64> {
+    let npan = (n + NR - 1) / NR;
+    let nkb = num_kb(k);
+    let mut buf = vec![0.0f64; npan.max(1) * nkb.max(1) * KC * NR];
+    for kbi in 0..nkb {
+        let k0 = kbi * KC;
+        let kc = (k0 + KC).min(k) - k0;
+        for jp in 0..npan {
+            let j0 = jp * NR;
+            let avail = (n - j0).min(NR);
+            let off = (kbi * npan + jp) * (KC * NR);
+            pack_panel(src, stride, layout, j0, avail, k0, kc, NR, &mut buf[off..off + kc * NR]);
+        }
+    }
+    buf
+}
+
+/// Pack the MR-row A tile starting at row `i0` across all k-blocks
+/// (k-block kbi at offset `kbi·KC·MR`).
+#[allow(clippy::too_many_arguments)]
+fn pack_tile_a(
+    src: &[f64],
+    stride: usize,
+    layout: Layout,
+    i0: usize,
+    avail: usize,
+    k: usize,
+    buf: &mut [f64],
+) {
+    let nkb = num_kb(k);
+    for kbi in 0..nkb {
+        let k0 = kbi * KC;
+        let kc = (k0 + KC).min(k) - k0;
+        let off = kbi * (KC * MR);
+        pack_panel(src, stride, layout, i0, avail, k0, kc, MR, &mut buf[off..off + kc * MR]);
+    }
+}
+
+/// Portable scalar MR×NR microkernel — the always-on reference the SIMD
+/// tiles are tested against.
+#[inline]
+fn kern_scalar(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+    for p in 0..kc {
+        let av = &ap[p * MR..(p + 1) * MR];
+        let bv = &bp[p * NR..(p + 1) * NR];
+        for (r, &a) in av.iter().enumerate() {
+            let dst = &mut acc[r * NR..(r + 1) * NR];
+            for (d, &b) in dst.iter_mut().zip(bv) {
+                *d += a * b;
+            }
+        }
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::{MR, NR};
+
+    /// AVX2/FMA 4×8 microkernel: 8 ymm accumulators (4 rows × 2 halves of
+    /// the NR=8 tile width), one FMA per accumulator per k step.
+    ///
+    /// # Safety
+    /// The host must support AVX2+FMA (guaranteed by [`super::detect`])
+    /// and `ap`/`bp` must hold at least `kc·MR` / `kc·NR` elements.
+    #[target_feature(enable = "avx2,fma")]
+    pub(super) unsafe fn kern_avx2(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+        use std::arch::x86_64::*;
+        debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        let pa = acc.as_mut_ptr();
+        let mut c00 = _mm256_loadu_pd(pa);
+        let mut c01 = _mm256_loadu_pd(pa.add(4));
+        let mut c10 = _mm256_loadu_pd(pa.add(8));
+        let mut c11 = _mm256_loadu_pd(pa.add(12));
+        let mut c20 = _mm256_loadu_pd(pa.add(16));
+        let mut c21 = _mm256_loadu_pd(pa.add(20));
+        let mut c30 = _mm256_loadu_pd(pa.add(24));
+        let mut c31 = _mm256_loadu_pd(pa.add(28));
+        let mut app = ap.as_ptr();
+        let mut bpp = bp.as_ptr();
+        for _ in 0..kc {
+            let b0 = _mm256_loadu_pd(bpp);
+            let b1 = _mm256_loadu_pd(bpp.add(4));
+            let a0 = _mm256_set1_pd(*app);
+            c00 = _mm256_fmadd_pd(a0, b0, c00);
+            c01 = _mm256_fmadd_pd(a0, b1, c01);
+            let a1 = _mm256_set1_pd(*app.add(1));
+            c10 = _mm256_fmadd_pd(a1, b0, c10);
+            c11 = _mm256_fmadd_pd(a1, b1, c11);
+            let a2 = _mm256_set1_pd(*app.add(2));
+            c20 = _mm256_fmadd_pd(a2, b0, c20);
+            c21 = _mm256_fmadd_pd(a2, b1, c21);
+            let a3 = _mm256_set1_pd(*app.add(3));
+            c30 = _mm256_fmadd_pd(a3, b0, c30);
+            c31 = _mm256_fmadd_pd(a3, b1, c31);
+            app = app.add(MR);
+            bpp = bpp.add(NR);
+        }
+        _mm256_storeu_pd(pa, c00);
+        _mm256_storeu_pd(pa.add(4), c01);
+        _mm256_storeu_pd(pa.add(8), c10);
+        _mm256_storeu_pd(pa.add(12), c11);
+        _mm256_storeu_pd(pa.add(16), c20);
+        _mm256_storeu_pd(pa.add(20), c21);
+        _mm256_storeu_pd(pa.add(24), c30);
+        _mm256_storeu_pd(pa.add(28), c31);
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod arm {
+    use super::{MR, NR};
+
+    /// NEON 4×8 microkernel: 16 two-lane accumulators (4 rows × 4 pairs).
+    ///
+    /// # Safety
+    /// `ap`/`bp` must hold at least `kc·MR` / `kc·NR` elements (NEON
+    /// itself is baseline on aarch64).
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn kern_neon(kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+        use std::arch::aarch64::*;
+        debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+        let pa = acc.as_mut_ptr();
+        let mut c = [vdupq_n_f64(0.0); 16];
+        for (idx, v) in c.iter_mut().enumerate() {
+            *v = vld1q_f64(pa.add(idx * 2) as *const f64);
+        }
+        for p in 0..kc {
+            let bb = bp.as_ptr().add(p * NR);
+            let b0 = vld1q_f64(bb);
+            let b1 = vld1q_f64(bb.add(2));
+            let b2 = vld1q_f64(bb.add(4));
+            let b3 = vld1q_f64(bb.add(6));
+            let aa = ap.as_ptr().add(p * MR);
+            for r in 0..MR {
+                let a = *aa.add(r);
+                c[r * 4] = vfmaq_n_f64(c[r * 4], b0, a);
+                c[r * 4 + 1] = vfmaq_n_f64(c[r * 4 + 1], b1, a);
+                c[r * 4 + 2] = vfmaq_n_f64(c[r * 4 + 2], b2, a);
+                c[r * 4 + 3] = vfmaq_n_f64(c[r * 4 + 3], b3, a);
+            }
+        }
+        for (idx, v) in c.iter().enumerate() {
+            vst1q_f64(pa.add(idx * 2), *v);
+        }
+    }
+}
+
+#[inline]
+fn run_kernel(kern: Kernel, kc: usize, ap: &[f64], bp: &[f64], acc: &mut [f64; MR * NR]) {
+    match kern {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        Kernel::Avx2 => unsafe { x86::kern_avx2(kc, ap, bp, acc) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        Kernel::Neon => unsafe { arm::kern_neon(kc, ap, bp, acc) },
+        _ => kern_scalar(kc, ap, bp, acc),
+    }
+}
+
+/// Store one finished MR×NR accumulator tile into the chunk-local C rows,
+/// applying the store mask and epilogue. `r0` is the chunk-local row of
+/// the tile top, `gi0`/`j0` the global row/col.
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    chunk: &mut [f64],
+    ldc: usize,
+    r0: usize,
+    gi0: usize,
+    j0: usize,
+    ravail: usize,
+    cavail: usize,
+    acc: &[f64; MR * NR],
+    store: Store,
+    epi: Epilogue<'_>,
+) {
+    for r in 0..ravail {
+        let gi = gi0 + r;
+        let base = (r0 + r) * ldc + j0;
+        let row = &mut chunk[base..base + cavail];
+        let src = &acc[r * NR..r * NR + cavail];
+        match epi {
+            Epilogue::None => match store {
+                Store::Full => row.copy_from_slice(src),
+                Store::Upper => {
+                    for (c, v) in row.iter_mut().enumerate() {
+                        if j0 + c >= gi {
+                            *v = src[c];
+                        }
+                    }
+                }
+            },
+            Epilogue::SeArd { sq1, sq2, sigma_s2 } => {
+                let qi = sq1[gi];
+                for (c, v) in row.iter_mut().enumerate() {
+                    let e = (-0.5 * (qi + sq2[j0 + c]) + src[c]).min(0.0);
+                    *v = sigma_s2 * e.exp();
+                }
+            }
+        }
+    }
+}
+
+/// The shared packed driver: sweep MR-row tiles of C, packing the A tile
+/// per k-block and accumulating against the pre-packed B panels, then
+/// store through the epilogue. Output rows split across `threads` workers
+/// in MR multiples (per-element accumulation order is row-local, so any
+/// split is bit-identical).
+#[allow(clippy::too_many_arguments)]
+fn drive(
+    ad: &[f64],
+    a_stride: usize,
+    a_layout: Layout,
+    bpack: &[f64],
+    cd: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    store: Store,
+    epi: Epilogue<'_>,
+) {
+    if m == 0 || n == 0 {
+        return;
+    }
+    let kern = active_kernel();
+    let npan = (n + NR - 1) / NR;
+    let nkb = num_kb(k);
+    let run = move |chunk: &mut [f64], lo: usize, hi: usize| {
+        let mut apack = vec![0.0f64; nkb.max(1) * KC * MR];
+        let mut i = lo;
+        while i < hi {
+            let ravail = (hi - i).min(MR);
+            pack_tile_a(ad, a_stride, a_layout, i, ravail, k, &mut apack);
+            let jp_start = match store {
+                Store::Full => 0,
+                Store::Upper => i.saturating_sub(NR - 1) / NR,
+            };
+            for jp in jp_start..npan {
+                let j0 = jp * NR;
+                let cavail = (n - j0).min(NR);
+                let mut acc = [0.0f64; MR * NR];
+                for kbi in 0..nkb {
+                    let k0 = kbi * KC;
+                    let kc = (k0 + KC).min(k) - k0;
+                    let ao = kbi * (KC * MR);
+                    let bo = (kbi * npan + jp) * (KC * NR);
+                    run_kernel(kern, kc, &apack[ao..ao + kc * MR], &bpack[bo..bo + kc * NR], &mut acc);
+                }
+                store_tile(chunk, n, i - lo, i, j0, ravail, cavail, &acc, store, epi);
+            }
+            i += ravail;
+        }
+    };
+    if threads <= 1 || m < 2 * MR {
+        run(cd, 0, m);
+    } else {
+        // Chunk in MR multiples so tiles never straddle a worker boundary.
+        let per = ((m + threads - 1) / threads + MR - 1) / MR * MR;
+        run_row_chunks(cd, m, n, per, run);
+    }
+}
+
+/// C = A·B (A m×k, B k×n), overwriting `cd` (m×n).
+pub fn gemm_nn(ad: &[f64], bd: &[f64], cd: &mut [f64], m: usize, k: usize, n: usize, threads: usize) {
+    let bpack = pack_all(bd, n, Layout::KMajor, n, k);
+    drive(ad, k, Layout::KMinor, &bpack, cd, m, k, n, threads, Store::Full, Epilogue::None);
+}
+
+/// C = Aᵀ·B (A k×m, B k×n), overwriting `cd` (m×n).
+pub fn gemm_tn(ad: &[f64], bd: &[f64], cd: &mut [f64], k: usize, m: usize, n: usize, threads: usize) {
+    let bpack = pack_all(bd, n, Layout::KMajor, n, k);
+    drive(ad, m, Layout::KMajor, &bpack, cd, m, k, n, threads, Store::Full, Epilogue::None);
+}
+
+/// C = A·Bᵀ (A m×k, B n×k), overwriting `cd` (m×n), with an optional
+/// fused epilogue applied as each tile is stored.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt(
+    ad: &[f64],
+    bd: &[f64],
+    cd: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+    epi: Epilogue<'_>,
+) {
+    let bpack = pack_all(bd, k, Layout::KMinor, n, k);
+    drive(ad, k, Layout::KMinor, &bpack, cd, m, k, n, threads, Store::Full, epi);
+}
+
+/// Upper triangle of C = Aᵀ·A (A k×m) into `cd` (m×m); the caller mirrors.
+pub fn syrk_tn_upper(ad: &[f64], cd: &mut [f64], k: usize, m: usize, threads: usize) {
+    let bpack = pack_all(ad, m, Layout::KMajor, m, k);
+    drive(ad, m, Layout::KMajor, &bpack, cd, m, k, m, threads, Store::Upper, Epilogue::None);
+}
+
+/// Upper triangle of C = A·Aᵀ (A n×k) into `cd` (n×n); the caller mirrors.
+pub fn syrk_nt_upper(ad: &[f64], cd: &mut [f64], n: usize, k: usize, threads: usize) {
+    let bpack = pack_all(ad, k, Layout::KMinor, n, k);
+    drive(ad, k, Layout::KMinor, &bpack, cd, n, k, n, threads, Store::Upper, Epilogue::None);
+}
+
+/// Packed Cholesky trailing update on the row-major n×n buffer `ld`:
+/// `ld[i, j] -= Σ_p ld[i, p]·ld[j, p]` for `i, j ∈ [kb, n)`, `j ≤ i`,
+/// `p ∈ [k0, kb)` — the cubic term of the blocked factorization routed
+/// through the microkernel instead of the dot4 panel loop. Sequential
+/// (the factorization itself is sequential); panel columns `[k0, kb)` are
+/// read-only here, writes touch only columns ≥ kb, so packing up front is
+/// alias-free.
+pub fn chol_trailing(ld: &mut [f64], n: usize, k0: usize, kb: usize) {
+    let m = n - kb;
+    let pw = kb - k0;
+    if m == 0 || pw == 0 {
+        return;
+    }
+    debug_assert!(pw <= KC, "chol_trailing panel wider than KC");
+    let kern = active_kernel();
+    let npan = (m + NR - 1) / NR;
+    let mut bpack = vec![0.0f64; npan * KC * NR];
+    for jp in 0..npan {
+        let j0 = jp * NR;
+        let avail = (m - j0).min(NR);
+        let off = jp * (KC * NR);
+        pack_panel(ld, n, Layout::KMinor, kb + j0, avail, k0, pw, NR, &mut bpack[off..off + pw * NR]);
+    }
+    let mut apack = vec![0.0f64; KC * MR];
+    let mut ti = 0;
+    while ti < m {
+        let ravail = (m - ti).min(MR);
+        pack_panel(ld, n, Layout::KMinor, kb + ti, ravail, k0, pw, MR, &mut apack[..pw * MR]);
+        // Only panels intersecting the lower triangle of this tile.
+        let jp_end = (ti + ravail - 1) / NR;
+        for jp in 0..=jp_end {
+            let j0 = jp * NR;
+            let cavail = (m - j0).min(NR);
+            let mut acc = [0.0f64; MR * NR];
+            let bo = jp * (KC * NR);
+            run_kernel(kern, pw, &apack[..pw * MR], &bpack[bo..bo + pw * NR], &mut acc);
+            for r in 0..ravail {
+                let gi = kb + ti + r;
+                for c in 0..cavail {
+                    let gj = kb + j0 + c;
+                    if gj <= gi {
+                        ld[gi * n + gj] -= acc[r * NR + c];
+                    }
+                }
+            }
+        }
+        ti += ravail;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Mat;
+    use crate::util::proptest::{assert_close, for_cases, gen_size};
+    use crate::util::rng::Pcg64;
+
+    fn naive_nn(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for p in 0..a.cols() {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                c.set(i, j, acc);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn packed_drivers_match_naive_over_packing_remainders() {
+        // m, n sweep the MR/NR remainder space; k crosses the KC k-block
+        // boundary (KC−1, KC, KC+1) so partial k-blocks are exercised.
+        let kk = [1usize, 2, 3, 4, 5, KC - 1, KC, KC + 1];
+        for_cases(71, 12, |rng| {
+            let m = gen_size(rng, 1, 2 * MR + 1);
+            let n = gen_size(rng, 1, 2 * NR + 1);
+            let k = kk[gen_size(rng, 0, kk.len() - 1)];
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(k, n, rng);
+            let want = naive_nn(&a, &b);
+            let at = a.transpose();
+            let bt = b.transpose();
+            for threads in [1usize, 3] {
+                let mut c = vec![0.0; m * n];
+                gemm_nn(a.data(), b.data(), &mut c, m, k, n, threads);
+                assert_close(&c, want.data(), 1e-12);
+                let mut c2 = vec![0.0; m * n];
+                gemm_tn(at.data(), b.data(), &mut c2, k, m, n, threads);
+                assert_close(&c2, want.data(), 1e-12);
+                let mut c3 = vec![0.0; m * n];
+                gemm_nt(a.data(), bt.data(), &mut c3, m, k, n, threads, Epilogue::None);
+                assert_close(&c3, want.data(), 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn row_chunking_is_bit_identical() {
+        let mut rng = Pcg64::new(72);
+        let (m, k, n) = (37, 70, 29);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(n, k, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        let mut c4 = vec![0.0; m * n];
+        gemm_nt(a.data(), b.data(), &mut c1, m, k, n, 1, Epilogue::None);
+        gemm_nt(a.data(), b.data(), &mut c4, m, k, n, 4, Epilogue::None);
+        assert_eq!(c1, c4);
+    }
+
+    #[test]
+    fn syrk_upper_drivers_match_their_gemm() {
+        for_cases(73, 8, |rng| {
+            let k = gen_size(rng, 1, 20);
+            let m = gen_size(rng, 1, 2 * NR + 3);
+            let a = Mat::randn(k, m, rng);
+            let at = a.transpose();
+            let mut full = vec![0.0; m * m];
+            gemm_tn(a.data(), a.data(), &mut full, k, m, m, 1);
+            let mut c = vec![0.0; m * m];
+            syrk_tn_upper(a.data(), &mut c, k, m, 2);
+            let mut c2 = vec![0.0; m * m];
+            syrk_nt_upper(at.data(), &mut c2, m, k, 2);
+            for i in 0..m {
+                for j in i..m {
+                    // Same packing + kernel sequence → exactly equal.
+                    assert_eq!(c[i * m + j], full[i * m + j], "tn ({i},{j})");
+                    assert_eq!(c2[i * m + j], full[i * m + j], "nt ({i},{j})");
+                }
+                for j in 0..i {
+                    assert_eq!(c[i * m + j], 0.0, "below-diagonal touched at ({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn chol_trailing_matches_dot_reference() {
+        let mut rng = Pcg64::new(74);
+        let n = 30;
+        let (k0, kb) = (3usize, 11usize);
+        let base = Mat::randn(n, n, &mut rng);
+        let mut packed = base.data().to_vec();
+        let mut reference = base.data().to_vec();
+        for i in kb..n {
+            for j in kb..=i {
+                let mut acc = 0.0;
+                for p in k0..kb {
+                    acc += base.get(i, p) * base.get(j, p);
+                }
+                reference[i * n + j] -= acc;
+            }
+        }
+        chol_trailing(&mut packed, n, k0, kb);
+        assert_close(&packed, &reference, 1e-12);
+    }
+
+    #[test]
+    fn zero_sized_dims_are_safe() {
+        let mut c = vec![1.0; 6];
+        gemm_nn(&[], &[], &mut c, 2, 0, 3, 1); // k = 0 ⇒ C = 0
+        assert!(c.iter().all(|&v| v == 0.0));
+        let mut empty: Vec<f64> = Vec::new();
+        gemm_nt(&[], &[], &mut empty, 0, 3, 0, 1, Epilogue::None);
+        gemm_tn(&[], &[], &mut empty, 3, 0, 0, 2);
+        let mut d: Vec<f64> = Vec::new();
+        chol_trailing(&mut d, 0, 0, 0);
+    }
+
+    #[test]
+    fn simd_kernel_matches_scalar_within_tolerance() {
+        if !simd_available() {
+            // Scalar-only build or host: dispatch is trivially exact.
+            return;
+        }
+        let mut rng = Pcg64::new(75);
+        let (m, k, n) = (33, 300, 21);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(n, k, &mut rng);
+        force_scalar(true);
+        assert_eq!(active_kernel(), Kernel::Scalar);
+        let mut c_scalar = vec![0.0; m * n];
+        gemm_nt(a.data(), b.data(), &mut c_scalar, m, k, n, 1, Epilogue::None);
+        force_scalar(false);
+        assert_ne!(active_kernel(), Kernel::Scalar);
+        let mut c_simd = vec![0.0; m * n];
+        gemm_nt(a.data(), b.data(), &mut c_simd, m, k, n, 1, Epilogue::None);
+        assert_close(&c_simd, &c_scalar, 1e-12);
+    }
+
+    #[test]
+    fn fused_epilogue_matches_separate_pass() {
+        let mut rng = Pcg64::new(76);
+        let (m, k, n) = (13, 7, 11);
+        let a = Mat::randn(m, k, &mut rng);
+        let b = Mat::randn(n, k, &mut rng);
+        let sq1: Vec<f64> = (0..m).map(|i| a.row(i).iter().map(|v| v * v).sum::<f64>()).collect();
+        let sq2: Vec<f64> = (0..n).map(|j| b.row(j).iter().map(|v| v * v).sum::<f64>()).collect();
+        let sigma_s2 = 1.7;
+        let mut fused = vec![0.0; m * n];
+        gemm_nt(
+            a.data(),
+            b.data(),
+            &mut fused,
+            m,
+            k,
+            n,
+            1,
+            Epilogue::SeArd { sq1: &sq1, sq2: &sq2, sigma_s2 },
+        );
+        let mut plain = vec![0.0; m * n];
+        gemm_nt(a.data(), b.data(), &mut plain, m, k, n, 1, Epilogue::None);
+        for i in 0..m {
+            for j in 0..n {
+                let e = (-0.5 * (sq1[i] + sq2[j]) + plain[i * n + j]).min(0.0);
+                let want = sigma_s2 * e.exp();
+                assert!((fused[i * n + j] - want).abs() < 1e-15, "({i},{j})");
+            }
+        }
+    }
+}

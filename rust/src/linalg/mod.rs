@@ -6,7 +6,9 @@
 
 pub mod matrix;
 pub mod gemm;
+pub mod micro;
 pub mod chol;
 pub mod eig;
 pub mod banded;
 pub mod solve;
+pub mod f32mat;

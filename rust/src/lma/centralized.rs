@@ -3,11 +3,14 @@
 //! sweep → Definitions 1–2 → Theorem 2, with phase-level timing so the
 //! experiment tables can report the incurred-time breakdown.
 
+use std::sync::OnceLock;
+
 use crate::config::LmaConfig;
 use crate::gp::Prediction;
 use crate::kernels::se_ard::SeArdHyper;
 use crate::linalg::matrix::Mat;
 use crate::lma::context::{legacy_mode, LegacyMode, PredictContext, PredictScratch};
+use crate::lma::f32u::{F32Ctx, PredictMode};
 use crate::lma::predict::scatter;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::summary::{
@@ -23,6 +26,10 @@ use crate::util::timer::PhaseProfiler;
 pub struct LmaRegressor {
     core: LmaFitCore,
     profiler: PhaseProfiler,
+    /// Lazily-built f32 copy of the context tensors (`PredictMode::F32U`).
+    /// Derived data — never persisted; rebuilt on load so it cannot drift
+    /// from the f64 source of truth.
+    f32ctx: OnceLock<F32Ctx>,
 }
 
 impl LmaRegressor {
@@ -37,13 +44,13 @@ impl LmaRegressor {
     ) -> Result<LmaRegressor> {
         let mut profiler = PhaseProfiler::new();
         let core = profiler.scope("fit/core", || LmaFitCore::fit(train_x, train_y, hyp, cfg))?;
-        Ok(LmaRegressor { core, profiler })
+        Ok(LmaRegressor { core, profiler, f32ctx: OnceLock::new() })
     }
 
     /// Rebuild a regressor around an already-fitted core (artifact
     /// deserialization — the core carries everything `predict` reads).
     pub fn from_core(core: LmaFitCore) -> LmaRegressor {
-        LmaRegressor { core, profiler: PhaseProfiler::new() }
+        LmaRegressor { core, profiler: PhaseProfiler::new(), f32ctx: OnceLock::new() }
     }
 
     pub fn core(&self) -> &LmaFitCore {
@@ -62,6 +69,29 @@ impl LmaRegressor {
     /// Predict at `test_x` (marginal variances only).
     pub fn predict(&self, test_x: &Mat) -> Result<Prediction> {
         self.predict_opts(test_x, false).map(|(p, _)| p)
+    }
+
+    /// Predict via the opt-in reduced-precision path: f32 copies of the
+    /// context tensors, f64 accumulation, exact f64 S-side tail. The f32
+    /// context is built on first use and cached for the model's lifetime.
+    pub fn predict_f32u(&self, test_x: &Mat) -> Result<Prediction> {
+        let f32ctx =
+            self.f32ctx.get_or_init(|| F32Ctx::build(&self.core, self.core.context()));
+        crate::lma::f32u::predict_f32u(&self.core, self.core.context(), f32ctx, test_x)
+    }
+
+    /// Predict in an explicit [`PredictMode`]: `F64` runs the default
+    /// (bit-identity) scratch path, `F32U` the reduced-precision path.
+    pub fn predict_with_mode(
+        &self,
+        test_x: &Mat,
+        mode: PredictMode,
+        scratch: &mut PredictScratch,
+    ) -> Result<Prediction> {
+        match mode {
+            PredictMode::F64 => self.predict_with_scratch(test_x, scratch),
+            PredictMode::F32U => self.predict_f32u(test_x),
+        }
     }
 
     /// Predict reusing a caller-owned scratch workspace (the serving

@@ -1,0 +1,229 @@
+//! Opt-in reduced-precision serve path (`PredictMode::F32U`).
+//!
+//! The context-backed predict hot path is dominated by streaming the
+//! fit-time tensors — the whitened rows W_{D_m}, propagators P_m, the
+//! L_{C_m} factors and the cached half-solves vs_m/vy_m — through a few
+//! tall-skinny GEMMs whose output side (|U|) is small. [`F32Ctx`] stores a
+//! one-time f32 copy of exactly those tensors, halving the bytes read per
+//! query; [`predict_f32u`] then runs the U-dependent algebra on the
+//! [`crate::linalg::f32mat`] kernels, which keep every accumulator in f64
+//! so the only error source is the storage rounding.
+//!
+//! Deliberately scoped: the test-side construction, the band-sparse R̄_DU
+//! sweep and the S-side Theorem-2 tail (Σ̈_SS Cholesky, `a`) stay f64 —
+//! they are cheap relative to the U-side products and keeping them exact
+//! holds the predictive-mean error comfortably inside the 1e-5 relative
+//! budget (asserted below and in `bench_gemm`). The default
+//! [`PredictMode::F64`] path never touches this module and remains the
+//! bit-identity reference.
+
+use crate::gp::Prediction;
+use crate::linalg::f32mat::{self, MatF32};
+use crate::linalg::matrix::Mat;
+use crate::lma::context::PredictContext;
+use crate::lma::predict::{predict_from_context, scatter};
+use crate::lma::residual::LmaFitCore;
+use crate::lma::summary::{reduce_u, UTerms};
+use crate::lma::sweep::{rbar_du_blocks_in, RbarBlocks, TestSide};
+use crate::util::error::Result;
+
+/// Which arithmetic the predict path runs in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PredictMode {
+    /// Full f64 — the bit-identity reference (default).
+    #[default]
+    F64,
+    /// f32 context tensors + f64 accumulation on the U-side products
+    /// (`pgpr serve --f32-u`). Mean stays within 1e-5 relative of F64.
+    F32U,
+}
+
+/// One-time f32 copies of the test-independent predict tensors, derived
+/// from the fitted core + its [`PredictContext`] — never persisted in
+/// artifacts (rebuilt on load/generation swap, so it can never drift from
+/// the f64 source of truth).
+#[derive(Clone, Debug)]
+pub struct F32Ctx {
+    /// W_{D_m} block rows (n_m × |S|).
+    wt: Vec<MatF32>,
+    /// Propagators P_m (n_m × |D_m^B|).
+    p: Vec<Option<MatF32>>,
+    /// Lower Cholesky factors L_{C_m}.
+    c_l: Vec<MatF32>,
+    /// Cached half-solves vs_m = L_{C_m}⁻¹·Σ̇_S^m.
+    vs: Vec<MatF32>,
+    /// Cached half-solves vy_m = L_{C_m}⁻¹·ẏ_m.
+    vy: Vec<MatF32>,
+}
+
+impl F32Ctx {
+    /// Round the context tensors to f32 storage. Pure data conversion —
+    /// deterministic and infallible.
+    pub fn build(core: &LmaFitCore, ctx: &PredictContext) -> F32Ctx {
+        let mm = core.m();
+        F32Ctx {
+            wt: (0..mm).map(|m| MatF32::from_view(core.wt_block_view(m))).collect(),
+            p: core.p.iter().map(|p| p.as_ref().map(MatF32::from_mat)).collect(),
+            c_l: core.c_chol.iter().map(|cf| MatF32::from_mat(cf.l())).collect(),
+            vs: ctx.vs.iter().map(MatF32::from_mat).collect(),
+            vy: ctx.vy.iter().map(MatF32::from_mat).collect(),
+        }
+    }
+
+    /// Resident size in bytes (half the f64 originals).
+    pub fn approx_bytes(&self) -> usize {
+        let mats = |v: &[MatF32]| -> usize { v.iter().map(MatF32::bytes).sum() };
+        mats(&self.wt)
+            + self.p.iter().flatten().map(MatF32::bytes).sum::<usize>()
+            + mats(&self.c_l)
+            + mats(&self.vs)
+            + mats(&self.vy)
+    }
+}
+
+/// Reduced-precision Theorem-2 prediction (marginal variances only — the
+/// serve path never requests full covariances). Structure mirrors
+/// `LmaRegressor::predict_mode_with`: f64 test side + band sweep, then
+/// per-block U-terms on the f32 kernels, then the exact f64 S-side tail.
+pub fn predict_f32u(
+    core: &LmaFitCore,
+    ctx: &PredictContext,
+    f32ctx: &F32Ctx,
+    test_x: &Mat,
+) -> Result<Prediction> {
+    let mm = core.m();
+    let ts = TestSide::build(core, test_x)?;
+    let mut rbar = RbarBlocks::default();
+    let mut qtmp = Mat::zeros(0, 0);
+    rbar_du_blocks_in(core, ctx, &ts, &mut rbar, &mut qtmp)?;
+
+    // Σ̄_{D_m U} = Q_{D_m U} + R̄_{D_m U}: f32 Q product (f64-accumulated),
+    // f64 band residual added on top — same assembly as sigma_bar_rows.
+    let wt_u32 = MatF32::from_mat(&ts.wt_u);
+    let mut sbar: Vec<Mat> = Vec::with_capacity(mm);
+    for m in 0..mm {
+        let mut row = f32mat::matmul_nt_acc(&f32ctx.wt[m], &wt_u32);
+        for n in 0..mm {
+            if let Some(blk) = rbar.block(m, n) {
+                let c0 = ts.starts[n];
+                for i in 0..blk.rows() {
+                    let dst = &mut row.row_mut(i)[c0..c0 + blk.cols()];
+                    for (d, v) in dst.iter_mut().zip(blk.row(i)) {
+                        *d += v;
+                    }
+                }
+            }
+        }
+        sbar.push(row);
+    }
+
+    let mut terms: Vec<UTerms> = Vec::with_capacity(mm);
+    for m in 0..mm {
+        // Σ̇_U^m = Σ̄_{D_m U} − P_m·Σ̄_{D_m^B U}.
+        let mut udot = sbar[m].clone();
+        if let Some(p_m) = &f32ctx.p[m] {
+            let hi = (m + core.b()).min(mm - 1);
+            let refs: Vec<&Mat> = sbar[(m + 1)..=hi].iter().collect();
+            let fwd = MatF32::from_mat(&Mat::vstack(&refs)?);
+            let prod = f32mat::matmul_acc(p_m, &fwd);
+            for (a, v) in udot.data_mut().iter_mut().zip(prod.data()) {
+                *a -= v;
+            }
+        }
+        // vu = L_{C_m}⁻¹·Σ̇_U^m: f32 factor, f64 working rows.
+        let vu = f32mat::forward_sub_f32(&f32ctx.c_l[m], &udot);
+        let yu = f32mat::matmul_tn_mixed(&vu, &f32ctx.vy[m]).into_data();
+        let sus = f32mat::matmul_tn_mixed(&vu, &f32ctx.vs[m]);
+        let nu = vu.cols();
+        let mut suu_diag = vec![0.0; nu];
+        for i in 0..vu.rows() {
+            for (d, v) in suu_diag.iter_mut().zip(vu.row(i)) {
+                *d += v * v;
+            }
+        }
+        terms.push(UTerms { yu, sus, suu_diag, suu_full: None });
+    }
+
+    let g = reduce_u(&terms, ts.total(), core.basis.size())?;
+    // Exact f64 S-side tail (cached Σ̈_SS Cholesky + a) — shared with the
+    // default path, so only the U-terms above carry rounding.
+    let pred = predict_from_context(core, &ts, ctx, &g, None)?;
+    Ok(scatter(&ts, pred))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LmaConfig, PartitionStrategy};
+    use crate::kernels::se_ard::SeArdHyper;
+    use crate::lma::LmaRegressor;
+    use crate::util::rng::Pcg64;
+
+    fn fixture(seed: u64, n: usize, m: usize, b: usize, s: usize) -> (LmaRegressor, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let hyp = SeArdHyper::isotropic(1, 0.9, 1.0, 0.1);
+        let x = Mat::col_vec(&rng.uniform_vec(n, -4.0, 4.0));
+        let y: Vec<f64> = (0..n).map(|i| (1.7 * x.get(i, 0)).sin()).collect();
+        let cfg = LmaConfig {
+            num_blocks: m,
+            markov_order: b,
+            support_size: s,
+            seed,
+            partition: PartitionStrategy::KMeans { iters: 8 },
+            use_pjrt: false,
+        };
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+        let test = Mat::col_vec(&rng.uniform_vec(30, -4.0, 4.0));
+        (model, test)
+    }
+
+    #[test]
+    fn f32u_mean_within_budget_across_markov_spectrum() {
+        // The ISSUE's acceptance budget: predictive-mean relative error
+        // < 1e-5 against the f64 path, across the (B) spectrum endpoints
+        // and an interior point.
+        for b in [0usize, 2, 4] {
+            let (model, test) = fixture(601 + b as u64, 140, 5, b, 20);
+            let f64p = model.predict(&test).unwrap();
+            let f32p = model.predict_f32u(&test).unwrap();
+            let scale = f64p.mean.iter().fold(1.0_f64, |a, v| a.max(v.abs()));
+            for (a, bb) in f64p.mean.iter().zip(&f32p.mean) {
+                assert!(
+                    (a - bb).abs() / scale < 1e-5,
+                    "B={b}: mean {a} vs {bb} (scale {scale})"
+                );
+            }
+            let vscale = crate::kernels::se_ard::prior_var(&model.core().hyp).max(1.0);
+            for (a, bb) in f64p.var.iter().zip(&f32p.var) {
+                assert!((a - bb).abs() / vscale < 1e-4, "B={b}: var {a} vs {bb}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32u_actually_rounds() {
+        // Storage really is f32: outputs must differ from f64 (else the
+        // mode silently fell back), while staying inside the budget.
+        let (model, test) = fixture(611, 120, 4, 1, 16);
+        let f64p = model.predict(&test).unwrap();
+        let f32p = model.predict_f32u(&test).unwrap();
+        assert_ne!(f64p.mean, f32p.mean);
+        let ctx32 = F32Ctx::build(model.core(), model.core().context());
+        assert!(ctx32.approx_bytes() > 0);
+        assert!(ctx32.approx_bytes() < model.core().context().approx_bytes());
+    }
+
+    #[test]
+    fn predict_with_mode_dispatches() {
+        let (model, test) = fixture(612, 100, 4, 1, 16);
+        let mut scratch = crate::lma::context::PredictScratch::new();
+        let via_f64 = model.predict_with_mode(&test, PredictMode::F64, &mut scratch).unwrap();
+        let plain = model.predict(&test).unwrap();
+        assert_eq!(via_f64.mean, plain.mean);
+        assert_eq!(via_f64.var, plain.var);
+        let via_f32 = model.predict_with_mode(&test, PredictMode::F32U, &mut scratch).unwrap();
+        let direct = model.predict_f32u(&test).unwrap();
+        assert_eq!(via_f32.mean, direct.mean);
+        assert_eq!(PredictMode::default(), PredictMode::F64);
+    }
+}

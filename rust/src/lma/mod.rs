@@ -33,9 +33,11 @@ pub mod sweep;
 pub mod summary;
 pub mod context;
 pub mod predict;
+pub mod f32u;
 pub mod centralized;
 pub mod parallel;
 pub mod spectrum;
 pub mod select;
 
 pub use centralized::LmaRegressor;
+pub use f32u::PredictMode;

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::{PredictionService, ServeEngine};
+use crate::lma::PredictMode;
 use crate::online::{absorb, BlockPolicy, ObservationBuffer};
 use crate::registry::artifact::{self, SnapshotCache};
 use crate::server::batcher::{self, BatcherHandle};
@@ -174,6 +175,12 @@ pub struct ModelEntry {
     /// Load order (monotone across the registry's lifetime; preserved
     /// across generation swaps).
     seq: u64,
+    /// Predict requests currently executing against THIS generation.
+    /// Deliberately **not** shared across generation swaps (unlike
+    /// `metrics`/`hits`): a pinned in-flight request keeps counting
+    /// against the generation answering it, so `/metrics` can show a
+    /// just-swapped generation draining to zero.
+    inflight: Arc<AtomicU64>,
 }
 
 impl ModelEntry {
@@ -207,6 +214,31 @@ impl ModelEntry {
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
+
+    /// Mark a predict request as executing against this generation.
+    /// Returns a guard that decrements on drop, so early returns and
+    /// batcher errors can never leak a count.
+    pub fn begin_inflight(self: &Arc<Self>) -> InflightGuard {
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        InflightGuard { counter: Arc::clone(&self.inflight) }
+    }
+
+    /// Predict requests currently executing against this generation.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII guard for one in-flight predict request (see
+/// [`ModelEntry::begin_inflight`]).
+pub struct InflightGuard {
+    counter: Arc<AtomicU64>,
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.counter.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time description of a resident model (for `GET /models` and
@@ -229,6 +261,9 @@ pub struct ModelInfo {
     pub requests: u64,
     /// Prediction rows answered.
     pub rows: u64,
+    /// Predict requests currently executing against the serving
+    /// generation.
+    pub inflight: u64,
     pub seq: u64,
 }
 
@@ -247,6 +282,7 @@ impl ModelInfo {
             ("observed_rows", Json::Num(self.observed_rows as f64)),
             ("requests", Json::Num(self.requests as f64)),
             ("rows", Json::Num(self.rows as f64)),
+            ("inflight", Json::Num(self.inflight as f64)),
             ("loaded_seq", Json::Num(self.seq as f64)),
         ])
     }
@@ -259,6 +295,9 @@ struct BatchParams {
     batch_size: usize,
     max_delay_us: u64,
     queue_capacity: usize,
+    /// Serve every model through the reduced-precision f32 U-side path
+    /// (`ServeOptions::f32_u`).
+    mode: PredictMode,
 }
 
 /// The registry: name → resident model.
@@ -291,6 +330,7 @@ impl ModelRegistry {
                 batch_size: serve.batch_size,
                 max_delay_us: serve.max_delay_us,
                 queue_capacity: serve.queue_capacity,
+                mode: if serve.f32_u { PredictMode::F32U } else { PredictMode::F64 },
             },
         }
     }
@@ -352,7 +392,8 @@ impl ModelRegistry {
         }
         let svc = PredictionService::with_shared(Arc::clone(&engine), self.batch.batch_size)
             .map_err(|e| RegistryError::Internal(e.to_string()))?
-            .with_max_delay(Duration::from_micros(self.batch.max_delay_us));
+            .with_max_delay(Duration::from_micros(self.batch.max_delay_us))
+            .with_predict_mode(self.batch.mode);
         let metrics = svc.metrics();
 
         let mut map = self.models.write().expect("registry lock");
@@ -393,6 +434,7 @@ impl ModelRegistry {
             hits: Arc::new(AtomicU64::new(0)),
             last_used: AtomicU64::new(self.tick()),
             seq,
+            inflight: Arc::new(AtomicU64::new(0)),
         });
         map.insert(name.to_string(), entry);
         drop(map);
@@ -421,7 +463,8 @@ impl ModelRegistry {
             Arc::clone(&expected.metrics),
         )
         .map_err(|e| RegistryError::Internal(e.to_string()))?
-        .with_max_delay(Duration::from_micros(self.batch.max_delay_us));
+        .with_max_delay(Duration::from_micros(self.batch.max_delay_us))
+        .with_predict_mode(self.batch.mode);
         // Spawn the new batcher *before* taking the write lock: thread
         // creation must not stall every concurrent lookup. If the swap
         // check then fails, dropping the handle makes the thread exit and
@@ -453,6 +496,8 @@ impl ModelRegistry {
             hits: Arc::clone(&expected.hits),
             last_used: AtomicU64::new(self.tick()),
             seq: expected.seq,
+            // Fresh counter: in-flight counts are per generation.
+            inflight: Arc::new(AtomicU64::new(0)),
         });
         map.insert(name.to_string(), Arc::clone(&entry));
         drop(map);
@@ -691,6 +736,7 @@ impl ModelRegistry {
                     observed_rows: e.metrics.observe_rows.load(Ordering::Relaxed),
                     requests: e.hits(),
                     rows: e.metrics.responses.load(Ordering::Relaxed),
+                    inflight: e.inflight(),
                     seq: e.seq,
                 }
             })
@@ -879,6 +925,37 @@ mod tests {
             reg.observe(Some("nope"), &[vec![0.0]], &[0.0], false, true),
             Err(RegistryError::NotFound(_))
         ));
+        drop(gen0);
+        drop(gen1);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn inflight_counts_are_per_generation() {
+        let reg = registry(4, true);
+        reg.load("live", engine(31)).unwrap();
+        let gen0 = reg.get("live").unwrap();
+        assert_eq!(gen0.inflight(), 0);
+        let g1 = gen0.begin_inflight();
+        let g2 = gen0.begin_inflight();
+        assert_eq!(gen0.inflight(), 2);
+        let info = reg.list().into_iter().find(|i| i.name == "live").unwrap();
+        assert_eq!(info.inflight, 2);
+        drop(g1);
+        assert_eq!(gen0.inflight(), 1);
+        // Publish a new generation: its counter starts at zero (fresh per
+        // generation) while the pinned old entry still shows its draining
+        // request.
+        reg.observe(Some("live"), &[vec![4.4]], &[4.4f64.sin()], false, true)
+            .unwrap();
+        let gen1 = reg.get("live").unwrap();
+        assert_eq!(gen1.generation(), 1);
+        assert_eq!(gen1.inflight(), 0);
+        assert_eq!(gen0.inflight(), 1);
+        let info = reg.list().into_iter().find(|i| i.name == "live").unwrap();
+        assert_eq!(info.inflight, 0, "list reports the serving generation");
+        drop(g2);
+        assert_eq!(gen0.inflight(), 0);
         drop(gen0);
         drop(gen1);
         reg.shutdown();

@@ -498,6 +498,10 @@ fn metrics_text(shared: &Shared) -> String {
             "pgpr_model_train_rows{{model=\"{}\"}} {}\n",
             info.name, info.train_rows
         ));
+        s.push_str(&format!(
+            "pgpr_generation_inflight{{model=\"{}\"}} {}\n",
+            info.name, info.inflight
+        ));
     }
     for (name, m) in by_model {
         s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
@@ -711,6 +715,10 @@ fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
         Ok(r) => r,
         Err(msg) => return (400, "application/json", error_body(&msg)),
     };
+    // Count this request as in flight against the resolved generation
+    // until the batcher answers (guard decrements on every exit path) —
+    // `/metrics` exposes the gauge as `pgpr_generation_inflight`.
+    let _inflight = entry.begin_inflight();
     match entry.handle().submit(rows) {
         Ok(rep) => {
             // Count the hit only once the model actually answered, so
