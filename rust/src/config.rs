@@ -152,6 +152,17 @@ pub struct ServeOptions {
     /// path. Centralized engines only — parallel engines keep serving the
     /// exact f64 path regardless.
     pub f32_u: bool,
+    /// Per-request stage tracing: queue-wait/batch-form/engine-phase
+    /// attribution into `pgpr_stage_seconds` histograms, the
+    /// `/debug/trace` ring and `?trace=1` inline breakdowns. On by
+    /// default; `--no-trace` turns the whole layer off.
+    pub trace: bool,
+    /// Capacity of the per-model trace ring buffer (`/debug/trace`
+    /// serves the last N completed request traces).
+    pub trace_ring: usize,
+    /// Log a structured `slow_request` event for any request slower than
+    /// this many microseconds end-to-end (0 disables the watchdog).
+    pub slow_request_us: u64,
 }
 
 impl Default for ServeOptions {
@@ -166,6 +177,9 @@ impl Default for ServeOptions {
             idle_timeout_ms: 5000,
             max_conn_requests: 1000,
             f32_u: false,
+            trace: true,
+            trace_ring: 256,
+            slow_request_us: 0,
         }
     }
 }
@@ -186,6 +200,11 @@ impl ServeOptions {
                 "serve: keep-alive needs idle_timeout_ms ≥ 1 and max_conn_requests ≥ 1".into(),
             ));
         }
+        if self.trace && self.trace_ring == 0 {
+            return Err(PgprError::Config(
+                "serve: tracing needs trace_ring ≥ 1 (or disable tracing)".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -200,6 +219,9 @@ impl ServeOptions {
             ("idle_timeout_ms", Json::Num(self.idle_timeout_ms as f64)),
             ("max_conn_requests", Json::Num(self.max_conn_requests as f64)),
             ("f32_u", Json::Bool(self.f32_u)),
+            ("trace", Json::Bool(self.trace)),
+            ("trace_ring", Json::Num(self.trace_ring as f64)),
+            ("slow_request_us", Json::Num(self.slow_request_us as f64)),
         ])
     }
 
@@ -234,6 +256,15 @@ impl ServeOptions {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.max_conn_requests),
             f32_u: j.get("f32_u").and_then(|v| v.as_bool()).unwrap_or(d.f32_u),
+            trace: j.get("trace").and_then(|v| v.as_bool()).unwrap_or(d.trace),
+            trace_ring: j
+                .get("trace_ring")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.trace_ring),
+            slow_request_us: j
+                .get("slow_request_us")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.slow_request_us as usize) as u64,
         })
     }
 }
@@ -532,6 +563,9 @@ mod tests {
             idle_timeout_ms: 250,
             max_conn_requests: 16,
             f32_u: true,
+            trace: false,
+            trace_ring: 32,
+            slow_request_us: 250_000,
         };
         assert!(o.validate().is_ok());
         let parsed = Json::parse(&o.to_json().to_string()).unwrap();
@@ -545,6 +579,11 @@ mod tests {
         assert!(ServeOptions { queue_capacity: 0, ..ServeOptions::default() }
             .validate()
             .is_err());
+        // trace_ring 0 is only legal when tracing is off.
+        assert!(ServeOptions { trace_ring: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { trace: false, trace_ring: 0, ..ServeOptions::default() }
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
 use crate::lma::parallel::ParallelLma;
 use crate::lma::{LmaRegressor, PredictMode};
+use crate::obs::{log_event, Level};
 use crate::registry::{artifact, ModelRegistry};
 use crate::server::http::Server;
 use crate::server::loadgen;
@@ -268,7 +269,7 @@ fn registry_from_artifacts(
     specs: &[String],
     opts: &ServeOptions,
     reg_opts: RegistryOptions,
-    log_prefix: &str,
+    context: &str,
 ) -> Result<Arc<ModelRegistry>> {
     let specs: Vec<(String, String)> =
         specs.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
@@ -282,7 +283,15 @@ fn registry_from_artifacts(
         registry
             .load_from_path(name, Arc::new(engine), path)
             .map_err(|e| PgprError::Config(e.to_string()))?;
-        eprintln!("{log_prefix}loaded model `{name}` from {path}");
+        log_event(
+            Level::Info,
+            "artifact_loaded",
+            vec![
+                ("model", Json::Str(name.clone())),
+                ("path", Json::Str(path.clone())),
+                ("context", Json::Str(context.to_string())),
+            ],
+        );
     }
     Ok(registry)
 }
@@ -302,6 +311,8 @@ pub struct FitCmd {
     pub support: usize,
     /// Artifact output path.
     pub save: String,
+    /// Print the fit-phase profiler breakdown after fitting.
+    pub profile: bool,
 }
 
 /// `pgpr fit` — fit a serving engine and save it as a model artifact
@@ -328,6 +339,14 @@ pub fn cmd_fit(c: &FitCmd) -> Result<()> {
         engine.backend_name(),
         c.save
     );
+    if c.profile {
+        // Same phase taxonomy the registry exports via `/models/{name}`
+        // (`fit_phases_s`), so offline and serving views agree.
+        match engine.fit_profiler() {
+            Some(prof) => print!("{}", prof.report()),
+            None => println!("  (no fit profile recorded for backend {})", engine.backend_name()),
+        }
+    }
     Ok(())
 }
 
@@ -353,10 +372,19 @@ pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
             }
             let (name, path) = &specs[0];
             let engine = artifact::load_engine(path)?;
-            eprintln!("loaded model `{name}` from {path} (no training data touched)");
+            log_event(
+                Level::Info,
+                "artifact_loaded",
+                vec![
+                    ("model", Json::Str(name.clone())),
+                    ("path", Json::Str(path.clone())),
+                    ("context", Json::Str("serve-stdin".into())),
+                ],
+            );
             return serve_stdin(c, engine, name);
         }
-        let registry = registry_from_artifacts(&c.models, &c.opts, c.registry_options(0), "")?;
+        let registry =
+            registry_from_artifacts(&c.models, &c.opts, c.registry_options(0), "serve")?;
         let server = Server::start_with_registry(registry, &c.opts)?;
         return serve_http_run(c, server, "artifacts");
     }
@@ -376,8 +404,13 @@ fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     let backend = engine.backend_name();
     let mode = if c.opts.f32_u {
         if matches!(engine, ServeEngine::Parallel(_)) {
-            eprintln!(
-                "--f32-u: cluster backends have no f32 context; serving the exact f64 path"
+            log_event(
+                Level::Info,
+                "f32u_fallback",
+                vec![(
+                    "reason",
+                    Json::Str("cluster backends have no f32 context; serving exact f64".into()),
+                )],
             );
         }
         PredictMode::F32U
@@ -387,13 +420,18 @@ fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     let mut svc = PredictionService::with_engine(engine, c.opts.batch_size)?
         .with_max_delay(Duration::from_micros(c.opts.max_delay_us))
         .with_predict_mode(mode);
-    eprintln!(
-        "serving {} (dim {}, batch {}, backend {}); protocol: `predict v1,v2,...` | `flush` | EOF",
-        name,
-        svc.dim(),
-        c.opts.batch_size,
-        backend
+    log_event(
+        Level::Info,
+        "serving",
+        vec![
+            ("model", Json::Str(name.to_string())),
+            ("protocol", Json::Str("stdin".into())),
+            ("dim", Json::Num(svc.dim() as f64)),
+            ("batch", Json::Num(c.opts.batch_size as f64)),
+            ("backend", Json::Str(backend.to_string())),
+        ],
     );
+    eprintln!("protocol: `predict v1,v2,...` | `flush` | EOF");
     let stdin = std::io::stdin();
     let mut next_id = 0u64;
     for line in stdin.lock().lines() {
@@ -425,7 +463,7 @@ fn serve_stdin(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
                 println!("{} {:.6} {:.6}", r.id, r.mean, r.var);
             }
         } else {
-            eprintln!("unknown command: {line}");
+            log_event(Level::Info, "unknown_command", vec![("line", Json::Str(line.to_string()))]);
         }
     }
     for r in svc.flush()? {
@@ -463,17 +501,25 @@ fn serve_http_run(c: &ServeCmd, server: Server, name: &str) -> Result<()> {
     let addr = server.addr();
     let models: Vec<String> =
         server.registry().list().into_iter().map(|i| i.name).collect();
-    eprintln!(
-        "serving {name} [{}] on http://{addr} (workers {}, batch {}, max-delay {}µs, queue {}, keep-alive {})",
-        models.join(", "),
-        c.opts.workers,
-        c.opts.batch_size,
-        c.opts.max_delay_us,
-        c.opts.queue_capacity,
-        if c.opts.keep_alive { "on" } else { "off" }
+    log_event(
+        Level::Info,
+        "serving",
+        vec![
+            ("model", Json::Str(name.to_string())),
+            ("protocol", Json::Str("http".into())),
+            ("addr", Json::Str(addr.to_string())),
+            ("models", Json::Arr(models.iter().map(|m| Json::Str(m.clone())).collect())),
+            ("workers", Json::Num(c.opts.workers as f64)),
+            ("batch", Json::Num(c.opts.batch_size as f64)),
+            ("max_delay_us", Json::Num(c.opts.max_delay_us as f64)),
+            ("queue", Json::Num(c.opts.queue_capacity as f64)),
+            ("keep_alive", Json::Bool(c.opts.keep_alive)),
+            ("trace", Json::Bool(c.opts.trace)),
+        ],
     );
     eprintln!(
-        "endpoints: POST /predict  GET/PUT/DELETE /models[/name]  GET /healthz  GET /metrics — `quit` on stdin stops"
+        "endpoints: POST /predict[?trace=1]  GET/PUT/DELETE /models[/name]  GET /healthz  \
+         GET /readyz  GET /metrics[?format=json]  GET /debug/trace — `quit` on stdin stops"
     );
     // Machine-readable bound address on stdout so scripts can pick up
     // the ephemeral port from `--listen 127.0.0.1:0`.
@@ -490,7 +536,7 @@ fn serve_http_run(c: &ServeCmd, server: Server, name: &str) -> Result<()> {
     if !quit {
         // Stdin closed (detached/daemonized run, `… </dev/null &`):
         // keep serving until the process is killed.
-        eprintln!("stdin closed; serving until the process is terminated");
+        log_event(Level::Info, "stdin_closed", vec![("detached", Json::Bool(true))]);
         loop {
             std::thread::park();
         }
@@ -570,7 +616,7 @@ fn boot_self_server(c: &LoadtestCmd) -> Result<Server> {
     }
     if !c.artifacts.is_empty() {
         let registry =
-            registry_from_artifacts(&c.artifacts, &opts, RegistryOptions::default(), "loadtest: ")?;
+            registry_from_artifacts(&c.artifacts, &opts, RegistryOptions::default(), "loadtest")?;
         return Server::start_with_registry(registry, &opts);
     }
     if !c.models.is_empty() {
@@ -594,7 +640,16 @@ fn boot_self_server(c: &LoadtestCmd) -> Result<Server> {
             registry
                 .load(name, Arc::new(engine))
                 .map_err(|e| PgprError::Config(e.to_string()))?;
-            eprintln!("loadtest: fitted model `{name}` (|S|={support}, B=1+{i} capped)");
+            log_event(
+                Level::Info,
+                "model_fitted",
+                vec![
+                    ("model", Json::Str(name.clone())),
+                    ("support", Json::Num(support as f64)),
+                    ("order_base", Json::Num((1 + i) as f64)),
+                    ("context", Json::Str("loadtest".into())),
+                ],
+            );
         }
         return Server::start_with_registry(registry, &opts);
     }
@@ -710,6 +765,7 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
         fields.push(("train", Json::Num(c.train as f64)));
         fields.push(("batch_size", Json::Num(c.opts.batch_size as f64)));
         fields.push(("max_delay_us", Json::Num(c.opts.max_delay_us as f64)));
+        fields.push(("trace", Json::Bool(c.opts.trace)));
         // Per-model server-side histograms (each model batches its own
         // traffic), so multi-model runs aren't summarized by just the
         // default model's numbers.
@@ -911,6 +967,7 @@ pub fn dispatch() -> Result<()> {
                 .flag("order", "1", "B — Markov order (clamped to M−1)")
                 .flag("support", "0", "|S| — support set size (0 = auto from |D|)")
                 .required("save", "artifact output path, e.g. model.pgpr")
+                .switch("profile", "print the per-phase fit profiler breakdown")
                 .parse_from(rest)?;
             cmd_fit(&FitCmd {
                 dataset: a.get("dataset"),
@@ -921,6 +978,7 @@ pub fn dispatch() -> Result<()> {
                 order: a.get_usize("order"),
                 support: a.get_usize("support"),
                 save: a.get("save"),
+                profile: a.get_bool("profile"),
             })
         }
         "serve" => {
@@ -970,6 +1028,17 @@ pub fn dispatch() -> Result<()> {
                      accumulation (mean within 1e-5 relative of the f64 path; \
                      centralized engines only)",
                 )
+                .switch(
+                    "no-trace",
+                    "disable request-scoped stage tracing (histograms, ring buffer, ?trace=1)",
+                )
+                .flag("trace-ring", "256", "per-model trace ring capacity (last N requests)")
+                .flag(
+                    "slow-request-us",
+                    "0",
+                    "log a structured slow_request event for requests at or above this \
+                     latency in microseconds (0 = off)",
+                )
                 .parse_from(rest)?;
             let opts = ServeOptions {
                 listen: a.get("listen"),
@@ -981,6 +1050,9 @@ pub fn dispatch() -> Result<()> {
                 idle_timeout_ms: a.get_usize("idle-timeout-ms") as u64,
                 max_conn_requests: a.get_usize("max-conn-requests"),
                 f32_u: a.get_bool("f32-u"),
+                trace: !a.get_bool("no-trace"),
+                trace_ring: a.get_usize("trace-ring"),
+                slow_request_us: a.get_usize("slow-request-us") as u64,
             };
             cmd_serve(&ServeCmd {
                 dataset: a.get("dataset"),
@@ -1052,6 +1124,7 @@ pub fn dispatch() -> Result<()> {
                 .flag("requests", "200", "total requests to send")
                 .flag("rows", "1", "rows per request")
                 .flag("out", "BENCH_serve_latency.json", "output record path")
+                .switch("no-trace", "self-mode: serve with stage tracing disabled")
                 .parse_from(rest)?;
             cmd_loadtest(&LoadtestCmd {
                 addr: a.get("addr"),
@@ -1065,6 +1138,7 @@ pub fn dispatch() -> Result<()> {
                     batch_size: a.get_usize("batch"),
                     max_delay_us: a.get_usize("max-delay-us") as u64,
                     queue_capacity: a.get_usize("queue"),
+                    trace: !a.get_bool("no-trace"),
                     ..ServeOptions::default()
                 },
                 concurrency: a.get_usize("concurrency"),
@@ -1084,7 +1158,7 @@ pub fn dispatch() -> Result<()> {
                  USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full] [--backend sim|threads[:N]]\n  \
                  pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
                  pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
-                 pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0]\n  \
+                 pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0] [--profile]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
                  \u{20}          [--model name=model.pgpr ...] [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
                  pgpr observe --addr HOST:PORT --csv data.csv [--model default --batch-rows 64 --buffer --limit 0]\n  \
@@ -1149,6 +1223,7 @@ mod tests {
             order: 1,
             support: 16,
             save: save.clone(),
+            profile: true,
         })
         .unwrap();
         let engine = artifact::load_engine(&save).unwrap();

@@ -25,9 +25,10 @@ use crate::lma::f32u::PredictMode;
 use crate::lma::parallel::ParallelLma;
 use crate::lma::residual::LmaFitCore;
 use crate::lma::LmaRegressor;
+use crate::obs::{Stage, StageSet};
 use crate::server::metrics::ServeMetrics;
 use crate::util::error::{PgprError, Result};
-use crate::util::timer::time_it;
+use crate::util::timer::{time_it, PhaseProfiler};
 
 /// Which prediction engine answers batches: the single-process
 /// centralized regressor, or the parallel engine on a cluster backend
@@ -84,6 +85,32 @@ impl ServeEngine {
         match self {
             ServeEngine::Centralized(m) => m.predict_with_mode(x, mode, scratch),
             ServeEngine::Parallel(m) => m.predict(x).map(|r| r.prediction),
+        }
+    }
+
+    /// [`predict_with_mode`](Self::predict_with_mode), also returning the
+    /// call's phase profile — the serving layer's per-stage attribution
+    /// source (centralized engines report their real predict phases;
+    /// parallel engines charge the whole protocol to `predict/parallel`).
+    pub fn predict_traced(
+        &self,
+        x: &Mat,
+        mode: PredictMode,
+        scratch: &mut PredictScratch,
+    ) -> Result<(Prediction, PhaseProfiler)> {
+        match self {
+            ServeEngine::Centralized(m) => m.predict_traced(x, mode, scratch),
+            ServeEngine::Parallel(m) => m.predict_traced(x),
+        }
+    }
+
+    /// Fit-time phase profile, when the engine keeps one (centralized
+    /// engines; cluster engines charge fit to per-rank accounting, so
+    /// they have no phase taxonomy to report).
+    pub fn fit_profiler(&self) -> Option<&PhaseProfiler> {
+        match self {
+            ServeEngine::Centralized(m) => Some(m.profiler()),
+            ServeEngine::Parallel(_) => None,
         }
     }
 
@@ -163,6 +190,17 @@ pub struct Response {
     pub var: f64,
     /// Wall-clock seconds between enqueue and answer batch completion.
     pub latency: f64,
+    /// Stage breakdown of the batch that answered this request (engine
+    /// phases are shared batch-wide; per-request queue/batch-form stages
+    /// are layered on by the batcher). Zeroed when tracing is off.
+    pub stages: StageSet,
+    /// 1-based sequence number of the answering batch — lets a caller
+    /// holding several responses merge engine stages once per batch
+    /// (0 = tracing off).
+    pub batch: u64,
+    /// Seconds this request waited after service enqueue for its batch
+    /// to fill or expire (0 when tracing is off).
+    pub batch_form_s: f64,
 }
 
 /// Batching predictor over a fitted LMA engine. The engine is held
@@ -188,6 +226,12 @@ pub struct PredictionService {
     /// Arithmetic mode batches are answered in (`--f32-u` opts into
     /// [`PredictMode::F32U`]; default is the exact f64 path).
     mode: PredictMode,
+    /// Per-stage attribution: when on, batches run the traced engine path
+    /// and every [`Response`] carries its stage breakdown (default on —
+    /// the bench asserts the recorder's p50 cost stays under 5%).
+    trace: bool,
+    /// 1-based counter of flushed batches, stamped into [`Response::batch`].
+    batch_seq: u64,
     /// Serving statistics (kept as plain fields for back-compat).
     pub served: usize,
     pub batches: usize,
@@ -233,6 +277,8 @@ impl PredictionService {
             metrics,
             scratch: PredictScratch::new(),
             mode: PredictMode::F64,
+            trace: true,
+            batch_seq: 0,
             served: 0,
             batches: 0,
             total_latency: 0.0,
@@ -262,6 +308,17 @@ impl PredictionService {
 
     pub fn predict_mode(&self) -> PredictMode {
         self.mode
+    }
+
+    /// Builder-style tracing switch (`--no-trace` turns the per-stage
+    /// recorder off for overhead measurement).
+    pub fn with_trace(mut self, trace: bool) -> PredictionService {
+        self.trace = trace;
+        self
+    }
+
+    pub fn trace(&self) -> bool {
+        self.trace
     }
 
     /// Shared metrics handle (same object the service records into).
@@ -332,20 +389,41 @@ impl PredictionService {
         if self.queue.is_empty() {
             return Ok(Vec::new());
         }
+        let flush_start = Instant::now();
         let batch: Vec<(Request, Instant)> = std::mem::take(&mut self.queue);
         let mut x = Mat::zeros(batch.len(), self.dim());
         for (i, (req, _)) in batch.iter().enumerate() {
             x.row_mut(i).copy_from_slice(&req.x);
         }
         let engine = Arc::clone(&self.engine);
-        let (pred, secs) =
-            time_it(|| engine.predict_with_mode(&x, self.mode, &mut self.scratch));
-        let pred: Prediction = pred?;
+        // Traced batches run the profiled engine path and convert its
+        // phase totals into stage times; any engine wall-clock the
+        // profiler didn't attribute (scatter, phase edges) folds into
+        // `engine_other` so a request's stage sum tracks its latency.
+        let mut stages = StageSet::new();
+        let (pred, secs) = if self.trace {
+            let (res, secs) =
+                time_it(|| engine.predict_traced(&x, self.mode, &mut self.scratch));
+            let (pred, prof) = res?;
+            stages = StageSet::from_profiler(&prof);
+            let gap = secs - stages.sum();
+            if gap > 0.0 {
+                stages.add(Stage::EngineOther, gap);
+            }
+            self.metrics.stages.record_set(&stages);
+            (pred, secs)
+        } else {
+            let (res, secs) =
+                time_it(|| engine.predict_with_mode(&x, self.mode, &mut self.scratch));
+            (res?, secs)
+        };
         self.predict_secs += secs;
         self.batches += 1;
+        self.batch_seq += 1;
         self.metrics.batches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.metrics.batch_rows.record(batch.len() as u64);
         self.metrics.predict_us.record((secs * 1e6) as u64);
+        let batch_seq = if self.trace { self.batch_seq } else { 0 };
         let mut out = Vec::with_capacity(batch.len());
         for (i, (req, t0)) in batch.into_iter().enumerate() {
             let latency = t0.elapsed().as_secs_f64();
@@ -353,7 +431,22 @@ impl PredictionService {
             self.served += 1;
             self.metrics.latency_us.record((latency * 1e6) as u64);
             self.metrics.responses.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            out.push(Response { id: req.id, mean: pred.mean[i], var: pred.var[i], latency });
+            let batch_form_s = if self.trace {
+                let wait = flush_start.saturating_duration_since(t0).as_secs_f64();
+                self.metrics.stages.record(Stage::BatchForm, wait);
+                wait
+            } else {
+                0.0
+            };
+            out.push(Response {
+                id: req.id,
+                mean: pred.mean[i],
+                var: pred.var[i],
+                latency,
+                stages,
+                batch: batch_seq,
+                batch_form_s,
+            });
         }
         Ok(out)
     }
@@ -511,6 +604,41 @@ mod tests {
             assert!((e.mean - r.mean).abs() < 1e-5, "{} vs {}", e.mean, r.mean);
             assert!((e.var - r.var).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn traced_batches_carry_stage_breakdowns() {
+        let mut s = service(2);
+        assert!(s.trace());
+        s.submit(Request { id: 1, x: vec![0.2] }).unwrap();
+        let out = s.submit(Request { id: 2, x: vec![0.9] }).unwrap();
+        assert_eq!(out.len(), 2);
+        for r in &out {
+            assert_eq!(r.batch, 1, "first flushed batch");
+            // Engine phases were recorded and cover most of the latency
+            // (queue-wait is the batcher's layer, absent here).
+            let engine_s: f64 = r.stages.sum();
+            assert!(engine_s > 0.0);
+            assert!(
+                engine_s + r.batch_form_s <= r.latency * 1.5 + 1e-3,
+                "stage sum {engine_s} vs latency {}",
+                r.latency
+            );
+        }
+        // Second batch gets the next sequence number.
+        s.submit(Request { id: 3, x: vec![-0.4] }).unwrap();
+        let out2 = s.submit(Request { id: 4, x: vec![1.4] }).unwrap();
+        assert_eq!(out2[0].batch, 2);
+        // The shared metrics saw the engine stages + batch formation.
+        let m = s.metrics();
+        assert!(m.stages.get(crate::obs::Stage::SweepRbarDu).count() >= 1);
+        assert_eq!(m.stages.get(crate::obs::Stage::BatchForm).count(), 4);
+        // Tracing off: no stage work, sentinel batch 0.
+        let mut off = service(1).with_trace(false);
+        let out3 = off.submit(Request { id: 9, x: vec![0.1] }).unwrap();
+        assert_eq!(out3[0].batch, 0);
+        assert_eq!(out3[0].stages.sum(), 0.0);
+        assert_eq!(off.metrics().stages.get(crate::obs::Stage::BatchForm).count(), 0);
     }
 
     #[test]

@@ -70,6 +70,7 @@ pub mod data;
 pub mod metrics;
 pub mod config;
 pub mod coordinator;
+pub mod obs;
 pub mod registry;
 pub mod server;
 pub mod experiments;

@@ -94,6 +94,31 @@ impl LmaRegressor {
         }
     }
 
+    /// [`predict_with_mode`](Self::predict_with_mode), but also returning
+    /// this call's phase profile — the serving layer's per-stage
+    /// attribution source. The f32-u path runs as one `predict/f32u`
+    /// phase (its interior skips the f64 phase boundaries by design).
+    pub fn predict_traced(
+        &self,
+        test_x: &Mat,
+        mode: PredictMode,
+        scratch: &mut PredictScratch,
+    ) -> Result<(Prediction, PhaseProfiler)> {
+        match mode {
+            PredictMode::F64 => match legacy_mode() {
+                LegacyMode::Dense => self.predict_dense(test_x, false),
+                m => {
+                    self.predict_mode_with(test_x, false, m == LegacyMode::Recompute, scratch)
+                }
+            },
+            PredictMode::F32U => {
+                let mut prof = PhaseProfiler::new();
+                let pred = prof.scope("predict/f32u", || self.predict_f32u(test_x))?;
+                Ok((pred, prof))
+            }
+        }
+    }
+
     /// Predict reusing a caller-owned scratch workspace (the serving
     /// batcher holds one per thread, so steady-state traffic recycles the
     /// per-call buffers instead of reallocating them).
@@ -102,12 +127,7 @@ impl LmaRegressor {
         test_x: &Mat,
         scratch: &mut PredictScratch,
     ) -> Result<Prediction> {
-        match legacy_mode() {
-            LegacyMode::Dense => self.predict_dense(test_x, false).map(|(p, _)| p),
-            mode => self
-                .predict_mode_with(test_x, false, mode == LegacyMode::Recompute, scratch)
-                .map(|(p, _)| p),
-        }
+        self.predict_traced(test_x, PredictMode::F64, scratch).map(|(p, _)| p)
     }
 
     /// Predict with options; returns the prediction and the phase profile
@@ -155,7 +175,7 @@ impl LmaRegressor {
         };
         let mm = self.core.m();
         let ts = prof.scope("predict/test_side", || TestSide::build(&self.core, test_x))?;
-        scratch.ensure_blocks(mm);
+        prof.scope("predict/scratch_acquire", || scratch.ensure_blocks(mm));
         let PredictScratch { sbar, udot, vu, rbar, qtmp, terms, gsum, colbuf } = scratch;
         prof.scope("predict/sweep_rbar_du", || {
             rbar_du_blocks_in(&self.core, ctx, &ts, &mut *rbar, &mut *qtmp)

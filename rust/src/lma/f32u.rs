@@ -38,6 +38,16 @@ pub enum PredictMode {
     F32U,
 }
 
+impl PredictMode {
+    /// Short label for structured logs and trace output.
+    pub fn name(self) -> &'static str {
+        match self {
+            PredictMode::F64 => "f64",
+            PredictMode::F32U => "f32u",
+        }
+    }
+}
+
 /// One-time f32 copies of the test-independent predict tensors, derived
 /// from the fitted core + its [`PredictContext`] — never persisted in
 /// artifacts (rebuilt on load/generation swap, so it can never drift from

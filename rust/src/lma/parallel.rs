@@ -180,6 +180,19 @@ impl ParallelLma {
         self.predict_opts(test_x, legacy_mode() != LegacyMode::Off)
     }
 
+    /// [`predict`](Self::predict) with a phase profile for the serving
+    /// layer's stage attribution. The whole cluster protocol is charged
+    /// to one `predict/parallel` phase — splitting it per wavefront/rank
+    /// needs backend-side spans (the TCP-cluster roadmap item).
+    pub fn predict_traced(
+        &self,
+        test_x: &Mat,
+    ) -> Result<(Prediction, crate::util::timer::PhaseProfiler)> {
+        let mut prof = crate::util::timer::PhaseProfiler::new();
+        let run = prof.scope("predict/parallel", || self.predict(test_x))?;
+        Ok((run.prediction, prof))
+    }
+
     /// [`predict`](Self::predict) with the context mode chosen
     /// explicitly (`recompute_context` = the old per-call behavior).
     pub fn predict_opts(&self, test_x: &Mat, recompute_context: bool) -> Result<ParallelRun> {

@@ -1,0 +1,174 @@
+//! Structured JSON line logger, gated by the `PGPR_LOG` environment
+//! variable.
+//!
+//! Each event is one JSON object on one line, written to stderr with a
+//! single `write_all` so concurrent threads never interleave mid-line:
+//!
+//! ```text
+//! {"ts_ms":1765432100123,"level":"info","event":"model_loaded","model":"live","generation":1}
+//! ```
+//!
+//! Levels: `PGPR_LOG=off|info|debug` (default `info`). `debug` adds a
+//! per-request event on the predict path; `off` silences everything,
+//! which the latency bench uses to measure the logger's cost envelope.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Log severity, ordered: `Off < Info < Debug`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off,
+    Info,
+    Debug,
+}
+
+impl Level {
+    /// Parse a `PGPR_LOG` value; unknown values fall back to `Info` so a
+    /// typo never silences the log.
+    pub fn parse(s: &str) -> Level {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "0" => Level::Off,
+            "debug" | "2" => Level::Debug,
+            _ => Level::Info,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// The configured level (reads `PGPR_LOG` once; default `Info`).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("PGPR_LOG") {
+        Ok(v) => Level::parse(&v),
+        Err(_) => Level::Info,
+    })
+}
+
+/// Whether an event at `at` passes the configured gate. Pure so the
+/// gating truth table is unit-testable without touching the env.
+pub fn gate(at: Level, configured: Level) -> bool {
+    at != Level::Off && configured >= at
+}
+
+/// Whether an event at `at` would be emitted under the process config.
+pub fn enabled(at: Level) -> bool {
+    gate(at, level())
+}
+
+/// Serialize one event line into `w` (the testable core of
+/// [`log_event`]): `ts_ms` + `level` + `event` then the caller's fields.
+pub fn write_event_to<W: Write>(
+    w: &mut W,
+    at: Level,
+    event: &str,
+    fields: Vec<(&str, Json)>,
+) -> std::io::Result<()> {
+    let ts_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0);
+    let mut all: Vec<(&str, Json)> = Vec::with_capacity(fields.len() + 3);
+    all.push(("ts_ms", Json::Num(ts_ms as f64)));
+    all.push(("level", Json::Str(at.name().into())));
+    all.push(("event", Json::Str(event.into())));
+    all.extend(fields);
+    let mut line = Json::obj(all).to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())
+}
+
+/// Emit a structured event to stderr if the level gate passes. The line
+/// is built off-lock and written with one `write_all`; write errors are
+/// swallowed (logging must never take down the serving path).
+pub fn log_event(at: Level, event: &str, fields: Vec<(&str, Json)>) {
+    if !enabled(at) {
+        return;
+    }
+    let stderr = std::io::stderr();
+    let mut lock = stderr.lock();
+    let _ = write_event_to(&mut lock, at, event, fields);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("off"), Level::Off);
+        assert_eq!(Level::parse("NONE"), Level::Off);
+        assert_eq!(Level::parse("0"), Level::Off);
+        assert_eq!(Level::parse("info"), Level::Info);
+        assert_eq!(Level::parse("1"), Level::Info);
+        assert_eq!(Level::parse("Debug"), Level::Debug);
+        assert_eq!(Level::parse("2"), Level::Debug);
+        // Unknown values keep the default rather than going silent.
+        assert_eq!(Level::parse("verbose"), Level::Info);
+    }
+
+    #[test]
+    fn gate_truth_table() {
+        // configured = Off silences everything.
+        assert!(!gate(Level::Info, Level::Off));
+        assert!(!gate(Level::Debug, Level::Off));
+        // configured = Info passes info, drops debug.
+        assert!(gate(Level::Info, Level::Info));
+        assert!(!gate(Level::Debug, Level::Info));
+        // configured = Debug passes both.
+        assert!(gate(Level::Info, Level::Debug));
+        assert!(gate(Level::Debug, Level::Debug));
+        // An event can never be logged "at Off".
+        assert!(!gate(Level::Off, Level::Debug));
+    }
+
+    #[test]
+    fn event_line_is_one_json_object() {
+        let mut buf = Vec::new();
+        write_event_to(
+            &mut buf,
+            Level::Info,
+            "model_loaded",
+            vec![
+                ("model", Json::Str("live".into())),
+                ("generation", Json::Num(3.0)),
+            ],
+        )
+        .unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        assert!(line.ends_with('\n'));
+        let parsed = Json::parse(line.trim()).unwrap();
+        assert_eq!(parsed.get("event").and_then(|v| v.as_str()), Some("model_loaded"));
+        assert_eq!(parsed.get("level").and_then(|v| v.as_str()), Some("info"));
+        assert_eq!(parsed.get("model").and_then(|v| v.as_str()), Some("live"));
+        assert_eq!(parsed.get("generation").and_then(|v| v.as_usize()), Some(3));
+        assert!(parsed.get("ts_ms").and_then(|v| v.as_f64()).unwrap_or(-1.0) >= 0.0);
+    }
+
+    #[test]
+    fn event_fields_escape_cleanly() {
+        let mut buf = Vec::new();
+        write_event_to(
+            &mut buf,
+            Level::Debug,
+            "request",
+            vec![("request_id", Json::Str("a\"b\nc".into()))],
+        )
+        .unwrap();
+        let line = String::from_utf8(buf).unwrap();
+        assert_eq!(line.matches('\n').count(), 1, "escaped newline must not split the line");
+        let parsed = Json::parse(line.trim()).unwrap();
+        assert_eq!(parsed.get("request_id").and_then(|v| v.as_str()), Some("a\"b\nc"));
+    }
+}

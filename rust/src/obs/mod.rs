@@ -1,0 +1,21 @@
+//! Observability: request-scoped tracing, per-stage latency attribution
+//! and structured JSON logging for the serving + online-update pipeline.
+//!
+//! Everything here is std-only and allocation-light on the hot path:
+//!
+//! * [`trace`] — the fixed [`Stage`] taxonomy, the [`StageSet`]
+//!   per-request stage accumulator (a `Copy` array, no heap), the
+//!   [`TraceRing`] per-model ring buffer of completed request traces,
+//!   and the process-wide trace-ID counter.
+//! * [`log`] — the `PGPR_LOG`-gated structured line logger (one JSON
+//!   object per line, one `write_all` per event).
+//! * [`query`] — the shared query-string parser used by `/predict`,
+//!   `/debug/trace` and `/metrics`.
+
+pub mod log;
+pub mod query;
+pub mod trace;
+
+pub use log::{log_event, Level};
+pub use query::{parse_query, Query};
+pub use trace::{next_trace_id, Stage, StageSet, TraceEntry, TraceRing, ALL_STAGES, STAGE_COUNT};

@@ -1,0 +1,95 @@
+//! Minimal query-string parsing shared by the HTTP handlers.
+//!
+//! One parser for `/predict?trace=1`, `/debug/trace?model=&n=` and
+//! `/metrics?format=json` instead of ad-hoc `split('?')` per handler.
+//! Zero-copy (borrows the request target); no percent-decoding — the
+//! server's query values are plain identifiers and small integers.
+
+/// Split a request target into its path and parsed query.
+pub fn parse_query(target: &str) -> (&str, Query<'_>) {
+    match target.split_once('?') {
+        Some((path, q)) => (path, Query::parse(q)),
+        None => (target, Query { params: Vec::new() }),
+    }
+}
+
+/// Parsed query parameters, in order of appearance.
+#[derive(Debug)]
+pub struct Query<'a> {
+    params: Vec<(&'a str, &'a str)>,
+}
+
+impl<'a> Query<'a> {
+    fn parse(q: &'a str) -> Query<'a> {
+        let params = q
+            .split('&')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.split_once('=').unwrap_or((p, "")))
+            .collect();
+        Query { params }
+    }
+
+    /// The first value for `key`, if present.
+    pub fn get(&self, key: &str) -> Option<&'a str> {
+        self.params.iter().find(|(k, _)| *k == key).map(|(_, v)| *v)
+    }
+
+    /// The first value for `key` parsed as an integer.
+    pub fn get_usize(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Boolean switch: present with no value, `1` or `true` ⇒ on;
+    /// absent, `0` or `false` (or anything else) ⇒ off.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("" | "1" | "true"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_path_and_params() {
+        let (path, q) = parse_query("/debug/trace?model=live&n=16");
+        assert_eq!(path, "/debug/trace");
+        assert_eq!(q.get("model"), Some("live"));
+        assert_eq!(q.get_usize("n"), Some(16));
+        assert_eq!(q.get("missing"), None);
+    }
+
+    #[test]
+    fn no_query_is_empty() {
+        let (path, q) = parse_query("/metrics");
+        assert_eq!(path, "/metrics");
+        assert_eq!(q.get("format"), None);
+        assert!(!q.flag("anything"));
+    }
+
+    #[test]
+    fn flags() {
+        let (_, q) = parse_query("/predict?trace=1");
+        assert!(q.flag("trace"));
+        let (_, q) = parse_query("/predict?trace");
+        assert!(q.flag("trace"));
+        let (_, q) = parse_query("/predict?trace=true");
+        assert!(q.flag("trace"));
+        let (_, q) = parse_query("/predict?trace=0");
+        assert!(!q.flag("trace"));
+        let (_, q) = parse_query("/predict?trace=false");
+        assert!(!q.flag("trace"));
+    }
+
+    #[test]
+    fn odd_shapes_are_tolerated() {
+        let (path, q) = parse_query("/p?&&a=1&b&=x&c=");
+        assert_eq!(path, "/p");
+        assert_eq!(q.get("a"), Some("1"));
+        assert_eq!(q.get("b"), Some(""));
+        assert_eq!(q.get("c"), Some(""));
+        // First occurrence wins.
+        let (_, q) = parse_query("/p?k=1&k=2");
+        assert_eq!(q.get_usize("k"), Some(1));
+    }
+}

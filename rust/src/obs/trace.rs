@@ -1,0 +1,395 @@
+//! The stage taxonomy, per-request stage accumulator and the per-model
+//! trace ring buffer.
+//!
+//! A *stage* is one leg of a request's journey through the serving
+//! pipeline (HTTP parse → queue wait → batch formation → the engine's
+//! predict phases → serialize) or through the online-update path
+//! (drain → absorb → publish). The taxonomy is a fixed enum so a
+//! request's whole breakdown fits in one `Copy` array ([`StageSet`]) —
+//! recording a stage is an array store, never an allocation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::timer::PhaseProfiler;
+
+/// Number of stages in the taxonomy (the length of a [`StageSet`]).
+pub const STAGE_COUNT: usize = 16;
+
+/// One leg of the request pipeline. The discriminant is the index into
+/// [`StageSet`] / the per-stage histogram array, so the order is ABI for
+/// the metrics layer — append, never reorder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Stage {
+    /// Reading + parsing the HTTP request head and body.
+    HttpParse = 0,
+    /// Enqueue into the batcher until the batcher thread dequeues it.
+    QueueWait = 1,
+    /// Dequeued but waiting for the micro-batch to fill or expire.
+    BatchForm = 2,
+    /// Per-batch scratch pool acquisition/resize inside the engine.
+    ScratchAcquire = 3,
+    /// Test-side kernel columns (k_S* and per-block k_m*).
+    TestSide = 4,
+    /// The banded R̄_DU sweep.
+    SweepRbarDu = 5,
+    /// The Σ̄ diagonal assembly.
+    SigmaBar = 6,
+    /// Per-block local summaries.
+    LocalSummaries = 7,
+    /// Global summary reduction.
+    GlobalSummary = 8,
+    /// The Theorem-2 predictive tail (S-side solves).
+    Theorem2 = 9,
+    /// The reduced-precision f32 U-side path (when `--f32-u` is active).
+    F32U = 10,
+    /// Engine time not attributed to a named phase (parallel backends,
+    /// legacy paths, profiler gaps).
+    EngineOther = 11,
+    /// Response JSON construction + write.
+    Serialize = 12,
+    /// Online update: draining the ingest buffer + planning the blocks.
+    ObserveDrain = 13,
+    /// Online update: the incremental `absorb` seam recompute.
+    ObserveAbsorb = 14,
+    /// Online update: building + publishing the new engine generation.
+    ObservePublish = 15,
+}
+
+/// Every stage, in index order.
+pub const ALL_STAGES: [Stage; STAGE_COUNT] = [
+    Stage::HttpParse,
+    Stage::QueueWait,
+    Stage::BatchForm,
+    Stage::ScratchAcquire,
+    Stage::TestSide,
+    Stage::SweepRbarDu,
+    Stage::SigmaBar,
+    Stage::LocalSummaries,
+    Stage::GlobalSummary,
+    Stage::Theorem2,
+    Stage::F32U,
+    Stage::EngineOther,
+    Stage::Serialize,
+    Stage::ObserveDrain,
+    Stage::ObserveAbsorb,
+    Stage::ObservePublish,
+];
+
+impl Stage {
+    /// The metric label value (`pgpr_stage_seconds{stage="..."}`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::HttpParse => "http_parse",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchForm => "batch_form",
+            Stage::ScratchAcquire => "scratch_acquire",
+            Stage::TestSide => "test_side",
+            Stage::SweepRbarDu => "sweep_rbar_du",
+            Stage::SigmaBar => "sigma_bar",
+            Stage::LocalSummaries => "local_summaries",
+            Stage::GlobalSummary => "global_summary",
+            Stage::Theorem2 => "theorem2",
+            Stage::F32U => "f32u",
+            Stage::EngineOther => "engine_other",
+            Stage::Serialize => "serialize",
+            Stage::ObserveDrain => "observe_drain",
+            Stage::ObserveAbsorb => "observe_absorb",
+            Stage::ObservePublish => "observe_publish",
+        }
+    }
+
+    /// Map a [`PhaseProfiler`] phase name onto the serving taxonomy.
+    /// Named engine predict phases map one-to-one; unnamed `predict/…`
+    /// time (parallel backends, legacy recompute) folds into
+    /// [`Stage::EngineOther`]; non-predict phases (`fit/…`) are not
+    /// serving stages.
+    pub fn from_phase(phase: &str) -> Option<Stage> {
+        match phase {
+            "predict/scratch_acquire" => Some(Stage::ScratchAcquire),
+            "predict/test_side" => Some(Stage::TestSide),
+            "predict/sweep_rbar_du" => Some(Stage::SweepRbarDu),
+            "predict/sigma_bar" => Some(Stage::SigmaBar),
+            "predict/local_summaries" => Some(Stage::LocalSummaries),
+            "predict/global_summary" => Some(Stage::GlobalSummary),
+            "predict/theorem2" => Some(Stage::Theorem2),
+            "predict/f32u" => Some(Stage::F32U),
+            p if p.starts_with("predict/") => Some(Stage::EngineOther),
+            _ => None,
+        }
+    }
+}
+
+/// Per-request stage accumulator: seconds spent in each stage. `Copy`
+/// and fixed-size so it travels through the batcher reply channel and
+/// into the trace ring without allocating.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageSet {
+    secs: [f64; STAGE_COUNT],
+}
+
+impl StageSet {
+    pub fn new() -> StageSet {
+        StageSet::default()
+    }
+
+    /// Add `secs` to a stage.
+    pub fn add(&mut self, stage: Stage, secs: f64) {
+        self.secs[stage as usize] += secs;
+    }
+
+    /// Seconds recorded for a stage.
+    pub fn get(&self, stage: Stage) -> f64 {
+        self.secs[stage as usize]
+    }
+
+    /// Total attributed seconds across all stages.
+    pub fn sum(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    /// Element-wise accumulate another set into this one.
+    pub fn merge(&mut self, other: &StageSet) {
+        for (a, b) in self.secs.iter_mut().zip(&other.secs) {
+            *a += b;
+        }
+    }
+
+    /// Convert an engine-side [`PhaseProfiler`] run into stage times
+    /// (predict phases only; see [`Stage::from_phase`]).
+    pub fn from_profiler(prof: &PhaseProfiler) -> StageSet {
+        let mut set = StageSet::new();
+        for (phase, secs) in prof.phases() {
+            if let Some(stage) = Stage::from_phase(phase) {
+                set.add(stage, secs);
+            }
+        }
+        set
+    }
+
+    /// The non-zero stages, in taxonomy order.
+    pub fn iter_nonzero(&self) -> impl Iterator<Item = (Stage, f64)> + '_ {
+        ALL_STAGES
+            .iter()
+            .map(move |&s| (s, self.secs[s as usize]))
+            .filter(|(_, v)| *v > 0.0)
+    }
+
+    /// JSON object of the non-zero stages: `{"queue_wait": 1.2e-4, …}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(self.iter_nonzero().map(|(s, v)| (s.name(), Json::Num(v))).collect())
+    }
+}
+
+/// Process-wide trace-ID counter (IDs are unique per process, never 0).
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Allocate the next request trace ID.
+pub fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One completed request trace, as stored in the ring.
+#[derive(Clone, Debug)]
+pub struct TraceEntry {
+    /// Process-assigned trace ID.
+    pub trace_id: u64,
+    /// Client-supplied `X-Request-Id` ("" when absent).
+    pub request_id: String,
+    /// Rows in the request.
+    pub rows: usize,
+    /// HTTP status the request was answered with.
+    pub status: u16,
+    /// End-to-end latency (submit → reply) in seconds.
+    pub total_s: f64,
+    /// The per-stage breakdown.
+    pub stages: StageSet,
+}
+
+impl TraceEntry {
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("trace_id", Json::Num(self.trace_id as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("status", Json::Num(self.status as f64)),
+            ("total_s", Json::Num(self.total_s)),
+            ("stages", self.stages.to_json()),
+        ];
+        if !self.request_id.is_empty() {
+            fields.insert(1, ("request_id", Json::Str(self.request_id.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Lock-cheap ring buffer of the last N completed traces. Writers claim
+/// a slot with one relaxed `fetch_add` and hold only that slot's mutex
+/// for the store — concurrent pushes to different slots never contend,
+/// and readers (`/debug/trace`) never block the whole ring.
+pub struct TraceRing {
+    slots: Vec<Mutex<Option<TraceEntry>>>,
+    head: AtomicU64,
+}
+
+impl TraceRing {
+    /// A ring holding the last `capacity` traces (0 disables recording).
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record a completed trace (drops it silently when capacity is 0).
+    pub fn push(&self, entry: TraceEntry) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let i = self.head.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        if let Ok(mut slot) = self.slots[i].lock() {
+            *slot = Some(entry);
+        }
+    }
+
+    /// The last `n` completed traces, newest first.
+    pub fn last(&self, n: usize) -> Vec<TraceEntry> {
+        let cap = self.slots.len();
+        if cap == 0 || n == 0 {
+            return Vec::new();
+        }
+        let head = self.head.load(Ordering::Relaxed) as usize;
+        let take = n.min(cap).min(head);
+        let mut out = Vec::with_capacity(take);
+        for k in 0..take {
+            let idx = (head - 1 - k) % cap;
+            if let Ok(slot) = self.slots[idx].lock() {
+                if let Some(e) = slot.as_ref() {
+                    out.push(e.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_match_taxonomy_order() {
+        for (i, s) in ALL_STAGES.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+        }
+        assert_eq!(Stage::QueueWait.name(), "queue_wait");
+        assert_eq!(Stage::ObservePublish as usize, STAGE_COUNT - 1);
+    }
+
+    #[test]
+    fn phase_mapping_covers_predict_taxonomy() {
+        assert_eq!(Stage::from_phase("predict/sweep_rbar_du"), Some(Stage::SweepRbarDu));
+        assert_eq!(Stage::from_phase("predict/theorem2"), Some(Stage::Theorem2));
+        assert_eq!(Stage::from_phase("predict/f32u"), Some(Stage::F32U));
+        // Unnamed predict time folds into the engine bucket…
+        assert_eq!(Stage::from_phase("predict/parallel"), Some(Stage::EngineOther));
+        assert_eq!(Stage::from_phase("predict/context_recompute"), Some(Stage::EngineOther));
+        // …and fit phases are not serving stages.
+        assert_eq!(Stage::from_phase("fit/core"), None);
+    }
+
+    #[test]
+    fn stage_set_accumulates_and_sums() {
+        let mut s = StageSet::new();
+        s.add(Stage::QueueWait, 0.5);
+        s.add(Stage::QueueWait, 0.25);
+        s.add(Stage::Serialize, 0.125);
+        assert_eq!(s.get(Stage::QueueWait), 0.75);
+        assert_eq!(s.sum(), 0.875);
+        let mut t = StageSet::new();
+        t.add(Stage::Serialize, 0.125);
+        t.merge(&s);
+        assert_eq!(t.get(Stage::Serialize), 0.25);
+        let nz: Vec<_> = t.iter_nonzero().map(|(s, _)| s.name()).collect();
+        assert_eq!(nz, vec!["queue_wait", "serialize"]);
+    }
+
+    #[test]
+    fn stage_set_from_profiler_maps_phases() {
+        let mut prof = PhaseProfiler::new();
+        prof.add("predict/test_side", 0.1);
+        prof.add("predict/theorem2", 0.2);
+        prof.add("predict/parallel", 0.4);
+        prof.add("fit/core", 9.0);
+        let s = StageSet::from_profiler(&prof);
+        assert_eq!(s.get(Stage::TestSide), 0.1);
+        assert_eq!(s.get(Stage::Theorem2), 0.2);
+        assert_eq!(s.get(Stage::EngineOther), 0.4);
+        assert!((s.sum() - 0.7).abs() < 1e-12, "fit phases must not leak in");
+    }
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a > 0 && b > a);
+    }
+
+    #[test]
+    fn ring_wraps_and_returns_newest_first() {
+        let ring = TraceRing::new(4);
+        assert!(ring.last(8).is_empty());
+        for i in 1..=10u64 {
+            ring.push(TraceEntry {
+                trace_id: i,
+                request_id: String::new(),
+                rows: 1,
+                status: 200,
+                total_s: 0.001,
+                stages: StageSet::new(),
+            });
+        }
+        let ids: Vec<u64> = ring.last(8).iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![10, 9, 8, 7], "capacity 4 keeps the last 4, newest first");
+        let ids: Vec<u64> = ring.last(2).iter().map(|e| e.trace_id).collect();
+        assert_eq!(ids, vec![10, 9]);
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_inert() {
+        let ring = TraceRing::new(0);
+        ring.push(TraceEntry {
+            trace_id: 1,
+            request_id: "abc".into(),
+            rows: 1,
+            status: 200,
+            total_s: 0.0,
+            stages: StageSet::new(),
+        });
+        assert!(ring.last(4).is_empty());
+    }
+
+    #[test]
+    fn trace_entry_json_includes_request_id_only_when_set() {
+        let mut stages = StageSet::new();
+        stages.add(Stage::QueueWait, 0.25);
+        let e = TraceEntry {
+            trace_id: 7,
+            request_id: "client-1".into(),
+            rows: 2,
+            status: 200,
+            total_s: 0.5,
+            stages,
+        };
+        let s = e.to_json().to_string();
+        assert!(s.contains("\"request_id\":\"client-1\""), "{s}");
+        assert!(s.contains("\"queue_wait\":0.25"), "{s}");
+        let e2 = TraceEntry { request_id: String::new(), ..e };
+        assert!(!e2.to_json().to_string().contains("request_id"));
+    }
+}

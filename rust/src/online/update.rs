@@ -81,6 +81,17 @@ impl UpdateStats {
     pub fn touched(&self) -> usize {
         self.touched_blocks.len()
     }
+
+    /// `(phase, seconds)` pairs in pipeline order — the structured
+    /// observe log and the update trace both walk this.
+    pub fn phase_pairs(&self) -> [(&'static str, f64); 4] {
+        [
+            ("band_secs", self.band_secs),
+            ("factor_secs", self.factor_secs),
+            ("ctx_secs", self.ctx_secs),
+            ("reduce_secs", self.reduce_secs),
+        ]
+    }
 }
 
 /// Absorb `new_x`/`new_y` into `core` per `plan`, producing a complete

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::{PredictionService, ServeEngine};
 use crate::lma::PredictMode;
+use crate::obs::{log_event, Level, Stage};
 use crate::online::{absorb, BlockPolicy, ObservationBuffer};
 use crate::registry::artifact::{self, SnapshotCache};
 use crate::server::batcher::{self, BatcherHandle};
@@ -265,11 +266,16 @@ pub struct ModelInfo {
     /// generation.
     pub inflight: u64,
     pub seq: u64,
+    /// Fit-time phase breakdown (`fit/…` seconds) recorded by the
+    /// engine's profiler when it was fitted in-process — the same
+    /// taxonomy `pgpr fit --profile` prints. Empty for engines without
+    /// one (parallel backends, artifact loads).
+    pub fit_phases: Vec<(String, f64)>,
 }
 
 impl ModelInfo {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::Str(self.name.clone())),
             ("backend", Json::Str(self.backend.clone())),
             ("dim", Json::Num(self.dim as f64)),
@@ -284,7 +290,16 @@ impl ModelInfo {
             ("rows", Json::Num(self.rows as f64)),
             ("inflight", Json::Num(self.inflight as f64)),
             ("loaded_seq", Json::Num(self.seq as f64)),
-        ])
+        ];
+        if !self.fit_phases.is_empty() {
+            fields.push((
+                "fit_phases_s",
+                Json::obj(
+                    self.fit_phases.iter().map(|(k, v)| (k.as_str(), Json::Num(*v))).collect(),
+                ),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -298,6 +313,10 @@ struct BatchParams {
     /// Serve every model through the reduced-precision f32 U-side path
     /// (`ServeOptions::f32_u`).
     mode: PredictMode,
+    /// Per-request stage tracing (`ServeOptions::trace`).
+    trace: bool,
+    /// Capacity of each model's completed-trace ring.
+    trace_ring: usize,
 }
 
 /// The registry: name → resident model.
@@ -331,6 +350,8 @@ impl ModelRegistry {
                 max_delay_us: serve.max_delay_us,
                 queue_capacity: serve.queue_capacity,
                 mode: if serve.f32_u { PredictMode::F32U } else { PredictMode::F64 },
+                trace: serve.trace,
+                trace_ring: serve.trace_ring,
             },
         }
     }
@@ -390,11 +411,18 @@ impl ModelRegistry {
         {
             return Err(RegistryError::InvalidName(name.to_string()));
         }
-        let svc = PredictionService::with_shared(Arc::clone(&engine), self.batch.batch_size)
-            .map_err(|e| RegistryError::Internal(e.to_string()))?
-            .with_max_delay(Duration::from_micros(self.batch.max_delay_us))
-            .with_predict_mode(self.batch.mode);
-        let metrics = svc.metrics();
+        // Tracing off ⇒ a zero-capacity (inert) trace ring.
+        let ring = if self.batch.trace { self.batch.trace_ring } else { 0 };
+        let metrics = Arc::new(ServeMetrics::with_trace_capacity(ring));
+        let svc = PredictionService::with_shared_metrics(
+            Arc::clone(&engine),
+            self.batch.batch_size,
+            Arc::clone(&metrics),
+        )
+        .map_err(|e| RegistryError::Internal(e.to_string()))?
+        .with_max_delay(Duration::from_micros(self.batch.max_delay_us))
+        .with_predict_mode(self.batch.mode)
+        .with_trace(self.batch.trace);
 
         let mut map = self.models.write().expect("registry lock");
         if map.contains_key(name) {
@@ -424,6 +452,11 @@ impl ModelRegistry {
         self.track_join(join);
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let ingest = Arc::new(IngestState::new(&engine, snapshot_path));
+        let backend = engine.backend_name();
+        let (dim, train_rows) = {
+            let core = engine.core();
+            (core.hyp.dim(), core.part.total())
+        };
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             engine,
@@ -442,6 +475,17 @@ impl ModelRegistry {
         if default.is_none() {
             *default = Some(name.to_string());
         }
+        drop(default);
+        log_event(
+            Level::Info,
+            "model_loaded",
+            vec![
+                ("model", Json::Str(name.to_string())),
+                ("backend", Json::Str(backend)),
+                ("dim", Json::Num(dim as f64)),
+                ("train_rows", Json::Num(train_rows as f64)),
+            ],
+        );
         Ok(())
     }
 
@@ -464,7 +508,8 @@ impl ModelRegistry {
         )
         .map_err(|e| RegistryError::Internal(e.to_string()))?
         .with_max_delay(Duration::from_micros(self.batch.max_delay_us))
-        .with_predict_mode(self.batch.mode);
+        .with_predict_mode(self.batch.mode)
+        .with_trace(self.batch.trace);
         // Spawn the new batcher *before* taking the write lock: thread
         // creation must not stall every concurrent lookup. If the swap
         // check then fails, dropping the handle makes the thread exit and
@@ -589,8 +634,10 @@ impl ModelRegistry {
             });
         }
 
+        let t_drain = Instant::now();
         let (batch_x, batch_y) = g.buffer.drain();
         let plan = g.policy.plan(core.part.size(core.m() - 1), batch_x.rows());
+        let drain_secs = t_drain.elapsed().as_secs_f64();
         let t0 = Instant::now();
         let absorbed = absorb(core, &batch_x, &batch_y, &plan, entry.engine.update_parallelism());
         let (new_core, stats) = match absorbed {
@@ -601,6 +648,8 @@ impl ModelRegistry {
                 return Err(RegistryError::Internal(format!("incremental update failed: {e}")));
             }
         };
+        let absorb_secs = t0.elapsed().as_secs_f64();
+        let t_publish = Instant::now();
         let new_engine = match entry.engine.with_core(new_core) {
             Ok(v) => Arc::new(v),
             Err(e) => {
@@ -615,8 +664,25 @@ impl ModelRegistry {
                 return Err(e);
             }
         };
+        let publish_secs = t_publish.elapsed().as_secs_f64();
         let update_secs = t0.elapsed().as_secs_f64();
         entry.metrics.observe_us.record((update_secs * 1e6) as u64);
+        if self.batch.trace {
+            entry.metrics.stages.record(Stage::ObserveDrain, drain_secs);
+            entry.metrics.stages.record(Stage::ObserveAbsorb, absorb_secs);
+            entry.metrics.stages.record(Stage::ObservePublish, publish_secs);
+        }
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("model", Json::Str(model.clone())),
+            ("generation", Json::Num(new_entry.generation as f64)),
+            ("applied_rows", Json::Num(stats.rows_added as f64)),
+            ("touched_blocks", Json::Num(stats.touched() as f64)),
+            ("update_secs", Json::Num(update_secs)),
+        ];
+        for (k, v) in stats.phase_pairs() {
+            fields.push((k, Json::Num(v)));
+        }
+        log_event(Level::Info, "generation_published", fields);
 
         // Optional in-place artifact rewrite: untouched blocks reuse the
         // previous snapshot's encoded bytes. A failure here is reported
@@ -709,9 +775,24 @@ impl ModelRegistry {
             return Err(RegistryError::Protected(name.to_string()));
         }
         match map.remove(name) {
-            Some(_) => Ok(()),
+            Some(_) => {
+                log_event(
+                    Level::Info,
+                    "model_evicted",
+                    vec![("model", Json::Str(name.to_string()))],
+                );
+                Ok(())
+            }
             None => Err(RegistryError::NotFound(name.to_string())),
         }
+    }
+
+    /// Readiness for `/readyz`: at least one model resident and every
+    /// resident model's batcher thread alive. (`/healthz` is liveness —
+    /// the process answers; this is "can actually serve a predict".)
+    pub fn ready(&self) -> bool {
+        let map = self.models.read().expect("registry lock");
+        !map.is_empty() && map.values().all(|e| e.handle.is_running())
     }
 
     /// Stable-ordered (by load sequence) descriptions of every resident
@@ -738,6 +819,11 @@ impl ModelRegistry {
                     rows: e.metrics.responses.load(Ordering::Relaxed),
                     inflight: e.inflight(),
                     seq: e.seq,
+                    fit_phases: e
+                        .engine
+                        .fit_profiler()
+                        .map(|p| p.phases().map(|(k, v)| (k.to_string(), v)).collect())
+                        .unwrap_or_default(),
                 }
             })
             .collect();
@@ -959,6 +1045,27 @@ mod tests {
         drop(gen0);
         drop(gen1);
         reg.shutdown();
+    }
+
+    #[test]
+    fn readiness_tracks_residents_and_observe_records_stages() {
+        let reg = registry(4, true);
+        assert!(!reg.ready(), "empty registry is not ready");
+        reg.load("live", engine(41)).unwrap();
+        assert!(reg.ready());
+        let info = reg.list().into_iter().find(|i| i.name == "live").unwrap();
+        assert!(!info.fit_phases.is_empty(), "in-process fit exports its profiler phases");
+        assert!(info.fit_phases.iter().any(|(k, _)| k.starts_with("fit/")));
+        assert!(info.to_json().to_string().contains("fit_phases_s"));
+        reg.observe(Some("live"), &[vec![4.4]], &[4.4f64.sin()], false, true)
+            .unwrap();
+        let entry = reg.get("live").unwrap();
+        assert_eq!(entry.metrics().stages.get(Stage::ObserveDrain).count(), 1);
+        assert_eq!(entry.metrics().stages.get(Stage::ObserveAbsorb).count(), 1);
+        assert_eq!(entry.metrics().stages.get(Stage::ObservePublish).count(), 1);
+        drop(entry);
+        reg.shutdown();
+        assert!(!reg.ready(), "shutdown empties the registry");
     }
 
     #[test]

@@ -21,13 +21,14 @@
 //! handles drop, the thread drains the queue, flushes and exits.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::coordinator::service::{PredictionService, Request, Response};
+use crate::obs::{Stage, StageSet};
 use crate::server::metrics::ServeMetrics;
 use crate::util::error::{PgprError, Result};
 
@@ -38,6 +39,9 @@ pub struct BatchReply {
     pub var: Vec<f64>,
     /// Seconds between enqueue and the last row's batch completing.
     pub latency_s: f64,
+    /// Per-stage breakdown (queue wait, batch formation, engine phases).
+    /// All-zero when the service was built with tracing off.
+    pub stages: StageSet,
 }
 
 /// Why a submit failed — mapped to HTTP status codes by the server.
@@ -82,11 +86,19 @@ pub struct BatcherHandle {
     /// depth whose saturation produces `Overloaded`/503.
     depth: Arc<AtomicU64>,
     metrics: Arc<ServeMetrics>,
+    /// True while the batcher thread is inside its loop — cleared on any
+    /// exit, including a panic (see `RunningGuard`). `/readyz` reads this.
+    running: Arc<AtomicBool>,
 }
 
 impl BatcherHandle {
     pub fn dim(&self) -> usize {
         self.dim
+    }
+
+    /// Whether the batcher thread is still alive and serving.
+    pub fn is_running(&self) -> bool {
+        self.running.load(Ordering::Relaxed)
     }
 
     /// Submit one or more rows and block until the micro-batcher answers
@@ -140,6 +152,25 @@ struct Waiter {
     remaining: usize,
     mean: Vec<f64>,
     var: Vec<f64>,
+    /// Seconds the request sat in the bounded queue before dequeue.
+    queue_wait_s: f64,
+    /// Engine stage times, merged once per answering batch.
+    stages: StageSet,
+    /// Worst batch-formation wait across this request's rows.
+    batch_form_max: f64,
+    /// Last batch sequence merged into `stages` (0 = none / tracing off),
+    /// so a request spanning batches counts each batch's engine time once.
+    last_batch: u64,
+}
+
+/// Clears the handle-visible `running` flag when the batcher thread
+/// exits its loop — on a clean drain *or* an unwind.
+struct RunningGuard(Arc<AtomicBool>);
+
+impl Drop for RunningGuard {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::Relaxed);
+    }
 }
 
 /// Spawn the batcher thread over a configured service (batch size and
@@ -154,15 +185,22 @@ pub fn spawn(
     let metrics = svc.metrics();
     let depth = Arc::new(AtomicU64::new(0));
     let depth_rx = Arc::clone(&depth);
+    let running = Arc::new(AtomicBool::new(true));
+    let running_rx = Arc::clone(&running);
     let (tx, rx) = sync_channel::<Incoming>(queue_capacity.max(1));
     let join = std::thread::Builder::new()
         .name("pgpr-batcher".into())
-        .spawn(move || run_loop(svc, rx, depth_rx))
+        .spawn(move || {
+            let _guard = RunningGuard(running_rx);
+            run_loop(svc, rx, depth_rx);
+        })
         .map_err(|e| PgprError::Io(format!("spawn batcher thread: {e}")))?;
-    Ok((BatcherHandle { tx, dim, depth, metrics }, join))
+    Ok((BatcherHandle { tx, dim, depth, metrics, running }, join))
 }
 
 fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<AtomicU64>) {
+    let metrics = svc.metrics();
+    let tracing = svc.trace();
     let mut waiters: HashMap<u64, Waiter> = HashMap::new();
     // Service request id → (waiter key, row slot within the waiter).
     let mut routes: HashMap<u64, (u64, usize)> = HashMap::new();
@@ -200,6 +238,13 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
         match msg {
             Some(inc) => {
                 depth.fetch_sub(1, Ordering::Relaxed);
+                let queue_wait_s = if tracing {
+                    let qw = inc.enqueued.elapsed().as_secs_f64();
+                    metrics.stages.record(Stage::QueueWait, qw);
+                    qw
+                } else {
+                    0.0
+                };
                 let wkey = next_waiter;
                 next_waiter += 1;
                 let n = inc.rows.len();
@@ -211,6 +256,10 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
                         remaining: n,
                         mean: vec![0.0; n],
                         var: vec![0.0; n],
+                        queue_wait_s,
+                        stages: StageSet::new(),
+                        batch_form_max: 0.0,
+                        last_batch: 0,
                     },
                 );
                 for (slot, row) in inc.rows.into_iter().enumerate() {
@@ -255,14 +304,31 @@ fn deliver(
             let w = waiters.get_mut(&wkey).expect("waiter exists for routed id");
             w.mean[slot] = resp.mean;
             w.var[slot] = resp.var;
+            // Engine stage times are per *batch*: merge them once per
+            // answering batch, not once per row, or a multi-row request
+            // answered by one batch would count the engine N times.
+            if resp.batch != 0 && resp.batch != w.last_batch {
+                w.stages.merge(&resp.stages);
+                w.last_batch = resp.batch;
+            }
+            if resp.batch_form_s > w.batch_form_max {
+                w.batch_form_max = resp.batch_form_s;
+            }
             w.remaining -= 1;
             w.remaining == 0
         };
         if done {
             let w = waiters.remove(&wkey).expect("completed waiter present");
             let latency_s = w.enqueued.elapsed().as_secs_f64();
+            let mut stages = w.stages;
+            if w.queue_wait_s > 0.0 {
+                stages.add(Stage::QueueWait, w.queue_wait_s);
+            }
+            if w.batch_form_max > 0.0 {
+                stages.add(Stage::BatchForm, w.batch_form_max);
+            }
             // Receiver may have given up (connection dropped): ignore.
-            let _ = w.reply.send(Ok(BatchReply { mean: w.mean, var: w.var, latency_s }));
+            let _ = w.reply.send(Ok(BatchReply { mean: w.mean, var: w.var, latency_s, stages }));
         }
     }
 }
@@ -387,6 +453,30 @@ mod tests {
         }
         drop(h);
         j.join().unwrap();
+    }
+
+    #[test]
+    fn replies_carry_stage_breakdowns_and_running_clears_on_exit() {
+        let (h, j, _model) = batcher(4, 1000);
+        assert!(h.is_running());
+        let rep = h.submit(vec![vec![-0.5], vec![0.5]]).unwrap();
+        assert!(rep.stages.sum() > 0.0, "traced reply must carry a stage breakdown");
+        assert!(
+            rep.stages.get(Stage::QueueWait) > 0.0,
+            "queue wait is recorded at dequeue (monotonic clock, > 0)"
+        );
+        // The attributed stages can never exceed the end-to-end latency by
+        // more than timer noise.
+        assert!(
+            rep.stages.sum() <= rep.latency_s * 1.5 + 1e-3,
+            "stages {} vs latency {}",
+            rep.stages.sum(),
+            rep.latency_s
+        );
+        let running = Arc::clone(&h.running);
+        drop(h);
+        j.join().unwrap();
+        assert!(!running.load(Ordering::Relaxed), "guard clears the flag on exit");
     }
 
     #[test]

@@ -25,9 +25,19 @@
 //!   400 bad artifact, 409 duplicate, 507 capacity.
 //! * `DELETE /models/<name>` — evict (404 unknown, 409 default model).
 //! * `GET /healthz` — liveness + default-engine description + model list.
+//! * `GET /readyz` — readiness: 200 iff ≥ 1 model is resident and every
+//!   batcher thread is alive, else 503.
 //! * `GET /metrics` — Prometheus text: the boot-default model's full
-//!   histogram section (back-compat) plus `pgpr_models_resident` and a
-//!   `{model="…"}`-labeled section per resident model.
+//!   histogram section (back-compat) plus `pgpr_models_resident`, a
+//!   `{model="…"}`-labeled section per resident model and per-stage
+//!   `pgpr_stage_seconds` quantiles; `?format=json` returns the same
+//!   numbers as one JSON object.
+//! * `GET /debug/trace?model=<name>&n=<count>` — the last `n` completed
+//!   request traces (per-stage breakdowns) from the model's trace ring.
+//!
+//! `POST /predict?trace=1` inlines the answering request's own stage
+//! breakdown under a `"trace"` key; an `X-Request-Id` header is echoed
+//! into traces and structured log events (see [`crate::obs`]).
 //!
 //! Every response — including every error — carries `Content-Type`, an
 //! exact byte-accurate `Content-Length` and an explicit `Connection`
@@ -44,10 +54,11 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::ServeEngine;
+use crate::obs::{log_event, next_trace_id, parse_query, Level, Query, Stage, TraceEntry};
 use crate::registry::artifact;
 use crate::registry::registry::{ModelRegistry, RegistryError};
 use crate::server::batcher::SubmitError;
@@ -82,6 +93,12 @@ struct Shared {
     /// bounded by one in-flight request plus one poll slice, not by how
     /// long a client keeps its connection alive.
     stop: Arc<AtomicBool>,
+    /// Per-request stage tracing (`ServeOptions::trace`): when off, the
+    /// predict path records no stages, pushes no traces and `?trace=1`
+    /// is ignored.
+    trace: bool,
+    /// `slow_request` log threshold in microseconds (0 = off).
+    slow_request_us: u64,
 }
 
 /// A running HTTP serving stack (acceptor + workers + registry batchers).
@@ -132,6 +149,8 @@ impl Server {
             idle_timeout: Duration::from_millis(opts.idle_timeout_ms.max(1)),
             max_conn_requests: opts.max_conn_requests.max(1),
             stop: Arc::clone(&stop),
+            trace: opts.trace,
+            slow_request_us: opts.slow_request_us,
         });
 
         let mut workers = Vec::with_capacity(opts.workers);
@@ -282,6 +301,13 @@ struct HttpRequest {
     version: String,
     /// Raw `Connection` header value, lowercased ("" when absent).
     connection: String,
+    /// Client-supplied `X-Request-Id` ("" when absent), clamped to 128
+    /// chars — echoed into traces and structured log events.
+    request_id: String,
+    /// Seconds from the request's first byte to the parsed request
+    /// (socket read + head parse), excluding keep-alive idle wait —
+    /// the `http_parse` stage.
+    parse_s: f64,
     body: Vec<u8>,
 }
 
@@ -331,6 +357,9 @@ fn read_request(
 ) -> ReadOutcome {
     let started = std::time::Instant::now();
     let mut buf: Vec<u8> = std::mem::take(leftover);
+    // Parse-time clock starts at the request's first byte, not at the
+    // idle wait before it (keep-alive think-time is not `http_parse`).
+    let mut first_byte: Option<Instant> = if buf.is_empty() { None } else { Some(started) };
     let mut tmp = [0u8; 4096];
     let header_end = loop {
         if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
@@ -342,7 +371,12 @@ fn read_request(
         match stream.read(&mut tmp) {
             Ok(0) if buf.is_empty() => return ReadOutcome::Eof,
             Ok(0) => return ReadOutcome::Malformed("connection closed mid-request".into()),
-            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Ok(n) => {
+                if first_byte.is_none() {
+                    first_byte = Some(Instant::now());
+                }
+                buf.extend_from_slice(&tmp[..n]);
+            }
             Err(e) if is_timeout(&e) => {
                 if buf.is_empty() {
                     // Waiting for a request to start: shutdown and the
@@ -375,6 +409,7 @@ fn read_request(
     }
     let mut content_length = 0usize;
     let mut connection = String::new();
+    let mut request_id = String::new();
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             let name = name.trim();
@@ -385,6 +420,8 @@ fn read_request(
                 };
             } else if name.eq_ignore_ascii_case("connection") {
                 connection = value.trim().to_ascii_lowercase();
+            } else if name.eq_ignore_ascii_case("x-request-id") {
+                request_id = value.trim().chars().take(128).collect();
             }
         }
     }
@@ -411,12 +448,21 @@ fn read_request(
     // request on the same connection.
     *leftover = buf.split_off(total);
     let body = buf.split_off(header_end + 4);
-    ReadOutcome::Request(HttpRequest { method, path, version, connection, body })
+    let parse_s = first_byte.map(|t| t.elapsed().as_secs_f64()).unwrap_or(0.0);
+    ReadOutcome::Request(HttpRequest {
+        method,
+        path,
+        version,
+        connection,
+        request_id,
+        parse_s,
+        body,
+    })
 }
 
 fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
     // Match on the path alone — `/predict?trace=1` still routes.
-    let path = req.path.split('?').next().unwrap_or("");
+    let (path, query) = parse_query(&req.path);
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => {
             let list = shared.registry.list();
@@ -438,8 +484,23 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
             ]);
             (200, "application/json", j.to_string())
         }
-        ("GET", "/metrics") => (200, "text/plain; charset=utf-8", metrics_text(shared)),
-        ("POST", "/predict") => handle_predict(&req.body, shared),
+        ("GET", "/readyz") => {
+            let ready = shared.registry.ready();
+            let j = Json::obj(vec![
+                ("ready", Json::Bool(ready)),
+                ("models", Json::Num(shared.registry.len() as f64)),
+            ]);
+            (if ready { 200 } else { 503 }, "application/json", j.to_string())
+        }
+        ("GET", "/metrics") => {
+            if query.get("format") == Some("json") {
+                (200, "application/json", metrics_json(shared))
+            } else {
+                (200, "text/plain; charset=utf-8", metrics_text(shared))
+            }
+        }
+        ("GET", "/debug/trace") => handle_debug_trace(&query, shared),
+        ("POST", "/predict") => handle_predict(req, &query, shared),
         ("GET", "/models") => {
             let infos: Vec<Json> = shared.registry.list().iter().map(|i| i.to_json()).collect();
             let default = shared.registry.default_name().unwrap_or_default();
@@ -507,6 +568,38 @@ fn metrics_text(shared: &Shared) -> String {
         s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
     }
     s
+}
+
+/// `GET /metrics?format=json`: the same counters/histograms as the text
+/// page, as one JSON object (primary section + one per resident model).
+fn metrics_json(shared: &Shared) -> String {
+    let by_model = shared.registry.metrics_by_model();
+    let models = Json::obj(by_model.iter().map(|(n, m)| (n.as_str(), m.to_json())).collect());
+    Json::obj(vec![
+        ("models_resident", Json::Num(by_model.len() as f64)),
+        ("primary", shared.metrics.to_json()),
+        ("models", models),
+    ])
+    .to_string()
+}
+
+/// `GET /debug/trace?model=<name>&n=<count>` — the last `n` completed
+/// request traces of one model (the default model when unnamed), newest
+/// first, from its trace ring.
+fn handle_debug_trace(query: &Query<'_>, shared: &Shared) -> (u16, &'static str, String) {
+    let entry = match shared.registry.entry_for(query.get("model")) {
+        Ok(e) => e,
+        Err(e) => return registry_error_response(&e),
+    };
+    let n = query.get_usize("n").unwrap_or(32);
+    let traces: Vec<Json> =
+        entry.metrics().trace.last(n).iter().map(|t| t.to_json()).collect();
+    let j = Json::obj(vec![
+        ("model", Json::Str(entry.name().to_string())),
+        ("capacity", Json::Num(entry.metrics().trace.capacity() as f64)),
+        ("traces", Json::Arr(traces)),
+    ]);
+    (200, "application/json", j.to_string())
 }
 
 fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {
@@ -689,8 +782,13 @@ fn handle_model_admin(
     }
 }
 
-fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
-    let text = match std::str::from_utf8(body) {
+fn handle_predict(
+    request: &HttpRequest,
+    query: &Query<'_>,
+    shared: &Shared,
+) -> (u16, &'static str, String) {
+    let t0 = Instant::now();
+    let text = match std::str::from_utf8(&request.body) {
         Ok(t) => t,
         Err(_) => return (400, "application/json", error_body("body is not utf-8")),
     };
@@ -715,6 +813,15 @@ fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
         Ok(r) => r,
         Err(msg) => return (400, "application/json", error_body(&msg)),
     };
+    let n_rows = rows.len();
+    let trace_on = shared.trace;
+    // `?trace=1` inlines this request's own stage breakdown (only
+    // meaningful while tracing is enabled).
+    let want_inline = trace_on && query.flag("trace");
+    let trace_id = next_trace_id();
+    // Handler time before the batcher submit: body JSON parse + model
+    // resolution — folded into `http_parse` with the socket read.
+    let pre_s = t0.elapsed().as_secs_f64();
     // Count this request as in flight against the resolved generation
     // until the batcher answers (guard decrements on every exit path) —
     // `/metrics` exposes the gauge as `pgpr_generation_inflight`.
@@ -724,14 +831,73 @@ fn handle_predict(body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
             // Count the hit only once the model actually answered, so
             // per-model counters reflect served traffic, not 400s/503s.
             entry.record_hit();
-            let j = Json::obj(vec![
-                ("model", Json::Str(entry.name().to_string())),
-                ("generation", Json::Num(entry.generation() as f64)),
-                ("mean", Json::arr_f64(&rep.mean)),
-                ("var", Json::arr_f64(&rep.var)),
-                ("latency_s", Json::Num(rep.latency_s)),
-            ]);
-            (200, "application/json", j.to_string())
+            let base_fields = |rep: &crate::server::batcher::BatchReply| {
+                vec![
+                    ("model", Json::Str(entry.name().to_string())),
+                    ("generation", Json::Num(entry.generation() as f64)),
+                    ("mean", Json::arr_f64(&rep.mean)),
+                    ("var", Json::arr_f64(&rep.var)),
+                    ("latency_s", Json::Num(rep.latency_s)),
+                ]
+            };
+            let t_ser = Instant::now();
+            let mut body_out = Json::obj(base_fields(&rep)).to_string();
+            let serialize_s = t_ser.elapsed().as_secs_f64();
+            if trace_on {
+                let http_parse_s = request.parse_s + pre_s;
+                let mut stages = rep.stages;
+                stages.add(Stage::HttpParse, http_parse_s);
+                stages.add(Stage::Serialize, serialize_s);
+                entry.metrics().stages.record(Stage::HttpParse, http_parse_s);
+                entry.metrics().stages.record(Stage::Serialize, serialize_s);
+                let total_s = request.parse_s + t0.elapsed().as_secs_f64();
+                let trace = TraceEntry {
+                    trace_id,
+                    request_id: request.request_id.clone(),
+                    rows: n_rows,
+                    status: 200,
+                    total_s,
+                    stages,
+                };
+                if want_inline {
+                    // Re-serialize with the breakdown attached; the
+                    // measured `serialize_s` (the base payload, what
+                    // every untraced request pays) is what's reported.
+                    let mut fields = base_fields(&rep);
+                    fields.push(("trace", trace.to_json()));
+                    body_out = Json::obj(fields).to_string();
+                }
+                if shared.slow_request_us > 0
+                    && total_s * 1e6 >= shared.slow_request_us as f64
+                {
+                    log_event(
+                        Level::Info,
+                        "slow_request",
+                        vec![
+                            ("model", Json::Str(entry.name().to_string())),
+                            ("trace_id", Json::Num(trace_id as f64)),
+                            ("request_id", Json::Str(request.request_id.clone())),
+                            ("rows", Json::Num(n_rows as f64)),
+                            ("total_s", Json::Num(total_s)),
+                            ("stages", trace.stages.to_json()),
+                        ],
+                    );
+                }
+                log_event(
+                    Level::Debug,
+                    "request",
+                    vec![
+                        ("model", Json::Str(entry.name().to_string())),
+                        ("trace_id", Json::Num(trace_id as f64)),
+                        ("request_id", Json::Str(request.request_id.clone())),
+                        ("rows", Json::Num(n_rows as f64)),
+                        ("status", Json::Num(200.0)),
+                        ("total_s", Json::Num(total_s)),
+                    ],
+                );
+                entry.metrics().trace.push(trace);
+            }
+            (200, "application/json", body_out)
         }
         Err(SubmitError::BadRequest(m)) => (400, "application/json", error_body(&m)),
         Err(SubmitError::Overloaded) => {
@@ -840,6 +1006,8 @@ mod tests {
             path: "/healthz".into(),
             version: version.into(),
             connection: connection.into(),
+            request_id: String::new(),
+            parse_s: 0.0,
             body: Vec::new(),
         };
         assert!(req("HTTP/1.1", "").wants_keep_alive());

@@ -191,12 +191,34 @@ impl HttpConn {
         body: Option<&str>,
         close: bool,
     ) -> Result<(u16, String, bool)> {
+        self.request_with_headers(method, path, body, close, &[])
+    }
+
+    /// Like [`request_with`](Self::request_with) with extra request
+    /// headers appended verbatim (e.g. `X-Request-Id` for the tracing
+    /// path). Header names and values must be pre-sanitized (no CR/LF).
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+        close: bool,
+        extra_headers: &[(&str, &str)],
+    ) -> Result<(u16, String, bool)> {
         let body = body.unwrap_or("");
-        let req = format!(
-            "{method} {path} HTTP/1.1\r\nHost: pgpr\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n{body}",
+        let mut req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: pgpr\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n",
             body.len(),
             if close { "close" } else { "keep-alive" },
         );
+        for (name, value) in extra_headers {
+            req.push_str(name);
+            req.push_str(": ");
+            req.push_str(value);
+            req.push_str("\r\n");
+        }
+        req.push_str("\r\n");
+        req.push_str(body);
         self.stream.write_all(req.as_bytes())?;
         self.read_response()
     }

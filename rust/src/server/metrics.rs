@@ -13,6 +13,7 @@ use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
+use crate::obs::{Stage, StageSet, TraceRing, ALL_STAGES, STAGE_COUNT};
 use crate::util::json::Json;
 
 /// Values below this get exact unit buckets; above, log-linear octaves.
@@ -134,6 +135,43 @@ impl Default for Histogram {
     }
 }
 
+/// One [`Histogram`] per pipeline [`Stage`] (samples in microseconds).
+/// Same concurrency contract as the other histograms: relaxed atomics,
+/// no locks, written from connection workers + the batcher thread and
+/// read by `/metrics` renders.
+pub struct StageStats {
+    hists: [Histogram; STAGE_COUNT],
+}
+
+impl StageStats {
+    pub fn new() -> StageStats {
+        StageStats { hists: std::array::from_fn(|_| Histogram::new()) }
+    }
+
+    /// Record one stage duration.
+    pub fn record(&self, stage: Stage, secs: f64) {
+        self.hists[stage as usize].record((secs * 1e6) as u64);
+    }
+
+    /// Record every stage a request touched (the non-zero entries of its
+    /// [`StageSet`]).
+    pub fn record_set(&self, set: &StageSet) {
+        for (stage, secs) in set.iter_nonzero() {
+            self.record(stage, secs);
+        }
+    }
+
+    pub fn get(&self, stage: Stage) -> &Histogram {
+        &self.hists[stage as usize]
+    }
+}
+
+impl Default for StageStats {
+    fn default() -> Self {
+        StageStats::new()
+    }
+}
+
 /// Shared metrics for the serving path. All members use interior
 /// mutability (atomics), so one `Arc<ServeMetrics>` is read and written
 /// from connection workers, the batcher thread and `/metrics` renders
@@ -163,11 +201,26 @@ pub struct ServeMetrics {
     pub errors: AtomicU64,
     /// Batches flushed.
     pub batches: AtomicU64,
+    /// Per-stage latency attribution (`pgpr_stage_seconds`).
+    pub stages: StageStats,
+    /// Ring of the last N completed request traces (`GET /debug/trace`).
+    /// Lives here — not on the engine — so traces survive generation
+    /// swaps, like every other per-model series.
+    pub trace: TraceRing,
     started: Instant,
 }
 
+/// Trace-ring capacity when none is configured (`ServeOptions::trace_ring`).
+pub const DEFAULT_TRACE_RING: usize = 256;
+
 impl ServeMetrics {
     pub fn new() -> ServeMetrics {
+        ServeMetrics::with_trace_capacity(DEFAULT_TRACE_RING)
+    }
+
+    /// Metrics whose trace ring holds the last `trace_ring` requests
+    /// (0 disables trace recording entirely).
+    pub fn with_trace_capacity(trace_ring: usize) -> ServeMetrics {
         ServeMetrics {
             latency_us: Histogram::new(),
             predict_us: Histogram::new(),
@@ -179,6 +232,8 @@ impl ServeMetrics {
             responses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            stages: StageStats::new(),
+            trace: TraceRing::new(trace_ring),
             started: Instant::now(),
         }
     }
@@ -251,6 +306,22 @@ impl ServeMetrics {
             }
             let _ = writeln!(s, "{name}_mean{plain} {:.3}", snap.mean);
             let _ = writeln!(s, "{name}_max{plain} {}", snap.max);
+        }
+        // Per-stage attribution: only stages this model has actually
+        // touched, so an f64 model doesn't advertise empty f32u series.
+        for stage in ALL_STAGES.iter().copied() {
+            let h = self.stages.get(stage);
+            if h.count() == 0 {
+                continue;
+            }
+            let snap = h.snapshot();
+            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
+                let qs = lbl(&format!("stage=\"{}\",quantile=\"{q}\"", stage.name()));
+                let _ = writeln!(s, "pgpr_stage_seconds{qs} {:.6e}", v as f64 * 1e-6);
+            }
+            let ls = lbl(&format!("stage=\"{}\"", stage.name()));
+            let _ = writeln!(s, "pgpr_stage_seconds_mean{ls} {:.6e}", snap.mean * 1e-6);
+            let _ = writeln!(s, "pgpr_stage_seconds_count{ls} {}", snap.count);
         }
         s
     }
@@ -326,7 +397,32 @@ impl ServeMetrics {
                     ("max", Json::Num(obs.max as f64 * 1e-6)),
                 ]),
             ),
+            ("stages_s", self.stages_json()),
         ])
+    }
+
+    /// Per-stage quantile snapshot (seconds) of the stages this model has
+    /// touched — the `stages_s` member of [`to_json`](Self::to_json) and
+    /// the bench record's per-stage breakdown source.
+    pub fn stages_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        for stage in ALL_STAGES.iter().copied() {
+            let h = self.stages.get(stage);
+            if h.count() == 0 {
+                continue;
+            }
+            let sn = h.snapshot();
+            fields.push((
+                stage.name(),
+                Json::obj(vec![
+                    ("mean", Json::Num(sn.mean * 1e-6)),
+                    ("p50", Json::Num(sn.p50 as f64 * 1e-6)),
+                    ("p99", Json::Num(sn.p99 as f64 * 1e-6)),
+                    ("count", Json::Num(sn.count as f64)),
+                ]),
+            ));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -432,6 +528,29 @@ mod tests {
         let plain = m.render_prometheus();
         assert!(plain.contains("pgpr_requests_total 2"));
         assert!(plain.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
+    }
+
+    #[test]
+    fn stage_series_render_only_when_touched() {
+        let m = ServeMetrics::new();
+        m.stages.record(Stage::QueueWait, 0.0015);
+        let mut set = StageSet::new();
+        set.add(Stage::Serialize, 0.0002);
+        m.stages.record_set(&set);
+        let text = m.render_prometheus_with(Some(("model", "a")));
+        assert!(
+            text.contains("pgpr_stage_seconds{model=\"a\",stage=\"queue_wait\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(text.contains("pgpr_stage_seconds_count{model=\"a\",stage=\"serialize\"} 1"));
+        assert!(!text.contains("stage=\"f32u\""), "untouched stages must not render");
+        let j = m.to_json();
+        let stages = j.req("stages_s").unwrap();
+        assert_eq!(
+            stages.get("queue_wait").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+        assert!(stages.get("f32u").is_none());
     }
 
     #[test]

@@ -56,6 +56,12 @@ impl PhaseProfiler {
         self.totals.get(phase).copied().unwrap_or(0.0)
     }
 
+    /// Iterate `(phase, total_secs)` in name order (the serving layer's
+    /// stage mapping and the registry's fit-phase export both walk this).
+    pub fn phases(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.totals.iter().map(|(k, &v)| (k.as_str(), v))
+    }
+
     pub fn grand_total(&self) -> f64 {
         self.totals.values().sum()
     }

@@ -1,0 +1,278 @@
+//! End-to-end tests for the observability layer: request-scoped tracing
+//! (`?trace=1`, `X-Request-Id`), the per-model trace ring
+//! (`GET /debug/trace`), per-stage latency histograms on `/metrics`, and
+//! the `/healthz` + `/readyz` endpoint pair — all over a live HTTP stack
+//! on an ephemeral port.
+
+use pgpr::config::{LmaConfig, PartitionStrategy, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::LmaRegressor;
+use pgpr::server::loadgen::{http_request, HttpConn};
+use pgpr::server::Server;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+const N_TRAIN: usize = 150;
+
+fn fitted_model(seed: u64) -> LmaRegressor {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(N_TRAIN, -4.0, 4.0));
+    let y: Vec<f64> = (0..N_TRAIN).map(|i| x.get(i, 0).sin()).collect();
+    let cfg = LmaConfig {
+        num_blocks: 5,
+        markov_order: 1,
+        support_size: 24,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    };
+    LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap()
+}
+
+fn opts(batch: usize, max_delay_us: u64) -> ServeOptions {
+    ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 3,
+        batch_size: batch,
+        max_delay_us,
+        queue_capacity: 64,
+        ..ServeOptions::default()
+    }
+}
+
+/// One traced predict with a client-supplied request ID; returns the
+/// parsed response body (which carries the inline `trace` object).
+fn traced_predict(addr: &str, q: f64, request_id: &str) -> Json {
+    let body = Json::obj(vec![("x", Json::arr_f64(&[q]))]).to_string();
+    let mut conn = HttpConn::connect(addr).unwrap();
+    let (status, resp, _closes) = conn
+        .request_with_headers(
+            "POST",
+            "/predict?trace=1",
+            Some(&body),
+            true,
+            &[("X-Request-Id", request_id)],
+        )
+        .unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    Json::parse(&resp).unwrap()
+}
+
+/// Sum of a trace's per-stage seconds.
+fn stage_sum(stages: &Json) -> f64 {
+    match stages {
+        Json::Obj(map) => map.values().filter_map(|v| v.as_f64()).sum(),
+        _ => panic!("stages is not an object: {stages:?}"),
+    }
+}
+
+#[test]
+fn concurrent_traced_requests_get_their_own_breakdowns() {
+    let server = Server::start(ServeEngine::Centralized(fitted_model(51)), &opts(4, 1500)).unwrap();
+    let addr = server.addr().to_string();
+
+    // 6 client threads × 4 traced requests each, every one tagged with a
+    // distinct X-Request-Id — breakdowns must not bleed across requests.
+    let traces: Vec<(String, Json)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|w| {
+                let addr = &addr;
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..4 {
+                        let rid = format!("client-{w}-{i}");
+                        let j = traced_predict(addr, -2.0 + w as f64 + 0.1 * i as f64, &rid);
+                        out.push((rid, j));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(traces.len(), 24);
+
+    let mut seen_ids = std::collections::BTreeSet::new();
+    for (rid, j) in &traces {
+        let trace = j.req("trace").unwrap();
+        // The echo: each response carries its *own* request's ID.
+        assert_eq!(trace.req("request_id").unwrap().as_str(), Some(rid.as_str()), "bleed: {j:?}");
+        let trace_id = trace.req("trace_id").unwrap().as_usize().unwrap();
+        assert!(seen_ids.insert(trace_id), "trace_id {trace_id} reused");
+        let total_s = trace.req("total_s").unwrap().as_f64().unwrap();
+        let stages = trace.req("stages").unwrap();
+        // The breakdown covers the serving pipeline: queueing and
+        // serialization are always attributed.
+        assert!(stages.get("queue_wait").is_some(), "stages: {stages:?}");
+        assert!(stages.get("serialize").is_some(), "stages: {stages:?}");
+        // Stage sums track the reported end-to-end latency within 10%
+        // (plus an absolute floor for scheduler noise on busy CI).
+        let sum = stage_sum(stages);
+        assert!(
+            sum <= total_s * 1.10 + 2e-3,
+            "stage sum {sum} exceeds total {total_s} (rid {rid})"
+        );
+        assert!(
+            sum >= total_s * 0.90 - 2e-3,
+            "stage sum {sum} undershoots total {total_s} (rid {rid})"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn trace_ring_wraps_and_debug_endpoint_serves_newest_first() {
+    let o = ServeOptions { trace_ring: 4, ..opts(4, 500) };
+    let server = Server::start(ServeEngine::Centralized(fitted_model(52)), &o).unwrap();
+    let addr = server.addr().to_string();
+
+    // Ten sequential requests through a 4-slot ring: only the last four
+    // survive. Untraced requests (no ?trace=1) are recorded too.
+    for i in 0..10 {
+        let body = Json::obj(vec![("x", Json::arr_f64(&[0.1 * i as f64]))]).to_string();
+        let (status, resp) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 200, "request {i}: {resp}");
+    }
+
+    let (status, body) = http_request(&addr, "GET", "/debug/trace", None).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("model").unwrap().as_str(), Some("default"));
+    assert_eq!(j.req("capacity").unwrap().as_usize(), Some(4));
+    let traces = j.req("traces").unwrap().as_arr().unwrap();
+    assert_eq!(traces.len(), 4, "ring keeps exactly the last 4 of 10");
+    // Newest first: sequential senders get strictly increasing trace IDs.
+    let ids: Vec<usize> =
+        traces.iter().map(|t| t.req("trace_id").unwrap().as_usize().unwrap()).collect();
+    for w in ids.windows(2) {
+        assert!(w[0] > w[1], "not newest-first: {ids:?}");
+    }
+    for t in traces {
+        assert_eq!(t.req("status").unwrap().as_usize(), Some(200));
+        assert!(t.req("total_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(stage_sum(t.req("stages").unwrap()) > 0.0);
+    }
+
+    // `n` caps the dump; unknown models 404.
+    let (status, body) = http_request(&addr, "GET", "/debug/trace?n=2", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("traces").unwrap().as_arr().unwrap().len(), 2);
+    let (status, _) = http_request(&addr, "GET", "/debug/trace?model=ghost", None).unwrap();
+    assert_eq!(status, 404);
+    server.shutdown();
+}
+
+#[test]
+fn stage_histograms_health_probes_and_observe_stages() {
+    let server = Server::start(ServeEngine::Centralized(fitted_model(53)), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+
+    // Liveness and readiness: both green on a booted registry.
+    let (status, _) = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let (status, body) = http_request(&addr, "GET", "/readyz", None).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("ready").unwrap().as_bool(), Some(true));
+
+    // Drive a few single- and multi-row requests so every pipeline stage
+    // has samples.
+    for i in 0..6 {
+        let body = Json::obj(vec![("x", Json::arr_f64(&[-1.0 + 0.4 * i as f64]))]).to_string();
+        let (status, _) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+        assert_eq!(status, 200);
+    }
+    let body = Json::obj(vec![(
+        "rows",
+        Json::Arr(vec![Json::arr_f64(&[0.2]), Json::arr_f64(&[1.1])]),
+    )])
+    .to_string();
+    let (status, _) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200);
+
+    // The Prometheus page carries per-stage quantile series covering
+    // queueing, batch formation, ≥ 4 engine predict phases and
+    // serialization (plus HTTP parse).
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    for stage in [
+        "http_parse",
+        "queue_wait",
+        "batch_form",
+        "test_side",
+        "sweep_rbar_du",
+        "local_summaries",
+        "theorem2",
+        "serialize",
+    ] {
+        assert!(
+            text.contains(&format!("pgpr_stage_seconds{{stage=\"{stage}\",quantile=\"0.5\"}}")),
+            "missing stage series `{stage}`:\n{text}"
+        );
+    }
+    // The per-model labeled section renders the same taxonomy.
+    assert!(
+        text.contains("pgpr_stage_seconds_count{model=\"default\",stage=\"serialize\"}"),
+        "metrics:\n{text}"
+    );
+
+    // `?format=json` exposes the identical numbers as one JSON object.
+    let (status, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    let stages = j.req("primary").unwrap().req("stages_s").unwrap();
+    assert!(stages.get("queue_wait").is_some(), "json stages: {stages:?}");
+    assert!(
+        stages.get("queue_wait").unwrap().req("count").unwrap().as_usize().unwrap() >= 7,
+        "every request contributes a queue_wait sample"
+    );
+
+    // The online path is attributed too: one flushed observation records
+    // drain/absorb/publish stages.
+    let obs = Json::obj(vec![
+        ("rows", Json::Arr(vec![Json::arr_f64(&[0.3])])),
+        ("y", Json::arr_f64(&[0.29])),
+        ("flush", Json::Bool(true)),
+    ])
+    .to_string();
+    let (status, body) =
+        http_request(&addr, "POST", "/models/default/observe", Some(&obs)).unwrap();
+    assert_eq!(status, 200, "observe body: {body}");
+    let (_, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    let j = Json::parse(&body).unwrap();
+    let stages = j.req("primary").unwrap().req("stages_s").unwrap();
+    for stage in ["observe_drain", "observe_absorb", "observe_publish"] {
+        assert!(stages.get(stage).is_some(), "missing `{stage}` after observe: {stages:?}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn tracing_disabled_serves_without_stage_work() {
+    let o = ServeOptions { trace: false, trace_ring: 0, ..opts(4, 500) };
+    let server = Server::start(ServeEngine::Centralized(fitted_model(54)), &o).unwrap();
+    let addr = server.addr().to_string();
+
+    // `?trace=1` is ignored when tracing is off — the response has no
+    // inline breakdown, and nothing lands in ring or histograms.
+    let body = Json::obj(vec![("x", Json::arr_f64(&[0.4]))]).to_string();
+    let (status, resp) =
+        http_request(&addr, "POST", "/predict?trace=1", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert!(j.get("trace").is_none(), "tracing off must not inline a breakdown: {resp}");
+
+    let (status, body) = http_request(&addr, "GET", "/debug/trace", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("capacity").unwrap().as_usize(), Some(0));
+    assert!(j.req("traces").unwrap().as_arr().unwrap().is_empty());
+
+    let (_, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert!(!text.contains("pgpr_stage_seconds"), "no stage series when tracing is off");
+    server.shutdown();
+}
