@@ -1,5 +1,7 @@
 //! Online-update benchmark: observe throughput, per-update latency
-//! quantiles, seam-vs-M scaling evidence and predict-latency-under-ingest.
+//! quantiles, seam-vs-M scaling evidence, predict-latency-under-ingest
+//! and the prequential-scoring overhead (`score_overhead`: scored vs
+//! unscored observe throughput through the registry).
 //!
 //! Writes `BENCH_online_update.json`. `PGPR_BENCH_FAST=1` shrinks the
 //! problem for the CI smoke run; the full run asserts the acceptance
@@ -9,14 +11,16 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
-use pgpr::config::{LmaConfig, PartitionStrategy, ServeOptions};
+use pgpr::config::{LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions};
 use pgpr::coordinator::service::ServeEngine;
 use pgpr::experiments::common::{quick_hypers, Workload};
 use pgpr::kernels::se_ard::SeArdHyper;
 use pgpr::linalg::matrix::Mat;
 use pgpr::lma::residual::LmaFitCore;
 use pgpr::lma::LmaRegressor;
+use pgpr::obs::ScoreMode;
 use pgpr::online::{absorb, BlockPolicy};
+use pgpr::registry::ModelRegistry;
 use pgpr::server::http::Server;
 use pgpr::server::loadgen::{self, LoadConfig};
 use pgpr::server::metrics::Histogram;
@@ -263,6 +267,47 @@ fn main() {
     let metrics = server.shutdown();
     eprintln!("{}", metrics.summary());
 
+    // ---------------------------------------------------------------
+    // 4) Prequential scoring overhead: identical observe streams through
+    //    two registries — scoring off vs the default sample:16 selector.
+    //    The quality hook predicts K sampled rows per drained batch
+    //    before absorb; the bar is scored throughput ≥ 0.9× unscored.
+    // ---------------------------------------------------------------
+    let score_updates = if fast { 6 } else { 24 };
+    let score_serve = ServeOptions::default();
+    let mut score_rates = [0.0f64; 2];
+    let mut scored_rows = [0u64; 2];
+    for (slot, mode) in [(0usize, ScoreMode::Off), (1usize, ScoreMode::Sample(16))] {
+        // Same seed both times: identical cores, identical streams — the
+        // only difference between the slots is the scoring hook.
+        let (score_core, _, _) = fit_1d(if fast { 512 } else { 1536 }, 6, 2, 32, 41);
+        let reg = ModelRegistry::new(
+            RegistryOptions { observe_score: mode, ..RegistryOptions::default() },
+            &score_serve,
+        );
+        let engine = ServeEngine::Centralized(LmaRegressor::from_core(score_core));
+        reg.load("bench", Arc::new(engine)).unwrap();
+        let mut rng = Pcg64::new(43);
+        let t0 = std::time::Instant::now();
+        for _ in 0..score_updates {
+            let xs = rng.uniform_vec(batch_rows, 5.0, 6.0);
+            let rows: Vec<Vec<f64>> = xs.iter().map(|&v| vec![v]).collect();
+            let ys: Vec<f64> = xs.iter().map(|v| v.sin()).collect();
+            reg.observe(Some("bench"), &rows, &ys, false, true).unwrap();
+        }
+        score_rates[slot] = (score_updates * batch_rows) as f64 / t0.elapsed().as_secs_f64();
+        scored_rows[slot] = reg.entry_for(Some("bench")).unwrap().quality().scored_rows();
+        reg.shutdown();
+    }
+    let score_overhead = score_rates[1] / score_rates[0].max(1e-9);
+    assert_eq!(scored_rows[0], 0, "scoring-off registry must score nothing");
+    assert!(scored_rows[1] > 0, "sample:16 registry must score rows");
+    println!(
+        "score overhead: unscored {:.0} rows/s, scored(sample:16) {:.0} rows/s -> {score_overhead:.3}x \
+         ({} rows scored)",
+        score_rates[0], score_rates[1], scored_rows[1]
+    );
+
     let record = Json::obj(vec![
         ("bench", Json::Str("online_update".into())),
         ("fast_mode", Json::Bool(fast)),
@@ -291,6 +336,11 @@ fn main() {
         ("predict_p99_under_ingest_s", Json::Num(under_ingest.p99_s)),
         ("predict_p99_ratio", Json::Num(p99_ratio)),
         ("generations_during_ingest", Json::Num(published as f64)),
+        ("observe_rows_per_sec_unscored", Json::Num(score_rates[0])),
+        ("observe_rows_per_sec_scored", Json::Num(score_rates[1])),
+        ("score_mode", Json::Str("sample:16".into())),
+        ("score_overhead", Json::Num(score_overhead)),
+        ("rows_scored", Json::Num(scored_rows[1] as f64)),
     ]);
     write_json_record("BENCH_online_update.json", &record).expect("write record");
     println!("wrote BENCH_online_update.json");
@@ -305,6 +355,10 @@ fn main() {
         assert!(
             p99_ratio < 2.0,
             "predict p99 degraded {p99_ratio:.2}x under ingest (bar: < 2x)"
+        );
+        assert!(
+            score_overhead >= 0.9,
+            "prequential scoring dragged observe throughput to {score_overhead:.3}x unscored (bar: >= 0.9x)"
         );
     }
 }

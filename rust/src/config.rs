@@ -2,6 +2,7 @@
 //! topology and the experiment harnesses, with JSON (de)serialization so
 //! runs are fully reproducible from a config file.
 
+use crate::obs::quality::ScoreMode;
 use crate::util::error::{PgprError, Result};
 use crate::util::json::Json;
 
@@ -270,9 +271,10 @@ impl ServeOptions {
 }
 
 /// Options for the multi-model registry (`registry::ModelRegistry`): how
-/// many fitted engines one serving process keeps resident and what
-/// happens when a load would exceed that bound.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// many fitted engines one serving process keeps resident, what happens
+/// when a load would exceed that bound, and how arriving observations are
+/// prequentially scored for the quality/drift surfaces.
+#[derive(Clone, Debug, PartialEq)]
 pub struct RegistryOptions {
     /// Maximum resident models. A load beyond this either evicts the
     /// least-recently-used non-default model (`lru_evict`) or fails with
@@ -289,6 +291,17 @@ pub struct RegistryOptions {
     /// snapshot in place (only for models loaded from a snapshot path);
     /// untouched blocks reuse their previously encoded bytes.
     pub resnapshot: bool,
+    /// How many rows of each drained observe batch the prequential
+    /// quality scorer evaluates against the current generation before
+    /// `absorb` consumes them (`off` disables every quality surface).
+    pub observe_score: ScoreMode,
+    /// Sliding-window width (rows) for the rolling RMSE/MNLP/coverage
+    /// quality metrics (rounded up to a whole number of buckets).
+    pub quality_window: usize,
+    /// Drift alarm threshold in nats: `drift_score = windowed MNLP −
+    /// fit-time baseline MNLP`; an upward crossing emits one structured
+    /// `drift_detected` event.
+    pub drift_threshold: f64,
 }
 
 impl Default for RegistryOptions {
@@ -298,6 +311,9 @@ impl Default for RegistryOptions {
             lru_evict: true,
             observe_flush_rows: 1,
             resnapshot: false,
+            observe_score: ScoreMode::default(),
+            quality_window: 1024,
+            drift_threshold: 1.0,
         }
     }
 }
@@ -310,6 +326,12 @@ impl RegistryOptions {
         if self.observe_flush_rows == 0 {
             return Err(PgprError::Config("registry: observe_flush_rows must be ≥ 1".into()));
         }
+        if self.observe_score != ScoreMode::Off && self.quality_window == 0 {
+            return Err(PgprError::Config("registry: quality_window must be ≥ 1".into()));
+        }
+        if !self.drift_threshold.is_finite() {
+            return Err(PgprError::Config("registry: drift_threshold must be finite".into()));
+        }
         Ok(())
     }
 
@@ -319,6 +341,9 @@ impl RegistryOptions {
             ("lru_evict", Json::Bool(self.lru_evict)),
             ("observe_flush_rows", Json::Num(self.observe_flush_rows as f64)),
             ("resnapshot", Json::Bool(self.resnapshot)),
+            ("observe_score", Json::Str(self.observe_score.selector())),
+            ("quality_window", Json::Num(self.quality_window as f64)),
+            ("drift_threshold", Json::Num(self.drift_threshold)),
         ])
     }
 
@@ -332,6 +357,18 @@ impl RegistryOptions {
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.observe_flush_rows),
             resnapshot: j.get("resnapshot").and_then(|v| v.as_bool()).unwrap_or(d.resnapshot),
+            observe_score: match j.get("observe_score").and_then(|v| v.as_str()) {
+                Some(s) => ScoreMode::parse(s)?,
+                None => d.observe_score,
+            },
+            quality_window: j
+                .get("quality_window")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.quality_window),
+            drift_threshold: j
+                .get("drift_threshold")
+                .and_then(|v| v.as_f64())
+                .unwrap_or(d.drift_threshold),
         })
     }
 }
@@ -603,6 +640,9 @@ mod tests {
             lru_evict: false,
             observe_flush_rows: 16,
             resnapshot: true,
+            observe_score: ScoreMode::All,
+            quality_window: 256,
+            drift_threshold: 0.5,
         };
         assert!(r.validate().is_ok());
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
@@ -610,9 +650,24 @@ mod tests {
         // Missing fields fall back to defaults.
         let partial = RegistryOptions::from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(partial, RegistryOptions::default());
+        assert_eq!(partial.observe_score, ScoreMode::Sample(16));
         assert!(RegistryOptions { max_models: 0, ..Default::default() }.validate().is_err());
         assert!(RegistryOptions { observe_flush_rows: 0, ..Default::default() }
             .validate()
+            .is_err());
+        assert!(RegistryOptions { quality_window: 0, ..Default::default() }.validate().is_err());
+        assert!(RegistryOptions {
+            quality_window: 0,
+            observe_score: ScoreMode::Off,
+            ..Default::default()
+        }
+        .validate()
+        .is_ok());
+        assert!(RegistryOptions { drift_threshold: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        // A bad score-mode selector is an error, not a silent default.
+        assert!(RegistryOptions::from_json(&Json::parse("{\"observe_score\":\"half\"}").unwrap())
             .is_err());
     }
 

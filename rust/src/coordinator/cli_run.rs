@@ -11,7 +11,7 @@ use crate::coordinator::service::{PredictionService, Request, ServeEngine};
 use crate::experiments::{ablation, common::Workload, fig2, fig6, table1, table2, table3};
 use crate::lma::parallel::ParallelLma;
 use crate::lma::{LmaRegressor, PredictMode};
-use crate::obs::{log_event, Level};
+use crate::obs::{log_event, Level, QualityBaseline, ScoreMode};
 use crate::registry::{artifact, ModelRegistry};
 use crate::server::http::Server;
 use crate::server::loadgen;
@@ -176,6 +176,50 @@ pub fn cmd_eval(
     Ok(())
 }
 
+/// `pgpr eval --artifact name=path` — warm-start evaluation: load a saved
+/// snapshot and score it on a test CSV without refitting anything. Prints
+/// today's RMSE/MNLP next to the artifact's stored fit-time baseline
+/// (when present), so offline drift checks use the same reference the
+/// serving drift detector does.
+pub fn cmd_eval_artifact(spec: &str, test_csv: &str, out: &str) -> Result<()> {
+    let (name, path) = parse_model_spec(spec)?;
+    let (test_x, test_y) = load_xy_csv(test_csv)?;
+    let engine = artifact::load_engine(&path)?;
+    let dim = engine.core().hyp.dim();
+    if test_x.cols() != dim {
+        return Err(PgprError::Data(format!(
+            "{test_csv}: {} input columns but artifact `{name}` expects {dim}",
+            test_x.cols()
+        )));
+    }
+    let (pred, pred_secs) = crate::util::timer::time_it(|| engine.predict(&test_x));
+    let pred = pred?;
+    let rmse = crate::metrics::rmse(&pred.mean, &test_y);
+    let mnlp = crate::metrics::mnlp(&pred.mean, &pred.var, &test_y);
+    let core = engine.core();
+    println!(
+        "artifact {name} ({path}; |D|={}, M={}, B={}, |S|={}): rmse {rmse:.6}  mnlp {mnlp:.4}  predict {pred_secs:.2}s",
+        core.part.total(),
+        core.m(),
+        core.b(),
+        core.basis.size(),
+    );
+    match core.quality_baseline {
+        Some(b) => println!(
+            "fit-time baseline ({} held-out rows): rmse {:.6}  mnlp {:.4}  drift (mnlp − baseline) {:+.4}",
+            b.rows, b.rmse, b.mnlp, mnlp - b.mnlp
+        ),
+        None => println!("fit-time baseline: none recorded (pre-quality artifact)"),
+    }
+    let mut t = CsvTable::new(&["y_true", "mean", "var"]);
+    for i in 0..pred.mean.len() {
+        t.push_nums(&[test_y[i], pred.mean[i], pred.var[i]]);
+    }
+    t.write_path(out)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// `pgpr serve` parameters: which model(s) to front and how.
 #[derive(Clone, Debug)]
 pub struct ServeCmd {
@@ -200,16 +244,26 @@ pub struct ServeCmd {
     /// (models loaded from snapshots only; untouched blocks reuse their
     /// previous encodings).
     pub resnapshot: bool,
+    /// Prequential scoring selector for observed rows:
+    /// `off` | `sample:K` | `all` (`RegistryOptions::observe_score`).
+    pub observe_score: String,
+    /// Sliding quality window capacity in scored rows.
+    pub quality_window: usize,
+    /// Windowed-MNLP-minus-baseline threshold that fires `drift_detected`.
+    pub drift_threshold: f64,
 }
 
 impl ServeCmd {
-    fn registry_options(&self, min_models: usize) -> RegistryOptions {
-        RegistryOptions {
+    fn registry_options(&self, min_models: usize) -> Result<RegistryOptions> {
+        Ok(RegistryOptions {
             max_models: self.max_models.max(min_models).max(1),
             lru_evict: true,
             observe_flush_rows: self.observe_flush_rows.max(1),
             resnapshot: self.resnapshot,
-        }
+            observe_score: ScoreMode::parse(&self.observe_score)?,
+            quality_window: self.quality_window,
+            drift_threshold: self.drift_threshold,
+        })
     }
 }
 
@@ -239,13 +293,25 @@ fn build_serve_engine(
         partition: PartitionStrategy::KMeans { iters: 8 },
         use_pjrt: false,
     };
-    let engine = if backend == "centralized" {
+    let mut engine = if backend == "centralized" {
         ServeEngine::Centralized(LmaRegressor::fit(&ds.train_x, &ds.train_y, &hyp, &cfg)?)
     } else {
         let kind = BackendKind::parse(backend)?;
         let cc = ClusterConfig::gigabit(1, m).with_backend(kind);
         ServeEngine::Parallel(ParallelLma::fit(&ds.train_x, &ds.train_y, &hyp, &cfg, &cc)?)
     };
+    // Fit-time quality baseline: score the held-out split once and stamp
+    // RMSE/MNLP into the core, where artifact serialization persists it —
+    // the reference the serving drift detector measures windowed NLPD
+    // against (`pgpr_model_drift_score`).
+    if !ds.test_y.is_empty() {
+        let pred = engine.predict(&ds.test_x)?;
+        engine.set_quality_baseline(QualityBaseline {
+            rmse: crate::metrics::rmse(&pred.mean, &ds.test_y),
+            mnlp: crate::metrics::mnlp(&pred.mean, &pred.var, &ds.test_y),
+            rows: ds.test_y.len(),
+        });
+    }
     Ok((engine, ds.name))
 }
 
@@ -339,6 +405,12 @@ pub fn cmd_fit(c: &FitCmd) -> Result<()> {
         engine.backend_name(),
         c.save
     );
+    if let Some(b) = core.quality_baseline {
+        println!(
+            "  held-out baseline: rmse {:.4}, mnlp {:.4} ({} rows) — drift reference",
+            b.rmse, b.mnlp, b.rows
+        );
+    }
     if c.profile {
         // Same phase taxonomy the registry exports via `/models/{name}`
         // (`fit_phases_s`), so offline and serving views agree.
@@ -384,7 +456,7 @@ pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
             return serve_stdin(c, engine, name);
         }
         let registry =
-            registry_from_artifacts(&c.models, &c.opts, c.registry_options(0), "serve")?;
+            registry_from_artifacts(&c.models, &c.opts, c.registry_options(0)?, "serve")?;
         let server = Server::start_with_registry(registry, &c.opts)?;
         return serve_http_run(c, server, "artifacts");
     }
@@ -487,7 +559,7 @@ fn serve_http(c: &ServeCmd, engine: ServeEngine, name: &str) -> Result<()> {
     // Build the registry here (rather than Server::start) so the
     // `--max-models` cap (and the observe options) apply to runtime
     // `PUT /models` loads too.
-    let registry = Arc::new(ModelRegistry::new(c.registry_options(0), &c.opts));
+    let registry = Arc::new(ModelRegistry::new(c.registry_options(0)?, &c.opts));
     registry
         .load(crate::server::http::DEFAULT_MODEL, Arc::new(engine))
         .map_err(|e| PgprError::Config(e.to_string()))?;
@@ -519,7 +591,7 @@ fn serve_http_run(c: &ServeCmd, server: Server, name: &str) -> Result<()> {
     );
     eprintln!(
         "endpoints: POST /predict[?trace=1]  GET/PUT/DELETE /models[/name]  GET /healthz  \
-         GET /readyz  GET /metrics[?format=json]  GET /debug/trace — `quit` on stdin stops"
+         GET /readyz  GET /metrics[?format=json]  GET /debug/trace  GET /debug/quality — `quit` on stdin stops"
     );
     // Machine-readable bound address on stdout so scripts can pick up
     // the ephemeral port from `--listen 127.0.0.1:0`.
@@ -935,16 +1007,35 @@ pub fn dispatch() -> Result<()> {
         }
         "eval" => {
             let a = Args::new("pgpr eval", "fit + evaluate LMA on CSV data")
-                .required("train-csv", "training data (x0..xd-1, y header)")
-                .required("test-csv", "test data (same schema)")
+                .flag(
+                    "train-csv",
+                    "",
+                    "training data (x0..xd-1, y header); required without --artifact",
+                )
+                .required("test-csv", "test data (x0..xd-1, y header)")
+                .flag(
+                    "artifact",
+                    "",
+                    "name=path of a saved snapshot: score it on --test-csv without refitting",
+                )
                 .flag("blocks", "8", "M — number of blocks")
                 .flag("order", "1", "B — Markov order")
                 .flag("support", "128", "|S| — support set size")
                 .flag("seed", "0", "seed")
                 .flag("out", "results/eval_predictions.csv", "prediction output CSV")
                 .parse_from(rest)?;
+            let artifact = a.get("artifact");
+            if !artifact.is_empty() {
+                return cmd_eval_artifact(&artifact, &a.get("test-csv"), &a.get("out"));
+            }
+            let train_csv = a.get("train-csv");
+            if train_csv.is_empty() {
+                return Err(PgprError::Config(
+                    "eval: --train-csv is required without --artifact".into(),
+                ));
+            }
             cmd_eval(
-                &a.get("train-csv"),
+                &train_csv,
                 &a.get("test-csv"),
                 a.get_usize("blocks"),
                 a.get_usize("order"),
@@ -1022,6 +1113,23 @@ pub fn dispatch() -> Result<()> {
                     "resnapshot",
                     "rewrite a model's artifact in place after each published online update",
                 )
+                .flag(
+                    "observe-score",
+                    "sample:16",
+                    "prequential quality scoring of observed rows before they are \
+                     absorbed: off | sample:K | all",
+                )
+                .flag(
+                    "quality-window",
+                    "1024",
+                    "sliding quality window capacity in scored rows (rolling RMSE/MNLP/coverage)",
+                )
+                .flag(
+                    "drift-threshold",
+                    "1",
+                    "fire a drift_detected event when windowed MNLP exceeds the \
+                     artifact's fit-time baseline by this much",
+                )
                 .switch(
                     "f32-u",
                     "reduced-precision serve: f32 U-side context tensors with f64 \
@@ -1064,6 +1172,9 @@ pub fn dispatch() -> Result<()> {
                 max_models: a.get_usize("max-models"),
                 observe_flush_rows: a.get_usize("observe-flush-rows"),
                 resnapshot: a.get_bool("resnapshot"),
+                observe_score: a.get("observe-score"),
+                quality_window: a.get_usize("quality-window"),
+                drift_threshold: a.get_f64("drift-threshold"),
             })
         }
         "observe" => {
@@ -1158,6 +1269,7 @@ pub fn dispatch() -> Result<()> {
                  USAGE:\n  pgpr experiment <table1a|table1b|table2|table3|fig2|fig6|ablation|all> [--full] [--backend sim|threads[:N]]\n  \
                  pgpr data --dataset aimpeak --train 1000 --test 200 --out dir/\n  \
                  pgpr eval --train-csv train.csv --test-csv test.csv [--blocks 8 --order 1 --support 128]\n  \
+                 pgpr eval --artifact name=model.pgpr --test-csv test.csv (warm-start: score a snapshot, no refit)\n  \
                  pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0] [--profile]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
                  \u{20}          [--model name=model.pgpr ...] [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
@@ -1229,6 +1341,10 @@ mod tests {
         let engine = artifact::load_engine(&save).unwrap();
         assert_eq!(engine.backend_name(), "centralized");
         assert_eq!(engine.core().m(), 2);
+        // The fit driver stamps a held-out quality baseline and the
+        // artifact round-trip must preserve it.
+        let b = engine.core().quality_baseline.expect("fit stamps a quality baseline");
+        assert!(b.rows > 0 && b.rmse.is_finite() && b.mnlp.is_finite());
         std::fs::remove_dir_all(dir).ok();
     }
 

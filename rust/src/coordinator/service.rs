@@ -50,6 +50,18 @@ impl ServeEngine {
         }
     }
 
+    /// Stamp the fit-time quality baseline (held-out RMSE/MNLP) into the
+    /// fitted core, where artifact serialization persists it and the
+    /// online-update path carries it across generations — the reference
+    /// every windowed `drift_score` is measured against.
+    pub fn set_quality_baseline(&mut self, baseline: crate::obs::quality::QualityBaseline) {
+        let core = match self {
+            ServeEngine::Centralized(m) => m.core_mut(),
+            ServeEngine::Parallel(m) => m.core_mut(),
+        };
+        core.quality_baseline = Some(baseline);
+    }
+
     pub fn predict(&self, x: &Mat) -> Result<Prediction> {
         match self {
             ServeEngine::Centralized(m) => m.predict(x),

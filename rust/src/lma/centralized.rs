@@ -57,6 +57,12 @@ impl LmaRegressor {
         &self.core
     }
 
+    /// Mutable core access for fit-time annotation (the fit driver stamps
+    /// the held-out quality baseline here before the artifact is saved).
+    pub fn core_mut(&mut self) -> &mut LmaFitCore {
+        &mut self.core
+    }
+
     pub fn config(&self) -> &LmaConfig {
         &self.core.cfg
     }

@@ -156,6 +156,12 @@ impl ParallelLma {
         &self.core
     }
 
+    /// Mutable core access for fit-time annotation (the fit driver stamps
+    /// the held-out quality baseline here before the artifact is saved).
+    pub fn core_mut(&mut self) -> &mut LmaFitCore {
+        &mut self.core
+    }
+
     /// Cluster topology/backend this model was fitted for (predict runs
     /// on a fresh backend of this configuration each call).
     pub fn cluster_config(&self) -> &ClusterConfig {

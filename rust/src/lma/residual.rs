@@ -173,6 +173,11 @@ pub struct LmaFitCore {
     /// Fit-time predict context (always attached by `fit` and the
     /// artifact loader; `Option` only to break the construction cycle).
     pub ctx: Option<PredictContext>,
+    /// Fit-time held-out accuracy (RMSE/MNLP), set by the fit driver when
+    /// a held-out split is available and persisted in v2 artifacts so the
+    /// serving drift detector has a comparison point. Carried unchanged
+    /// through incremental `absorb` updates.
+    pub quality_baseline: Option<crate::obs::quality::QualityBaseline>,
 }
 
 impl LmaFitCore {
@@ -516,6 +521,7 @@ impl LmaFitCore {
             timings: FitTimings::default(),
             cov_backend: cov_backend.clone(),
             ctx: None,
+            quality_baseline: None,
         };
 
         // --- exact in-band residual blocks (independent per block) ---

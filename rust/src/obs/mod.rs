@@ -10,12 +10,21 @@
 //! * [`log`] — the `PGPR_LOG`-gated structured line logger (one JSON
 //!   object per line, one `write_all` per event).
 //! * [`query`] — the shared query-string parser used by `/predict`,
-//!   `/debug/trace` and `/metrics`.
+//!   `/debug/trace`, `/debug/quality` and `/metrics`.
+//! * [`quality`] — prequential model-quality accumulators: the sliding
+//!   window of scored observations (rolling RMSE/MNLP/coverage), the
+//!   per-block error attribution, and the drift detector against the
+//!   fit-time baseline persisted in artifacts.
 
 pub mod log;
+pub mod quality;
 pub mod query;
 pub mod trace;
 
 pub use log::{log_event, Level};
+pub use quality::{
+    block_of_row, BlockStats, BucketStats, DriftCrossing, ModelQuality, QualityBaseline,
+    QualityWindow, ScoreMode, ScoredRow, WindowStats,
+};
 pub use query::{parse_query, Query};
 pub use trace::{next_trace_id, Stage, StageSet, TraceEntry, TraceRing, ALL_STAGES, STAGE_COUNT};

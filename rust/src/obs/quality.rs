@@ -1,0 +1,822 @@
+//! Model-quality & drift observability: prequential scoring accumulators.
+//!
+//! The online-update path scores every arriving observation (test-then-
+//! train: the row is scored against the *current* generation before
+//! `absorb` consumes it) and records squared error, per-row NLPD and the
+//! standardized residual z = (y − μ)/σ into a per-model sliding window —
+//! a ring of fixed-width row buckets, lock-cheap like `TraceRing` — so
+//! the surfaces report rolling RMSE/MNLP/coverage-at-90% over the last
+//! W rows rather than cumulative-since-boot averages. Each scored row is
+//! also attributed to the Markov block the update plan routes it into,
+//! giving a per-block error profile that shows *where* in input space
+//! the model is degrading.
+//!
+//! Drift is the windowed MNLP measured against the fit-time held-out
+//! baseline persisted in the artifact manifest:
+//!
+//! ```text
+//! drift_score = windowed MNLP − baseline MNLP      (nats per row)
+//! ```
+//!
+//! A `drift_detected` event fires exactly once per upward crossing of
+//! `--drift-threshold` (the detector re-arms when the score falls back
+//! below the threshold).
+//!
+//! This module is pure accumulators + math: prediction itself stays in
+//! the registry (which owns the engine and the pooled `PredictScratch`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::error::{PgprError, Result};
+use crate::util::json::Json;
+
+/// |z| bound containing 90% of a standard normal (Φ⁻¹(0.95)).
+pub const Z90: f64 = 1.6448536269514722;
+
+/// Number of buckets in a quality window ring. The requested window is
+/// rounded up to a multiple of this so each bucket covers the same
+/// number of rows.
+pub const QUALITY_BUCKETS: usize = 32;
+
+/// How many rows of each drained batch the prequential scorer evaluates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreMode {
+    /// No scoring; every quality surface stays empty.
+    Off,
+    /// Score up to K evenly-spaced rows per drained batch.
+    Sample(usize),
+    /// Score every row.
+    All,
+}
+
+impl Default for ScoreMode {
+    /// The serving default: 16 evenly-spaced rows per drained batch.
+    fn default() -> ScoreMode {
+        ScoreMode::Sample(16)
+    }
+}
+
+impl ScoreMode {
+    /// Parse a CLI/JSON selector: `off`, `all` or `sample:<k>` (k ≥ 1).
+    pub fn parse(s: &str) -> Result<ScoreMode> {
+        let s = s.trim().to_ascii_lowercase();
+        if s == "off" {
+            return Ok(ScoreMode::Off);
+        }
+        if s == "all" {
+            return Ok(ScoreMode::All);
+        }
+        if let Some(k) = s.strip_prefix("sample:") {
+            let k: usize = k
+                .parse()
+                .map_err(|_| PgprError::Config(format!("invalid score sample count: {k:?}")))?;
+            if k == 0 {
+                return Err(PgprError::Config("score sample count must be >= 1".into()));
+            }
+            return Ok(ScoreMode::Sample(k));
+        }
+        Err(PgprError::Config(format!(
+            "unknown score mode: {s:?} (expected off|sample:<k>|all)"
+        )))
+    }
+
+    /// The selector string `parse` accepts (round-trips exactly).
+    pub fn selector(&self) -> String {
+        match self {
+            ScoreMode::Off => "off".into(),
+            ScoreMode::Sample(k) => format!("sample:{k}"),
+            ScoreMode::All => "all".into(),
+        }
+    }
+
+    /// The batch row indices this mode scores, strictly increasing.
+    /// `Sample(k)` picks k evenly-spaced rows (all rows when the batch is
+    /// smaller than k) so a systematic stream is sampled across its whole
+    /// span, not just a prefix.
+    pub fn indices(&self, rows: usize) -> Vec<usize> {
+        match *self {
+            ScoreMode::Off => Vec::new(),
+            ScoreMode::All => (0..rows).collect(),
+            ScoreMode::Sample(k) => {
+                if rows <= k {
+                    (0..rows).collect()
+                } else {
+                    (0..k).map(|j| j * rows / k).collect()
+                }
+            }
+        }
+    }
+}
+
+/// Fit-time held-out accuracy, persisted in the artifact manifest so a
+/// serve boot has a comparison point for the drift score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QualityBaseline {
+    /// Held-out RMSE at fit time.
+    pub rmse: f64,
+    /// Held-out mean negative log predictive density at fit time.
+    pub mnlp: f64,
+    /// Held-out rows the baseline was computed on.
+    pub rows: usize,
+}
+
+impl QualityBaseline {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rmse", Json::Num(self.rmse)),
+            ("mnlp", Json::Num(self.mnlp)),
+            ("rows", Json::Num(self.rows as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<QualityBaseline> {
+        let num = |field: &'static str| -> Result<f64> {
+            j.req(field)?.as_f64().ok_or_else(|| {
+                PgprError::Artifact(format!("quality_baseline.{field}: not a number"))
+            })
+        };
+        Ok(QualityBaseline {
+            rmse: num("rmse")?,
+            mnlp: num("mnlp")?,
+            rows: num("rows")? as usize,
+        })
+    }
+}
+
+/// Per-row NLPD under a Gaussian marginal N(μ, σ²). Term-for-term
+/// identical to `crate::metrics::mnlp` (including the variance clamp) so
+/// the windowed mean over a stationary stream matches the offline metric
+/// bit-for-bit.
+pub fn row_nlpd(mean: f64, var: f64, y: f64) -> f64 {
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    let v = var.max(1e-12);
+    0.5 * (ln2pi + v.ln() + (y - mean) * (y - mean) / v)
+}
+
+/// One prequentially scored observation, already attributed to the
+/// Markov block the update plan routes it into.
+#[derive(Clone, Copy, Debug)]
+pub struct ScoredRow {
+    /// Markov block index the row is absorbed into.
+    pub block: usize,
+    /// Squared error (y − μ)².
+    pub sq_err: f64,
+    /// Per-row negative log predictive density.
+    pub nlpd: f64,
+    /// Standardized residual z = (y − μ)/σ.
+    pub z: f64,
+}
+
+impl ScoredRow {
+    /// Score one observation against a predictive marginal N(μ, σ²).
+    pub fn score(block: usize, mean: f64, var: f64, y: f64) -> ScoredRow {
+        let d = y - mean;
+        ScoredRow {
+            block,
+            sq_err: d * d,
+            nlpd: row_nlpd(mean, var, y),
+            z: d / var.max(1e-12).sqrt(),
+        }
+    }
+}
+
+/// Per-block partial sums inside one bucket.
+#[derive(Clone, Copy, Debug, Default)]
+struct BlockAcc {
+    count: u64,
+    sum_sq: f64,
+    sum_nlpd: f64,
+}
+
+/// One fixed-width window bucket: aggregate sums over up to
+/// `bucket_rows` consecutively scored rows.
+#[derive(Clone, Debug, Default)]
+struct Bucket {
+    /// Monotone bucket number, 1-based (0 = slot never used).
+    seq: u64,
+    count: u64,
+    sum_sq: f64,
+    sum_nlpd: f64,
+    /// Rows with |z| ≤ Z90 (inside the central 90% interval).
+    covered: u64,
+    blocks: BTreeMap<usize, BlockAcc>,
+}
+
+impl Bucket {
+    fn add(&mut self, r: &ScoredRow) {
+        self.count += 1;
+        self.sum_sq += r.sq_err;
+        self.sum_nlpd += r.nlpd;
+        if r.z.abs() <= Z90 {
+            self.covered += 1;
+        }
+        let b = self.blocks.entry(r.block).or_default();
+        b.count += 1;
+        b.sum_sq += r.sq_err;
+        b.sum_nlpd += r.nlpd;
+    }
+}
+
+/// Aggregate statistics over the live window.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowStats {
+    /// Scored rows currently inside the window.
+    pub rows: u64,
+    /// Rolling root mean square error.
+    pub rmse: f64,
+    /// Rolling mean negative log predictive density.
+    pub mnlp: f64,
+    /// Fraction of rows with |z| ≤ Z90.
+    pub coverage90: f64,
+}
+
+/// Windowed per-block error profile entry.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockStats {
+    /// Markov block index.
+    pub block: usize,
+    /// Scored rows attributed to the block inside the window.
+    pub rows: u64,
+    /// Rolling RMSE over those rows.
+    pub rmse: f64,
+    /// Rolling MNLP over those rows.
+    pub mnlp: f64,
+}
+
+/// One bucket of the windowed series (newest first in `series`).
+#[derive(Clone, Copy, Debug)]
+pub struct BucketStats {
+    /// Monotone bucket number (1-based).
+    pub seq: u64,
+    pub rows: u64,
+    pub rmse: f64,
+    pub mnlp: f64,
+    pub coverage90: f64,
+}
+
+/// Sliding window of the last `bucket_rows × QUALITY_BUCKETS` scored
+/// rows. Writers are serialized by the registry's per-model ingest lock,
+/// so pushes lock only the active bucket; readers lock one bucket at a
+/// time and never block the whole ring. Capacity 0 disables recording.
+pub struct QualityWindow {
+    /// Rows per bucket (0 = inert window).
+    bucket_rows: usize,
+    slots: Vec<Mutex<Bucket>>,
+    /// Index of the bucket currently being filled (monotone; slot is
+    /// `head % slots.len()`).
+    head: AtomicU64,
+    /// Total rows ever scored (not windowed).
+    scored: AtomicU64,
+}
+
+impl QualityWindow {
+    /// A window covering at least `window_rows` rows (rounded up to a
+    /// whole number of buckets; 0 disables recording).
+    pub fn new(window_rows: usize) -> QualityWindow {
+        let bucket_rows = if window_rows == 0 {
+            0
+        } else {
+            window_rows.div_ceil(QUALITY_BUCKETS).max(1)
+        };
+        let slots = if bucket_rows == 0 { 0 } else { QUALITY_BUCKETS };
+        QualityWindow {
+            bucket_rows,
+            slots: (0..slots).map(|_| Mutex::new(Bucket::default())).collect(),
+            head: AtomicU64::new(0),
+            scored: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows the window holds when full.
+    pub fn capacity_rows(&self) -> usize {
+        self.bucket_rows * self.slots.len()
+    }
+
+    /// Total rows ever scored through this window.
+    pub fn scored_rows(&self) -> u64 {
+        self.scored.load(Ordering::Relaxed)
+    }
+
+    /// Record one scored row (drops it silently when capacity is 0).
+    pub fn push(&self, r: &ScoredRow) {
+        if self.slots.is_empty() {
+            return;
+        }
+        self.scored.fetch_add(1, Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let mut head = self.head.load(Ordering::Relaxed);
+        {
+            let mut b = self.slots[(head % cap) as usize].lock().unwrap();
+            if b.seq == 0 {
+                b.seq = head + 1;
+            }
+            if b.count < self.bucket_rows as u64 {
+                b.add(r);
+                return;
+            }
+        }
+        // Active bucket is full: advance the head and start a fresh one.
+        head += 1;
+        self.head.store(head, Ordering::Relaxed);
+        let mut b = self.slots[(head % cap) as usize].lock().unwrap();
+        *b = Bucket { seq: head + 1, ..Bucket::default() };
+        b.add(r);
+    }
+
+    /// Aggregate RMSE/MNLP/coverage over every live bucket.
+    pub fn stats(&self) -> WindowStats {
+        let mut rows = 0u64;
+        let mut covered = 0u64;
+        let mut sum_sq = 0.0;
+        let mut sum_nlpd = 0.0;
+        self.for_each_oldest_first(|b| {
+            rows += b.count;
+            covered += b.covered;
+            sum_sq += b.sum_sq;
+            sum_nlpd += b.sum_nlpd;
+        });
+        if rows == 0 {
+            return WindowStats::default();
+        }
+        let n = rows as f64;
+        WindowStats {
+            rows,
+            rmse: (sum_sq / n).sqrt(),
+            mnlp: sum_nlpd / n,
+            coverage90: covered as f64 / n,
+        }
+    }
+
+    /// The windowed per-block error profile, worst (highest RMSE) first.
+    pub fn worst_blocks(&self, k: usize) -> Vec<BlockStats> {
+        let mut acc: BTreeMap<usize, BlockAcc> = BTreeMap::new();
+        self.for_each_oldest_first(|b| {
+            for (&blk, a) in &b.blocks {
+                let e = acc.entry(blk).or_default();
+                e.count += a.count;
+                e.sum_sq += a.sum_sq;
+                e.sum_nlpd += a.sum_nlpd;
+            }
+        });
+        let mut out: Vec<BlockStats> = acc
+            .into_iter()
+            .filter(|(_, a)| a.count > 0)
+            .map(|(blk, a)| {
+                let n = a.count as f64;
+                BlockStats {
+                    block: blk,
+                    rows: a.count,
+                    rmse: (a.sum_sq / n).sqrt(),
+                    mnlp: a.sum_nlpd / n,
+                }
+            })
+            .collect();
+        out.sort_by(|a, b| b.rmse.partial_cmp(&a.rmse).unwrap_or(std::cmp::Ordering::Equal));
+        out.truncate(k);
+        out
+    }
+
+    /// The last `n` buckets with any rows, newest first.
+    pub fn series(&self, n: usize) -> Vec<BucketStats> {
+        let mut live: Vec<BucketStats> = Vec::new();
+        self.for_each_oldest_first(|b| {
+            if b.count > 0 {
+                let c = b.count as f64;
+                live.push(BucketStats {
+                    seq: b.seq,
+                    rows: b.count,
+                    rmse: (b.sum_sq / c).sqrt(),
+                    mnlp: b.sum_nlpd / c,
+                    coverage90: b.covered as f64 / c,
+                });
+            }
+        });
+        live.reverse();
+        live.truncate(n);
+        live
+    }
+
+    /// Visit every live bucket, oldest first (stable aggregation order).
+    fn for_each_oldest_first(&self, mut f: impl FnMut(&Bucket)) {
+        let cap = self.slots.len();
+        if cap == 0 {
+            return;
+        }
+        let head = self.head.load(Ordering::Relaxed) as usize;
+        // Oldest live bucket is head+1 when the ring has wrapped.
+        for k in 0..cap {
+            let idx = (head + 1 + k) % cap;
+            let b = self.slots[idx].lock().unwrap();
+            if b.seq > 0 {
+                f(&b);
+            }
+        }
+    }
+}
+
+/// A drift-threshold upward crossing reported by [`ModelQuality::record`].
+#[derive(Clone, Copy, Debug)]
+pub struct DriftCrossing {
+    /// The drift score at the crossing (windowed MNLP − baseline MNLP).
+    pub score: f64,
+    /// Windowed MNLP at the crossing.
+    pub window_mnlp: f64,
+    /// The fit-time baseline MNLP.
+    pub baseline_mnlp: f64,
+}
+
+/// Per-model quality state: the sliding window, the fit-time baseline
+/// and the drift detector. Shared across generations via `Arc` (a new
+/// generation continues the same window — the stream is one stream).
+pub struct ModelQuality {
+    mode: ScoreMode,
+    window: QualityWindow,
+    baseline: Option<QualityBaseline>,
+    drift_threshold: f64,
+    /// True while the drift score sits above the threshold; the
+    /// `drift_detected` event fires only on the false→true edge.
+    drift_active: AtomicBool,
+    /// Upward crossings observed so far.
+    drift_events: AtomicU64,
+}
+
+impl ModelQuality {
+    pub fn new(
+        mode: ScoreMode,
+        window_rows: usize,
+        drift_threshold: f64,
+        baseline: Option<QualityBaseline>,
+    ) -> ModelQuality {
+        let window_rows = if mode == ScoreMode::Off { 0 } else { window_rows };
+        ModelQuality {
+            mode,
+            window: QualityWindow::new(window_rows),
+            baseline,
+            drift_threshold,
+            drift_active: AtomicBool::new(false),
+            drift_events: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether the scorer runs at all (mode ≠ off and a live window).
+    pub fn enabled(&self) -> bool {
+        self.mode != ScoreMode::Off && self.window.capacity_rows() > 0
+    }
+
+    pub fn mode(&self) -> ScoreMode {
+        self.mode
+    }
+
+    pub fn baseline(&self) -> Option<QualityBaseline> {
+        self.baseline
+    }
+
+    pub fn scored_rows(&self) -> u64 {
+        self.window.scored_rows()
+    }
+
+    pub fn drift_events(&self) -> u64 {
+        self.drift_events.load(Ordering::Relaxed)
+    }
+
+    pub fn stats(&self) -> WindowStats {
+        self.window.stats()
+    }
+
+    pub fn worst_blocks(&self, k: usize) -> Vec<BlockStats> {
+        self.window.worst_blocks(k)
+    }
+
+    pub fn series(&self, n: usize) -> Vec<BucketStats> {
+        self.window.series(n)
+    }
+
+    /// Windowed MNLP minus the fit-time baseline MNLP; `None` without a
+    /// baseline or before any row has been scored.
+    pub fn drift_score(&self) -> Option<f64> {
+        let b = self.baseline?;
+        let s = self.window.stats();
+        if s.rows == 0 {
+            return None;
+        }
+        Some(s.mnlp - b.mnlp)
+    }
+
+    /// Record a batch of scored rows and run the drift detector. Returns
+    /// `Some` exactly when the drift score crosses the threshold upward
+    /// (the caller emits the `drift_detected` event); the detector
+    /// re-arms when the score falls back below the threshold.
+    pub fn record(&self, scored: &[ScoredRow]) -> Option<DriftCrossing> {
+        if !self.enabled() || scored.is_empty() {
+            return None;
+        }
+        for r in scored {
+            self.window.push(r);
+        }
+        let b = self.baseline?;
+        let s = self.window.stats();
+        if s.rows == 0 {
+            return None;
+        }
+        let score = s.mnlp - b.mnlp;
+        if score > self.drift_threshold {
+            if !self.drift_active.swap(true, Ordering::Relaxed) {
+                self.drift_events.fetch_add(1, Ordering::Relaxed);
+                return Some(DriftCrossing {
+                    score,
+                    window_mnlp: s.mnlp,
+                    baseline_mnlp: b.mnlp,
+                });
+            }
+        } else {
+            self.drift_active.store(false, Ordering::Relaxed);
+        }
+        None
+    }
+
+    /// The `quality` object for `?format=json` / `/models/<name>`.
+    pub fn to_json(&self) -> Json {
+        let s = self.window.stats();
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("mode", Json::Str(self.mode.selector())),
+            ("scored_rows", Json::Num(self.scored_rows() as f64)),
+            ("window_capacity", Json::Num(self.window.capacity_rows() as f64)),
+            ("window_rows", Json::Num(s.rows as f64)),
+            ("drift_threshold", Json::Num(self.drift_threshold)),
+            ("drift_events", Json::Num(self.drift_events() as f64)),
+        ];
+        if s.rows > 0 {
+            fields.push(("rmse", Json::Num(s.rmse)));
+            fields.push(("mnlp", Json::Num(s.mnlp)));
+            fields.push(("coverage90", Json::Num(s.coverage90)));
+        }
+        if let Some(b) = self.baseline {
+            fields.push(("baseline", b.to_json()));
+        }
+        if let Some(d) = self.drift_score() {
+            fields.push(("drift_score", Json::Num(d)));
+        }
+        Json::obj(fields)
+    }
+
+    /// The `GET /debug/quality` payload: summary + windowed series +
+    /// top-k worst blocks.
+    pub fn debug_json(&self, n: usize, k: usize) -> Json {
+        let series: Vec<Json> = self
+            .series(n)
+            .into_iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("bucket", Json::Num(b.seq as f64)),
+                    ("rows", Json::Num(b.rows as f64)),
+                    ("rmse", Json::Num(b.rmse)),
+                    ("mnlp", Json::Num(b.mnlp)),
+                    ("coverage90", Json::Num(b.coverage90)),
+                ])
+            })
+            .collect();
+        let blocks: Vec<Json> = self
+            .worst_blocks(k)
+            .into_iter()
+            .map(|b| {
+                Json::obj(vec![
+                    ("block", Json::Num(b.block as f64)),
+                    ("rows", Json::Num(b.rows as f64)),
+                    ("rmse", Json::Num(b.rmse)),
+                    ("mnlp", Json::Num(b.mnlp)),
+                ])
+            })
+            .collect();
+        let mut map = match self.to_json() {
+            Json::Obj(m) => m,
+            _ => BTreeMap::new(),
+        };
+        map.insert("enabled".into(), Json::Bool(self.enabled()));
+        map.insert("series".into(), Json::Arr(series));
+        map.insert("worst_blocks".into(), Json::Arr(blocks));
+        Json::Obj(map)
+    }
+}
+
+/// Map a drained-batch row index onto the Markov block the update plan
+/// absorbs it into: the first `extend_tail` rows extend block
+/// `m_before − 1`, the rest fill `new_blocks` in order starting at
+/// block `m_before`.
+pub fn block_of_row(i: usize, extend_tail: usize, new_blocks: &[usize], m_before: usize) -> usize {
+    if i < extend_tail {
+        return m_before.saturating_sub(1);
+    }
+    let mut off = i - extend_tail;
+    let mut blk = m_before;
+    for &sz in new_blocks {
+        if off < sz {
+            return blk;
+        }
+        off -= sz;
+        blk += 1;
+    }
+    // Past the plan's declared rows (defensive): attribute to the last
+    // planned block.
+    blk.saturating_sub(1).max(m_before.saturating_sub(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_mode_parses_and_round_trips() {
+        assert_eq!(ScoreMode::parse("off").unwrap(), ScoreMode::Off);
+        assert_eq!(ScoreMode::parse("ALL").unwrap(), ScoreMode::All);
+        assert_eq!(ScoreMode::parse(" sample:4 ").unwrap(), ScoreMode::Sample(4));
+        assert!(ScoreMode::parse("sample:0").is_err());
+        assert!(ScoreMode::parse("sample:x").is_err());
+        assert!(ScoreMode::parse("half").is_err());
+        for m in [ScoreMode::Off, ScoreMode::All, ScoreMode::Sample(16)] {
+            assert_eq!(ScoreMode::parse(&m.selector()).unwrap(), m);
+        }
+        assert_eq!(ScoreMode::default(), ScoreMode::Sample(16));
+    }
+
+    #[test]
+    fn sample_indices_are_strictly_increasing_and_span_the_batch() {
+        assert!(ScoreMode::Off.indices(10).is_empty());
+        assert_eq!(ScoreMode::All.indices(3), vec![0, 1, 2]);
+        assert_eq!(ScoreMode::Sample(8).indices(5), vec![0, 1, 2, 3, 4]);
+        let idx = ScoreMode::Sample(4).indices(100);
+        assert_eq!(idx, vec![0, 25, 50, 75]);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        let idx = ScoreMode::Sample(16).indices(17);
+        assert_eq!(idx.len(), 16);
+        for w in idx.windows(2) {
+            assert!(w[0] < w[1], "{idx:?}");
+        }
+    }
+
+    #[test]
+    fn row_nlpd_matches_offline_mnlp() {
+        let mean = [0.5, -1.0, 2.0];
+        let var = [0.25, 1.5, 0.0];
+        let truth = [0.75, -0.5, 2.0];
+        let offline = crate::metrics::mnlp(&mean, &var, &truth);
+        let total: f64 =
+            (0..3).map(|i| row_nlpd(mean[i], var[i], truth[i])).sum();
+        assert_eq!((total / 3.0).to_bits(), offline.to_bits());
+    }
+
+    #[test]
+    fn window_forgets_old_buckets() {
+        // Window of exactly QUALITY_BUCKETS rows: one row per bucket.
+        let w = QualityWindow::new(QUALITY_BUCKETS);
+        assert_eq!(w.capacity_rows(), QUALITY_BUCKETS);
+        for _ in 0..QUALITY_BUCKETS {
+            w.push(&ScoredRow { block: 0, sq_err: 4.0, nlpd: 3.0, z: 5.0 });
+        }
+        let s = w.stats();
+        assert_eq!(s.rows as usize, QUALITY_BUCKETS);
+        assert!((s.rmse - 2.0).abs() < 1e-12);
+        assert_eq!(s.coverage90, 0.0);
+        // A full window of good rows pushes every bad bucket out.
+        for _ in 0..QUALITY_BUCKETS {
+            w.push(&ScoredRow { block: 1, sq_err: 0.01, nlpd: 0.5, z: 0.1 });
+        }
+        let s = w.stats();
+        assert_eq!(s.rows as usize, QUALITY_BUCKETS);
+        assert!((s.rmse - 0.1).abs() < 1e-12, "rmse={}", s.rmse);
+        assert_eq!(s.coverage90, 1.0);
+        assert_eq!(w.scored_rows() as usize, 2 * QUALITY_BUCKETS);
+        // The per-block profile is windowed too: block 0 has been
+        // forgotten along with its buckets.
+        let blocks = w.worst_blocks(8);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].block, 1);
+    }
+
+    #[test]
+    fn worst_blocks_rank_by_windowed_rmse() {
+        let w = QualityWindow::new(64);
+        for _ in 0..8 {
+            w.push(&ScoredRow { block: 2, sq_err: 9.0, nlpd: 4.0, z: 3.0 });
+            w.push(&ScoredRow { block: 0, sq_err: 0.04, nlpd: 0.1, z: 0.2 });
+            w.push(&ScoredRow { block: 1, sq_err: 1.0, nlpd: 1.0, z: 1.0 });
+        }
+        let blocks = w.worst_blocks(2);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].block, 2);
+        assert!((blocks[0].rmse - 3.0).abs() < 1e-12);
+        assert_eq!(blocks[1].block, 1);
+        let all = w.worst_blocks(8);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[2].block, 0);
+    }
+
+    #[test]
+    fn series_is_newest_first() {
+        let w = QualityWindow::new(QUALITY_BUCKETS * 2); // 2 rows per bucket
+        for i in 0..6 {
+            let sq = (i / 2 + 1) as f64;
+            w.push(&ScoredRow { block: 0, sq_err: sq * sq, nlpd: sq, z: 0.0 });
+        }
+        let s = w.series(2);
+        assert_eq!(s.len(), 2);
+        assert!(s[0].seq > s[1].seq);
+        assert!((s[0].rmse - 3.0).abs() < 1e-12);
+        assert!((s[1].rmse - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_window_is_inert() {
+        let w = QualityWindow::new(0);
+        w.push(&ScoredRow { block: 0, sq_err: 1.0, nlpd: 1.0, z: 1.0 });
+        assert_eq!(w.stats().rows, 0);
+        assert!(w.series(4).is_empty());
+        assert!(w.worst_blocks(4).is_empty());
+        let q = ModelQuality::new(ScoreMode::Off, 1024, 1.0, None);
+        assert!(!q.enabled());
+        assert!(q
+            .record(&[ScoredRow { block: 0, sq_err: 1.0, nlpd: 1.0, z: 1.0 }])
+            .is_none());
+        assert_eq!(q.scored_rows(), 0);
+    }
+
+    #[test]
+    fn drift_fires_once_per_crossing_and_rearms() {
+        let baseline = QualityBaseline { rmse: 0.1, mnlp: 0.0, rows: 64 };
+        let q = ModelQuality::new(ScoreMode::All, QUALITY_BUCKETS, 1.0, Some(baseline));
+        let bad = ScoredRow { block: 0, sq_err: 4.0, nlpd: 5.0, z: 4.0 };
+        let good = ScoredRow { block: 0, sq_err: 0.01, nlpd: 0.1, z: 0.1 };
+        // First bad batch crosses: exactly one event.
+        let c = q.record(&[bad; 4]).expect("first crossing fires");
+        assert!(c.score > 1.0);
+        assert!((c.baseline_mnlp - 0.0).abs() < 1e-12);
+        // Still above threshold: no re-fire.
+        assert!(q.record(&[bad; 4]).is_none());
+        assert_eq!(q.drift_events(), 1);
+        // A full window of good rows brings the score back down…
+        for _ in 0..QUALITY_BUCKETS {
+            assert!(q.record(&[good]).is_none());
+        }
+        assert!(q.drift_score().unwrap() < 1.0);
+        // …and the detector re-arms: the next crossing fires again.
+        let mut fired = 0;
+        for _ in 0..QUALITY_BUCKETS {
+            if q.record(&[bad]).is_some() {
+                fired += 1;
+            }
+        }
+        assert_eq!(fired, 1);
+        assert_eq!(q.drift_events(), 2);
+    }
+
+    #[test]
+    fn no_baseline_means_no_drift_score() {
+        let q = ModelQuality::new(ScoreMode::All, 64, 1.0, None);
+        q.record(&[ScoredRow { block: 0, sq_err: 100.0, nlpd: 50.0, z: 10.0 }]);
+        assert!(q.drift_score().is_none());
+        assert_eq!(q.drift_events(), 0);
+        assert_eq!(q.stats().rows, 1);
+    }
+
+    #[test]
+    fn block_of_row_walks_the_plan() {
+        // Tail extension first, then two fresh blocks of 3 and 2 rows.
+        let new_blocks = [3usize, 2];
+        assert_eq!(block_of_row(0, 2, &new_blocks, 4), 3);
+        assert_eq!(block_of_row(1, 2, &new_blocks, 4), 3);
+        assert_eq!(block_of_row(2, 2, &new_blocks, 4), 4);
+        assert_eq!(block_of_row(4, 2, &new_blocks, 4), 4);
+        assert_eq!(block_of_row(5, 2, &new_blocks, 4), 5);
+        assert_eq!(block_of_row(6, 2, &new_blocks, 4), 5);
+        // No tail room: everything goes to fresh blocks.
+        assert_eq!(block_of_row(0, 0, &[4], 4), 4);
+        assert_eq!(block_of_row(3, 0, &[4], 4), 4);
+        // Pure tail extension.
+        assert_eq!(block_of_row(0, 5, &[], 1), 0);
+        assert_eq!(block_of_row(4, 5, &[], 1), 0);
+    }
+
+    #[test]
+    fn quality_json_surfaces_match_state() {
+        let baseline = QualityBaseline { rmse: 0.2, mnlp: 0.5, rows: 32 };
+        let q = ModelQuality::new(ScoreMode::Sample(8), 64, 0.75, Some(baseline));
+        q.record(&[ScoredRow { block: 1, sq_err: 1.0, nlpd: 1.5, z: 1.0 }]);
+        let s = q.to_json().to_string();
+        assert!(s.contains("\"mode\":\"sample:8\""), "{s}");
+        assert!(s.contains("\"scored_rows\":1"), "{s}");
+        assert!(s.contains("\"rmse\":1"), "{s}");
+        assert!(s.contains("\"baseline\":{"), "{s}");
+        assert!(s.contains("\"drift_score\":1"), "{s}");
+        let d = q.debug_json(4, 4).to_string();
+        assert!(d.contains("\"enabled\":true"), "{d}");
+        assert!(d.contains("\"series\":[{"), "{d}");
+        assert!(d.contains("\"worst_blocks\":[{"), "{d}");
+        assert!(d.contains("\"block\":1"), "{d}");
+        // Round-trip of the persisted baseline.
+        let back = QualityBaseline::from_json(&baseline.to_json()).unwrap();
+        assert_eq!(back, baseline);
+    }
+}

@@ -15,7 +15,7 @@ use crate::util::json::Json;
 use crate::util::timer::PhaseProfiler;
 
 /// Number of stages in the taxonomy (the length of a [`StageSet`]).
-pub const STAGE_COUNT: usize = 16;
+pub const STAGE_COUNT: usize = 17;
 
 /// One leg of the request pipeline. The discriminant is the index into
 /// [`StageSet`] / the per-stage histogram array, so the order is ABI for
@@ -56,6 +56,9 @@ pub enum Stage {
     ObserveAbsorb = 14,
     /// Online update: building + publishing the new engine generation.
     ObservePublish = 15,
+    /// Online update: prequential quality scoring of the drained batch
+    /// against the current generation (before `absorb` consumes it).
+    ObserveScore = 16,
 }
 
 /// Every stage, in index order.
@@ -76,6 +79,7 @@ pub const ALL_STAGES: [Stage; STAGE_COUNT] = [
     Stage::ObserveDrain,
     Stage::ObserveAbsorb,
     Stage::ObservePublish,
+    Stage::ObserveScore,
 ];
 
 impl Stage {
@@ -98,6 +102,7 @@ impl Stage {
             Stage::ObserveDrain => "observe_drain",
             Stage::ObserveAbsorb => "observe_absorb",
             Stage::ObservePublish => "observe_publish",
+            Stage::ObserveScore => "observe_score",
         }
     }
 
@@ -288,7 +293,7 @@ mod tests {
             assert_eq!(*s as usize, i);
         }
         assert_eq!(Stage::QueueWait.name(), "queue_wait");
-        assert_eq!(Stage::ObservePublish as usize, STAGE_COUNT - 1);
+        assert_eq!(Stage::ObserveScore as usize, STAGE_COUNT - 1);
     }
 
     #[test]

@@ -223,6 +223,7 @@ pub fn absorb(
         },
         cov_backend: core.cov_backend.clone(),
         ctx: None,
+        quality_baseline: core.quality_baseline,
     };
     let workers = if newc.cov_backend.is_pjrt() { 1 } else { threads.max(1) };
     let touched = mm_new - start;

@@ -52,6 +52,7 @@ use crate::lma::parallel::ParallelLma;
 use crate::lma::partition::Partition;
 use crate::lma::residual::{FitTimings, LmaFitCore, SupportBasis};
 use crate::lma::LmaRegressor;
+use crate::obs::quality::QualityBaseline;
 use crate::util::error::{PgprError, Result};
 use crate::util::json::Json;
 
@@ -536,6 +537,12 @@ fn core_from_parts(manifest: &Json, r: &TensorReader<'_>) -> Result<LmaFitCore> 
         timings,
         cov_backend,
         ctx: None,
+        // Absent in artifacts written before the quality layer existed —
+        // such models simply serve without a drift comparison point.
+        quality_baseline: manifest
+            .get("quality_baseline")
+            .map(QualityBaseline::from_json)
+            .transpose()?,
     })
 }
 
@@ -651,6 +658,9 @@ fn assemble_bytes(
         ("support_rows", Json::Num(core.basis.size() as f64)),
         ("tensors", Json::Arr(std::mem::take(&mut w.entries))),
     ];
+    if let Some(b) = core.quality_baseline {
+        fields.push(("quality_baseline", b.to_json()));
+    }
     match engine {
         ServeEngine::Centralized(_) => {
             fields.push(("engine", Json::Str("centralized".into())));

@@ -26,7 +26,9 @@ use std::time::{Duration, Instant};
 
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::{PredictionService, ServeEngine};
+use crate::lma::context::PredictScratch;
 use crate::lma::PredictMode;
+use crate::obs::quality::{block_of_row, ModelQuality, ScoredRow};
 use crate::obs::{log_event, Level, Stage};
 use crate::online::{absorb, BlockPolicy, ObservationBuffer};
 use crate::registry::artifact::{self, SnapshotCache};
@@ -99,6 +101,10 @@ struct IngestInner {
     snapshot_path: Option<String>,
     /// Encoded-tensor byte cache for incremental re-snapshotting.
     snapshot_cache: SnapshotCache,
+    /// Pooled predict workspace for the prequential quality scorer —
+    /// the ingest mutex already serializes the observe path, so one
+    /// scratch per model suffices and scoring allocates nothing per row.
+    scorer: PredictScratch,
 }
 
 impl IngestState {
@@ -110,6 +116,7 @@ impl IngestState {
                 policy: BlockPolicy::from_core(core),
                 snapshot_path,
                 snapshot_cache: SnapshotCache::new(),
+                scorer: PredictScratch::default(),
             }),
         }
     }
@@ -167,6 +174,10 @@ pub struct ModelEntry {
     generation: u64,
     /// Ingestion state shared across this model's generations.
     ingest: Arc<IngestState>,
+    /// Prequential quality/drift state — shared across generations (the
+    /// observation stream is one stream; a generation swap must not
+    /// reset the sliding window or the drift detector).
+    quality: Arc<ModelQuality>,
     /// `/predict` requests routed to this model — shared across
     /// generations, so a hit recorded against a just-swapped entry is
     /// still counted.
@@ -200,6 +211,11 @@ impl ModelEntry {
 
     pub fn metrics(&self) -> &Arc<ServeMetrics> {
         &self.metrics
+    }
+
+    /// Prequential quality/drift state for this model.
+    pub fn quality(&self) -> &Arc<ModelQuality> {
+        &self.quality
     }
 
     /// Generation this entry serves (0 = as loaded).
@@ -453,10 +469,16 @@ impl ModelRegistry {
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
         let ingest = Arc::new(IngestState::new(&engine, snapshot_path));
         let backend = engine.backend_name();
-        let (dim, train_rows) = {
+        let (dim, train_rows, baseline) = {
             let core = engine.core();
-            (core.hyp.dim(), core.part.total())
+            (core.hyp.dim(), core.part.total(), core.quality_baseline)
         };
+        let quality = Arc::new(ModelQuality::new(
+            self.opts.observe_score,
+            self.opts.quality_window,
+            self.opts.drift_threshold,
+            baseline,
+        ));
         let entry = Arc::new(ModelEntry {
             name: name.to_string(),
             engine,
@@ -464,6 +486,7 @@ impl ModelRegistry {
             metrics,
             generation: 0,
             ingest,
+            quality,
             hits: Arc::new(AtomicU64::new(0)),
             last_used: AtomicU64::new(self.tick()),
             seq,
@@ -538,6 +561,7 @@ impl ModelRegistry {
             metrics: Arc::clone(&expected.metrics),
             generation: expected.generation + 1,
             ingest: Arc::clone(&expected.ingest),
+            quality: Arc::clone(&expected.quality),
             hits: Arc::clone(&expected.hits),
             last_used: AtomicU64::new(self.tick()),
             seq: expected.seq,
@@ -638,6 +662,69 @@ impl ModelRegistry {
         let (batch_x, batch_y) = g.buffer.drain();
         let plan = g.policy.plan(core.part.size(core.m() - 1), batch_x.rows());
         let drain_secs = t_drain.elapsed().as_secs_f64();
+
+        // Prequential quality scoring (test-then-train): score the
+        // arriving rows against the generation that is about to absorb
+        // them, attributing each to the Markov block the plan routes it
+        // into. Runs before `absorb` so the score reflects genuine
+        // out-of-sample error. A scoring failure is an observability gap,
+        // never an ingest failure. (If `absorb` fails below, the restored
+        // rows are scored again on the retry — acceptable for a rolling
+        // window.)
+        let t_score = Instant::now();
+        let mut drift = None;
+        if entry.quality.enabled() {
+            let idx = self.opts.observe_score.indices(batch_x.rows());
+            if !idx.is_empty() {
+                let sel;
+                let xs = if idx.len() == batch_x.rows() {
+                    &batch_x
+                } else {
+                    sel = batch_x.select_rows(&idx);
+                    &sel
+                };
+                match entry.engine.predict_with_scratch(xs, &mut g.scorer) {
+                    Ok(pred) => {
+                        let m_before = core.m();
+                        let scored: Vec<ScoredRow> = idx
+                            .iter()
+                            .enumerate()
+                            .map(|(j, &i)| {
+                                let block =
+                                    block_of_row(i, plan.extend_tail, &plan.new_blocks, m_before);
+                                ScoredRow::score(block, pred.mean[j], pred.var[j], batch_y[i])
+                            })
+                            .collect();
+                        drift = entry.quality.record(&scored);
+                    }
+                    Err(e) => log_event(
+                        Level::Debug,
+                        "quality_score_failed",
+                        vec![
+                            ("model", Json::Str(model.clone())),
+                            ("error", Json::Str(e.to_string())),
+                        ],
+                    ),
+                }
+            }
+        }
+        let score_secs = t_score.elapsed().as_secs_f64();
+        if let Some(c) = drift {
+            log_event(
+                Level::Info,
+                "drift_detected",
+                vec![
+                    ("model", Json::Str(model.clone())),
+                    ("generation", Json::Num(entry.generation as f64)),
+                    ("drift_score", Json::Num(c.score)),
+                    ("window_mnlp", Json::Num(c.window_mnlp)),
+                    ("baseline_mnlp", Json::Num(c.baseline_mnlp)),
+                    ("threshold", Json::Num(self.opts.drift_threshold)),
+                    ("window_rows", Json::Num(entry.quality.stats().rows as f64)),
+                ],
+            );
+        }
+
         let t0 = Instant::now();
         let absorbed = absorb(core, &batch_x, &batch_y, &plan, entry.engine.update_parallelism());
         let (new_core, stats) = match absorbed {
@@ -669,6 +756,9 @@ impl ModelRegistry {
         entry.metrics.observe_us.record((update_secs * 1e6) as u64);
         if self.batch.trace {
             entry.metrics.stages.record(Stage::ObserveDrain, drain_secs);
+            if entry.quality.enabled() {
+                entry.metrics.stages.record(Stage::ObserveScore, score_secs);
+            }
             entry.metrics.stages.record(Stage::ObserveAbsorb, absorb_secs);
             entry.metrics.stages.record(Stage::ObservePublish, publish_secs);
         }
@@ -829,6 +919,16 @@ impl ModelRegistry {
             .collect();
         infos.sort_by_key(|i| i.seq);
         infos
+    }
+
+    /// Resident entries in load order — the `/metrics` and
+    /// `?format=json` per-model surfaces read name, generation, metrics
+    /// and quality state off them in one pass.
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        let map = self.models.read().expect("registry lock");
+        let mut out: Vec<Arc<ModelEntry>> = map.values().cloned().collect();
+        out.sort_by_key(|e| e.seq);
+        out
     }
 
     /// Snapshot of (name, metrics) pairs for the per-model `/metrics`

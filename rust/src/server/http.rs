@@ -28,12 +28,20 @@
 //! * `GET /readyz` — readiness: 200 iff ≥ 1 model is resident and every
 //!   batcher thread is alive, else 503.
 //! * `GET /metrics` — Prometheus text: the boot-default model's full
-//!   histogram section (back-compat) plus `pgpr_models_resident`, a
-//!   `{model="…"}`-labeled section per resident model and per-stage
-//!   `pgpr_stage_seconds` quantiles; `?format=json` returns the same
-//!   numbers as one JSON object.
+//!   histogram section (back-compat) plus `pgpr_models_resident`,
+//!   process-wide `pgpr_process_uptime_seconds` / `pgpr_build_info`, a
+//!   `{model="…"}`-labeled section per resident model, per-stage
+//!   `pgpr_stage_seconds` quantiles and — when prequential scoring is on
+//!   (`RegistryOptions::observe_score`) — windowed
+//!   `pgpr_model_quality{model,metric}` gauges plus
+//!   `pgpr_model_drift_score` once a fit-time baseline exists;
+//!   `?format=json` returns the same numbers as one JSON object (with
+//!   `uptime_s`, per-model `generation` and a `quality` object).
 //! * `GET /debug/trace?model=<name>&n=<count>` — the last `n` completed
 //!   request traces (per-stage breakdowns) from the model's trace ring.
+//! * `GET /debug/quality?model=<name>&n=<buckets>&k=<blocks>` — one
+//!   model's windowed quality series (newest bucket first) and its top-k
+//!   worst Markov blocks by windowed RMSE (see [`crate::obs::quality`]).
 //!
 //! `POST /predict?trace=1` inlines the answering request's own stage
 //! breakdown under a `"trace"` key; an `X-Request-Id` header is echoed
@@ -62,7 +70,7 @@ use crate::obs::{log_event, next_trace_id, parse_query, Level, Query, Stage, Tra
 use crate::registry::artifact;
 use crate::registry::registry::{ModelRegistry, RegistryError};
 use crate::server::batcher::SubmitError;
-use crate::server::metrics::ServeMetrics;
+use crate::server::metrics::{build_info, process_start, process_uptime_secs, ServeMetrics};
 use crate::util::error::{PgprError, Result};
 use crate::util::json::Json;
 
@@ -130,6 +138,8 @@ impl Server {
         opts: &ServeOptions,
     ) -> Result<Server> {
         opts.validate()?;
+        // Anchor the process-uptime gauge at boot, not at first scrape.
+        process_start();
         let primary = registry.entry_for(None).map_err(|e| {
             PgprError::Config(format!("cannot serve an empty registry: {e}"))
         })?;
@@ -500,6 +510,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
             }
         }
         ("GET", "/debug/trace") => handle_debug_trace(&query, shared),
+        ("GET", "/debug/quality") => handle_debug_quality(&query, shared),
         ("POST", "/predict") => handle_predict(req, &query, shared),
         ("GET", "/models") => {
             let infos: Vec<Json> = shared.registry.list().iter().map(|i| i.to_json()).collect();
@@ -544,6 +555,14 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
 /// `{model="…"}`-labeled section per model.
 fn metrics_text(shared: &Shared) -> String {
     let mut s = shared.metrics.render_prometheus();
+    let (version, features) = build_info();
+    s.push_str(&format!(
+        "pgpr_process_uptime_seconds {:.3}\n",
+        process_uptime_secs()
+    ));
+    s.push_str(&format!(
+        "pgpr_build_info{{version=\"{version}\",features=\"{features}\"}} 1\n"
+    ));
     let by_model = shared.registry.metrics_by_model();
     s.push_str(&format!("pgpr_models_resident {}\n", by_model.len()));
     for info in shared.registry.list() {
@@ -564,6 +583,35 @@ fn metrics_text(shared: &Shared) -> String {
             info.name, info.inflight
         ));
     }
+    // Prequential model-quality gauges: windowed accuracy/calibration per
+    // scoring-enabled model, plus the drift score once a fit-time baseline
+    // exists to compare against.
+    for entry in shared.registry.entries() {
+        let q = entry.quality();
+        if !q.enabled() {
+            continue;
+        }
+        let stats = q.stats();
+        if stats.rows > 0 {
+            for (metric, v) in [
+                ("rmse", stats.rmse),
+                ("mnlp", stats.mnlp),
+                ("coverage90", stats.coverage90),
+                ("rows", stats.rows as f64),
+            ] {
+                s.push_str(&format!(
+                    "pgpr_model_quality{{model=\"{}\",metric=\"{metric}\"}} {v}\n",
+                    entry.name()
+                ));
+            }
+        }
+        if let Some(d) = q.drift_score() {
+            s.push_str(&format!(
+                "pgpr_model_drift_score{{model=\"{}\"}} {d}\n",
+                entry.name()
+            ));
+        }
+    }
     for (name, m) in by_model {
         s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
     }
@@ -571,12 +619,29 @@ fn metrics_text(shared: &Shared) -> String {
 }
 
 /// `GET /metrics?format=json`: the same counters/histograms as the text
-/// page, as one JSON object (primary section + one per resident model).
+/// page, as one JSON object — process `uptime_s`, the primary section,
+/// then one object per resident model carrying its `generation` and
+/// (when prequential scoring is on) its windowed `quality` summary.
 fn metrics_json(shared: &Shared) -> String {
-    let by_model = shared.registry.metrics_by_model();
-    let models = Json::obj(by_model.iter().map(|(n, m)| (n.as_str(), m.to_json())).collect());
+    let entries = shared.registry.entries();
+    let models = Json::obj(
+        entries
+            .iter()
+            .map(|e| {
+                let mut j = e.metrics().to_json();
+                if let Json::Obj(map) = &mut j {
+                    map.insert("generation".into(), Json::Num(e.generation() as f64));
+                    if e.quality().enabled() {
+                        map.insert("quality".into(), e.quality().to_json());
+                    }
+                }
+                (e.name(), j)
+            })
+            .collect(),
+    );
     Json::obj(vec![
-        ("models_resident", Json::Num(by_model.len() as f64)),
+        ("models_resident", Json::Num(entries.len() as f64)),
+        ("uptime_s", Json::Num(process_uptime_secs())),
         ("primary", shared.metrics.to_json()),
         ("models", models),
     ])
@@ -599,6 +664,25 @@ fn handle_debug_trace(query: &Query<'_>, shared: &Shared) -> (u16, &'static str,
         ("capacity", Json::Num(entry.metrics().trace.capacity() as f64)),
         ("traces", Json::Arr(traces)),
     ]);
+    (200, "application/json", j.to_string())
+}
+
+/// `GET /debug/quality?model=<name>&n=<buckets>&k=<blocks>` — one model's
+/// prequential quality window: summary stats, the last `n` window buckets
+/// (newest first) and the `k` worst Markov blocks by windowed RMSE.
+/// Scoring-off models answer with `"enabled": false` and empty series.
+fn handle_debug_quality(query: &Query<'_>, shared: &Shared) -> (u16, &'static str, String) {
+    let entry = match shared.registry.entry_for(query.get("model")) {
+        Ok(e) => e,
+        Err(e) => return registry_error_response(&e),
+    };
+    let n = query.get_usize("n").unwrap_or(16);
+    let k = query.get_usize("k").unwrap_or(8);
+    let mut j = entry.quality().debug_json(n, k);
+    if let Json::Obj(map) = &mut j {
+        map.insert("model".into(), Json::Str(entry.name().to_string()));
+        map.insert("generation".into(), Json::Num(entry.generation() as f64));
+    }
     (200, "application/json", j.to_string())
 }
 

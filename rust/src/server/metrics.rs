@@ -11,10 +11,38 @@
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::obs::{Stage, StageSet, TraceRing, ALL_STAGES, STAGE_COUNT};
 use crate::util::json::Json;
+
+/// Process-wide boot instant behind `pgpr_process_uptime_seconds`.
+/// Anchored by the first [`process_start`] call ([`Server::start_with_registry`]
+/// calls it at boot); distinct from the per-[`ServeMetrics`] clock, which
+/// resets on generation swaps and registry reloads.
+///
+/// [`Server::start_with_registry`]: crate::server::http::Server::start_with_registry
+static PROCESS_START: OnceLock<Instant> = OnceLock::new();
+
+/// Anchor the process-uptime clock. Idempotent — the first call wins.
+pub fn process_start() {
+    let _ = PROCESS_START.get_or_init(Instant::now);
+}
+
+/// Seconds since [`process_start`] first ran (anchors now if it never did,
+/// so a bare scrape still reads a sane 0-ish value instead of garbage).
+pub fn process_uptime_secs() -> f64 {
+    PROCESS_START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Build identity for the `pgpr_build_info` gauge: crate version and the
+/// compiled feature set (what this binary can actually do — `simd` changes
+/// the serve hot path, so scrapes should be attributable to it).
+pub fn build_info() -> (&'static str, &'static str) {
+    let features = if cfg!(feature = "simd") { "simd" } else { "default" };
+    (env!("CARGO_PKG_VERSION"), features)
+}
 
 /// Values below this get exact unit buckets; above, log-linear octaves.
 const LINEAR_MAX: u64 = 8;
@@ -551,6 +579,17 @@ mod tests {
             Some(1)
         );
         assert!(stages.get("f32u").is_none());
+    }
+
+    #[test]
+    fn process_uptime_monotone_and_build_info_sane() {
+        process_start();
+        let a = process_uptime_secs();
+        let b = process_uptime_secs();
+        assert!(a >= 0.0 && b >= a, "uptime went backwards: {a} -> {b}");
+        let (version, features) = build_info();
+        assert_eq!(version, env!("CARGO_PKG_VERSION"));
+        assert!(features == "simd" || features == "default");
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Quality & drift observability acceptance suite.
+//!
+//! * **Prequential ≡ offline** — rows scored by the observe hook against
+//!   the pre-absorb generation produce windowed RMSE/MNLP that bit-match
+//!   `metrics::rmse`/`metrics::mnlp` computed offline from the same
+//!   engine's `predict` (same per-row formula, same f64 summation order
+//!   while the batch fits one window bucket).
+//! * **Sliding window forgets** — a burst of shifted-target errors
+//!   spikes the windowed RMSE, and a window's worth of well-predicted
+//!   rows pushes the spike back out.
+//! * **Per-block attribution** — scored rows land on exactly the Markov
+//!   blocks the update plan routes them into, across B = 0 and B = 2.
+//! * **Drift detector** — with a fit-time baseline stamped on the
+//!   engine, a shifted stream fires `drift_detected` exactly once while
+//!   the score stays above the threshold.
+//! * **HTTP surfaces** — scoring-off serves expose zero quality gauges
+//!   (while uptime/build-info stay up); scoring-on serves expose the
+//!   `pgpr_model_quality` gauges, the JSON `quality` object and
+//!   `GET /debug/quality`.
+
+use std::sync::Arc;
+
+use pgpr::config::{LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::LmaRegressor;
+use pgpr::metrics::{mnlp, rmse};
+use pgpr::obs::{block_of_row, QualityBaseline, ScoreMode};
+use pgpr::online::BlockPolicy;
+use pgpr::registry::ModelRegistry;
+use pgpr::server::http::Server;
+use pgpr::server::loadgen::http_request;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+fn hyp() -> SeArdHyper {
+    SeArdHyper::isotropic(1, 0.9, 1.0, 0.1)
+}
+
+fn lma_cfg(m: usize, b: usize, s: usize, seed: u64) -> LmaConfig {
+    LmaConfig {
+        num_blocks: m,
+        markov_order: b,
+        support_size: s,
+        seed,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    }
+}
+
+fn sine(x: &Mat) -> Vec<f64> {
+    (0..x.rows()).map(|i| x.get(i, 0).sin()).collect()
+}
+
+fn mat_rows(x: &Mat) -> Vec<Vec<f64>> {
+    (0..x.rows()).map(|i| x.row(i).to_vec()).collect()
+}
+
+fn serve_opts() -> ServeOptions {
+    ServeOptions { batch_size: 4, max_delay_us: 500, ..Default::default() }
+}
+
+#[test]
+fn prequential_scores_bit_match_offline_metrics() {
+    let mut rng = Pcg64::new(501);
+    let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, 1, 16, 3)).unwrap();
+    let reg = ModelRegistry::new(
+        RegistryOptions { observe_score: ScoreMode::All, ..Default::default() },
+        &serve_opts(),
+    );
+    reg.load("scored", Arc::new(ServeEngine::Centralized(model))).unwrap();
+    let entry = reg.get("scored").unwrap();
+    // The generation the hook scores against: captured before observe.
+    let engine0 = Arc::clone(entry.engine());
+
+    // 24 rows fit inside a single window bucket (1024-row default window
+    // → 32 rows per bucket), so the windowed sums accumulate in the same
+    // flat order the offline metrics use.
+    let bx = Mat::col_vec(&rng.uniform_vec(24, 3.0, 5.0));
+    let by = sine(&bx);
+    let offline = engine0.predict(&bx).unwrap();
+    let off_rmse = rmse(&offline.mean, &by);
+    let off_mnlp = mnlp(&offline.mean, &offline.var, &by);
+
+    reg.observe(Some("scored"), &mat_rows(&bx), &by, false, true).unwrap();
+    let q = entry.quality();
+    assert!(q.enabled());
+    assert_eq!(q.scored_rows(), 24);
+    let s = q.stats();
+    assert_eq!(s.rows, 24);
+    assert_eq!(
+        s.rmse.to_bits(),
+        off_rmse.to_bits(),
+        "windowed RMSE {} must bit-match offline {}",
+        s.rmse,
+        off_rmse
+    );
+    assert_eq!(
+        s.mnlp.to_bits(),
+        off_mnlp.to_bits(),
+        "windowed MNLP {} must bit-match offline {}",
+        s.mnlp,
+        off_mnlp
+    );
+    assert!((0.0..=1.0).contains(&s.coverage90), "coverage90 = {}", s.coverage90);
+    reg.shutdown();
+}
+
+#[test]
+fn sliding_window_forgets_old_errors() {
+    let mut rng = Pcg64::new(521);
+    let x = Mat::col_vec(&rng.uniform_vec(140, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, 1, 16, 5)).unwrap();
+    // 64-row window (2 rows per bucket) so one phase can evict another.
+    let reg = ModelRegistry::new(
+        RegistryOptions {
+            observe_score: ScoreMode::All,
+            quality_window: 64,
+            ..Default::default()
+        },
+        &serve_opts(),
+    );
+    reg.load("window", Arc::new(ServeEngine::Centralized(model))).unwrap();
+    let entry = reg.get("window").unwrap();
+    let q = entry.quality();
+    assert_eq!(q.stats().rows, 0);
+
+    // Phase A: a full window of in-region rows the model predicts well.
+    for _ in 0..4 {
+        let bx = Mat::col_vec(&rng.uniform_vec(16, -3.8, 3.8));
+        let by = sine(&bx);
+        reg.observe(Some("window"), &mat_rows(&bx), &by, false, true).unwrap();
+    }
+    let s_a = q.stats();
+    assert_eq!(s_a.rows, 64);
+    assert!(s_a.rmse < 0.5, "in-region windowed RMSE {} should be small", s_a.rmse);
+
+    // Phase B: one shifted-target batch scored against the pre-shift
+    // model — the windowed RMSE spikes. The rows sit far outside the
+    // training region so absorbing them cannot drag down the in-region
+    // predictions phase C is scored on.
+    let bx = Mat::col_vec(&rng.uniform_vec(16, 8.0, 8.5));
+    let by: Vec<f64> = (0..bx.rows()).map(|i| bx.get(i, 0).sin() + 3.0).collect();
+    reg.observe(Some("window"), &mat_rows(&bx), &by, false, true).unwrap();
+    let s_b = q.stats();
+    assert!(s_b.rows <= 64, "window never exceeds its capacity");
+    assert!(
+        s_b.rmse > 0.8 && s_b.rmse > 2.0 * s_a.rmse,
+        "shift must spike the windowed RMSE: {} vs {}",
+        s_b.rmse,
+        s_a.rmse
+    );
+
+    // Phase C: more than a window of well-predicted rows — the spike's
+    // buckets are overwritten and the rolling RMSE recovers.
+    for _ in 0..5 {
+        let bx = Mat::col_vec(&rng.uniform_vec(16, -3.8, 3.8));
+        let by = sine(&bx);
+        reg.observe(Some("window"), &mat_rows(&bx), &by, false, true).unwrap();
+    }
+    let s_c = q.stats();
+    assert_eq!(s_c.rows, 64);
+    assert!(
+        s_c.rmse < 0.5 * s_b.rmse,
+        "window must forget the spike: {} vs {}",
+        s_c.rmse,
+        s_b.rmse
+    );
+    assert_eq!(q.scored_rows(), 64 + 16 + 80);
+    reg.shutdown();
+}
+
+#[test]
+fn per_block_attribution_matches_the_update_plan() {
+    for b in [0usize, 2] {
+        let mut rng = Pcg64::new(601 + b as u64);
+        let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+        let y = sine(&x);
+        let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, b, 16, 5)).unwrap();
+        let reg = ModelRegistry::new(
+            RegistryOptions { observe_score: ScoreMode::All, ..Default::default() },
+            &serve_opts(),
+        );
+        reg.load("attr", Arc::new(ServeEngine::Centralized(model))).unwrap();
+        let entry = reg.get("attr").unwrap();
+        let q = entry.quality();
+
+        // Small batch: replicate the plan the registry derives and check
+        // the scored rows land on exactly the planned blocks.
+        let core0 = entry.engine().core();
+        let m0 = core0.m();
+        let policy = BlockPolicy::from_core(core0);
+        let plan = policy.plan(core0.part.size(m0 - 1), 3);
+        let expect: Vec<usize> =
+            (0..3).map(|i| block_of_row(i, plan.extend_tail, &plan.new_blocks, m0)).collect();
+        let bx = Mat::col_vec(&rng.uniform_vec(3, 4.0, 4.5));
+        let by = sine(&bx);
+        reg.observe(Some("attr"), &mat_rows(&bx), &by, false, true).unwrap();
+        let blocks = q.worst_blocks(16);
+        let total: u64 = blocks.iter().map(|s| s.rows).sum();
+        assert_eq!(total, 3, "B={b}: every scored row is attributed");
+        for s in &blocks {
+            let planned = expect.iter().filter(|&&e| e == s.block).count() as u64;
+            assert_eq!(s.rows, planned, "B={b}: block {} row count", s.block);
+            assert!(s.rmse.is_finite() && s.mnlp.is_finite());
+        }
+
+        // Big batch: more rows than one block holds, so the plan must cut
+        // fresh blocks at/after m_before and attribution must follow.
+        let entry = reg.get("attr").unwrap();
+        let m_before = entry.engine().core().m();
+        let target = BlockPolicy::from_core(entry.engine().core()).target_rows;
+        let bx = Mat::col_vec(&rng.uniform_vec(target + 2, 4.5, 5.5));
+        let by = sine(&bx);
+        reg.observe(Some("attr"), &mat_rows(&bx), &by, false, true).unwrap();
+        let m_after = reg.get("attr").unwrap().engine().core().m();
+        assert!(m_after > m_before, "B={b}: the big batch cuts new blocks");
+        let blocks = q.worst_blocks(64);
+        let total: u64 = blocks.iter().map(|s| s.rows).sum();
+        assert_eq!(total, 3 + (target + 2) as u64, "B={b}: window keeps all scored rows");
+        assert!(
+            blocks.iter().any(|s| s.block >= m_before),
+            "B={b}: some rows are attributed to fresh blocks"
+        );
+        assert!(
+            blocks.iter().all(|s| s.block < m_after),
+            "B={b}: no attribution past the grown chain"
+        );
+        reg.shutdown();
+    }
+}
+
+#[test]
+fn drift_fires_once_per_crossing() {
+    let mut rng = Pcg64::new(641);
+    let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(4, 1, 16, 7)).unwrap();
+    let mut engine = ServeEngine::Centralized(model);
+    // Stamp a fit-time held-out baseline, the way `pgpr fit` does.
+    let tx = Mat::col_vec(&rng.uniform_vec(40, -4.0, 4.0));
+    let ty = sine(&tx);
+    let pred = engine.predict(&tx).unwrap();
+    engine.set_quality_baseline(QualityBaseline {
+        rmse: rmse(&pred.mean, &ty),
+        mnlp: mnlp(&pred.mean, &pred.var, &ty),
+        rows: ty.len(),
+    });
+    let reg = ModelRegistry::new(
+        RegistryOptions {
+            observe_score: ScoreMode::All,
+            quality_window: 256,
+            drift_threshold: 0.5,
+            ..Default::default()
+        },
+        &serve_opts(),
+    );
+    reg.load("drifty", Arc::new(engine)).unwrap();
+    let entry = reg.get("drifty").unwrap();
+    let q = entry.quality();
+    assert_eq!(
+        q.baseline().expect("baseline survives registry load").rows,
+        40
+    );
+
+    // A shifted stream (y = sin x + 3): NLPD explodes past the baseline
+    // on the first batch and stays there — the event fires exactly once.
+    for k in 0..4 {
+        let lo = -3.0 + k as f64;
+        let bx = Mat::col_vec(&rng.uniform_vec(12, lo, lo + 0.5));
+        let by: Vec<f64> = (0..bx.rows()).map(|i| bx.get(i, 0).sin() + 3.0).collect();
+        reg.observe(Some("drifty"), &mat_rows(&bx), &by, false, true).unwrap();
+        assert!(
+            q.drift_score().expect("scored rows + baseline → drift score") > 0.5,
+            "shifted stream stays above the threshold"
+        );
+    }
+    assert_eq!(q.drift_events(), 1, "one upward crossing → one event");
+    assert_eq!(q.scored_rows(), 48);
+    reg.shutdown();
+}
+
+#[test]
+fn scoring_off_serve_exposes_no_quality_surfaces() {
+    let mut rng = Pcg64::new(661);
+    let x = Mat::col_vec(&rng.uniform_vec(96, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(3, 1, 16, 9)).unwrap();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        batch_size: 4,
+        max_delay_us: 500,
+        ..Default::default()
+    };
+    let reg = Arc::new(ModelRegistry::new(
+        RegistryOptions { observe_score: ScoreMode::Off, ..Default::default() },
+        &opts,
+    ));
+    reg.load("default", Arc::new(ServeEngine::Centralized(model))).unwrap();
+    let server = Server::start_with_registry(Arc::clone(&reg), &opts).unwrap();
+    let addr = server.addr().to_string();
+
+    let (status, body) = http_request(
+        &addr,
+        "POST",
+        "/models/default/observe",
+        Some(&format!(r#"{{"x": [4.5], "y": {}, "flush": true}}"#, 4.5f64.sin())),
+    )
+    .unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    assert_eq!(reg.get("default").unwrap().quality().scored_rows(), 0);
+
+    // Prometheus: zero quality/drift gauges, but the process-level
+    // gauges added alongside them are present.
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(!text.contains("pgpr_model_quality"), "{text}");
+    assert!(!text.contains("pgpr_model_drift_score"), "{text}");
+    assert!(text.contains("pgpr_process_uptime_seconds "), "{text}");
+    assert!(text.contains("pgpr_build_info{version="), "{text}");
+
+    // JSON: uptime + per-model generation, but no quality object.
+    let (status, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.req("uptime_s").unwrap().as_f64().unwrap() >= 0.0);
+    let model_json = j.req("models").unwrap().req("default").unwrap();
+    assert!(model_json.req("generation").unwrap().as_usize().is_some());
+    assert!(model_json.get("quality").is_none(), "scoring off → no quality object");
+
+    // The debug endpoint still answers, reporting the scorer disabled.
+    let (status, body) = http_request(&addr, "GET", "/debug/quality?model=default", None).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("enabled").unwrap().as_bool(), Some(false));
+    server.shutdown();
+}
+
+#[test]
+fn scoring_on_serve_exposes_quality_surfaces() {
+    let mut rng = Pcg64::new(671);
+    let x = Mat::col_vec(&rng.uniform_vec(96, -4.0, 4.0));
+    let y = sine(&x);
+    let model = LmaRegressor::fit(&x, &y, &hyp(), &lma_cfg(3, 1, 16, 11)).unwrap();
+    let opts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        batch_size: 4,
+        max_delay_us: 500,
+        ..Default::default()
+    };
+    let reg = Arc::new(ModelRegistry::new(
+        RegistryOptions { observe_score: ScoreMode::All, ..Default::default() },
+        &opts,
+    ));
+    reg.load("default", Arc::new(ServeEngine::Centralized(model))).unwrap();
+    let server = Server::start_with_registry(Arc::clone(&reg), &opts).unwrap();
+    let addr = server.addr().to_string();
+
+    let rows: Vec<f64> = (0..6).map(|i| 4.0 + 0.1 * i as f64).collect();
+    let xs: Vec<String> = rows.iter().map(|v| format!("[{v}]")).collect();
+    let ys: Vec<String> = rows.iter().map(|v| v.sin().to_string()).collect();
+    let body = format!(
+        r#"{{"rows": [{}], "y": [{}], "flush": true}}"#,
+        xs.join(", "),
+        ys.join(", ")
+    );
+    let (status, resp) =
+        http_request(&addr, "POST", "/models/default/observe", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    assert_eq!(reg.get("default").unwrap().quality().scored_rows(), 6);
+
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    for metric in ["rmse", "mnlp", "coverage90", "rows"] {
+        assert!(
+            text.contains(&format!("pgpr_model_quality{{model=\"default\",metric=\"{metric}\"}}")),
+            "missing {metric} gauge in:\n{text}"
+        );
+    }
+
+    let (status, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(status, 200);
+    let j = Json::parse(&body).unwrap();
+    let quality = j.req("models").unwrap().req("default").unwrap().req("quality").unwrap();
+    assert_eq!(quality.req("scored_rows").unwrap().as_usize(), Some(6));
+    assert_eq!(quality.req("mode").unwrap().as_str(), Some("all"));
+    assert!(quality.req("rmse").unwrap().as_f64().is_some());
+
+    let (status, body) =
+        http_request(&addr, "GET", "/debug/quality?model=default&n=4&k=4", None).unwrap();
+    assert_eq!(status, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("model").unwrap().as_str(), Some("default"));
+    assert_eq!(j.req("enabled").unwrap().as_bool(), Some(true));
+    assert!(matches!(j.req("series").unwrap(), Json::Arr(a) if !a.is_empty()));
+    assert!(matches!(j.req("worst_blocks").unwrap(), Json::Arr(a) if !a.is_empty()));
+    server.shutdown();
+}
