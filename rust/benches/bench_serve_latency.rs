@@ -9,6 +9,13 @@
 //! p50 per arm), guarding the observability layer's hot-path cost. The
 //! bench asserts the traced p50 stays within 5% (+100µs noise floor) of
 //! the untraced p50.
+//!
+//! An `overload` section rides along too: the engine is deterministically
+//! slowed via the fault harness (`engine_stall_ms`), an admission SLO is
+//! armed, and the stack is driven open-loop at ~2× its measured clean
+//! capacity. The record captures shed-rate, goodput and the shed
+//! fast-fail tail; the bench asserts the gate both sheds (> 0) and keeps
+//! serving admitted traffic (goodput > 0).
 
 use pgpr::config::ServeOptions;
 use pgpr::coordinator::cli_run::{run_loadtest, LoadtestCmd};
@@ -69,6 +76,48 @@ fn overhead_arm(fast: bool, trace: bool, repeats: usize) -> f64 {
     best
 }
 
+/// Overload probe: with every engine batch stalled 30ms (fault harness)
+/// and a 70ms admission SLO, per-row batches make the predicted queue
+/// delay cross the SLO as soon as a backlog forms — so an open-loop run
+/// at ~2× clean capacity must produce both sheds (503 + Retry-After,
+/// honored by the client) and admitted goodput as the backlog drains
+/// during backoff windows.
+fn overload_section(fast: bool, capacity_rps: f64) -> Json {
+    pgpr::util::fault::arm(pgpr::util::fault::ENGINE_STALL_MS, 30);
+    let mut cmd = base_cmd(fast);
+    cmd.mode = "keepalive".into();
+    cmd.requests = if fast { 120 } else { 600 };
+    cmd.rate = (capacity_rps * 2.0).clamp(50.0, 2000.0);
+    // One row per batch: each queued request adds a full stalled batch
+    // to the drain estimate, so depth — not batch packing — drives the
+    // gate, deterministically.
+    cmd.opts.batch_size = 1;
+    cmd.opts.slo_ms = 70;
+    let record = run_loadtest(&cmd).expect("overload run");
+    pgpr::util::fault::reset();
+    let open = record.req("client_open").expect("open-loop pass in overload record").clone();
+    let count = |k: &str| open.req(k).ok().and_then(|v| v.as_usize()).unwrap_or(0);
+    let num = |k: &str| open.req(k).ok().and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let (ok, shed, deferred) = (count("ok"), count("shed"), count("deferred"));
+    let goodput = num("goodput_rows_per_s");
+    println!(
+        "overload: offered {:.0} rps (capacity {:.0}), ok {ok}, shed {shed}, \
+         deferred {deferred}, goodput {goodput:.1} rows/s, shed p99 {:.1} ms",
+        cmd.rate,
+        capacity_rps,
+        num("shed_p99_s") * 1e3,
+    );
+    assert!(shed > 0, "2× overload over a stalled engine with a 70ms SLO must shed");
+    assert!(ok > 0 && goodput > 0.0, "admitted traffic must still be answered under overload");
+    Json::obj(vec![
+        ("capacity_rps", Json::Num(capacity_rps)),
+        ("offered_rps", Json::Num(cmd.rate)),
+        ("slo_ms", Json::Num(cmd.opts.slo_ms as f64)),
+        ("engine_stall_ms", Json::Num(30.0)),
+        ("client_open", open),
+    ])
+}
+
 fn main() {
     let fast = std::env::var("PGPR_BENCH_FAST").is_ok();
     let cmd = base_cmd(fast);
@@ -98,6 +147,18 @@ fn main() {
                 ("overhead_frac", Json::Num(overhead)),
             ]),
         );
+    }
+
+    // Overload behavior: capacity comes from the clean keep-alive
+    // closed-loop headline of the main record.
+    let capacity_rps = record
+        .req("throughput_rps")
+        .ok()
+        .and_then(|v| v.as_f64())
+        .expect("loadtest record carries throughput_rps");
+    let overload = overload_section(fast, capacity_rps);
+    if let Json::Obj(map) = &mut record {
+        map.insert("overload".into(), overload);
     }
     write_json_record(&cmd.out, &record).expect("write bench record");
     println!("wrote {}", cmd.out);

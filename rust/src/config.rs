@@ -164,6 +164,17 @@ pub struct ServeOptions {
     /// Log a structured `slow_request` event for any request slower than
     /// this many microseconds end-to-end (0 disables the watchdog).
     pub slow_request_us: u64,
+    /// Default per-model admission SLO in milliseconds: when the
+    /// estimated queue delay (depth × rolling per-batch latency) exceeds
+    /// this bound, `/predict` sheds with `503 + Retry-After` instead of
+    /// queueing past the point clients would time out. 0 disables the
+    /// gate; per-model overrides come from `--model name=path,slo=X`.
+    pub slo_ms: u64,
+    /// Deadline assigned to requests that carry no `X-Deadline-Ms`
+    /// header, milliseconds. Expired requests are dropped at
+    /// batch-formation time (shed in microseconds, never computed).
+    /// 0 means requests without the header have no deadline.
+    pub default_deadline_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -181,6 +192,8 @@ impl Default for ServeOptions {
             trace: true,
             trace_ring: 256,
             slow_request_us: 0,
+            slo_ms: 0,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -223,6 +236,8 @@ impl ServeOptions {
             ("trace", Json::Bool(self.trace)),
             ("trace_ring", Json::Num(self.trace_ring as f64)),
             ("slow_request_us", Json::Num(self.slow_request_us as f64)),
+            ("slo_ms", Json::Num(self.slo_ms as f64)),
+            ("default_deadline_ms", Json::Num(self.default_deadline_ms as f64)),
         ])
     }
 
@@ -266,6 +281,12 @@ impl ServeOptions {
                 .get("slow_request_us")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.slow_request_us as usize) as u64,
+            slo_ms: j.get("slo_ms").and_then(|v| v.as_usize()).unwrap_or(d.slo_ms as usize)
+                as u64,
+            default_deadline_ms: j
+                .get("default_deadline_ms")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.default_deadline_ms as usize) as u64,
         })
     }
 }
@@ -302,6 +323,10 @@ pub struct RegistryOptions {
     /// fit-time baseline MNLP`; an upward crossing emits one structured
     /// `drift_detected` event.
     pub drift_threshold: f64,
+    /// Hard cap on rows a model's observation buffer may hold. An
+    /// observe that would exceed it is refused with backpressure
+    /// (HTTP 429) instead of growing resident memory without bound.
+    pub observe_max_rows: usize,
 }
 
 impl Default for RegistryOptions {
@@ -314,6 +339,7 @@ impl Default for RegistryOptions {
             observe_score: ScoreMode::default(),
             quality_window: 1024,
             drift_threshold: 1.0,
+            observe_max_rows: 1 << 20,
         }
     }
 }
@@ -332,6 +358,9 @@ impl RegistryOptions {
         if !self.drift_threshold.is_finite() {
             return Err(PgprError::Config("registry: drift_threshold must be finite".into()));
         }
+        if self.observe_max_rows == 0 {
+            return Err(PgprError::Config("registry: observe_max_rows must be ≥ 1".into()));
+        }
         Ok(())
     }
 
@@ -344,6 +373,7 @@ impl RegistryOptions {
             ("observe_score", Json::Str(self.observe_score.selector())),
             ("quality_window", Json::Num(self.quality_window as f64)),
             ("drift_threshold", Json::Num(self.drift_threshold)),
+            ("observe_max_rows", Json::Num(self.observe_max_rows as f64)),
         ])
     }
 
@@ -369,6 +399,10 @@ impl RegistryOptions {
                 .get("drift_threshold")
                 .and_then(|v| v.as_f64())
                 .unwrap_or(d.drift_threshold),
+            observe_max_rows: j
+                .get("observe_max_rows")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.observe_max_rows),
         })
     }
 }
@@ -603,6 +637,8 @@ mod tests {
             trace: false,
             trace_ring: 32,
             slow_request_us: 250_000,
+            slo_ms: 40,
+            default_deadline_ms: 120,
         };
         assert!(o.validate().is_ok());
         let parsed = Json::parse(&o.to_json().to_string()).unwrap();
@@ -643,6 +679,7 @@ mod tests {
             observe_score: ScoreMode::All,
             quality_window: 256,
             drift_threshold: 0.5,
+            observe_max_rows: 4096,
         };
         assert!(r.validate().is_ok());
         let parsed = Json::parse(&r.to_json().to_string()).unwrap();
@@ -664,6 +701,9 @@ mod tests {
         .validate()
         .is_ok());
         assert!(RegistryOptions { drift_threshold: f64::NAN, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(RegistryOptions { observe_max_rows: 0, ..Default::default() }
             .validate()
             .is_err());
         // A bad score-mode selector is an error, not a silent default.

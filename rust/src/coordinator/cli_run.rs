@@ -13,6 +13,7 @@ use crate::lma::parallel::ParallelLma;
 use crate::lma::{LmaRegressor, PredictMode};
 use crate::obs::{log_event, Level, QualityBaseline, ScoreMode};
 use crate::registry::{artifact, ModelRegistry};
+use crate::server::admission::AdmissionPolicy;
 use crate::server::http::Server;
 use crate::server::loadgen;
 use crate::util::cli::Args;
@@ -251,6 +252,9 @@ pub struct ServeCmd {
     pub quality_window: usize,
     /// Windowed-MNLP-minus-baseline threshold that fires `drift_detected`.
     pub drift_threshold: f64,
+    /// Observation rows buffered per model before `POST …/observe`
+    /// returns 429 backpressure instead of growing without bound.
+    pub observe_max_rows: usize,
 }
 
 impl ServeCmd {
@@ -263,6 +267,7 @@ impl ServeCmd {
             observe_score: ScoreMode::parse(&self.observe_score)?,
             quality_window: self.quality_window,
             drift_threshold: self.drift_threshold,
+            observe_max_rows: self.observe_max_rows.max(1),
         })
     }
 }
@@ -325,6 +330,44 @@ fn parse_model_spec(s: &str) -> Result<(String, String)> {
     }
 }
 
+/// Parse an extended `--model name=path[,slo=MS][,weight=W]` spec: the
+/// per-model admission SLO and QoS weight ride along after the path,
+/// comma-separated. Absent options fall back to the server-wide
+/// `--slo-ms` and weight 1.
+fn parse_model_spec_policy(
+    s: &str,
+    default_slo_ms: u64,
+) -> Result<(String, String, AdmissionPolicy)> {
+    let mut parts = s.split(',');
+    let (name, path) = parse_model_spec(parts.next().unwrap_or(""))?;
+    let mut slo_ms = default_slo_ms;
+    let mut weight = 1u64;
+    for opt in parts {
+        let opt = opt.trim();
+        if opt.is_empty() {
+            continue;
+        }
+        match opt.split_once('=') {
+            Some((k, v)) if k.trim() == "slo" => {
+                slo_ms = v.trim().parse().map_err(|_| {
+                    PgprError::Config(format!("bad slo `{v}` in model spec `{s}`"))
+                })?;
+            }
+            Some((k, v)) if k.trim() == "weight" => {
+                weight = v.trim().parse().map_err(|_| {
+                    PgprError::Config(format!("bad weight `{v}` in model spec `{s}`"))
+                })?;
+            }
+            _ => {
+                return Err(PgprError::Config(format!(
+                    "unknown model-spec option `{opt}` in `{s}` (expected slo=MS or weight=W)"
+                )))
+            }
+        }
+    }
+    Ok((name, path, AdmissionPolicy::from_millis(slo_ms, weight)))
+}
+
 /// Load `name=path` artifact specs into a fresh registry (the shared
 /// boot path of `pgpr serve --model` and self-contained
 /// `pgpr loadtest --artifact`). The first spec becomes the default
@@ -337,17 +380,19 @@ fn registry_from_artifacts(
     reg_opts: RegistryOptions,
     context: &str,
 ) -> Result<Arc<ModelRegistry>> {
-    let specs: Vec<(String, String)> =
-        specs.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
+    let specs: Vec<(String, String, AdmissionPolicy)> = specs
+        .iter()
+        .map(|s| parse_model_spec_policy(s, opts.slo_ms))
+        .collect::<Result<_>>()?;
     let reg_opts = RegistryOptions {
         max_models: reg_opts.max_models.max(specs.len()).max(1),
         ..reg_opts
     };
     let registry = Arc::new(ModelRegistry::new(reg_opts, opts));
-    for (name, path) in &specs {
+    for (name, path, policy) in &specs {
         let engine = artifact::load_engine(path)?;
         registry
-            .load_from_path(name, Arc::new(engine), path)
+            .load_with_policy(name, Arc::new(engine), path, *policy)
             .map_err(|e| PgprError::Config(e.to_string()))?;
         log_event(
             Level::Info,
@@ -356,6 +401,11 @@ fn registry_from_artifacts(
                 ("model", Json::Str(name.clone())),
                 ("path", Json::Str(path.clone())),
                 ("context", Json::Str(context.to_string())),
+                (
+                    "slo_ms",
+                    Json::Num(policy.slo.map(|d| d.as_millis() as f64).unwrap_or(0.0)),
+                ),
+                ("weight", Json::Num(policy.weight as f64)),
             ],
         );
     }
@@ -434,15 +484,20 @@ pub fn cmd_fit(c: &FitCmd) -> Result<()> {
 pub fn cmd_serve(c: &ServeCmd) -> Result<()> {
     if !c.models.is_empty() {
         if c.opts.listen.is_empty() {
-            let specs: Vec<(String, String)> =
-                c.models.iter().map(|s| parse_model_spec(s)).collect::<Result<_>>()?;
+            // Admission policies are parsed (and validated) but inert in
+            // stdin mode: there is no queue to gate.
+            let specs: Vec<(String, String, AdmissionPolicy)> = c
+                .models
+                .iter()
+                .map(|s| parse_model_spec_policy(s, c.opts.slo_ms))
+                .collect::<Result<_>>()?;
             if specs.len() > 1 {
                 return Err(PgprError::Config(
                     "stdin mode serves a single model; use --listen for the multi-model registry"
                         .into(),
                 ));
             }
-            let (name, path) = &specs[0];
+            let (name, path, _policy) = &specs[0];
             let engine = artifact::load_engine(path)?;
             log_event(
                 Level::Info,
@@ -827,6 +882,10 @@ pub fn run_loadtest(c: &LoadtestCmd) -> Result<Json> {
     }
     if let Some(r) = &open_report {
         fields.push(("rate_rps", Json::Num(c.rate)));
+        // Overload headline numbers: how much the admission gate shed
+        // and what actually got through (successful rows per second).
+        fields.push(("open_shed_rate", Json::Num(r.shed_rate())));
+        fields.push(("open_goodput_rows_per_s", Json::Num(r.goodput_rows_per_s)));
         fields.push(("client_open", r.to_json()));
     }
     if let Some(server) = server {
@@ -1101,6 +1160,25 @@ pub fn dispatch() -> Result<()> {
                      In stdin mode expiry is only checked when the next input line arrives",
                 )
                 .flag("queue", "1024", "bounded request queue capacity (full ⇒ 503)")
+                .flag(
+                    "slo-ms",
+                    "0",
+                    "admission SLO in ms: shed with 503 + Retry-After when the predicted \
+                     queue delay exceeds it (0 = off; per-model override via \
+                     --model name=path,slo=MS,weight=W)",
+                )
+                .flag(
+                    "default-deadline-ms",
+                    "0",
+                    "end-to-end deadline applied to requests without an X-Deadline-Ms \
+                     header; expired requests are shed before reaching the engine (0 = none)",
+                )
+                .flag(
+                    "observe-max-rows",
+                    "1048576",
+                    "observation rows buffered per model before POST …/observe returns \
+                     429 backpressure instead of growing without bound",
+                )
                 .switch("no-keepalive", "one request per connection (legacy Connection: close)")
                 .flag("idle-timeout-ms", "5000", "keep-alive idle timeout")
                 .flag("max-conn-requests", "1000", "requests served per connection before close")
@@ -1161,6 +1239,8 @@ pub fn dispatch() -> Result<()> {
                 trace: !a.get_bool("no-trace"),
                 trace_ring: a.get_usize("trace-ring"),
                 slow_request_us: a.get_usize("slow-request-us") as u64,
+                slo_ms: a.get_usize("slo-ms") as u64,
+                default_deadline_ms: a.get_usize("default-deadline-ms") as u64,
             };
             cmd_serve(&ServeCmd {
                 dataset: a.get("dataset"),
@@ -1175,6 +1255,7 @@ pub fn dispatch() -> Result<()> {
                 observe_score: a.get("observe-score"),
                 quality_window: a.get_usize("quality-window"),
                 drift_threshold: a.get_f64("drift-threshold"),
+                observe_max_rows: a.get_usize("observe-max-rows"),
             })
         }
         "observe" => {
@@ -1231,6 +1312,11 @@ pub fn dispatch() -> Result<()> {
                 .flag("workers", "4", "self-mode HTTP worker threads")
                 .flag("max-delay-us", "2000", "self-mode flush deadline (µs)")
                 .flag("queue", "1024", "self-mode queue capacity")
+                .flag(
+                    "slo-ms",
+                    "0",
+                    "self-mode admission SLO in ms (shed with 503 + Retry-After; 0 = off)",
+                )
                 .flag("concurrency", "8", "closed-loop client threads")
                 .flag("requests", "200", "total requests to send")
                 .flag("rows", "1", "rows per request")
@@ -1250,6 +1336,7 @@ pub fn dispatch() -> Result<()> {
                     max_delay_us: a.get_usize("max-delay-us") as u64,
                     queue_capacity: a.get_usize("queue"),
                     trace: !a.get_bool("no-trace"),
+                    slo_ms: a.get_usize("slo-ms") as u64,
                     ..ServeOptions::default()
                 },
                 concurrency: a.get_usize("concurrency"),
@@ -1272,7 +1359,8 @@ pub fn dispatch() -> Result<()> {
                  pgpr eval --artifact name=model.pgpr --test-csv test.csv (warm-start: score a snapshot, no refit)\n  \
                  pgpr fit --dataset aimpeak --train 1000 --save model.pgpr [--blocks 0 --order 1 --support 0] [--profile]\n  \
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
-                 \u{20}          [--model name=model.pgpr ...] [--listen 127.0.0.1:8080 --workers 4 --max-delay-us 2000 --queue 1024]\n  \
+                 \u{20}          [--model name=model.pgpr[,slo=MS][,weight=W] ...] [--listen 127.0.0.1:8080 --workers 4 --queue 1024]\n  \
+                 \u{20}          [--slo-ms 0 --default-deadline-ms 0 --observe-max-rows 1048576] (overload admission control)\n  \
                  pgpr observe --addr HOST:PORT --csv data.csv [--model default --batch-rows 64 --buffer --limit 0]\n  \
                  pgpr loadtest [--addr HOST:PORT | --dataset aimpeak --train 600 --backend threads:0]\n  \
                  \u{20}          [--model NAME ...] [--artifact name=model.pgpr ...] [--mode both|keepalive|close]\n  \
@@ -1318,6 +1406,25 @@ mod tests {
         assert!(parse_model_spec("noequals").is_err());
         assert!(parse_model_spec("=path").is_err());
         assert!(parse_model_spec("name=").is_err());
+    }
+
+    #[test]
+    fn model_spec_policy_parsing() {
+        use std::time::Duration;
+        // Bare spec inherits the server-wide SLO and weight 1.
+        let (name, path, p) = parse_model_spec_policy("a=/tmp/a.pgpr", 25).unwrap();
+        assert_eq!((name.as_str(), path.as_str()), ("a", "/tmp/a.pgpr"));
+        assert_eq!(p.slo, Some(Duration::from_millis(25)));
+        assert_eq!(p.weight, 1);
+        // Per-model options override; slo=0 disables the inherited SLO.
+        let (_, _, p) = parse_model_spec_policy("a=/tmp/a.pgpr, slo=40 ,weight=3", 25).unwrap();
+        assert_eq!(p.slo, Some(Duration::from_millis(40)));
+        assert_eq!(p.weight, 3);
+        let (_, _, p) = parse_model_spec_policy("a=/tmp/a.pgpr,slo=0", 25).unwrap();
+        assert_eq!(p.slo, None);
+        // Unknown or malformed options are rejected, not ignored.
+        assert!(parse_model_spec_policy("a=/tmp/a.pgpr,turbo=1", 0).is_err());
+        assert!(parse_model_spec_policy("a=/tmp/a.pgpr,slo=soon", 0).is_err());
     }
 
     #[test]

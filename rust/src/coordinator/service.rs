@@ -311,6 +311,13 @@ impl PredictionService {
         self.max_delay
     }
 
+    /// The flush threshold (rows per micro-batch). The batcher supervisor
+    /// reads this to rebuild an identically-configured service after a
+    /// panic.
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
     /// Builder-style predict mode (`--f32-u` passes
     /// [`PredictMode::F32U`]).
     pub fn with_predict_mode(mut self, mode: PredictMode) -> PredictionService {
@@ -414,8 +421,13 @@ impl PredictionService {
         // `engine_other` so a request's stage sum tracks its latency.
         let mut stages = StageSet::new();
         let (pred, secs) = if self.trace {
-            let (res, secs) =
-                time_it(|| engine.predict_traced(&x, self.mode, &mut self.scratch));
+            let (res, secs) = time_it(|| {
+                // Chaos hook: an armed `engine_stall_ms` slows every
+                // predict, counted inside `predict_us` so the admission
+                // gate's queue-delay estimate sees the degradation.
+                crate::util::fault::stall(crate::util::fault::ENGINE_STALL_MS);
+                engine.predict_traced(&x, self.mode, &mut self.scratch)
+            });
             let (pred, prof) = res?;
             stages = StageSet::from_profiler(&prof);
             let gap = secs - stages.sum();
@@ -425,8 +437,10 @@ impl PredictionService {
             self.metrics.stages.record_set(&stages);
             (pred, secs)
         } else {
-            let (res, secs) =
-                time_it(|| engine.predict_with_mode(&x, self.mode, &mut self.scratch));
+            let (res, secs) = time_it(|| {
+                crate::util::fault::stall(crate::util::fault::ENGINE_STALL_MS);
+                engine.predict_with_mode(&x, self.mode, &mut self.scratch)
+            });
             (res?, secs)
         };
         self.predict_secs += secs;

@@ -807,8 +807,16 @@ pub fn save_engine(engine: &ServeEngine, path: &str) -> Result<()> {
 
 /// Load a fitted engine from `path`.
 pub fn load_engine(path: &str) -> Result<ServeEngine> {
-    let bytes =
+    let mut bytes =
         std::fs::read(path).map_err(|e| PgprError::Io(format!("read {path}: {e}")))?;
+    // Fault injection: a flipped payload bit must be caught by the
+    // checksum and surface as a load error, never as silent bad numbers.
+    if crate::util::fault::fire(crate::util::fault::ARTIFACT_CORRUPT).is_some() {
+        let mid = bytes.len() / 2;
+        if let Some(b) = bytes.get_mut(mid) {
+            *b ^= 1;
+        }
+    }
     engine_from_bytes(&bytes)
         .map_err(|e| PgprError::Artifact(format!("{path}: {e}")))
 }
@@ -1011,6 +1019,28 @@ mod tests {
             loaded.predict(&q).unwrap().mean[0].to_bits()
         );
         assert!(matches!(load_engine("/nonexistent/nope.pgpr"), Err(PgprError::Io(_))));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn artifact_corrupt_fault_is_caught_by_the_checksum() {
+        use crate::util::fault;
+        let engine = fitted_engine(46, 24, 2);
+        let dir = std::env::temp_dir().join("pgpr_artifact_fault_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.pgpr");
+        let path = path.to_str().unwrap();
+        save_engine(&engine, path).unwrap();
+        let _g = fault::serial_guard();
+        fault::reset();
+        fault::arm(fault::ARTIFACT_CORRUPT, 1);
+        match load_engine(path) {
+            Err(PgprError::Artifact(m)) => assert!(m.contains("checksum"), "got: {m}"),
+            other => panic!("corrupted load must fail with an artifact error, got {other:?}"),
+        }
+        // The shot is consumed: the very next load succeeds untouched.
+        assert!(load_engine(path).is_ok());
+        fault::reset();
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -32,8 +32,10 @@ use crate::obs::quality::{block_of_row, ModelQuality, ScoredRow};
 use crate::obs::{log_event, Level, Stage};
 use crate::online::{absorb, BlockPolicy, ObservationBuffer};
 use crate::registry::artifact::{self, SnapshotCache};
+use crate::server::admission::AdmissionPolicy;
 use crate::server::batcher::{self, BatcherHandle};
 use crate::server::metrics::ServeMetrics;
+use crate::util::fault;
 use crate::util::json::Json;
 
 /// Why a registry operation failed — mapped to HTTP statuses by the
@@ -54,6 +56,9 @@ pub enum RegistryError {
     InvalidName(String),
     /// Malformed observation payload (client input) → 400.
     BadInput(String),
+    /// The model's observation buffer is full — client must back off and
+    /// retry after the buffered rows flush → 429.
+    Backpressure(String),
     /// Batcher spawn / service construction / update failure → 500.
     Internal(String),
 }
@@ -74,15 +79,11 @@ impl std::fmt::Display for RegistryError {
                 write!(f, "model name `{n}` must be non-empty [A-Za-z0-9._-]")
             }
             RegistryError::BadInput(m) => write!(f, "bad observation: {m}"),
+            RegistryError::Backpressure(m) => write!(f, "observation backpressure: {m}"),
             RegistryError::Internal(m) => write!(f, "registry internal error: {m}"),
         }
     }
 }
-
-/// Hard cap on rows a model's observation buffer may hold (≈ tens of MB
-/// at realistic dims) — `"buffer": true` loops cannot grow memory
-/// without bound; clients must flush.
-const MAX_BUFFERED_ROWS: usize = 1 << 20;
 
 /// Per-model ingestion state, shared across a model's generations (the
 /// entry is swapped on every published update; the buffer and snapshot
@@ -193,6 +194,9 @@ pub struct ModelEntry {
     /// against the generation answering it, so `/metrics` can show a
     /// just-swapped generation draining to zero.
     inflight: Arc<AtomicU64>,
+    /// Admission SLO + QoS weight the `/predict` gate evaluates against
+    /// (preserved across generation swaps).
+    admission: AdmissionPolicy,
 }
 
 impl ModelEntry {
@@ -243,6 +247,11 @@ impl ModelEntry {
     /// Predict requests currently executing against this generation.
     pub fn inflight(&self) -> u64 {
         self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// The admission SLO/QoS policy this model is gated by.
+    pub fn admission(&self) -> &AdmissionPolicy {
+        &self.admission
     }
 }
 
@@ -348,6 +357,9 @@ pub struct ModelRegistry {
     next_seq: AtomicU64,
     opts: RegistryOptions,
     batch: BatchParams,
+    /// Admission policy models are loaded with unless a load names its
+    /// own (`ServeOptions::slo_ms`, unit QoS weight).
+    default_admission: AdmissionPolicy,
 }
 
 impl ModelRegistry {
@@ -369,6 +381,7 @@ impl ModelRegistry {
                 trace: serve.trace,
                 trace_ring: serve.trace_ring,
             },
+            default_admission: AdmissionPolicy::from_millis(serve.slo_ms, 1),
         }
     }
 
@@ -402,7 +415,7 @@ impl ModelRegistry {
     /// Load a fitted engine under `name`, spawning its dedicated batcher.
     /// The first load becomes the default model.
     pub fn load(&self, name: &str, engine: Arc<ServeEngine>) -> Result<(), RegistryError> {
-        self.load_inner(name, engine, None)
+        self.load_inner(name, engine, None, None)
     }
 
     /// [`load`](Self::load) recording the artifact path the engine came
@@ -414,7 +427,19 @@ impl ModelRegistry {
         engine: Arc<ServeEngine>,
         path: &str,
     ) -> Result<(), RegistryError> {
-        self.load_inner(name, engine, Some(path.to_string()))
+        self.load_inner(name, engine, Some(path.to_string()), None)
+    }
+
+    /// [`load_from_path`](Self::load_from_path) with a per-model
+    /// admission policy (`--model name=path,slo=X,weight=Y`).
+    pub fn load_with_policy(
+        &self,
+        name: &str,
+        engine: Arc<ServeEngine>,
+        path: &str,
+        policy: AdmissionPolicy,
+    ) -> Result<(), RegistryError> {
+        self.load_inner(name, engine, Some(path.to_string()), Some(policy))
     }
 
     fn load_inner(
@@ -422,6 +447,7 @@ impl ModelRegistry {
         name: &str,
         engine: Arc<ServeEngine>,
         snapshot_path: Option<String>,
+        policy: Option<AdmissionPolicy>,
     ) -> Result<(), RegistryError> {
         if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || "-_.".contains(c))
         {
@@ -463,7 +489,7 @@ impl ModelRegistry {
         }
         // Spawn the batcher only after the capacity/duplicate checks
         // passed, so a rejected load leaves no orphan thread behind.
-        let (handle, join) = batcher::spawn(svc, self.batch.queue_capacity)
+        let (handle, join) = batcher::spawn_named(svc, self.batch.queue_capacity, name)
             .map_err(|e| RegistryError::Internal(e.to_string()))?;
         self.track_join(join);
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
@@ -491,6 +517,7 @@ impl ModelRegistry {
             last_used: AtomicU64::new(self.tick()),
             seq,
             inflight: Arc::new(AtomicU64::new(0)),
+            admission: policy.unwrap_or(self.default_admission),
         });
         map.insert(name.to_string(), entry);
         drop(map);
@@ -537,7 +564,7 @@ impl ModelRegistry {
         // creation must not stall every concurrent lookup. If the swap
         // check then fails, dropping the handle makes the thread exit and
         // its (tracked) join is reaped on a later churn.
-        let (handle, join) = batcher::spawn(svc, self.batch.queue_capacity)
+        let (handle, join) = batcher::spawn_named(svc, self.batch.queue_capacity, name)
             .map_err(|e| RegistryError::Internal(e.to_string()))?;
 
         let mut map = self.models.write().expect("registry lock");
@@ -567,6 +594,7 @@ impl ModelRegistry {
             seq: expected.seq,
             // Fresh counter: in-flight counts are per generation.
             inflight: Arc::new(AtomicU64::new(0)),
+            admission: expected.admission,
         });
         map.insert(name.to_string(), Arc::clone(&entry));
         drop(map);
@@ -626,10 +654,12 @@ impl ModelRegistry {
 
         // Bound the per-model buffer: every other server-side queue is
         // bounded, and a client looping `"buffer": true` must not be able
-        // to grow resident memory without limit.
-        if g.buffer.rows() + rows.len() > MAX_BUFFERED_ROWS {
-            return Err(RegistryError::BadInput(format!(
-                "observation buffer would exceed {MAX_BUFFERED_ROWS} rows ({} buffered); flush first",
+        // to grow resident memory without limit. Overflow is backpressure
+        // (429), not bad input — the rows are fine, the server is behind.
+        let cap = self.opts.observe_max_rows;
+        if g.buffer.rows() + rows.len() > cap {
+            return Err(RegistryError::Backpressure(format!(
+                "observation buffer would exceed {cap} rows ({} buffered); flush or retry later",
                 g.buffer.rows()
             )));
         }
@@ -659,6 +689,7 @@ impl ModelRegistry {
         }
 
         let t_drain = Instant::now();
+        fault::stall(fault::QUEUE_STICK);
         let (batch_x, batch_y) = g.buffer.drain();
         let plan = g.policy.plan(core.part.size(core.m() - 1), batch_x.rows());
         let drain_secs = t_drain.elapsed().as_secs_f64();
@@ -929,6 +960,14 @@ impl ModelRegistry {
         let mut out: Vec<Arc<ModelEntry>> = map.values().cloned().collect();
         out.sort_by_key(|e| e.seq);
         out
+    }
+
+    /// Summed QoS weight and count of resident models — the shared-pool
+    /// denominators the admission gate's fairness cap divides by.
+    pub fn admission_load(&self) -> (u64, usize) {
+        let map = self.models.read().expect("registry lock");
+        let total: u64 = map.values().map(|e| e.admission.weight).sum();
+        (total.max(1), map.len())
     }
 
     /// Snapshot of (name, metrics) pairs for the per-model `/metrics`

@@ -1,0 +1,306 @@
+//! Deadline-aware admission control for the serving front end.
+//!
+//! Every `/predict` request passes a per-model gate *before* it is
+//! enqueued. The gate estimates how long the request would wait
+//! (queue depth × the rolling per-batch engine latency already tracked
+//! by [`ServeMetrics`]) and sheds with `503 + Retry-After` when:
+//!
+//! * the estimate exceeds the model's SLO (`--slo-ms`, per-model
+//!   override via `--model name=path,slo=X`), or
+//! * the request's deadline (`X-Deadline-Ms` header or
+//!   `--default-deadline-ms`) would already be blown by the predicted
+//!   wait, or
+//! * the model is over its QoS share of the worker pool
+//!   (`weight` in the model spec) while other models are resident —
+//!   one hot model cannot starve the rest.
+//!
+//! Shedding is a few atomic loads and one histogram read — microseconds,
+//! never a predict — so a saturated server degrades to fast 503s with an
+//! honest `Retry-After` instead of collapsing into timeout queues.
+
+use std::time::Duration;
+
+use crate::server::metrics::ServeMetrics;
+
+/// Why a request was shed. The discriminant indexes the per-model shed
+/// counter array in [`ServeMetrics`] and the `reason` label on
+/// `pgpr_requests_shed_total` — append, never reorder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(usize)]
+pub enum ShedReason {
+    /// The batcher's bounded submit queue was full.
+    QueueFull = 0,
+    /// The request's deadline had expired (or could not be met).
+    Deadline = 1,
+    /// The predicted queue delay exceeded the model's SLO, or the model
+    /// is over its QoS share of the worker pool.
+    Slo = 2,
+    /// The server (or the model's batcher) is shutting down.
+    Shutdown = 3,
+}
+
+/// Number of shed reasons (the length of the per-model counter array).
+pub const SHED_REASONS: usize = 4;
+
+/// Every reason, in counter-index order.
+pub const ALL_SHED_REASONS: [ShedReason; SHED_REASONS] =
+    [ShedReason::QueueFull, ShedReason::Deadline, ShedReason::Slo, ShedReason::Shutdown];
+
+impl ShedReason {
+    /// The metric label value (`reason="..."`).
+    pub fn label(self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::Deadline => "deadline",
+            ShedReason::Slo => "slo",
+            ShedReason::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// Per-model admission policy, resolved at model-load time from the
+/// serve options and the `--model name=path,slo=X,weight=Y` spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdmissionPolicy {
+    /// Shed when the predicted queue delay exceeds this (`None` = no SLO).
+    pub slo: Option<Duration>,
+    /// QoS weight: the model's fair share of the worker pool is
+    /// `weight / Σ weights`. Minimum 1.
+    pub weight: u64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { slo: None, weight: 1 }
+    }
+}
+
+impl AdmissionPolicy {
+    /// Policy from flag-level knobs: `slo_ms` 0 means "no SLO".
+    pub fn from_millis(slo_ms: u64, weight: u64) -> AdmissionPolicy {
+        AdmissionPolicy {
+            slo: (slo_ms > 0).then(|| Duration::from_millis(slo_ms)),
+            weight: weight.max(1),
+        }
+    }
+}
+
+/// The gate's verdict for one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Enqueue the request.
+    Admit,
+    /// Refuse with `503 + Retry-After: retry_after_s`.
+    Shed { reason: ShedReason, retry_after_s: u64 },
+}
+
+/// A live snapshot of one model's queue, fed to [`evaluate`]. All
+/// fields are cheap reads of state the serving layer already maintains.
+#[derive(Clone, Copy, Debug)]
+pub struct QueueState {
+    /// Requests currently queued at the model's batcher.
+    pub depth: u64,
+    /// The batcher's flush size (requests per engine batch, roughly).
+    pub batch_size: usize,
+    /// Rolling per-batch engine predict latency (seconds); 0 when cold.
+    pub batch_latency_s: f64,
+    /// Requests currently in flight for this model (admitted, unanswered).
+    pub inflight: u64,
+    /// HTTP worker pool size (the capacity QoS weights divide up).
+    pub workers: usize,
+    /// Sum of QoS weights across resident models.
+    pub total_weight: u64,
+    /// Number of resident models (QoS caps only bind when > 1).
+    pub models: usize,
+}
+
+/// Predicted time for the queue to drain past a newly enqueued request:
+/// the number of batches ahead of it times the rolling per-batch engine
+/// latency. Cold metrics (no batches yet) predict zero — the gate never
+/// sheds before it has evidence.
+pub fn estimate_queue_delay(q: &QueueState) -> Duration {
+    if q.batch_latency_s <= 0.0 {
+        return Duration::ZERO;
+    }
+    let batch = q.batch_size.max(1) as u64;
+    let batches_ahead = q.depth / batch + 1;
+    Duration::from_secs_f64(batches_ahead as f64 * q.batch_latency_s)
+}
+
+/// `Retry-After` seconds for a predicted drain time: at least 1 (the
+/// header has whole-second granularity), at most 30 (the estimate decays
+/// fast once shedding starts, so don't hold clients off for minutes).
+pub fn retry_after_secs(drain: Duration) -> u64 {
+    (drain.as_secs_f64().ceil() as u64).clamp(1, 30)
+}
+
+/// Evaluate the gate for one request. `deadline_remaining` is how much
+/// of the request's deadline budget is left at admission time (`None` =
+/// no deadline).
+pub fn evaluate(
+    policy: &AdmissionPolicy,
+    q: &QueueState,
+    deadline_remaining: Option<Duration>,
+) -> Decision {
+    let est = estimate_queue_delay(q);
+
+    // A dead-on-arrival (or predicted-dead) request is shed before it
+    // costs anything.
+    if let Some(remaining) = deadline_remaining {
+        if remaining.is_zero() || est > remaining {
+            return Decision::Shed {
+                reason: ShedReason::Deadline,
+                retry_after_s: retry_after_secs(est),
+            };
+        }
+    }
+
+    // SLO shed: predicted wait exceeds the model's latency objective.
+    if let Some(slo) = policy.slo {
+        if est > slo {
+            return Decision::Shed {
+                reason: ShedReason::Slo,
+                retry_after_s: retry_after_secs(est),
+            };
+        }
+    }
+
+    // QoS shed: the model is over its weight share of the pool while
+    // other models are resident and it already has a backlog.
+    if q.models > 1 && q.depth > 0 {
+        let workers = q.workers.max(1) as u64;
+        let cap = (workers * policy.weight.max(1)).div_ceil(q.total_weight.max(1)).max(1) + 1;
+        if q.inflight >= cap {
+            return Decision::Shed {
+                reason: ShedReason::Slo,
+                retry_after_s: retry_after_secs(est),
+            };
+        }
+    }
+
+    Decision::Admit
+}
+
+/// Build a [`QueueState`] from the serving layer's live counters.
+pub fn queue_state(
+    depth: u64,
+    batch_size: usize,
+    metrics: &ServeMetrics,
+    inflight: u64,
+    workers: usize,
+    total_weight: u64,
+    models: usize,
+) -> QueueState {
+    QueueState {
+        depth,
+        batch_size,
+        batch_latency_s: metrics.predict_us.mean() * 1e-6,
+        inflight,
+        workers,
+        total_weight,
+        models,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(depth: u64, batch_latency_s: f64) -> QueueState {
+        QueueState {
+            depth,
+            batch_size: 4,
+            batch_latency_s,
+            inflight: 0,
+            workers: 4,
+            total_weight: 1,
+            models: 1,
+        }
+    }
+
+    #[test]
+    fn cold_metrics_never_shed() {
+        let policy = AdmissionPolicy::from_millis(1, 1);
+        let state = q(1_000_000, 0.0);
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
+    }
+
+    #[test]
+    fn slo_sheds_when_predicted_wait_exceeds_it() {
+        let policy = AdmissionPolicy::from_millis(10, 1);
+        // 8 queued / batch 4 → 3 batches ahead × 20ms = 60ms > 10ms SLO.
+        let state = q(8, 0.020);
+        match evaluate(&policy, &state, None) {
+            Decision::Shed { reason, retry_after_s } => {
+                assert_eq!(reason, ShedReason::Slo);
+                assert_eq!(retry_after_s, 1, "sub-second drain rounds up to 1s");
+            }
+            d => panic!("expected shed, got {d:?}"),
+        }
+        // Under the SLO: one queued request, 1ms batches → admit.
+        assert_eq!(evaluate(&policy, &q(1, 0.001), None), Decision::Admit);
+    }
+
+    #[test]
+    fn no_slo_admits_any_backlog() {
+        let policy = AdmissionPolicy::default();
+        assert_eq!(evaluate(&policy, &q(1_000_000, 0.050), None), Decision::Admit);
+    }
+
+    #[test]
+    fn expired_or_unmeetable_deadline_sheds_as_deadline() {
+        let policy = AdmissionPolicy::default();
+        let state = q(8, 0.020);
+        let d = evaluate(&policy, &state, Some(Duration::ZERO));
+        assert!(matches!(d, Decision::Shed { reason: ShedReason::Deadline, .. }));
+        // 60ms predicted wait vs a 30ms budget: predicted-dead.
+        let d = evaluate(&policy, &state, Some(Duration::from_millis(30)));
+        assert!(matches!(d, Decision::Shed { reason: ShedReason::Deadline, .. }));
+        // Plenty of budget: admitted.
+        let d = evaluate(&policy, &state, Some(Duration::from_secs(5)));
+        assert_eq!(d, Decision::Admit);
+    }
+
+    #[test]
+    fn qos_cap_binds_only_with_multiple_models_and_backlog() {
+        let policy = AdmissionPolicy { slo: None, weight: 1 };
+        // 2 models, equal weight, 4 workers → cap = ceil(4/2)+1 = 3.
+        let mut state = q(2, 0.001);
+        state.models = 2;
+        state.total_weight = 2;
+        state.inflight = 3;
+        assert!(matches!(
+            evaluate(&policy, &state, None),
+            Decision::Shed { reason: ShedReason::Slo, .. }
+        ));
+        // Same pressure but no backlog → admit (pool isn't contended).
+        state.depth = 0;
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
+        // Single resident model: never QoS-shed.
+        state.depth = 2;
+        state.models = 1;
+        state.total_weight = 1;
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
+        // A heavier weight raises the cap past the current inflight.
+        let heavy = AdmissionPolicy { slo: None, weight: 3 };
+        state.models = 2;
+        state.total_weight = 4;
+        assert_eq!(evaluate(&heavy, &state, None), Decision::Admit);
+    }
+
+    #[test]
+    fn retry_after_is_clamped_and_tracks_drain() {
+        assert_eq!(retry_after_secs(Duration::ZERO), 1);
+        assert_eq!(retry_after_secs(Duration::from_millis(300)), 1);
+        assert_eq!(retry_after_secs(Duration::from_secs_f64(2.2)), 3);
+        assert_eq!(retry_after_secs(Duration::from_secs(900)), 30);
+    }
+
+    #[test]
+    fn estimate_scales_with_depth_and_batch() {
+        let d = estimate_queue_delay(&q(0, 0.010));
+        assert!((d.as_secs_f64() - 0.010).abs() < 1e-9, "empty queue still pays one batch");
+        let d = estimate_queue_delay(&q(12, 0.010));
+        assert!((d.as_secs_f64() - 0.040).abs() < 1e-9, "12 deep / batch 4 → 4 batches");
+    }
+}

@@ -19,18 +19,35 @@
 //! when its last row is answered. Each submitted request is answered
 //! exactly once (a reply or an error), including at shutdown: when all
 //! handles drop, the thread drains the queue, flushes and exits.
+//!
+//! The loop runs under a **supervisor**: a panic anywhere inside it
+//! (engine bug, injected `batcher_panic` fault) is caught with
+//! `catch_unwind`, every in-flight waiter is failed with a 503-mapped
+//! error (the exactly-once invariant holds — one reply each, just an
+//! unhappy one), the service is rebuilt around the shared engine, and
+//! the loop respawns after a bounded exponential backoff. `/readyz`
+//! reads the `running` flag, which is false only during the backoff
+//! window, so external health checks see the outage and the recovery.
+//!
+//! Requests carry an optional **deadline** (`X-Deadline-Ms` /
+//! `--default-deadline-ms`): one that has already expired when the
+//! batcher dequeues it is failed in microseconds at batch-formation
+//! time — its rows never reach the engine.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::service::{PredictionService, Request, Response};
-use crate::obs::{Stage, StageSet};
+use crate::obs::{log_event, Level, Stage, StageSet};
 use crate::server::metrics::ServeMetrics;
 use crate::util::error::{PgprError, Result};
+use crate::util::fault;
+use crate::util::json::Json;
 
 /// One answered multi-row request.
 #[derive(Clone, Debug)]
@@ -53,6 +70,11 @@ pub enum SubmitError {
     Overloaded,
     /// The batcher has shut down → 503.
     Closed,
+    /// The request's deadline expired before it reached the engine → 503
+    /// (shed at batch formation, never computed).
+    DeadlineExceeded,
+    /// The batcher aborted the request (panic-triggered restart) → 503.
+    Unavailable(String),
     /// The engine's predict call failed → 500.
     Engine(String),
 }
@@ -63,17 +85,35 @@ impl std::fmt::Display for SubmitError {
             SubmitError::BadRequest(m) => write!(f, "bad request: {m}"),
             SubmitError::Overloaded => write!(f, "request queue is full"),
             SubmitError::Closed => write!(f, "service is shut down"),
+            SubmitError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            SubmitError::Unavailable(m) => write!(f, "service temporarily unavailable: {m}"),
             SubmitError::Engine(m) => write!(f, "prediction failed: {m}"),
         }
     }
 }
 
-type ReplyResult = std::result::Result<BatchReply, String>;
+/// The batcher's verdict routed back through a waiter's reply channel.
+#[derive(Clone, Debug)]
+enum ReplyError {
+    /// The deadline expired before the rows reached the engine.
+    Expired,
+    /// The batcher restarted underneath the request.
+    Aborted(String),
+    /// The batcher drained and exited (all handles dropped).
+    Shutdown,
+    /// The engine's predict call failed.
+    Failed(String),
+}
+
+type ReplyResult = std::result::Result<BatchReply, ReplyError>;
 
 struct Incoming {
     rows: Vec<Vec<f64>>,
     reply: Sender<ReplyResult>,
     enqueued: Instant,
+    /// Drop-dead instant propagated from the HTTP layer (`X-Deadline-Ms`
+    /// / `--default-deadline-ms`); `None` = wait as long as it takes.
+    deadline: Option<Instant>,
 }
 
 /// Cheap clonable submitter held by every connection worker.
@@ -101,9 +141,27 @@ impl BatcherHandle {
         self.running.load(Ordering::Relaxed)
     }
 
+    /// Requests currently sitting in the bounded queue (the admission
+    /// gate's queue-delay estimate reads this).
+    pub fn depth(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
     /// Submit one or more rows and block until the micro-batcher answers
     /// (bounded by `max_delay` plus one predict call).
     pub fn submit(&self, rows: Vec<Vec<f64>>) -> std::result::Result<BatchReply, SubmitError> {
+        self.submit_with_deadline(rows, None)
+    }
+
+    /// [`submit`](Self::submit) with a drop-dead instant: if it passes
+    /// before the rows reach the engine, the batcher sheds them at batch
+    /// formation ([`SubmitError::DeadlineExceeded`]) instead of
+    /// computing a prediction nobody is waiting for.
+    pub fn submit_with_deadline(
+        &self,
+        rows: Vec<Vec<f64>>,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<BatchReply, SubmitError> {
         if rows.is_empty() {
             return Err(SubmitError::BadRequest("no input rows".into()));
         }
@@ -120,7 +178,7 @@ impl BatcherHandle {
             }
         }
         let (rtx, rrx) = std::sync::mpsc::channel();
-        let inc = Incoming { rows, reply: rtx, enqueued: Instant::now() };
+        let inc = Incoming { rows, reply: rtx, enqueued: Instant::now(), deadline };
         // Increment BEFORE try_send (and undo on failure): once the send
         // succeeds the batcher may dequeue-and-decrement at any moment,
         // and a decrement racing ahead of our increment would wrap the
@@ -139,8 +197,13 @@ impl BatcherHandle {
         }
         match rrx.recv() {
             Ok(Ok(rep)) => Ok(rep),
-            Ok(Err(msg)) => Err(SubmitError::Engine(msg)),
-            Err(_) => Err(SubmitError::Closed),
+            Ok(Err(ReplyError::Expired)) => Err(SubmitError::DeadlineExceeded),
+            Ok(Err(ReplyError::Aborted(msg))) => Err(SubmitError::Unavailable(msg)),
+            Ok(Err(ReplyError::Shutdown)) => Err(SubmitError::Closed),
+            Ok(Err(ReplyError::Failed(msg))) => Err(SubmitError::Engine(msg)),
+            // Sender dropped without a verdict (e.g. the request was lost
+            // inside an unwinding batcher before it was registered).
+            Err(_) => Err(SubmitError::Unavailable("batcher restarted".into())),
         }
     }
 }
@@ -173,13 +236,23 @@ impl Drop for RunningGuard {
     }
 }
 
-/// Spawn the batcher thread over a configured service (batch size and
-/// `max_delay` are the service's own). Returns the submit handle and the
-/// thread's join handle; the thread exits after all handles drop and the
-/// queue is drained.
+/// Spawn the supervised batcher thread over a configured service (batch
+/// size and `max_delay` are the service's own). Returns the submit
+/// handle and the thread's join handle; the thread exits after all
+/// handles drop and the queue is drained.
 pub fn spawn(
     svc: PredictionService,
     queue_capacity: usize,
+) -> Result<(BatcherHandle, JoinHandle<()>)> {
+    spawn_named(svc, queue_capacity, "default")
+}
+
+/// [`spawn`] with a model label for the `batcher_restarted` log event
+/// (the registry passes the model name).
+pub fn spawn_named(
+    svc: PredictionService,
+    queue_capacity: usize,
+    label: &str,
 ) -> Result<(BatcherHandle, JoinHandle<()>)> {
     let dim = svc.dim();
     let metrics = svc.metrics();
@@ -188,24 +261,154 @@ pub fn spawn(
     let running = Arc::new(AtomicBool::new(true));
     let running_rx = Arc::clone(&running);
     let (tx, rx) = sync_channel::<Incoming>(queue_capacity.max(1));
+    let label = label.to_string();
     let join = std::thread::Builder::new()
         .name("pgpr-batcher".into())
         .spawn(move || {
-            let _guard = RunningGuard(running_rx);
-            run_loop(svc, rx, depth_rx);
+            let _guard = RunningGuard(Arc::clone(&running_rx));
+            supervise(svc, rx, depth_rx, running_rx, &label);
         })
         .map_err(|e| PgprError::Io(format!("spawn batcher thread: {e}")))?;
     Ok((BatcherHandle { tx, dim, depth, metrics, running }, join))
 }
 
-fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<AtomicU64>) {
+/// Shortest backoff after the first panic; doubles per consecutive
+/// restart up to [`MAX_BACKOFF`].
+const BASE_BACKOFF: Duration = Duration::from_millis(20);
+const MAX_BACKOFF: Duration = Duration::from_secs(2);
+
+/// Run the batcher loop under `catch_unwind`, respawning it (same
+/// thread, fresh service) after a panic. In-flight waiters are failed
+/// with a 503-mapped error — every request still gets exactly one reply
+/// — and requests parked in the bounded queue during the backoff window
+/// survive to be served by the restarted loop.
+fn supervise(
+    svc: PredictionService,
+    rx: Receiver<Incoming>,
+    depth: Arc<AtomicU64>,
+    running: Arc<AtomicBool>,
+    label: &str,
+) {
+    // Everything needed to rebuild the service after a panic (the
+    // panicked instance may be mid-mutation, so it is discarded).
+    let engine = svc.shared_engine();
+    let metrics = svc.metrics();
+    let batch_size = svc.batch_size();
+    let max_delay = svc.max_delay();
+    let mode = svc.predict_mode();
+    let trace = svc.trace();
+
+    let mut state = LoopState::new();
+    let mut svc_slot = Some(svc);
+    let mut restarts: u32 = 0;
+    loop {
+        let mut svc = match svc_slot.take() {
+            Some(s) => s,
+            None => {
+                let rebuilt = PredictionService::with_shared_metrics(
+                    Arc::clone(&engine),
+                    batch_size,
+                    Arc::clone(&metrics),
+                )
+                .map(|s| {
+                    let s = s.with_predict_mode(mode).with_trace(trace);
+                    match max_delay {
+                        Some(d) => s.with_max_delay(d),
+                        None => s,
+                    }
+                });
+                match rebuilt {
+                    Ok(s) => s,
+                    Err(e) => {
+                        // Can't happen with a previously-valid config,
+                        // but never loop on a broken rebuild.
+                        log_event(
+                            Level::Info,
+                            "batcher_rebuild_failed",
+                            vec![
+                                ("model", Json::Str(label.to_string())),
+                                ("error", Json::Str(e.to_string())),
+                            ],
+                        );
+                        fail_all(&mut state.waiters, &mut state.routes, &ReplyError::Shutdown);
+                        return;
+                    }
+                }
+            }
+        };
+        running.store(true, Ordering::Relaxed);
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| run_loop(&mut svc, &rx, &depth, &mut state)));
+        match outcome {
+            Ok(()) => break, // clean drain: all handles dropped
+            Err(payload) => {
+                running.store(false, Ordering::Relaxed);
+                let msg = panic_message(&payload);
+                fail_all(&mut state.waiters, &mut state.routes, &ReplyError::Aborted(msg.clone()));
+                metrics.batcher_restarts.fetch_add(1, Ordering::Relaxed);
+                let backoff = BASE_BACKOFF
+                    .saturating_mul(1u32 << restarts.min(10))
+                    .min(MAX_BACKOFF);
+                restarts = restarts.saturating_add(1);
+                log_event(
+                    Level::Info,
+                    "batcher_restarted",
+                    vec![
+                        ("model", Json::Str(label.to_string())),
+                        ("restarts", Json::Num(restarts as f64)),
+                        ("backoff_ms", Json::Num(backoff.as_millis() as f64)),
+                        ("panic", Json::Str(msg)),
+                    ],
+                );
+                std::thread::sleep(backoff);
+            }
+        }
+    }
+    // Anything still waiting (e.g. after an engine failure) gets closed out.
+    fail_all(&mut state.waiters, &mut state.routes, &ReplyError::Shutdown);
+}
+
+/// Best-effort text of a panic payload (what `panic!` carried).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "batcher panicked".to_string()
+    }
+}
+
+/// Reply bookkeeping that must survive a panic inside [`run_loop`]: it
+/// lives in the supervisor's frame, outside the unwind boundary, so the
+/// supervisor can fail every registered waiter explicitly.
+struct LoopState {
+    waiters: HashMap<u64, Waiter>,
+    /// Service request id → (waiter key, row slot within the waiter).
+    routes: HashMap<u64, (u64, usize)>,
+    next_id: u64,
+    next_waiter: u64,
+}
+
+impl LoopState {
+    fn new() -> LoopState {
+        LoopState {
+            waiters: HashMap::new(),
+            routes: HashMap::new(),
+            next_id: 0,
+            next_waiter: 0,
+        }
+    }
+}
+
+fn run_loop(
+    svc: &mut PredictionService,
+    rx: &Receiver<Incoming>,
+    depth: &AtomicU64,
+    state: &mut LoopState,
+) {
     let metrics = svc.metrics();
     let tracing = svc.trace();
-    let mut waiters: HashMap<u64, Waiter> = HashMap::new();
-    // Service request id → (waiter key, row slot within the waiter).
-    let mut routes: HashMap<u64, (u64, usize)> = HashMap::new();
-    let mut next_id: u64 = 0;
-    let mut next_waiter: u64 = 0;
     let mut open = true;
     while open || svc.queued_rows() > 0 {
         let msg = match svc.deadline() {
@@ -238,6 +441,20 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
         match msg {
             Some(inc) => {
                 depth.fetch_sub(1, Ordering::Relaxed);
+                // Chaos hooks: a stuck queue stalls batch formation; an
+                // armed panic exercises the supervisor's restart path.
+                fault::stall(fault::QUEUE_STICK);
+                if fault::fire(fault::BATCHER_PANIC).is_some() {
+                    panic!("injected fault: batcher_panic");
+                }
+                // Batch-formation deadline check: an expired request is
+                // shed here, in microseconds — its rows never reach the
+                // engine (counted as a `deadline` shed at the HTTP
+                // boundary, where the error is mapped to a 503).
+                if inc.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                    let _ = inc.reply.send(Err(ReplyError::Expired));
+                    continue;
+                }
                 let queue_wait_s = if tracing {
                     let qw = inc.enqueued.elapsed().as_secs_f64();
                     metrics.stages.record(Stage::QueueWait, qw);
@@ -245,10 +462,10 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
                 } else {
                     0.0
                 };
-                let wkey = next_waiter;
-                next_waiter += 1;
+                let wkey = state.next_waiter;
+                state.next_waiter += 1;
                 let n = inc.rows.len();
-                waiters.insert(
+                state.waiters.insert(
                     wkey,
                     Waiter {
                         reply: inc.reply,
@@ -263,9 +480,9 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
                     },
                 );
                 for (slot, row) in inc.rows.into_iter().enumerate() {
-                    next_id += 1;
-                    routes.insert(next_id, (wkey, slot));
-                    match svc.submit(Request { id: next_id, x: row }) {
+                    state.next_id += 1;
+                    state.routes.insert(state.next_id, (wkey, slot));
+                    match svc.submit(Request { id: state.next_id, x: row }) {
                         Ok(resp) => answered.extend(resp),
                         Err(e) => {
                             failure = Some(e.to_string());
@@ -281,13 +498,11 @@ fn run_loop(mut svc: PredictionService, rx: Receiver<Incoming>, depth: Arc<Atomi
         }
         // Deliver completed predictions first so a failure only affects
         // the requests that are genuinely still unanswered.
-        deliver(answered, &mut waiters, &mut routes);
+        deliver(answered, &mut state.waiters, &mut state.routes);
         if let Some(m) = failure {
-            fail_all(&mut waiters, &mut routes, &m);
+            fail_all(&mut state.waiters, &mut state.routes, &ReplyError::Failed(m));
         }
     }
-    // Anything still waiting (e.g. after an engine failure) gets closed out.
-    fail_all(&mut waiters, &mut routes, "service shut down");
 }
 
 fn deliver(
@@ -335,14 +550,14 @@ fn deliver(
 
 /// Fail every still-waiting request. Error *counting* happens at the
 /// HTTP boundary (one per failed response), so this only routes the
-/// message — no metrics here, or engine failures would double-count.
+/// verdict — no metrics here, or engine failures would double-count.
 fn fail_all(
     waiters: &mut HashMap<u64, Waiter>,
     routes: &mut HashMap<u64, (u64, usize)>,
-    msg: &str,
+    err: &ReplyError,
 ) {
     for (_, w) in waiters.drain() {
-        let _ = w.reply.send(Err(msg.to_string()));
+        let _ = w.reply.send(Err(err.clone()));
     }
     routes.clear();
 }
@@ -351,7 +566,6 @@ fn fail_all(
 mod tests {
     use super::*;
     use crate::config::{LmaConfig, PartitionStrategy};
-    use crate::coordinator::service::ServeEngine;
     use crate::kernels::se_ard::SeArdHyper;
     use crate::linalg::matrix::Mat;
     use crate::lma::LmaRegressor;
@@ -484,6 +698,62 @@ mod tests {
         let (h, j, _model) = batcher(100, 50_000);
         let rep = h.submit(vec![vec![0.1]]).unwrap();
         assert_eq!(rep.mean.len(), 1);
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_before_the_engine() {
+        let (h, j, _model) = batcher(4, 1000);
+        let engine_batches_before = h.metrics.batches.load(Ordering::Relaxed);
+        // A deadline already in the past: shed at batch formation.
+        let expired = Instant::now() - Duration::from_millis(5);
+        let r = h.submit_with_deadline(vec![vec![0.3]], Some(expired));
+        assert!(matches!(r, Err(SubmitError::DeadlineExceeded)), "got {r:?}");
+        assert_eq!(
+            h.metrics.batches.load(Ordering::Relaxed),
+            engine_batches_before,
+            "expired request must never reach the engine"
+        );
+        // A generous deadline is honored normally.
+        let far = Instant::now() + Duration::from_secs(30);
+        let ok = h.submit_with_deadline(vec![vec![0.3]], Some(far));
+        assert!(ok.is_ok());
+        drop(h);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn injected_panic_restarts_the_loop_and_loses_nothing() {
+        let _g = crate::util::fault::serial_guard();
+        crate::util::fault::reset();
+        let (h, j, model) = batcher(4, 1000);
+        crate::util::fault::arm(crate::util::fault::BATCHER_PANIC, 1);
+        // The victim request is answered exactly once — with a 503-mapped
+        // error, not silence.
+        let r = h.submit(vec![vec![0.1]]);
+        assert!(
+            matches!(r, Err(SubmitError::Unavailable(_)) | Err(SubmitError::Closed)),
+            "victim gets an explicit failure, got {r:?}"
+        );
+        // The supervisor respawns the loop; a subsequent request succeeds
+        // and answers bit-identically to the direct engine.
+        let mut rep = None;
+        for _ in 0..100 {
+            match h.submit(vec![vec![0.5]]) {
+                Ok(r) => {
+                    rep = Some(r);
+                    break;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+        let rep = rep.expect("batcher recovered within 1s");
+        let direct = model.predict(&Mat::col_vec(&[0.5])).unwrap();
+        assert_eq!(rep.mean[0].to_bits(), direct.mean[0].to_bits());
+        assert!(h.is_running(), "running flag flips back after respawn");
+        assert_eq!(h.metrics.batcher_restarts.load(Ordering::Relaxed), 1);
+        crate::util::fault::reset();
         drop(h);
         j.join().unwrap();
     }

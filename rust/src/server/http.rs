@@ -69,6 +69,7 @@ use crate::coordinator::service::ServeEngine;
 use crate::obs::{log_event, next_trace_id, parse_query, Level, Query, Stage, TraceEntry};
 use crate::registry::artifact;
 use crate::registry::registry::{ModelRegistry, RegistryError};
+use crate::server::admission::{self, Decision, ShedReason};
 use crate::server::batcher::SubmitError;
 use crate::server::metrics::{build_info, process_start, process_uptime_secs, ServeMetrics};
 use crate::util::error::{PgprError, Result};
@@ -107,6 +108,13 @@ struct Shared {
     trace: bool,
     /// `slow_request` log threshold in microseconds (0 = off).
     slow_request_us: u64,
+    /// Batcher flush size — the admission gate's queue-delay estimate
+    /// converts queue depth to batches with it.
+    batch_size: usize,
+    /// Connection worker pool size (the capacity QoS weights divide up).
+    workers: usize,
+    /// Deadline for requests without `X-Deadline-Ms`, ms (0 = none).
+    default_deadline_ms: u64,
 }
 
 /// A running HTTP serving stack (acceptor + workers + registry batchers).
@@ -161,6 +169,9 @@ impl Server {
             stop: Arc::clone(&stop),
             trace: opts.trace,
             slow_request_us: opts.slow_request_us,
+            batch_size: opts.batch_size,
+            workers: opts.workers,
+            default_deadline_ms: opts.default_deadline_ms,
         });
 
         let mut workers = Vec::with_capacity(opts.workers);
@@ -281,6 +292,7 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
                     "application/json",
                     error_body(&msg).as_bytes(),
                     true,
+                    None,
                 );
                 break;
             }
@@ -290,11 +302,13 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
             && served < shared.max_conn_requests
             && req.wants_keep_alive()
             && !shared.stop.load(Ordering::SeqCst);
-        let (status, content_type, body) = route(&req, shared);
+        let ((status, content_type, body), retry_after) = route(&req, shared);
         if status >= 400 {
             shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
         }
-        if write_response(&mut stream, status, content_type, body.as_bytes(), !keep).is_err() {
+        if write_response(&mut stream, status, content_type, body.as_bytes(), !keep, retry_after)
+            .is_err()
+        {
             break;
         }
         if !keep {
@@ -314,6 +328,10 @@ struct HttpRequest {
     /// Client-supplied `X-Request-Id` ("" when absent), clamped to 128
     /// chars — echoed into traces and structured log events.
     request_id: String,
+    /// Client-supplied `X-Deadline-Ms`: the request's total latency
+    /// budget in milliseconds (`None` when absent or unparsable —
+    /// `ServeOptions::default_deadline_ms` applies then).
+    deadline_ms: Option<u64>,
     /// Seconds from the request's first byte to the parsed request
     /// (socket read + head parse), excluding keep-alive idle wait —
     /// the `http_parse` stage.
@@ -420,6 +438,7 @@ fn read_request(
     let mut content_length = 0usize;
     let mut connection = String::new();
     let mut request_id = String::new();
+    let mut deadline_ms = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             let name = name.trim();
@@ -432,6 +451,8 @@ fn read_request(
                 connection = value.trim().to_ascii_lowercase();
             } else if name.eq_ignore_ascii_case("x-request-id") {
                 request_id = value.trim().chars().take(128).collect();
+            } else if name.eq_ignore_ascii_case("x-deadline-ms") {
+                deadline_ms = value.trim().parse::<u64>().ok().filter(|&v| v > 0);
             }
         }
     }
@@ -465,12 +486,18 @@ fn read_request(
         version,
         connection,
         request_id,
+        deadline_ms,
         parse_s,
         body,
     })
 }
 
-fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
+/// One response: status, content type, body.
+type Resp = (u16, &'static str, String);
+
+/// Route one request → (response, optional `Retry-After` seconds).
+/// Only the shed/backpressure paths ever set the second element.
+fn route(req: &HttpRequest, shared: &Shared) -> (Resp, Option<u64>) {
     // Match on the path alone — `/predict?trace=1` still routes.
     let (path, query) = parse_query(&req.path);
     match (req.method.as_str(), path) {
@@ -492,7 +519,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
                 ("default", Json::Str(default)),
                 ("models", Json::Arr(names)),
             ]);
-            (200, "application/json", j.to_string())
+            ((200, "application/json", j.to_string()), None)
         }
         ("GET", "/readyz") => {
             let ready = shared.registry.ready();
@@ -500,17 +527,20 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
                 ("ready", Json::Bool(ready)),
                 ("models", Json::Num(shared.registry.len() as f64)),
             ]);
-            (if ready { 200 } else { 503 }, "application/json", j.to_string())
+            // A not-ready server is mid-restart: tell pollers to come
+            // straight back rather than treat it as a shed.
+            let retry = if ready { None } else { Some(1) };
+            ((if ready { 200 } else { 503 }, "application/json", j.to_string()), retry)
         }
         ("GET", "/metrics") => {
             if query.get("format") == Some("json") {
-                (200, "application/json", metrics_json(shared))
+                ((200, "application/json", metrics_json(shared)), None)
             } else {
-                (200, "text/plain; charset=utf-8", metrics_text(shared))
+                ((200, "text/plain; charset=utf-8", metrics_text(shared)), None)
             }
         }
-        ("GET", "/debug/trace") => handle_debug_trace(&query, shared),
-        ("GET", "/debug/quality") => handle_debug_quality(&query, shared),
+        ("GET", "/debug/trace") => (handle_debug_trace(&query, shared), None),
+        ("GET", "/debug/quality") => (handle_debug_quality(&query, shared), None),
         ("POST", "/predict") => handle_predict(req, &query, shared),
         ("GET", "/models") => {
             let infos: Vec<Json> = shared.registry.list().iter().map(|i| i.to_json()).collect();
@@ -519,7 +549,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
                 ("models", Json::Arr(infos)),
                 ("default", Json::Str(default)),
             ]);
-            (200, "application/json", j.to_string())
+            ((200, "application/json", j.to_string()), None)
         }
         (method, p) if p.starts_with("/models/") => {
             let rest = &p["/models/".len()..];
@@ -528,24 +558,33 @@ fn route(req: &HttpRequest, shared: &Shared) -> (u16, &'static str, String) {
                     return handle_observe(name, &req.body, shared);
                 }
                 return (
-                    404,
-                    "application/json",
-                    error_body(&format!("no route for {} {}", req.method, req.path)),
+                    (
+                        404,
+                        "application/json",
+                        error_body(&format!("no route for {} {}", req.method, req.path)),
+                    ),
+                    None,
                 );
             }
             if rest.is_empty() || rest.contains('/') {
                 return (
-                    404,
-                    "application/json",
-                    error_body(&format!("no route for {} {}", req.method, req.path)),
+                    (
+                        404,
+                        "application/json",
+                        error_body(&format!("no route for {} {}", req.method, req.path)),
+                    ),
+                    None,
                 );
             }
-            handle_model_admin(method, rest, &req.body, shared)
+            (handle_model_admin(method, rest, &req.body, shared), None)
         }
         _ => (
-            404,
-            "application/json",
-            error_body(&format!("no route for {} {}", req.method, req.path)),
+            (
+                404,
+                "application/json",
+                error_body(&format!("no route for {} {}", req.method, req.path)),
+            ),
+            None,
         ),
     }
 }
@@ -693,6 +732,7 @@ fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {
         RegistryError::Duplicate(_)
         | RegistryError::Protected(_)
         | RegistryError::Conflict(_) => 409,
+        RegistryError::Backpressure(_) => 429,
         RegistryError::Capacity { .. } => 507,
         RegistryError::Internal(_) => 500,
     };
@@ -705,29 +745,37 @@ fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {
 /// without publishing) or `"flush": true` (publish even below the flush
 /// threshold; with no rows this flushes whatever is buffered). Answers
 /// with the model's generation, row counts and the update-seam evidence.
-fn handle_observe(name: &str, body: &[u8], shared: &Shared) -> (u16, &'static str, String) {
+fn handle_observe(name: &str, body: &[u8], shared: &Shared) -> (Resp, Option<u64>) {
     let text = match std::str::from_utf8(body) {
         Ok(t) => t,
-        Err(_) => return (400, "application/json", error_body("body is not utf-8")),
+        Err(_) => return ((400, "application/json", error_body("body is not utf-8")), None),
     };
     let json = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return (400, "application/json", error_body(&format!("bad JSON: {e}"))),
+        Err(e) => {
+            return ((400, "application/json", error_body(&format!("bad JSON: {e}"))), None)
+        }
     };
     let buffer_only = json.get("buffer").and_then(|v| v.as_bool()).unwrap_or(false);
     let force_flush = json.get("flush").and_then(|v| v.as_bool()).unwrap_or(false);
     if buffer_only && force_flush {
-        return (400, "application/json", error_body("`buffer` and `flush` are exclusive"));
+        return (
+            (400, "application/json", error_body("`buffer` and `flush` are exclusive")),
+            None,
+        );
     }
     let (rows, ys) = match parse_observations(&json) {
         Ok(v) => v,
-        Err(msg) => return (400, "application/json", error_body(&msg)),
+        Err(msg) => return ((400, "application/json", error_body(&msg)), None),
     };
     if rows.is_empty() && !force_flush {
         return (
-            400,
-            "application/json",
-            error_body("no observations (send `x`+`y`, `rows`+`y`, or `flush`)"),
+            (
+                400,
+                "application/json",
+                error_body("no observations (send `x`+`y`, `rows`+`y`, or `flush`)"),
+            ),
+            None,
         );
     }
     match shared.registry.observe(Some(name), &rows, &ys, buffer_only, force_flush) {
@@ -756,9 +804,12 @@ fn handle_observe(name: &str, body: &[u8], shared: &Shared) -> (u16, &'static st
             if let Some(e) = &out.snapshot_error {
                 fields.push(("snapshot_error", Json::Str(e.clone())));
             }
-            (200, "application/json", Json::obj(fields).to_string())
+            ((200, "application/json", Json::obj(fields).to_string()), None)
         }
-        Err(e) => registry_error_response(&e),
+        // Buffer backpressure is a retryable condition, not a client
+        // error: tell the producer when to come back.
+        Err(e @ RegistryError::Backpressure(_)) => (registry_error_response(&e), Some(1)),
+        Err(e) => (registry_error_response(&e), None),
     }
 }
 
@@ -870,34 +921,82 @@ fn handle_predict(
     request: &HttpRequest,
     query: &Query<'_>,
     shared: &Shared,
-) -> (u16, &'static str, String) {
+) -> (Resp, Option<u64>) {
     let t0 = Instant::now();
     let text = match std::str::from_utf8(&request.body) {
         Ok(t) => t,
-        Err(_) => return (400, "application/json", error_body("body is not utf-8")),
+        Err(_) => return ((400, "application/json", error_body("body is not utf-8")), None),
     };
     let json = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return (400, "application/json", error_body(&format!("bad JSON: {e}"))),
+        Err(e) => {
+            return ((400, "application/json", error_body(&format!("bad JSON: {e}"))), None)
+        }
     };
     let model = match json.get("model") {
         None => None,
         Some(m) => match m.as_str() {
             Some(s) => Some(s),
             None => {
-                return (400, "application/json", error_body("`model` must be a string"))
+                return ((400, "application/json", error_body("`model` must be a string")), None)
             }
         },
     };
     let entry = match shared.registry.entry_for(model) {
         Ok(e) => e,
-        Err(e) => return registry_error_response(&e),
+        Err(e) => return (registry_error_response(&e), None),
     };
     let rows = match parse_rows(&json) {
         Ok(r) => r,
-        Err(msg) => return (400, "application/json", error_body(&msg)),
+        Err(msg) => return ((400, "application/json", error_body(&msg)), None),
     };
     let n_rows = rows.len();
+
+    // The request's absolute deadline: `X-Deadline-Ms` (else the serve
+    // default), budgeted from the request's first byte — socket-read and
+    // parse time already spent count against it.
+    let deadline = request
+        .deadline_ms
+        .or((shared.default_deadline_ms > 0).then_some(shared.default_deadline_ms))
+        .map(|ms| {
+            t0 + Duration::from_millis(ms)
+                .saturating_sub(Duration::from_secs_f64(request.parse_s.max(0.0)))
+        });
+
+    // Admission gate: estimate the queue delay from live counters and
+    // shed (503 + Retry-After, microseconds of work) anything the model
+    // cannot answer within its SLO, its deadline or its QoS share.
+    let (total_weight, models) = shared.registry.admission_load();
+    let qstate = admission::queue_state(
+        entry.handle().depth(),
+        shared.batch_size,
+        entry.metrics(),
+        entry.inflight(),
+        shared.workers,
+        total_weight,
+        models,
+    );
+    let remaining = deadline.map(|dl| dl.saturating_duration_since(Instant::now()));
+    if let Decision::Shed { reason, retry_after_s } =
+        admission::evaluate(entry.admission(), &qstate, remaining)
+    {
+        entry.metrics().record_shed(reason);
+        log_event(
+            Level::Debug,
+            "request_shed",
+            vec![
+                ("model", Json::Str(entry.name().to_string())),
+                ("reason", Json::Str(reason.label().to_string())),
+                ("queue_depth", Json::Num(qstate.depth as f64)),
+                ("retry_after_s", Json::Num(retry_after_s as f64)),
+            ],
+        );
+        let msg = match reason {
+            ShedReason::Deadline => "deadline cannot be met",
+            _ => "overloaded: predicted queue delay exceeds the admission SLO",
+        };
+        return ((503, "application/json", error_body(msg)), Some(retry_after_s));
+    }
     let trace_on = shared.trace;
     // `?trace=1` inlines this request's own stage breakdown (only
     // meaningful while tracing is enabled).
@@ -910,7 +1009,7 @@ fn handle_predict(
     // until the batcher answers (guard decrements on every exit path) —
     // `/metrics` exposes the gauge as `pgpr_generation_inflight`.
     let _inflight = entry.begin_inflight();
-    match entry.handle().submit(rows) {
+    match entry.handle().submit_with_deadline(rows, deadline) {
         Ok(rep) => {
             // Count the hit only once the model actually answered, so
             // per-model counters reflect served traffic, not 400s/503s.
@@ -981,16 +1080,30 @@ fn handle_predict(
                 );
                 entry.metrics().trace.push(trace);
             }
-            (200, "application/json", body_out)
+            ((200, "application/json", body_out), None)
         }
-        Err(SubmitError::BadRequest(m)) => (400, "application/json", error_body(&m)),
+        Err(SubmitError::BadRequest(m)) => ((400, "application/json", error_body(&m)), None),
         Err(SubmitError::Overloaded) => {
-            (503, "application/json", error_body("request queue is full"))
+            entry.metrics().record_shed(ShedReason::QueueFull);
+            let retry = admission::retry_after_secs(admission::estimate_queue_delay(&qstate));
+            ((503, "application/json", error_body("request queue is full")), Some(retry))
+        }
+        Err(SubmitError::DeadlineExceeded) => {
+            // Expired while queued: dropped at batch formation, never
+            // computed.
+            entry.metrics().record_shed(ShedReason::Deadline);
+            ((503, "application/json", error_body("request deadline exceeded")), Some(1))
+        }
+        Err(SubmitError::Unavailable(m)) => {
+            // The batcher crashed under this request and is respawning.
+            entry.metrics().record_shed(ShedReason::Shutdown);
+            ((503, "application/json", error_body(&m)), Some(1))
         }
         Err(SubmitError::Closed) => {
-            (503, "application/json", error_body("service shutting down"))
+            entry.metrics().record_shed(ShedReason::Shutdown);
+            ((503, "application/json", error_body("service shutting down")), Some(1))
         }
-        Err(SubmitError::Engine(m)) => (500, "application/json", error_body(&m)),
+        Err(SubmitError::Engine(m)) => ((500, "application/json", error_body(&m)), None),
     }
 }
 
@@ -1027,6 +1140,7 @@ fn status_reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         409 => "Conflict",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         507 => "Insufficient Storage",
         _ => "Internal Server Error",
@@ -1034,16 +1148,23 @@ fn status_reason(status: u16) -> &'static str {
 }
 
 /// Write one response. Always emits `Content-Type`, a byte-exact
-/// `Content-Length` and an explicit `Connection` header.
+/// `Content-Length` and an explicit `Connection` header; shed and
+/// backpressure responses carry `Retry-After` so well-behaved clients
+/// pace themselves instead of hammering an overloaded server.
 fn write_response(
     stream: &mut TcpStream,
     status: u16,
     content_type: &str,
     body: &[u8],
     close: bool,
+    retry_after: Option<u64>,
 ) -> std::io::Result<()> {
+    let retry = match retry_after {
+        Some(s) => format!("Retry-After: {s}\r\n"),
+        None => String::new(),
+    };
     let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n{retry}Connection: {}\r\n\r\n",
         status_reason(status),
         body.len(),
         if close { "close" } else { "keep-alive" },
@@ -1091,6 +1212,7 @@ mod tests {
             version: version.into(),
             connection: connection.into(),
             request_id: String::new(),
+            deadline_ms: None,
             parse_s: 0.0,
             body: Vec::new(),
         };
@@ -1107,6 +1229,7 @@ mod tests {
     #[test]
     fn status_reasons_cover_registry_codes() {
         assert_eq!(status_reason(409), "Conflict");
+        assert_eq!(status_reason(429), "Too Many Requests");
         assert_eq!(status_reason(507), "Insufficient Storage");
         assert_eq!(status_reason(500), "Internal Server Error");
     }

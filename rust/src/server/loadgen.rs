@@ -76,6 +76,19 @@ pub struct LoadReport {
     pub throughput_rps: f64,
     /// Answered rows per wall-clock second.
     pub rows_per_sec: f64,
+    /// Successful rows per wall-clock second — the goodput headline for
+    /// overload runs (same value as `rows_per_sec`, recorded under its
+    /// own name so shed-rate/goodput records read unambiguously).
+    pub goodput_rows_per_s: f64,
+    /// Responses the server shed with a `Retry-After` header (503/429
+    /// from admission control, queue saturation or backpressure).
+    pub shed: usize,
+    /// Open-loop arrivals never sent because they fell inside a
+    /// `Retry-After` backoff window the client was honoring.
+    pub deferred: usize,
+    /// p99 latency of shed responses — how fast the server fails when it
+    /// refuses work (0 when nothing was shed).
+    pub shed_p99_s: f64,
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -95,6 +108,11 @@ impl LoadReport {
             ("elapsed_s", Json::Num(self.elapsed_s)),
             ("throughput_rps", Json::Num(self.throughput_rps)),
             ("rows_per_sec", Json::Num(self.rows_per_sec)),
+            ("goodput_rows_per_s", Json::Num(self.goodput_rows_per_s)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("shed_rate", Json::Num(self.shed_rate())),
+            ("deferred", Json::Num(self.deferred as f64)),
+            ("shed_p99_s", Json::Num(self.shed_p99_s)),
             (
                 "latency_s",
                 Json::obj(vec![
@@ -108,6 +126,17 @@ impl LoadReport {
         ])
     }
 
+    /// Fraction of *attempted* requests the server shed (deferred
+    /// arrivals were never sent, so they don't enter the denominator).
+    pub fn shed_rate(&self) -> f64 {
+        let attempted = self.ok + self.errors + self.shed;
+        if attempted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / attempted as f64
+        }
+    }
+
     /// Human-readable one-liner.
     pub fn render(&self) -> String {
         let mode = match (self.open_loop, self.keep_alive) {
@@ -116,8 +145,19 @@ impl LoadReport {
             (false, true) => "keep-alive".to_string(),
             (false, false) => "close".to_string(),
         };
+        let overload = if self.shed > 0 || self.deferred > 0 {
+            format!(
+                "; shed {} ({:.0}%), deferred {}, goodput {:.1} rows/s",
+                self.shed,
+                100.0 * self.shed_rate(),
+                self.deferred,
+                self.goodput_rows_per_s,
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "loadgen[{}]: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}",
+            "loadgen[{}]: {}/{} ok ({} errors) in {}; {:.1} req/s; latency mean {} p50 {} p95 {} p99 {} max {}{}",
             mode,
             self.ok,
             self.requests,
@@ -129,6 +169,7 @@ impl LoadReport {
             fmt_time(self.p95_s),
             fmt_time(self.p99_s),
             fmt_time(self.max_s),
+            overload,
         )
     }
 }
@@ -156,6 +197,9 @@ pub struct HttpConn {
     /// Bytes read past the previous response (server-side pipelining
     /// never produces these, but framing stays robust anyway).
     leftover: Vec<u8>,
+    /// `Retry-After` seconds on the most recent response (overload
+    /// sheds announce one), cleared on every exchange.
+    retry_after: Option<u64>,
 }
 
 impl HttpConn {
@@ -165,7 +209,14 @@ impl HttpConn {
         stream.set_read_timeout(Some(Duration::from_secs(30)))?;
         stream.set_write_timeout(Some(Duration::from_secs(30)))?;
         let _ = stream.set_nodelay(true);
-        Ok(HttpConn { stream, leftover: Vec::new() })
+        Ok(HttpConn { stream, leftover: Vec::new(), retry_after: None })
+    }
+
+    /// `Retry-After` seconds carried by the most recent response, if any
+    /// — the load generator's open-loop mode honors this by deferring
+    /// arrivals scheduled inside the backoff window.
+    pub fn retry_after(&self) -> Option<u64> {
+        self.retry_after
     }
 
     /// One request/response exchange on the persistent connection.
@@ -244,6 +295,7 @@ impl HttpConn {
             .ok_or_else(|| PgprError::Data("missing HTTP status code".into()))?;
         let mut content_length = 0usize;
         let mut closes = false;
+        self.retry_after = None;
         for line in head.split("\r\n").skip(1) {
             if let Some((name, value)) = line.split_once(':') {
                 let name = name.trim();
@@ -256,6 +308,8 @@ impl HttpConn {
                     && value.trim().eq_ignore_ascii_case("close")
                 {
                     closes = true;
+                } else if name.eq_ignore_ascii_case("retry-after") {
+                    self.retry_after = value.trim().parse::<u64>().ok();
                 }
             }
         }
@@ -338,22 +392,32 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     };
     let targets = &targets;
     let latency = Histogram::new();
+    let shed_latency = Histogram::new();
     let next = AtomicUsize::new(0);
     let ok = AtomicUsize::new(0);
     let errors = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let deferred = AtomicUsize::new(0);
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for w in 0..cfg.concurrency {
             let latency = &latency;
+            let shed_latency = &shed_latency;
             let next = &next;
             let ok = &ok;
             let errors = &errors;
+            let shed = &shed;
+            let deferred = &deferred;
             s.spawn(move || {
                 let mut rng = Pcg64::new(cfg.seed).split(w as u64 + 1);
                 // One persistent connection per thread in keep-alive
                 // mode, re-established on error or server-side close.
                 let mut conn: Option<HttpConn> = None;
                 let open = cfg.rate_rps > 0.0;
+                // While honoring a Retry-After, open-loop arrivals
+                // scheduled before this instant are skipped (deferred)
+                // instead of sent into a server that said "not now".
+                let mut resume_at: Option<Instant> = None;
                 // Open loop: worker w owns arrivals w, w+C, w+2C, … each
                 // pinned to its global scheduled instant; closed loop:
                 // pull from the shared counter as responses come back.
@@ -373,15 +437,19 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                         }
                         i
                     };
-                    let (model, dim) = &targets[i % targets.len()];
-                    let body =
-                        request_body(&mut rng, *dim, cfg.rows_per_request, model.as_deref());
                     // Open loop measures from the *scheduled* arrival, so
                     // a send delayed by a slow previous response still
                     // charges the wait to the server (no coordinated
                     // omission).
                     let t = if open {
                         let sched = t0 + Duration::from_secs_f64(i as f64 / cfg.rate_rps);
+                        if let Some(r) = resume_at {
+                            if sched < r {
+                                deferred.fetch_add(1, Ordering::Relaxed);
+                                continue;
+                            }
+                            resume_at = None;
+                        }
                         let now = Instant::now();
                         if sched > now {
                             std::thread::sleep(sched - now);
@@ -390,6 +458,9 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                     } else {
                         Instant::now()
                     };
+                    let (model, dim) = &targets[i % targets.len()];
+                    let body =
+                        request_body(&mut rng, *dim, cfg.rows_per_request, model.as_deref());
                     let status = if cfg.keep_alive {
                         let c = match conn.take() {
                             Some(c) => Ok(c),
@@ -398,19 +469,35 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
                         c.and_then(|mut c| {
                             let (status, _, closes) =
                                 c.request("POST", "/predict", Some(&body))?;
+                            let retry = c.retry_after();
                             if !closes {
                                 conn = Some(c);
                             }
-                            Ok(status)
+                            Ok((status, retry))
                         })
                     } else {
-                        http_request(&cfg.addr, "POST", "/predict", Some(&body))
-                            .map(|(status, _)| status)
+                        HttpConn::connect(&cfg.addr).and_then(|mut c| {
+                            let (status, _, _) =
+                                c.request_with("POST", "/predict", Some(&body), true)?;
+                            Ok((status, c.retry_after()))
+                        })
                     };
                     match status {
-                        Ok(200) => {
+                        Ok((200, _)) => {
                             latency.record(t.elapsed().as_micros() as u64);
                             ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // A Retry-After on a non-200 is a deliberate shed
+                        // (admission SLO, queue saturation, backpressure)
+                        // — count it apart from hard errors and honor the
+                        // backoff in open-loop mode.
+                        Ok((_, Some(retry_s))) => {
+                            shed_latency.record(t.elapsed().as_micros() as u64);
+                            shed.fetch_add(1, Ordering::Relaxed);
+                            if open {
+                                resume_at =
+                                    Some(Instant::now() + Duration::from_secs(retry_s));
+                            }
                         }
                         Ok(_) | Err(_) => {
                             errors.fetch_add(1, Ordering::Relaxed);
@@ -423,6 +510,8 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
     let elapsed_s = t0.elapsed().as_secs_f64();
     let okc = ok.load(Ordering::Relaxed);
     let q = |p: f64| latency.quantile(p) as f64 * 1e-6;
+    let goodput =
+        if elapsed_s > 0.0 { (okc * cfg.rows_per_request) as f64 / elapsed_s } else { 0.0 };
     Ok(LoadReport {
         requests: cfg.requests,
         ok: okc,
@@ -432,11 +521,11 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadReport> {
         offered_rps: cfg.rate_rps,
         elapsed_s,
         throughput_rps: if elapsed_s > 0.0 { okc as f64 / elapsed_s } else { 0.0 },
-        rows_per_sec: if elapsed_s > 0.0 {
-            (okc * cfg.rows_per_request) as f64 / elapsed_s
-        } else {
-            0.0
-        },
+        rows_per_sec: goodput,
+        goodput_rows_per_s: goodput,
+        shed: shed.load(Ordering::Relaxed),
+        deferred: deferred.load(Ordering::Relaxed),
+        shed_p99_s: shed_latency.quantile(0.99) as f64 * 1e-6,
         mean_s: latency.mean() * 1e-6,
         p50_s: q(0.5),
         p95_s: q(0.95),
@@ -461,6 +550,10 @@ mod tests {
             elapsed_s: 2.0,
             throughput_rps: 4.5,
             rows_per_sec: 4.5,
+            goodput_rows_per_s: 4.5,
+            shed: 0,
+            deferred: 0,
+            shed_p99_s: 0.0,
             mean_s: 0.01,
             p50_s: 0.008,
             p95_s: 0.02,
@@ -474,6 +567,41 @@ mod tests {
         assert_eq!(lat.req("p99").unwrap().as_f64(), Some(0.03));
         assert!(r.render().contains("9/10 ok"));
         assert!(r.render().contains("keep-alive"));
+        // No shed traffic ⇒ the overload tail stays out of the one-liner.
+        assert!(!r.render().contains("shed"));
+        assert_eq!(j.req("shed_rate").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn shed_accounting_in_report() {
+        let r = LoadReport {
+            requests: 100,
+            ok: 60,
+            errors: 0,
+            keep_alive: true,
+            open_loop: true,
+            offered_rps: 200.0,
+            elapsed_s: 1.0,
+            throughput_rps: 60.0,
+            rows_per_sec: 60.0,
+            goodput_rows_per_s: 60.0,
+            shed: 20,
+            deferred: 20,
+            shed_p99_s: 0.0004,
+            mean_s: 0.01,
+            p50_s: 0.008,
+            p95_s: 0.02,
+            p99_s: 0.03,
+            max_s: 0.04,
+        };
+        // 20 shed out of 80 attempted (deferred arrivals never went out).
+        assert!((r.shed_rate() - 0.25).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.req("shed").unwrap().as_usize(), Some(20));
+        assert_eq!(j.req("deferred").unwrap().as_usize(), Some(20));
+        assert_eq!(j.req("goodput_rows_per_s").unwrap().as_f64(), Some(60.0));
+        assert!(r.render().contains("shed 20 (25%)"));
+        assert!(r.render().contains("deferred 20"));
     }
 
     #[test]

@@ -15,6 +15,7 @@ use std::sync::OnceLock;
 use std::time::Instant;
 
 use crate::obs::{Stage, StageSet, TraceRing, ALL_STAGES, STAGE_COUNT};
+use crate::server::admission::{ShedReason, ALL_SHED_REASONS, SHED_REASONS};
 use crate::util::json::Json;
 
 /// Process-wide boot instant behind `pgpr_process_uptime_seconds`.
@@ -229,6 +230,12 @@ pub struct ServeMetrics {
     pub errors: AtomicU64,
     /// Batches flushed.
     pub batches: AtomicU64,
+    /// Requests refused by the admission gate / overload paths, one
+    /// counter per [`ShedReason`] (`pgpr_requests_shed_total{reason=…}`).
+    pub shed: [AtomicU64; SHED_REASONS],
+    /// Times this model's batcher thread was respawned after a panic
+    /// (`pgpr_batcher_restarts_total`).
+    pub batcher_restarts: AtomicU64,
     /// Per-stage latency attribution (`pgpr_stage_seconds`).
     pub stages: StageStats,
     /// Ring of the last N completed request traces (`GET /debug/trace`).
@@ -260,6 +267,8 @@ impl ServeMetrics {
             responses: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             batches: AtomicU64::new(0),
+            shed: std::array::from_fn(|_| AtomicU64::new(0)),
+            batcher_restarts: AtomicU64::new(0),
             stages: StageStats::new(),
             trace: TraceRing::new(trace_ring),
             started: Instant::now(),
@@ -268,6 +277,16 @@ impl ServeMetrics {
 
     pub fn elapsed_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
+    }
+
+    /// Count one shed request (refused before reaching the engine).
+    pub fn record_shed(&self, reason: ShedReason) {
+        self.shed[reason as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total sheds across every reason.
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// Rows answered per wall-clock second since the metrics were created.
@@ -309,6 +328,12 @@ impl ServeMetrics {
         let _ = writeln!(s, "pgpr_throughput_rows_per_sec{plain} {:.3}", self.rows_per_sec());
         let _ = writeln!(s, "pgpr_uptime_seconds{plain} {:.3}", self.elapsed_secs());
         let _ = writeln!(s, "pgpr_observe_rows_total{plain} {}", c(&self.observe_rows));
+        for reason in ALL_SHED_REASONS.iter().copied() {
+            let rs = lbl(&format!("reason=\"{}\"", reason.label()));
+            let _ =
+                writeln!(s, "pgpr_requests_shed_total{rs} {}", c(&self.shed[reason as usize]));
+        }
+        let _ = writeln!(s, "pgpr_batcher_restarts_total{plain} {}", c(&self.batcher_restarts));
         for (name, h) in [
             ("pgpr_request_latency_seconds", &self.latency_us),
             ("pgpr_predict_seconds", &self.predict_us),
@@ -416,6 +441,16 @@ impl ServeMetrics {
                 ]),
             ),
             ("observe_rows", c(&self.observe_rows)),
+            (
+                "shed",
+                Json::obj(
+                    ALL_SHED_REASONS
+                        .iter()
+                        .map(|&r| (r.label(), c(&self.shed[r as usize])))
+                        .collect(),
+                ),
+            ),
+            ("batcher_restarts", c(&self.batcher_restarts)),
             (
                 "observe_update_s",
                 Json::obj(vec![
@@ -579,6 +614,29 @@ mod tests {
             Some(1)
         );
         assert!(stages.get("f32u").is_none());
+    }
+
+    #[test]
+    fn shed_and_restart_counters_render_and_json() {
+        let m = ServeMetrics::new();
+        m.record_shed(ShedReason::Slo);
+        m.record_shed(ShedReason::Slo);
+        m.record_shed(ShedReason::QueueFull);
+        m.batcher_restarts.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(m.shed_total(), 3);
+        let text = m.render_prometheus_with(Some(("model", "a")));
+        assert!(text.contains("pgpr_requests_shed_total{model=\"a\",reason=\"slo\"} 2"), "{text}");
+        assert!(text.contains("pgpr_requests_shed_total{model=\"a\",reason=\"queue_full\"} 1"));
+        assert!(
+            text.contains("pgpr_requests_shed_total{model=\"a\",reason=\"deadline\"} 0"),
+            "zero-valued reasons still render"
+        );
+        assert!(text.contains("pgpr_batcher_restarts_total{model=\"a\"} 1"));
+        let j = m.to_json();
+        let shed = j.req("shed").unwrap();
+        assert_eq!(shed.get("slo").unwrap().as_usize(), Some(2));
+        assert_eq!(shed.get("shutdown").unwrap().as_usize(), Some(0));
+        assert_eq!(j.req("batcher_restarts").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -9,13 +9,21 @@
 //!   [`ModelRegistry`](crate::registry::ModelRegistry), plus
 //!   `GET/PUT/DELETE /models[/name]` management, `GET /healthz` and
 //!   `GET /metrics` (per-model labeled series).
+//! * [`admission`] — the deadline-aware admission gate. Before a request
+//!   is enqueued it is checked against the model's SLO (`--slo-ms`), its
+//!   own deadline (`X-Deadline-Ms` / `--default-deadline-ms`) and the
+//!   model's QoS share of the worker pool; overload degrades to fast
+//!   `503 + Retry-After` sheds instead of timeout queues.
 //! * [`batcher`] — the micro-batching scheduler. Connection workers hand
 //!   requests into a bounded MPSC queue; a dedicated batcher thread owns
 //!   the [`PredictionService`](crate::coordinator::service::PredictionService)
 //!   and flushes when `batch_size` rows are queued **or** the oldest
 //!   request's `max_delay` deadline expires, so a lone request is never
 //!   stranded waiting for a full batch. Each waiting connection is
-//!   answered through its own reply channel, exactly once.
+//!   answered through its own reply channel, exactly once — a supervisor
+//!   wraps the loop in `catch_unwind` and respawns it (bounded
+//!   exponential backoff) if it ever panics, failing the in-flight
+//!   waiters with 503 rather than stranding them.
 //! * [`metrics`] — lock-cheap atomic histograms (log-linear buckets) for
 //!   request latency, per-batch occupancy and queue depth, reporting
 //!   p50/p95/p99; rendered on `/metrics` and in the shutdown summary.
@@ -28,6 +36,7 @@
 //! LMA or the cluster-parallel engine (`sim` / `threads[:N]`), so real
 //! network traffic exercises the `cluster::Backend` layer end to end.
 
+pub mod admission;
 pub mod batcher;
 pub mod http;
 pub mod loadgen;

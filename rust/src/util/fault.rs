@@ -1,0 +1,228 @@
+//! Deterministic fault-injection harness (std-only, zero-cost when
+//! disabled).
+//!
+//! A *fault point* is a named site in the serving pipeline that can be
+//! armed to misbehave on purpose: panic, stall, corrupt. Points are
+//! armed either from the environment (`PGPR_FAULT=point[:arg][,..]`,
+//! read once at first use) or programmatically from tests
+//! ([`arm`] / [`reset`]). The catalog:
+//!
+//! | point             | arg                 | behaviour at the site        |
+//! |-------------------|---------------------|------------------------------|
+//! | `batcher_panic`   | shots (default 1)   | batcher loop panics on the next `shots` dequeues |
+//! | `engine_stall_ms` | milliseconds        | every engine predict sleeps first (level-triggered) |
+//! | `artifact_corrupt`| shots (default 1)   | next `shots` artifact loads see a flipped payload bit |
+//! | `queue_stick`     | milliseconds        | batcher dequeue + observe drain stall first (level-triggered) |
+//!
+//! Disabled cost is one relaxed atomic load per check ([`ARMED`] stays
+//! `false` until something is armed), so the hooks can sit on the
+//! request hot path.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Batcher loop panics at dequeue (edge-triggered, consumes a shot).
+pub const BATCHER_PANIC: &str = "batcher_panic";
+/// Engine predict sleeps `arg` ms (level-triggered).
+pub const ENGINE_STALL_MS: &str = "engine_stall_ms";
+/// Artifact load sees a flipped payload bit (edge-triggered).
+pub const ARTIFACT_CORRUPT: &str = "artifact_corrupt";
+/// Batcher dequeue / observe drain stalls `arg` ms (level-triggered).
+pub const QUEUE_STICK: &str = "queue_stick";
+
+/// One armed point: optional argument and a remaining-shot budget
+/// (`None` = unlimited, i.e. level-triggered).
+#[derive(Clone, Copy, Debug)]
+struct FaultState {
+    arg: u64,
+    shots: Option<u64>,
+}
+
+/// Fast path: `false` until anything is ever armed, so disabled checks
+/// are a single relaxed load.
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+fn table() -> &'static Mutex<HashMap<String, FaultState>> {
+    static TABLE: OnceLock<Mutex<HashMap<String, FaultState>>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Ok(spec) = std::env::var("PGPR_FAULT") {
+            for (point, state) in parse_spec(&spec) {
+                map.insert(point, state);
+            }
+        }
+        if !map.is_empty() {
+            ARMED.store(true, Ordering::SeqCst);
+        }
+        Mutex::new(map)
+    })
+}
+
+/// Default shot budget for a point: the injected-failure points are
+/// one-shot (so the respawned batcher doesn't re-panic forever), the
+/// stall points are level-triggered.
+fn default_shots(point: &str) -> Option<u64> {
+    match point {
+        BATCHER_PANIC | ARTIFACT_CORRUPT => Some(1),
+        _ => None,
+    }
+}
+
+/// Parse `point[:arg][,point[:arg]]…` into per-point states. For the
+/// one-shot points the arg is the shot count; for the stall points it
+/// is the millisecond argument. Unknown names are kept verbatim so test
+/// harnesses can define ad-hoc points.
+fn parse_spec(spec: &str) -> Vec<(String, FaultState)> {
+    spec.split(',')
+        .filter_map(|part| {
+            let part = part.trim();
+            if part.is_empty() {
+                return None;
+            }
+            let (point, arg) = match part.split_once(':') {
+                Some((p, a)) => (p.trim(), a.trim().parse::<u64>().unwrap_or(0)),
+                None => (part, 0),
+            };
+            let shots = match default_shots(point) {
+                // For one-shot points a non-zero arg overrides the budget.
+                Some(d) => Some(if arg > 0 { arg } else { d }),
+                None => None,
+            };
+            Some((point.to_string(), FaultState { arg, shots }))
+        })
+        .collect()
+}
+
+/// Arm one fault point programmatically (tests). `arg` is the
+/// millisecond argument for level points and the shot budget for
+/// one-shot points (0 = point default).
+pub fn arm(point: &str, arg: u64) {
+    let mut map = table().lock().unwrap();
+    let shots = match default_shots(point) {
+        Some(d) => Some(if arg > 0 { arg } else { d }),
+        None => None,
+    };
+    map.insert(point.to_string(), FaultState { arg, shots });
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm every fault point (tests). The fast path stays hot once armed
+/// — the per-check cost after a `reset` is still one load + one short
+/// lock, which only tests ever pay.
+pub fn reset() {
+    table().lock().unwrap().clear();
+}
+
+/// Consume one shot of an edge-triggered point. Returns the point's arg
+/// when it fires, `None` when disarmed or exhausted. Level-triggered
+/// points also fire here (without consuming).
+pub fn fire(point: &str) -> Option<u64> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut map = table().lock().unwrap();
+    let state = map.get_mut(point)?;
+    let arg = state.arg;
+    match &mut state.shots {
+        Some(0) => return None,
+        Some(n) => {
+            *n -= 1;
+            if *n == 0 {
+                map.remove(point);
+            }
+        }
+        None => {}
+    }
+    Some(arg)
+}
+
+/// Observe a level-triggered point without consuming shots. Returns the
+/// arg when armed (and not exhausted).
+pub fn peek(point: &str) -> Option<u64> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let map = table().lock().unwrap();
+    let state = map.get(point)?;
+    if state.shots == Some(0) {
+        return None;
+    }
+    Some(state.arg)
+}
+
+/// Sleep for a level point's armed duration, if armed. Convenience for
+/// the stall hooks.
+pub fn stall(point: &str) {
+    if let Some(ms) = peek(point) {
+        if ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+}
+
+/// Serialize tests that arm fault points: the table is process-wide, so
+/// concurrent arming tests would clobber each other. Lock this for the
+/// whole armed section and [`reset`] before releasing.
+pub fn serial_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GUARD: Mutex<()> = Mutex::new(());
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_points_never_fire() {
+        let _g = serial_guard();
+        reset();
+        assert_eq!(fire(BATCHER_PANIC), None);
+        assert_eq!(peek(ENGINE_STALL_MS), None);
+    }
+
+    #[test]
+    fn one_shot_point_fires_exactly_n_times() {
+        let _g = serial_guard();
+        reset();
+        arm(BATCHER_PANIC, 0); // default: 1 shot
+        assert_eq!(fire(BATCHER_PANIC), Some(0));
+        assert_eq!(fire(BATCHER_PANIC), None);
+        arm(ARTIFACT_CORRUPT, 2);
+        assert_eq!(fire(ARTIFACT_CORRUPT), Some(2));
+        assert_eq!(fire(ARTIFACT_CORRUPT), Some(2));
+        assert_eq!(fire(ARTIFACT_CORRUPT), None);
+        reset();
+    }
+
+    #[test]
+    fn level_point_peeks_without_consuming() {
+        let _g = serial_guard();
+        reset();
+        arm(ENGINE_STALL_MS, 25);
+        assert_eq!(peek(ENGINE_STALL_MS), Some(25));
+        assert_eq!(peek(ENGINE_STALL_MS), Some(25));
+        assert_eq!(fire(ENGINE_STALL_MS), Some(25), "fire observes level points too");
+        assert_eq!(peek(ENGINE_STALL_MS), Some(25));
+        reset();
+        assert_eq!(peek(ENGINE_STALL_MS), None);
+    }
+
+    #[test]
+    fn spec_syntax_parses_points_args_and_lists() {
+        let _g = serial_guard();
+        let parsed = parse_spec("batcher_panic:3, engine_stall_ms:40 ,queue_stick");
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(parsed[0].0, BATCHER_PANIC);
+        assert_eq!(parsed[0].1.shots, Some(3));
+        assert_eq!(parsed[1].0, ENGINE_STALL_MS);
+        assert_eq!(parsed[1].1.arg, 40);
+        assert_eq!(parsed[1].1.shots, None);
+        assert_eq!(parsed[2].1.arg, 0);
+        // Bare one-shot point defaults to a single shot.
+        let parsed = parse_spec("artifact_corrupt");
+        assert_eq!(parsed[0].1.shots, Some(1));
+        // Empty / whitespace specs arm nothing.
+        assert!(parse_spec(" , ,").is_empty());
+    }
+}

@@ -13,6 +13,7 @@ pub mod json;
 pub mod csv;
 pub mod cli;
 pub mod bench;
+pub mod fault;
 pub mod tables;
 pub mod proptest;
 pub mod timer;

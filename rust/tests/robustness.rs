@@ -1,0 +1,315 @@
+//! Fault-tolerance and overload tests: inject failures with the
+//! deterministic fault harness (`pgpr::util::fault`) and assert the
+//! serving stack degrades the way the robustness layer promises —
+//! batcher panics recover without losing replies, expired deadlines are
+//! dropped before the engine, observe backpressure never corrupts the
+//! update stream, and the admission gate keeps admitted latency bounded
+//! under sustained overload.
+//!
+//! Every test that arms a fault point holds `fault::serial_guard()`:
+//! the fault table is process-global and `cargo test` runs tests
+//! concurrently.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use pgpr::config::{LmaConfig, PartitionStrategy, RegistryOptions, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::LmaRegressor;
+use pgpr::registry::ModelRegistry;
+use pgpr::server::loadgen::{self, http_request, HttpConn, LoadConfig};
+use pgpr::server::Server;
+use pgpr::util::fault;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+const N_TRAIN: usize = 150;
+const M_BLOCKS: usize = 5;
+
+fn fitted_model(seed: u64) -> LmaRegressor {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(N_TRAIN, -4.0, 4.0));
+    let y: Vec<f64> = (0..N_TRAIN).map(|i| x.get(i, 0).sin()).collect();
+    let cfg = LmaConfig {
+        num_blocks: M_BLOCKS,
+        markov_order: 1,
+        support_size: 24,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    };
+    LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap()
+}
+
+fn opts(batch: usize, max_delay_us: u64) -> ServeOptions {
+    ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 3,
+        batch_size: batch,
+        max_delay_us,
+        queue_capacity: 64,
+        ..ServeOptions::default()
+    }
+}
+
+fn predict_body(q: f64) -> String {
+    Json::obj(vec![("x", Json::arr_f64(&[q]))]).to_string()
+}
+
+/// `GET /metrics?format=json` → the primary model's counter object.
+fn primary_metrics(addr: &str) -> Json {
+    let (status, body) = http_request(addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(status, 200, "metrics body: {body}");
+    Json::parse(&body).unwrap().req("primary").unwrap().clone()
+}
+
+fn counter(j: &Json, key: &str) -> usize {
+    j.req(key).ok().and_then(|v| v.as_usize()).unwrap_or(0)
+}
+
+/// An injected batcher panic must not lose a single reply: every
+/// concurrent request gets exactly one answer (200 or a deliberate
+/// 503), the supervisor respawns the loop, `/readyz` recovers, and the
+/// restart is visible on the metrics surface.
+#[test]
+fn injected_batcher_panic_recovers_without_losing_replies() {
+    let _g = fault::serial_guard();
+    fault::reset();
+
+    let server = Server::start(ServeEngine::Centralized(fitted_model(41)), &opts(4, 1000)).unwrap();
+    let addr = server.addr().to_string();
+    let (status, _) = http_request(&addr, "GET", "/readyz", None).unwrap();
+    assert_eq!(status, 200, "server must be ready before the fault");
+
+    fault::arm(fault::BATCHER_PANIC, 1);
+    let statuses: Vec<u16> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..6)
+            .map(|w| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut out = Vec::new();
+                    for i in 0..4 {
+                        let q = -2.0 + 0.3 * (w * 4 + i) as f64;
+                        // A transport error here would mean a lost reply:
+                        // the server must answer even mid-panic.
+                        let (status, _) =
+                            http_request(&addr, "POST", "/predict", Some(&predict_body(q)))
+                                .expect("every request gets an HTTP response");
+                        out.push(status);
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+
+    // Exactly-once: 24 requests, 24 answers, each either served or
+    // deliberately shed while the batcher respawned — never hung, never
+    // errored at the transport level.
+    assert_eq!(statuses.len(), 24);
+    assert!(
+        statuses.iter().all(|&s| s == 200 || s == 503),
+        "only 200 (served) or 503 (shed during restart) allowed, got {statuses:?}"
+    );
+    assert!(
+        statuses.iter().any(|&s| s == 503),
+        "the batch in flight at the panic must be failed with 503"
+    );
+
+    // The supervisor respawns with bounded backoff; within a few seconds
+    // the model must serve again and the readiness probe must flip back.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, _) = http_request(&addr, "POST", "/predict", Some(&predict_body(0.5)))
+            .expect("post-recovery request gets a response");
+        if status == 200 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "batcher did not recover within 10s");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, _) = http_request(&addr, "GET", "/readyz", None).unwrap();
+    assert_eq!(status, 200, "readiness must flip back after the respawn");
+
+    let primary = primary_metrics(&addr);
+    assert!(
+        counter(&primary, "batcher_restarts") >= 1,
+        "restart must be visible on the metrics surface"
+    );
+    fault::reset();
+    server.shutdown();
+}
+
+/// A request whose deadline expires while it waits in the queue is
+/// dropped at batch formation: the client gets a fast 503 with
+/// `Retry-After`, the shed is attributed to `deadline`, and the engine
+/// never runs a batch for it.
+#[test]
+fn expired_deadline_requests_never_reach_the_engine() {
+    let _g = fault::serial_guard();
+    fault::reset();
+
+    let server = Server::start(ServeEngine::Centralized(fitted_model(42)), &opts(4, 500)).unwrap();
+    let addr = server.addr().to_string();
+    // Warm request: proves the path works and seeds the latency counters.
+    let (status, _) = http_request(&addr, "POST", "/predict", Some(&predict_body(0.1))).unwrap();
+    assert_eq!(status, 200);
+    let batches_before = counter(&primary_metrics(&addr), "batches");
+
+    // Stick the queue 20ms per dequeue; a 5ms budget cannot survive it.
+    fault::arm(fault::QUEUE_STICK, 20);
+    let mut conn = HttpConn::connect(&addr).unwrap();
+    let body = predict_body(0.2);
+    let (status, resp, _) = conn
+        .request_with_headers("POST", "/predict", Some(&body), true, &[("X-Deadline-Ms", "5")])
+        .unwrap();
+    assert_eq!(status, 503, "expired deadline must shed, body: {resp}");
+    assert!(conn.retry_after().is_some(), "sheds must carry Retry-After");
+    fault::reset();
+
+    let primary = primary_metrics(&addr);
+    assert_eq!(
+        counter(&primary, "batches"),
+        batches_before,
+        "an expired request must never become an engine batch"
+    );
+    let shed = primary.req("shed").unwrap();
+    assert!(
+        counter(shed, "deadline") >= 1,
+        "the shed must be attributed to the deadline reason"
+    );
+
+    // The stream is healthy afterwards.
+    let (status, _) = http_request(&addr, "POST", "/predict", Some(&predict_body(0.3))).unwrap();
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+fn observe_body(xs: &[f64], mode: Option<&str>) -> String {
+    let rows = Json::Arr(xs.iter().map(|&v| Json::arr_f64(&[v])).collect());
+    let ys = Json::arr_f64(&xs.iter().map(|&v| v.sin()).collect::<Vec<f64>>());
+    let mut fields = vec![("rows", rows), ("y", ys)];
+    if let Some(flag) = mode {
+        fields.push((flag, Json::Bool(true)));
+    }
+    Json::obj(fields).to_string()
+}
+
+/// Observe backpressure (the buffer's hard row cap) refuses the whole
+/// request with 429 + `Retry-After` and leaves the update stream
+/// uncorrupted: rejected rows never partially enter, and a later flush
+/// publishes exactly the rows that were accepted.
+#[test]
+fn observe_backpressure_returns_429_without_corrupting_the_stream() {
+    let sopts = opts(4, 500);
+    let reg_opts = RegistryOptions {
+        observe_flush_rows: 1000, // buffer, don't auto-publish
+        observe_max_rows: 8,
+        ..RegistryOptions::default()
+    };
+    let registry = Arc::new(ModelRegistry::new(reg_opts, &sopts));
+    registry
+        .load("default", Arc::new(ServeEngine::Centralized(fitted_model(43))))
+        .unwrap();
+    let server = Server::start_with_registry(registry, &sopts).unwrap();
+    let addr = server.addr().to_string();
+
+    let first: Vec<f64> = (0..6).map(|i| -3.0 + 0.2 * i as f64).collect();
+    let body = observe_body(&first, Some("buffer"));
+    let (status, resp) =
+        http_request(&addr, "POST", "/models/default/observe", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(j.req("buffered_rows").unwrap().as_usize(), Some(6));
+
+    // 6 more rows would put the buffer at 12 > cap 8: refused whole.
+    let over: Vec<f64> = (0..6).map(|i| 1.0 + 0.2 * i as f64).collect();
+    let body = observe_body(&over, Some("buffer"));
+    let mut conn = HttpConn::connect(&addr).unwrap();
+    let (status, resp, _) =
+        conn.request_with("POST", "/models/default/observe", Some(&body), true).unwrap();
+    assert_eq!(status, 429, "buffer overflow must backpressure, body: {resp}");
+    assert_eq!(conn.retry_after(), Some(1), "backpressure tells the producer when to retry");
+
+    // Two rows still fit (6 + 2 = 8 ≤ cap); flushing publishes exactly
+    // the accepted rows — none of the refused batch leaked in.
+    let tail = [2.5, 2.7];
+    let body = observe_body(&tail, Some("flush"));
+    let (status, resp) =
+        http_request(&addr, "POST", "/models/default/observe", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+    let j = Json::parse(&resp).unwrap();
+    assert_eq!(
+        j.req("train_rows").unwrap().as_usize(),
+        Some(N_TRAIN + 8),
+        "published rows must be exactly the accepted ones"
+    );
+
+    let (status, _) = http_request(&addr, "POST", "/predict", Some(&predict_body(0.4))).unwrap();
+    assert_eq!(status, 200, "predict stream must survive the backpressure episode");
+    server.shutdown();
+}
+
+/// Under sustained ~2× overload (engine stalled 25ms per batch via the
+/// fault harness, open-loop arrivals far above the resulting capacity)
+/// the admission SLO sheds the backlog fast while the admitted requests
+/// keep a bounded latency — the gate trades availability for latency
+/// explicitly instead of letting the queue grow without bound.
+#[test]
+fn slo_shed_keeps_admitted_latency_bounded_under_overload() {
+    let _g = fault::serial_guard();
+    fault::reset();
+
+    let sopts = ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        // Keep-alive pins one server worker per client connection.
+        workers: 8,
+        // One row per batch: every queued request adds a full stalled
+        // batch to the drain estimate, so depth drives the gate.
+        batch_size: 1,
+        max_delay_us: 500,
+        queue_capacity: 64,
+        slo_ms: 60,
+        ..ServeOptions::default()
+    };
+    let server = Server::start(ServeEngine::Centralized(fitted_model(44)), &sopts).unwrap();
+    let addr = server.addr().to_string();
+
+    fault::arm(fault::ENGINE_STALL_MS, 25);
+    let report = loadgen::run(&LoadConfig {
+        addr: addr.clone(),
+        concurrency: 6,
+        requests: 120,
+        rows_per_request: 1,
+        dim: 1,
+        seed: 9,
+        keep_alive: true,
+        models: Vec::new(),
+        // ~40 rps capacity at 25ms per single-row batch; offer much more.
+        rate_rps: 300.0,
+    })
+    .unwrap();
+    fault::reset();
+
+    assert!(report.shed > 0, "2x overload against a 60ms SLO must shed: {report:?}");
+    assert!(report.ok > 0, "admitted traffic must still be answered: {report:?}");
+    assert!(report.goodput_rows_per_s > 0.0, "goodput must stay positive: {report:?}");
+    // Admitted p99 stays bounded: the gate refuses work instead of
+    // queueing it into seconds of delay (25ms service + short queue).
+    assert!(report.p99_s < 1.0, "admitted p99 {:.3}s not bounded", report.p99_s);
+    // Sheds are fast-fail decisions, not queue traversals.
+    assert!(report.shed_p99_s < 0.5, "shed p99 {:.3}s too slow", report.shed_p99_s);
+
+    let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    assert!(
+        text.contains("pgpr_requests_shed_total"),
+        "shed counters must be on the Prometheus surface"
+    );
+    let metrics = server.shutdown();
+    assert!(metrics.shed_total() >= report.shed as u64, "server-side shed accounting");
+}
