@@ -1,52 +1,34 @@
 //! Predict hot-path benchmark: single-point and batch-64 latency of the
 //! context-backed fast path vs the `PGPR_PREDICT_LEGACY`-style per-call
 //! recompute path, plus the retained pre-context dense pipeline — with a
-//! per-phase µs profile and a counting allocator that verifies the
-//! steady-state serve path performs no dense N×|U| allocation.
+//! per-phase µs profile and the shared `obs::alloc` tracking allocator
+//! verifying the steady-state serve path performs no dense N×|U|
+//! allocation (scoped under the `predict` tag, so unrelated traffic
+//! can't mask or trip the bound).
 //!
 //! Writes the machine-readable record `BENCH_predict_hotpath.json`
 //! tracked across PRs. `PGPR_BENCH_FAST=1` shrinks the problem for the
 //! CI smoke run; the full run uses the acceptance operating point
 //! (M=32, B=2, |S|=64, N=4096).
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicUsize, Ordering};
-
 use pgpr::config::{LmaConfig, PartitionStrategy};
 use pgpr::experiments::common::{quick_hypers, Workload};
 use pgpr::linalg::matrix::Mat;
 use pgpr::lma::context::PredictScratch;
 use pgpr::lma::LmaRegressor;
+use pgpr::obs::alloc;
 use pgpr::util::bench::{write_json_record, BenchSuite};
 use pgpr::util::json::Json;
 
-/// System allocator wrapper counting allocations, total bytes and the
-/// largest single request — enough to prove the fast path never asks for
-/// an N×|U| dense buffer in steady state.
-struct CountingAlloc;
-
-static ALLOC_COUNT: AtomicUsize = AtomicUsize::new(0);
-static ALLOC_BYTES: AtomicUsize = AtomicUsize::new(0);
-static ALLOC_MAX: AtomicUsize = AtomicUsize::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        ALLOC_BYTES.fetch_add(layout.size(), Ordering::Relaxed);
-        ALLOC_MAX.fetch_max(layout.size(), Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-}
-
+// The same tracking allocator the serve binary installs: global counts
+// plus per-tag attribution (`alloc::scope`), replacing the bench-local
+// counting wrapper this file used to carry.
 #[global_allocator]
-static ALLOC: CountingAlloc = CountingAlloc;
+static ALLOC: alloc::TrackingAlloc = alloc::TrackingAlloc;
 
-fn alloc_snapshot() -> (usize, usize) {
-    (ALLOC_COUNT.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+fn alloc_snapshot() -> (u64, u64) {
+    let s = alloc::snapshot();
+    (s.alloc_count, s.alloc_bytes)
 }
 
 fn phases_to_json(prof: &pgpr::util::timer::PhaseProfiler) -> Json {
@@ -117,20 +99,25 @@ fn main() {
     let (_, prof_legacy) = model.predict_mode(&single, false, true).expect("profile");
     let (_, prof_dense) = model.predict_dense(&single, false).expect("profile");
 
-    // Steady-state allocation profile: warm a scratch, then measure.
+    // Steady-state allocation profile: warm a scratch, then measure a
+    // window tagged `predict` — the per-tag max-single watermark bounds
+    // only allocations made by the measured loop.
     let mut scratch = PredictScratch::new();
     for _ in 0..3 {
         let _ = model.predict_with_scratch(&single, &mut scratch).expect("warm");
     }
-    ALLOC_MAX.store(0, Ordering::Relaxed);
+    alloc::reset_max_single();
     let (c0, b0) = alloc_snapshot();
     let steady_iters = 20usize;
-    for _ in 0..steady_iters {
-        let p = model.predict_with_scratch(&single, &mut scratch).expect("steady");
-        std::hint::black_box(p.mean[0]);
+    {
+        let _tag = alloc::scope("predict");
+        for _ in 0..steady_iters {
+            let p = model.predict_with_scratch(&single, &mut scratch).expect("steady");
+            std::hint::black_box(p.mean[0]);
+        }
     }
     let (c1, b1) = alloc_snapshot();
-    let max_single_alloc = ALLOC_MAX.load(Ordering::Relaxed);
+    let max_single_alloc = alloc::tag_stats("predict").max_single as usize;
     let dense_nxu_bytes = n * 8; // the N×|U| buffer the old sweep allocated (u = 1)
     let no_dense_alloc = max_single_alloc < dense_nxu_bytes;
     println!(

@@ -16,11 +16,22 @@
 //! capacity. The record captures shed-rate, goodput and the shed
 //! fast-fail tail; the bench asserts the gate both sheds (> 0) and keeps
 //! serving admitted traffic (goodput > 0).
+//!
+//! Two resource-observability guards complete the record: a
+//! `prof_overhead` section (profiler sampler + tracking allocator on vs
+//! off, asserted < 1% p50 + 100µs floor) and a `cpu_overload` section
+//! (fault-pinned 100% CPU saturation must shed with reason `cpu`, the
+//! same 503 + Retry-After fast-fail the SLO path produces).
 
 use pgpr::config::ServeOptions;
 use pgpr::coordinator::cli_run::{run_loadtest, LoadtestCmd};
 use pgpr::util::bench::write_json_record;
 use pgpr::util::json::Json;
+
+// Install the tracking allocator so the prof-on arms measure the real
+// production configuration (serve binaries route through it too).
+#[global_allocator]
+static ALLOC: pgpr::obs::alloc::TrackingAlloc = pgpr::obs::alloc::TrackingAlloc;
 
 fn base_cmd(fast: bool) -> LoadtestCmd {
     LoadtestCmd {
@@ -74,6 +85,67 @@ fn overhead_arm(fast: bool, trace: bool, repeats: usize) -> f64 {
         best = best.min(p50_of(&record));
     }
     best
+}
+
+/// Best-of-N p50 with the resource profiler (sampler thread + process
+/// gauges) on vs off. Tracing stays on — the production default — so
+/// this isolates the profiler's marginal hot-path cost.
+fn prof_arm(fast: bool, prof: bool, repeats: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for rep in 0..repeats {
+        let mut cmd = base_cmd(fast);
+        cmd.mode = "keepalive".into();
+        cmd.rate = 0.0;
+        cmd.seed = 31 + rep as u64;
+        cmd.opts.prof = prof;
+        let record = run_loadtest(&cmd).expect("prof arm run");
+        best = best.min(p50_of(&record));
+    }
+    best
+}
+
+/// CPU-saturation shed probe: the fault harness pins the smoothed CPU
+/// saturation signal at 100% while every engine batch stalls 30ms. With
+/// the SLO gate off (`slo_ms = 0`) and single-row batches, any backlog
+/// (depth > batch) makes the admission gate shed for reason `cpu` — the
+/// profiler-driven secondary overload predicate, answered with the same
+/// 503 + Retry-After fast-fail as the SLO path.
+fn cpu_overload_section(fast: bool, capacity_rps: f64) -> Json {
+    pgpr::util::fault::arm(pgpr::util::fault::CPU_SATURATION_PCT, 100);
+    pgpr::util::fault::arm(pgpr::util::fault::ENGINE_STALL_MS, 30);
+    let mut cmd = base_cmd(fast);
+    cmd.mode = "keepalive".into();
+    cmd.requests = if fast { 120 } else { 600 };
+    cmd.rate = (capacity_rps * 2.0).clamp(50.0, 2000.0);
+    cmd.opts.batch_size = 1;
+    cmd.opts.slo_ms = 0;
+    let record = run_loadtest(&cmd).expect("cpu overload run");
+    pgpr::util::fault::reset();
+    let open = record.req("client_open").expect("open-loop pass in cpu overload record").clone();
+    let client_sheds = open.req("shed").ok().and_then(|v| v.as_usize()).unwrap_or(0);
+    let cpu_sheds = record
+        .req("server")
+        .ok()
+        .and_then(|s| s.get("shed"))
+        .and_then(|s| s.get("cpu"))
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    println!(
+        "cpu overload: offered {:.0} rps, server cpu sheds {cpu_sheds}, client sheds {client_sheds}",
+        cmd.rate
+    );
+    assert!(
+        cpu_sheds > 0,
+        "fault-pinned 100% CPU saturation over a backlog must shed with reason `cpu`"
+    );
+    assert!(client_sheds > 0, "cpu sheds must reach the client as 503 + Retry-After");
+    Json::obj(vec![
+        ("offered_rps", Json::Num(cmd.rate)),
+        ("cpu_saturation_pct", Json::Num(100.0)),
+        ("engine_stall_ms", Json::Num(30.0)),
+        ("server_cpu_sheds", Json::Num(cpu_sheds as f64)),
+        ("client_open", open),
+    ])
 }
 
 /// Overload probe: with every engine batch stalled 30ms (fault harness)
@@ -149,6 +221,27 @@ fn main() {
         );
     }
 
+    let prof_off = prof_arm(fast, false, repeats);
+    let prof_on = prof_arm(fast, true, repeats);
+    let prof_overhead = if prof_off > 0.0 { prof_on / prof_off - 1.0 } else { 0.0 };
+    println!(
+        "prof overhead: p50 on {:.6}s vs off {:.6}s ({:+.2}%)",
+        prof_on,
+        prof_off,
+        prof_overhead * 100.0
+    );
+    if let Json::Obj(map) = &mut record {
+        map.insert(
+            "prof_overhead".into(),
+            Json::obj(vec![
+                ("repeats", Json::Num(repeats as f64)),
+                ("p50_on_s", Json::Num(prof_on)),
+                ("p50_off_s", Json::Num(prof_off)),
+                ("overhead_frac", Json::Num(prof_overhead)),
+            ]),
+        );
+    }
+
     // Overload behavior: capacity comes from the clean keep-alive
     // closed-loop headline of the main record.
     let capacity_rps = record
@@ -160,6 +253,10 @@ fn main() {
     if let Json::Obj(map) = &mut record {
         map.insert("overload".into(), overload);
     }
+    let cpu_overload = cpu_overload_section(fast, capacity_rps);
+    if let Json::Obj(map) = &mut record {
+        map.insert("cpu_overload".into(), cpu_overload);
+    }
     write_json_record(&cmd.out, &record).expect("write bench record");
     println!("wrote {}", cmd.out);
 
@@ -168,5 +265,12 @@ fn main() {
     assert!(
         p50_on <= p50_off * 1.05 + 100e-6,
         "stage tracing p50 overhead too high: on {p50_on:.6}s vs off {p50_off:.6}s"
+    );
+    // The resource-profiler guard is tighter: a 1s-cadence sampler plus
+    // relaxed-atomic allocator bookkeeping must stay under 1% of p50
+    // (same 100µs floor against scheduler noise on µs-scale runs).
+    assert!(
+        prof_on <= prof_off * 1.01 + 100e-6,
+        "resource profiler p50 overhead too high: on {prof_on:.6}s vs off {prof_off:.6}s"
     );
 }

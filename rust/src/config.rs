@@ -175,6 +175,15 @@ pub struct ServeOptions {
     /// batch-formation time (shed in microseconds, never computed).
     /// 0 means requests without the header have no deadline.
     pub default_deadline_ms: u64,
+    /// Continuous resource profiling: the background sampler thread,
+    /// the `/debug/prof` endpoint, and the process/thread gauges on
+    /// `/metrics`. On by default; `--no-prof` turns the layer off.
+    pub prof: bool,
+    /// Sampler period in milliseconds.
+    pub prof_interval_ms: u64,
+    /// Capacity of the profile sample ring (`/debug/prof` serves the
+    /// last N snapshots).
+    pub prof_ring: usize,
 }
 
 impl Default for ServeOptions {
@@ -194,6 +203,9 @@ impl Default for ServeOptions {
             slow_request_us: 0,
             slo_ms: 0,
             default_deadline_ms: 0,
+            prof: true,
+            prof_interval_ms: 1000,
+            prof_ring: 256,
         }
     }
 }
@@ -219,6 +231,13 @@ impl ServeOptions {
                 "serve: tracing needs trace_ring ≥ 1 (or disable tracing)".into(),
             ));
         }
+        if self.prof && (self.prof_ring == 0 || self.prof_interval_ms == 0) {
+            return Err(PgprError::Config(
+                "serve: profiling needs prof_ring ≥ 1 and prof_interval_ms ≥ 1 \
+                 (or disable profiling)"
+                    .into(),
+            ));
+        }
         Ok(())
     }
 
@@ -238,6 +257,9 @@ impl ServeOptions {
             ("slow_request_us", Json::Num(self.slow_request_us as f64)),
             ("slo_ms", Json::Num(self.slo_ms as f64)),
             ("default_deadline_ms", Json::Num(self.default_deadline_ms as f64)),
+            ("prof", Json::Bool(self.prof)),
+            ("prof_interval_ms", Json::Num(self.prof_interval_ms as f64)),
+            ("prof_ring", Json::Num(self.prof_ring as f64)),
         ])
     }
 
@@ -287,6 +309,12 @@ impl ServeOptions {
                 .get("default_deadline_ms")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(d.default_deadline_ms as usize) as u64,
+            prof: j.get("prof").and_then(|v| v.as_bool()).unwrap_or(d.prof),
+            prof_interval_ms: j
+                .get("prof_interval_ms")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.prof_interval_ms as usize) as u64,
+            prof_ring: j.get("prof_ring").and_then(|v| v.as_usize()).unwrap_or(d.prof_ring),
         })
     }
 }
@@ -639,6 +667,9 @@ mod tests {
             slow_request_us: 250_000,
             slo_ms: 40,
             default_deadline_ms: 120,
+            prof: false,
+            prof_interval_ms: 100,
+            prof_ring: 16,
         };
         assert!(o.validate().is_ok());
         let parsed = Json::parse(&o.to_json().to_string()).unwrap();
@@ -655,6 +686,14 @@ mod tests {
         // trace_ring 0 is only legal when tracing is off.
         assert!(ServeOptions { trace_ring: 0, ..ServeOptions::default() }.validate().is_err());
         assert!(ServeOptions { trace: false, trace_ring: 0, ..ServeOptions::default() }
+            .validate()
+            .is_ok());
+        // Same shape for the profiler: ring/interval 0 need prof off.
+        assert!(ServeOptions { prof_ring: 0, ..ServeOptions::default() }.validate().is_err());
+        assert!(ServeOptions { prof_interval_ms: 0, ..ServeOptions::default() }
+            .validate()
+            .is_err());
+        assert!(ServeOptions { prof: false, prof_ring: 0, ..ServeOptions::default() }
             .validate()
             .is_ok());
     }

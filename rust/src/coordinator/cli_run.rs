@@ -646,7 +646,8 @@ fn serve_http_run(c: &ServeCmd, server: Server, name: &str) -> Result<()> {
     );
     eprintln!(
         "endpoints: POST /predict[?trace=1]  GET/PUT/DELETE /models[/name]  GET /healthz  \
-         GET /readyz  GET /metrics[?format=json]  GET /debug/trace  GET /debug/quality — `quit` on stdin stops"
+         GET /readyz  GET /metrics[?format=json]  GET /debug/trace  GET /debug/quality  \
+         GET /debug/prof — `quit` on stdin stops"
     );
     // Machine-readable bound address on stdout so scripts can pick up
     // the ephemeral port from `--listen 127.0.0.1:0`.
@@ -1025,6 +1026,99 @@ pub fn cmd_bench_info() -> Result<()> {
     Ok(())
 }
 
+/// `pgpr top` parameters: poll a live server's resource profile.
+#[derive(Clone, Debug)]
+pub struct TopCmd {
+    /// Target `host:port` of a running `pgpr serve --listen`.
+    pub addr: String,
+    /// Poll cadence in milliseconds.
+    pub interval_ms: u64,
+    /// Number of polls; 0 = until interrupted.
+    pub iters: usize,
+}
+
+/// `pgpr top` — poll `GET /metrics?format=json` on a running server and
+/// print a process/thread resource table: RSS, live/peak heap, fd and
+/// connection counts, and per-thread CPU. Utilization needs two samples
+/// (it is the CPU delta over the wall-clock delta), so the first frame
+/// prints cumulative seconds only.
+pub fn cmd_top(c: &TopCmd) -> Result<()> {
+    if c.addr.is_empty() {
+        return Err(PgprError::Config("top: --addr host:port is required".into()));
+    }
+    // Previous frame: (poll instant, per-thread cpu seconds, process cpu).
+    let mut prev: Option<(std::time::Instant, std::collections::BTreeMap<String, f64>, f64)> =
+        None;
+    let mut iter = 0usize;
+    loop {
+        let (status, body) =
+            loadgen::http_request(&c.addr, "GET", "/metrics?format=json", None)?;
+        if status != 200 {
+            return Err(PgprError::Data(format!("GET /metrics returned {status}: {body}")));
+        }
+        let now = std::time::Instant::now();
+        let json = Json::parse(&body)?;
+        let Some(process) = json.get("process") else {
+            return Err(PgprError::Data(
+                "no `process` object in /metrics?format=json — is the server running \
+                 with --no-prof?"
+                    .into(),
+            ));
+        };
+        let num = |k: &str| process.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        let cpu_total = num("cpu_seconds");
+        let threads: std::collections::BTreeMap<String, f64> = process
+            .get("threads")
+            .and_then(|t| t.as_obj())
+            .map(|m| m.iter().map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(0.0))).collect())
+            .unwrap_or_default();
+        let wall = prev.as_ref().map(|(t, _, _)| now.duration_since(*t).as_secs_f64());
+        let util = match (&prev, wall) {
+            (Some((_, _, prev_cpu)), Some(w)) if w > 0.0 => {
+                format!("  util {:.0}%", (cpu_total - prev_cpu).max(0.0) / w * 100.0)
+            }
+            _ => String::new(),
+        };
+        println!(
+            "{}  rss {:.1} MiB  heap {:.1}/{:.1} MiB  fds {}  conns {}  cpu {cpu_total:.1}s{util}",
+            c.addr,
+            num("rss_bytes") / (1024.0 * 1024.0),
+            num("heap_live_bytes") / (1024.0 * 1024.0),
+            num("heap_peak_bytes") / (1024.0 * 1024.0),
+            num("open_fds") as u64,
+            num("open_connections") as u64,
+        );
+        let mut rows: Vec<(String, f64, Option<f64>)> = threads
+            .iter()
+            .map(|(name, &cpu)| {
+                let util = match (&prev, wall) {
+                    (Some((_, old, _)), Some(w)) if w > 0.0 => {
+                        Some((cpu - old.get(name).copied().unwrap_or(0.0)).max(0.0) / w)
+                    }
+                    _ => None,
+                };
+                (name.clone(), cpu, util)
+            })
+            .collect();
+        // Busiest first: current utilization, then cumulative CPU.
+        rows.sort_by(|a, b| {
+            b.2.unwrap_or(0.0).total_cmp(&a.2.unwrap_or(0.0)).then(b.1.total_cmp(&a.1))
+        });
+        for (name, cpu, util) in rows {
+            match util {
+                Some(u) => println!("  {name:<20} {cpu:>9.2}s  {:>5.1}%", u * 100.0),
+                None => println!("  {name:<20} {cpu:>9.2}s"),
+            }
+        }
+        iter += 1;
+        if c.iters != 0 && iter >= c.iters {
+            return Ok(());
+        }
+        prev = Some((now, threads, cpu_total));
+        std::thread::sleep(Duration::from_millis(c.interval_ms.max(1)));
+    }
+}
+
 /// Top-level dispatch used by main().
 pub fn dispatch() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -1225,6 +1319,13 @@ pub fn dispatch() -> Result<()> {
                     "log a structured slow_request event for requests at or above this \
                      latency in microseconds (0 = off)",
                 )
+                .switch(
+                    "no-prof",
+                    "disable the continuous resource profiler (sampler thread, \
+                     /debug/prof, process gauges, per-thread CPU counters)",
+                )
+                .flag("prof-interval-ms", "1000", "resource sampler cadence in milliseconds")
+                .flag("prof-ring", "256", "profiler sample ring capacity (last N samples)")
                 .parse_from(rest)?;
             let opts = ServeOptions {
                 listen: a.get("listen"),
@@ -1241,6 +1342,9 @@ pub fn dispatch() -> Result<()> {
                 slow_request_us: a.get_usize("slow-request-us") as u64,
                 slo_ms: a.get_usize("slo-ms") as u64,
                 default_deadline_ms: a.get_usize("default-deadline-ms") as u64,
+                prof: !a.get_bool("no-prof"),
+                prof_interval_ms: a.get_usize("prof-interval-ms") as u64,
+                prof_ring: a.get_usize("prof-ring"),
             };
             cmd_serve(&ServeCmd {
                 dataset: a.get("dataset"),
@@ -1322,6 +1426,7 @@ pub fn dispatch() -> Result<()> {
                 .flag("rows", "1", "rows per request")
                 .flag("out", "BENCH_serve_latency.json", "output record path")
                 .switch("no-trace", "self-mode: serve with stage tracing disabled")
+                .switch("no-prof", "self-mode: serve with the resource profiler disabled")
                 .parse_from(rest)?;
             cmd_loadtest(&LoadtestCmd {
                 addr: a.get("addr"),
@@ -1337,6 +1442,7 @@ pub fn dispatch() -> Result<()> {
                     queue_capacity: a.get_usize("queue"),
                     trace: !a.get_bool("no-trace"),
                     slo_ms: a.get_usize("slo-ms") as u64,
+                    prof: !a.get_bool("no-prof"),
                     ..ServeOptions::default()
                 },
                 concurrency: a.get_usize("concurrency"),
@@ -1347,6 +1453,18 @@ pub fn dispatch() -> Result<()> {
                 mode: a.get("mode"),
                 models: a.get_multi("model"),
                 artifacts: a.get_multi("artifact"),
+            })
+        }
+        "top" => {
+            let a = Args::new("pgpr top", "poll a live server's resource profile")
+                .required("addr", "target host:port of a running `pgpr serve --listen`")
+                .flag("interval-ms", "1000", "poll cadence in milliseconds")
+                .flag("iters", "0", "number of polls (0 = until interrupted)")
+                .parse_from(rest)?;
+            cmd_top(&TopCmd {
+                addr: a.get("addr"),
+                interval_ms: a.get_usize("interval-ms") as u64,
+                iters: a.get_usize("iters"),
             })
         }
         "bench-info" => cmd_bench_info(),
@@ -1361,10 +1479,12 @@ pub fn dispatch() -> Result<()> {
                  pgpr serve --dataset aimpeak --train 1000 --batch 16 [--backend centralized|sim|threads[:N]]\n  \
                  \u{20}          [--model name=model.pgpr[,slo=MS][,weight=W] ...] [--listen 127.0.0.1:8080 --workers 4 --queue 1024]\n  \
                  \u{20}          [--slo-ms 0 --default-deadline-ms 0 --observe-max-rows 1048576] (overload admission control)\n  \
+                 \u{20}          [--no-prof --prof-interval-ms 1000 --prof-ring 256] (resource profiler)\n  \
                  pgpr observe --addr HOST:PORT --csv data.csv [--model default --batch-rows 64 --buffer --limit 0]\n  \
                  pgpr loadtest [--addr HOST:PORT | --dataset aimpeak --train 600 --backend threads:0]\n  \
                  \u{20}          [--model NAME ...] [--artifact name=model.pgpr ...] [--mode both|keepalive|close]\n  \
                  \u{20}          [--rate 0] [--concurrency 8 --requests 200 --rows 1 --out BENCH_serve_latency.json]\n  \
+                 pgpr top --addr HOST:PORT [--interval-ms 1000 --iters 0]\n  \
                  pgpr bench-info\n"
             );
             Ok(())

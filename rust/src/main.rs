@@ -5,6 +5,12 @@
 //! the closed-loop load generator (`loadtest`). The heavy lifting lives
 //! in the `pgpr` library crate; this binary is a thin dispatcher.
 
+/// Route every heap allocation through the tracking wrapper so
+/// `/metrics` heap gauges and `/debug/prof` per-tag breakdowns reflect
+/// real allocator traffic (relaxed atomic counters; see `obs::alloc`).
+#[global_allocator]
+static ALLOC: pgpr::obs::alloc::TrackingAlloc = pgpr::obs::alloc::TrackingAlloc;
+
 fn main() {
     if let Err(e) = pgpr::coordinator::cli_run::dispatch() {
         eprintln!("error: {e}");

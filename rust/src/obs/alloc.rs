@@ -1,0 +1,285 @@
+//! Tracking global allocator with per-subsystem tagged scopes.
+//!
+//! [`TrackingAlloc`] wraps [`std::alloc::System`] and keeps process-wide
+//! heap counters (live bytes, peak, cumulative alloc/dealloc counts,
+//! largest single allocation) in relaxed atomics — a handful of
+//! uncontended RMWs per allocation, cheap enough to leave on in
+//! production binaries. On top of that, a thread-local *tag* attributes
+//! every allocation (and deallocation) to the subsystem currently on the
+//! stack: wrap a region in `let _g = alloc::scope("predict");` and the
+//! per-tag net/throughput/max-single counters name the subsystem when an
+//! O(N) copy sneaks back into a hot path.
+//!
+//! Because `#[global_allocator]` binds per *binary*, the library only
+//! exports the wrapper; `rust/src/main.rs`, the benches, and the
+//! `obs_prof` integration test each install it themselves. Binaries that
+//! don't install it still link this module — every counter just stays at
+//! zero and [`tracker_installed`] reports `false`, which is how the
+//! `/metrics` heap gauges know to render 0 rather than lie.
+//!
+//! Deallocations are attributed to the tag active on the *freeing*
+//! thread, not the one that allocated — crossing a scope boundary with a
+//! live buffer therefore skews two tags' nets by the buffer size while
+//! leaving the global counters exact. Scopes that fully contain an
+//! allocate→drop cycle balance to zero, which is what the integration
+//! test asserts for a fit+predict round.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering::Relaxed};
+
+/// Known scope tags. Index 0 is the default (no scope active); unknown
+/// tag names fold into the trailing `"other"` bucket so the allocator
+/// never has to allocate to account for an allocation.
+pub const TAGS: [&str; 8] =
+    ["untagged", "fit", "predict", "absorb", "serialize", "observe", "serve", "other"];
+const TAG_COUNT: usize = TAGS.len();
+const OTHER: usize = TAG_COUNT - 1;
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static LIVE_BYTES: AtomicI64 = AtomicI64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static DEALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static MAX_SINGLE: AtomicU64 = AtomicU64::new(0);
+
+static TAG_NET: [AtomicI64; TAG_COUNT] = [const { AtomicI64::new(0) }; TAG_COUNT];
+static TAG_ALLOC_BYTES: [AtomicU64; TAG_COUNT] = [const { AtomicU64::new(0) }; TAG_COUNT];
+static TAG_ALLOCS: [AtomicU64; TAG_COUNT] = [const { AtomicU64::new(0) }; TAG_COUNT];
+static TAG_MAX_SINGLE: [AtomicU64; TAG_COUNT] = [const { AtomicU64::new(0) }; TAG_COUNT];
+
+thread_local! {
+    static CUR_TAG: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Resolve a tag name to its fixed slot (unknown → `"other"`).
+fn tag_index(tag: &str) -> usize {
+    TAGS.iter().position(|t| *t == tag).unwrap_or(OTHER)
+}
+
+/// Tag active on the calling thread. `try_with` keeps this safe during
+/// thread-local teardown (allocations after TLS destruction fold into
+/// `untagged`).
+#[inline]
+fn current_tag() -> usize {
+    CUR_TAG.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Enter a tagged allocation scope on this thread; the previous tag is
+/// restored when the guard drops, so scopes nest.
+pub fn scope(tag: &str) -> ScopeGuard {
+    let idx = tag_index(tag);
+    let prev = CUR_TAG.try_with(|c| c.replace(idx)).unwrap_or(0);
+    ScopeGuard { prev }
+}
+
+/// RAII guard returned by [`scope`].
+pub struct ScopeGuard {
+    prev: usize,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        let _ = CUR_TAG.try_with(|c| c.set(self.prev));
+    }
+}
+
+#[inline]
+fn note_alloc(size: usize) {
+    let sz = size as u64;
+    ALLOC_COUNT.fetch_add(1, Relaxed);
+    ALLOC_BYTES.fetch_add(sz, Relaxed);
+    MAX_SINGLE.fetch_max(sz, Relaxed);
+    let live = LIVE_BYTES.fetch_add(size as i64, Relaxed) + size as i64;
+    if live > 0 {
+        PEAK_BYTES.fetch_max(live as u64, Relaxed);
+    }
+    let tag = current_tag();
+    TAG_NET[tag].fetch_add(size as i64, Relaxed);
+    TAG_ALLOC_BYTES[tag].fetch_add(sz, Relaxed);
+    TAG_ALLOCS[tag].fetch_add(1, Relaxed);
+    TAG_MAX_SINGLE[tag].fetch_max(sz, Relaxed);
+}
+
+#[inline]
+fn note_dealloc(size: usize) {
+    DEALLOC_COUNT.fetch_add(1, Relaxed);
+    LIVE_BYTES.fetch_sub(size as i64, Relaxed);
+    TAG_NET[current_tag()].fetch_sub(size as i64, Relaxed);
+}
+
+/// The wrapper allocator. Install per binary with
+/// `#[global_allocator] static A: pgpr::obs::alloc::TrackingAlloc = pgpr::obs::alloc::TrackingAlloc;`
+pub struct TrackingAlloc;
+
+// SAFETY: defers every allocation verbatim to `System`; the bookkeeping
+// touches only atomics and a thread-local `Cell`, neither of which can
+// allocate or re-enter the allocator.
+unsafe impl GlobalAlloc for TrackingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if !INSTALLED.load(Relaxed) {
+            INSTALLED.store(true, Relaxed);
+        }
+        let p = unsafe { System.alloc(layout) };
+        if !p.is_null() {
+            note_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if !INSTALLED.load(Relaxed) {
+            INSTALLED.store(true, Relaxed);
+        }
+        let p = unsafe { System.alloc_zeroed(layout) };
+        if !p.is_null() {
+            note_alloc(layout.size());
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) };
+        note_dealloc(layout.size());
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
+        if !p.is_null() {
+            note_dealloc(layout.size());
+            note_alloc(new_size);
+        }
+        p
+    }
+}
+
+/// Whether a [`TrackingAlloc`] is the active global allocator in this
+/// binary (set by its first allocation, i.e. before `main`).
+pub fn tracker_installed() -> bool {
+    INSTALLED.load(Relaxed)
+}
+
+/// Point-in-time view of the process-wide heap counters.
+#[derive(Clone, Copy, Debug)]
+pub struct AllocSnapshot {
+    /// Bytes currently allocated and not yet freed.
+    pub live_bytes: i64,
+    /// High-water mark of `live_bytes`.
+    pub peak_bytes: u64,
+    /// Cumulative allocation calls (alloc + alloc_zeroed + realloc grows).
+    pub alloc_count: u64,
+    /// Cumulative deallocation calls.
+    pub dealloc_count: u64,
+    /// Cumulative bytes requested across all allocations.
+    pub alloc_bytes: u64,
+    /// Largest single allocation since process start or [`reset_max_single`].
+    pub max_single: u64,
+}
+
+/// Read the global counters (all relaxed; a consistent-enough snapshot
+/// for observability, not a linearizable one).
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        live_bytes: LIVE_BYTES.load(Relaxed),
+        peak_bytes: PEAK_BYTES.load(Relaxed),
+        alloc_count: ALLOC_COUNT.load(Relaxed),
+        dealloc_count: DEALLOC_COUNT.load(Relaxed),
+        alloc_bytes: ALLOC_BYTES.load(Relaxed),
+        max_single: MAX_SINGLE.load(Relaxed),
+    }
+}
+
+/// Per-tag heap attribution.
+#[derive(Clone, Debug)]
+pub struct TagStats {
+    /// Tag name from [`TAGS`].
+    pub tag: &'static str,
+    /// Net bytes (allocs − frees) attributed to this tag.
+    pub net_bytes: i64,
+    /// Cumulative bytes allocated under this tag.
+    pub alloc_bytes: u64,
+    /// Cumulative allocation calls under this tag.
+    pub allocs: u64,
+    /// Largest single allocation under this tag since start/reset.
+    pub max_single: u64,
+}
+
+/// Stats for one named tag (unknown names read the `"other"` bucket).
+pub fn tag_stats(tag: &str) -> TagStats {
+    let i = tag_index(tag);
+    TagStats {
+        tag: TAGS[i],
+        net_bytes: TAG_NET[i].load(Relaxed),
+        alloc_bytes: TAG_ALLOC_BYTES[i].load(Relaxed),
+        allocs: TAG_ALLOCS[i].load(Relaxed),
+        max_single: TAG_MAX_SINGLE[i].load(Relaxed),
+    }
+}
+
+/// All tags that have seen any traffic (plus `untagged` always), for
+/// the `/debug/prof` breakdown.
+pub fn tag_breakdown() -> Vec<TagStats> {
+    (0..TAG_COUNT)
+        .map(|i| tag_stats(TAGS[i]))
+        .filter(|s| s.tag == "untagged" || s.allocs > 0)
+        .collect()
+}
+
+/// Zero the global and per-tag max-single-allocation watermarks so a
+/// bench can measure a steady-state window in isolation.
+pub fn reset_max_single() {
+    MAX_SINGLE.store(0, Relaxed);
+    for m in &TAG_MAX_SINGLE {
+        m.store(0, Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_index_resolves_known_and_folds_unknown() {
+        assert_eq!(tag_index("untagged"), 0);
+        assert_eq!(tag_index("predict"), 2);
+        assert_eq!(tag_index("no-such-tag"), OTHER);
+        assert_eq!(tag_stats("no-such-tag").tag, "other");
+    }
+
+    #[test]
+    fn scopes_nest_and_restore() {
+        assert_eq!(current_tag(), 0);
+        {
+            let _a = scope("fit");
+            assert_eq!(current_tag(), tag_index("fit"));
+            {
+                let _b = scope("predict");
+                assert_eq!(current_tag(), tag_index("predict"));
+            }
+            assert_eq!(current_tag(), tag_index("fit"));
+        }
+        assert_eq!(current_tag(), 0);
+    }
+
+    #[test]
+    fn counters_move_when_noted() {
+        // The lib test binary does not install the allocator, so drive
+        // the bookkeeping directly.
+        let before = snapshot();
+        let t0 = tag_stats("fit");
+        {
+            let _g = scope("fit");
+            note_alloc(1024);
+            note_dealloc(1024);
+        }
+        let after = snapshot();
+        let t1 = tag_stats("fit");
+        assert!(after.alloc_count >= before.alloc_count + 1);
+        assert!(after.dealloc_count >= before.dealloc_count + 1);
+        assert!(after.alloc_bytes >= before.alloc_bytes + 1024);
+        assert_eq!(t1.net_bytes, t0.net_bytes);
+        assert!(t1.alloc_bytes >= t0.alloc_bytes + 1024);
+        assert!(t1.max_single >= 1024);
+    }
+}

@@ -15,8 +15,16 @@
 //!   window of scored observations (rolling RMSE/MNLP/coverage), the
 //!   per-block error attribution, and the drift detector against the
 //!   fit-time baseline persisted in artifacts.
+//! * [`alloc`] — the tracking global allocator (live/peak/throughput
+//!   counters, per-subsystem tagged scopes) that binaries opt into with
+//!   `#[global_allocator]`.
+//! * [`prof`] — per-thread CPU accounting (thread registry + procfs
+//!   deltas), the process resource sampler behind `GET /debug/prof`,
+//!   and the smoothed CPU-saturation signal the admission gate reads.
 
+pub mod alloc;
 pub mod log;
+pub mod prof;
 pub mod quality;
 pub mod query;
 pub mod trace;

@@ -37,14 +37,22 @@ pub enum ShedReason {
     Slo = 2,
     /// The server (or the model's batcher) is shutting down.
     Shutdown = 3,
+    /// The process CPU is saturated (smoothed `obs::prof` signal) while
+    /// this model already has a backlog.
+    Cpu = 4,
 }
 
 /// Number of shed reasons (the length of the per-model counter array).
-pub const SHED_REASONS: usize = 4;
+pub const SHED_REASONS: usize = 5;
 
 /// Every reason, in counter-index order.
-pub const ALL_SHED_REASONS: [ShedReason; SHED_REASONS] =
-    [ShedReason::QueueFull, ShedReason::Deadline, ShedReason::Slo, ShedReason::Shutdown];
+pub const ALL_SHED_REASONS: [ShedReason; SHED_REASONS] = [
+    ShedReason::QueueFull,
+    ShedReason::Deadline,
+    ShedReason::Slo,
+    ShedReason::Shutdown,
+    ShedReason::Cpu,
+];
 
 impl ShedReason {
     /// The metric label value (`reason="..."`).
@@ -54,6 +62,7 @@ impl ShedReason {
             ShedReason::Deadline => "deadline",
             ShedReason::Slo => "slo",
             ShedReason::Shutdown => "shutdown",
+            ShedReason::Cpu => "cpu",
         }
     }
 }
@@ -112,6 +121,10 @@ pub struct QueueState {
     pub total_weight: u64,
     /// Number of resident models (QoS caps only bind when > 1).
     pub models: usize,
+    /// Smoothed process CPU saturation in [0, 1]
+    /// ([`crate::obs::prof::cpu_saturation`]; 0 when no sampler runs, so
+    /// profiling-off servers never cpu-shed).
+    pub cpu_saturation: f64,
 }
 
 /// Predicted time for the queue to drain past a newly enqueued request:
@@ -165,6 +178,14 @@ pub fn evaluate(
         }
     }
 
+    // CPU shed: the process is saturated (secondary capacity signal
+    // from the profiler) *and* this model already has more than one
+    // batch of backlog — the backlog guard keeps a merely-busy machine
+    // (e.g. a parallel test run) from shedding traffic it could absorb.
+    if q.cpu_saturation >= crate::obs::prof::CPU_SHED_THRESHOLD && q.depth > q.batch_size as u64 {
+        return Decision::Shed { reason: ShedReason::Cpu, retry_after_s: retry_after_secs(est) };
+    }
+
     // QoS shed: the model is over its weight share of the pool while
     // other models are resident and it already has a backlog.
     if q.models > 1 && q.depth > 0 {
@@ -199,6 +220,7 @@ pub fn queue_state(
         workers,
         total_weight,
         models,
+        cpu_saturation: crate::obs::prof::cpu_saturation(),
     }
 }
 
@@ -215,6 +237,7 @@ mod tests {
             workers: 4,
             total_weight: 1,
             models: 1,
+            cpu_saturation: 0.0,
         }
     }
 
@@ -286,6 +309,28 @@ mod tests {
         state.models = 2;
         state.total_weight = 4;
         assert_eq!(evaluate(&heavy, &state, None), Decision::Admit);
+    }
+
+    #[test]
+    fn cpu_saturation_sheds_only_with_backlog() {
+        let policy = AdmissionPolicy::default();
+        // Saturated with a backlog beyond one batch → shed as `cpu`.
+        let mut state = q(8, 0.001);
+        state.cpu_saturation = 0.99;
+        assert!(matches!(
+            evaluate(&policy, &state, None),
+            Decision::Shed { reason: ShedReason::Cpu, .. }
+        ));
+        // Saturated but within one batch of backlog → admit.
+        state.depth = 4;
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
+        // Below the threshold with a deep backlog → admit.
+        state.depth = 100;
+        state.cpu_saturation = 0.90;
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
+        // The signal absent (0.0) can never shed.
+        state.cpu_saturation = 0.0;
+        assert_eq!(evaluate(&policy, &state, None), Decision::Admit);
     }
 
     #[test]

@@ -265,6 +265,7 @@ pub fn spawn_named(
     let join = std::thread::Builder::new()
         .name("pgpr-batcher".into())
         .spawn(move || {
+            let _prof = crate::obs::prof::register_thread(&format!("batcher-{label}"));
             let _guard = RunningGuard(Arc::clone(&running_rx));
             supervise(svc, rx, depth_rx, running_rx, &label);
         })

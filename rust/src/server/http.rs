@@ -27,21 +27,31 @@
 //! * `GET /healthz` — liveness + default-engine description + model list.
 //! * `GET /readyz` — readiness: 200 iff ≥ 1 model is resident and every
 //!   batcher thread is alive, else 503.
-//! * `GET /metrics` — Prometheus text: the boot-default model's full
-//!   histogram section (back-compat) plus `pgpr_models_resident`,
-//!   process-wide `pgpr_process_uptime_seconds` / `pgpr_build_info`, a
+//! * `GET /metrics` — Prometheus text: one `# HELP`/`# TYPE` metadata
+//!   block, the boot-default model's full unlabeled section (histograms
+//!   in standard cumulative `_bucket{le}`/`_sum`/`_count` form; quantile
+//!   snapshots live in `?format=json`), `pgpr_models_resident`,
+//!   process-wide `pgpr_process_uptime_seconds` / `pgpr_build_info`,
+//!   resource gauges + named per-thread CPU counters when profiling is
+//!   on (`pgpr_process_{rss,heap_live,heap_peak}_bytes`, open fds and
+//!   connections, `pgpr_thread_cpu_seconds_total{thread=…}`), a
 //!   `{model="…"}`-labeled section per resident model, per-stage
-//!   `pgpr_stage_seconds` quantiles and — when prequential scoring is on
-//!   (`RegistryOptions::observe_score`) — windowed
+//!   `pgpr_stage_seconds` histograms and — when prequential scoring is
+//!   on (`RegistryOptions::observe_score`) — windowed
 //!   `pgpr_model_quality{model,metric}` gauges plus
 //!   `pgpr_model_drift_score` once a fit-time baseline exists;
 //!   `?format=json` returns the same numbers as one JSON object (with
-//!   `uptime_s`, per-model `generation` and a `quality` object).
+//!   `uptime_s`, per-model `generation`, a `quality` object and a
+//!   `process` resource object when profiling is on).
 //! * `GET /debug/trace?model=<name>&n=<count>` — the last `n` completed
 //!   request traces (per-stage breakdowns) from the model's trace ring.
 //! * `GET /debug/quality?model=<name>&n=<buckets>&k=<blocks>` — one
 //!   model's windowed quality series (newest bucket first) and its top-k
 //!   worst Markov blocks by windowed RMSE (see [`crate::obs::quality`]).
+//! * `GET /debug/prof?n=<samples>` — the continuous profiler's timeline
+//!   (newest first) with window CPU attribution, top threads and the
+//!   tagged heap breakdown; 404 under `--no-prof` (see
+//!   [`crate::obs::prof`]).
 //!
 //! `POST /predict?trace=1` inlines the answering request's own stage
 //! breakdown under a `"trace"` key; an `X-Request-Id` header is echoed
@@ -66,12 +76,16 @@ use std::time::{Duration, Instant};
 
 use crate::config::{RegistryOptions, ServeOptions};
 use crate::coordinator::service::ServeEngine;
+use crate::obs::alloc;
+use crate::obs::prof::{self, ProfSample, SampleRing, Sampler};
 use crate::obs::{log_event, next_trace_id, parse_query, Level, Query, Stage, TraceEntry};
 use crate::registry::artifact;
 use crate::registry::registry::{ModelRegistry, RegistryError};
 use crate::server::admission::{self, Decision, ShedReason};
 use crate::server::batcher::SubmitError;
-use crate::server::metrics::{build_info, process_start, process_uptime_secs, ServeMetrics};
+use crate::server::metrics::{
+    build_info, process_start, process_uptime_secs, render_metadata, ServeMetrics,
+};
 use crate::util::error::{PgprError, Result};
 use crate::util::json::Json;
 
@@ -115,6 +129,13 @@ struct Shared {
     workers: usize,
     /// Deadline for requests without `X-Deadline-Ms`, ms (0 = none).
     default_deadline_ms: u64,
+    /// Continuous profiler ring (`ServeOptions::prof`): `Some` holds the
+    /// sampler's ring behind `GET /debug/prof`; `None` means profiling is
+    /// off — the route answers 404 and `/metrics` omits the resource
+    /// gauges entirely rather than exposing stale zeros.
+    prof_ring: Option<Arc<SampleRing>>,
+    /// Sampler cadence in milliseconds, echoed by `/debug/prof`.
+    prof_interval_ms: u64,
 }
 
 /// A running HTTP serving stack (acceptor + workers + registry batchers).
@@ -125,6 +146,9 @@ pub struct Server {
     workers: Vec<JoinHandle<()>>,
     registry: Arc<ModelRegistry>,
     metrics: Arc<ServeMetrics>,
+    /// Background resource sampler (`None` with `--no-prof`); stopped and
+    /// joined in [`Server::shutdown`].
+    sampler: Option<Sampler>,
 }
 
 impl Server {
@@ -158,6 +182,19 @@ impl Server {
             .map_err(|e| PgprError::Io(format!("bind {}: {e}", opts.listen)))?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
+        // Continuous profiler: one sampler thread per server, snapshotting
+        // per-thread CPU, RSS/heap/fd/connection state into a fixed ring.
+        let sampler = if opts.prof {
+            let s = prof::start_sampler(
+                Duration::from_millis(opts.prof_interval_ms.max(1)),
+                opts.prof_ring,
+                Instant::now(),
+            )
+            .map_err(|e| PgprError::Io(format!("spawn prof sampler: {e}")))?;
+            Some(s)
+        } else {
+            None
+        };
         let (conn_tx, conn_rx) = sync_channel::<TcpStream>(opts.workers * 2 + 8);
         let conn_rx = Arc::new(Mutex::new(conn_rx));
         let shared = Arc::new(Shared {
@@ -172,6 +209,8 @@ impl Server {
             batch_size: opts.batch_size,
             workers: opts.workers,
             default_deadline_ms: opts.default_deadline_ms,
+            prof_ring: sampler.as_ref().map(|s| s.ring()),
+            prof_interval_ms: opts.prof_interval_ms,
         });
 
         let mut workers = Vec::with_capacity(opts.workers);
@@ -180,7 +219,10 @@ impl Server {
             let sh = Arc::clone(&shared);
             let w = std::thread::Builder::new()
                 .name(format!("pgpr-http-{i}"))
-                .spawn(move || worker_loop(rx, sh))
+                .spawn(move || {
+                    let _prof = prof::register_thread(&format!("http-{i}"));
+                    worker_loop(rx, sh)
+                })
                 .map_err(|e| PgprError::Io(format!("spawn http worker: {e}")))?;
             workers.push(w);
         }
@@ -190,6 +232,7 @@ impl Server {
         let acceptor = std::thread::Builder::new()
             .name("pgpr-accept".into())
             .spawn(move || {
+                let _prof = prof::register_thread("accept");
                 for conn in listener.incoming() {
                     if stop_flag.load(Ordering::SeqCst) {
                         break;
@@ -209,7 +252,7 @@ impl Server {
             })
             .map_err(|e| PgprError::Io(format!("spawn acceptor: {e}")))?;
 
-        Ok(Server { addr, stop, acceptor, workers, registry, metrics })
+        Ok(Server { addr, stop, acceptor, workers, registry, metrics, sampler })
     }
 
     /// The actually-bound address (resolves `:0` ephemeral ports).
@@ -231,7 +274,10 @@ impl Server {
     /// join every worker, then drain the registry's batcher threads.
     /// Returns the primary metrics for the shutdown summary.
     pub fn shutdown(self) -> Arc<ServeMetrics> {
-        let Server { addr, stop, acceptor, workers, registry, metrics } = self;
+        let Server { addr, stop, acceptor, workers, registry, metrics, sampler } = self;
+        if let Some(mut s) = sampler {
+            s.shutdown();
+        }
         stop.store(true, Ordering::SeqCst);
         // Unblock the acceptor's accept() with a throwaway connection.
         // A wildcard bind address (0.0.0.0 / ::) is not connectable on
@@ -268,6 +314,9 @@ fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
 }
 
 fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    // Connection gauge (`pgpr_process_open_connections`): held for the
+    // whole keep-alive conversation, decremented on every exit path.
+    let _conn = prof::track_connection();
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_nodelay(true);
     // Short read timeout: reads poll in READ_POLL slices so the worker
@@ -541,6 +590,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> (Resp, Option<u64>) {
         }
         ("GET", "/debug/trace") => (handle_debug_trace(&query, shared), None),
         ("GET", "/debug/quality") => (handle_debug_quality(&query, shared), None),
+        ("GET", "/debug/prof") => (handle_debug_prof(&query, shared), None),
         ("POST", "/predict") => handle_predict(req, &query, shared),
         ("GET", "/models") => {
             let infos: Vec<Json> = shared.registry.list().iter().map(|i| i.to_json()).collect();
@@ -589,11 +639,14 @@ fn route(req: &HttpRequest, shared: &Shared) -> (Resp, Option<u64>) {
     }
 }
 
-/// The multi-model `/metrics` page: the primary (boot-default) model's
-/// full unlabeled section, the resident-model gauge, then a
-/// `{model="…"}`-labeled section per model.
+/// The multi-model `/metrics` page: the `# HELP`/`# TYPE` metadata block
+/// (exactly once per page — the sections below emit samples only), the
+/// primary (boot-default) model's full unlabeled section, the
+/// resident-model gauge, the process resource gauges (profiling on), then
+/// a `{model="…"}`-labeled section per model.
 fn metrics_text(shared: &Shared) -> String {
-    let mut s = shared.metrics.render_prometheus();
+    let mut s = render_metadata();
+    s.push_str(&shared.metrics.render_prometheus());
     let (version, features) = build_info();
     s.push_str(&format!(
         "pgpr_process_uptime_seconds {:.3}\n",
@@ -651,10 +704,41 @@ fn metrics_text(shared: &Shared) -> String {
             ));
         }
     }
+    if shared.prof_ring.is_some() {
+        render_resource_metrics(&mut s);
+    }
     for (name, m) in by_model {
         s.push_str(&m.render_prometheus_with(Some(("model", name.as_str()))));
     }
     s
+}
+
+/// Process resource gauges and per-thread CPU counters, appended to the
+/// `/metrics` page when profiling is on. Heap gauges read 0 unless the
+/// binary installed [`alloc::TrackingAlloc`]; everything procfs-backed
+/// reads 0 off-Linux.
+fn render_resource_metrics(s: &mut String) {
+    let mem = prof::memory_info().unwrap_or_default();
+    let heap = alloc::snapshot();
+    s.push_str(&format!("pgpr_process_rss_bytes {}\n", mem.rss_bytes));
+    s.push_str(&format!("pgpr_process_heap_live_bytes {}\n", heap.live_bytes.max(0)));
+    s.push_str(&format!("pgpr_process_heap_peak_bytes {}\n", heap.peak_bytes));
+    s.push_str(&format!("pgpr_process_open_fds {}\n", prof::open_fds().unwrap_or(0)));
+    s.push_str(&format!("pgpr_process_open_connections {}\n", prof::open_connections()));
+    s.push_str(&format!(
+        "pgpr_process_cpu_seconds_total {:.3}\n",
+        prof::process_cpu_seconds().unwrap_or(0.0)
+    ));
+    s.push_str(&format!("pgpr_cpu_saturation_ratio {:.4}\n", prof::cpu_saturation()));
+    // One monotone counter per thread *name*: live tasks merged with the
+    // retired-by-name accumulator (names are unique after the merge, so
+    // the exposition cannot emit duplicate series).
+    for (name, cpu) in prof::thread_cpu_totals() {
+        s.push_str(&format!(
+            "pgpr_thread_cpu_seconds_total{{thread=\"{}\"}} {cpu:.3}\n",
+            prof::label_escape(&name)
+        ));
+    }
 }
 
 /// `GET /metrics?format=json`: the same counters/histograms as the text
@@ -678,13 +762,39 @@ fn metrics_json(shared: &Shared) -> String {
             })
             .collect(),
     );
-    Json::obj(vec![
+    let mut top = vec![
         ("models_resident", Json::Num(entries.len() as f64)),
         ("uptime_s", Json::Num(process_uptime_secs())),
         ("primary", shared.metrics.to_json()),
         ("models", models),
+    ];
+    if shared.prof_ring.is_some() {
+        top.push(("process", process_json()));
+    }
+    Json::obj(top).to_string()
+}
+
+/// The `process` member of `/metrics?format=json` (profiling on): the
+/// same resource numbers as the text gauges, plus per-name thread CPU
+/// totals — what `pgpr top` polls.
+fn process_json() -> Json {
+    let mem = prof::memory_info().unwrap_or_default();
+    let heap = alloc::snapshot();
+    let totals = prof::thread_cpu_totals();
+    let threads =
+        Json::obj(totals.iter().map(|(n, c)| (n.as_str(), Json::Num(*c))).collect());
+    Json::obj(vec![
+        ("rss_bytes", Json::Num(mem.rss_bytes as f64)),
+        ("hwm_bytes", Json::Num(mem.hwm_bytes as f64)),
+        ("heap_live_bytes", Json::Num(heap.live_bytes as f64)),
+        ("heap_peak_bytes", Json::Num(heap.peak_bytes as f64)),
+        ("heap_allocs", Json::Num(heap.alloc_count as f64)),
+        ("open_fds", Json::Num(prof::open_fds().unwrap_or(0) as f64)),
+        ("open_connections", Json::Num(prof::open_connections() as f64)),
+        ("cpu_seconds", Json::Num(prof::process_cpu_seconds().unwrap_or(0.0))),
+        ("cpu_saturation", Json::Num(prof::cpu_saturation())),
+        ("threads", threads),
     ])
-    .to_string()
 }
 
 /// `GET /debug/trace?model=<name>&n=<count>` — the last `n` completed
@@ -723,6 +833,110 @@ fn handle_debug_quality(query: &Query<'_>, shared: &Shared) -> (u16, &'static st
         map.insert("generation".into(), Json::Num(entry.generation() as f64));
     }
     (200, "application/json", j.to_string())
+}
+
+/// `GET /debug/prof?n=<samples>` — the continuous profiler's timeline:
+/// up to `n` ring samples newest first, window-level CPU attribution
+/// (process CPU delta vs summed per-thread deltas over the same window),
+/// the hottest threads of the newest sample, and the tagged heap
+/// breakdown from the tracking allocator. 404 when profiling is off.
+fn handle_debug_prof(query: &Query<'_>, shared: &Shared) -> (u16, &'static str, String) {
+    let Some(ring) = &shared.prof_ring else {
+        return (404, "application/json", error_body("profiling is disabled (--no-prof)"));
+    };
+    let n = query.get_usize("n").unwrap_or(32);
+    let samples = ring.last(n);
+    // Window deltas: newest minus oldest of the returned slice. Threads
+    // absent from the oldest sample baseline at 0 (they started inside
+    // the window); threads that exited stay visible through the
+    // retired-by-name accumulator, so their cycles are not lost.
+    let window = if samples.len() >= 2 {
+        let newest = &samples[0];
+        let oldest = &samples[samples.len() - 1];
+        let olds: std::collections::HashMap<&str, f64> =
+            oldest.threads.iter().map(|t| (t.name.as_str(), t.cpu_s)).collect();
+        let threads_delta: f64 = newest
+            .threads
+            .iter()
+            .map(|t| (t.cpu_s - olds.get(t.name.as_str()).copied().unwrap_or(0.0)).max(0.0))
+            .sum();
+        Json::obj(vec![
+            ("wall_s", Json::Num(newest.uptime_s - oldest.uptime_s)),
+            ("process_cpu_delta_s", Json::Num(newest.process_cpu_s - oldest.process_cpu_s)),
+            ("threads_cpu_delta_s", Json::Num(threads_delta)),
+        ])
+    } else {
+        Json::obj(vec![])
+    };
+    let top_threads = match samples.first() {
+        Some(newest) => {
+            let mut ts: Vec<_> = newest.threads.iter().collect();
+            ts.sort_by(|a, b| b.util.total_cmp(&a.util).then(b.cpu_s.total_cmp(&a.cpu_s)));
+            Json::Arr(
+                ts.iter()
+                    .take(8)
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("thread", Json::Str(t.name.clone())),
+                            ("cpu_s", Json::Num(t.cpu_s)),
+                            ("util", Json::Num(t.util)),
+                        ])
+                    })
+                    .collect(),
+            )
+        }
+        None => Json::Arr(Vec::new()),
+    };
+    let heap_tags = Json::Arr(
+        alloc::tag_breakdown()
+            .into_iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("tag", Json::Str(t.tag.to_string())),
+                    ("net_bytes", Json::Num(t.net_bytes as f64)),
+                    ("alloc_bytes", Json::Num(t.alloc_bytes as f64)),
+                    ("allocs", Json::Num(t.allocs as f64)),
+                    ("max_single", Json::Num(t.max_single as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let j = Json::obj(vec![
+        ("interval_ms", Json::Num(shared.prof_interval_ms as f64)),
+        ("capacity", Json::Num(ring.capacity() as f64)),
+        ("samples", Json::Arr(samples.iter().map(prof_sample_json).collect())),
+        ("window", window),
+        ("top_threads", top_threads),
+        ("heap_tags", heap_tags),
+    ]);
+    (200, "application/json", j.to_string())
+}
+
+/// One profiler ring sample as JSON.
+fn prof_sample_json(s: &ProfSample) -> Json {
+    let threads = Json::obj(
+        s.threads
+            .iter()
+            .map(|t| {
+                (
+                    t.name.as_str(),
+                    Json::obj(vec![("cpu_s", Json::Num(t.cpu_s)), ("util", Json::Num(t.util))]),
+                )
+            })
+            .collect(),
+    );
+    Json::obj(vec![
+        ("uptime_s", Json::Num(s.uptime_s)),
+        ("rss_bytes", Json::Num(s.rss_bytes as f64)),
+        ("hwm_bytes", Json::Num(s.hwm_bytes as f64)),
+        ("open_fds", Json::Num(s.open_fds as f64)),
+        ("open_connections", Json::Num(s.open_connections as f64)),
+        ("heap_live_bytes", Json::Num(s.heap_live_bytes as f64)),
+        ("heap_peak_bytes", Json::Num(s.heap_peak_bytes as f64)),
+        ("process_cpu_s", Json::Num(s.process_cpu_s)),
+        ("cpu_saturation", Json::Num(s.cpu_saturation)),
+        ("threads", threads),
+    ])
 }
 
 fn registry_error_response(e: &RegistryError) -> (u16, &'static str, String) {

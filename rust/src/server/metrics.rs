@@ -5,9 +5,14 @@
 //! per octave, ≤ 12.5% relative error — using only relaxed atomic
 //! increments, so many connection workers can record concurrently with no
 //! lock and no allocation. Quantiles are computed on read by a bucket
-//! scan. [`ServeMetrics`] groups the histograms and counters the serving
-//! path shares, renders them in Prometheus text format for `GET /metrics`
-//! and as a human summary for shutdown.
+//! scan (served via `?format=json`); the text exposition renders each
+//! histogram in standard Prometheus form — sparse cumulative
+//! `_bucket{le=…}` series plus `_sum`/`_count` — so `histogram_quantile`
+//! works server-side. [`ServeMetrics`] groups the histograms and counters
+//! the serving path shares, renders them in Prometheus text format for
+//! `GET /metrics` and as a human summary for shutdown.
+//! [`render_metadata`] emits the one-per-family `# HELP`/`# TYPE` header
+//! block and [`lint_exposition`] re-parses a full page as a self-check.
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -74,6 +79,68 @@ fn bucket_value(idx: usize) -> u64 {
     lower + width / 2
 }
 
+/// Inclusive upper edge of a bucket — the largest sample value that maps
+/// into it. Used as the Prometheus `le` boundary (strictly increasing
+/// with the index, so cumulative `_bucket` series are well-formed).
+fn bucket_le(idx: usize) -> u64 {
+    if idx < LINEAR_MAX as usize {
+        return idx as u64;
+    }
+    let group = (idx - LINEAR_MAX as usize) / SUB;
+    let sub = ((idx - LINEAR_MAX as usize) % SUB) as u64;
+    let width = 1u64 << group;
+    let lower = (LINEAR_MAX + sub) << group;
+    // `width - 1` first: the top bucket's edge is exactly `u64::MAX`, so
+    // `lower + width` would overflow.
+    lower + (width - 1)
+}
+
+/// Append one histogram family in Prometheus cumulative exposition:
+/// sparse `_bucket{le=…}` lines over the non-empty buckets, a `+Inf`
+/// bucket, `_sum` and `_count` — all derived from one bucket scan so the
+/// emitted series stay self-consistent under concurrent `record`s.
+/// `scale` converts the histogram's integer sample unit into the exposed
+/// unit (1e-6 for microsecond samples exposed as seconds, 1.0 for plain
+/// counts); `extra` is an optional pre-formatted label pair
+/// (`stage="engine"`) appended after the section label.
+fn write_histogram(
+    s: &mut String,
+    name: &str,
+    h: &Histogram,
+    scale: f64,
+    label: Option<(&str, &str)>,
+    extra: &str,
+) {
+    let series_labels = |le: Option<&str>| -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some((k, v)) = label {
+            parts.push(format!("{k}=\"{v}\""));
+        }
+        if !extra.is_empty() {
+            parts.push(extra.to_string());
+        }
+        if let Some(le) = le {
+            parts.push(format!("le=\"{le}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    };
+    let buckets = h.cumulative_nonzero();
+    let total = buckets.last().map_or(0, |&(_, c)| c);
+    for &(le, cum) in &buckets {
+        let ls = series_labels(Some(&format!("{}", le as f64 * scale)));
+        let _ = writeln!(s, "{name}_bucket{ls} {cum}");
+    }
+    let ls = series_labels(Some("+Inf"));
+    let _ = writeln!(s, "{name}_bucket{ls} {total}");
+    let base = series_labels(None);
+    let _ = writeln!(s, "{name}_sum{base} {}", h.sum() as f64 * scale);
+    let _ = writeln!(s, "{name}_count{base} {total}");
+}
+
 /// Concurrent log-linear histogram over `u64` samples.
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
@@ -115,8 +182,33 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Sum of all recorded samples (same unit as the samples).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
     pub fn max(&self) -> u64 {
         self.max.load(Ordering::Relaxed)
+    }
+
+    /// `(le, cumulative_count)` for every non-empty bucket, in increasing
+    /// `le` order. The final cumulative count is the self-consistent
+    /// total for a `+Inf` bucket (summed from the same bucket reads, so a
+    /// concurrent `record` can never make `+Inf` disagree with the
+    /// emitted `_count`). Sparse on purpose: the 496 fixed buckets would
+    /// bloat every scrape, and Prometheus only needs the edges that hold
+    /// observations.
+    pub fn cumulative_nonzero(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                cum += c;
+                out.push((bucket_le(i), cum));
+            }
+        }
+        out
     }
 
     pub fn mean(&self) -> f64 {
@@ -306,10 +398,13 @@ impl ServeMetrics {
 
     /// Prometheus text with an optional label attached to every series —
     /// `Some(("model", "alpha"))` renders the per-model section of a
-    /// multi-model `/metrics` page; `None` keeps the legacy unlabeled
-    /// format byte-for-byte.
+    /// multi-model `/metrics` page; `None` renders the unlabeled primary
+    /// section. Samples only: the `# HELP`/`# TYPE` header block comes
+    /// from [`render_metadata`], emitted exactly once per page by the
+    /// HTTP layer (this function runs once unlabeled plus once per
+    /// resident model, so inlining metadata here would duplicate it).
     pub fn render_prometheus_with(&self, label: Option<(&str, &str)>) -> String {
-        // Build `{k="v"}`, `{quantile="q"}` or `{k="v",quantile="q"}`.
+        // Build `{k="v"}`, `{reason="r"}` or `{k="v",reason="r"}`.
         let lbl = |extra: &str| -> String {
             match (label, extra.is_empty()) {
                 (None, true) => String::new(),
@@ -334,31 +429,26 @@ impl ServeMetrics {
                 writeln!(s, "pgpr_requests_shed_total{rs} {}", c(&self.shed[reason as usize]));
         }
         let _ = writeln!(s, "pgpr_batcher_restarts_total{plain} {}", c(&self.batcher_restarts));
+        // Latency-class histograms: microsecond samples exposed in
+        // seconds as cumulative `_bucket{le}`/`_sum`/`_count`, with the
+        // pre-computed mean/max kept as companion gauge families (the
+        // quantile snapshots stay available via `?format=json`).
         for (name, h) in [
             ("pgpr_request_latency_seconds", &self.latency_us),
             ("pgpr_predict_seconds", &self.predict_us),
             ("pgpr_observe_update_seconds", &self.observe_us),
         ] {
-            let snap = h.snapshot();
-            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
-                let qs = lbl(&format!("quantile=\"{q}\""));
-                let _ = writeln!(s, "{name}{qs} {:.6e}", v as f64 * 1e-6);
-            }
-            let _ = writeln!(s, "{name}_mean{plain} {:.6e}", snap.mean * 1e-6);
-            let _ = writeln!(s, "{name}_max{plain} {:.6e}", snap.max as f64 * 1e-6);
-            let _ = writeln!(s, "{name}_count{plain} {}", snap.count);
+            write_histogram(&mut s, name, h, 1e-6, label, "");
+            let _ = writeln!(s, "{name}_mean{plain} {:.6e}", h.mean() * 1e-6);
+            let _ = writeln!(s, "{name}_max{plain} {:.6e}", h.max() as f64 * 1e-6);
         }
         for (name, h) in [
             ("pgpr_batch_occupancy_rows", &self.batch_rows),
             ("pgpr_queue_depth_requests", &self.queue_depth),
         ] {
-            let snap = h.snapshot();
-            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
-                let qs = lbl(&format!("quantile=\"{q}\""));
-                let _ = writeln!(s, "{name}{qs} {v}");
-            }
-            let _ = writeln!(s, "{name}_mean{plain} {:.3}", snap.mean);
-            let _ = writeln!(s, "{name}_max{plain} {}", snap.max);
+            write_histogram(&mut s, name, h, 1.0, label, "");
+            let _ = writeln!(s, "{name}_mean{plain} {:.3}", h.mean());
+            let _ = writeln!(s, "{name}_max{plain} {}", h.max());
         }
         // Per-stage attribution: only stages this model has actually
         // touched, so an f64 model doesn't advertise empty f32u series.
@@ -367,14 +457,10 @@ impl ServeMetrics {
             if h.count() == 0 {
                 continue;
             }
-            let snap = h.snapshot();
-            for (q, v) in [("0.5", snap.p50), ("0.95", snap.p95), ("0.99", snap.p99)] {
-                let qs = lbl(&format!("stage=\"{}\",quantile=\"{q}\"", stage.name()));
-                let _ = writeln!(s, "pgpr_stage_seconds{qs} {:.6e}", v as f64 * 1e-6);
-            }
-            let ls = lbl(&format!("stage=\"{}\"", stage.name()));
-            let _ = writeln!(s, "pgpr_stage_seconds_mean{ls} {:.6e}", snap.mean * 1e-6);
-            let _ = writeln!(s, "pgpr_stage_seconds_count{ls} {}", snap.count);
+            let extra = format!("stage=\"{}\"", stage.name());
+            write_histogram(&mut s, "pgpr_stage_seconds", h, 1e-6, label, &extra);
+            let ls = lbl(&extra);
+            let _ = writeln!(s, "pgpr_stage_seconds_mean{ls} {:.6e}", h.mean() * 1e-6);
         }
         s
     }
@@ -495,6 +581,298 @@ impl Default for ServeMetrics {
     }
 }
 
+/// `(family, type, help)` for every metric family the `/metrics` page can
+/// emit — the serve-path families rendered by [`ServeMetrics`] plus the
+/// process-wide families `server::http` adds around them (build info,
+/// model registry gauges, resource/profiler gauges). One shared table
+/// keeps `# HELP`/`# TYPE` exactly-once per exposition: the HTTP layer
+/// renders [`render_metadata`] once at the top of the page and every
+/// section below emits samples only. Metadata for a family with no
+/// samples on a given scrape is legal, so quiet families cost two lines.
+const FAMILY_METADATA: &[(&str, &str, &str)] = &[
+    ("pgpr_requests_total", "counter", "Prediction rows accepted into the submit queue."),
+    ("pgpr_responses_total", "counter", "Prediction rows answered."),
+    ("pgpr_errors_total", "counter", "Requests answered 4xx/5xx at the HTTP boundary."),
+    ("pgpr_batches_total", "counter", "Micro-batches flushed to the engine."),
+    ("pgpr_throughput_rows_per_sec", "gauge", "Rows answered per second since section start."),
+    ("pgpr_uptime_seconds", "gauge", "Seconds since this metrics section was created."),
+    ("pgpr_observe_rows_total", "counter", "Observation rows accepted into the model stream."),
+    ("pgpr_requests_shed_total", "counter", "Requests refused by the admission gate, by reason."),
+    ("pgpr_batcher_restarts_total", "counter", "Batcher thread respawns after a panic."),
+    ("pgpr_request_latency_seconds", "histogram", "Per-row latency, enqueue to batch answered."),
+    ("pgpr_request_latency_seconds_mean", "gauge", "Mean per-row latency in seconds."),
+    ("pgpr_request_latency_seconds_max", "gauge", "Largest per-row latency in seconds."),
+    ("pgpr_predict_seconds", "histogram", "Engine predict call duration per batch."),
+    ("pgpr_predict_seconds_mean", "gauge", "Mean engine predict duration in seconds."),
+    ("pgpr_predict_seconds_max", "gauge", "Largest engine predict duration in seconds."),
+    ("pgpr_observe_update_seconds", "histogram", "Published online-update latency."),
+    ("pgpr_observe_update_seconds_mean", "gauge", "Mean online-update latency in seconds."),
+    ("pgpr_observe_update_seconds_max", "gauge", "Largest online-update latency in seconds."),
+    ("pgpr_batch_occupancy_rows", "histogram", "Rows per flushed micro-batch."),
+    ("pgpr_batch_occupancy_rows_mean", "gauge", "Mean rows per flushed micro-batch."),
+    ("pgpr_batch_occupancy_rows_max", "gauge", "Largest flushed micro-batch in rows."),
+    ("pgpr_queue_depth_requests", "histogram", "Submit-queue depth sampled at each enqueue."),
+    ("pgpr_queue_depth_requests_mean", "gauge", "Mean sampled submit-queue depth."),
+    ("pgpr_queue_depth_requests_max", "gauge", "Largest sampled submit-queue depth."),
+    ("pgpr_stage_seconds", "histogram", "Per-request latency attributed to pipeline stages."),
+    ("pgpr_stage_seconds_mean", "gauge", "Mean per-stage latency in seconds."),
+    ("pgpr_process_uptime_seconds", "gauge", "Seconds since process boot."),
+    ("pgpr_build_info", "gauge", "Build identity (crate version, compiled features)."),
+    ("pgpr_models_resident", "gauge", "Models resident in the serving registry."),
+    ("pgpr_model_requests_total", "counter", "Answered requests per resident model."),
+    ("pgpr_model_generation", "gauge", "Current published generation per model."),
+    ("pgpr_model_train_rows", "gauge", "Training rows absorbed per model."),
+    ("pgpr_generation_inflight", "gauge", "Requests in flight against the live generation."),
+    ("pgpr_model_quality", "gauge", "Windowed prequential quality metrics per model."),
+    ("pgpr_model_drift_score", "gauge", "Drift score vs the fit-time baseline per model."),
+    ("pgpr_process_rss_bytes", "gauge", "Resident set size from /proc/self/status."),
+    ("pgpr_process_heap_live_bytes", "gauge", "Live bytes held via the tracking allocator."),
+    ("pgpr_process_heap_peak_bytes", "gauge", "High-water mark of tracked live heap bytes."),
+    ("pgpr_process_open_fds", "gauge", "Open file descriptors of this process."),
+    ("pgpr_process_open_connections", "gauge", "HTTP connections currently being served."),
+    ("pgpr_process_cpu_seconds_total", "counter", "Process CPU time (user+system)."),
+    ("pgpr_cpu_saturation_ratio", "gauge", "Smoothed process CPU utilization in [0, 1]."),
+    ("pgpr_thread_cpu_seconds_total", "counter", "CPU time per named thread (user+system)."),
+];
+
+/// The `# HELP`/`# TYPE` header block for every family in
+/// [`FAMILY_METADATA`]. `server::http` prepends this exactly once per
+/// `/metrics` page; sample-rendering code never emits metadata.
+pub fn render_metadata() -> String {
+    let mut s = String::with_capacity(4096);
+    for (name, ty, help) in FAMILY_METADATA {
+        let _ = writeln!(s, "# HELP {name} {help}");
+        let _ = writeln!(s, "# TYPE {name} {ty}");
+    }
+    s
+}
+
+/// Parse one `{…}` label body into `(key, value)` pairs, honoring the
+/// Prometheus escapes (`\\`, `\"`, `\n`) so label values may contain
+/// commas and quotes.
+fn parse_labels(body: &str) -> std::result::Result<Vec<(String, String)>, String> {
+    let mut out = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest
+            .find('=')
+            .ok_or_else(|| format!("label without `=` in `{body}`"))?;
+        let key = rest[..eq].trim().to_string();
+        if key.is_empty()
+            || !key
+                .chars()
+                .enumerate()
+                .all(|(i, c)| c == '_' || c.is_ascii_alphabetic() || (i > 0 && c.is_ascii_digit()))
+        {
+            return Err(format!("bad label name `{key}` in `{body}`"));
+        }
+        rest = rest[eq + 1..].trim_start();
+        if !rest.starts_with('"') {
+            return Err(format!("unquoted label value in `{body}`"));
+        }
+        let mut val = String::new();
+        let mut end = None;
+        let mut esc = false;
+        for (i, ch) in rest.char_indices().skip(1) {
+            if esc {
+                val.push(ch);
+                esc = false;
+            } else if ch == '\\' {
+                esc = true;
+            } else if ch == '"' {
+                end = Some(i);
+                break;
+            } else {
+                val.push(ch);
+            }
+        }
+        let end = end.ok_or_else(|| format!("unterminated label value in `{body}`"))?;
+        out.push((key, val));
+        rest = rest[end + 1..].trim_start();
+        rest = rest.strip_prefix(',').unwrap_or(rest).trim_start();
+    }
+    Ok(out)
+}
+
+/// Self-check a Prometheus text exposition (the whole `/metrics` page):
+///
+/// * every line is a well-formed comment or `name[{labels}] value` sample;
+/// * every sample's family carries a `# TYPE` declaration, declared at
+///   most once (`# HELP` likewise);
+/// * no series (name + label set) is emitted twice;
+/// * a `histogram` family emits only `_bucket`/`_sum`/`_count` samples,
+///   every `_bucket` carries `le`, bucket edges strictly increase with
+///   non-decreasing cumulative counts, and the series ends with a `+Inf`
+///   bucket equal to its `_count` twin.
+///
+/// Used by the exposition tests (and callers who want a cheap runtime
+/// assert) so a format regression fails loudly instead of silently
+/// breaking scrapers.
+pub fn lint_exposition(text: &str) -> std::result::Result<(), String> {
+    use std::collections::{HashMap, HashSet};
+    fn valid_name(n: &str) -> bool {
+        !n.is_empty()
+            && n.chars().enumerate().all(|(i, c)| {
+                c == '_' || c == ':' || c.is_ascii_alphabetic() || (i > 0 && c.is_ascii_digit())
+            })
+    }
+    let mut types: HashMap<String, String> = HashMap::new();
+    let mut helps: HashSet<String> = HashSet::new();
+    // (family+labels-sans-le) → [(le, cumulative)] in emission order.
+    let mut buckets: HashMap<String, Vec<(f64, f64)>> = HashMap::new();
+    let mut counts: HashMap<String, f64> = HashMap::new();
+    let mut sums: HashSet<String> = HashSet::new();
+    let mut seen_series: HashSet<String> = HashSet::new();
+    // Single pass; a family's metadata must precede its samples, which
+    // is how this crate renders pages (metadata block first).
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.splitn(2, ' ');
+            let name = it.next().unwrap_or("");
+            let ty = it.next().unwrap_or("").trim();
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad family name in TYPE `{line}`"));
+            }
+            if !matches!(ty, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(format!("line {ln}: unknown metric type `{ty}`"));
+            }
+            if types.insert(name.to_string(), ty.to_string()).is_some() {
+                return Err(format!("line {ln}: duplicate TYPE for `{name}`"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split(' ').next().unwrap_or("");
+            if !valid_name(name) {
+                return Err(format!("line {ln}: bad family name in HELP `{line}`"));
+            }
+            if !helps.insert(name.to_string()) {
+                return Err(format!("line {ln}: duplicate HELP for `{name}`"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        // Sample: `name value` or `name{labels} value`.
+        let (name, labels, value) = if let Some(open) = line.find('{') {
+            let close = line
+                .rfind('}')
+                .ok_or_else(|| format!("line {ln}: unclosed label set `{line}`"))?;
+            let labels = parse_labels(&line[open + 1..close])
+                .map_err(|e| format!("line {ln}: {e}"))?;
+            (&line[..open], labels, line[close + 1..].trim())
+        } else {
+            let sp = line
+                .find(' ')
+                .ok_or_else(|| format!("line {ln}: sample without value `{line}`"))?;
+            (&line[..sp], Vec::new(), line[sp + 1..].trim())
+        };
+        if !valid_name(name) {
+            return Err(format!("line {ln}: bad metric name `{name}`"));
+        }
+        let val: f64 = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => v
+                .parse()
+                .map_err(|_| format!("line {ln}: bad sample value `{v}`"))?,
+        };
+        // Resolve the owning family: histogram samples use suffixed names.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = name.strip_suffix(suf)?;
+                (types.get(base).map(String::as_str) == Some("histogram")).then_some(base)
+            })
+            .unwrap_or(name);
+        let Some(ty) = types.get(family) else {
+            return Err(format!("line {ln}: sample `{name}` has no `# TYPE {family}` metadata"));
+        };
+        let mut sorted: Vec<&(String, String)> = labels.iter().collect();
+        sorted.sort();
+        let series = format!(
+            "{name}|{}",
+            sorted.iter().map(|(k, v)| format!("{k}={v}")).collect::<Vec<_>>().join(",")
+        );
+        if !seen_series.insert(series) {
+            return Err(format!("line {ln}: duplicate series `{line}`"));
+        }
+        if ty == "histogram" {
+            if family == name {
+                return Err(format!(
+                    "line {ln}: histogram `{family}` may only emit _bucket/_sum/_count"
+                ));
+            }
+            let key = format!(
+                "{family}|{}",
+                sorted
+                    .iter()
+                    .filter(|(k, _)| k != "le")
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+            if name.ends_with("_bucket") {
+                let le = labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.as_str())
+                    .ok_or_else(|| format!("line {ln}: `{name}` bucket without `le`"))?;
+                let le: f64 = match le {
+                    "+Inf" => f64::INFINITY,
+                    v => v
+                        .parse()
+                        .map_err(|_| format!("line {ln}: bad le `{v}`"))?,
+                };
+                let series = buckets.entry(key).or_default();
+                if let Some(&(prev_le, prev_cum)) = series.last() {
+                    if le <= prev_le {
+                        return Err(format!("line {ln}: bucket edges not increasing at le={le}"));
+                    }
+                    if val < prev_cum {
+                        return Err(format!("line {ln}: cumulative bucket count decreased"));
+                    }
+                }
+                series.push((le, val));
+            } else if name.ends_with("_sum") {
+                sums.insert(key);
+            } else {
+                counts.insert(key, val);
+            }
+        }
+    }
+    for (key, series) in &buckets {
+        let Some(&(last_le, last_cum)) = series.last() else { continue };
+        if last_le != f64::INFINITY {
+            return Err(format!("histogram `{key}` has no +Inf bucket"));
+        }
+        if !sums.contains(key) {
+            return Err(format!("histogram `{key}` has buckets but no _sum"));
+        }
+        match counts.get(key) {
+            None => return Err(format!("histogram `{key}` has buckets but no _count")),
+            Some(&c) if c != last_cum => {
+                return Err(format!(
+                    "histogram `{key}`: +Inf bucket {last_cum} != _count {c}"
+                ))
+            }
+            _ => {}
+        }
+    }
+    for key in counts.keys() {
+        if !buckets.contains_key(key) {
+            return Err(format!("histogram `{key}` has _count but no buckets"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -585,12 +963,108 @@ mod tests {
         m.latency_us.record(900);
         let text = m.render_prometheus_with(Some(("model", "alpha")));
         assert!(text.contains("pgpr_requests_total{model=\"alpha\"} 2"));
-        assert!(text.contains("pgpr_request_latency_seconds{model=\"alpha\",quantile=\"0.99\"}"));
+        assert!(
+            text.contains("pgpr_request_latency_seconds_bucket{model=\"alpha\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("pgpr_request_latency_seconds_sum{model=\"alpha\"} 0.0009"));
         assert!(text.contains("pgpr_request_latency_seconds_count{model=\"alpha\"} 1"));
-        // Unlabeled stays in the legacy format.
+        // Exactly one finite bucket for a single sample, below +Inf.
+        assert_eq!(text.matches("pgpr_request_latency_seconds_bucket{").count(), 2);
+        // Unlabeled renders the same shape without the model label.
         let plain = m.render_prometheus();
         assert!(plain.contains("pgpr_requests_total 2"));
-        assert!(plain.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(plain.contains("pgpr_request_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        // No quantile-labeled text series — those live in `?format=json`.
+        assert!(!plain.contains("quantile=\""));
+    }
+
+    #[test]
+    fn bucket_le_is_inclusive_upper_edge() {
+        // `le` is the largest value mapping into its bucket, and the edge
+        // sequence strictly increases — cumulative exposition needs both.
+        let mut prev = None;
+        for idx in 0..NUM_BUCKETS {
+            let le = bucket_le(idx);
+            assert_eq!(bucket_index(le), idx, "le {le} maps back into bucket {idx}");
+            if le < u64::MAX {
+                assert!(bucket_index(le + 1) > idx, "le {le} is not the upper edge of {idx}");
+            }
+            if let Some(p) = prev {
+                assert!(le > p, "edges not strictly increasing at idx {idx}");
+            }
+            prev = Some(le);
+        }
+    }
+
+    #[test]
+    fn cumulative_nonzero_is_sparse_and_consistent() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.record(100);
+        }
+        for _ in 0..10 {
+            h.record(10_000);
+        }
+        let buckets = h.cumulative_nonzero();
+        assert_eq!(buckets.len(), 2, "two distinct buckets touched");
+        assert_eq!(buckets[0].1, 90);
+        assert_eq!(buckets[1].1, 100);
+        assert!(buckets[0].0 < buckets[1].0);
+        assert!(buckets[0].0 >= 100 && buckets[1].0 >= 10_000, "le is an upper edge");
+        assert_eq!(h.sum(), 90 * 100 + 10 * 10_000);
+    }
+
+    #[test]
+    fn exposition_passes_its_own_lint() {
+        let m = ServeMetrics::new();
+        m.requests.fetch_add(5, Ordering::Relaxed);
+        m.latency_us.record(1500);
+        m.latency_us.record(80);
+        m.batch_rows.record(3);
+        m.record_shed(ShedReason::Cpu);
+        m.stages.record(Stage::QueueWait, 0.0015);
+        let page = format!(
+            "{}{}{}",
+            render_metadata(),
+            m.render_prometheus(),
+            m.render_prometheus_with(Some(("model", "alpha")))
+        );
+        lint_exposition(&page).expect("own exposition lints clean");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_expositions() {
+        // Sample without TYPE metadata.
+        assert!(lint_exposition("pgpr_mystery_total 1\n").is_err());
+        // Duplicate series.
+        let dup = "# TYPE x_total counter\nx_total 1\nx_total 2\n";
+        assert!(lint_exposition(dup).is_err());
+        // Histogram whose +Inf bucket disagrees with _count.
+        let bad = "# TYPE h histogram\n\
+                   h_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 1\nh_sum 1\nh_count 2\n";
+        assert!(lint_exposition(bad).is_err());
+        // Bucket edges must increase.
+        let edges = "# TYPE h histogram\n\
+                     h_bucket{le=\"2\"} 1\nh_bucket{le=\"1\"} 2\n";
+        assert!(lint_exposition(edges).is_err());
+        // Missing +Inf bucket.
+        let noinf = "# TYPE h histogram\nh_bucket{le=\"1\"} 1\nh_sum 1\nh_count 1\n";
+        assert!(lint_exposition(noinf).is_err());
+        // A clean minimal histogram passes.
+        let ok = "# TYPE h histogram\n\
+                  h_bucket{le=\"1\"} 1\nh_bucket{le=\"+Inf\"} 2\nh_sum 3\nh_count 2\n";
+        lint_exposition(ok).expect("minimal histogram lints clean");
+    }
+
+    #[test]
+    fn parse_labels_handles_escapes() {
+        let got = parse_labels(r#"thread="a\\b\"c",le="+Inf""#).unwrap();
+        assert_eq!(got[0].0, "thread");
+        assert_eq!(got[0].1, "a\\b\"c");
+        assert_eq!(got[1], ("le".to_string(), "+Inf".to_string()));
+        assert!(parse_labels("noequals").is_err());
+        assert!(parse_labels("k=unquoted").is_err());
     }
 
     #[test]
@@ -602,7 +1076,7 @@ mod tests {
         m.stages.record_set(&set);
         let text = m.render_prometheus_with(Some(("model", "a")));
         assert!(
-            text.contains("pgpr_stage_seconds{model=\"a\",stage=\"queue_wait\",quantile=\"0.5\"}"),
+            text.contains("pgpr_stage_seconds_bucket{model=\"a\",stage=\"queue_wait\",le=\"+Inf\"} 1"),
             "{text}"
         );
         assert!(text.contains("pgpr_stage_seconds_count{model=\"a\",stage=\"serialize\"} 1"));
@@ -661,8 +1135,9 @@ mod tests {
         m.batch_rows.record(2);
         let text = m.render_prometheus();
         assert!(text.contains("pgpr_requests_total 5"));
-        assert!(text.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
-        assert!(text.contains("pgpr_batch_occupancy_rows"));
+        assert!(text.contains("pgpr_request_latency_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("pgpr_batch_occupancy_rows_count 2"));
+        assert!(text.contains("pgpr_batch_occupancy_rows_sum 5"));
         let j = m.to_json();
         assert_eq!(j.req("responses").unwrap().as_usize(), Some(5));
         assert!(j.req("latency_s").unwrap().get("p99").unwrap().as_f64().unwrap() > 0.0);

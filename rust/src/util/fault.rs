@@ -13,6 +13,7 @@
 //! | `engine_stall_ms` | milliseconds        | every engine predict sleeps first (level-triggered) |
 //! | `artifact_corrupt`| shots (default 1)   | next `shots` artifact loads see a flipped payload bit |
 //! | `queue_stick`     | milliseconds        | batcher dequeue + observe drain stall first (level-triggered) |
+//! | `cpu_saturation_pct` | percent          | `obs::prof::cpu_saturation()` reads arg/100 (level-triggered) |
 //!
 //! Disabled cost is one relaxed atomic load per check ([`ARMED`] stays
 //! `false` until something is armed), so the hooks can sit on the
@@ -30,6 +31,9 @@ pub const ENGINE_STALL_MS: &str = "engine_stall_ms";
 pub const ARTIFACT_CORRUPT: &str = "artifact_corrupt";
 /// Batcher dequeue / observe drain stalls `arg` ms (level-triggered).
 pub const QUEUE_STICK: &str = "queue_stick";
+/// CPU saturation reads `arg`/100 instead of the sampler's EWMA
+/// (level-triggered), for deterministic `cpu`-shed tests.
+pub const CPU_SATURATION_PCT: &str = "cpu_saturation_pct";
 
 /// One armed point: optional argument and a remaining-shot budget
 /// (`None` = unlimited, i.e. level-triggered).

@@ -85,9 +85,11 @@ where
     let next = AtomicUsize::new(0);
     let done: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
     std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| {
+        for w in 0..workers {
+            let (next, done, f) = (&next, &done, &f);
+            s.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
+                let _prof = crate::obs::prof::register_thread(&format!("par-{w}"));
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
@@ -125,6 +127,7 @@ where
             let (lo, hi) = (i0, i1);
             s.spawn(move || {
                 IN_POOL.with(|c| c.set(true));
+                let _prof = crate::obs::prof::register_thread("par-row");
                 kernel(chunk, lo, hi)
             });
             i0 = i1;

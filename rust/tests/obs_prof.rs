@@ -1,0 +1,275 @@
+//! End-to-end tests for the resource & capacity observability layer:
+//! boot the HTTP server with the profiler on, scrape `/metrics` for the
+//! process gauges and named per-thread CPU counters (and lint the whole
+//! exposition), walk the `/debug/prof` sample ring, check the tagged
+//! tracking-allocator accounting, and verify `--no-prof` removes every
+//! profiling surface.
+//!
+//! The profiler state (thread registry, saturation EWMA, connection
+//! gauge, allocator counters) is process-global, so every test
+//! serializes on one mutex.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use pgpr::config::{LmaConfig, PartitionStrategy, ServeOptions};
+use pgpr::coordinator::service::ServeEngine;
+use pgpr::kernels::se_ard::SeArdHyper;
+use pgpr::linalg::matrix::Mat;
+use pgpr::lma::LmaRegressor;
+use pgpr::obs::{alloc, prof};
+use pgpr::server::loadgen::http_request;
+use pgpr::server::metrics::lint_exposition;
+use pgpr::server::Server;
+use pgpr::util::json::Json;
+use pgpr::util::rng::Pcg64;
+
+// Same wrapper the serve binary installs, so heap gauges and per-tag
+// breakdowns are live in this test binary too.
+#[global_allocator]
+static ALLOC: alloc::TrackingAlloc = alloc::TrackingAlloc;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn training_data(seed: u64) -> (Mat, Vec<f64>, SeArdHyper, LmaConfig) {
+    let mut rng = Pcg64::new(seed);
+    let hyp = SeArdHyper::isotropic(1, 1.0, 1.0, 0.1);
+    let x = Mat::col_vec(&rng.uniform_vec(120, -4.0, 4.0));
+    let y: Vec<f64> = (0..120).map(|i| x.get(i, 0).sin()).collect();
+    let cfg = LmaConfig {
+        num_blocks: 4,
+        markov_order: 1,
+        support_size: 20,
+        seed: 1,
+        partition: PartitionStrategy::KMeans { iters: 6 },
+        use_pjrt: false,
+    };
+    (x, y, hyp, cfg)
+}
+
+fn opts() -> ServeOptions {
+    ServeOptions {
+        listen: "127.0.0.1:0".into(),
+        workers: 3,
+        batch_size: 4,
+        max_delay_us: 500,
+        queue_capacity: 64,
+        ..ServeOptions::default()
+    }
+}
+
+fn boot(o: &ServeOptions, seed: u64) -> Server {
+    let (x, y, hyp, cfg) = training_data(seed);
+    let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+    Server::start(ServeEngine::Centralized(model), o).unwrap()
+}
+
+fn post_predict_one(addr: &str, q: f64) {
+    let body = Json::obj(vec![("x", Json::arr_f64(&[q]))]).to_string();
+    let (status, resp) = http_request(addr, "POST", "/predict", Some(&body)).unwrap();
+    assert_eq!(status, 200, "body: {resp}");
+}
+
+/// Value of the first unlabeled sample line for `name` (skips `# HELP`
+/// and `# TYPE` metadata, which mention the name mid-line).
+fn sample_value(text: &str, name: &str) -> Option<f64> {
+    text.lines().find_map(|l| l.strip_prefix(name)?.strip_prefix(' ')?.trim().parse().ok())
+}
+
+#[test]
+fn metrics_expose_process_gauges_and_monotone_thread_cpu() {
+    let _l = lock();
+    let o = ServeOptions { prof_interval_ms: 20, prof_ring: 64, ..opts() };
+    let server = boot(&o, 11);
+    let addr = server.addr().to_string();
+    for i in 0..10 {
+        post_predict_one(&addr, -2.0 + 0.4 * i as f64);
+    }
+    let (st, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(st, 200);
+    for name in [
+        "pgpr_process_rss_bytes",
+        "pgpr_process_heap_live_bytes",
+        "pgpr_process_heap_peak_bytes",
+        "pgpr_process_open_fds",
+        "pgpr_process_open_connections",
+        "pgpr_process_cpu_seconds_total",
+        "pgpr_cpu_saturation_ratio",
+    ] {
+        assert!(sample_value(&text, name).is_some(), "missing sample for {name}:\n{text}");
+    }
+    // The tracker is installed in this binary, so the heap gauges carry
+    // real (positive) numbers rather than the uninstalled-zero fallback.
+    assert!(sample_value(&text, "pgpr_process_heap_live_bytes").unwrap() > 0.0);
+    // Named per-thread counters: the acceptor and the sampler register
+    // themselves and stay alive for the whole server lifetime.
+    assert!(
+        text.contains("pgpr_thread_cpu_seconds_total{thread=\"accept\"}"),
+        "acceptor thread missing from {text}"
+    );
+    assert!(text.contains("pgpr_thread_cpu_seconds_total{thread=\"prof\"}"));
+    // The whole exposition (metadata + serve metrics + resource gauges)
+    // passes the crate's own Prometheus lint.
+    lint_exposition(&text).expect("exposition lints clean");
+
+    // Process CPU is a counter: more work can only move it forward.
+    let cpu0 = sample_value(&text, "pgpr_process_cpu_seconds_total").unwrap();
+    let spin = Instant::now();
+    while spin.elapsed() < Duration::from_millis(120) {
+        post_predict_one(&addr, 0.25);
+    }
+    let (_, text2) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    let cpu1 = sample_value(&text2, "pgpr_process_cpu_seconds_total").unwrap();
+    assert!(cpu1 >= cpu0, "process CPU counter went backwards: {cpu0} -> {cpu1}");
+
+    // The JSON mirror carries the same process object; the connection
+    // serving this very request is counted in the gauge.
+    let (st, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    let process = j.req("process").expect("process object in JSON metrics");
+    assert!(process.req("heap_live_bytes").unwrap().as_f64().unwrap() > 0.0);
+    assert!(process.req("open_connections").unwrap().as_f64().unwrap() >= 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn debug_prof_ring_wraps_and_orders_newest_first() {
+    let _l = lock();
+    let o = ServeOptions { prof_interval_ms: 5, prof_ring: 4, ..opts() };
+    let server = boot(&o, 13);
+    let addr = server.addr().to_string();
+    // ~40 sampler ticks against a 4-slot ring: it must wrap, keeping
+    // only the newest four.
+    std::thread::sleep(Duration::from_millis(200));
+    let (st, body) = http_request(&addr, "GET", "/debug/prof?n=32", None).unwrap();
+    assert_eq!(st, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("capacity").unwrap().as_usize(), Some(4));
+    let samples = j.req("samples").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(samples.len(), 4, "wrapped ring stays at capacity");
+    let uptimes: Vec<f64> =
+        samples.iter().map(|s| s.req("uptime_s").unwrap().as_f64().unwrap()).collect();
+    for w in uptimes.windows(2) {
+        assert!(w[0] >= w[1], "samples not newest-first: {uptimes:?}");
+    }
+    server.shutdown();
+}
+
+#[test]
+fn debug_prof_window_attributes_process_cpu_to_threads() {
+    let _l = lock();
+    let o = ServeOptions { prof_interval_ms: 20, prof_ring: 256, ..opts() };
+    let server = boot(&o, 17);
+    let addr = server.addr().to_string();
+    // Burn measurable CPU across the sampling window: request traffic
+    // exercises the registered server threads while this (long-lived)
+    // test thread spins between calls.
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    while t0.elapsed() < Duration::from_millis(600) {
+        post_predict_one(&addr, 0.5);
+        for i in 0..20_000u64 {
+            acc = acc.wrapping_add(i.wrapping_mul(i));
+        }
+        std::hint::black_box(acc);
+    }
+    let (st, body) = http_request(&addr, "GET", "/debug/prof?n=64", None).unwrap();
+    assert_eq!(st, 200, "body: {body}");
+    let j = Json::parse(&body).unwrap();
+    assert!(j.req("samples").unwrap().as_arr().unwrap().len() >= 2);
+    let win = j.req("window").expect("window with >= 2 samples");
+    let wall = win.req("wall_s").unwrap().as_f64().unwrap();
+    let proc_delta = win.req("process_cpu_delta_s").unwrap().as_f64().unwrap();
+    let threads_delta = win.req("threads_cpu_delta_s").unwrap().as_f64().unwrap();
+    assert!(wall > 0.3, "window spans the busy period (wall {wall:.3}s)");
+    assert!(proc_delta > 0.0, "busy window must accumulate process CPU");
+    // Per-thread deltas must account for process CPU over the window.
+    // USER_HZ=100 quantizes every per-thread reading to 10ms ticks, so
+    // the tolerance is the larger of a relative band and an absolute
+    // floor covering a few ticks across the active threads.
+    let tol = (proc_delta * 0.3).max(0.15);
+    assert!(
+        (threads_delta - proc_delta).abs() <= tol,
+        "thread CPU deltas ({threads_delta:.3}s) diverge from process CPU ({proc_delta:.3}s) \
+         over a {wall:.3}s window"
+    );
+    // Busiest-threads table rides along and is never empty here.
+    assert!(!j.req("top_threads").unwrap().as_arr().unwrap().is_empty());
+    server.shutdown();
+}
+
+#[test]
+fn tagged_scope_heap_accounting_balances() {
+    let _l = lock();
+    // A fully contained allocate→drop cycle on one thread balances the
+    // tag's net to exactly zero while recording throughput + watermark.
+    let t0 = alloc::tag_stats("serialize");
+    {
+        let _g = alloc::scope("serialize");
+        let v = vec![0xa5u8; 1 << 20];
+        std::hint::black_box(&v[1234]);
+    }
+    let t1 = alloc::tag_stats("serialize");
+    assert_eq!(t1.net_bytes, t0.net_bytes, "contained cycle must balance to zero");
+    assert!(t1.alloc_bytes >= t0.alloc_bytes + (1 << 20));
+    assert!(t1.max_single >= 1 << 20);
+
+    // A fit+predict round inside a scope: the fit's allocations are
+    // attributed to the tag, and the process-wide live counter returns
+    // to baseline once the model drops (modulo small persistent side
+    // effects: retired-thread registry entries, lazily-initialized
+    // statics, thread-local caches).
+    let live0 = alloc::snapshot().live_bytes;
+    let fit0 = alloc::tag_stats("fit").alloc_bytes;
+    {
+        let _g = alloc::scope("fit");
+        let (x, y, hyp, cfg) = training_data(5);
+        let model = LmaRegressor::fit(&x, &y, &hyp, &cfg).unwrap();
+        let p = model.predict(&Mat::col_vec(&[0.3])).unwrap();
+        std::hint::black_box(p.mean[0]);
+    }
+    let live1 = alloc::snapshot().live_bytes;
+    assert!(
+        alloc::tag_stats("fit").alloc_bytes > fit0,
+        "fit traffic must be attributed to the `fit` tag"
+    );
+    let leaked = live1 - live0;
+    assert!(
+        leaked.abs() < (256 << 10),
+        "fit+predict cycle moved live heap by {leaked} bytes"
+    );
+    // The /debug/prof breakdown surfaces both touched tags.
+    let tags: Vec<&str> = alloc::tag_breakdown().iter().map(|t| t.tag).collect();
+    assert!(tags.contains(&"serialize") && tags.contains(&"fit"), "{tags:?}");
+}
+
+#[test]
+fn no_prof_disables_every_surface() {
+    let _l = lock();
+    let samplers_before = prof::active_samplers();
+    let o = ServeOptions { prof: false, ..opts() };
+    let server = boot(&o, 19);
+    let addr = server.addr().to_string();
+    assert_eq!(prof::active_samplers(), samplers_before, "no sampler thread spawned");
+    let (st, body) = http_request(&addr, "GET", "/debug/prof", None).unwrap();
+    assert_eq!(st, 404, "profiling endpoint must 404 when off, got {st}: {body}");
+    let (st, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(st, 200);
+    // Metadata may still describe the families; no *samples* render.
+    assert!(
+        !text.lines().any(|l| l.starts_with("pgpr_process_rss_bytes")),
+        "process gauges must not render with prof off"
+    );
+    assert!(!text.lines().any(|l| l.starts_with("pgpr_thread_cpu_seconds_total")));
+    lint_exposition(&text).expect("prof-off exposition still lints clean");
+    let (st, body) = http_request(&addr, "GET", "/metrics?format=json", None).unwrap();
+    assert_eq!(st, 200);
+    let j = Json::parse(&body).unwrap();
+    assert!(j.get("process").is_none(), "no process object with prof off");
+    server.shutdown();
+}

@@ -194,7 +194,7 @@ fn stage_histograms_health_probes_and_observe_stages() {
     let (status, _) = http_request(&addr, "POST", "/predict", Some(&body)).unwrap();
     assert_eq!(status, 200);
 
-    // The Prometheus page carries per-stage quantile series covering
+    // The Prometheus page carries per-stage histogram series covering
     // queueing, batch formation, ≥ 4 engine predict phases and
     // serialization (plus HTTP parse).
     let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
@@ -210,7 +210,7 @@ fn stage_histograms_health_probes_and_observe_stages() {
         "serialize",
     ] {
         assert!(
-            text.contains(&format!("pgpr_stage_seconds{{stage=\"{stage}\",quantile=\"0.5\"}}")),
+            text.contains(&format!("pgpr_stage_seconds_bucket{{stage=\"{stage}\",le=")),
             "missing stage series `{stage}`:\n{text}"
         );
     }

@@ -200,8 +200,8 @@ fn multi_row_requests_and_metrics_endpoint() {
     let (status, text) = http_request(&addr, "GET", "/metrics", None).unwrap();
     assert_eq!(status, 200);
     assert!(text.contains("pgpr_responses_total 3"), "metrics:\n{text}");
-    assert!(text.contains("pgpr_request_latency_seconds{quantile=\"0.99\"}"));
-    assert!(text.contains("pgpr_batch_occupancy_rows"));
+    assert!(text.contains("pgpr_request_latency_seconds_bucket{le=\"+Inf\"} 3"));
+    assert!(text.contains("pgpr_batch_occupancy_rows_count"));
     server.shutdown();
 }
 
